@@ -1,0 +1,88 @@
+//! Dense-systems autotuning (paper §5.2): trains W1 and W2 policies on
+//! randsvd systems and prints a Table-2-shaped comparison against the
+//! FP64 baseline, plus the Figure-2 precision-usage breakdown.
+//!
+//!     cargo run --release --example dense_autotune [-- --preset small]
+
+use anyhow::Result;
+use precision_autotune::chop::Prec;
+use precision_autotune::coordinator::eval::{summarize, PrecisionUsage};
+use precision_autotune::coordinator::experiments::dense_suite;
+use precision_autotune::solver::metrics::CondRange;
+use precision_autotune::util::cli::Args;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::tables::{fix2, pct, sci2, Table};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut cfg = if args.get("preset").is_some() || args.get("config").is_some() {
+        Config::from_args(&args)?
+    } else {
+        let mut c = Config::small();
+        c.n_train = 24;
+        c.n_test = 24;
+        c.episodes = 50;
+        c
+    };
+    cfg.tau = args.get_f64("tau")?.unwrap_or(1e-6);
+
+    println!(
+        "dense suite: {} train / {} test systems, sizes {}-{}, tau={:e}",
+        cfg.n_train, cfg.n_test, cfg.size_min, cfg.size_max, cfg.tau
+    );
+    let suite = dense_suite(&cfg, false)?;
+
+    let mut t = Table::new(
+        "Dense systems: RL policies vs FP64 baseline",
+        &["Method", "Range", "xi", "Avg ferr", "Avg nbe", "Avg iter", "Avg GMRES iter"],
+    );
+    for (name, recs, with_xi) in [
+        ("RL(W1)", &suite.records_w1, true),
+        ("RL(W2)", &suite.records_w2, true),
+        ("FP64", &suite.records_fp64, false),
+    ] {
+        for range in CondRange::ALL {
+            let s = summarize(recs, Some(range), cfg.tau_base, with_xi);
+            if s.count == 0 {
+                continue;
+            }
+            t.row(vec![
+                name.into(),
+                range.label().into(),
+                if with_xi { pct(s.xi) } else { "-".into() },
+                sci2(s.avg_ferr),
+                sci2(s.avg_nbe),
+                fix2(s.avg_outer),
+                fix2(s.avg_gmres),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let mut u = Table::new(
+        "Precision usage per solve (rows sum to 4)",
+        &["Policy", "Range", "BF16", "TF32", "FP32", "FP64"],
+    );
+    for (name, recs) in [("W1", &suite.records_w1), ("W2", &suite.records_w2)] {
+        for range in CondRange::ALL {
+            let usage = PrecisionUsage::of(recs, Some(range));
+            if usage.total() == 0.0 {
+                continue;
+            }
+            u.row(vec![
+                name.into(),
+                range.label().into(),
+                fix2(usage.get(Prec::Bf16)),
+                fix2(usage.get(Prec::Tf32)),
+                fix2(usage.get(Prec::Fp32)),
+                fix2(usage.get(Prec::Fp64)),
+            ]);
+        }
+    }
+    println!("{}", u.render());
+    println!(
+        "suite wall time {:.1}s, {} unique solves (cache-shared W1/W2)",
+        suite.wall_seconds, suite.unique_solves
+    );
+    Ok(())
+}

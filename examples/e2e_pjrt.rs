@@ -1,0 +1,124 @@
+//! END-TO-END DRIVER (deliverable): the full three-layer system on a real
+//! small workload, proving all layers compose:
+//!
+//!   L1  Pallas chop / chopped-GEMV kernels   (python/compile/kernels/)
+//!   L2  GMRES-IR step graphs, AOT → HLO text (python/compile/model.py)
+//!   L3  this binary: bandit training + GMRES-IR driver, executing the
+//!       artifacts on the PJRT CPU client — Python never runs here.
+//!
+//! Workload: train a policy on dense randsvd systems with the native
+//! backend (fast sweep), then serve the *same trained policy* over the
+//! PJRT artifact backend on unseen systems, cross-checking both backends
+//! solve to the same accuracy and reporting the paper's headline metrics
+//! (success rate ξ, ferr vs FP64 baseline, precision usage, latency).
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example e2e_pjrt
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::{SolveCache, Trainer};
+use precision_autotune::chop::Prec;
+use precision_autotune::coordinator::eval::{evaluate, summarize, PrecisionUsage};
+use precision_autotune::gen::dense_dataset;
+use precision_autotune::runtime::PjrtBackend;
+use precision_autotune::util::config::{Config, Weights};
+use precision_autotune::util::tables::{fix2, pct, sci2, Table};
+
+fn main() -> Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        bail!("artifacts/ missing — run `make artifacts` first");
+    }
+
+    // Sizes are capped by the largest artifact bucket (512); keep the
+    // serving set modest so the interpret-lowered Pallas kernels finish
+    // promptly on this 1-core box.
+    let mut cfg = Config::small();
+    cfg.size_min = 48;
+    cfg.size_max = 120;
+    cfg.n_train = 16;
+    cfg.n_test = 8;
+    cfg.episodes = 40;
+    cfg.weights = Weights::W2;
+    cfg.tau = 1e-6;
+
+    // ---- Phase I: train (native backend — the fast sweep path) ----
+    let train = dense_dataset(&cfg, cfg.n_train, 0);
+    let mut native = NativeBackend::new();
+    let mut cache = SolveCache::new();
+    let t0 = Instant::now();
+    let (policy, _) = Trainer::new(&cfg, &mut cache).train(&mut native, &train, true)?;
+    println!(
+        "phase I  (train, native): {} systems x {} episodes, {} unique solves, {:.1}s",
+        train.len(),
+        cfg.episodes,
+        cache.unique_solves(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- Phase II: serve through the AOT artifacts (PJRT) ----
+    let test = dense_dataset(&cfg, cfg.n_test, 1);
+    let mut pjrt = PjrtBackend::open("artifacts")?;
+    let t1 = Instant::now();
+    let recs_pjrt = evaluate(&mut pjrt, &test, Some(&policy), &cfg)?;
+    let serve_s = t1.elapsed().as_secs_f64();
+    let recs_native = evaluate(&mut native, &test, Some(&policy), &cfg)?;
+    let recs_fp64 = evaluate(&mut pjrt, &test, None, &cfg)?;
+
+    let mut t = Table::new(
+        "Phase II: serving unseen systems through the PJRT artifacts",
+        &["id", "n", "kappa", "action", "ferr(pjrt)", "ferr(native)", "ferr(fp64)", "gmres(pjrt)"],
+    );
+    for i in 0..test.len() {
+        t.row(vec![
+            recs_pjrt[i].id.to_string(),
+            recs_pjrt[i].n.to_string(),
+            sci2(recs_pjrt[i].kappa),
+            recs_pjrt[i].action.to_string(),
+            sci2(recs_pjrt[i].ferr),
+            sci2(recs_native[i].ferr),
+            sci2(recs_fp64[i].ferr),
+            recs_pjrt[i].gmres_iters.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Cross-backend agreement: both backends implement the same emulation
+    // semantics, so error magnitudes agree to within an order.
+    for i in 0..test.len() {
+        let (a, b) = (recs_pjrt[i].ferr, recs_native[i].ferr);
+        if a.is_finite() && b.is_finite() && a > 0.0 && b > 0.0 {
+            let ratio = (a / b).log10().abs();
+            if ratio > 2.0 {
+                bail!("backend divergence on system {i}: pjrt {a:e} vs native {b:e}");
+            }
+        }
+    }
+
+    let s_rl = summarize(&recs_pjrt, None, cfg.tau_base, true);
+    let s_64 = summarize(&recs_fp64, None, cfg.tau_base, false);
+    let usage = PrecisionUsage::of(&recs_pjrt, None);
+    println!("headline (paper-shape) metrics over the served workload:");
+    println!("  success rate xi          : {}", pct(s_rl.xi));
+    println!("  avg ferr  RL(W2) / FP64  : {} / {}", sci2(s_rl.avg_ferr), sci2(s_64.avg_ferr));
+    println!("  avg GMRES RL(W2) / FP64  : {} / {}", fix2(s_rl.avg_gmres), fix2(s_64.avg_gmres));
+    println!(
+        "  precision usage per solve: BF16 {} TF32 {} FP32 {} FP64 {}",
+        fix2(usage.get(Prec::Bf16)),
+        fix2(usage.get(Prec::Tf32)),
+        fix2(usage.get(Prec::Fp32)),
+        fix2(usage.get(Prec::Fp64))
+    );
+    println!(
+        "  serving: {} solves in {:.1}s ({:.2}s/solve), {} artifacts compiled",
+        test.len(),
+        serve_s,
+        serve_s / test.len() as f64,
+        pjrt.rt.artifacts_compiled()
+    );
+    println!("\ne2e OK: L1 Pallas -> L2 HLO -> L3 rust/PJRT compose.");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Feature-saliency study (paper §1 advantage 2 / §6: "by selecting
+//! certain features in our state space, we can examine whether these
+//! features are key factors ... that determine the reduced mixed
+//! precision").
+//!
+//! Trains three agents on the same dense systems with different context
+//! spaces — κ-only, ‖A‖∞-only, and both (the paper's eq. 18) — and
+//! compares held-out reward and success rate. For randsvd systems the
+//! condition number is the salient feature; the norm alone should barely
+//! beat a context-free agent.
+//!
+//!     cargo run --release --example feature_saliency
+
+use anyhow::Result;
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::reward::{reward, RewardInputs};
+use precision_autotune::bandit::{SolveCache, Trainer};
+use precision_autotune::coordinator::eval::evaluate;
+use precision_autotune::gen::dense_dataset;
+use precision_autotune::solver::metrics::mean;
+use precision_autotune::util::config::{Config, Weights};
+use precision_autotune::util::tables::{fix2, pct, sci2, Table};
+
+fn main() -> Result<()> {
+    let mut base = Config::small();
+    base.n_train = 30;
+    base.n_test = 30;
+    base.size_min = 32;
+    base.size_max = 128;
+    base.episodes = 80;
+    base.weights = Weights::W2;
+
+    let train = dense_dataset(&base, base.n_train, 0);
+    let test = dense_dataset(&base, base.n_test, 1);
+
+    // Three context spaces: collapsing a feature to one bin removes it
+    // from the state (its variation becomes invisible to the agent).
+    let variants: [(&str, usize, usize); 3] = [
+        ("kappa + norm (paper eq. 18)", 10, 10),
+        ("kappa only", 10, 1),
+        ("norm only", 1, 10),
+    ];
+
+    let mut t = Table::new(
+        "Feature saliency: which context feature carries the signal?",
+        &["context", "states", "xi", "avg ferr", "avg GMRES", "mean held-out reward"],
+    );
+    for (name, bk, bn) in variants {
+        let mut cfg = base.clone();
+        cfg.bins_kappa = bk;
+        cfg.bins_norm = bn;
+        let mut cache = SolveCache::new();
+        let mut backend = NativeBackend::new();
+        let (policy, _) = Trainer::new(&cfg, &mut cache).train(&mut backend, &train, true)?;
+        let recs = evaluate(&mut backend, &test, Some(&policy), &cfg)?;
+        let rewards: Vec<f64> = recs
+            .iter()
+            .map(|r| {
+                reward(
+                    &cfg,
+                    &r.action,
+                    &RewardInputs {
+                        ferr: r.ferr,
+                        nbe: r.nbe,
+                        gmres_iters: r.gmres_iters,
+                        kappa: r.kappa,
+                        failed: r.failed,
+                    },
+                )
+            })
+            .collect();
+        let s = precision_autotune::coordinator::eval::summarize(&recs, None, cfg.tau_base, true);
+        t.row(vec![
+            name.into(),
+            policy.qtable.n_states.to_string(),
+            pct(s.xi),
+            sci2(s.avg_ferr),
+            fix2(s.avg_gmres),
+            fix2(mean(&rewards)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "reading the probe: a context is salient when removing it hurts the \
+         held-out reward. At small scale coarser contexts can even win \
+         (denser per-state evidence — the Proposition-1 discretization \
+         trade-off in action); at paper scale with aggressive W2 policies \
+         the kappa axis is the one that cannot be dropped. This is the \
+         black-box saliency methodology the paper's §6 describes."
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Online learning (paper §1/§3: "can be easily implemented in an online
+//! learning routine to avoid model retraining"): the agent keeps updating
+//! its Q-table as a *stream* of systems arrives — no episode structure,
+//! ε annealed by stream position — and we track how its regret against
+//! the FP64 baseline's reward evolves.
+//!
+//!     cargo run --release --example online_learning
+
+use anyhow::Result;
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::action::ActionSpace;
+use precision_autotune::bandit::policy::select_action;
+use precision_autotune::bandit::qtable::QTable;
+use precision_autotune::bandit::reward::{reward, RewardInputs};
+use precision_autotune::bandit::Action;
+use precision_autotune::features::Discretizer;
+use precision_autotune::gen::dense_dataset;
+use precision_autotune::solver::ir::gmres_ir;
+use precision_autotune::util::config::{Config, Weights};
+use precision_autotune::util::rng::Rng;
+use precision_autotune::util::tables::fix2;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::small();
+    cfg.size_min = 32;
+    cfg.size_max = 96;
+    cfg.weights = Weights::W2;
+    // Coarser grid than batch training: an online stream visits each
+    // state rarely, so fewer bins = denser per-state evidence.
+    cfg.bins_kappa = 5;
+    cfg.bins_norm = 3;
+    let stream_len = 120;
+
+    // A short calibration prefix fixes the discretizer's bin ranges
+    // (min/max of the features), then learning continues online.
+    let stream = dense_dataset(&cfg, stream_len, 7);
+    let calib = &stream[..20];
+    let disc = Discretizer::fit(calib, cfg.bins_kappa, cfg.bins_norm, cfg.delta_c, cfg.delta_n);
+
+    let space = ActionSpace::reduced();
+    let mut q = QTable::new(disc.n_states(), space.clone());
+    let mut backend = NativeBackend::new();
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut window_reward = Vec::new();
+    let mut window_base = Vec::new();
+    println!("streaming {} systems (online epsilon-greedy, alpha=1/N) ...\n", stream_len);
+    println!("{:<12} {:>12} {:>14} {:>10}", "window", "mean reward", "fp64 reward", "regret");
+
+    for (i, p) in stream.iter().enumerate() {
+        let s = disc.state_of(p);
+        // anneal exploration with stream position (online analogue of eq. 13)
+        let eps = (1.0 - i as f64 / stream_len as f64).max(cfg.eps_min);
+        let (ai, _) = select_action(&q, s, eps, &mut rng);
+        let action = space.actions[ai];
+        let out = gmres_ir(&mut backend, p, &action, &cfg)?;
+        let r = reward(
+            &cfg,
+            &action,
+            &RewardInputs {
+                ferr: out.ferr,
+                nbe: out.nbe,
+                gmres_iters: out.gmres_iters,
+                kappa: p.kappa_est,
+                failed: out.failed,
+            },
+        );
+        q.update(s, ai, r, 0.0); // 1/N(s,a) schedule — no retraining ever
+
+        // baseline reward on the same instance
+        let base_out = gmres_ir(&mut backend, p, &Action::FP64, &cfg)?;
+        let base_r = reward(
+            &cfg,
+            &Action::FP64,
+            &RewardInputs {
+                ferr: base_out.ferr,
+                nbe: base_out.nbe,
+                gmres_iters: base_out.gmres_iters,
+                kappa: p.kappa_est,
+                failed: base_out.failed,
+            },
+        );
+        window_reward.push(r);
+        window_base.push(base_r);
+        if (i + 1) % 30 == 0 {
+            let mr = window_reward.iter().sum::<f64>() / window_reward.len() as f64;
+            let mb = window_base.iter().sum::<f64>() / window_base.len() as f64;
+            println!(
+                "{:<12} {:>12} {:>14} {:>10}",
+                format!("{}-{}", i + 1 - 29, i + 1),
+                fix2(mr),
+                fix2(mb),
+                fix2(mb - mr)
+            );
+            window_reward.clear();
+            window_base.clear();
+        }
+    }
+    println!(
+        "\nonline agent adapts without any retraining pass; regret vs the \
+         FP64 baseline's reward shrinks as per-state evidence accumulates \
+         (exploration cost keeps early windows expensive — the paper's \
+         batch Phase-I/Phase-II split exists precisely to amortize this)."
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: train a precision-selection policy on a handful of dense
+//! systems, then let it pick mixed-precision configurations for unseen
+//! ones — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::{SolveCache, Trainer};
+use precision_autotune::coordinator::eval::evaluate;
+use precision_autotune::gen::dense_dataset;
+use precision_autotune::util::config::{Config, Weights};
+use precision_autotune::util::tables::sci2;
+
+fn main() -> Result<()> {
+    // 1. Configure a small experiment (see Config for every knob; the
+    //    defaults are the paper's §5 settings).
+    let mut cfg = Config::small();
+    cfg.n_train = 20;
+    cfg.n_test = 10;
+    cfg.episodes = 40;
+    cfg.weights = Weights::W2; // aggressive: push toward low precision
+    cfg.tau = 1e-6;
+
+    // 2. Generate training systems (randsvd mode-2, κ ∈ 10^1..10^9) and
+    //    train the contextual bandit (Alg. 3).
+    let train = dense_dataset(&cfg, cfg.n_train, 0);
+    let mut backend = NativeBackend::new();
+    let mut cache = SolveCache::new();
+    println!("training on {} systems x {} episodes ...", train.len(), cfg.episodes);
+    let (policy, trace) = Trainer::new(&cfg, &mut cache).train(&mut backend, &train, false)?;
+    println!(
+        "done: {} unique solves (memoized), final mean reward {:.3}\n",
+        cache.unique_solves(),
+        trace.mean_reward.last().unwrap()
+    );
+
+    // 3. Inference on unseen systems: the policy reads (κ̂, ‖A‖∞),
+    //    discretizes, and greedily picks (u_f, u, u_g, u_r).
+    let test = dense_dataset(&cfg, cfg.n_test, 1);
+    let records = evaluate(&mut backend, &test, Some(&policy), &cfg)?;
+    println!("{:<4} {:>5} {:>10}  {:<28} {:>10} {:>6}", "id", "n", "kappa", "chosen action", "ferr", "gmres");
+    for r in &records {
+        println!(
+            "{:<4} {:>5} {:>10}  {:<28} {:>10} {:>6}",
+            r.id,
+            r.n,
+            sci2(r.kappa),
+            r.action.to_string(),
+            sci2(r.ferr),
+            r.gmres_iters
+        );
+    }
+
+    // 4. Save / reload the policy.
+    policy.save("results/quickstart_policy.json")?;
+    println!("\npolicy saved to results/quickstart_policy.json");
+    Ok(())
+}

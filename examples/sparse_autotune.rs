@@ -1,0 +1,100 @@
+//! Sparse-SPD autotuning (paper §5.3): very ill-conditioned A₀A₀ᵀ + βI
+//! systems. Reproduces the paper's "survival boundary" finding: even the
+//! aggressive W2 policy falls back to (near-)full FP64 when low precision
+//! would stall convergence.
+//!
+//!     cargo run --release --example sparse_autotune [-- --preset small]
+
+use anyhow::Result;
+use precision_autotune::chop::Prec;
+use precision_autotune::coordinator::eval::{summarize, PrecisionUsage};
+use precision_autotune::coordinator::experiments::{dataset_stats, sparse_suite};
+use precision_autotune::util::cli::Args;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::tables::{fix2, pct, sci2, Table};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut cfg = if args.get("preset").is_some() || args.get("config").is_some() {
+        Config::from_args(&args)?
+    } else {
+        let mut c = Config::small();
+        c.n_train = 20;
+        c.n_test = 20;
+        c.size_min = 100; // needs real coupling for the Table-5 shape
+        c.size_max = 220;
+        c.episodes = 50;
+        c
+    };
+    cfg.tau = args.get_f64("tau")?.unwrap_or(1e-6);
+
+    println!(
+        "sparse suite: lambda_s={}, beta={:e}, sizes {}-{}, tau={:e}",
+        cfg.sparsity, cfg.sparse_beta, cfg.size_min, cfg.size_max, cfg.tau
+    );
+    let suite = sparse_suite(&cfg, false)?;
+
+    // Table-3-shaped dataset summary
+    let tr = dataset_stats(&suite.train);
+    let te = dataset_stats(&suite.test);
+    let mut t3 = Table::new(
+        "Dataset summary (Table-3 shape)",
+        &["Metric", "Train (min - max)", "Test (min - max)"],
+    );
+    t3.row(vec![
+        "Condition number".into(),
+        format!("{} - {}", sci2(tr.kappa_min), sci2(tr.kappa_max)),
+        format!("{} - {}", sci2(te.kappa_min), sci2(te.kappa_max)),
+    ]);
+    t3.row(vec![
+        "Sparsity".into(),
+        format!("{:.2}% - {:.2}%", 100.0 * tr.density_min, 100.0 * tr.density_max),
+        format!("{:.2}% - {:.2}%", 100.0 * te.density_min, 100.0 * te.density_max),
+    ]);
+    t3.row(vec![
+        "Matrix size".into(),
+        format!("{} - {}", tr.size_min, tr.size_max),
+        format!("{} - {}", te.size_min, te.size_max),
+    ]);
+    println!("{}", t3.render());
+
+    // Table-4-shaped metrics
+    let mut t4 = Table::new(
+        "Sparse systems: RL vs FP64 (Table-4 shape)",
+        &["Method", "xi", "Avg ferr", "Avg nbe", "Avg iter", "Avg GMRES iter"],
+    );
+    for (name, recs, with_xi) in [
+        ("RL(W1)", &suite.records_w1, true),
+        ("RL(W2)", &suite.records_w2, true),
+        ("FP64", &suite.records_fp64, false),
+    ] {
+        let s = summarize(recs, None, cfg.tau_base, with_xi);
+        t4.row(vec![
+            name.into(),
+            if with_xi { pct(s.xi) } else { "-".into() },
+            sci2(s.avg_ferr),
+            sci2(s.avg_nbe),
+            fix2(s.avg_outer),
+            fix2(s.avg_gmres),
+        ]);
+    }
+    println!("{}", t4.render());
+
+    // Table-5-shaped precision usage
+    let mut t5 = Table::new(
+        "Precision usage per solve (Table-5 shape; rows sum to 4)",
+        &["Weight Setting", "BF16", "TF32", "FP32", "FP64"],
+    );
+    for (name, recs) in [("RL(W1)", &suite.records_w1), ("RL(W2)", &suite.records_w2)] {
+        let u = PrecisionUsage::of(recs, None);
+        t5.row(vec![
+            name.into(),
+            fix2(u.get(Prec::Bf16)),
+            fix2(u.get(Prec::Tf32)),
+            fix2(u.get(Prec::Fp32)),
+            fix2(u.get(Prec::Fp64)),
+        ]);
+    }
+    println!("{}", t5.render());
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT lowering: every (op, format, size-bucket) jax graph -> HLO text.
+
+HLO *text* is the interchange format (NOT a serialized HloModuleProto):
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from the Makefile, cwd = python/):
+
+    python -m compile.aot --out ../artifacts [--buckets 64,128,256,512]
+                          [--formats bf16,tf32,fp32,fp64]
+
+Writes ``<out>/<op>_<fmt>_<n>.hlo.txt`` plus ``<out>/manifest.json``
+describing every artifact's I/O signature for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.chop import EXPERIMENT_FORMATS, FORMATS, chop_bits  # noqa: E402
+
+DEFAULT_BUCKETS = (64, 128, 256, 512)
+CHOP_LEN = 4096  # standalone chop artifacts (cross-language validation)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="float64"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def build_entries(buckets, formats):
+    """Yield (name, lowered-fn-factory, input specs, output meta)."""
+    entries = []
+    for n in buckets:
+        mat = _spec((n, n))
+        vec = _spec((n,))
+        ivec = _spec((n,), "int32")
+        scal = _spec(())
+        iscal = _spec((), "int32")
+        for fmt in formats:
+            entries.append(
+                dict(
+                    name=f"lu_factor_{fmt}_{n}",
+                    op="lu_factor",
+                    fmt=fmt,
+                    n=n,
+                    fn=lambda a, fmt=fmt: model.lu_factor(a, fmt),
+                    in_specs=[mat],
+                    in_names=["a"],
+                    outputs=[
+                        {"name": "lu", "shape": [n, n], "dtype": "f64"},
+                        {"name": "piv", "shape": [n], "dtype": "i32"},
+                        {"name": "ok", "shape": [], "dtype": "i32"},
+                    ],
+                )
+            )
+            entries.append(
+                dict(
+                    name=f"lu_solve_{fmt}_{n}",
+                    op="lu_solve",
+                    fmt=fmt,
+                    n=n,
+                    fn=lambda lu, piv, b, fmt=fmt: (model.lu_solve(lu, piv, b, fmt),),
+                    in_specs=[mat, ivec, vec],
+                    in_names=["lu", "piv", "b"],
+                    outputs=[{"name": "x", "shape": [n], "dtype": "f64"}],
+                )
+            )
+            entries.append(
+                dict(
+                    name=f"residual_{fmt}_{n}",
+                    op="residual",
+                    fmt=fmt,
+                    n=n,
+                    fn=lambda a, x, b, fmt=fmt: (model.residual(a, x, b, fmt),),
+                    in_specs=[mat, vec, vec],
+                    in_names=["a", "x", "b"],
+                    outputs=[{"name": "r", "shape": [n], "dtype": "f64"}],
+                )
+            )
+            entries.append(
+                dict(
+                    name=f"gmres_{fmt}_{n}",
+                    op="gmres",
+                    fmt=fmt,
+                    n=n,
+                    fn=lambda a, lu, piv, r, tol, maxit, fmt=fmt: model.gmres(
+                        a, lu, piv, r, tol, maxit, fmt
+                    ),
+                    in_specs=[mat, mat, ivec, vec, scal, iscal],
+                    in_names=["a", "lu", "piv", "r", "tol", "maxit"],
+                    outputs=[
+                        {"name": "z", "shape": [n], "dtype": "f64"},
+                        {"name": "iters", "shape": [], "dtype": "i32"},
+                        {"name": "relres", "shape": [], "dtype": "f64"},
+                        {"name": "ok", "shape": [], "dtype": "i32"},
+                    ],
+                )
+            )
+    # Standalone chop artifacts over every format of Table 1: these are the
+    # cross-language ground truth the Rust chop module is tested against.
+    for fmt in FORMATS:
+        entries.append(
+            dict(
+                name=f"chop_{fmt}_{CHOP_LEN}",
+                op="chop",
+                fmt=fmt,
+                n=CHOP_LEN,
+                fn=lambda x, fmt=fmt: (chop_bits(x, FORMATS[fmt]),),
+                in_specs=[_spec((CHOP_LEN,))],
+                in_names=["x"],
+                outputs=[{"name": "y", "shape": [CHOP_LEN], "dtype": "f64"}],
+            )
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--formats", default=",".join(EXPERIMENT_FORMATS))
+    ap.add_argument("--only", default="", help="comma list of artifact names")
+    args = ap.parse_args()
+
+    buckets = tuple(int(b) for b in args.buckets.split(",") if b)
+    formats = tuple(f for f in args.formats.split(",") if f)
+    for f in formats:
+        if f not in FORMATS:
+            raise SystemExit(f"unknown format {f!r}; known: {list(FORMATS)}")
+    only = {s for s in args.only.split(",") if s}
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "gmres_max_m": model.GMRES_MAX_M,
+        "buckets": list(buckets),
+        "formats": list(formats),
+        "artifacts": [],
+    }
+    t0 = time.time()
+    entries = build_entries(buckets, formats)
+    for e in entries:
+        if only and e["name"] not in only:
+            continue
+        t1 = time.time()
+        lowered = jax.jit(e["fn"]).lower(*e["in_specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{e['name']}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": e["name"],
+                "op": e["op"],
+                "fmt": e["fmt"],
+                "n": e["n"],
+                "file": fname,
+                "inputs": [
+                    {
+                        "name": nm,
+                        "shape": list(sp.shape),
+                        "dtype": "i32" if sp.dtype == jnp.int32 else "f64",
+                    }
+                    for nm, sp in zip(e["in_names"], e["in_specs"])
+                ],
+                "outputs": e["outputs"],
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+        )
+        print(
+            f"  lowered {e['name']:<24} {len(text):>9} chars  "
+            f"({time.time() - t1:.1f}s)"
+        )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+        f"to {args.out} in {time.time() - t0:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Layer-1 Pallas kernels: floating-point format emulation ("chop").
+
+This is the compute hot-spot of the paper's system: every mixed-precision
+step of GMRES-IR (LU factorization, residual, inner GMRES) is simulated by
+rounding f64 values to a target format (t significand bits, exponent range
+[emin, emax]) with round-to-nearest-even, exactly like the paper's Pychop
+emulation [Carson & Chen 2025].
+
+Two kernels live here:
+
+* ``pallas_chop``       — elementwise chop over tiled blocks.
+* ``pallas_chopped_matvec`` — y = chop_fmt(A) @ chop_fmt(x) with f64
+  accumulation per block and a final chop of the result (MXU-style
+  low-precision-operand / high-precision-accumulate semantics; see
+  DESIGN.md §3 Hardware adaptation).
+
+The chop itself is implemented with *bit operations* (exponent extracted
+from the IEEE-754 representation) so it is exact: dividing by a power of
+two is exact in binary floating point, and ``jnp.round`` implements
+ties-to-even. An independent frexp-based oracle lives in ``ref.py``; the
+two are cross-checked by hypothesis sweeps in ``python/tests``.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); block shapes are nevertheless chosen for TPU VMEM:
+(128, 128) f64 tiles = 128 KiB/operand, far under the ~16 MiB VMEM budget,
+leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+class Format(NamedTuple):
+    """A floating-point format as in paper Table 1.
+
+    t    -- significand bits including the implicit leading bit
+    emin -- exponent of the smallest positive normalized number
+    emax -- exponent of the largest finite number
+    xmax -- largest finite value (usually (2 - 2^{1-t}) * 2^emax, but
+            e.g. FP8-E4M3 reserves the top code for NaN => 448)
+    """
+
+    name: str
+    t: int
+    emin: int
+    emax: int
+    xmax: float
+
+
+def _std_xmax(t: int, emax: int) -> float:
+    return (2.0 - 2.0 ** (1 - t)) * (2.0**emax)
+
+
+#: The seven formats of paper Table 1 (+ FP8 extension formats used in the
+#: paper's introduction). Keys are the names used across the whole repo —
+#: the Rust `chop` module mirrors this table bit-for-bit.
+FORMATS: dict[str, Format] = {
+    "bf16": Format("bf16", 8, -126, 127, _std_xmax(8, 127)),
+    "fp16": Format("fp16", 11, -14, 15, _std_xmax(11, 15)),
+    "tf32": Format("tf32", 11, -126, 127, _std_xmax(11, 127)),
+    "fp32": Format("fp32", 24, -126, 127, _std_xmax(24, 127)),
+    "fp64": Format("fp64", 53, -1022, 1023, _std_xmax(53, 1023)),
+    "e4m3": Format("e4m3", 4, -6, 8, 448.0),
+    "e5m2": Format("e5m2", 3, -14, 15, _std_xmax(3, 15)),
+}
+
+#: Precision set 𝒰 used in the paper's experiments (§5.1).
+EXPERIMENT_FORMATS = ("bf16", "tf32", "fp32", "fp64")
+
+
+def chop_bits(x: jax.Array, fmt: Format) -> jax.Array:
+    """Exact round-to-nearest-even of f64 ``x`` into ``fmt``.
+
+    Pure jnp (usable inside and outside Pallas kernels). Semantics:
+
+    * normals: round the significand to ``t`` bits;
+    * values below 2^emin: round onto the subnormal grid of quantum
+      2^(emin - t + 1) (flush-to-zero happens naturally when the nearest
+      grid point is 0);
+    * overflow after rounding (|y| > xmax): +/-inf, as IEEE RNE demands;
+    * inf/NaN/zero pass through (signed zeros preserved).
+    """
+    if fmt.name == "fp64":
+        return x  # chop to the carrier format is the identity
+    bits = lax.bitcast_convert_type(x, jnp.uint64)
+    expf = ((bits >> jnp.uint64(52)) & jnp.uint64(0x7FF)).astype(jnp.int32)
+    e = expf - 1023
+    # f64 subnormal inputs (expf == 0) are < 2^-1022 <= 2^emin for every
+    # target format: clamp their exponent so they land on the target's
+    # subnormal grid (which rounds them to 0 for all formats of Table 1).
+    e = jnp.where(expf == 0, -1023, e)
+    e_eff = jnp.maximum(e, fmt.emin)
+    # Quantum q = 2^(e_eff - t + 1), built from IEEE-754 bits: XLA lowers
+    # exp2 through exp, which is NOT exact for integer arguments, and the
+    # whole emulation hinges on q being an exact power of two.
+    shift = e_eff - (fmt.t - 1)
+    bits_normal = (shift + 1023).astype(jnp.uint64) << jnp.uint64(52)
+    bits_subn = jnp.uint64(1) << jnp.clip(shift + 1074, 0, 63).astype(jnp.uint64)
+    qbits = jnp.where(shift >= -1022, bits_normal, bits_subn)
+    q = lax.bitcast_convert_type(qbits, jnp.float64)
+    y = jnp.round(x / q) * q  # x/q and r*q exact; round() is ties-to-even
+    # No explicit zero/inf/NaN passthrough is needed — the arithmetic path
+    # already produces them exactly (0/q = +-0, inf/q = inf, NaN sticks;
+    # for inf/NaN inputs expf = 0x7FF gives a huge-but-valid q). Avoiding
+    # the select also sidesteps a Pallas-interpret miscompile observed for
+    # selects guarded by uint64-derived predicates on subnormal operands.
+    return jnp.where(jnp.abs(y) > fmt.xmax, jnp.sign(y) * jnp.inf, y)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+#: Block edge for matrix tiles. 128 matches the MXU systolic-array edge; a
+#: (128,128) f64 tile is 128 KiB.
+BLOCK = 128
+#: Block length for vector kernels.
+VBLOCK = 1024
+
+
+def _chop_kernel(x_ref, o_ref, *, fmt: Format):
+    o_ref[...] = chop_bits(x_ref[...], fmt)
+
+
+def _ceil_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def pallas_chop(x: jax.Array, fmt_name: str) -> jax.Array:
+    """Elementwise chop of a 1-D or 2-D f64 array via a tiled Pallas kernel."""
+    fmt = FORMATS[fmt_name]
+    if fmt.name == "fp64":
+        return x
+    if x.ndim == 1:
+        n = x.shape[0]
+        blk = min(VBLOCK, _ceil_to(n, 8))
+        np_ = _ceil_to(n, blk)
+        xp = jnp.pad(x, (0, np_ - n))
+        out = pl.pallas_call(
+            functools.partial(_chop_kernel, fmt=fmt),
+            out_shape=jax.ShapeDtypeStruct((np_,), x.dtype),
+            grid=(np_ // blk,),
+            in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+            interpret=True,
+        )(xp)
+        return out[:n]
+    assert x.ndim == 2
+    m, n = x.shape
+    bm = min(BLOCK, _ceil_to(m, 8))
+    bn = min(BLOCK, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, np_ - n)))
+    out = pl.pallas_call(
+        functools.partial(_chop_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp)
+    return out[:m, :n]
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref, *, fmt: Format, nj: int):
+    """One (row-block, col-block) step of y += chop(A_blk) @ chop(x_blk).
+
+    Grid iterates column blocks innermost; o_ref accumulates in f64 across
+    the column dimension (the revisiting-output pattern); the final chop of
+    y happens on the last column block.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = chop_bits(a_ref[...], fmt)
+    x = chop_bits(x_ref[...], fmt)
+    o_ref[...] += a @ x
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        o_ref[...] = chop_bits(o_ref[...], fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def pallas_chopped_matvec(a: jax.Array, x: jax.Array, fmt_name: str) -> jax.Array:
+    """y = chop(chop(A) @ chop(x)) with f64 block accumulation.
+
+    Matches MXU semantics: low-precision operands, wide accumulator,
+    result stored back in the working format (DESIGN.md §3/§5 fidelity
+    note). For fmt = fp64 this is a plain f64 GEMV.
+    """
+    fmt = FORMATS[fmt_name]
+    m, n = a.shape
+    bm = min(BLOCK, _ceil_to(m, 8))
+    bn = min(BLOCK, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    ap = jnp.pad(a, ((0, mp - m), (0, np_ - n)))
+    xp = jnp.pad(x, (0, np_ - n))
+    nj = np_ // bn
+    out = pl.pallas_call(
+        functools.partial(_matvec_kernel, fmt=fmt, nj=nj),
+        out_shape=jax.ShapeDtypeStruct((mp,), a.dtype),
+        grid=(mp // bm, nj),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        interpret=True,
+    )(ap, xp)
+    return out[:m]
+
+
+def _outer_update_kernel(m_ref, r_ref, a_ref, o_ref, *, fmt: Format):
+    """Rank-1 Schur-complement update: o = chop(A - chop(m r^T)).
+
+    The hot elementwise op of right-looking LU; operands are already in
+    the working format (they live in the chopped matrix), the update and
+    the result are rounded back to the format — i.e. storage rounding per
+    step, the standard simulation of a low-precision LU.
+    """
+    upd = chop_bits(m_ref[...][:, None] * r_ref[...][None, :], fmt)
+    o_ref[...] = chop_bits(a_ref[...] - upd, fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def pallas_outer_update(mcol: jax.Array, rrow: jax.Array, a: jax.Array, fmt_name: str) -> jax.Array:
+    """A - outer(mcol, rrow), chopped per-op, tiled (the LU hot path)."""
+    fmt = FORMATS[fmt_name]
+    if fmt.name == "fp64":
+        return a - jnp.outer(mcol, rrow)
+    m, n = a.shape
+    bm = min(BLOCK, _ceil_to(m, 8))
+    bn = min(BLOCK, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    ap = jnp.pad(a, ((0, mp - m), (0, np_ - n)))
+    mp_v = jnp.pad(mcol, (0, mp - m))
+    rp = jnp.pad(rrow, (0, np_ - n))
+    out = pl.pallas_call(
+        functools.partial(_outer_update_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(mp_v, rp, ap)
+    return out[:m, :n]

@@ -1,0 +1,94 @@
+"""Pure-jnp / numpy oracle for the chop kernel and chopped operations.
+
+Independent implementation (frexp-based, vs. the bit-twiddling kernel in
+``chop.py``) used as the correctness reference in pytest. Also provides a
+strict Pychop-style *per-op rounding* matvec used to validate the
+f64-accumulate emulation mode at the solver level (DESIGN.md §5 fidelity
+note).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .chop import FORMATS, Format
+
+
+def chop_ref(x, fmt: Format | str) -> np.ndarray:
+    """Round f64 array ``x`` to format ``fmt`` (RNE), frexp-based oracle."""
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    x = np.asarray(x, dtype=np.float64)
+    if fmt.name == "fp64":
+        return x.copy()
+    out = x.copy()
+    finite = np.isfinite(x) & (x != 0)
+    xs = x[finite]
+    # x = m * 2**E with 0.5 <= |m| < 1  =>  true exponent e = E - 1
+    _, E = np.frexp(xs)
+    e = E - 1
+    e_eff = np.maximum(e, fmt.emin)
+    q = np.ldexp(1.0, (e_eff - (fmt.t - 1)).astype(np.int64))
+    with np.errstate(over="ignore", invalid="ignore"):
+        y = np.round(xs / q) * q  # numpy round is ties-to-even
+        y = np.where(np.abs(y) > fmt.xmax, np.sign(y) * np.inf, y)
+    out[finite] = y
+    return out
+
+
+def chopped_matvec_ref(a, x, fmt: Format | str) -> np.ndarray:
+    """Oracle for pallas_chopped_matvec: chop operands, f64 accumulate,
+    chop the result."""
+    a = chop_ref(a, fmt)
+    x = chop_ref(x, fmt)
+    return chop_ref(a @ x, fmt)
+
+
+def chopped_matvec_perop_ref(a, x, fmt: Format | str) -> np.ndarray:
+    """Strict Pychop semantics: every scalar multiply and add is rounded.
+
+    O(n^2) python loop — only for validation on small sizes.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    a = chop_ref(a, fmt)
+    x = chop_ref(x, fmt)
+    m, n = a.shape
+    y = np.zeros(m)
+    for j in range(n):
+        prod = chop_ref(a[:, j] * x[j], fmt)
+        y = chop_ref(y + prod, fmt)
+    return y
+
+
+def lu_ref(a):
+    """Plain f64 LU with partial pivoting (packed), for comparison with the
+    fp64 artifact. Returns (LU, piv) in the same layout as model.lu_factor."""
+    a = np.array(a, dtype=np.float64)
+    n = a.shape[0]
+    piv = np.zeros(n, dtype=np.int32)
+    for k in range(n):
+        p = k + int(np.argmax(np.abs(a[k:, k])))
+        piv[k] = p
+        if p != k:
+            a[[k, p], :] = a[[p, k], :]
+        if a[k, k] != 0:
+            a[k + 1 :, k] /= a[k, k]
+            a[k + 1 :, k + 1 :] -= np.outer(a[k + 1 :, k], a[k, k + 1 :])
+    return a, piv
+
+
+def lu_solve_ref(lu, piv, b):
+    """Solve with the packed LU from lu_ref (f64)."""
+    n = lu.shape[0]
+    y = np.array(b, dtype=np.float64)
+    for k in range(n):
+        p = piv[k]
+        if p != k:
+            y[[k, p]] = y[[p, k]]
+    for i in range(1, n):
+        y[i] -= lu[i, :i] @ y[:i]
+    x = y
+    for i in range(n - 1, -1, -1):
+        x[i] = (x[i] - lu[i, i + 1 :] @ x[i + 1 :]) / lu[i, i]
+    return x

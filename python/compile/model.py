@@ -1,0 +1,327 @@
+"""Layer-2: the mixed-precision GMRES-IR compute graphs (paper Alg. 2).
+
+Each precision-controlled step of GMRES-based iterative refinement is a
+separate jax function, parameterized (statically) by the emulated
+floating-point format and lowered once per (op, format, size-bucket) by
+``aot.py``. The Rust L3 coordinator owns the outer refinement loop and
+calls these artifacts through PJRT; Python never runs at solve time.
+
+Ops
+---
+* ``lu_factor(A)``        -> (LU packed, piv, ok)      precision u_f
+* ``lu_solve(LU, piv, b)``-> x                         precision u_f / u_g
+* ``residual(A, x, b)``   -> r = b - A x               precision u_r
+* ``gmres(A, LU, piv, r, tol, maxit)``
+                          -> (z, iters, relres, ok)    precision u_g
+  (left-preconditioned by the LU factors, MGS-Arnoldi + Givens; the
+  preconditioner is applied in u_g, matching paper §4.2)
+
+Emulation semantics: operands and every stored intermediate are rounded
+to the target format; dot products accumulate in f64 (MXU/tensor-core
+style — DESIGN.md §5 fidelity note). The elementwise/matvec hot paths go
+through the Pallas kernels in ``kernels/chop.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.chop import (
+    FORMATS,
+    chop_bits,
+    pallas_chop,
+    pallas_chopped_matvec,
+    pallas_outer_update,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+#: Maximum Krylov dimension of one (non-restarted) inner GMRES solve.
+#: Paper experiments observe 2–21 average inner iterations; 50 gives
+#: ample headroom while keeping the V buffer small (50 x n f64).
+GMRES_MAX_M = 50
+
+
+def _chop(x, fmt_name: str):
+    """Scalar / small-array chop (no Pallas dispatch overhead)."""
+    return chop_bits(x, FORMATS[fmt_name])
+
+
+# ---------------------------------------------------------------------------
+# LU factorization with partial pivoting, right-looking, storage-rounded
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def lu_factor(a: jax.Array, fmt: str):
+    """Packed LU with partial pivoting in emulated precision ``fmt``.
+
+    Returns ``(LU, piv, ok)`` where LU packs the unit-lower L (below the
+    diagonal) and U; ``piv[k]`` is the row swapped with k at step k;
+    ``ok`` is 0 if the factorization hit a zero/non-finite pivot (e.g.
+    overflow in a narrow format) — the L3 coordinator treats that as the
+    failure case of the paper's reward penalty.
+    """
+    n = a.shape[0]
+    a = pallas_chop(a, fmt)
+    idx = jnp.arange(n)
+
+    def body(k, carry):
+        a, piv, ok = carry
+        col = jnp.abs(a[:, k])
+        col = jnp.where(idx >= k, col, -jnp.inf)
+        # NaNs must not win the pivot search:
+        col = jnp.where(jnp.isnan(col), -jnp.inf, col)
+        p = jnp.argmax(col).astype(jnp.int32)
+        piv = piv.at[k].set(p)
+        rk, rp = a[k], a[p]
+        a = a.at[k].set(rp).at[p].set(rk)
+        pivv = a[k, k]
+        ok = ok & (pivv != 0.0) & jnp.isfinite(pivv)
+        safe = jnp.where((pivv == 0.0) | ~jnp.isfinite(pivv), 1.0, pivv)
+        mcol = _chop(a[:, k] / safe, fmt)
+        mcol = jnp.where(idx > k, mcol, 0.0)
+        rowk = jnp.where(idx > k, a[k, :], 0.0)
+        upd = pallas_outer_update(mcol, rowk, a, fmt)
+        sel = (idx[:, None] > k) & (idx[None, :] > k)
+        a = jnp.where(sel, upd, a)
+        a = a.at[:, k].set(jnp.where(idx > k, mcol, a[:, k]))
+        return a, piv, ok
+
+    a, piv, ok = lax.fori_loop(
+        0, n, body, (a, jnp.zeros(n, jnp.int32), jnp.bool_(True))
+    )
+    return a, piv, ok.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Triangular solves with the packed LU
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def lu_solve(lu: jax.Array, piv: jax.Array, b: jax.Array, fmt: str):
+    """x = U^{-1} L^{-1} P b in emulated precision ``fmt``.
+
+    Forward/backward substitution; each row's dot product accumulates in
+    f64 and the stored component is rounded (storage rounding per step).
+    """
+    n = lu.shape[0]
+    idx = jnp.arange(n)
+    b = _chop(b, fmt)
+
+    def swap(k, y):
+        p = piv[k]
+        yk, yp = y[k], y[p]
+        return y.at[k].set(yp).at[p].set(yk)
+
+    y = lax.fori_loop(0, n, swap, b)
+
+    def fwd(i, y):
+        row = jnp.where(idx < i, lu[i], 0.0)
+        s = _chop(row @ y, fmt)
+        return y.at[i].set(_chop(y[i] - s, fmt))
+
+    y = lax.fori_loop(0, n, fwd, y)
+
+    def bwd(ii, x):
+        i = n - 1 - ii
+        row = jnp.where(idx > i, lu[i], 0.0)
+        s = _chop(row @ x, fmt)
+        d = jnp.where(lu[i, i] == 0.0, 1.0, lu[i, i])
+        v = _chop((x[i] - s) / d, fmt)
+        v = jnp.where(lu[i, i] == 0.0, jnp.nan, v)
+        return x.at[i].set(v)
+
+    return lax.fori_loop(0, n, bwd, y)
+
+
+# ---------------------------------------------------------------------------
+# Residual (precision u_r) — the Pallas chopped-GEMV hot path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def residual(a: jax.Array, x: jax.Array, b: jax.Array, fmt: str):
+    """r = b - A x computed in emulated precision ``fmt``."""
+    ax = pallas_chopped_matvec(a, x, fmt)
+    return _chop(_chop(b, fmt) - ax, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Preconditioned GMRES (precision u_g)
+# ---------------------------------------------------------------------------
+
+
+def _apply_prec(lu, piv, v, fmt):
+    """M^{-1} v = U^{-1} L^{-1} P v, in precision fmt (paper §4.2: the
+    preconditioner is applied in u_g)."""
+    return lu_solve(lu, piv, v, fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def gmres(
+    a: jax.Array,
+    lu: jax.Array,
+    piv: jax.Array,
+    r: jax.Array,
+    tol: jax.Array,
+    maxit: jax.Array,
+    fmt: str,
+):
+    """Solve M^{-1} A z = M^{-1} r by (non-restarted) MGS-Arnoldi GMRES.
+
+    All vector storage is rounded to ``fmt``; reductions accumulate in
+    f64. Givens rotations maintain the QR of the small Hessenberg matrix,
+    giving the residual estimate for the while-loop exit test
+    ``|g[j+1]| <= tol * beta`` (relative to the preconditioned residual).
+
+    Returns ``(z, iters, relres, ok)``.
+    """
+    n = a.shape[0]
+    m = min(GMRES_MAX_M, n)
+    maxit = jnp.minimum(maxit.astype(jnp.int32), m)
+
+    r0 = _apply_prec(lu, piv, r, fmt)
+    beta = _chop(jnp.sqrt(r0 @ r0), fmt)
+    ok0 = jnp.isfinite(beta) & (beta > 0.0)
+    safe_beta = jnp.where(ok0, beta, 1.0)
+
+    V = jnp.zeros((m + 1, n))
+    V = V.at[0].set(_chop(r0 / safe_beta, fmt))
+    H = jnp.zeros((m + 1, m))
+    cs = jnp.zeros(m)
+    sn = jnp.zeros(m)
+    g = jnp.zeros(m + 1).at[0].set(beta)
+
+    def cond(state):
+        j, V, H, cs, sn, g, res, ok, brk, best, stall = state
+        # stall guard: mirrors the native backend — stop after 3
+        # consecutive iterations without >10% improvement of the best
+        # residual estimate (precision-floor detection in low u_g).
+        return (j < maxit) & (res > tol * safe_beta) & ok & ~brk & (stall < 3)
+
+    def body(state):
+        j, V, H, cs, sn, g, res, ok, brk, best, stall = state
+        w = pallas_chopped_matvec(a, V[j], fmt)
+        w = _apply_prec(lu, piv, w, fmt)
+
+        # Modified Gram-Schmidt against v_0..v_j (dynamic bound fori).
+        def mgs(i, carry):
+            w, h = carry
+            hij = _chop(V[i] @ w, fmt)
+            w = _chop(w - hij * V[i], fmt)
+            return w, h.at[i].set(hij)
+
+        w, hcol = lax.fori_loop(0, j + 1, mgs, (w, jnp.zeros(m + 1)))
+        hj1 = _chop(jnp.sqrt(w @ w), fmt)
+        hcol = hcol.at[j + 1].set(hj1)
+        happy = hj1 <= 1e-300  # exact breakdown => solution in span(V)
+        safe_h = jnp.where(happy, 1.0, hj1)
+        V = V.at[j + 1].set(_chop(w / safe_h, fmt))
+
+        # Apply the accumulated Givens rotations to the new column.
+        def rot(i, h):
+            t1 = cs[i] * h[i] + sn[i] * h[i + 1]
+            t2 = -sn[i] * h[i] + cs[i] * h[i + 1]
+            return h.at[i].set(t1).at[i + 1].set(t2)
+
+        hcol = lax.fori_loop(0, j, rot, hcol)
+
+        # New rotation annihilating H[j+1, j].
+        denom = jnp.sqrt(hcol[j] ** 2 + hcol[j + 1] ** 2)
+        denom_safe = jnp.where(denom == 0.0, 1.0, denom)
+        c = jnp.where(denom == 0.0, 1.0, hcol[j] / denom_safe)
+        s = jnp.where(denom == 0.0, 0.0, hcol[j + 1] / denom_safe)
+        cs = cs.at[j].set(c)
+        sn = sn.at[j].set(s)
+        hcol = hcol.at[j].set(denom).at[j + 1].set(0.0)
+        gj = g[j]
+        g = g.at[j].set(c * gj).at[j + 1].set(-s * gj)
+        H = H.at[:, j].set(hcol[: m + 1])
+
+        res = jnp.abs(g[j + 1])
+        ok = ok & jnp.isfinite(res) & jnp.all(jnp.isfinite(hcol))
+        improved = res < 0.9 * best
+        best = jnp.where(improved, res, best)
+        stall = jnp.where(improved, 0, stall + 1)
+        return j + 1, V, H, cs, sn, g, res, ok, happy, best, stall
+
+    state0 = (
+        jnp.int32(0), V, H, cs, sn, g, beta, ok0, jnp.bool_(False), beta,
+        jnp.int32(0),
+    )
+    j, V, H, cs, sn, g, res, ok, _, _, _ = lax.while_loop(cond, body, state0)
+
+    # Back-substitute the j x j triangular system H y = g (masked to j).
+    def bwd(ii, y):
+        i = j - 1 - ii
+        idxm = jnp.arange(m)
+        row = jnp.where((idxm > i) & (idxm < j), H[i, :], 0.0)
+        s = row @ y
+        d = jnp.where(H[i, i] == 0.0, 1.0, H[i, i])
+        return y.at[i].set((g[i] - s) / d)
+
+    y = lax.fori_loop(0, j, bwd, jnp.zeros(m))
+    y = jnp.where(jnp.arange(m) < j, y, 0.0)
+
+    # z = V[:m].T @ y  (f64 accumulate, then round to fmt).
+    z = _chop(V[:m].T @ y, fmt)
+    relres = res / safe_beta
+    ok = ok & ok0 & jnp.all(jnp.isfinite(z))
+    return z, j, relres, ok.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Convenience composition used by tests (one full IR solve in jax, mirroring
+# what the Rust coordinator does artifact-by-artifact).
+# ---------------------------------------------------------------------------
+
+
+def gmres_ir_reference(
+    a,
+    b,
+    fmts: tuple[str, str, str, str],
+    tol_gmres: float = 1e-10,
+    tol_update: float = 1e-14,
+    max_outer: int = 10,
+    stag_ratio: float = 0.9,
+):
+    """Run full GMRES-IR in jax with action (u_f, u, u_g, u_r).
+
+    Test-only composition (the production path drives the four artifacts
+    from Rust); implements the paper's stopping criteria (14)-(16):
+    convergence on relative update norm, stagnation on update ratio, and
+    the outer-iteration cap. Returns (x, outer_iters, total_gmres_iters,
+    ok).
+    """
+    uf, u, ug, ur = fmts
+    lu, piv, okf = lu_factor(a, uf)
+    x = lu_solve(lu, piv, b, uf)
+    total_inner = 0
+    outer = 0
+    ok = bool(okf)
+    if not ok:
+        return x, 0, 0, False
+    prev_nz = None
+    for _ in range(max_outer):
+        r = residual(a, x, b, ur)
+        z, it, _relres, okg = gmres(
+            a, lu, piv, r, jnp.float64(tol_gmres), jnp.int32(GMRES_MAX_M), ug
+        )
+        x = _chop(x + z, u)
+        total_inner += int(it)
+        outer += 1
+        ok = ok and bool(okg)
+        nz = float(jnp.max(jnp.abs(z)))
+        nx = float(jnp.max(jnp.abs(x)))
+        if nx > 0 and nz / nx <= tol_update:
+            break  # eq. (14): converged
+        if prev_nz is not None and prev_nz > 0 and nz / prev_nz >= stag_ratio:
+            break  # eq. (15): stagnated
+        prev_nz = nz
+    return x, outer, total_inner, ok

@@ -1,0 +1,7 @@
+import os
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.dirname(__file__))
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,164 @@
+"""Kernel-vs-oracle tests for the chop emulator (L1).
+
+The bit-twiddling kernel (``chop.chop_bits`` / ``chop.pallas_chop``) must
+agree *bit-for-bit* with the independent frexp-based oracle
+(``ref.chop_ref``) on every format of paper Table 1, including subnormals,
+ties, overflow and specials. Hypothesis drives the sweep.
+"""
+
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.chop import FORMATS, chop_bits, pallas_chop
+from compile.kernels.ref import chop_ref
+
+ALL_FMTS = list(FORMATS)
+
+
+def bits_equal(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return np.array_equal(
+        a.view(np.uint64), b.view(np.uint64)
+    ) or np.array_equal(np.where(np.isnan(a), 0, a), np.where(np.isnan(b), 0, b))
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_exact_values_table1(fmt):
+    f = FORMATS[fmt]
+    # unit roundoff u = 2^-t; 1 + u must round back to 1 (tie to even),
+    # 1 + 2u must survive (it is the next representable number... for
+    # formats with t bits, spacing at 1.0 is 2^{1-t} = 2u).
+    u = 2.0 ** (-f.t)
+    assert float(chop_ref(np.array([1.0 + u]), f)[0]) == 1.0  # RNE tie -> even
+    assert float(chop_ref(np.array([1.0 + 2 * u]), f)[0]) == 1.0 + 2 * u
+    assert float(chop_ref(np.array([1.0 + 3 * u]), f)[0]) == 1.0 + 4 * u
+    # xmax is preserved; anything above rounds to inf eventually
+    assert float(chop_ref(np.array([f.xmax]), f)[0]) == f.xmax
+    # 1.1*xmax rounds above xmax for every format (incl. e4m3, whose xmax
+    # 448 is below the standard formula because the top code is NaN).
+    assert np.isinf(chop_ref(np.array([f.xmax * 1.1]), f)[0])
+    # smallest normal is preserved
+    xmin = 2.0**f.emin
+    assert float(chop_ref(np.array([xmin]), f)[0]) == xmin
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_specials(fmt):
+    x = np.array([0.0, -0.0, np.inf, -np.inf, np.nan])
+    for impl in (lambda v: np.asarray(chop_bits(jnp.asarray(v), FORMATS[fmt])),
+                 lambda v: chop_ref(v, fmt)):
+        y = impl(x)
+        assert y[0] == 0.0 and not np.signbit(y[0])
+        assert y[1] == 0.0 and np.signbit(y[1])
+        assert np.isposinf(y[2]) and np.isneginf(y[3]) and np.isnan(y[4])
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.floats(allow_nan=True, allow_infinity=True, allow_subnormal=True),
+    st.sampled_from(ALL_FMTS),
+)
+def test_kernel_matches_oracle_scalar(x, fmt):
+    got = np.asarray(chop_bits(jnp.float64(x), FORMATS[fmt]))
+    want = chop_ref(np.array([x]), fmt)[0]
+    assert bits_equal(got, want), (x, fmt, got, want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.floats(allow_nan=False, allow_infinity=True, allow_subnormal=True),
+        min_size=1,
+        max_size=300,
+    ),
+    st.sampled_from(ALL_FMTS),
+)
+def test_pallas_matches_oracle_vectors(xs, fmt):
+    x = np.array(xs, dtype=np.float64)
+    got = np.asarray(pallas_chop(jnp.asarray(x), fmt))
+    want = chop_ref(x, fmt)
+    assert bits_equal(got, want), (fmt,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 40),
+    st.integers(1, 40),
+    st.sampled_from(ALL_FMTS),
+    st.integers(0, 2**32 - 1),
+)
+def test_pallas_matches_oracle_matrices(m, n, fmt, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, n)) * np.exp(rng.uniform(-30, 30, (m, n)))
+    got = np.asarray(pallas_chop(jnp.asarray(x), fmt))
+    want = chop_ref(x, fmt)
+    assert bits_equal(got, want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(allow_nan=False, allow_infinity=False, allow_subnormal=True),
+    st.sampled_from(ALL_FMTS),
+)
+def test_idempotent(x, fmt):
+    once = chop_ref(np.array([x]), fmt)
+    twice = chop_ref(once, fmt)
+    assert bits_equal(once, twice)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(-1e30, 1e30),
+    st.floats(-1e30, 1e30),
+    st.sampled_from(ALL_FMTS),
+)
+def test_monotone(a, b, fmt):
+    lo, hi = min(a, b), max(a, b)
+    y = chop_ref(np.array([lo, hi]), fmt)
+    assert y[0] <= y[1]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(-1e37, 1e37, allow_subnormal=False))
+def test_widening_chain(x):
+    """chop through a wider format first never changes the narrow result
+    when the wide format's grid is a superset (fp32 -> bf16 shares emin)."""
+    via = chop_ref(chop_ref(np.array([x]), "fp32"), "bf16")
+    direct = chop_ref(np.array([x]), "bf16")
+    # Not exactly equal in general (double rounding), but ties aside the
+    # relative gap is bounded by one bf16 ulp.
+    if np.isfinite(via[0]) and np.isfinite(direct[0]) and direct[0] != 0:
+        assert abs(via[0] - direct[0]) <= 2.0 ** (-7) * abs(direct[0])
+
+
+def test_relative_error_bound():
+    """|chop(x) - x| <= u |x| with u = 2^-t, for normal-range x."""
+    rng = np.random.default_rng(42)
+    for fmt in ALL_FMTS:
+        f = FORMATS[fmt]
+        x = rng.standard_normal(5000) * np.exp(rng.uniform(-3, 3, 5000))
+        # The u-bound only holds in the normal range of the format
+        # (subnormals have larger relative spacing).
+        x = x[np.abs(x) >= 2.0**f.emin]
+        y = chop_ref(x, fmt)
+        rel = np.abs(y - x) / np.abs(x)
+        assert rel.max() <= 2.0 ** (-f.t), fmt
+
+
+def test_golden_vectors():
+    """Cross-language ground truth shared with the Rust chop module."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "testdata", "chop_golden.json")
+    with open(path) as fh:
+        golden = json.load(fh)
+    for case in golden["cases"]:
+        x = struct.unpack("<d", bytes.fromhex(case["x"]))[0]
+        for fmt, want_hex in case["out"].items():
+            got = chop_ref(np.array([x]), fmt)[0]
+            got_hex = struct.pack("<d", got).hex()
+            assert got_hex == want_hex, (case["x"], fmt)

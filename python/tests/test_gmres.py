@@ -1,0 +1,85 @@
+"""L2 preconditioned-GMRES graph: convergence, tolerance honoring,
+breakdown handling, chopped-precision behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def setup(n, seed, diag=None, fmt="fp64"):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)) + (diag if diag else n) * np.eye(n)
+    xt = rng.standard_normal(n)
+    b = a @ xt
+    lu, piv, ok = model.lu_factor(jnp.asarray(a), fmt)
+    assert int(ok) == 1
+    return a, xt, b, lu, piv
+
+
+def run_gmres(a, lu, piv, r, fmt, tol=1e-10, maxit=50):
+    return model.gmres(
+        jnp.asarray(a), lu, piv, jnp.asarray(r), jnp.float64(tol), jnp.int32(maxit), fmt
+    )
+
+
+def test_exact_preconditioner_converges_immediately():
+    a, xt, b, lu, piv = setup(40, 0)
+    z, it, relres, ok = run_gmres(a, lu, piv, b, "fp64")
+    assert int(ok) == 1
+    assert int(it) <= 2
+    np.testing.assert_allclose(np.asarray(z), xt, rtol=1e-8)
+
+
+def test_tolerance_is_honored():
+    a, xt, b, lu, piv = setup(60, 1)
+    for tol in (1e-4, 1e-8, 1e-12):
+        z, it, relres, ok = run_gmres(a, lu, piv, b, "fp64", tol=tol)
+        assert float(relres) <= tol or int(it) == 50
+
+
+def test_maxit_caps_iterations():
+    a, xt, b, lu, piv = setup(40, 2)
+    # Make the preconditioner useless for the perturbed system so GMRES
+    # needs several iterations, then cap them.
+    a2 = a + 0.5 * np.random.default_rng(3).standard_normal(a.shape)
+    z, it, relres, ok = model.gmres(
+        jnp.asarray(a2), lu, piv, jnp.asarray(b), jnp.float64(1e-30), jnp.int32(3), "fp64"
+    )
+    assert int(it) <= 3
+
+
+def test_identity_happy_breakdown():
+    n = 16
+    a = np.eye(n)
+    lu, piv, ok = model.lu_factor(jnp.asarray(a), "fp64")
+    b = np.arange(1.0, n + 1.0)
+    z, it, relres, ok = run_gmres(a, lu, piv, b, "fp64")
+    assert int(it) <= 2
+    np.testing.assert_allclose(np.asarray(z), b, rtol=1e-12)
+
+
+@pytest.mark.parametrize("fmt", ["bf16", "tf32", "fp32"])
+def test_chopped_gmres_reduces_residual(fmt):
+    a, xt, b, lu, piv = setup(48, 4, fmt=fmt)
+    z, it, relres, ok = run_gmres(a, lu, piv, b, fmt, tol=1e-2)
+    assert int(ok) == 1
+    assert np.all(np.isfinite(np.asarray(z)))
+    # solution should be in the right ballpark even at low precision
+    rel = np.max(np.abs(np.asarray(z) - xt)) / np.max(np.abs(xt))
+    assert rel < 0.2, (fmt, rel)
+
+
+def test_zero_rhs_is_safe():
+    a, xt, b, lu, piv = setup(20, 5)
+    z, it, relres, ok = run_gmres(a, lu, piv, np.zeros(20), "fp64")
+    assert np.all(np.isfinite(np.asarray(z)))
+    assert np.allclose(np.asarray(z), 0.0)
+
+
+def test_nan_rhs_flags_not_ok():
+    a, xt, b, lu, piv = setup(20, 6)
+    r = np.full(20, np.nan)
+    z, it, relres, ok = run_gmres(a, lu, piv, r, "fp64")
+    assert int(ok) == 0

@@ -1,0 +1,72 @@
+"""Full GMRES-IR composition (jax mirror of the Rust driver): the paper's
+qualitative claims at solver level."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def make(n, kappa, seed):
+    """Small randsvd-mode-2 style system (n-1 singular values at sigma_max,
+    one at sigma_max/kappa) — same construction as paper eq. (31)."""
+    rng = np.random.default_rng(seed)
+    q1, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    q2, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.ones(n)
+    s[-1] = 1.0 / kappa
+    a = (q1 * s) @ q2.T
+    xt = rng.standard_normal(n)
+    return a, xt, a @ xt
+
+
+@pytest.mark.parametrize("kappa", [1e2, 1e6])
+def test_fp64_action_reaches_working_accuracy(kappa):
+    a, xt, b = make(48, kappa, 0)
+    x, outer, inner, ok = model.gmres_ir_reference(
+        jnp.asarray(a), jnp.asarray(b), ("fp64", "fp64", "fp64", "fp64")
+    )
+    assert ok
+    ferr = np.max(np.abs(np.asarray(x) - xt)) / np.max(np.abs(xt))
+    assert ferr < 1e-9 * kappa
+    assert outer <= 5  # converges or stagnates quickly at fp64
+
+
+def test_low_precision_factorization_still_converges_when_well_conditioned():
+    """Paper's central premise: u_f can be low for small kappa (GMRES-IR
+    [10,11]) — bf16 LU + fp64 residual recovers fp64-level accuracy."""
+    a, xt, b = make(48, 1e2, 1)
+    x, outer, inner, ok = model.gmres_ir_reference(
+        jnp.asarray(a), jnp.asarray(b), ("bf16", "fp64", "fp32", "fp64"),
+        tol_gmres=1e-6, max_outer=10,
+    )
+    assert ok
+    ferr = np.max(np.abs(np.asarray(x) - xt)) / np.max(np.abs(xt))
+    assert ferr < 1e-10
+    assert outer >= 2  # must actually refine
+
+
+def test_low_precision_everywhere_loses_accuracy():
+    """All-bf16 action cannot reach fp64 accuracy — the trade-off the RL
+    agent's reward navigates."""
+    a, xt, b = make(48, 1e2, 2)
+    x, outer, inner, ok = model.gmres_ir_reference(
+        jnp.asarray(a), jnp.asarray(b), ("bf16", "bf16", "bf16", "bf16"),
+        tol_gmres=1e-2, max_outer=6,
+    )
+    ferr = np.max(np.abs(np.asarray(x) - xt)) / np.max(np.abs(xt))
+    assert ferr > 1e-8  # far from fp64-level
+
+
+def test_monotone_action_accuracy_ordering():
+    a, xt, b = make(40, 1e3, 3)
+    def ferr_of(fmts):
+        x, *_ = model.gmres_ir_reference(
+            jnp.asarray(a), jnp.asarray(b), fmts, tol_gmres=1e-8, max_outer=8
+        )
+        return np.max(np.abs(np.asarray(x) - xt)) / np.max(np.abs(xt))
+    full = ferr_of(("fp64", "fp64", "fp64", "fp64"))
+    mixed = ferr_of(("fp32", "fp64", "fp64", "fp64"))
+    assert full <= 1e-12
+    assert mixed <= 1e-10  # refinement recovers despite fp32 factorization

@@ -1,0 +1,93 @@
+"""L2 lu_factor / lu_solve graphs: fp64 path vs oracle; chopped paths obey
+the classic error scaling; failure flag trips on singular input."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import lu_ref, lu_solve_ref
+
+
+def random_system(n, seed, diag_boost=None):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    if diag_boost:
+        a += diag_boost * np.eye(n)
+    xt = rng.standard_normal(n)
+    return a, xt, a @ xt
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 60), st.integers(0, 2**32 - 1))
+def test_fp64_lu_matches_oracle(n, seed):
+    a, _, _ = random_system(n, seed)
+    lu, piv, ok = model.lu_factor(jnp.asarray(a), "fp64")
+    assert int(ok) == 1
+    lu_want, piv_want = lu_ref(a)
+    np.testing.assert_allclose(np.asarray(lu), lu_want, rtol=1e-12, atol=1e-13)
+    assert np.array_equal(np.asarray(piv), piv_want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 60), st.integers(0, 2**32 - 1))
+def test_fp64_lu_solve_solves(n, seed):
+    a, xt, b = random_system(n, seed, diag_boost=n)
+    lu, piv, ok = model.lu_factor(jnp.asarray(a), "fp64")
+    x = np.asarray(model.lu_solve(lu, piv, jnp.asarray(b), "fp64"))
+    assert int(ok) == 1
+    np.testing.assert_allclose(x, xt, rtol=1e-9)
+
+
+def test_fp64_solve_matches_reference_solver():
+    a, xt, b = random_system(40, 7, diag_boost=40)
+    lu_w, piv_w = lu_ref(a)
+    x_w = lu_solve_ref(lu_w, piv_w, b)
+    lu, piv, _ = model.lu_factor(jnp.asarray(a), "fp64")
+    x = np.asarray(model.lu_solve(lu, piv, jnp.asarray(b), "fp64"))
+    np.testing.assert_allclose(x, x_w, rtol=1e-11)
+
+
+@pytest.mark.parametrize("fmt,tol", [("bf16", 5e-2), ("tf32", 5e-3), ("fp32", 5e-6)])
+def test_chopped_lu_error_scaling(fmt, tol):
+    """ferr of a one-shot chopped solve scales with the format's unit
+    roundoff (well-conditioned system => ferr ~ c_n * u_fmt)."""
+    a, xt, b = random_system(64, 3, diag_boost=64)
+    lu, piv, ok = model.lu_factor(jnp.asarray(a), fmt)
+    assert int(ok) == 1
+    x = np.asarray(model.lu_solve(lu, piv, jnp.asarray(b), fmt))
+    ferr = np.max(np.abs(x - xt)) / np.max(np.abs(xt))
+    assert 0 < ferr < tol, (fmt, ferr)
+
+
+def test_error_ordering_across_formats():
+    a, xt, b = random_system(80, 11, diag_boost=80)
+    errs = {}
+    for fmt in ("bf16", "fp32", "fp64"):
+        lu, piv, _ = model.lu_factor(jnp.asarray(a), fmt)
+        x = np.asarray(model.lu_solve(lu, piv, jnp.asarray(b), fmt))
+        errs[fmt] = np.max(np.abs(x - xt)) / np.max(np.abs(xt))
+    assert errs["fp64"] < errs["fp32"] < errs["bf16"]
+
+
+def test_singular_matrix_sets_failure_flag():
+    a = np.zeros((8, 8))
+    _, _, ok = model.lu_factor(jnp.asarray(a), "fp64")
+    assert int(ok) == 0
+
+
+def test_overflow_in_narrow_format_sets_failure_flag():
+    """bf16 overflows beyond ~3.4e38: a matrix scaled past xmax chops to
+    inf and the pivot check must trip."""
+    a = np.eye(8) * 1e39
+    _, _, ok = model.lu_factor(jnp.asarray(a), "bf16")
+    assert int(ok) == 0
+
+
+def test_pivoting_handles_zero_leading_entry():
+    a = np.array([[0.0, 1.0], [1.0, 0.0]])
+    lu, piv, ok = model.lu_factor(jnp.asarray(a), "fp64")
+    assert int(ok) == 1
+    x = np.asarray(model.lu_solve(lu, piv, jnp.asarray([2.0, 3.0]), "fp64"))
+    np.testing.assert_allclose(x, [3.0, 2.0])

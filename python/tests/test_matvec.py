@@ -1,0 +1,81 @@
+"""Pallas chopped-GEMV / outer-update kernels vs the numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.chop import (
+    EXPERIMENT_FORMATS,
+    pallas_chopped_matvec,
+    pallas_outer_update,
+)
+from compile.kernels.ref import chop_ref, chopped_matvec_perop_ref, chopped_matvec_ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(1, 200),
+    st.integers(1, 200),
+    st.sampled_from(EXPERIMENT_FORMATS),
+    st.integers(0, 2**32 - 1),
+)
+def test_matvec_matches_oracle(m, n, fmt, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n)) * np.exp(rng.uniform(-5, 5))
+    x = rng.standard_normal(n)
+    got = np.asarray(pallas_chopped_matvec(jnp.asarray(a), jnp.asarray(x), fmt))
+    want = chopped_matvec_ref(a, x, fmt)
+    if fmt == "fp64":
+        # No final quantization: blockwise summation order may differ.
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-300)
+    else:
+        # For n <= one column block the accumulation order is identical
+        # and the final chop quantizes: exact equality required.
+        if n <= 128:
+            assert np.array_equal(got, want), fmt
+        else:
+            scale = np.max(np.abs(want)) + 1e-300
+            np.testing.assert_allclose(got, want, rtol=0, atol=2 ** -7 * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 24), st.sampled_from(["bf16", "tf32", "fp32"]), st.integers(0, 2**32 - 1))
+def test_accum_mode_close_to_perop_mode(n, fmt, seed):
+    """DESIGN.md §5 fidelity note: f64-accumulate emulation stays within a
+    few target ulps of strict Pychop per-op rounding for small dots."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    x = rng.standard_normal(n)
+    fast = chopped_matvec_ref(a, x, fmt)
+    strict = chopped_matvec_perop_ref(a, x, fmt)
+    from compile.kernels.chop import FORMATS
+
+    u = 2.0 ** (-FORMATS[fmt].t)
+    scale = np.abs(a).sum(axis=1) * np.abs(x).max() + 1e-30
+    assert np.all(np.abs(fast - strict) <= 4 * n * u * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 150),
+    st.integers(1, 150),
+    st.sampled_from(EXPERIMENT_FORMATS),
+    st.integers(0, 2**32 - 1),
+)
+def test_outer_update_matches_oracle(m, n, fmt, seed):
+    rng = np.random.default_rng(seed)
+    a = chop_ref(rng.standard_normal((m, n)), fmt)
+    mc = chop_ref(rng.standard_normal(m), fmt)
+    rr = chop_ref(rng.standard_normal(n), fmt)
+    got = np.asarray(
+        pallas_outer_update(jnp.asarray(mc), jnp.asarray(rr), jnp.asarray(a), fmt)
+    )
+    if fmt == "fp64":
+        want = a - np.outer(mc, rr)
+        # XLA may fuse a - m*r into an FMA: under cancellation the relative
+        # gap is unbounded, so compare against the operand magnitude.
+        scale = np.abs(a) + np.abs(np.outer(mc, rr)) + 1e-300
+        assert np.all(np.abs(got - want) <= 1e-15 * scale)
+    else:
+        want = chop_ref(a - chop_ref(np.outer(mc, rr), fmt), fmt)
+        assert np.array_equal(got, want)

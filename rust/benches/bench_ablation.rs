@@ -1,0 +1,19 @@
+//! E7/E8 — regenerates **Table 6** and **Figure 4** (reward without
+//! f_penalty, §5.4) and contrasts against the with-penalty run.
+
+use precision_autotune::coordinator::repro::ReproContext;
+use precision_autotune::util::benchkit::bench_once;
+use precision_autotune::util::config::Config;
+
+fn main() {
+    let name = std::env::var("PA_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    let cfg = Config::preset(&name).expect("preset");
+    println!("bench_ablation (E7/E8, §5.4): penalty term removed from eq. 21\n");
+    let mut ctx = ReproContext::new(cfg, "results/bench", true);
+    let (t6, _) = bench_once("no-penalty metrics (Table 6)", || ctx.table6().unwrap());
+    println!("{t6}");
+    let (f4, _) = bench_once("no-penalty precision usage (Figure 4)", || {
+        ctx.fig4().unwrap()
+    });
+    println!("{f4}");
+}

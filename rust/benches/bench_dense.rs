@@ -1,0 +1,26 @@
+//! E1 — regenerates **Table 2** (dense systems, both τ) and times the
+//! phases of the dense suite. Scale via PA_BENCH_PRESET (tiny|small|paper,
+//! default small).
+
+use precision_autotune::coordinator::repro::ReproContext;
+use precision_autotune::util::benchkit::bench_once;
+use precision_autotune::util::config::Config;
+
+fn preset() -> Config {
+    let name = std::env::var("PA_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    Config::preset(&name).expect("PA_BENCH_PRESET in {tiny,small,paper}")
+}
+
+fn main() {
+    let cfg = preset();
+    println!(
+        "bench_dense (E1/Table 2): preset systems={}x2, sizes {}-{}, episodes {}\n",
+        cfg.n_train, cfg.size_min, cfg.size_max, cfg.episodes
+    );
+    let mut ctx = ReproContext::new(cfg, "results/bench", true);
+    let (table, secs) = bench_once("dense suite (both tau, W1+W2+baseline)", || {
+        ctx.table2().expect("table2")
+    });
+    println!("{table}");
+    println!("table2 regenerated in {secs:.1}s; CSV at results/bench/table2.csv");
+}

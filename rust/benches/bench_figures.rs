@@ -1,0 +1,22 @@
+//! E2/E3/E9 — regenerates **Figure 2** (precision-type frequencies),
+//! **Figure 3** (per-sample RL-vs-FP64 scatter) and **Figures 5–12**
+//! (training reward/RPE curves; CSV series under results/bench/).
+
+use precision_autotune::coordinator::repro::ReproContext;
+use precision_autotune::util::benchkit::bench_once;
+use precision_autotune::util::config::Config;
+
+fn main() {
+    let name = std::env::var("PA_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    let cfg = Config::preset(&name).expect("preset");
+    println!("bench_figures (E2/E3/E9)\n");
+    let mut ctx = ReproContext::new(cfg, "results/bench", true);
+    let (f2, _) = bench_once("precision frequencies (Figure 2)", || ctx.fig2().unwrap());
+    println!("{f2}");
+    let (f3, _) = bench_once("RL vs FP64 scatter (Figure 3)", || ctx.fig3().unwrap());
+    println!("{f3}");
+    let (f512, _) = bench_once("training curves (Figures 5-12)", || {
+        ctx.figs5_12().unwrap()
+    });
+    println!("{f512}");
+}

@@ -1,0 +1,87 @@
+//! Micro-benchmarks of the hot paths (the §Perf targets of DESIGN.md):
+//! chop throughput, chopped LU / GEMV, GMRES, condest, Q-table ops,
+//! reward evaluation. These are the numbers the performance pass
+//! (EXPERIMENTS.md §Perf) tracks before/after each optimization.
+
+use precision_autotune::bandit::action::{Action, ActionSpace};
+use precision_autotune::bandit::qtable::QTable;
+use precision_autotune::bandit::reward::{reward, RewardInputs};
+use precision_autotune::chop::{chop_p, chop_slice, Prec};
+use precision_autotune::linalg::condest::condest_1;
+use precision_autotune::linalg::gmres::gmres_preconditioned;
+use precision_autotune::linalg::lu::lu_factor_chopped;
+use precision_autotune::linalg::Mat;
+use precision_autotune::util::benchkit::bench;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::rng::Rng;
+
+fn gauss_mat(n: usize, seed: u64, diag: f64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { diag } else { 0.0 };
+        }
+    }
+    a
+}
+
+fn main() {
+    println!("micro benches (L3 hot paths)\n");
+
+    // --- chop throughput ---
+    let mut rng = Rng::new(0);
+    let xs: Vec<f64> = (0..65536).map(|_| rng.gauss()).collect();
+    for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32] {
+        let mut buf = xs.clone();
+        let s = bench(&format!("chop_slice 64k {p}"), 3, 30, || {
+            buf.copy_from_slice(&xs);
+            chop_slice(&mut buf, p);
+            buf[0]
+        });
+        let per = s.median_ns / 65536.0;
+        println!("    -> {:.2} ns/elem ({:.1} Melem/s)", per, 1e3 / per);
+    }
+    let _ = chop_p(1.5, Prec::Bf16);
+
+    // --- chopped LU (the dominant solve cost) ---
+    for n in [128usize, 256, 384] {
+        let a = gauss_mat(n, 1, n as f64);
+        for p in [Prec::Bf16, Prec::Fp64] {
+            bench(&format!("lu_factor_chopped n={n} {p}"), 1, 5, || {
+                lu_factor_chopped(&a, p).unwrap().lu.data[0]
+            });
+        }
+    }
+
+    // --- matvec + GMRES ---
+    let n = 256;
+    let a = gauss_mat(n, 2, n as f64);
+    let x: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
+    bench("matvec n=256 f64", 3, 50, || a.matvec(&x)[0]);
+    let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+    let b = a.matvec(&x);
+    bench("gmres n=256 fp64 (exact precond)", 1, 10, || {
+        gmres_preconditioned(&a, &lu, &b, 1e-8, 50, Prec::Fp64).iters
+    });
+    let lu16 = lu_factor_chopped(&a, Prec::Bf16).unwrap();
+    let a16 = a.chopped(Prec::Bf16);
+    bench("gmres n=256 bf16 (chopped)", 1, 5, || {
+        gmres_preconditioned(&a16, &lu16, &b, 1e-6, 50, Prec::Bf16).iters
+    });
+
+    // --- condest (feature extraction) ---
+    bench("condest_1 n=256", 1, 10, || condest_1(&a, &lu) as u64);
+
+    // --- bandit ops ---
+    let space = ActionSpace::reduced();
+    let mut q = QTable::new(100, space);
+    let mut r = Rng::new(3);
+    bench("qtable update", 10, 1000, || {
+        q.update(r.below(100), r.below(35), r.uniform(), 0.5)
+    });
+    bench("qtable argmax", 10, 1000, || q.argmax(r.below(100)));
+    let cfg = Config::default();
+    let inp = RewardInputs { ferr: 1e-12, nbe: 1e-16, gmres_iters: 8, kappa: 1e4, failed: false };
+    bench("reward eval", 10, 1000, || reward(&cfg, &Action::FP64, &inp));
+}

@@ -1,0 +1,62 @@
+//! PJRT runtime benches: artifact compile latency, per-op execute latency
+//! across buckets/precisions, and PJRT-vs-native end-to-end solve time —
+//! quantifies the boundary cost of the three-layer split.
+//! Skips (cleanly) if `make artifacts` hasn't run.
+
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::action::Action;
+use precision_autotune::chop::Prec;
+use precision_autotune::gen::{finish_problem, randsvd_mode2};
+use precision_autotune::runtime::PjrtBackend;
+use precision_autotune::solver::ir::gmres_ir;
+use precision_autotune::solver::SolverBackend;
+use precision_autotune::util::benchkit::{bench, bench_once};
+use precision_autotune::util::config::Config;
+use precision_autotune::util::rng::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_runtime: SKIP (artifacts/ missing — run `make artifacts`)");
+        return;
+    }
+    println!("PJRT runtime benches\n");
+    let mut pjrt = PjrtBackend::open("artifacts").expect("open artifacts");
+
+    let mut rng = Rng::new(7);
+    for n in [64usize, 128, 256] {
+        let a = randsvd_mode2(n, 1e3, &mut rng);
+        // first call includes XLA compilation (cached afterwards)
+        let (_, compile_s) = bench_once(&format!("first lu_factor fp64 n={n} (compile+run)"), || {
+            pjrt.lu_factor(&a, Prec::Fp64).unwrap()
+        });
+        let _ = compile_s;
+        let f = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
+        bench(&format!("pjrt lu_factor fp64 n={n} (cached)"), 1, 5, || {
+            pjrt.lu_factor(&a, Prec::Fp64).unwrap().piv[0]
+        });
+        let b: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        bench(&format!("pjrt lu_solve  fp64 n={n}"), 1, 10, || {
+            pjrt.lu_solve(&f, &b, Prec::Fp64).unwrap()[0]
+        });
+        bench(&format!("pjrt residual  bf16 n={n}"), 1, 10, || {
+            pjrt.residual(&a, &b, &b, Prec::Bf16).unwrap()[0]
+        });
+    }
+
+    // end-to-end solve comparison
+    let a = randsvd_mode2(96, 1e3, &mut rng);
+    let p = finish_problem(0, a, 1e3, 1.0, &mut rng);
+    let cfg = Config::small();
+    let action = Action::FP64;
+    bench("e2e IR solve n=96 fp64 [pjrt]", 1, 3, || {
+        gmres_ir(&mut pjrt, &p, &action, &cfg).unwrap().outer_iters
+    });
+    let mut native = NativeBackend::new();
+    bench("e2e IR solve n=96 fp64 [native]", 1, 3, || {
+        gmres_ir(&mut native, &p, &action, &cfg).unwrap().outer_iters
+    });
+    println!(
+        "\nartifacts compiled this session: {}",
+        pjrt.rt.artifacts_compiled()
+    );
+}

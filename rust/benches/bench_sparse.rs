@@ -1,0 +1,28 @@
+//! E4/E5/E6 — regenerates **Table 3** (dataset stats), **Table 4**
+//! (sparse metrics) and **Table 5** (precision usage) with phase timing.
+//! Scale via PA_BENCH_PRESET (tiny|small|paper, default small).
+
+use precision_autotune::coordinator::repro::ReproContext;
+use precision_autotune::util::benchkit::bench_once;
+use precision_autotune::util::config::Config;
+
+fn main() {
+    let name = std::env::var("PA_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    let mut cfg = Config::preset(&name).expect("preset");
+    if name == "small" {
+        // sparse systems need real coupling for the Table-5 shape
+        cfg.size_min = 100;
+        cfg.size_max = 220;
+    }
+    println!(
+        "bench_sparse (E4/E5/E6): lambda_s={}, beta={:e}, sizes {}-{}\n",
+        cfg.sparsity, cfg.sparse_beta, cfg.size_min, cfg.size_max
+    );
+    let mut ctx = ReproContext::new(cfg, "results/bench", true);
+    let (t3, _) = bench_once("sparse dataset stats (Table 3)", || ctx.table3().unwrap());
+    println!("{t3}");
+    let (t4, _) = bench_once("sparse metrics (Table 4)", || ctx.table4().unwrap());
+    println!("{t4}");
+    let (t5, _) = bench_once("precision usage (Table 5)", || ctx.table5().unwrap());
+    println!("{t5}");
+}

@@ -1,0 +1,190 @@
+//! Pure-Rust chopped-arithmetic backend: the fast path used for the
+//! paper-scale training sweeps (DESIGN.md §2). Semantics are the mirror
+//! of the Layer-2 graphs — the `chop` primitive is bit-identical to the
+//! Pallas kernel, dot products accumulate in f64, storage is rounded per
+//! step — so the PJRT path and this path agree to summation-order noise
+//! (verified by the runtime integration tests).
+
+use anyhow::{anyhow, Result};
+
+use crate::chop::Prec;
+use crate::linalg::gmres::gmres_preconditioned;
+use crate::linalg::lu::{lu_factor_chopped, LuFactors};
+use crate::linalg::{chopped_residual, Mat};
+use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
+
+/// Native backend. Caches the chopped copy of A between the residual /
+/// GMRES steps of one solve (invalidated by [`SolverBackend::reset`]).
+#[derive(Default)]
+pub struct NativeBackend {
+    /// (matrix fingerprint, precision) -> chopped copy of A
+    a_cache: Option<(u64, Prec, Mat)>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { a_cache: None }
+    }
+
+    fn chopped_a(&mut self, a: &Mat, p: Prec) -> Mat {
+        let fp = fingerprint(a);
+        if let Some((cfp, cp, cached)) = &self.a_cache {
+            if *cfp == fp && *cp == p {
+                return cached.clone();
+            }
+        }
+        let m = a.chopped(p);
+        self.a_cache = Some((fp, p, m.clone()));
+        m
+    }
+}
+
+fn fingerprint(a: &Mat) -> u64 {
+    // cheap structural fingerprint: dims + a few sampled entries
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(a.n_rows as u64);
+    mix(a.n_cols as u64);
+    let n = a.data.len();
+    let step = (n / 16).max(1);
+    for i in (0..n).step_by(step) {
+        mix(a.data[i].to_bits());
+    }
+    h
+}
+
+fn to_factors(f: &LuHandle) -> LuFactors {
+    LuFactors {
+        lu: f.lu.clone(),
+        piv: f.piv.iter().map(|&p| p as usize).collect(),
+        prec: f.prec,
+    }
+}
+
+impl SolverBackend for NativeBackend {
+    fn lu_factor(&mut self, a: &Mat, p: Prec) -> Result<LuHandle> {
+        let f = lu_factor_chopped(a, p).map_err(|e| anyhow!("{e}"))?;
+        Ok(LuHandle {
+            lu: f.lu,
+            piv: f.piv.iter().map(|&x| x as i32).collect(),
+            prec: p,
+        })
+    }
+
+    fn lu_solve(&mut self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>> {
+        Ok(to_factors(f).solve_chopped(b, p))
+    }
+
+    fn residual(&mut self, a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
+        // chopped_residual chops A internally; reuse the cached copy when
+        // the precision matches to avoid re-chopping 512^2 entries per
+        // outer iteration.
+        if p == Prec::Fp64 {
+            return Ok(chopped_residual(a, x, b, p));
+        }
+        let ac = self.chopped_a(a, p);
+        let mut xc = x.to_vec();
+        crate::chop::chop_slice(&mut xc, p);
+        let ax = crate::linalg::chopped_matvec_prechopped(&ac, &xc, p);
+        Ok(b.iter()
+            .zip(ax)
+            .map(|(bi, axi)| crate::chop::chop_p(crate::chop::chop_p(*bi, p) - axi, p))
+            .collect())
+    }
+
+    fn gmres(
+        &mut self,
+        a: &Mat,
+        f: &LuHandle,
+        r: &[f64],
+        tol: f64,
+        max_m: usize,
+        p: Prec,
+    ) -> Result<GmresOutcome> {
+        let ap = if p == Prec::Fp64 { a.clone() } else { self.chopped_a(a, p) };
+        let res = gmres_preconditioned(&ap, &to_factors(f), r, tol, max_m, p);
+        Ok(GmresOutcome {
+            z: res.z,
+            iters: res.iters,
+            relres: res.relres,
+            ok: res.ok,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn reset(&mut self) {
+        self.a_cache = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        (a, xt, b)
+    }
+
+    #[test]
+    fn full_step_sequence_solves() {
+        let (a, xt, b) = system(40, 0);
+        let mut be = NativeBackend::new();
+        let f = be.lu_factor(&a, Prec::Fp64).unwrap();
+        let x0 = be.lu_solve(&f, &b, Prec::Fp64).unwrap();
+        let r = be.residual(&a, &x0, &b, Prec::Fp64).unwrap();
+        let g = be.gmres(&a, &f, &r, 1e-10, 50, Prec::Fp64).unwrap();
+        assert!(g.ok);
+        let x1: Vec<f64> = x0.iter().zip(&g.z).map(|(a, b)| a + b).collect();
+        let ferr = crate::solver::metrics::ferr(&x1, &xt);
+        assert!(ferr < 1e-12, "{ferr}");
+    }
+
+    #[test]
+    fn residual_cache_consistent_with_uncached() {
+        let (a, _, b) = system(30, 1);
+        let x = vec![0.5; 30];
+        let mut be = NativeBackend::new();
+        let r1 = be.residual(&a, &x, &b, Prec::Bf16).unwrap();
+        let r2 = be.residual(&a, &x, &b, Prec::Bf16).unwrap(); // cached path
+        let r3 = crate::linalg::chopped_residual(&a, &x, &b, Prec::Bf16);
+        assert_eq!(r1, r2);
+        assert_eq!(r1, r3);
+    }
+
+    #[test]
+    fn cache_distinguishes_precisions_and_matrices() {
+        let (a, _, b) = system(20, 2);
+        let (a2, _, b2) = system(20, 3);
+        let x = vec![1.0; 20];
+        let mut be = NativeBackend::new();
+        let r16 = be.residual(&a, &x, &b, Prec::Bf16).unwrap();
+        let r32 = be.residual(&a, &x, &b, Prec::Fp32).unwrap();
+        assert_ne!(r16, r32);
+        let ra2 = be.residual(&a2, &x, &b2, Prec::Fp32).unwrap();
+        let ra2_direct = crate::linalg::chopped_residual(&a2, &x, &b2, Prec::Fp32);
+        assert_eq!(ra2, ra2_direct);
+    }
+
+    #[test]
+    fn factorization_failure_is_err() {
+        let mut be = NativeBackend::new();
+        let a = Mat::zeros(5, 5);
+        assert!(be.lu_factor(&a, Prec::Fp64).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Joint action space (eq. 1) and its structured reduction (eq. 11–12).
+//!
+//! An action is the precision 4-tuple a = (u_f, u, u_g, u_r) for the four
+//! precision-controlled steps of GMRES-IR. The reduced space keeps only
+//! monotone tuples u_f ≤ u ≤ u_g ≤ u_r (ordered by significand bits),
+//! giving C(m+k−1, k) combinations — 35 for m=4 precisions, k=4 steps, an
+//! ~86% cut from the full 256 (§3.2).
+
+use crate::chop::Prec;
+
+/// A precision configuration for one GMRES-IR solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Action {
+    /// u_f — LU factorization + initial solve
+    pub u_f: Prec,
+    /// u — solution update x_{i+1} = x_i + z_i
+    pub u: Prec,
+    /// u_g — GMRES working precision (incl. preconditioner application)
+    pub u_g: Prec,
+    /// u_r — residual computation
+    pub u_r: Prec,
+}
+
+impl Action {
+    pub const FP64: Action = Action {
+        u_f: Prec::Fp64,
+        u: Prec::Fp64,
+        u_g: Prec::Fp64,
+        u_r: Prec::Fp64,
+    };
+
+    /// The tuple in paper order (u_f, u, u_g, u_r).
+    pub fn tuple(&self) -> [Prec; 4] {
+        [self.u_f, self.u, self.u_g, self.u_r]
+    }
+
+    /// Monotone constraint of eq. (11): u_f ≤ u ≤ u_g ≤ u_r by
+    /// significand bits.
+    pub fn is_monotone(&self) -> bool {
+        self.u_f <= self.u && self.u <= self.u_g && self.u_g <= self.u_r
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "({},{},{},{})",
+            self.u_f.name(),
+            self.u.name(),
+            self.u_g.name(),
+            self.u_r.name()
+        )
+    }
+}
+
+impl std::fmt::Display for Action {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// The reduced action space 𝒜_reduced (plus helpers over the full space).
+#[derive(Clone, Debug)]
+pub struct ActionSpace {
+    pub actions: Vec<Action>,
+}
+
+impl ActionSpace {
+    /// All m^k joint actions (k=4 fixed by GMRES-IR).
+    pub fn full() -> ActionSpace {
+        let mut actions = Vec::new();
+        for &u_f in &Prec::ALL {
+            for &u in &Prec::ALL {
+                for &u_g in &Prec::ALL {
+                    for &u_r in &Prec::ALL {
+                        actions.push(Action { u_f, u, u_g, u_r });
+                    }
+                }
+            }
+        }
+        ActionSpace { actions }
+    }
+
+    /// The monotone reduction of eq. (11): non-decreasing tuples only.
+    pub fn reduced() -> ActionSpace {
+        let mut actions: Vec<Action> = ActionSpace::full()
+            .actions
+            .into_iter()
+            .filter(Action::is_monotone)
+            .collect();
+        // Deterministic order: lexicographic by (u_f, u, u_g, u_r),
+        // i.e. cheapest-first; ties in Q resolve toward lower precision.
+        actions.sort_by_key(|a| a.tuple().map(|p| p as u8));
+        ActionSpace { actions }
+    }
+
+    /// Optional top-k pruning (§5: "further pruned ... one-fourth of the
+    /// valid precision combinations"). Keeps a spread across the cost
+    /// spectrum: every ceil(len/k)-th action of the cost-ordered list,
+    /// always retaining the all-FP64 fallback.
+    pub fn reduced_top_k(k_top: usize) -> ActionSpace {
+        let all = ActionSpace::reduced();
+        if k_top == 0 || k_top >= all.len() {
+            return all;
+        }
+        let stride = (all.len() as f64 / k_top as f64).ceil() as usize;
+        let mut actions: Vec<Action> = all.actions.iter().copied().step_by(stride).collect();
+        if !actions.contains(&Action::FP64) {
+            actions.push(Action::FP64);
+        }
+        ActionSpace { actions }
+    }
+
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    pub fn index_of(&self, a: &Action) -> Option<usize> {
+        self.actions.iter().position(|x| x == a)
+    }
+
+    /// C(m+k−1, k) — the reduced-space cardinality formula (eq. 12).
+    pub fn reduced_cardinality(m: usize, k: usize) -> usize {
+        // binomial(m+k-1, k) with small arguments
+        let n = m + k - 1;
+        let mut num: u128 = 1;
+        let mut den: u128 = 1;
+        for i in 0..k {
+            num *= (n - i) as u128;
+            den *= (i + 1) as u128;
+        }
+        (num / den) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_space_has_256_actions() {
+        assert_eq!(ActionSpace::full().len(), 256); // m^k = 4^4 (eq. 1)
+    }
+
+    #[test]
+    fn reduced_space_has_35_actions() {
+        // §3.2: "we prune the action space from 256 to 35, ~86%"
+        let r = ActionSpace::reduced();
+        assert_eq!(r.len(), 35);
+        assert_eq!(ActionSpace::reduced_cardinality(4, 4), 35);
+        let cut = 1.0 - 35.0 / 256.0;
+        assert!(cut > 0.86 && cut < 0.87);
+    }
+
+    #[test]
+    fn reduced_cardinality_formula() {
+        assert_eq!(ActionSpace::reduced_cardinality(2, 2), 3);
+        assert_eq!(ActionSpace::reduced_cardinality(3, 2), 6);
+        assert_eq!(ActionSpace::reduced_cardinality(7, 4), 210);
+    }
+
+    #[test]
+    fn all_reduced_actions_are_monotone_and_unique() {
+        let r = ActionSpace::reduced();
+        for a in &r.actions {
+            assert!(a.is_monotone(), "{a}");
+        }
+        let mut set = std::collections::HashSet::new();
+        for a in &r.actions {
+            assert!(set.insert(*a), "duplicate {a}");
+        }
+    }
+
+    #[test]
+    fn reduced_contains_extremes() {
+        let r = ActionSpace::reduced();
+        assert!(r.index_of(&Action::FP64).is_some());
+        let all_bf16 = Action {
+            u_f: Prec::Bf16,
+            u: Prec::Bf16,
+            u_g: Prec::Bf16,
+            u_r: Prec::Bf16,
+        };
+        assert!(r.index_of(&all_bf16).is_some());
+        // the paper's flagship mixed config: low factorization, high residual
+        let flagship = Action {
+            u_f: Prec::Bf16,
+            u: Prec::Fp64,
+            u_g: Prec::Fp64,
+            u_r: Prec::Fp64,
+        };
+        assert!(r.index_of(&flagship).is_some());
+    }
+
+    #[test]
+    fn non_monotone_rejected() {
+        let bad = Action {
+            u_f: Prec::Fp64,
+            u: Prec::Bf16,
+            u_g: Prec::Fp64,
+            u_r: Prec::Fp64,
+        };
+        assert!(!bad.is_monotone());
+        assert!(ActionSpace::reduced().index_of(&bad).is_none());
+    }
+
+    #[test]
+    fn top_k_pruning_keeps_fp64_and_spread() {
+        // §5: one-fourth of the 35 valid combinations
+        let pruned = ActionSpace::reduced_top_k(9);
+        assert!(pruned.len() <= 10 && pruned.len() >= 8, "{}", pruned.len());
+        assert!(pruned.index_of(&Action::FP64).is_some());
+        // includes at least one low-precision action
+        assert!(pruned.actions.iter().any(|a| a.u_f == Prec::Bf16));
+        // k_top = 0 disables pruning
+        assert_eq!(ActionSpace::reduced_top_k(0).len(), 35);
+        assert_eq!(ActionSpace::reduced_top_k(100).len(), 35);
+    }
+
+    #[test]
+    fn property_reduction_matches_formula_for_all_mk() {
+        // enumerate non-decreasing tuples for m in 1..=4 (restricting to
+        // prefixes of Prec::ALL), k = 4, and compare with the formula
+        for m in 1..=4usize {
+            let count = ActionSpace::full()
+                .actions
+                .iter()
+                .filter(|a| a.is_monotone())
+                .filter(|a| a.tuple().iter().all(|p| (*p as usize) < m))
+                .count();
+            assert_eq!(count, ActionSpace::reduced_cardinality(m, 4), "m={m}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's contribution: a contextual bandit for precision selection
+//! (§3, Alg. 1) instantiated for GMRES-IR (§4, Alg. 3).
+//!
+//! * [`action`] — the joint action space 𝒜 = 𝒜₁⁴ and its monotone
+//!   reduction (eq. 11–12): 256 → 35 configurations.
+//! * [`reward`] — the multi-objective reward (eq. 21–25).
+//! * [`qtable`] — tabular action-value estimator Q(s_d, a) with the
+//!   incremental update (eq. 6/27) and both learning-rate schedules.
+//! * [`policy`] — ε-greedy selection (eq. 5) with linear decay (eq. 13).
+//! * [`trainer`] — the training loop of Alg. 3 with the deterministic
+//!   solve cache, reward/RPE episode traces (Figs. 5–12), and the
+//!   inference-time greedy policy.
+
+pub mod action;
+pub mod policy;
+pub mod qtable;
+pub mod reward;
+pub mod trainer;
+
+pub use action::{Action, ActionSpace};
+pub use policy::{epsilon_at, select_action};
+pub use qtable::QTable;
+pub use reward::{reward, RewardInputs};
+pub use trainer::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};

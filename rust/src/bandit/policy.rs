@@ -1,0 +1,78 @@
+//! ε-greedy policy (eq. 5) with the paper's linear decay schedule
+//! (eq. 13 / 26): ε_t = max(ε_min, 1 − t/T).
+
+use crate::bandit::qtable::QTable;
+use crate::util::rng::Rng;
+
+/// Exploration rate at (0-based) episode t of T (eq. 13).
+pub fn epsilon_at(episode: usize, total_episodes: usize, eps_min: f64) -> f64 {
+    let t = episode as f64;
+    let cap = total_episodes.max(1) as f64;
+    (1.0 - t / cap).max(eps_min)
+}
+
+/// Alg. 1 line 10 / Alg. 3 line 10: with probability ε a uniformly random
+/// action from 𝒜_reduced, otherwise the greedy argmax. Returns the action
+/// index and whether the step explored.
+pub fn select_action(q: &QTable, state: usize, eps: f64, rng: &mut Rng) -> (usize, bool) {
+    if rng.uniform() < eps {
+        (rng.below(q.space.len()), true)
+    } else {
+        (q.argmax(state), false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::action::ActionSpace;
+
+    #[test]
+    fn epsilon_schedule_matches_eq13() {
+        assert_eq!(epsilon_at(0, 100, 0.05), 1.0);
+        assert_eq!(epsilon_at(50, 100, 0.05), 0.5);
+        assert_eq!(epsilon_at(99, 100, 0.05), 0.05f64.max(1.0 - 0.99));
+        assert_eq!(epsilon_at(100, 100, 0.05), 0.05);
+        assert_eq!(epsilon_at(1000, 100, 0.05), 0.05);
+    }
+
+    #[test]
+    fn greedy_when_eps_zero() {
+        let mut q = QTable::new(1, ActionSpace::reduced());
+        q.update(0, 20, 5.0, 1.0);
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let (a, explored) = select_action(&q, 0, 0.0, &mut rng);
+            assert_eq!(a, 20);
+            assert!(!explored);
+        }
+    }
+
+    #[test]
+    fn uniform_when_eps_one() {
+        let q = QTable::new(1, ActionSpace::reduced());
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0usize; q.space.len()];
+        for _ in 0..3500 {
+            let (a, explored) = select_action(&q, 0, 1.0, &mut rng);
+            assert!(explored);
+            counts[a] += 1;
+        }
+        // every action visited, roughly uniformly (expected 100 each)
+        assert!(counts.iter().all(|&c| c > 40), "{counts:?}");
+    }
+
+    #[test]
+    fn exploration_fraction_tracks_eps() {
+        let mut q = QTable::new(1, ActionSpace::reduced());
+        q.update(0, 3, 1.0, 1.0);
+        let mut rng = Rng::new(2);
+        let eps = 0.3;
+        let n = 20_000;
+        let explored = (0..n)
+            .filter(|_| select_action(&q, 0, eps, &mut rng).1)
+            .count();
+        let frac = explored as f64 / n as f64;
+        assert!((frac - eps).abs() < 0.02, "frac {frac}");
+    }
+}

@@ -1,0 +1,296 @@
+//! Tabular action-value estimator Q : S_d × A → ℝ (§3.2).
+//!
+//! One flat table over (state, action) with the incremental update of
+//! eq. (6)/(27): Q ← Q + α (R − Q). Supports the fixed-α schedule the
+//! paper uses in §5 (α = 0.5) and the 1/N(s,a) visit-count schedule of
+//! Alg. 1 line 13. Persists to JSON together with its action list so a
+//! trained policy is self-describing.
+
+use anyhow::{bail, Result};
+
+use crate::bandit::action::{Action, ActionSpace};
+use crate::chop::Prec;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct QTable {
+    pub n_states: usize,
+    pub space: ActionSpace,
+    /// Q values, row-major [state][action]
+    q: Vec<f64>,
+    /// visit counts N(s_d, a)
+    visits: Vec<u32>,
+}
+
+impl QTable {
+    pub fn new(n_states: usize, space: ActionSpace) -> QTable {
+        let n = n_states * space.len();
+        QTable { n_states, space, q: vec![0.0; n], visits: vec![0; n] }
+    }
+
+    #[inline]
+    fn idx(&self, state: usize, action: usize) -> usize {
+        debug_assert!(state < self.n_states && action < self.space.len());
+        state * self.space.len() + action
+    }
+
+    #[inline]
+    pub fn q(&self, state: usize, action: usize) -> f64 {
+        self.q[self.idx(state, action)]
+    }
+
+    #[inline]
+    pub fn visits(&self, state: usize, action: usize) -> u32 {
+        self.visits[self.idx(state, action)]
+    }
+
+    pub fn total_visits(&self, state: usize) -> u64 {
+        let base = state * self.space.len();
+        self.visits[base..base + self.space.len()]
+            .iter()
+            .map(|&v| v as u64)
+            .sum()
+    }
+
+    /// Incremental update (eq. 6 / 27). `alpha = 0` selects the 1/N(s,a)
+    /// schedule of Alg. 1. Returns the reward-prediction error R − Q
+    /// *before* the update (the RPE traced in the appendix figures).
+    pub fn update(&mut self, state: usize, action: usize, r: f64, alpha: f64) -> f64 {
+        let i = self.idx(state, action);
+        self.visits[i] += 1;
+        let a = if alpha > 0.0 { alpha } else { 1.0 / self.visits[i] as f64 };
+        let rpe = r - self.q[i];
+        self.q[i] += a * rpe;
+        rpe
+    }
+
+    /// Greedy action (eq. 7); deterministic tie-break toward the lowest
+    /// index, which the cost-ordered action list makes "cheapest wins".
+    pub fn argmax(&self, state: usize) -> usize {
+        let base = state * self.space.len();
+        let row = &self.q[base..base + self.space.len()];
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn best_action(&self, state: usize) -> Action {
+        self.space.actions[self.argmax(state)]
+    }
+
+    /// Greedy argmax restricted to *visited* actions — the inference-time
+    /// policy. Zero-initialized Q is "optimism in the face of
+    /// uncertainty": correct for training-time exploration, but at
+    /// inference an action the agent never tried must not beat actions
+    /// with measured (possibly negative) value. Returns None when the
+    /// state was never visited at all (caller falls back to FP64).
+    pub fn argmax_visited(&self, state: usize) -> Option<usize> {
+        let base = state * self.space.len();
+        let mut best: Option<usize> = None;
+        for i in 0..self.space.len() {
+            if self.visits[base + i] > 0 {
+                match best {
+                    None => best = Some(i),
+                    Some(b) if self.q[base + i] > self.q[base + b] => best = Some(i),
+                    _ => {}
+                }
+            }
+        }
+        best
+    }
+
+    /// Inference-time action (greedy over visited; FP64 when unvisited).
+    pub fn best_action_visited(&self, state: usize) -> Action {
+        match self.argmax_visited(state) {
+            Some(i) => self.space.actions[i],
+            None => Action::FP64,
+        }
+    }
+
+    /// Max Q over a state's row.
+    pub fn max_q(&self, state: usize) -> f64 {
+        self.q(state, self.argmax(state))
+    }
+
+    // ---- persistence ----
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("n_states", json::num(self.n_states as f64)),
+            (
+                "actions",
+                Value::Arr(
+                    self.space
+                        .actions
+                        .iter()
+                        .map(|a| {
+                            Value::Arr(
+                                a.tuple()
+                                    .iter()
+                                    .map(|p| json::s(p.name()))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("q", json::num_arr(&self.q)),
+            (
+                "visits",
+                Value::Arr(self.visits.iter().map(|&v| json::num(v as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<QTable> {
+        let n_states = v.get("n_states")?.as_usize()?;
+        let mut actions = Vec::new();
+        for a in v.get("actions")?.as_arr()? {
+            let parts = a.as_arr()?;
+            if parts.len() != 4 {
+                bail!("action tuple must have 4 precisions");
+            }
+            let p: Vec<Prec> = parts
+                .iter()
+                .map(|x| {
+                    Prec::by_name(x.as_str()?)
+                        .ok_or_else(|| anyhow::anyhow!("unknown precision {:?}", x))
+                })
+                .collect::<Result<_>>()?;
+            actions.push(Action { u_f: p[0], u: p[1], u_g: p[2], u_r: p[3] });
+        }
+        let space = ActionSpace { actions };
+        let q: Vec<f64> = v
+            .get("q")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Result<_>>()?;
+        let visits: Vec<u32> = v
+            .get("visits")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_f64()? as u32))
+            .collect::<Result<_>>()?;
+        if q.len() != n_states * space.len() || visits.len() != q.len() {
+            bail!(
+                "Q-table shape mismatch: {} states x {} actions vs {} values",
+                n_states,
+                space.len(),
+                q.len()
+            );
+        }
+        Ok(QTable { n_states, space, q, visits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> QTable {
+        QTable::new(4, ActionSpace::reduced())
+    }
+
+    #[test]
+    fn update_moves_toward_reward() {
+        let mut t = table();
+        let rpe = t.update(0, 3, 10.0, 0.5);
+        assert_eq!(rpe, 10.0);
+        assert_eq!(t.q(0, 3), 5.0);
+        let rpe2 = t.update(0, 3, 10.0, 0.5);
+        assert_eq!(rpe2, 5.0);
+        assert_eq!(t.q(0, 3), 7.5);
+        assert_eq!(t.visits(0, 3), 2);
+    }
+
+    #[test]
+    fn one_over_n_schedule_computes_running_mean() {
+        let mut t = table();
+        for (i, r) in [2.0, 4.0, 6.0, 8.0].iter().enumerate() {
+            t.update(1, 0, *r, 0.0);
+            assert_eq!(t.visits(1, 0), (i + 1) as u32);
+        }
+        assert!((t.q(1, 0) - 5.0).abs() < 1e-12); // mean of 2,4,6,8
+    }
+
+    #[test]
+    fn argmax_and_tie_break() {
+        let mut t = table();
+        assert_eq!(t.argmax(2), 0); // all-zero row -> first (cheapest)
+        t.update(2, 7, 3.0, 1.0);
+        t.update(2, 11, 3.0, 1.0);
+        assert_eq!(t.argmax(2), 7); // tie -> lower index
+        t.update(2, 11, 3.0, 1.0); // nudges 11 above via repeated reward? no: alpha=1 sets exactly 3.0
+        assert_eq!(t.argmax(2), 7);
+        t.update(2, 11, 4.0, 1.0);
+        assert_eq!(t.argmax(2), 11);
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        let mut t = table();
+        t.update(0, 0, 9.0, 1.0);
+        assert_eq!(t.q(1, 0), 0.0);
+        assert_eq!(t.total_visits(0), 1);
+        assert_eq!(t.total_visits(1), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let mut t = table();
+        t.update(0, 1, 0.1 + 0.2, 0.5);
+        t.update(3, 34, -7.25, 0.0);
+        let text = t.to_json().to_string();
+        let back = QTable::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_states, t.n_states);
+        assert_eq!(back.space.actions, t.space.actions);
+        for s in 0..4 {
+            for a in 0..35 {
+                assert_eq!(back.q(s, a), t.q(s, a));
+                assert_eq!(back.visits(s, a), t.visits(s, a));
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_shape_mismatch() {
+        let t = table();
+        let mut v = t.to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("n_states".into(), json::num(5.0));
+        }
+        assert!(QTable::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn property_q_stays_bounded_by_reward_range() {
+        use crate::util::proptest::{check, gen as g};
+        check("q_bounded", 17, 100, |rng| {
+            let mut t = QTable::new(2, ActionSpace::reduced());
+            let (lo, hi) = (-10.0, 25.0);
+            for _ in 0..200 {
+                let s = rng.below(2);
+                let a = rng.below(35);
+                let r = rng.uniform_in(lo, hi);
+                let alpha = if rng.uniform() < 0.5 { 0.0 } else { rng.uniform_in(0.01, 1.0) };
+                t.update(s, a, r, alpha);
+            }
+            for s in 0..2 {
+                for a in 0..35 {
+                    let q = t.q(s, a);
+                    crate::prop_assert!(
+                        (lo..=hi).contains(&q) || q == 0.0,
+                        "Q out of reward hull: {q}"
+                    );
+                }
+            }
+            let _ = g::size(rng, 1, 2);
+            Ok(())
+        });
+    }
+}

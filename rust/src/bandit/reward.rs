@@ -1,0 +1,201 @@
+//! The multi-objective reward (eq. 21):
+//!
+//!   R(s_d, a) = w₂ f_precision + w₁ f_accuracy − w₃ f_penalty
+//!
+//! * f_precision (eq. 22): rewards low-precision steps, discounted by the
+//!   system's conditioning — Σ_p t_FP64 / (t_p (1 + log10 max(κ, 1))).
+//! * f_accuracy (eq. 24): −C₁ (min(log10 max(ferr, ε), θ) +
+//!   min(log10 max(nbe, ε), θ)) — positive for small errors, truncated at
+//!   θ so catastrophic errors don't dominate the scale.
+//! * f_penalty (eq. 25): log₂ max(T_iter, 1) with T_iter the total inner
+//!   GMRES iterations (§5.4 ablates this term).
+//!
+//! Solver failure (LU breakdown, non-finite iterates) maps to a flat
+//! `fail_reward` — the environment's "this configuration is unusable"
+//! signal.
+
+use crate::bandit::action::Action;
+use crate::chop::Prec;
+use crate::util::config::Config;
+
+/// Everything the reward needs from one solve.
+#[derive(Clone, Copy, Debug)]
+pub struct RewardInputs {
+    pub ferr: f64,
+    pub nbe: f64,
+    /// total inner GMRES iterations (T_iter of eq. 25)
+    pub gmres_iters: usize,
+    pub kappa: f64,
+    pub failed: bool,
+}
+
+/// f_precision (eq. 22).
+pub fn f_precision(action: &Action, kappa: f64) -> f64 {
+    let t64 = Prec::Fp64.t() as f64;
+    let discount = 1.0 + kappa.max(1.0).log10();
+    action
+        .tuple()
+        .iter()
+        .map(|p| t64 / (p.t() as f64 * discount))
+        .sum()
+}
+
+/// f_accuracy (eq. 24).
+pub fn f_accuracy(ferr: f64, nbe: f64, c1: f64, theta: f64, eps: f64) -> f64 {
+    let term = |e: f64| (e.max(eps).log10()).min(theta);
+    -c1 * (term(ferr) + term(nbe))
+}
+
+/// f_penalty (eq. 25).
+pub fn f_penalty(gmres_iters: usize) -> f64 {
+    (gmres_iters.max(1) as f64).log2()
+}
+
+/// Full reward (eq. 21) under the configured weights.
+pub fn reward(cfg: &Config, action: &Action, inp: &RewardInputs) -> f64 {
+    if inp.failed || !inp.ferr.is_finite() || !inp.nbe.is_finite() {
+        return cfg.fail_reward;
+    }
+    let w = cfg.weights;
+    let mut r = w.w2 * f_precision(action, inp.kappa)
+        + w.w1 * f_accuracy(inp.ferr, inp.nbe, cfg.c1, cfg.theta, cfg.acc_eps);
+    if cfg.penalty_enabled {
+        r -= w.w3 * f_penalty(inp.gmres_iters);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::action::ActionSpace;
+    use crate::util::config::Weights;
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    fn inputs(ferr: f64, nbe: f64, iters: usize, kappa: f64) -> RewardInputs {
+        RewardInputs { ferr, nbe, gmres_iters: iters, kappa, failed: false }
+    }
+
+    #[test]
+    fn f_precision_prefers_low_precision() {
+        let all64 = Action::FP64;
+        let all16 = Action {
+            u_f: Prec::Bf16,
+            u: Prec::Bf16,
+            u_g: Prec::Bf16,
+            u_r: Prec::Bf16,
+        };
+        assert!(f_precision(&all16, 10.0) > f_precision(&all64, 10.0));
+        // all-FP64 at kappa=1: 4 * 53/53 / 1 = 4
+        assert!((f_precision(&all64, 1.0) - 4.0).abs() < 1e-12);
+        // all-bf16 at kappa=1: 4 * 53/8
+        assert!((f_precision(&all16, 1.0) - 4.0 * 53.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f_precision_discounted_by_conditioning() {
+        let a = Action {
+            u_f: Prec::Bf16,
+            u: Prec::Fp32,
+            u_g: Prec::Fp64,
+            u_r: Prec::Fp64,
+        };
+        let low = f_precision(&a, 1e2);
+        let high = f_precision(&a, 1e8);
+        // eq. 22: the (1 + log10 kappa) denominator shrinks the incentive
+        // to use low precision on hard systems.
+        assert!((low / high - 9.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f_accuracy_rewards_small_errors_and_truncates() {
+        let good = f_accuracy(1e-14, 1e-17, 1.0, 2.5, 1e-10);
+        let bad = f_accuracy(1e-2, 1e-4, 1.0, 2.5, 1e-10);
+        assert!(good > bad);
+        // ε floor: errors below 1e-10 saturate
+        assert_eq!(
+            f_accuracy(1e-14, 1e-17, 1.0, 2.5, 1e-10),
+            f_accuracy(1e-10, 1e-10, 1.0, 2.5, 1e-10)
+        );
+        // θ ceiling: catastrophic errors are clamped
+        assert_eq!(
+            f_accuracy(1e10, 1e10, 1.0, 2.5, 1e-10),
+            f_accuracy(1e3, 1e3, 1.0, 2.5, 1e-10)
+        );
+        assert_eq!(f_accuracy(1e10, 1e10, 1.0, 2.5, 1e-10), -5.0);
+    }
+
+    #[test]
+    fn f_penalty_log2_of_iterations() {
+        assert_eq!(f_penalty(0), 0.0);
+        assert_eq!(f_penalty(1), 0.0);
+        assert_eq!(f_penalty(8), 3.0);
+        assert!(f_penalty(20) > f_penalty(10));
+    }
+
+    #[test]
+    fn failure_gets_flat_penalty() {
+        let c = cfg();
+        let mut inp = inputs(1e-15, 1e-16, 2, 1e2);
+        inp.failed = true;
+        assert_eq!(reward(&c, &Action::FP64, &inp), c.fail_reward);
+        let nan_inp = inputs(f64::NAN, 1e-16, 2, 1e2);
+        assert_eq!(reward(&c, &Action::FP64, &nan_inp), c.fail_reward);
+    }
+
+    #[test]
+    fn penalty_flag_ablates_term() {
+        let mut c = cfg();
+        let inp = inputs(1e-12, 1e-15, 16, 1e3);
+        let with = reward(&c, &Action::FP64, &inp);
+        c.penalty_enabled = false;
+        let without = reward(&c, &Action::FP64, &inp);
+        // gap = w3 * log2(16) = 0.25 * 4
+        assert!((without - with - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w2_increase_shifts_optimum_toward_low_precision() {
+        // The W1 vs W2 story of §5.2 at reward level: for a
+        // well-conditioned system where low precision costs a bit of
+        // accuracy and a few iterations, W2 must rank the cheap action
+        // higher than W1 does relative to all-FP64.
+        let mut c = cfg();
+        let cheap = Action {
+            u_f: Prec::Bf16,
+            u: Prec::Fp64,
+            u_g: Prec::Fp64,
+            u_r: Prec::Fp64,
+        };
+        // plausible outcomes at kappa=1e2:
+        let cheap_out = inputs(1e-13, 1e-16, 6, 1e2);
+        let fp64_out = inputs(1e-15, 1e-17, 2, 1e2);
+        c.weights = Weights::W1;
+        let d_w1 = reward(&c, &cheap, &cheap_out) - reward(&c, &Action::FP64, &fp64_out);
+        c.weights = Weights::W2;
+        let d_w2 = reward(&c, &cheap, &cheap_out) - reward(&c, &Action::FP64, &fp64_out);
+        assert!(d_w2 > d_w1);
+        assert!(d_w2 > 0.0, "W2 should favor the cheap action: {d_w2}");
+    }
+
+    #[test]
+    fn property_reward_monotone_in_each_error() {
+        use crate::util::proptest::{check, gen};
+        let c = cfg();
+        check("reward_monotone", 13, 300, |rng| {
+            let a = ActionSpace::reduced().actions[rng.below(35)];
+            let kappa = 10f64.powf(rng.uniform_in(0.0, 10.0));
+            let e1 = 10f64.powf(rng.uniform_in(-16.0, 1.0));
+            let e2 = e1 * 10f64.powf(rng.uniform_in(0.1, 3.0));
+            let nbe = 10f64.powf(rng.uniform_in(-17.0, -5.0));
+            let it = 1 + rng.below(50);
+            let r1 = reward(&c, &a, &inputs(e1, nbe, it, kappa));
+            let r2 = reward(&c, &a, &inputs(e2, nbe, it, kappa));
+            crate::prop_assert!(r1 >= r2, "larger ferr must not pay more: {r1} < {r2}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,438 @@
+//! Training loop (Alg. 3) and the trained-policy artifact.
+//!
+//! The environment is deterministic per (system, action) — the solver has
+//! no stochastic component — so solve outcomes are memoized. Unique work
+//! is bounded by N_train × |𝒜_reduced| (≤ 3500 at paper scale) instead of
+//! T × N_train (10⁴); everything else is O(1) lookups. This is the key
+//! L3 optimization that makes paper-scale training tractable on one core
+//! (EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::bandit::action::ActionSpace;
+use crate::bandit::policy::{epsilon_at, select_action};
+use crate::bandit::qtable::QTable;
+use crate::bandit::reward::{reward, RewardInputs};
+use crate::features::Discretizer;
+use crate::gen::Problem;
+use crate::solver::ir::gmres_ir;
+use crate::solver::SolverBackend;
+use crate::util::config::Config;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// Per-episode training telemetry (appendix Figures 5–12: total reward
+/// and mean |RPE| per episode).
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeTrace {
+    pub episode: Vec<f64>,
+    pub mean_reward: Vec<f64>,
+    pub mean_abs_rpe: Vec<f64>,
+    pub epsilon: Vec<f64>,
+    pub explored_frac: Vec<f64>,
+}
+
+/// Outcome signature kept in the solve cache (x itself is not needed for
+/// training — only the reward inputs).
+#[derive(Clone, Copy, Debug)]
+pub struct CachedOutcome {
+    pub ferr: f64,
+    pub nbe: f64,
+    pub outer_iters: usize,
+    pub gmres_iters: usize,
+    pub failed: bool,
+}
+
+/// Memoized solve outcomes keyed by (problem index, action index).
+///
+/// Rewards depend on the weight setting but *outcomes* do not, so one
+/// cache serves both W1 and W2 training runs at the same τ — the
+/// coordinator exploits this to halve the dominant cost of a table run.
+#[derive(Default)]
+pub struct SolveCache {
+    map: HashMap<(usize, usize), CachedOutcome>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SolveCache {
+    pub fn new() -> SolveCache {
+        SolveCache::default()
+    }
+
+    pub fn unique_solves(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Get or compute the outcome of solving `problems[pi]` with `action`.
+    pub fn outcome(
+        &mut self,
+        backend: &mut dyn SolverBackend,
+        problems: &[Problem],
+        pi: usize,
+        action: &crate::bandit::action::Action,
+        ai: usize,
+        cfg: &Config,
+    ) -> Result<CachedOutcome> {
+        if let Some(o) = self.map.get(&(pi, ai)) {
+            self.hits += 1;
+            return Ok(*o);
+        }
+        self.misses += 1;
+        let out = gmres_ir(backend, &problems[pi], action, cfg)?;
+        let c = CachedOutcome {
+            ferr: out.ferr,
+            nbe: out.nbe,
+            outer_iters: out.outer_iters,
+            gmres_iters: out.gmres_iters,
+            failed: out.failed,
+        };
+        self.map.insert((pi, ai), c);
+        Ok(c)
+    }
+
+    /// Exhaustive per-problem precompute (§Perf): with the reduced action
+    /// space (k_top = 9), ε-greedy training ends up visiting nearly every
+    /// (problem, action) pair anyway, so computing them problem-by-problem
+    /// costs the same number of solves while letting every action with the
+    /// same u_f share one LU factorization (9 actions / 4 factorizations)
+    /// and the backend reuse its chopped-A cache across actions.
+    pub fn precompute(
+        &mut self,
+        backend: &mut dyn SolverBackend,
+        problems: &[Problem],
+        space: &ActionSpace,
+        cfg: &Config,
+    ) -> Result<()> {
+        use crate::chop::Prec;
+        use crate::solver::ir::gmres_ir_prefactored;
+        for (pi, p) in problems.iter().enumerate() {
+            if (0..space.len()).all(|ai| self.map.contains_key(&(pi, ai))) {
+                continue;
+            }
+            backend.reset();
+            // Factor once per u_f actually used by the space.
+            let mut factors: [Option<Option<crate::solver::LuHandle>>; 4] =
+                [None, None, None, None];
+            for (ai, action) in space.actions.iter().enumerate() {
+                if self.map.contains_key(&(pi, ai)) {
+                    continue;
+                }
+                self.misses += 1;
+                let fi = action.u_f as usize;
+                if factors[fi].is_none() {
+                    factors[fi] = Some(backend.lu_factor(&p.a, Prec::from_index(fi)).ok());
+                }
+                let out = match factors[fi].as_ref().unwrap() {
+                    Some(f) => gmres_ir_prefactored(backend, p, action, cfg, Some(f))?,
+                    None => {
+                        // factorization breakdown: same failure outcome
+                        // gmres_ir would produce
+                        crate::solver::ir::SolveOutcome {
+                            x: vec![f64::NAN; p.n],
+                            ferr: f64::INFINITY,
+                            nbe: f64::INFINITY,
+                            eps_max: f64::INFINITY,
+                            outer_iters: 0,
+                            gmres_iters: 0,
+                            stop: crate::solver::ir::StopReason::Failure,
+                            failed: true,
+                        }
+                    }
+                };
+                self.map.insert(
+                    (pi, ai),
+                    CachedOutcome {
+                        ferr: out.ferr,
+                        nbe: out.nbe,
+                        outer_iters: out.outer_iters,
+                        gmres_iters: out.gmres_iters,
+                        failed: out.failed,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The trained artifact: Q-table + the discretizer it was fitted with.
+#[derive(Clone, Debug)]
+pub struct TrainedPolicy {
+    pub qtable: QTable,
+    pub discretizer: Discretizer,
+}
+
+impl TrainedPolicy {
+    /// Greedy inference (Alg. 1 line 18 / Alg. 3 line 23), restricted to
+    /// actions the agent actually tried in this state; unvisited states
+    /// fall back to the safe all-FP64 configuration.
+    pub fn select(&self, p: &Problem) -> crate::bandit::action::Action {
+        let s = self.discretizer.state_of(p);
+        self.qtable.best_action_visited(s)
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("qtable", self.qtable.to_json()),
+            ("discretizer", self.discretizer.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TrainedPolicy> {
+        Ok(TrainedPolicy {
+            qtable: QTable::from_json(v.get("qtable")?)?,
+            discretizer: Discretizer::from_json(v.get("discretizer")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<TrainedPolicy> {
+        let text = std::fs::read_to_string(path)?;
+        TrainedPolicy::from_json(&json::parse(&text)?)
+    }
+}
+
+/// Alg.-3 trainer. Borrows a [`SolveCache`] so multiple trainings (e.g.
+/// W1 and W2 at the same τ) share solve outcomes.
+pub struct Trainer<'a> {
+    pub cfg: &'a Config,
+    pub space: ActionSpace,
+    pub cache: &'a mut SolveCache,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: &'a Config, cache: &'a mut SolveCache) -> Trainer<'a> {
+        Trainer {
+            cfg,
+            space: ActionSpace::reduced_top_k(cfg.k_top),
+            cache,
+        }
+    }
+
+    /// Train on `problems` for `cfg.episodes` episodes (Alg. 3 lines
+    /// 5–22). Returns the policy and the per-episode trace.
+    pub fn train(
+        &mut self,
+        backend: &mut dyn SolverBackend,
+        problems: &[Problem],
+        quiet: bool,
+    ) -> Result<(TrainedPolicy, EpisodeTrace)> {
+        let cfg = self.cfg;
+        let disc = Discretizer::fit(
+            problems,
+            cfg.bins_kappa,
+            cfg.bins_norm,
+            cfg.delta_c,
+            cfg.delta_n,
+        );
+        let mut q = QTable::new(disc.n_states(), self.space.clone());
+        let mut rng = Rng::new(cfg.seed ^ 0xE715_0DE5);
+        let mut trace = EpisodeTrace::default();
+
+        // §Perf: exhaustive per-problem precompute with LU sharing when
+        // the action space is small enough that training would visit
+        // (almost) everything anyway.
+        if self.space.len() <= 12 {
+            let space = self.space.clone();
+            self.cache.precompute(backend, problems, &space, cfg)?;
+        }
+
+        // Precompute states (features are solve-independent).
+        let states: Vec<usize> = problems.iter().map(|p| disc.state_of(p)).collect();
+
+        for t in 0..cfg.episodes {
+            let eps = epsilon_at(t, cfg.episodes, cfg.eps_min);
+            let mut sum_r = 0.0;
+            let mut sum_rpe = 0.0;
+            let mut explored_n = 0usize;
+            for (pi, p) in problems.iter().enumerate() {
+                let s = states[pi];
+                let (ai, explored) = select_action(&q, s, eps, &mut rng);
+                explored_n += explored as usize;
+                let action = self.space.actions[ai];
+                let o = self
+                    .cache
+                    .outcome(backend, problems, pi, &action, ai, cfg)?;
+                let r = reward(
+                    cfg,
+                    &self.space.actions[ai],
+                    &RewardInputs {
+                        ferr: o.ferr,
+                        nbe: o.nbe,
+                        gmres_iters: o.gmres_iters,
+                        kappa: p.kappa_est,
+                        failed: o.failed,
+                    },
+                );
+                let rpe = q.update(s, ai, r, cfg.alpha);
+                sum_r += r;
+                sum_rpe += rpe.abs();
+            }
+            let n = problems.len() as f64;
+            trace.episode.push(t as f64);
+            trace.mean_reward.push(sum_r / n);
+            trace.mean_abs_rpe.push(sum_rpe / n);
+            trace.epsilon.push(eps);
+            trace.explored_frac.push(explored_n as f64 / n);
+            if !quiet && (t + 1) % 10 == 0 {
+                eprintln!(
+                    "  episode {:>3}/{}: eps={:.2} mean_reward={:+.3} mean|RPE|={:.3} cache {}/{}",
+                    t + 1,
+                    cfg.episodes,
+                    eps,
+                    sum_r / n,
+                    sum_rpe / n,
+                    self.cache.hits,
+                    self.cache.hits + self.cache.misses
+                );
+            }
+        }
+        Ok((TrainedPolicy { qtable: q, discretizer: disc }, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend_native::NativeBackend;
+    use crate::chop::Prec;
+    use crate::gen::dense_dataset;
+
+    fn quick_cfg() -> Config {
+        let mut c = Config::tiny();
+        c.size_min = 24;
+        c.size_max = 48;
+        c.episodes = 30;
+        c.n_train = 10;
+        c
+    }
+
+    #[test]
+    fn training_learns_condition_dependent_policy() {
+        let mut cfg = quick_cfg();
+        cfg.weights = crate::util::config::Weights::W2;
+        let problems = dense_dataset(&cfg, 12, 100);
+        let mut backend = NativeBackend::new();
+        let mut cache = SolveCache::new();
+        let mut trainer = Trainer::new(&cfg, &mut cache);
+        let (policy, trace) = trainer.train(&mut backend, &problems, true).unwrap();
+        assert_eq!(trace.mean_reward.len(), cfg.episodes);
+        // Every training state visited at least once per episode count.
+        let visited: u64 = (0..policy.qtable.n_states)
+            .map(|s| policy.qtable.total_visits(s))
+            .sum();
+        assert_eq!(visited as usize, cfg.episodes * problems.len());
+        // ε decays: late episodes explore less than early ones.
+        let early: f64 = trace.explored_frac[..5].iter().sum();
+        let late: f64 = trace.explored_frac[cfg.episodes - 5..].iter().sum();
+        assert!(late <= early);
+        // Policy prefers cheaper-than-FP64 factorization for the easiest
+        // systems under W2 (the paper's central qualitative claim).
+        let easiest = problems
+            .iter()
+            .min_by(|a, b| a.kappa_est.partial_cmp(&b.kappa_est).unwrap())
+            .unwrap();
+        let act = policy.select(easiest);
+        assert!(act.u_f < Prec::Fp64, "easy system got {act}");
+    }
+
+    #[test]
+    fn cache_bounds_unique_solves() {
+        let cfg = quick_cfg();
+        let problems = dense_dataset(&cfg, 6, 200);
+        let mut backend = NativeBackend::new();
+        let mut cache = SolveCache::new();
+        let mut trainer = Trainer::new(&cfg, &mut cache);
+        trainer.train(&mut backend, &problems, true).unwrap();
+        let space_len = trainer.space.len() as u64;
+        let unique_max = problems.len() as u64 * space_len;
+        // precompute sweeps every (problem, action) pair exactly once ...
+        assert_eq!(cache.misses, unique_max);
+        assert_eq!(cache.unique_solves() as u64, cache.misses);
+        // ... so every training draw is a cache hit.
+        assert_eq!(cache.hits, (cfg.episodes * problems.len()) as u64);
+    }
+
+    #[test]
+    fn cache_shared_across_weight_settings_skips_resolves() {
+        let mut cfg = quick_cfg();
+        let problems = dense_dataset(&cfg, 5, 250);
+        let mut cache = SolveCache::new();
+        Trainer::new(&cfg, &mut cache)
+            .train(&mut NativeBackend::new(), &problems, true)
+            .unwrap();
+        let misses_after_w1 = cache.misses;
+        cfg.weights = crate::util::config::Weights::W2;
+        Trainer::new(&cfg, &mut cache)
+            .train(&mut NativeBackend::new(), &problems, true)
+            .unwrap();
+        // W2 re-training mostly reuses W1's solve outcomes.
+        assert!(
+            cache.misses - misses_after_w1 < misses_after_w1,
+            "W2 resolved too much: {} vs {}",
+            cache.misses - misses_after_w1,
+            misses_after_w1
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg();
+        let problems = dense_dataset(&cfg, 5, 300);
+        let mut c1 = SolveCache::new();
+        let mut c2 = SolveCache::new();
+        let mut t1 = Trainer::new(&cfg, &mut c1);
+        let (p1, tr1) = t1.train(&mut NativeBackend::new(), &problems, true).unwrap();
+        let mut t2 = Trainer::new(&cfg, &mut c2);
+        let (p2, tr2) = t2.train(&mut NativeBackend::new(), &problems, true).unwrap();
+        assert_eq!(tr1.mean_reward, tr2.mean_reward);
+        for s in 0..p1.qtable.n_states {
+            assert_eq!(p1.qtable.argmax(s), p2.qtable.argmax(s));
+        }
+    }
+
+    #[test]
+    fn policy_roundtrips_through_disk() {
+        let cfg = quick_cfg();
+        let problems = dense_dataset(&cfg, 4, 400);
+        let mut cache = SolveCache::new();
+        let mut trainer = Trainer::new(&cfg, &mut cache);
+        let (policy, _) = trainer
+            .train(&mut NativeBackend::new(), &problems, true)
+            .unwrap();
+        let path = std::env::temp_dir().join("pa_policy_test.json");
+        policy.save(path.to_str().unwrap()).unwrap();
+        let back = TrainedPolicy::load(path.to_str().unwrap()).unwrap();
+        for p in &problems {
+            assert_eq!(policy.select(p), back.select(p));
+        }
+    }
+
+    #[test]
+    fn rpe_decreases_as_learning_converges() {
+        let mut cfg = quick_cfg();
+        cfg.episodes = 60;
+        let problems = dense_dataset(&cfg, 8, 500);
+        let mut cache = SolveCache::new();
+        let mut trainer = Trainer::new(&cfg, &mut cache);
+        let (_, trace) = trainer
+            .train(&mut NativeBackend::new(), &problems, true)
+            .unwrap();
+        let early: f64 = trace.mean_abs_rpe[..10].iter().sum::<f64>() / 10.0;
+        let late: f64 = trace.mean_abs_rpe[50..].iter().sum::<f64>() / 10.0;
+        assert!(
+            late < early,
+            "mean|RPE| should shrink: early {early:.3} late {late:.3}"
+        );
+    }
+}

@@ -1,0 +1,362 @@
+//! Floating-point format emulation ("chop") — the Rust mirror of the
+//! Layer-1 Pallas kernel (`python/compile/kernels/chop.py`).
+//!
+//! Implements round-to-nearest-even quantization of f64 values onto the
+//! grid of a narrower format (t significand bits, exponent range
+//! [emin, emax]), exactly the semantics the paper simulates with Pychop.
+//! The two implementations are cross-validated bit-for-bit via the shared
+//! golden vectors in `testdata/chop_golden.json` and via the AOT
+//! `chop_<fmt>` artifacts in the runtime integration tests.
+//!
+//! All seven formats of paper Table 1 are provided (plus the FP8 formats
+//! the paper's introduction discusses). The experiment set 𝒰 of §5.1 is
+//! `{BF16, TF32, FP32, FP64}` — see [`Prec`].
+
+/// A floating-point format (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Format {
+    pub name: &'static str,
+    /// significand bits including the implicit leading bit
+    pub t: i32,
+    /// exponent of the smallest positive normalized number
+    pub emin: i32,
+    /// exponent of the largest finite number
+    pub emax: i32,
+    /// largest finite value
+    pub xmax: f64,
+}
+
+
+// Precomputed xmax values (checked against the formula in tests).
+pub const BF16: Format = Format { name: "bf16", t: 8, emin: -126, emax: 127, xmax: 3.3895313892515355e38 };
+pub const FP16: Format = Format { name: "fp16", t: 11, emin: -14, emax: 15, xmax: 65504.0 };
+pub const TF32: Format = Format { name: "tf32", t: 11, emin: -126, emax: 127, xmax: 3.4011621342146535e38 };
+pub const FP32: Format = Format { name: "fp32", t: 24, emin: -126, emax: 127, xmax: 3.4028234663852886e38 };
+pub const FP64: Format = Format { name: "fp64", t: 53, emin: -1022, emax: 1023, xmax: f64::MAX };
+pub const E4M3: Format = Format { name: "e4m3", t: 4, emin: -6, emax: 8, xmax: 448.0 };
+pub const E5M2: Format = Format { name: "e5m2", t: 3, emin: -14, emax: 15, xmax: 57344.0 };
+
+/// All formats of Table 1 (+FP8), keyed by name.
+pub const ALL_FORMATS: [Format; 7] = [BF16, FP16, TF32, FP32, FP64, E4M3, E5M2];
+
+pub fn format_by_name(name: &str) -> Option<Format> {
+    ALL_FORMATS.iter().copied().find(|f| f.name == name)
+}
+
+/// The experiment precision set 𝒰 = {BF16, TF32, FP32, FP64} (§5.1),
+/// ordered by increasing significand bits — the order relation "≤" of the
+/// action-space reduction eq. (11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Prec {
+    Bf16 = 0,
+    Tf32 = 1,
+    Fp32 = 2,
+    Fp64 = 3,
+}
+
+impl Prec {
+    pub const ALL: [Prec; 4] = [Prec::Bf16, Prec::Tf32, Prec::Fp32, Prec::Fp64];
+
+    pub fn format(self) -> &'static Format {
+        match self {
+            Prec::Bf16 => &BF16,
+            Prec::Tf32 => &TF32,
+            Prec::Fp32 => &FP32,
+            Prec::Fp64 => &FP64,
+        }
+    }
+
+    /// Significand bits t (used by the reward's cost model, eq. 22).
+    pub fn t(self) -> i32 {
+        self.format().t
+    }
+
+    /// Unit roundoff u = 2^-t (paper Table 1 column u).
+    pub fn unit_roundoff(self) -> f64 {
+        (-self.t() as f64).exp2()
+    }
+
+    pub fn name(self) -> &'static str {
+        self.format().name
+    }
+
+    pub fn from_index(i: usize) -> Prec {
+        Prec::ALL[i]
+    }
+
+    pub fn by_name(name: &str) -> Option<Prec> {
+        Prec::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+impl std::fmt::Display for Prec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name().to_uppercase())
+    }
+}
+
+/// Round `x` to `fmt` with round-to-nearest-even. Bit-identical to the
+/// Pallas kernel (`chop.chop_bits`): normals round the significand to t
+/// bits; values below 2^emin land on the subnormal grid; post-rounding
+/// overflow gives ±inf; zero/inf/NaN pass through (signed zero kept).
+///
+/// Perf note (EXPERIMENTS.md §Perf): the hot path handles normal inputs
+/// at/above the target's 2^emin with a branch-light sequence that
+/// replaces the division by q with a multiplication by the exactly
+/// representable q⁻¹ (both are powers of two, so both operations are
+/// exact); zeros/specials/subnormal-landing inputs take the cold path.
+#[inline]
+pub fn chop(x: f64, fmt: &Format) -> f64 {
+    if fmt.t == 53 {
+        return x; // fp64: the carrier format, identity
+    }
+    let bits = x.to_bits();
+    let expf = ((bits >> 52) & 0x7FF) as i32;
+    // Cold path when: zero/subnormal input (expf == 0), inf/NaN
+    // (expf == 0x7FF), or exponent below the target's normal range.
+    // (A folded single-range compare was tried and measured no better —
+    // EXPERIMENTS.md §Perf iteration log.)
+    if expf == 0 || expf == 0x7FF || expf - 1023 < fmt.emin {
+        return chop_cold(x, fmt, expf);
+    }
+    let shift = (expf - 1023) - (fmt.t - 1); // in [emin - t + 1, 1023]
+    let q = f64::from_bits(((shift + 1023) as u64) << 52);
+    // |shift| <= 1023 - emin + t - 1 < 1022 for every Table-1 format, so
+    // 2^-shift is a normal f64 and the multiply is exact.
+    let q_inv = f64::from_bits(((1023 - shift) as u64) << 52);
+    let y = (x * q_inv).round_ties_even() * q;
+    if y.abs() > fmt.xmax {
+        if y > 0.0 { f64::INFINITY } else { f64::NEG_INFINITY }
+    } else {
+        y
+    }
+}
+
+/// Specials, zeros, and inputs that land on the target's subnormal grid.
+#[cold]
+fn chop_cold(x: f64, fmt: &Format, expf: i32) -> f64 {
+    if x == 0.0 || !x.is_finite() {
+        // NB: Rust compares subnormals exactly (no DAZ), so `x == 0.0`
+        // here is true only for genuine zeros — matching the kernel's
+        // bit-level classification.
+        return x;
+    }
+    let e = if expf == 0 { -1023 } else { expf - 1023 };
+    let e_eff = e.max(fmt.emin);
+    let shift = e_eff - (fmt.t - 1);
+    let q = if shift >= -1022 {
+        f64::from_bits(((shift + 1023) as u64) << 52)
+    } else {
+        // subnormal quantum of the f64 carrier (fp64-adjacent formats)
+        f64::from_bits(1u64 << (shift + 1074).clamp(0, 63) as u32)
+    };
+    let y = (x / q).round_ties_even() * q;
+    if y.abs() > fmt.xmax {
+        if y > 0.0 { f64::INFINITY } else { f64::NEG_INFINITY }
+    } else {
+        y
+    }
+}
+
+/// Chop with a [`Prec`] of the experiment set.
+#[inline]
+pub fn chop_p(x: f64, p: Prec) -> f64 {
+    chop(x, p.format())
+}
+
+/// Chop a slice in place.
+pub fn chop_slice(xs: &mut [f64], p: Prec) {
+    if p == Prec::Fp64 {
+        return;
+    }
+    let f = p.format();
+    for x in xs {
+        *x = chop(*x, f);
+    }
+}
+
+/// y = chop(chop(A)·chop(x)) row dot: operands in `p`, f64 accumulation,
+/// result rounded — the scalar mirror of the Pallas chopped-GEMV tile
+/// (callers pre-chop A and x once; see backend_native).
+#[inline]
+pub fn chopped_dot_prechopped(row: &[f64], x: &[f64], p: Prec) -> f64 {
+    debug_assert_eq!(row.len(), x.len());
+    let mut acc = 0.0;
+    for i in 0..row.len() {
+        acc += row[i] * x[i];
+    }
+    chop_p(acc, p)
+}
+
+/// Strict Pychop-style per-op rounded dot (validation mode; DESIGN.md §5
+/// fidelity note).
+pub fn chopped_dot_perop(row: &[f64], x: &[f64], p: Prec) -> f64 {
+    let f = p.format();
+    let mut acc = 0.0;
+    for i in 0..row.len() {
+        let prod = chop(chop(row[i], f) * chop(x[i], f), f);
+        acc = chop(acc + prod, f);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xmax_constants_match_formula() {
+        for f in [BF16, FP16, TF32, FP32, E5M2] {
+            let want = (2.0 - (1.0 - f.t as f64).exp2()) * (f.emax as f64).exp2();
+            assert_eq!(f.xmax, want, "{}", f.name);
+        }
+        // e4m3 reserves the top code for NaN => 448, below the formula.
+        assert_eq!(E4M3.xmax, 448.0);
+
+    }
+
+    #[test]
+    fn unit_roundoff_matches_table1() {
+        // Table 1's u column (paper rounds to 3 digits).
+        assert!((Prec::Bf16.unit_roundoff() - 3.91e-3).abs() < 1e-5);
+        assert!((Prec::Tf32.unit_roundoff() - 4.88e-4).abs() < 1e-6);
+        assert!((Prec::Fp32.unit_roundoff() - 5.96e-8).abs() < 1e-10);
+        assert!((Prec::Fp64.unit_roundoff() - 1.11e-16).abs() < 1e-18);
+    }
+
+    #[test]
+    fn prec_ordering_by_significand_bits() {
+        assert!(Prec::Bf16 < Prec::Tf32);
+        assert!(Prec::Tf32 < Prec::Fp32);
+        assert!(Prec::Fp32 < Prec::Fp64);
+        assert!(Prec::Bf16.t() < Prec::Tf32.t());
+    }
+
+    #[test]
+    fn basic_values() {
+        // bf16: spacing at 1.0 is 2^-7
+        assert_eq!(chop(1.0, &BF16), 1.0);
+        assert_eq!(chop(1.0 + 2f64.powi(-8), &BF16), 1.0); // tie -> even
+        assert_eq!(chop(1.0 + 2f64.powi(-7), &BF16), 1.0 + 2f64.powi(-7));
+        assert_eq!(chop(1.0 + 3.0 * 2f64.powi(-8), &BF16), 1.0 + 2.0 * 2f64.powi(-7));
+        // fp16 overflow
+        assert_eq!(chop(65504.0, &FP16), 65504.0);
+        assert!(chop(65520.0, &FP16).is_infinite());
+        // fp64 identity incl. subnormals
+        assert_eq!(chop(5e-324, &FP64), 5e-324);
+    }
+
+    #[test]
+    fn specials_pass_through() {
+        for f in &ALL_FORMATS {
+            assert_eq!(chop(0.0, f), 0.0);
+            assert!(chop(-0.0, f).is_sign_negative());
+            assert_eq!(chop(f64::INFINITY, f), f64::INFINITY);
+            assert_eq!(chop(f64::NEG_INFINITY, f), f64::NEG_INFINITY);
+            assert!(chop(f64::NAN, f).is_nan());
+        }
+    }
+
+    #[test]
+    fn subnormal_targets() {
+        // fp16 subnormal grid: quantum 2^(-14-10) = 2^-24
+        let q = 2f64.powi(-24);
+        assert_eq!(chop(1.49 * q, &FP16), q);
+        assert_eq!(chop(0.49 * q, &FP16), 0.0);
+        assert_eq!(chop(0.5 * q, &FP16), 0.0); // tie -> even (0)
+        assert_eq!(chop(1.5 * q, &FP16), 2.0 * q); // tie -> even (2q)
+    }
+
+    #[test]
+    fn golden_vectors_cross_language() {
+        // Shared ground truth with the Python oracle/kernel.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/testdata/chop_golden.json");
+        let text = std::fs::read_to_string(path).expect("golden vectors present");
+        let v = crate::util::json::parse(&text).unwrap();
+        let mut n = 0;
+        for case in v.get("cases").unwrap().as_arr().unwrap() {
+            let x = f64::from_bits(u64::from_le_bytes(
+                hex_to_bytes(case.get("x").unwrap().as_str().unwrap()).try_into().unwrap(),
+            ));
+            for (fname, want_hex) in case.get("out").unwrap().as_obj().unwrap() {
+                let fmt = format_by_name(fname).unwrap();
+                let want = f64::from_bits(u64::from_le_bytes(
+                    hex_to_bytes(want_hex.as_str().unwrap()).try_into().unwrap(),
+                ));
+                let got = chop(x, &fmt);
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "chop({x:e}, {fname}) = {got:e}, want {want:e}"
+                );
+                n += 1;
+            }
+        }
+        assert!(n > 2000, "golden coverage: {n}");
+    }
+
+    fn hex_to_bytes(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn property_idempotent_and_monotone_and_bounded() {
+        use crate::util::proptest::{check, gen};
+        check("chop_invariants", 0xC0FFEE, 2000, |rng| {
+            let x = gen::any_f64(rng);
+            for f in &ALL_FORMATS {
+                let y = chop(x, f);
+                let yy = chop(y, f);
+                crate::prop_assert!(
+                    y.to_bits() == yy.to_bits() || (y.is_nan() && yy.is_nan()),
+                    "idempotence: chop({x:e},{}) = {y:e} then {yy:e}", f.name
+                );
+                if x.is_finite() && y.is_finite() && x != 0.0 && x.abs() >= (f.emin as f64).exp2() {
+                    let rel = ((y - x) / x).abs();
+                    crate::prop_assert!(
+                        rel <= (-f.t as f64).exp2(),
+                        "rel err {rel:e} > u for {} at {x:e}", f.name
+                    );
+                }
+            }
+            // monotone
+            let a = gen::finite_f64(rng);
+            let b = gen::finite_f64(rng);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            for f in &ALL_FORMATS {
+                crate::prop_assert!(
+                    chop(lo, f) <= chop(hi, f),
+                    "monotone violated for {}", f.name
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn perop_dot_stays_near_accum_dot() {
+        use crate::util::proptest::{check, gen};
+        check("dot_modes", 7, 200, |rng| {
+            let n = gen::size(rng, 1, 32);
+            let row: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32] {
+                let mut rc = row.clone();
+                let mut xc = x.clone();
+                chop_slice(&mut rc, p);
+                chop_slice(&mut xc, p);
+                let fast = chopped_dot_prechopped(&rc, &xc, p);
+                let strict = chopped_dot_perop(&row, &x, p);
+                let scale: f64 = row.iter().zip(&x).map(|(a, b)| (a * b).abs()).sum::<f64>() + 1e-30;
+                let gap = (fast - strict).abs();
+                crate::prop_assert!(
+                    gap <= 4.0 * n as f64 * p.unit_roundoff() * scale,
+                    "modes diverge: {gap:e} at n={n} p={p}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

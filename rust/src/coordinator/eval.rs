@@ -1,0 +1,235 @@
+//! Policy evaluation (Alg. 3 inference phase) over a test set, with the
+//! aggregations every table needs: per-condition-range means, success
+//! rates ξ (eq. 30), and the precision-usage frequencies of Figure 2 /
+//! Table 5.
+
+use anyhow::Result;
+
+use crate::bandit::action::Action;
+use crate::bandit::TrainedPolicy;
+use crate::chop::Prec;
+use crate::gen::Problem;
+use crate::solver::ir::{gmres_ir, SolveOutcome};
+use crate::solver::metrics::{mean, success_rate, CondRange};
+use crate::solver::SolverBackend;
+use crate::util::config::Config;
+
+/// One evaluated test system.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub id: usize,
+    pub n: usize,
+    pub kappa: f64,
+    pub action: Action,
+    pub ferr: f64,
+    pub nbe: f64,
+    pub eps_max: f64,
+    pub outer_iters: usize,
+    pub gmres_iters: usize,
+    pub failed: bool,
+}
+
+impl EvalRecord {
+    fn from_outcome(p: &Problem, action: Action, o: &SolveOutcome) -> EvalRecord {
+        EvalRecord {
+            id: p.id,
+            n: p.n,
+            kappa: p.kappa_est,
+            action,
+            ferr: o.ferr,
+            nbe: o.nbe,
+            eps_max: o.eps_max,
+            outer_iters: o.outer_iters,
+            gmres_iters: o.gmres_iters,
+            failed: o.failed,
+        }
+    }
+}
+
+/// Evaluate a trained policy (or the FP64 baseline when `policy` is None)
+/// over a test set.
+pub fn evaluate(
+    backend: &mut dyn SolverBackend,
+    problems: &[Problem],
+    policy: Option<&TrainedPolicy>,
+    cfg: &Config,
+) -> Result<Vec<EvalRecord>> {
+    let mut out = Vec::with_capacity(problems.len());
+    for p in problems {
+        let action = match policy {
+            Some(pol) => pol.select(p),
+            None => Action::FP64,
+        };
+        let o = gmres_ir(backend, p, &action, cfg)?;
+        out.push(EvalRecord::from_outcome(p, action, &o));
+    }
+    Ok(out)
+}
+
+/// Row of Table 2 / 4 / 6: aggregated metrics over one condition range.
+#[derive(Clone, Debug)]
+pub struct EvalSummary {
+    pub range: Option<CondRange>,
+    pub count: usize,
+    /// ξ success rate (eq. 30); NaN for baseline rows (paper prints "–")
+    pub xi: f64,
+    pub avg_ferr: f64,
+    pub avg_nbe: f64,
+    pub avg_outer: f64,
+    pub avg_gmres: f64,
+}
+
+/// Aggregate records over a condition range (or all, when `range` None).
+pub fn summarize(records: &[EvalRecord], range: Option<CondRange>, tau_base: f64, with_xi: bool) -> EvalSummary {
+    let sel: Vec<&EvalRecord> = records
+        .iter()
+        .filter(|r| range.map(|g| CondRange::of(r.kappa) == g).unwrap_or(true))
+        .collect();
+    let fin: Vec<&&EvalRecord> = sel.iter().filter(|r| !r.failed).collect();
+    let xi = if with_xi {
+        let eps: Vec<f64> = sel.iter().map(|r| r.eps_max).collect();
+        let kap: Vec<f64> = sel.iter().map(|r| r.kappa).collect();
+        success_rate(&eps, &kap, tau_base)
+    } else {
+        f64::NAN
+    };
+    EvalSummary {
+        range,
+        count: sel.len(),
+        xi,
+        avg_ferr: mean(&fin.iter().map(|r| r.ferr).collect::<Vec<_>>()),
+        avg_nbe: mean(&fin.iter().map(|r| r.nbe).collect::<Vec<_>>()),
+        avg_outer: mean(&sel.iter().map(|r| r.outer_iters as f64).collect::<Vec<_>>()),
+        avg_gmres: mean(&sel.iter().map(|r| r.gmres_iters as f64).collect::<Vec<_>>()),
+    }
+}
+
+/// Precision-usage frequencies: average number of the 4 steps assigned to
+/// each format per solve (rows sum to 4 — Table 5), optionally restricted
+/// to a condition range (Figure 2's bars).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrecisionUsage {
+    pub counts: [f64; 4], // indexed by Prec as usize
+}
+
+impl PrecisionUsage {
+    pub fn of(records: &[EvalRecord], range: Option<CondRange>) -> PrecisionUsage {
+        let mut counts = [0.0f64; 4];
+        let mut n = 0usize;
+        for r in records {
+            if range.map(|g| CondRange::of(r.kappa) == g).unwrap_or(true) {
+                for p in r.action.tuple() {
+                    counts[p as usize] += 1.0;
+                }
+                n += 1;
+            }
+        }
+        if n > 0 {
+            for c in counts.iter_mut() {
+                *c /= n as f64;
+            }
+        }
+        PrecisionUsage { counts }
+    }
+
+    pub fn get(&self, p: Prec) -> f64 {
+        self.counts[p as usize]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend_native::NativeBackend;
+    use crate::bandit::{SolveCache, Trainer};
+    use crate::gen::dense_dataset;
+
+    fn cfg() -> Config {
+        let mut c = Config::tiny();
+        c.size_min = 24;
+        c.size_max = 40;
+        c.episodes = 15;
+        c
+    }
+
+    #[test]
+    fn baseline_eval_produces_records() {
+        let c = cfg();
+        let problems = dense_dataset(&c, 6, 900);
+        let mut be = NativeBackend::new();
+        let recs = evaluate(&mut be, &problems, None, &c).unwrap();
+        assert_eq!(recs.len(), 6);
+        for r in &recs {
+            assert_eq!(r.action, Action::FP64);
+            assert!(!r.failed);
+            assert!(r.ferr < 1e-4, "ferr {}", r.ferr);
+        }
+        let s = summarize(&recs, None, c.tau_base, false);
+        assert_eq!(s.count, 6);
+        assert!(s.xi.is_nan()); // baseline prints "-"
+        assert!(s.avg_outer >= 1.0);
+    }
+
+    #[test]
+    fn trained_policy_eval_and_usage() {
+        let c = cfg();
+        let train = dense_dataset(&c, 8, 901);
+        let test = dense_dataset(&c, 8, 902);
+        let mut cache = SolveCache::new();
+        let (policy, _) = Trainer::new(&c, &mut cache)
+            .train(&mut NativeBackend::new(), &train, true)
+            .unwrap();
+        let mut be = NativeBackend::new();
+        let recs = evaluate(&mut be, &test, Some(&policy), &c).unwrap();
+        let usage = PrecisionUsage::of(&recs, None);
+        assert!((usage.total() - 4.0).abs() < 1e-12, "rows sum to 4");
+        let s = summarize(&recs, None, c.tau_base, true);
+        assert!(s.xi >= 0.0 && s.xi <= 1.0);
+    }
+
+    #[test]
+    fn summarize_by_range_partitions_counts() {
+        let c = cfg();
+        let mut cfg_wide = c.clone();
+        cfg_wide.kappa_log10_min = 1.0;
+        cfg_wide.kappa_log10_max = 8.5;
+        let problems = dense_dataset(&cfg_wide, 10, 903);
+        let mut be = NativeBackend::new();
+        let recs = evaluate(&mut be, &problems, None, &cfg_wide).unwrap();
+        let total: usize = CondRange::ALL
+            .iter()
+            .map(|g| summarize(&recs, Some(*g), c.tau_base, false).count)
+            .sum();
+        assert_eq!(total, recs.len());
+    }
+
+    #[test]
+    fn failed_solves_excluded_from_error_means_but_counted() {
+        let mut recs = vec![
+            EvalRecord {
+                id: 0,
+                n: 10,
+                kappa: 1e2,
+                action: Action::FP64,
+                ferr: 1e-15,
+                nbe: 1e-16,
+                eps_max: 1e-15,
+                outer_iters: 2,
+                gmres_iters: 2,
+                failed: false,
+            };
+            2
+        ];
+        recs[1].failed = true;
+        recs[1].ferr = f64::INFINITY;
+        recs[1].eps_max = f64::INFINITY;
+        let s = summarize(&recs, None, 1e-8, true);
+        assert_eq!(s.count, 2);
+        assert!(s.avg_ferr.is_finite());
+        assert!((s.xi - 0.5).abs() < 1e-12); // failed one misses threshold
+    }
+}

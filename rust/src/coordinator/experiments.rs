@@ -1,0 +1,252 @@
+//! The experiment suites. One *suite* = (dataset kind, τ, penalty flag):
+//! it trains W1 and W2 policies on the shared train set (shared solve
+//! cache — outcomes are weight-independent), evaluates both plus the FP64
+//! baseline on the held-out test set, and returns everything the tables
+//! and figures of that setting draw from:
+//!
+//! * Table 2 / 4 / 6 rows   <- `EvalSummary` per condition range
+//! * Figure 2 / 4 bars      <- `PrecisionUsage` per fine κ interval
+//! * Figure 3 scatter       <- per-sample `EvalRecord`s (RL vs FP64)
+//! * Figures 5–12 curves    <- `EpisodeTrace` per weight setting
+//! * Table 3                <- dataset statistics
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::backend_native::NativeBackend;
+use crate::bandit::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};
+use crate::coordinator::eval::{evaluate, EvalRecord};
+use crate::gen::{dense_dataset, sparse_dataset, Problem};
+use crate::solver::SolverBackend;
+use crate::util::config::{Config, Weights};
+
+/// Everything one suite run produces.
+pub struct SuiteResult {
+    pub cfg_w1: Config,
+    pub cfg_w2: Config,
+    pub train: Vec<Problem>,
+    pub test: Vec<Problem>,
+    pub policy_w1: TrainedPolicy,
+    pub policy_w2: TrainedPolicy,
+    pub trace_w1: EpisodeTrace,
+    pub trace_w2: EpisodeTrace,
+    pub records_w1: Vec<EvalRecord>,
+    pub records_w2: Vec<EvalRecord>,
+    pub records_fp64: Vec<EvalRecord>,
+    pub unique_solves: usize,
+    pub wall_seconds: f64,
+}
+
+/// Dataset statistics for Table 3 (min–max of κ, sparsity, size).
+pub struct DatasetStats {
+    pub kappa_min: f64,
+    pub kappa_max: f64,
+    pub density_min: f64,
+    pub density_max: f64,
+    pub size_min: usize,
+    pub size_max: usize,
+}
+
+pub fn dataset_stats(problems: &[Problem]) -> DatasetStats {
+    let mut s = DatasetStats {
+        kappa_min: f64::INFINITY,
+        kappa_max: 0.0,
+        density_min: f64::INFINITY,
+        density_max: 0.0,
+        size_min: usize::MAX,
+        size_max: 0,
+    };
+    for p in problems {
+        s.kappa_min = s.kappa_min.min(p.kappa_est);
+        s.kappa_max = s.kappa_max.max(p.kappa_est);
+        s.density_min = s.density_min.min(p.density);
+        s.density_max = s.density_max.max(p.density);
+        s.size_min = s.size_min.min(p.n);
+        s.size_max = s.size_max.max(p.n);
+    }
+    s
+}
+
+fn run_suite(
+    cfg: &Config,
+    train: Vec<Problem>,
+    test: Vec<Problem>,
+    make_backend: &dyn Fn() -> Box<dyn SolverBackend>,
+    quiet: bool,
+) -> Result<SuiteResult> {
+    let t0 = Instant::now();
+    let mut cfg_w1 = cfg.clone();
+    cfg_w1.weights = Weights::W1;
+    let mut cfg_w2 = cfg.clone();
+    cfg_w2.weights = Weights::W2;
+
+    let mut cache = SolveCache::new();
+    let mut backend = make_backend();
+
+    if !quiet {
+        eprintln!("[suite] training W1 (w1=1, w2=0.1) ...");
+    }
+    let (policy_w1, trace_w1) =
+        Trainer::new(&cfg_w1, &mut cache).train(backend.as_mut(), &train, quiet)?;
+    if !quiet {
+        eprintln!("[suite] training W2 (w1=w2=1) — reusing solve cache ...");
+    }
+    let (policy_w2, trace_w2) =
+        Trainer::new(&cfg_w2, &mut cache).train(backend.as_mut(), &train, quiet)?;
+
+    if !quiet {
+        eprintln!(
+            "[suite] evaluating on {} held-out systems (unique solves so far: {})",
+            test.len(),
+            cache.unique_solves()
+        );
+    }
+    let records_w1 = evaluate(backend.as_mut(), &test, Some(&policy_w1), &cfg_w1)?;
+    let records_w2 = evaluate(backend.as_mut(), &test, Some(&policy_w2), &cfg_w2)?;
+    let records_fp64 = evaluate(backend.as_mut(), &test, None, cfg)?;
+
+    Ok(SuiteResult {
+        cfg_w1,
+        cfg_w2,
+        train,
+        test,
+        policy_w1,
+        policy_w2,
+        trace_w1,
+        trace_w2,
+        records_w1,
+        records_w2,
+        records_fp64,
+        unique_solves: cache.unique_solves(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+fn native_factory() -> Box<dyn SolverBackend> {
+    Box::new(NativeBackend::new())
+}
+
+/// Dense suite (§5.2): randsvd mode-2 systems. Feeds Table 2 and
+/// Figures 2, 3, 5–8 at the given τ.
+pub fn dense_suite(cfg: &Config, quiet: bool) -> Result<SuiteResult> {
+    let train = dense_dataset(cfg, cfg.n_train, 0);
+    let test = dense_dataset(cfg, cfg.n_test, 1);
+    run_suite(cfg, train, test, &native_factory, quiet)
+}
+
+/// Sparse suite (§5.3): A₀A₀ᵀ + βI systems. Feeds Tables 3–5 and
+/// Figures 9–12.
+pub fn sparse_suite(cfg: &Config, quiet: bool) -> Result<SuiteResult> {
+    let train = sparse_dataset(cfg, cfg.n_train, 0);
+    let test = sparse_dataset(cfg, cfg.n_test, 1);
+    run_suite(cfg, train, test, &native_factory, quiet)
+}
+
+/// Ablation suite (§5.4): dense datasets, reward without f_penalty.
+/// Feeds Table 6 and Figure 4.
+pub fn ablation_suite(cfg: &Config, quiet: bool) -> Result<SuiteResult> {
+    let mut c = cfg.clone();
+    c.penalty_enabled = false;
+    dense_suite(&c, quiet)
+}
+
+/// Suite over an externally supplied backend factory (used by the PJRT
+/// end-to-end example and the runtime integration tests).
+pub fn dense_suite_with_backend(
+    cfg: &Config,
+    make_backend: &dyn Fn() -> Box<dyn SolverBackend>,
+    quiet: bool,
+) -> Result<SuiteResult> {
+    let train = dense_dataset(cfg, cfg.n_train, 0);
+    let test = dense_dataset(cfg, cfg.n_test, 1);
+    run_suite(cfg, train, test, make_backend, quiet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chop::Prec;
+    use crate::coordinator::eval::PrecisionUsage;
+    use crate::solver::metrics::CondRange;
+
+    fn cfg() -> Config {
+        let mut c = Config::tiny();
+        c.n_train = 10;
+        c.n_test = 10;
+        c.size_min = 24;
+        c.size_max = 48;
+        c.episodes = 25;
+        c
+    }
+
+    #[test]
+    fn dense_suite_end_to_end_shapes() {
+        let c = cfg();
+        let r = dense_suite(&c, true).unwrap();
+        assert_eq!(r.records_w1.len(), 10);
+        assert_eq!(r.records_w2.len(), 10);
+        assert_eq!(r.records_fp64.len(), 10);
+        assert_eq!(r.trace_w1.mean_reward.len(), 25);
+        // FP64 baseline always uses 4 fp64 steps.
+        let u = PrecisionUsage::of(&r.records_fp64, None);
+        assert_eq!(u.get(Prec::Fp64), 4.0);
+        // solve cache was shared: unique solves well below 2 x episodes x N
+        assert!(r.unique_solves <= 10 * 35);
+        // W2 never picks a *more* expensive config than... at least it
+        // uses no more fp64 steps on average than W1 (aggressive weights).
+        let uw1 = PrecisionUsage::of(&r.records_w1, None);
+        let uw2 = PrecisionUsage::of(&r.records_w2, None);
+        assert!(uw2.get(Prec::Fp64) <= uw1.get(Prec::Fp64) + 1e-9);
+    }
+
+    #[test]
+    fn ablation_disables_penalty() {
+        let c = cfg();
+        let r = ablation_suite(&c, true).unwrap();
+        assert!(!r.cfg_w1.penalty_enabled);
+        assert!(!r.cfg_w2.penalty_enabled);
+    }
+
+    #[test]
+    fn sparse_suite_structure() {
+        // NB: at this tiny scale (n=40-60, lambda_s=0.01) the sparse
+        // systems are nearly diagonal (≪1 nnz/row in A0), so low-precision
+        // factorization legitimately succeeds and the agent may pick it.
+        // The paper-shape claim (Table 5: ~all-FP64) is asserted on the
+        // paper/medium-scale run recorded in EXPERIMENTS.md, not here.
+        let mut c = cfg();
+        c.size_min = 40;
+        c.size_max = 60;
+        let r = sparse_suite(&c, true).unwrap();
+        let u2 = PrecisionUsage::of(&r.records_w2, None);
+        assert!((u2.total() - 4.0).abs() < 1e-9);
+        // all test systems are severely ill-conditioned (High range)
+        for rec in &r.records_fp64 {
+            assert_eq!(CondRange::of(rec.kappa), CondRange::High);
+            assert!(!rec.failed);
+        }
+        // RL picks may fail on out-of-sample systems at this scale (the
+        // paper's own ξ dips to 89.2% in one cell); what must hold is
+        // coherent reporting: failed => infinite eps_max, and the
+        // majority of solves succeed.
+        let mut failures = 0;
+        for rec in r.records_w1.iter().chain(&r.records_w2) {
+            if rec.failed {
+                failures += 1;
+                assert!(rec.eps_max.is_infinite());
+            }
+        }
+        let total = r.records_w1.len() + r.records_w2.len();
+        assert!(failures * 2 < total, "{failures}/{total} failures");
+    }
+
+    #[test]
+    fn dataset_stats_cover_table3_columns() {
+        let c = cfg();
+        let ps = sparse_dataset(&c, 5, 0);
+        let s = dataset_stats(&ps);
+        assert!(s.kappa_min > 1.0 && s.kappa_max >= s.kappa_min);
+        assert!(s.density_min > 0.0 && s.density_max < 1.0);
+        assert!(s.size_min >= c.size_min && s.size_max <= c.size_max);
+    }
+}

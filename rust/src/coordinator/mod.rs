@@ -1,0 +1,10 @@
+//! Layer-3 experiment orchestration: policy evaluation on held-out
+//! systems, the dense/sparse/ablation experiment suites (one per paper
+//! table/figure), and the `repro` drivers that print paper-shaped output.
+
+pub mod eval;
+pub mod experiments;
+pub mod repro;
+
+pub use eval::{evaluate, EvalRecord, EvalSummary, PrecisionUsage};
+pub use experiments::{dense_suite, sparse_suite, SuiteResult};

@@ -1,0 +1,542 @@
+//! Paper-artifact regenerators: one driver per table/figure, printing the
+//! same rows/series the paper reports (markdown) and writing
+//! machine-readable CSVs under `results/`.
+//!
+//! Experiment index (DESIGN.md §5): E1=Table2, E2=Fig2, E3=Fig3,
+//! E4=Table3, E5=Table4, E6=Table5, E7=Table6, E8=Fig4, E9=Figs5–12,
+//! E10=action-space reduction.
+
+use anyhow::Result;
+
+use crate::bandit::action::ActionSpace;
+use crate::chop::Prec;
+use crate::coordinator::eval::{summarize, EvalRecord, PrecisionUsage};
+use crate::coordinator::experiments::{
+    ablation_suite, dataset_stats, dense_suite, sparse_suite, SuiteResult,
+};
+use crate::solver::metrics::CondRange;
+use crate::util::config::Config;
+use crate::util::tables::{ascii_scatter, fix2, pct, sci2, write_csv, Table};
+
+/// Lazily-run suites shared by the tables of one `repro` invocation.
+pub struct ReproContext {
+    pub cfg: Config,
+    pub out_dir: String,
+    pub quiet: bool,
+    dense: Vec<(f64, SuiteResult)>,
+    sparse: Vec<(f64, SuiteResult)>,
+    ablation: Vec<(f64, SuiteResult)>,
+}
+
+const TAUS: [f64; 2] = [1e-6, 1e-8];
+
+impl ReproContext {
+    pub fn new(cfg: Config, out_dir: &str, quiet: bool) -> ReproContext {
+        ReproContext {
+            cfg,
+            out_dir: out_dir.to_string(),
+            quiet,
+            dense: Vec::new(),
+            sparse: Vec::new(),
+            ablation: Vec::new(),
+        }
+    }
+
+    fn suite<'a>(
+        store: &'a mut Vec<(f64, SuiteResult)>,
+        cfg: &Config,
+        tau: f64,
+        quiet: bool,
+        runner: fn(&Config, bool) -> Result<SuiteResult>,
+        label: &str,
+    ) -> Result<&'a SuiteResult> {
+        if let Some(pos) = store.iter().position(|(t, _)| *t == tau) {
+            return Ok(&store[pos].1);
+        }
+        let mut c = cfg.clone();
+        c.tau = tau;
+        if !quiet {
+            eprintln!("[repro] running {label} suite at tau={tau:e} ...");
+        }
+        let r = runner(&c, quiet)?;
+        if !quiet {
+            eprintln!(
+                "[repro] {label} tau={tau:e}: {} unique solves, {:.1}s",
+                r.unique_solves, r.wall_seconds
+            );
+        }
+        store.push((tau, r));
+        Ok(&store.last().unwrap().1)
+    }
+
+    pub fn dense(&mut self, tau: f64) -> Result<&SuiteResult> {
+        Self::suite(&mut self.dense, &self.cfg, tau, self.quiet, dense_suite, "dense")
+    }
+
+    pub fn sparse(&mut self, tau: f64) -> Result<&SuiteResult> {
+        Self::suite(&mut self.sparse, &self.cfg, tau, self.quiet, sparse_suite, "sparse")
+    }
+
+    pub fn ablation(&mut self, tau: f64) -> Result<&SuiteResult> {
+        Self::suite(
+            &mut self.ablation,
+            &self.cfg,
+            tau,
+            self.quiet,
+            ablation_suite,
+            "ablation (no penalty)",
+        )
+    }
+
+    fn csv_path(&self, name: &str) -> String {
+        format!("{}/{}", self.out_dir, name)
+    }
+
+    fn save_table(&self, t: &Table, name: &str) -> Result<()> {
+        let path = self.csv_path(name);
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, t.to_csv())?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // E1 / E5 / E7: the metric tables
+    // ------------------------------------------------------------------
+
+    fn metric_table(
+        &self,
+        title: &str,
+        per_range: bool,
+        suites: &[(f64, &SuiteResult)],
+        tau_base: f64,
+    ) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "tau", "Method", "Condition Range", "xi", "Avg. ferr", "Avg. nbe",
+                "Avg iter.", "Avg. GMRES iter.",
+            ],
+        );
+        let ranges: Vec<Option<CondRange>> = if per_range {
+            CondRange::ALL.iter().map(|r| Some(*r)).collect()
+        } else {
+            vec![None]
+        };
+        for (tau, suite) in suites {
+            let methods: [(&str, &Vec<EvalRecord>, bool); 3] = [
+                ("RL(W1)", &suite.records_w1, true),
+                ("RL(W2)", &suite.records_w2, true),
+                ("FP64 Baseline", &suite.records_fp64, false),
+            ];
+            for (name, records, with_xi) in methods {
+                for range in &ranges {
+                    let s = summarize(records, *range, tau_base, with_xi);
+                    if s.count == 0 {
+                        continue;
+                    }
+                    t.row(vec![
+                        format!("{tau:.0e}"),
+                        name.to_string(),
+                        range.map(|r| r.label().to_string()).unwrap_or_else(|| "All".into()),
+                        if with_xi { pct(s.xi) } else { "-".into() },
+                        sci2(s.avg_ferr),
+                        sci2(s.avg_nbe),
+                        fix2(s.avg_outer),
+                        fix2(s.avg_gmres),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// E1 — Table 2: dense metrics across condition ranges.
+    pub fn table2(&mut self) -> Result<String> {
+        let tau_base = self.cfg.tau_base;
+        for tau in TAUS {
+            self.dense(tau)?;
+        }
+        let suites: Vec<(f64, &SuiteResult)> = self.dense.iter().map(|(t, s)| (*t, s)).collect();
+        let t = self.metric_table(
+            "Table 2: Average Performance Metrics Across Condition Ranges for Dense Systems",
+            true,
+            &suites,
+            tau_base,
+        );
+        self.save_table(&t, "table2.csv")?;
+        Ok(t.render())
+    }
+
+    /// E4 — Table 3: sparse train/test dataset statistics.
+    pub fn table3(&mut self) -> Result<String> {
+        let suite = self.sparse(TAUS[0])?;
+        let tr = dataset_stats(&suite.train);
+        let te = dataset_stats(&suite.test);
+        let mut t = Table::new(
+            "Table 3: Train/Test Metrics Summary (sparse)",
+            &["Metric", "Train (min - max)", "Test (min - max)"],
+        );
+        t.row(vec![
+            "Condition number".into(),
+            format!("{} - {}", sci2(tr.kappa_min), sci2(tr.kappa_max)),
+            format!("{} - {}", sci2(te.kappa_min), sci2(te.kappa_max)),
+        ]);
+        t.row(vec![
+            "Sparsity".into(),
+            format!("{:.2}% - {:.2}%", 100.0 * tr.density_min, 100.0 * tr.density_max),
+            format!("{:.2}% - {:.2}%", 100.0 * te.density_min, 100.0 * te.density_max),
+        ]);
+        t.row(vec![
+            "Matrix size".into(),
+            format!("{} - {}", tr.size_min, tr.size_max),
+            format!("{} - {}", te.size_min, te.size_max),
+        ]);
+        self.save_table(&t, "table3.csv")?;
+        Ok(t.render())
+    }
+
+    /// E5 — Table 4: sparse metrics (aggregate rows, as in the paper).
+    pub fn table4(&mut self) -> Result<String> {
+        let tau_base = self.cfg.tau_base;
+        for tau in TAUS {
+            self.sparse(tau)?;
+        }
+        let suites: Vec<(f64, &SuiteResult)> = self.sparse.iter().map(|(t, s)| (*t, s)).collect();
+        let t = self.metric_table(
+            "Table 4: Average Performance Metrics for Sparse Systems",
+            false,
+            &suites,
+            tau_base,
+        );
+        self.save_table(&t, "table4.csv")?;
+        Ok(t.render())
+    }
+
+    /// E6 — Table 5: average precision usage per solve, sparse (rows sum
+    /// to 4).
+    pub fn table5(&mut self) -> Result<String> {
+        for tau in TAUS {
+            self.sparse(tau)?;
+        }
+        let mut t = Table::new(
+            "Table 5: Average Floating-point Precision Usage Per Solve for Sparse Systems",
+            &["tau", "Weight Setting", "BF16", "TF32", "FP32", "FP64"],
+        );
+        for (tau, suite) in &self.sparse {
+            for (name, recs) in [("RL(W1)", &suite.records_w1), ("RL(W2)", &suite.records_w2)] {
+                let u = PrecisionUsage::of(recs, None);
+                t.row(vec![
+                    format!("{tau:.0e}"),
+                    name.to_string(),
+                    fix2(u.get(Prec::Bf16)),
+                    fix2(u.get(Prec::Tf32)),
+                    fix2(u.get(Prec::Fp32)),
+                    fix2(u.get(Prec::Fp64)),
+                ]);
+            }
+        }
+        self.save_table(&t, "table5.csv")?;
+        Ok(t.render())
+    }
+
+    /// E7 — Table 6: dense metrics with the iteration penalty removed.
+    pub fn table6(&mut self) -> Result<String> {
+        let tau_base = self.cfg.tau_base;
+        for tau in TAUS {
+            self.ablation(tau)?;
+        }
+        let suites: Vec<(f64, &SuiteResult)> =
+            self.ablation.iter().map(|(t, s)| (*t, s)).collect();
+        let t = self.metric_table(
+            "Table 6: Dense Systems, reward WITHOUT f_penalty (ablation, §5.4)",
+            true,
+            &suites,
+            tau_base,
+        );
+        self.save_table(&t, "table6.csv")?;
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // E2 / E8: precision-usage figures
+    // ------------------------------------------------------------------
+
+    fn usage_figure(&self, title: &str, suites: &[(f64, &SuiteResult)]) -> (Table, Vec<Vec<f64>>) {
+        // fine-grained kappa intervals: one decade each, 1e0..1e9
+        let mut t = Table::new(
+            title,
+            &["tau", "Policy", "kappa decade", "n", "BF16", "TF32", "FP32", "FP64"],
+        );
+        let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+        for (tau, suite) in suites {
+            for (name, recs) in [("W1", &suite.records_w1), ("W2", &suite.records_w2)] {
+                for d in 0..9 {
+                    let lo = 10f64.powi(d);
+                    let hi = 10f64.powi(d + 1);
+                    let sel: Vec<EvalRecord> = recs
+                        .iter()
+                        .filter(|r| r.kappa >= lo && r.kappa < hi)
+                        .cloned()
+                        .collect();
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    let u = PrecisionUsage::of(&sel, None);
+                    t.row(vec![
+                        format!("{tau:.0e}"),
+                        name.to_string(),
+                        format!("1e{d}-1e{}", d + 1),
+                        sel.len().to_string(),
+                        fix2(u.get(Prec::Bf16)),
+                        fix2(u.get(Prec::Tf32)),
+                        fix2(u.get(Prec::Fp32)),
+                        fix2(u.get(Prec::Fp64)),
+                    ]);
+                    csv_rows.push(vec![
+                        *tau,
+                        if name == "W1" { 1.0 } else { 2.0 },
+                        d as f64,
+                        sel.len() as f64,
+                        u.get(Prec::Bf16),
+                        u.get(Prec::Tf32),
+                        u.get(Prec::Fp32),
+                        u.get(Prec::Fp64),
+                    ]);
+                }
+            }
+        }
+        (t, csv_rows)
+    }
+
+    /// E2 — Figure 2: precision types selected across κ intervals (dense).
+    pub fn fig2(&mut self) -> Result<String> {
+        for tau in TAUS {
+            self.dense(tau)?;
+        }
+        let suites: Vec<(f64, &SuiteResult)> = self.dense.iter().map(|(t, s)| (*t, s)).collect();
+        let (t, rows) = self.usage_figure(
+            "Figure 2: Average Floating-point Types Selected Across Condition Ranges (dense)",
+            &suites,
+        );
+        self.save_table(&t, "fig2.csv")?;
+        let _ = rows;
+        Ok(t.render())
+    }
+
+    /// E8 — Figure 4: same, for the no-penalty ablation.
+    pub fn fig4(&mut self) -> Result<String> {
+        for tau in TAUS {
+            self.ablation(tau)?;
+        }
+        let suites: Vec<(f64, &SuiteResult)> =
+            self.ablation.iter().map(|(t, s)| (*t, s)).collect();
+        let (t, _) = self.usage_figure(
+            "Figure 4: Precision Types Selected, reward WITHOUT f_penalty (dense)",
+            &suites,
+        );
+        self.save_table(&t, "fig4.csv")?;
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // E3: per-sample scatter (Figure 3)
+    // ------------------------------------------------------------------
+
+    /// E3 — Figure 3: RL(W2) vs FP64 per test sample: ferr and total
+    /// GMRES iterations, grouped by matrix size.
+    pub fn fig3(&mut self) -> Result<String> {
+        let size_mid = (self.cfg.size_min + self.cfg.size_max) / 2;
+        self.dense(TAUS[0])?;
+        let suite = &self.dense.iter().find(|(t, _)| *t == TAUS[0]).unwrap().1;
+        let rl = suite.records_w2.clone();
+        let base = suite.records_fp64.clone();
+        let cols: Vec<Vec<f64>> = vec![
+            rl.iter().map(|r| r.id as f64).collect(),
+            rl.iter().map(|r| r.n as f64).collect(),
+            rl.iter().map(|r| r.kappa).collect(),
+            rl.iter().map(|r| r.ferr).collect(),
+            base.iter().map(|r| r.ferr).collect(),
+            rl.iter().map(|r| r.gmres_iters as f64).collect(),
+            base.iter().map(|r| r.gmres_iters as f64).collect(),
+        ];
+        write_csv(
+            &self.csv_path("fig3.csv"),
+            &["id", "n", "kappa", "ferr_rl_w2", "ferr_fp64", "gmres_rl_w2", "gmres_fp64"],
+            &cols.iter().map(|c| c.as_slice()).collect::<Vec<_>>(),
+        )?;
+        let mut out = String::new();
+        out.push_str(&ascii_scatter(
+            "Figure 3a: ferr, RL(W2) x-axis=FP64 ferr, y-axis=RL ferr",
+            &cols[4],
+            &cols[3],
+            &cols[4],
+            &cols[4],
+            64,
+            16,
+        ));
+        // iteration comparison table by size group
+        let mut t = Table::new(
+            "Figure 3b: iteration counts by size group (RL(W2) vs FP64)",
+            &["size group", "samples", "avg GMRES RL(W2)", "avg GMRES FP64", "avg ferr RL(W2)", "avg ferr FP64"],
+        );
+        let groups: [(&str, Box<dyn Fn(usize) -> bool>); 2] = [
+            ("small", Box::new(move |n: usize| n < size_mid)),
+            ("large", Box::new(move |n: usize| n >= size_mid)),
+        ];
+        for (label, f) in groups {
+            let idx: Vec<usize> = rl
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| f(r.n))
+                .map(|(i, _)| i)
+                .collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let m = |v: &dyn Fn(usize) -> f64| {
+                idx.iter().map(|&i| v(i)).sum::<f64>() / idx.len() as f64
+            };
+            t.row(vec![
+                label.to_string(),
+                idx.len().to_string(),
+                fix2(m(&|i| rl[i].gmres_iters as f64)),
+                fix2(m(&|i| base[i].gmres_iters as f64)),
+                sci2(m(&|i| rl[i].ferr)),
+                sci2(m(&|i| base[i].ferr)),
+            ]);
+        }
+        out.push_str(&t.render());
+        self.save_table(&t, "fig3_groups.csv")?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // E9: training curves (Figures 5–12)
+    // ------------------------------------------------------------------
+
+    /// E9 — Figures 5–12: per-episode reward and RPE for dense/sparse ×
+    /// W1/W2 × τ. Emits one CSV per figure and a convergence summary.
+    pub fn figs5_12(&mut self) -> Result<String> {
+        let mut t = Table::new(
+            "Figures 5-12: training reward / RPE per episode (series in results/fig*.csv)",
+            &["figure", "dataset", "policy", "tau", "first-10 mean reward", "last-10 mean reward", "last-10 mean |RPE|"],
+        );
+        let mut fignum = 5;
+        for kind in ["dense", "sparse"] {
+            for tau in TAUS {
+                // ensure suites exist
+                if kind == "dense" {
+                    self.dense(tau)?;
+                } else {
+                    self.sparse(tau)?;
+                }
+                let store: &Vec<(f64, SuiteResult)> =
+                    if kind == "dense" { &self.dense } else { &self.sparse };
+                let suite = &store.iter().find(|(t0, _)| *t0 == tau).unwrap().1;
+                for (policy, trace) in [("W1", &suite.trace_w1), ("W2", &suite.trace_w2)] {
+                    let name = format!("fig{fignum}_{kind}_{policy}_tau{tau:.0e}.csv");
+                    write_csv(
+                        &self.csv_path(&name),
+                        &["episode", "mean_reward", "mean_abs_rpe", "epsilon", "explored_frac"],
+                        &[
+                            &trace.episode,
+                            &trace.mean_reward,
+                            &trace.mean_abs_rpe,
+                            &trace.epsilon,
+                            &trace.explored_frac,
+                        ],
+                    )?;
+                    let k = trace.mean_reward.len();
+                    let head = &trace.mean_reward[..10.min(k)];
+                    let tail = &trace.mean_reward[k.saturating_sub(10)..];
+                    let tail_rpe = &trace.mean_abs_rpe[k.saturating_sub(10)..];
+                    t.row(vec![
+                        format!("Fig {fignum}"),
+                        kind.to_string(),
+                        policy.to_string(),
+                        format!("{tau:.0e}"),
+                        fix2(head.iter().sum::<f64>() / head.len() as f64),
+                        fix2(tail.iter().sum::<f64>() / tail.len() as f64),
+                        fix2(tail_rpe.iter().sum::<f64>() / tail_rpe.len() as f64),
+                    ]);
+                    fignum += 1;
+                }
+            }
+        }
+        self.save_table(&t, "figs5_12_summary.csv")?;
+        Ok(t.render())
+    }
+
+    /// E10 — the action-space reduction headline (§3.2).
+    pub fn actions(&self) -> String {
+        let full = ActionSpace::full();
+        let reduced = ActionSpace::reduced();
+        let mut t = Table::new(
+            "Action-space reduction (eq. 11-12)",
+            &["space", "cardinality", "note"],
+        );
+        t.row(vec![
+            "full A = A_1^4".into(),
+            full.len().to_string(),
+            "m^k = 4^4".into(),
+        ]);
+        t.row(vec![
+            "reduced (monotone)".into(),
+            reduced.len().to_string(),
+            format!(
+                "C(m+k-1,k) = C(7,4); cut {:.1}%",
+                100.0 * (1.0 - reduced.len() as f64 / full.len() as f64)
+            ),
+        ]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ReproContext {
+        let mut c = Config::tiny();
+        c.n_train = 6;
+        c.n_test = 6;
+        c.size_min = 20;
+        c.size_max = 36;
+        c.episodes = 12;
+        let dir = std::env::temp_dir().join("pa_repro_test");
+        ReproContext::new(c, dir.to_str().unwrap(), true)
+    }
+
+    #[test]
+    fn actions_table_mentions_35() {
+        let t = ctx().actions();
+        assert!(t.contains("256"));
+        assert!(t.contains("35"));
+        assert!(t.contains("86"));
+    }
+
+    #[test]
+    fn table2_and_fig2_render_and_save() {
+        let mut c = ctx();
+        let t2 = c.table2().unwrap();
+        assert!(t2.contains("RL(W1)") && t2.contains("FP64 Baseline"));
+        assert!(t2.contains("1e-6") && t2.contains("1e-8"));
+        let f2 = c.fig2().unwrap();
+        assert!(f2.contains("BF16"));
+        assert!(std::path::Path::new(&c.csv_path("table2.csv")).exists());
+        assert!(std::path::Path::new(&c.csv_path("fig2.csv")).exists());
+        // suites were cached: dense ran exactly twice (two taus)
+        assert_eq!(c.dense.len(), 2);
+    }
+
+    #[test]
+    fn fig3_renders_scatter_and_groups() {
+        let mut c = ctx();
+        let s = c.fig3().unwrap();
+        assert!(s.contains("Figure 3a"));
+        assert!(s.contains("size group"));
+        assert!(std::path::Path::new(&c.csv_path("fig3.csv")).exists());
+    }
+}

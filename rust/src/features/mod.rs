@@ -1,0 +1,229 @@
+//! Context features and discretization (paper §3.2, §4.2, eq. 18–20).
+//!
+//! The context is s = [log10 max(κ(A), δ_c), log10 max(‖A‖∞, δ_n)];
+//! each feature is binned into n₁ (resp. n₂) equal-width bins over the
+//! *training set's* min/max (§5.1), with clipping for out-of-range test
+//! instances. The flat state index is s_d = bin(φ₁)·n₂ + bin(φ₂) (eq. 20).
+
+use anyhow::Result;
+
+use crate::gen::Problem;
+use crate::util::json::{self, Value};
+
+/// Continuous context vector (eq. 18).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Context {
+    pub phi_kappa: f64, // log10 max(kappa, delta_c)
+    pub phi_norm: f64,  // log10 max(norm_inf, delta_n)
+}
+
+pub fn context_of(p: &Problem, delta_c: f64, delta_n: f64) -> Context {
+    Context {
+        phi_kappa: p.kappa_est.max(delta_c).log10(),
+        phi_norm: p.norm_inf.max(delta_n).log10(),
+    }
+}
+
+/// Equal-width binning of one feature (log-scale inputs arrive already
+/// log-transformed), eq. (19): nearest bin with clipping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Binner {
+    pub lo: f64,
+    pub hi: f64,
+    pub n_bins: usize,
+}
+
+impl Binner {
+    pub fn fit(values: impl Iterator<Item = f64>, n_bins: usize) -> Binner {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for v in values {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            lo = 0.0;
+            hi = 1.0;
+        }
+        if lo == hi {
+            hi = lo + 1.0;
+        }
+        Binner { lo, hi, n_bins: n_bins.max(1) }
+    }
+
+    /// Bin index in [0, n_bins), clipped.
+    pub fn bin(&self, x: f64) -> usize {
+        if x.is_nan() {
+            return self.n_bins - 1; // NaN κ means "as hard as it gets"
+        }
+        let t = (x - self.lo) / (self.hi - self.lo) * self.n_bins as f64;
+        (t.floor().max(0.0) as usize).min(self.n_bins - 1)
+    }
+
+    /// Representative point (bin center) — ω(s_d) of Proposition 1.
+    pub fn center(&self, bin: usize) -> f64 {
+        self.lo + (bin as f64 + 0.5) * (self.hi - self.lo) / self.n_bins as f64
+    }
+
+    /// Bin diameter Δ (Proposition 1's discretization-error bound 2LΔ).
+    pub fn diameter(&self) -> f64 {
+        (self.hi - self.lo) / self.n_bins as f64
+    }
+}
+
+/// The full 2-D discretizer of §4.2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Discretizer {
+    pub kappa: Binner,
+    pub norm: Binner,
+    pub delta_c: f64,
+    pub delta_n: f64,
+}
+
+impl Discretizer {
+    /// Fit bins on a training set (eq. 18 features, §5.1: per-feature
+    /// min/max over the training systems).
+    pub fn fit(train: &[Problem], n1: usize, n2: usize, delta_c: f64, delta_n: f64) -> Discretizer {
+        let ctxs: Vec<Context> = train.iter().map(|p| context_of(p, delta_c, delta_n)).collect();
+        Discretizer {
+            kappa: Binner::fit(ctxs.iter().map(|c| c.phi_kappa), n1),
+            norm: Binner::fit(ctxs.iter().map(|c| c.phi_norm), n2),
+            delta_c,
+            delta_n,
+        }
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.kappa.n_bins * self.norm.n_bins
+    }
+
+    /// Flat state index (eq. 20).
+    pub fn state_of(&self, p: &Problem) -> usize {
+        let c = context_of(p, self.delta_c, self.delta_n);
+        self.kappa.bin(c.phi_kappa) * self.norm.n_bins + self.norm.bin(c.phi_norm)
+    }
+
+    pub fn state_of_context(&self, c: Context) -> usize {
+        self.kappa.bin(c.phi_kappa) * self.norm.n_bins + self.norm.bin(c.phi_norm)
+    }
+
+    // ---- persistence (trained policies carry their discretizer) ----
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kappa_lo", json::num(self.kappa.lo)),
+            ("kappa_hi", json::num(self.kappa.hi)),
+            ("kappa_bins", json::num(self.kappa.n_bins as f64)),
+            ("norm_lo", json::num(self.norm.lo)),
+            ("norm_hi", json::num(self.norm.hi)),
+            ("norm_bins", json::num(self.norm.n_bins as f64)),
+            ("delta_c", json::num(self.delta_c)),
+            ("delta_n", json::num(self.delta_n)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Discretizer> {
+        Ok(Discretizer {
+            kappa: Binner {
+                lo: v.get("kappa_lo")?.as_f64()?,
+                hi: v.get("kappa_hi")?.as_f64()?,
+                n_bins: v.get("kappa_bins")?.as_usize()?,
+            },
+            norm: Binner {
+                lo: v.get("norm_lo")?.as_f64()?,
+                hi: v.get("norm_hi")?.as_f64()?,
+                n_bins: v.get("norm_bins")?.as_usize()?,
+            },
+            delta_c: v.get("delta_c")?.as_f64()?,
+            delta_n: v.get("delta_n")?.as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn problem_with(kappa_est: f64, norm_inf: f64) -> Problem {
+        Problem {
+            id: 0,
+            a: Mat::eye(2),
+            b: vec![1.0, 1.0],
+            x_true: vec![1.0, 1.0],
+            n: 2,
+            kappa_target: kappa_est,
+            kappa_est,
+            norm_inf,
+            density: 1.0,
+        }
+    }
+
+    #[test]
+    fn binner_clips_and_covers() {
+        let b = Binner { lo: 0.0, hi: 10.0, n_bins: 10 };
+        assert_eq!(b.bin(-5.0), 0);
+        assert_eq!(b.bin(0.0), 0);
+        assert_eq!(b.bin(5.0), 5);
+        assert_eq!(b.bin(9.9999), 9);
+        assert_eq!(b.bin(10.0), 9); // hi edge clips into last bin
+        assert_eq!(b.bin(1e9), 9);
+        assert_eq!(b.bin(f64::NAN), 9);
+    }
+
+    #[test]
+    fn binner_center_and_diameter() {
+        let b = Binner { lo: 1.0, hi: 9.0, n_bins: 8 };
+        assert_eq!(b.diameter(), 1.0);
+        assert_eq!(b.center(0), 1.5);
+        assert_eq!(b.center(7), 8.5);
+        // every center falls in its own bin
+        for k in 0..8 {
+            assert_eq!(b.bin(b.center(k)), k);
+        }
+    }
+
+    #[test]
+    fn fit_handles_degenerate_inputs() {
+        let b = Binner::fit([3.0, 3.0, 3.0].into_iter(), 5);
+        assert_eq!(b.bin(3.0), 0);
+        let b2 = Binner::fit(std::iter::empty(), 4);
+        assert_eq!(b2.n_bins, 4);
+    }
+
+    #[test]
+    fn state_index_layout_matches_eq20() {
+        let train: Vec<Problem> = vec![problem_with(1e1, 1.0), problem_with(1e9, 1e4)];
+        let d = Discretizer::fit(&train, 10, 10, 1.0, 1e-30);
+        assert_eq!(d.n_states(), 100);
+        let s_low = d.state_of(&problem_with(1e1, 1.0));
+        let s_high = d.state_of(&problem_with(1e9, 1e4));
+        assert_eq!(s_low, 0);
+        assert_eq!(s_high, 99);
+        // κ drives the major axis
+        let s_mid = d.state_of(&problem_with(1e5, 1.0));
+        assert_eq!(s_mid % 10, 0);
+        assert!(s_mid / 10 > 0 && s_mid / 10 < 9);
+    }
+
+    #[test]
+    fn out_of_sample_clipping() {
+        let train: Vec<Problem> = vec![problem_with(1e2, 1.0), problem_with(1e6, 10.0)];
+        let d = Discretizer::fit(&train, 4, 4, 1.0, 1e-30);
+        // far outside training range still maps to a valid state
+        let s = d.state_of(&problem_with(1e12, 1e9));
+        assert!(s < d.n_states());
+        assert_eq!(s, 15);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let train: Vec<Problem> = vec![problem_with(1e1, 0.5), problem_with(1e8, 50.0)];
+        let d = Discretizer::fit(&train, 10, 10, 1.0, 1e-30);
+        let text = d.to_json().to_string();
+        let back = Discretizer::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(d, back);
+    }
+}

@@ -1,0 +1,230 @@
+//! Problem generators — the paper's two dataset constructions (§5.1–5.3)
+//! plus the dataset assembly used by every experiment.
+//!
+//! * [`randsvd_mode2`] — dense: A = U Σ Vᵀ with U, V Haar-orthogonal and
+//!   the mode-2 spectrum of eq. (31): σ₁..σ_{n-1} = σ_max, σ_n = σ_max/κ
+//!   (MATLAB `gallery('randsvd', ..., mode=2)`).
+//! * [`sparse_spd`] — sparse SPD: A = A₀A₀ᵀ + βI with
+//!   nnz(A₀) = ⌊λ_s n²⌋ standard-normal entries at random positions
+//!   (following Häusner et al. [17], as in §5.3).
+
+use crate::linalg::condest::condest_1;
+use crate::linalg::lu::{lu_factor, LuFactors};
+use crate::linalg::qr::qr_haar;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::util::config::Config;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+/// One linear system instance p = (A, b) with its generation metadata and
+/// the cached f64 machinery every experiment needs (x_true for ferr, the
+/// f64 LU for the condition estimate).
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub id: usize,
+    pub a: Mat,
+    pub b: Vec<f64>,
+    pub x_true: Vec<f64>,
+    pub n: usize,
+    /// κ targeted by the generator (dense) or NaN (sparse: emergent)
+    pub kappa_target: f64,
+    /// κ₁ estimate from Hager–Higham on the f64 LU (feature φ₁ input)
+    pub kappa_est: f64,
+    /// ‖A‖∞ (feature φ₂ input)
+    pub norm_inf: f64,
+    /// structural density (sparse sets; 1.0 for dense)
+    pub density: f64,
+}
+
+/// Dense randsvd matrix, mode 2 (eq. 31), σ_max = 1.
+pub fn randsvd_mode2(n: usize, kappa: f64, rng: &mut Rng) -> Mat {
+    let mut g1 = Mat::zeros(n, n);
+    for v in g1.data.iter_mut() {
+        *v = rng.gauss();
+    }
+    let mut g2 = Mat::zeros(n, n);
+    for v in g2.data.iter_mut() {
+        *v = rng.gauss();
+    }
+    let u = qr_haar(&g1);
+    let v = qr_haar(&g2);
+    // A = U Σ Vᵀ with Σ = diag(1, ..., 1, 1/κ): scale U's last column.
+    let mut us = u;
+    for i in 0..n {
+        us[(i, n - 1)] /= kappa;
+    }
+    us.matmul(&v.transpose())
+}
+
+/// Sparse SPD matrix of §5.3: A = A₀A₀ᵀ + βI, returned with its CSR form
+/// (of A, for the structural features).
+pub fn sparse_spd(n: usize, lambda_s: f64, beta: f64, rng: &mut Rng) -> (Mat, Csr) {
+    let nnz = ((lambda_s * (n * n) as f64).floor() as usize).max(n);
+    let mut triplets = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        triplets.push((i, j, rng.gauss()));
+    }
+    let a0 = Csr::from_triplets(n, n, &triplets);
+    let mut a = a0.aat_dense();
+    for i in 0..n {
+        a[(i, i)] += beta;
+    }
+    let csr = Csr::from_dense(&a);
+    (a, csr)
+}
+
+/// Build a [`Problem`] around a generated matrix: x_true ~ N(0,1),
+/// b = A x_true (both f64), features from the f64 LU.
+pub fn finish_problem(
+    id: usize,
+    a: Mat,
+    kappa_target: f64,
+    density: f64,
+    rng: &mut Rng,
+) -> Problem {
+    let n = a.n_rows;
+    let x_true = rng.gauss_vec(n);
+    let b = a.matvec(&x_true);
+    let (kappa_est, norm_inf) = features_of(&a);
+    Problem { id, a, b, x_true, n, kappa_target, kappa_est, norm_inf, density }
+}
+
+/// (κ₁ estimate, ‖A‖∞) — the paper's two context features' raw inputs.
+pub fn features_of(a: &Mat) -> (f64, f64) {
+    let norm_inf = a.norm_inf();
+    let kappa_est = match lu_factor(a) {
+        Ok(lu) => condest_1(a, &lu),
+        Err(_) => f64::INFINITY,
+    };
+    (kappa_est, norm_inf)
+}
+
+/// f64 LU for baselines / feature reuse.
+pub fn f64_factors(a: &Mat) -> Option<LuFactors> {
+    lu_factor(a).ok()
+}
+
+/// The dense dataset of §5.1–5.2: sizes U[size_min, size_max], target
+/// log10 κ U[kappa_log10_min, kappa_log10_max]; `count` systems derived
+/// deterministically from `cfg.seed` + `stream`.
+pub fn dense_dataset(cfg: &Config, count: usize, stream: u64) -> Vec<Problem> {
+    let base = Rng::new(cfg.seed).fork(stream);
+    parallel_map(count, |i| {
+        let mut rng = base.fork(i as u64);
+        let n = cfg.size_min + rng.below(cfg.size_max - cfg.size_min + 1);
+        let kappa = 10f64.powf(rng.uniform_in(cfg.kappa_log10_min, cfg.kappa_log10_max));
+        let a = randsvd_mode2(n, kappa, &mut rng);
+        finish_problem(i, a, kappa, 1.0, &mut rng)
+    })
+}
+
+/// The sparse dataset of §5.3.
+pub fn sparse_dataset(cfg: &Config, count: usize, stream: u64) -> Vec<Problem> {
+    let base = Rng::new(cfg.seed).fork(stream ^ 0x5A5A_5A5A);
+    parallel_map(count, |i| {
+        let mut rng = base.fork(i as u64);
+        let n = cfg.size_min + rng.below(cfg.size_max - cfg.size_min + 1);
+        let (a, csr) = sparse_spd(n, cfg.sparsity, cfg.sparse_beta, &mut rng);
+        let density = csr.density();
+        finish_problem(i, a, f64::NAN, density, &mut rng)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        let mut c = Config::tiny();
+        c.size_min = 20;
+        c.size_max = 40;
+        c
+    }
+
+    #[test]
+    fn randsvd_hits_target_condition_number() {
+        let mut rng = Rng::new(1);
+        for &kappa in &[1e2, 1e5, 1e8] {
+            let a = randsvd_mode2(40, kappa, &mut rng);
+            let (est, _) = features_of(&a);
+            // condest_1 estimates kappa_1 which for this construction is
+            // within a small factor of kappa_2 = kappa.
+            assert!(est > kappa / 50.0 && est < kappa * 50.0, "kappa {kappa}: est {est}");
+        }
+    }
+
+    #[test]
+    fn randsvd_is_orthogonally_scaled() {
+        // With sigma_max = 1 the spectral norm is 1, so ||A||_F = sqrt(n-1+1/k^2).
+        let mut rng = Rng::new(2);
+        let n = 30;
+        let a = randsvd_mode2(n, 1e6, &mut rng);
+        let want = ((n - 1) as f64 + 1e-12).sqrt();
+        assert!((a.norm_fro() - want).abs() < 1e-8, "{} vs {}", a.norm_fro(), want);
+    }
+
+    #[test]
+    fn sparse_spd_is_symmetric_positive_diag() {
+        let mut rng = Rng::new(3);
+        let (a, csr) = sparse_spd(50, 0.02, 1e-2, &mut rng);
+        for i in 0..50 {
+            assert!(a[(i, i)] > 0.0);
+            for j in 0..50 {
+                assert_eq!(a[(i, j)], a[(j, i)]);
+            }
+        }
+        assert!(csr.density() > 0.0 && csr.density() < 1.0);
+    }
+
+    #[test]
+    fn problem_rhs_is_consistent() {
+        let cfg = tiny_cfg();
+        let ps = dense_dataset(&cfg, 3, 0);
+        for p in &ps {
+            let ax = p.a.matvec(&p.x_true);
+            for (u, v) in ax.iter().zip(&p.b) {
+                assert_eq!(u, v); // b built exactly as A x_true in f64
+            }
+            assert!(p.kappa_est.is_finite() && p.kappa_est >= 1.0);
+            assert!(p.norm_inf > 0.0);
+        }
+    }
+
+    #[test]
+    fn datasets_are_deterministic_and_stream_separated() {
+        let cfg = tiny_cfg();
+        let a1 = dense_dataset(&cfg, 2, 0);
+        let a2 = dense_dataset(&cfg, 2, 0);
+        assert_eq!(a1[0].a, a2[0].a);
+        let b = dense_dataset(&cfg, 2, 1);
+        assert_ne!(a1[0].a, b[0].a);
+    }
+
+    #[test]
+    fn sizes_and_kappas_in_range() {
+        let mut cfg = tiny_cfg();
+        cfg.kappa_log10_min = 2.0;
+        cfg.kappa_log10_max = 4.0;
+        for p in dense_dataset(&cfg, 5, 7) {
+            assert!(p.n >= 20 && p.n <= 40);
+            assert!(p.kappa_target >= 1e2 && p.kappa_target <= 1e4);
+        }
+    }
+
+    #[test]
+    fn sparse_dataset_is_ill_conditioned_like_table3() {
+        let mut cfg = tiny_cfg();
+        cfg.size_min = 60;
+        cfg.size_max = 80;
+        let ps = sparse_dataset(&cfg, 3, 0);
+        for p in &ps {
+            // Table 3 reports kappa ~ 1e8–1e10 at paper sizes; at these
+            // smaller test sizes we still expect severe ill-conditioning.
+            assert!(p.kappa_est > 1e6, "kappa_est {}", p.kappa_est);
+            assert!(p.density < 0.5);
+        }
+    }
+}

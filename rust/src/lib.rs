@@ -1,0 +1,35 @@
+//! # precision-autotune
+//!
+//! Reproduction of *"Precision autotuning for linear solvers via contextual
+//! bandit-based RL"* (Carson & Chen, 2026) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the contextual-bandit
+//! agent (the paper's contribution — Q-table, ε-greedy policy,
+//! multi-objective reward), the GMRES-IR driver, problem generation,
+//! feature extraction, and the experiment harness that regenerates every
+//! table and figure of the paper's evaluation section.
+//!
+//! Mixed-precision numerics run through the [`solver::SolverBackend`]
+//! trait with two implementations:
+//!
+//! * [`backend_native`] — pure-Rust chopped arithmetic (bit-identical
+//!   `chop` to the Layer-1 Pallas kernel), used for the large sweeps;
+//! * [`runtime`] — loads the AOT artifacts lowered by
+//!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them on
+//!   the PJRT CPU client via the `xla` crate. Python never runs on the
+//!   request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod backend_native;
+pub mod bandit;
+pub mod chop;
+pub mod coordinator;
+pub mod features;
+pub mod gen;
+pub mod linalg;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod util;

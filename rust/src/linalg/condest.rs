@@ -1,0 +1,138 @@
+//! Hager–Higham 1-norm condition estimation (paper §4.2 cites [16, 18]):
+//! estimates ‖A⁻¹‖₁ from a handful of LU solves, giving
+//! κ₁(A) ≈ ‖A‖₁ · ‖A⁻¹‖₁ — the context feature φ₁ without ever forming
+//! A⁻¹ or an SVD.
+
+use crate::linalg::lu::LuFactors;
+use crate::linalg::{norm1_vec, Mat};
+
+/// Estimate ‖A⁻¹‖₁ via Hager's algorithm using the supplied LU factors
+/// (each iteration costs one solve with A and one with Aᵀ).
+pub fn inv_norm1_est(lu: &LuFactors) -> f64 {
+    let n = lu.lu.n_rows;
+    let mut x = vec![1.0 / n as f64; n];
+    let mut est = 0.0;
+    for _ in 0..8 {
+        // max 8 refinement steps (typically 2–3)
+        let y = lu.solve(&x); // y = A^{-1} x
+        let ynorm = norm1_vec(&y);
+        if !ynorm.is_finite() {
+            return f64::INFINITY;
+        }
+        let xi: Vec<f64> = y.iter().map(|v| if *v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let z = lu.solve_transpose(&xi); // z = A^{-T} xi
+        let (mut zmax, mut jmax) = (0.0, 0);
+        for (j, v) in z.iter().enumerate() {
+            if v.abs() > zmax {
+                zmax = v.abs();
+                jmax = j;
+            }
+        }
+        let ztx: f64 = z.iter().zip(&x).map(|(a, b)| a * b).sum();
+        est = ynorm;
+        if zmax <= ztx {
+            break; // converged
+        }
+        x = vec![0.0; n];
+        x[jmax] = 1.0;
+    }
+    est
+}
+
+/// κ₁(A) estimate from existing factors.
+pub fn condest_1(a: &Mat, lu: &LuFactors) -> f64 {
+    a.norm_1() * inv_norm1_est(lu)
+}
+
+/// Exact ‖A⁻¹‖₁ by n solves (test oracle; O(n³) — small n only).
+pub fn inv_norm1_exact(lu: &LuFactors) -> f64 {
+    let n = lu.lu.n_rows;
+    let mut colsum = vec![0.0; n];
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        let x = lu.solve(&e);
+        colsum[j] = norm1_vec(&x);
+    }
+    colsum.into_iter().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu::lu_factor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_on_diagonal() {
+        // A = diag(1, 2, 4): ||A^{-1}||_1 = 1.
+        let mut a = Mat::eye(3);
+        a[(1, 1)] = 2.0;
+        a[(2, 2)] = 4.0;
+        let lu = lu_factor(&a).unwrap();
+        assert!((inv_norm1_est(&lu) - 1.0).abs() < 1e-14);
+        assert!((condest_1(&a, &lu) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimate_within_factor_of_exact() {
+        use crate::util::proptest::{check, gen};
+        check("condest_quality", 21, 25, |rng| {
+            let n = gen::size(rng, 3, 40);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = rng.gauss() + if i == j { 3.0 } else { 0.0 };
+                }
+            }
+            let lu = lu_factor(&a).map_err(|e| e.to_string())?;
+            let est = inv_norm1_est(&lu);
+            let exact = inv_norm1_exact(&lu);
+            // Hager's estimator is a lower bound, typically within 2-3x.
+            crate::prop_assert!(est <= exact * (1.0 + 1e-10), "est {est} > exact {exact}");
+            crate::prop_assert!(est >= exact / 10.0, "est {est} ≪ exact {exact} (n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tracks_condition_number_growth() {
+        // randsvd-style: one small singular value controls kappa.
+        let mut rng = Rng::new(5);
+        let n = 30;
+        let mut g1 = Mat::zeros(n, n);
+        let mut g2 = Mat::zeros(n, n);
+        for v in g1.data.iter_mut() {
+            *v = rng.gauss();
+        }
+        for v in g2.data.iter_mut() {
+            *v = rng.gauss();
+        }
+        let q1 = crate::linalg::qr::qr_haar(&g1);
+        let q2 = crate::linalg::qr::qr_haar(&g2);
+        let mut prev = 0.0;
+        for log_k in [2.0, 5.0, 8.0] {
+            let kappa = 10f64.powf(log_k);
+            let mut s = q1.clone();
+            // scale last column of q1 by 1/kappa => A = q1 * diag * q2^T
+            for i in 0..n {
+                s[(i, n - 1)] /= kappa;
+            }
+            let a = s.matmul(&q2.transpose());
+            let lu = lu_factor(&a).unwrap();
+            let est = condest_1(&a, &lu);
+            assert!(est > prev * 10.0, "kappa {kappa}: est {est} prev {prev}");
+            assert!(est > kappa / 100.0 && est < kappa * 100.0, "kappa {kappa} est {est}");
+            prev = est;
+        }
+    }
+
+    #[test]
+    fn infinite_for_near_singular() {
+        let mut a = Mat::eye(5);
+        a[(4, 4)] = 1e-300;
+        let lu = lu_factor(&a).unwrap();
+        let est = inv_norm1_est(&lu);
+        assert!(est >= 1e299);
+    }
+}

@@ -1,0 +1,267 @@
+//! Left-preconditioned GMRES (MGS-Arnoldi + Givens rotations) in emulated
+//! precision — the native mirror of the Layer-2 `gmres` graph
+//! (`python/compile/model.py::gmres`), used for the inner solves of
+//! GMRES-IR (precision u_g of Alg. 2, preconditioner M = LU applied in
+//! u_g per §4.2).
+
+use crate::chop::{chop_p, Prec};
+use crate::linalg::lu::LuFactors;
+use crate::linalg::{chopped_matvec_prechopped, dot, Mat};
+
+/// Outcome of one (non-restarted) GMRES solve.
+#[derive(Clone, Debug)]
+pub struct GmresResult {
+    pub z: Vec<f64>,
+    /// inner iterations performed (the paper's "GMRES iter." metric unit)
+    pub iters: usize,
+    /// final residual estimate relative to the preconditioned RHS norm
+    pub relres: f64,
+    /// false if a non-finite value appeared (emulated overflow etc.)
+    pub ok: bool,
+}
+
+/// Solve M⁻¹ A z = M⁻¹ r with M = LU, everything in precision `p`.
+///
+/// `a_pre` must already be storage-rounded to `p` (the driver chops A
+/// once per action, mirroring how the AOT artifact receives f64 A and
+/// chops internally — semantics identical, work amortized).
+pub fn gmres_preconditioned(
+    a_pre: &Mat,
+    lu: &LuFactors,
+    r: &[f64],
+    tol: f64,
+    max_m: usize,
+    p: Prec,
+) -> GmresResult {
+    let n = a_pre.n_rows;
+    let m = max_m.min(n).max(1);
+
+    // r0 = M^-1 r, beta = ||r0||_2 (chopped norm as in the L2 graph)
+    let r0 = lu.solve_chopped(r, p);
+    let beta = chop_p(dot(&r0, &r0).sqrt(), p);
+    if !(beta.is_finite()) || beta == 0.0 {
+        return GmresResult {
+            z: vec![0.0; n],
+            iters: 0,
+            relres: 0.0,
+            ok: beta == 0.0, // zero RHS is fine; NaN/inf is not
+        };
+    }
+
+    let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+    v.push(r0.iter().map(|x| chop_p(x / beta, p)).collect());
+    // Hessenberg columns after Givens, g = rotated rhs.
+    let mut h = vec![vec![0.0f64; m + 1]; m];
+    let mut cs = vec![0.0f64; m];
+    let mut sn = vec![0.0f64; m];
+    let mut g = vec![0.0f64; m + 1];
+    g[0] = beta;
+
+    let mut j = 0;
+    let mut res = beta;
+    let mut ok = true;
+    let mut happy = false;
+    // Inner stagnation guard: in precision u_g the residual estimate
+    // bottoms out near u_g*beta; when three consecutive iterations fail
+    // to improve the best estimate by >10% the solve has hit its
+    // precision floor and more iterations are pure waste (mirrored in the
+    // L2 graph so both backends report the same iteration economics).
+    let mut best_res = beta;
+    let mut stall = 0u32;
+
+    while j < m && res > tol * beta && ok && !happy && stall < 3 {
+        // w = M^-1 (A v_j), both in precision p
+        let mut xc = v[j].clone();
+        crate::chop::chop_slice(&mut xc, p);
+        let av = chopped_matvec_prechopped(a_pre, &xc, p);
+        let mut w = lu.solve_chopped(&av, p);
+
+        // Modified Gram-Schmidt
+        for i in 0..=j {
+            let hij = chop_p(dot(&v[i], &w), p);
+            h[j][i] = hij;
+            for (wk, vk) in w.iter_mut().zip(&v[i]) {
+                *wk = chop_p(*wk - hij * vk, p);
+            }
+        }
+        let hj1 = chop_p(dot(&w, &w).sqrt(), p);
+        h[j][j + 1] = hj1;
+        if !hj1.is_finite() {
+            ok = false;
+            break;
+        }
+        if hj1 <= 1e-300 {
+            happy = true; // exact breakdown: solution lies in span(V)
+        } else {
+            v.push(w.iter().map(|x| chop_p(x / hj1, p)).collect());
+        }
+
+        // Apply accumulated Givens rotations to the new column.
+        for i in 0..j {
+            let t1 = cs[i] * h[j][i] + sn[i] * h[j][i + 1];
+            let t2 = -sn[i] * h[j][i] + cs[i] * h[j][i + 1];
+            h[j][i] = t1;
+            h[j][i + 1] = t2;
+        }
+        // New rotation annihilating h[j+1, j].
+        let denom = (h[j][j] * h[j][j] + h[j][j + 1] * h[j][j + 1]).sqrt();
+        let (c, s) = if denom == 0.0 { (1.0, 0.0) } else { (h[j][j] / denom, h[j][j + 1] / denom) };
+        cs[j] = c;
+        sn[j] = s;
+        h[j][j] = denom;
+        h[j][j + 1] = 0.0;
+        let gj = g[j];
+        g[j] = c * gj;
+        g[j + 1] = -s * gj;
+
+        res = g[j + 1].abs();
+        if !res.is_finite() || h[j].iter().any(|x| !x.is_finite()) {
+            ok = false;
+        }
+        if res < 0.9 * best_res {
+            best_res = res;
+            stall = 0;
+        } else {
+            stall += 1;
+        }
+        j += 1;
+    }
+
+    // Back-substitute the j×j triangular system H y = g.
+    let mut y = vec![0.0f64; j];
+    for i in (0..j).rev() {
+        let mut s = g[i];
+        for k in i + 1..j {
+            s -= h[k][i] * y[k];
+        }
+        let d = h[i][i];
+        y[i] = if d == 0.0 { 0.0 } else { s / d };
+    }
+
+    // z = V y (f64 accumulate, then chop)
+    let mut z = vec![0.0f64; n];
+    for (i, yi) in y.iter().enumerate() {
+        if *yi != 0.0 {
+            for (zk, vk) in z.iter_mut().zip(&v[i]) {
+                *zk += yi * vk;
+            }
+        }
+    }
+    crate::chop::chop_slice(&mut z, p);
+    let ok = ok && z.iter().all(|x| x.is_finite());
+
+    GmresResult { z, iters: j, relres: res / beta, ok }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu::lu_factor_chopped;
+    use crate::util::rng::Rng;
+
+    fn system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        (a, xt, b)
+    }
+
+    #[test]
+    fn exact_preconditioner_converges_in_one_or_two() {
+        let (a, xt, b) = system(40, 0);
+        let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+        let res = gmres_preconditioned(&a, &lu, &b, 1e-10, 50, Prec::Fp64);
+        assert!(res.ok);
+        assert!(res.iters <= 2, "iters {}", res.iters);
+        for (zi, xi) in res.z.iter().zip(&xt) {
+            assert!((zi - xi).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inexact_preconditioner_needs_more_iterations() {
+        let (a, _, b) = system(60, 1);
+        let lu32 = lu_factor_chopped(&a, Prec::Bf16).unwrap();
+        let r32 = gmres_preconditioned(&a, &lu32, &b, 1e-8, 50, Prec::Fp64);
+        let lu64 = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+        let r64 = gmres_preconditioned(&a, &lu64, &b, 1e-8, 50, Prec::Fp64);
+        assert!(r32.ok && r64.ok);
+        assert!(r32.iters >= r64.iters);
+        assert!(r32.relres <= 1e-8);
+    }
+
+    #[test]
+    fn tolerance_honored_or_maxed() {
+        let (a, _, b) = system(30, 2);
+        let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+        for tol in [1e-2, 1e-6, 1e-12] {
+            let res = gmres_preconditioned(&a, &lu, &b, tol, 30, Prec::Fp64);
+            assert!(res.relres <= tol || res.iters == 30);
+        }
+    }
+
+    #[test]
+    fn zero_rhs_is_ok_and_zero() {
+        let (a, _, _) = system(10, 3);
+        let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+        let res = gmres_preconditioned(&a, &lu, &vec![0.0; 10], 1e-8, 10, Prec::Fp64);
+        assert!(res.ok);
+        assert_eq!(res.iters, 0);
+        assert!(res.z.iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn nan_rhs_not_ok() {
+        let (a, _, _) = system(10, 4);
+        let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+        let res = gmres_preconditioned(&a, &lu, &vec![f64::NAN; 10], 1e-8, 10, Prec::Fp64);
+        assert!(!res.ok);
+    }
+
+    #[test]
+    fn maxit_caps() {
+        let (a, _, b) = system(25, 5);
+        // useless preconditioner: identity-ish via LU of I
+        let lu = lu_factor_chopped(&Mat::eye(25), Prec::Fp64).unwrap();
+        let res = gmres_preconditioned(&a, &lu, &b, 1e-14, 4, Prec::Fp64);
+        assert!(res.iters <= 4);
+    }
+
+    #[test]
+    fn chopped_precision_still_reduces_residual() {
+        let (a, xt, b) = system(32, 6);
+        for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32] {
+            let lu = lu_factor_chopped(&a, p).unwrap();
+            let ap = a.chopped(p);
+            let res = gmres_preconditioned(&ap, &lu, &b, 1e-2, 30, p);
+            assert!(res.ok, "{p}");
+            let rel = res
+                .z
+                .iter()
+                .zip(&xt)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+                / crate::linalg::norm_inf_vec(&xt);
+            assert!(rel < 0.3, "{p}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn identity_system_happy_breakdown() {
+        let a = Mat::eye(12);
+        let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| i as f64 + 1.0).collect();
+        let res = gmres_preconditioned(&a, &lu, &b, 1e-12, 12, Prec::Fp64);
+        assert!(res.ok);
+        assert!(res.iters <= 2);
+        for (zi, bi) in res.z.iter().zip(&b) {
+            assert!((zi - bi).abs() < 1e-12);
+        }
+    }
+}

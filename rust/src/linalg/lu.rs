@@ -1,0 +1,337 @@
+//! LU factorization with partial pivoting: native f64 and chopped
+//! (emulated-precision) variants, plus triangular solves (including the
+//! transpose solve needed by the Hager–Higham estimator).
+//!
+//! The chopped variant mirrors the Layer-2 `lu_factor` graph exactly
+//! (`python/compile/model.py`): storage rounding after each rank-1 Schur
+//! update, chopped multipliers, NaN-safe pivot search, and a failure flag
+//! on zero / non-finite pivots (overflow in a narrow format is a *normal*
+//! outcome the bandit's reward must see, not a panic).
+
+use crate::chop::{chop, chop_p, Prec};
+use crate::linalg::{dot, Mat};
+
+/// Packed LU factors (unit-lower L below the diagonal, U on and above),
+/// with the pivot-swap vector `piv[k] = row swapped with k at step k`.
+#[derive(Clone, Debug)]
+pub struct LuFactors {
+    pub lu: Mat,
+    pub piv: Vec<usize>,
+    /// Precision the factorization was carried out in (u_f of Alg. 2).
+    pub prec: Prec,
+}
+
+/// Factorization failure: zero or non-finite pivot (singular to working
+/// precision, or overflow/NaN in the emulated format).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LuError {
+    pub step: usize,
+}
+
+impl std::fmt::Display for LuError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LU breakdown at step {}", self.step)
+    }
+}
+impl std::error::Error for LuError {}
+
+/// Right-looking LU with partial pivoting in emulated precision `p`.
+///
+/// Semantics match the L2 graph: `A` is storage-rounded up front; at step
+/// k the multiplier column is `chop(a[i][k] / pivot)` and the trailing
+/// update is `chop(a[i][j] - chop(m_i * u_kj))` (for rank-1 updates,
+/// per-op and accumulate emulation modes coincide).
+pub fn lu_factor_chopped(a: &Mat, p: Prec) -> Result<LuFactors, LuError> {
+    assert_eq!(a.n_rows, a.n_cols);
+    let n = a.n_rows;
+    let fmt = p.format();
+    let mut lu = a.chopped(p);
+    let mut piv = vec![0usize; n];
+
+    for k in 0..n {
+        // NaN-safe pivot search: |a[i][k]| max over i >= k, first winner.
+        let mut best = -f64::INFINITY;
+        let mut pk = k;
+        for i in k..n {
+            let v = lu[(i, k)].abs();
+            if v > best {
+                best = v;
+                pk = i;
+            }
+        }
+        piv[k] = pk;
+        lu.swap_rows(k, pk);
+        let pivot = lu[(k, k)];
+        if pivot == 0.0 || !pivot.is_finite() {
+            return Err(LuError { step: k });
+        }
+        if p == Prec::Fp64 {
+            // fast path: no chop calls
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    let (top, bottom) = lu.data.split_at_mut((k + 1) * n);
+                    let urow = &top[k * n..k * n + n];
+                    let irow = &mut bottom[(i - k - 1) * n..(i - k - 1) * n + n];
+                    for j in k + 1..n {
+                        irow[j] -= m * urow[j];
+                    }
+                }
+            }
+        } else {
+            for i in k + 1..n {
+                let m = chop(lu[(i, k)] / pivot, fmt);
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    let (top, bottom) = lu.data.split_at_mut((k + 1) * n);
+                    let urow = &top[k * n..k * n + n];
+                    let irow = &mut bottom[(i - k - 1) * n..(i - k - 1) * n + n];
+                    for j in k + 1..n {
+                        irow[j] = chop(irow[j] - chop(m * urow[j], fmt), fmt);
+                    }
+                }
+            }
+        }
+    }
+    Ok(LuFactors { lu, piv, prec: p })
+}
+
+/// Native f64 LU (used for the κ features and the FP64 baseline).
+pub fn lu_factor(a: &Mat) -> Result<LuFactors, LuError> {
+    lu_factor_chopped(a, Prec::Fp64)
+}
+
+impl LuFactors {
+    fn n(&self) -> usize {
+        self.lu.n_rows
+    }
+
+    /// x = U⁻¹ L⁻¹ P b in precision `p` (mirror of the `lu_solve` graph:
+    /// f64-accumulated row dots, storage rounding per component).
+    pub fn solve_chopped(&self, b: &[f64], p: Prec) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut y: Vec<f64> = b.iter().map(|&v| chop_p(v, p)).collect();
+        for k in 0..n {
+            y.swap(k, self.piv[k]);
+        }
+        // forward: L y = y (unit diagonal)
+        for i in 0..n {
+            let s = chop_p(dot(&self.lu.row(i)[..i], &y[..i]), p);
+            y[i] = chop_p(y[i] - s, p);
+        }
+        // backward: U x = y
+        for i in (0..n).rev() {
+            let s = chop_p(dot(&self.lu.row(i)[i + 1..], &y[i + 1..]), p);
+            let d = self.lu[(i, i)];
+            y[i] = chop_p((y[i] - s) / d, p);
+        }
+        y
+    }
+
+    /// Native f64 solve.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_chopped(b, Prec::Fp64)
+    }
+
+    /// Solve Aᵀ x = b (f64) using the same factors:
+    /// Aᵀ = Uᵀ Lᵀ P, so solve Uᵀ w = b, Lᵀ v = w, then x = Pᵀ v
+    /// (apply the recorded swaps in reverse). Needed by condest.
+    pub fn solve_transpose(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut w = b.to_vec();
+        // Uᵀ is lower triangular: forward substitution with U columns.
+        for i in 0..n {
+            let mut s = w[i];
+            for k in 0..i {
+                s -= self.lu[(k, i)] * w[k];
+            }
+            w[i] = s / self.lu[(i, i)];
+        }
+        // Lᵀ is upper triangular (unit diagonal): backward substitution.
+        for i in (0..n).rev() {
+            let mut s = w[i];
+            for k in i + 1..n {
+                s -= self.lu[(k, i)] * w[k];
+            }
+            w[i] = s;
+        }
+        // x = Pᵀ v: undo swaps in reverse order.
+        for k in (0..n).rev() {
+            w.swap(k, self.piv[k]);
+        }
+        w
+    }
+
+    /// Reconstruct P·A (for tests): multiplies L·U.
+    pub fn reconstruct_pa(&self) -> Mat {
+        let n = self.n();
+        let mut pa = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let kmax = i.min(j);
+                let mut s = if i <= j { self.lu[(i, j)] } else { 0.0 }; // L has unit diag
+                for k in 0..=kmax {
+                    if k < i && k <= j {
+                        s += self.lu[(i, k)] * self.lu[(k, j)];
+                    }
+                }
+                pa[(i, j)] = s;
+            }
+        }
+        pa
+    }
+
+    /// Apply the recorded row swaps to a fresh copy of `a` (P·A).
+    pub fn permute(&self, a: &Mat) -> Mat {
+        let mut m = a.clone();
+        for k in 0..self.n() {
+            m.swap_rows(k, self.piv[k]);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(n: usize, seed: u64, diag: f64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { diag } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solves_known_system() {
+        let a = Mat::from_rows(&[&[4.0, 3.0], &[6.0, 3.0]]);
+        let f = lu_factor(&a).unwrap();
+        let x = f.solve(&[10.0, 12.0]);
+        assert!((x[0] - 1.0).abs() < 1e-14 && (x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn pa_equals_lu_reconstruction() {
+        for seed in 0..5 {
+            let a = random_mat(20, seed, 0.0);
+            let f = lu_factor(&a).unwrap();
+            let pa = f.permute(&a);
+            let rec = f.reconstruct_pa();
+            for i in 0..20 {
+                for j in 0..20 {
+                    assert!(
+                        (pa[(i, j)] - rec[(i, j)]).abs() < 1e-10,
+                        "seed {seed} ({i},{j}): {} vs {}",
+                        pa[(i, j)],
+                        rec[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_random_systems_to_fp64_accuracy() {
+        use crate::util::proptest::{check, gen};
+        check("lu_solve", 11, 30, |rng| {
+            let n = gen::size(rng, 2, 60);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+                }
+            }
+            let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let b = a.matvec(&xt);
+            let f = lu_factor(&a).map_err(|e| e.to_string())?;
+            let x = f.solve(&b);
+            let ferr = x
+                .iter()
+                .zip(&xt)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+                / crate::linalg::norm_inf_vec(&xt);
+            crate::prop_assert!(ferr < 1e-10, "ferr {ferr:e} at n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_solve_matches_explicit_transpose() {
+        for seed in 0..5 {
+            let a = random_mat(15, seed + 100, 15.0);
+            let at = a.transpose();
+            let b: Vec<f64> = (0..15).map(|i| (i as f64) - 7.0).collect();
+            let f = lu_factor(&a).unwrap();
+            let ft = lu_factor(&at).unwrap();
+            let x1 = f.solve_transpose(&b);
+            let x2 = ft.solve(&b);
+            for (u, v) in x1.iter().zip(&x2) {
+                assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_errors() {
+        let a = Mat::zeros(6, 6);
+        assert!(matches!(lu_factor(&a), Err(LuError { step: 0 })));
+        let mut b = Mat::eye(4);
+        b[(2, 2)] = 0.0;
+        // rank-3: breakdown at the step where no pivot remains
+        assert!(lu_factor(&b).is_err());
+    }
+
+    #[test]
+    fn bf16_overflow_errors_not_panics() {
+        let mut a = Mat::eye(4);
+        for i in 0..4 {
+            a[(i, i)] = 1e39; // > bf16 xmax
+        }
+        assert!(lu_factor_chopped(&a, Prec::Bf16).is_err());
+        assert!(lu_factor_chopped(&a, Prec::Fp64).is_ok());
+    }
+
+    #[test]
+    fn chopped_solve_error_scales_with_unit_roundoff() {
+        let n = 48;
+        let a = random_mat(n, 9, n as f64);
+        let mut rng = Rng::new(10);
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        let mut errs = Vec::new();
+        for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32, Prec::Fp64] {
+            let f = lu_factor_chopped(&a, p).unwrap();
+            let x = f.solve_chopped(&b, p);
+            let ferr = x
+                .iter()
+                .zip(&xt)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+                / crate::linalg::norm_inf_vec(&xt);
+            errs.push(ferr);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+        assert!(errs[0] < 0.05, "bf16 ferr too large: {}", errs[0]);
+        assert!(errs[3] < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_controls_growth() {
+        // classic pivoting test: tiny leading entry
+        let a = Mat::from_rows(&[&[1e-20, 1.0], &[1.0, 1.0]]);
+        let f = lu_factor(&a).unwrap();
+        assert_eq!(f.piv[0], 1); // must have swapped
+        let x = f.solve(&[1.0, 2.0]);
+        // exact solution ~ [1, 1]
+        assert!((x[0] - 1.0).abs() < 1e-9 && (x[1] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,315 @@
+//! Dense linear algebra substrate (no LAPACK/BLAS offline — built from
+//! scratch, DESIGN.md §4 S2): row-major matrices, GEMM/GEMV, norms,
+//! Householder QR, LU with partial pivoting (native f64 and chopped),
+//! triangular solves, preconditioned GMRES, and Hager–Higham condition
+//! estimation.
+
+pub mod condest;
+pub mod gmres;
+pub mod lu;
+pub mod qr;
+
+use crate::chop::{chop_p, Prec};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Mat {
+        Mat { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let n_rows = rows.len();
+        let n_cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(n_rows * n_cols);
+        for r in rows {
+            assert_eq!(r.len(), n_cols);
+            data.extend_from_slice(r);
+        }
+        Mat { n_rows, n_cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    pub fn swap_rows(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        let (lo, hi) = (i.min(j), i.max(j));
+        let (a, b) = self.data.split_at_mut(hi * self.n_cols);
+        a[lo * self.n_cols..(lo + 1) * self.n_cols].swap_with_slice(&mut b[..self.n_cols]);
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.n_cols, self.n_rows);
+        for i in 0..self.n_rows {
+            for j in 0..self.n_cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// ‖A‖∞ = max row sum of |a_ij| (paper feature φ2).
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.n_rows)
+            .map(|i| self.row(i).iter().map(|x| x.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// ‖A‖₁ = max column sum (used by the Hager–Higham estimator).
+    pub fn norm_1(&self) -> f64 {
+        let mut col = vec![0.0; self.n_cols];
+        for i in 0..self.n_rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                col[j] += x.abs();
+            }
+        }
+        col.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Fraction of non-zero entries (sparsity feature, §5.3).
+    pub fn nnz_fraction(&self) -> f64 {
+        let nnz = self.data.iter().filter(|&&x| x != 0.0).count();
+        nnz as f64 / self.data.len() as f64
+    }
+
+    /// Diagonal dominance ratio: min_i |a_ii| / Σ_{j≠i} |a_ij| (extension
+    /// feature mentioned in the paper's intro / future work).
+    pub fn diag_dominance(&self) -> f64 {
+        assert_eq!(self.n_rows, self.n_cols);
+        let mut worst = f64::INFINITY;
+        for i in 0..self.n_rows {
+            let off: f64 = self
+                .row(i)
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, x)| x.abs())
+                .sum();
+            let r = if off == 0.0 { f64::INFINITY } else { self[(i, i)].abs() / off };
+            worst = worst.min(r);
+        }
+        worst
+    }
+
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// y = A x (f64).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        (0..self.n_rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// y = Aᵀ x (f64).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_rows);
+        let mut y = vec![0.0; self.n_cols];
+        for i in 0..self.n_rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                for (j, &a) in self.row(i).iter().enumerate() {
+                    y[j] += a * xi;
+                }
+            }
+        }
+        y
+    }
+
+    /// C = A·B (f64, ikj loop order for cache friendliness).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.n_cols, b.n_rows);
+        let mut c = Mat::zeros(self.n_rows, b.n_cols);
+        for i in 0..self.n_rows {
+            for k in 0..self.n_cols {
+                let aik = self[(i, k)];
+                if aik != 0.0 {
+                    let brow = b.row(k);
+                    let crow = c.row_mut(i);
+                    for j in 0..brow.len() {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Chop every entry to precision `p` (storage rounding).
+    pub fn chopped(&self, p: Prec) -> Mat {
+        if p == Prec::Fp64 {
+            return self.clone();
+        }
+        let mut m = self.clone();
+        crate::chop::chop_slice(&mut m.data, p);
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.n_cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.n_cols + j]
+    }
+}
+
+/// f64 dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// ‖v‖∞.
+pub fn norm_inf_vec(v: &[f64]) -> f64 {
+    v.iter().map(|x| x.abs()).fold(0.0, f64::max)
+}
+
+/// ‖v‖₂ (f64 accumulate).
+pub fn norm2(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// ‖v‖₁.
+pub fn norm1_vec(v: &[f64]) -> f64 {
+    v.iter().map(|x| x.abs()).sum()
+}
+
+/// Chopped matvec matching the Pallas kernel semantics: operands already
+/// in precision `p` (pre-chopped), f64 accumulation, result chopped.
+pub fn chopped_matvec_prechopped(a: &Mat, x: &[f64], p: Prec) -> Vec<f64> {
+    let mut y = a.matvec(x);
+    crate::chop::chop_slice(&mut y, p);
+    y
+}
+
+/// r = chop(chop(b) − chop(A)·chop(x)) in precision `p` — the residual
+/// step of Alg. 2 (mirror of the `residual` artifact).
+pub fn chopped_residual(a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Vec<f64> {
+    if p == Prec::Fp64 {
+        let ax = a.matvec(x);
+        return b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect();
+    }
+    let ac = a.chopped(p);
+    let mut xc = x.to_vec();
+    crate::chop::chop_slice(&mut xc, p);
+    let ax = chopped_matvec_prechopped(&ac, &xc, p);
+    b.iter()
+        .zip(ax)
+        .map(|(bi, axi)| chop_p(chop_p(*bi, p) - axi, p))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_rows() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn swap_rows_works() {
+        let mut m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        m.swap_rows(0, 2);
+        assert_eq!(m.row(0), &[5.0, 6.0]);
+        assert_eq!(m.row(2), &[1.0, 2.0]);
+        m.swap_rows(1, 1);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_rows(&[&[1.0, -2.0], &[-3.0, 4.0]]);
+        assert_eq!(m.norm_inf(), 7.0);
+        assert_eq!(m.norm_1(), 6.0);
+        assert!((m.norm_fro() - 30f64.sqrt()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn matvec_matmul_transpose_consistent() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let x = vec![1.0, -1.0, 2.0];
+        assert_eq!(a.matvec(&x), vec![5.0, 11.0]);
+        let at = a.transpose();
+        assert_eq!(at.matvec(&[1.0, 1.0]), a.matvec_t(&[1.0, 1.0]));
+        let b = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        let a = Mat::from_rows(&[&[1.5, 2.5], &[3.5, -4.5]]);
+        assert_eq!(Mat::eye(2).matmul(&a), a);
+        assert_eq!(a.matmul(&Mat::eye(2)), a);
+    }
+
+    #[test]
+    fn diag_dominance_sane() {
+        let m = Mat::from_rows(&[&[10.0, 1.0], &[2.0, 10.0]]);
+        assert!((m.diag_dominance() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chopped_residual_fp64_is_exact_residual() {
+        let a = Mat::from_rows(&[&[2.0, 0.0], &[0.0, 2.0]]);
+        let r = chopped_residual(&a, &[1.0, 1.0], &[3.0, 3.0], Prec::Fp64);
+        assert_eq!(r, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn chopped_residual_quantizes() {
+        let a = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let b = vec![1.0 + 2f64.powi(-9), 2.0];
+        let r = chopped_residual(&a, &[1.0, 2.0], &b, Prec::Bf16);
+        // b chops to [1.0, 2.0] in bf16, so residual is exactly 0
+        assert_eq!(r, vec![0.0, 0.0]);
+    }
+}

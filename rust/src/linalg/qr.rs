@@ -1,0 +1,165 @@
+//! Householder QR — used by the randsvd generator (§5.2) to produce the
+//! random orthogonal factors U, V (QR of a standard-normal matrix, with
+//! the sign convention R_ii > 0 so Q is Haar-distributed).
+
+use crate::linalg::Mat;
+
+/// Compact QR: returns (Q, R) with Q n×n orthogonal (explicitly formed)
+/// and R n×n upper triangular, for a square input.
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    assert_eq!(a.n_rows, a.n_cols);
+    let n = a.n_rows;
+    let mut r = a.clone();
+    // Accumulate Q by applying the Householder reflectors to I.
+    let mut q = Mat::eye(n);
+    let mut v = vec![0.0; n];
+
+    for k in 0..n {
+        // Householder vector for column k below (and including) row k.
+        let mut norm2 = 0.0;
+        for i in k..n {
+            norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0.0;
+        for i in k..n {
+            v[i] = r[(i, k)];
+            if i == k {
+                v[i] -= alpha;
+            }
+            vnorm2 += v[i] * v[i];
+        }
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        // R <- (I - beta v vᵀ) R
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..n {
+                s += v[i] * r[(i, j)];
+            }
+            let s = beta * s;
+            for i in k..n {
+                r[(i, j)] -= s * v[i];
+            }
+        }
+        // Q <- Q (I - beta v vᵀ)  (accumulate on the right)
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in k..n {
+                s += q[(i, j)] * v[j];
+            }
+            let s = beta * s;
+            for j in k..n {
+                q[(i, j)] -= s * v[j];
+            }
+        }
+    }
+    // Zero the strictly-lower part of R (numerically tiny residue).
+    for i in 0..n {
+        for j in 0..i {
+            r[(i, j)] = 0.0;
+        }
+    }
+    (q, r)
+}
+
+/// Haar-sign fix: flip column j of Q (and row j of R) so R_jj > 0.
+/// QR of a Gaussian matrix with this convention samples Haar measure.
+pub fn qr_haar(a: &Mat) -> Mat {
+    let (mut q, r) = qr(a);
+    let n = q.n_rows;
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gauss_mat(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.gauss();
+        }
+        a
+    }
+
+    #[test]
+    fn qr_reconstructs_a() {
+        for seed in 0..3 {
+            let a = gauss_mat(25, seed);
+            let (q, r) = qr(&a);
+            let rec = q.matmul(&r);
+            for i in 0..25 {
+                for j in 0..25 {
+                    assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-11);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let a = gauss_mat(30, 5);
+        let (q, _) = qr(&a);
+        let qtq = q.transpose().matmul(&q);
+        for i in 0..30 {
+            for j in 0..30 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = gauss_mat(12, 6);
+        let (_, r) = qr(&a);
+        for i in 0..12 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn haar_q_is_orthogonal_and_deterministic() {
+        let q1 = qr_haar(&gauss_mat(16, 7));
+        let q2 = qr_haar(&gauss_mat(16, 7));
+        assert_eq!(q1, q2);
+        let qtq = q1.transpose().matmul(&q1);
+        for i in 0..16 {
+            assert!((qtq[(i, i)] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_does_not_panic() {
+        let mut a = gauss_mat(10, 8);
+        // Make column 3 zero.
+        for i in 0..10 {
+            a[(i, 3)] = 0.0;
+        }
+        let (q, r) = qr(&a);
+        let rec = q.matmul(&r);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-11);
+            }
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! `precision-autotune` — Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train     train a bandit policy and save it (JSON)
+//!   infer     load a policy and pick precision configs for fresh systems
+//!   repro     regenerate a paper table/figure (table2..6, fig2..4,
+//!             figs5_12, actions, all)
+//!   selftest  quick end-to-end sanity run (native + PJRT if artifacts)
+//!   help      this text
+//!
+//! Common options: --preset paper|small|tiny, --config file.toml,
+//! --tau, --weights W1|W2, --episodes, --seed, --set k=v,...,
+//! --no-penalty, --out <dir|file>, --backend native|pjrt, --quiet.
+
+use anyhow::{anyhow, bail, Result};
+
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::{SolveCache, TrainedPolicy, Trainer};
+use precision_autotune::coordinator::eval::{evaluate, summarize};
+use precision_autotune::coordinator::repro::ReproContext;
+use precision_autotune::gen::{dense_dataset, sparse_dataset};
+use precision_autotune::runtime::PjrtBackend;
+use precision_autotune::solver::SolverBackend;
+use precision_autotune::util::cli::Args;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::tables::{fix2, pct, sci2};
+
+const HELP: &str = "\
+precision-autotune — contextual-bandit precision autotuning for GMRES-IR
+(reproduction of Carson & Chen 2026; see DESIGN.md)
+
+USAGE:
+  precision-autotune <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  train       train W-weighted policy on a dataset; saves policy JSON
+                --dataset dense|sparse   (default dense)
+                --out results/policy.json
+  infer       greedy precision selection on freshly generated systems
+                --policy results/policy.json [--count 5]
+  repro       regenerate paper artifacts:
+                table2 table3 table4 table5 table6 fig2 fig3 fig4
+                figs5_12 actions all     [--out results/]
+  selftest    end-to-end sanity run (native backend; PJRT if artifacts/)
+  help        print this text
+
+COMMON OPTIONS:
+  --preset paper|small|tiny   experiment scale (default paper)
+  --config <file>             TOML-subset config file
+  --set k=v[,k=v...]          override any config key
+  --tau 1e-6|1e-8             convergence tolerance
+  --weights W1|W2             reward weights
+  --episodes N  --seed N      training length / determinism
+  --no-penalty                ablate f_penalty (§5.4)
+  --backend native|pjrt       solver backend (default native)
+  --artifacts-dir <dir>       AOT artifacts (default artifacts/)
+  --quiet                     suppress progress logs
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn make_backend(kind: &str, cfg: &Config) -> Result<Box<dyn SolverBackend>> {
+    match kind {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "pjrt" => Ok(Box::new(PjrtBackend::open(&cfg.artifacts_dir)?)),
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let quiet = args.flag("quiet");
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("train") => {
+            let cfg = Config::from_args(&args)?;
+            let dataset = args.get("dataset").unwrap_or("dense");
+            let out = args.get("out").unwrap_or("results/policy.json");
+            let problems = match dataset {
+                "dense" => dense_dataset(&cfg, cfg.n_train, 0),
+                "sparse" => sparse_dataset(&cfg, cfg.n_train, 0),
+                other => bail!("unknown dataset {other:?}"),
+            };
+            if !quiet {
+                eprintln!(
+                    "[train] {} systems (n {}-{}), {} episodes, weights w1={} w2={}, tau={:e}",
+                    problems.len(),
+                    cfg.size_min,
+                    cfg.size_max,
+                    cfg.episodes,
+                    cfg.weights.w1,
+                    cfg.weights.w2,
+                    cfg.tau
+                );
+            }
+            let mut backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
+            let mut cache = SolveCache::new();
+            let (policy, trace) =
+                Trainer::new(&cfg, &mut cache).train(backend.as_mut(), &problems, quiet)?;
+            policy.save(out)?;
+            println!(
+                "trained: {} episodes, {} unique solves, final mean reward {:.3}; saved {}",
+                cfg.episodes,
+                cache.unique_solves(),
+                trace.mean_reward.last().copied().unwrap_or(f64::NAN),
+                out
+            );
+            Ok(())
+        }
+        Some("infer") => {
+            let cfg = Config::from_args(&args)?;
+            let path = args
+                .get("policy")
+                .ok_or_else(|| anyhow!("--policy <file> required"))?;
+            let count = args.get_usize("count")?.unwrap_or(5);
+            let policy = TrainedPolicy::load(path)?;
+            let problems = dense_dataset(&cfg, count, 0xFEED);
+            let mut backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
+            println!("| id | n | kappa_est | action (u_f,u,u_g,u_r) | ferr | nbe | outer | gmres |");
+            println!("|----|---|-----------|------------------------|------|-----|-------|-------|");
+            let records = evaluate(backend.as_mut(), &problems, Some(&policy), &cfg)?;
+            for r in &records {
+                println!(
+                    "| {} | {} | {} | {} | {} | {} | {} | {} |",
+                    r.id,
+                    r.n,
+                    sci2(r.kappa),
+                    r.action,
+                    sci2(r.ferr),
+                    sci2(r.nbe),
+                    r.outer_iters,
+                    r.gmres_iters
+                );
+            }
+            let s = summarize(&records, None, cfg.tau_base, true);
+            println!(
+                "\nsuccess rate xi = {}  avg ferr = {}  avg GMRES iters = {}",
+                pct(s.xi),
+                sci2(s.avg_ferr),
+                fix2(s.avg_gmres)
+            );
+            Ok(())
+        }
+        Some("repro") => {
+            let cfg = Config::from_args(&args)?;
+            let out = args.get("out").unwrap_or("results").to_string();
+            let what = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let mut ctx = ReproContext::new(cfg, &out, quiet);
+            let render = |name: &str, ctx: &mut ReproContext| -> Result<String> {
+                Ok(match name {
+                    "table2" => ctx.table2()?,
+                    "table3" => ctx.table3()?,
+                    "table4" => ctx.table4()?,
+                    "table5" => ctx.table5()?,
+                    "table6" => ctx.table6()?,
+                    "fig2" => ctx.fig2()?,
+                    "fig3" => ctx.fig3()?,
+                    "fig4" => ctx.fig4()?,
+                    "figs5_12" => ctx.figs5_12()?,
+                    "actions" => ctx.actions(),
+                    other => bail!("unknown repro target {other:?}"),
+                })
+            };
+            if what == "all" {
+                for name in [
+                    "actions", "table2", "fig2", "fig3", "table3", "table4", "table5",
+                    "figs5_12", "table6", "fig4",
+                ] {
+                    println!("{}", render(name, &mut ctx)?);
+                }
+            } else {
+                println!("{}", render(what, &mut ctx)?);
+            }
+            eprintln!("[repro] CSVs written under {out}/");
+            Ok(())
+        }
+        Some("explain") => {
+            // Inspection tool: enumerate the reduced action space on one
+            // generated system and print outcome + reward per action
+            // under both weight settings — the raw signal the bandit
+            // learns from.
+            use precision_autotune::bandit::action::ActionSpace;
+            use precision_autotune::bandit::reward::{reward, RewardInputs};
+            use precision_autotune::gen::{finish_problem, randsvd_mode2};
+            use precision_autotune::solver::ir::gmres_ir;
+            use precision_autotune::util::config::Weights;
+            use precision_autotune::util::rng::Rng;
+
+            let mut cfg = Config::from_args(&args)?;
+            let kappa = args.get_f64("kappa")?.unwrap_or(1e2);
+            let n = args.get_usize("n")?.unwrap_or(64);
+            let mut rng = Rng::new(cfg.seed);
+            let a = randsvd_mode2(n, kappa, &mut rng);
+            let p = finish_problem(0, a, kappa, 1.0, &mut rng);
+            println!(
+                "system: n={n} target kappa={kappa:e} kappa_est={} norm_inf={:.3} tau={:e} k_top={}",
+                sci2(p.kappa_est),
+                p.norm_inf,
+                cfg.tau,
+                cfg.k_top
+            );
+            let space = ActionSpace::reduced_top_k(cfg.k_top);
+            let mut backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
+            println!(
+                "{:<28} {:>10} {:>10} {:>6} {:>6} {:>9} {:>9}",
+                "action", "ferr", "nbe", "outer", "gmres", "R(W1)", "R(W2)"
+            );
+            for act in &space.actions {
+                let out = gmres_ir(backend.as_mut(), &p, act, &cfg)?;
+                let inp = RewardInputs {
+                    ferr: out.ferr,
+                    nbe: out.nbe,
+                    gmres_iters: out.gmres_iters,
+                    kappa: p.kappa_est,
+                    failed: out.failed,
+                };
+                cfg.weights = Weights::W1;
+                let r1 = reward(&cfg, act, &inp);
+                cfg.weights = Weights::W2;
+                let r2 = reward(&cfg, act, &inp);
+                println!(
+                    "{:<28} {:>10} {:>10} {:>6} {:>6} {:>9.3} {:>9.3}",
+                    act.to_string(),
+                    sci2(out.ferr),
+                    sci2(out.nbe),
+                    out.outer_iters,
+                    out.gmres_iters,
+                    r1,
+                    r2
+                );
+            }
+            Ok(())
+        }
+        Some("selftest") => {
+            let mut cfg = Config::tiny();
+            cfg.size_min = 24;
+            cfg.size_max = 48;
+            cfg.episodes = 15;
+            cfg.n_train = 8;
+            let problems = dense_dataset(&cfg, 8, 0);
+            let mut cache = SolveCache::new();
+            let mut native = NativeBackend::new();
+            let (policy, _) = Trainer::new(&cfg, &mut cache).train(&mut native, &problems, true)?;
+            let test = dense_dataset(&cfg, 4, 1);
+            let recs = evaluate(&mut native, &test, Some(&policy), &cfg)?;
+            println!("native backend: {} test solves OK", recs.len());
+            if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
+                let mut pjrt = PjrtBackend::open(&cfg.artifacts_dir)?;
+                let recs2 = evaluate(&mut pjrt, &test[..2], Some(&policy), &cfg)?;
+                println!(
+                    "pjrt backend:   {} test solves OK ({} artifacts compiled)",
+                    recs2.len(),
+                    pjrt.rt.artifacts_compiled()
+                );
+            } else {
+                println!("pjrt backend:   skipped (run `make artifacts`)");
+            }
+            println!("selftest OK");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}; see `precision-autotune help`"),
+    }
+}

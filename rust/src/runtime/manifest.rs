@@ -1,0 +1,151 @@
+//! `artifacts/manifest.json` reader: the contract between `aot.py` and
+//! the Rust runtime (artifact names, I/O signatures, buckets, formats).
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Value};
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f64" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub op: String,
+    pub fmt: String,
+    pub n: usize,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub buckets: Vec<usize>,
+    pub formats: Vec<String>,
+    pub gmres_max_m: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn io_specs(v: &Value) -> Result<Vec<IoSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Manifest::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Manifest> {
+        let v = parse(text)?;
+        let buckets = v
+            .get("buckets")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<_>>()?;
+        let formats = v
+            .get("formats")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let gmres_max_m = v.get("gmres_max_m")?.as_usize()?;
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a.get("name")?.as_str()?.to_string(),
+                    op: a.get("op")?.as_str()?.to_string(),
+                    fmt: a.get("fmt")?.as_str()?.to_string(),
+                    n: a.get("n")?.as_usize()?,
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: io_specs(a.get("inputs")?)?,
+                    outputs: io_specs(a.get("outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { buckets, formats, gmres_max_m, artifacts })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Completeness check: every (op, fmt, bucket) combination present.
+    pub fn is_complete(&self) -> bool {
+        for op in ["lu_factor", "lu_solve", "residual", "gmres"] {
+            for f in &self.formats {
+                for &b in &self.buckets {
+                    if self.by_name(&format!("{op}_{f}_{b}")).is_none() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1, "gmres_max_m": 50,
+ "buckets": [64, 128], "formats": ["bf16", "fp64"],
+ "artifacts": [
+  {"name": "lu_factor_bf16_64", "op": "lu_factor", "fmt": "bf16", "n": 64,
+   "file": "lu_factor_bf16_64.hlo.txt",
+   "inputs": [{"name": "a", "shape": [64, 64], "dtype": "f64"}],
+   "outputs": [{"name": "lu", "shape": [64, 64], "dtype": "f64"},
+               {"name": "piv", "shape": [64], "dtype": "i32"},
+               {"name": "ok", "shape": [], "dtype": "i32"}],
+   "sha256": "abc"}
+ ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.buckets, vec![64, 128]);
+        assert_eq!(m.formats, vec!["bf16", "fp64"]);
+        assert_eq!(m.gmres_max_m, 50);
+        let a = m.by_name("lu_factor_bf16_64").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![64, 64]);
+        assert_eq!(a.outputs[1].dtype, "i32");
+        assert_eq!(a.outputs[2].shape.len(), 0);
+    }
+
+    #[test]
+    fn incomplete_detected() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert!(!m.is_complete()); // only 1 of 16 combos present
+    }
+
+    #[test]
+    fn missing_name_is_none() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert!(m.by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,171 @@
+//! Evaluation metrics: forward/backward error (eq. 17), the ε_max success
+//! criterion with condition-scaled thresholds (eq. 28–30), and summary
+//! aggregation used by every table.
+
+use crate::linalg::{norm_inf_vec, Mat};
+
+/// Normwise relative forward error (eq. 17).
+pub fn ferr(x_solve: &[f64], x_true: &[f64]) -> f64 {
+    let denom = norm_inf_vec(x_true);
+    if denom == 0.0 {
+        return f64::NAN;
+    }
+    let num = x_solve
+        .iter()
+        .zip(x_true)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    num / denom
+}
+
+/// Normwise relative backward error (eq. 17).
+pub fn nbe(a: &Mat, x_solve: &[f64], b: &[f64]) -> f64 {
+    let ax = a.matvec(x_solve);
+    let rnorm = ax
+        .iter()
+        .zip(b)
+        .map(|(axi, bi)| (bi - axi).abs())
+        .fold(0.0, f64::max);
+    let denom = a.norm_inf() * norm_inf_vec(x_solve) + norm_inf_vec(b);
+    if denom == 0.0 {
+        return f64::NAN;
+    }
+    rnorm / denom
+}
+
+/// ε_max(P, a) = max(ferr, nbe) (§5.1).
+pub fn eps_max(ferr: f64, nbe: f64) -> f64 {
+    ferr.max(nbe)
+}
+
+/// Success threshold for a condition range (eq. 28):
+/// τ_j = τ_base · median(κ over the range's systems).
+pub fn success_threshold(tau_base: f64, kappas_in_range: &[f64]) -> f64 {
+    tau_base * median(kappas_in_range)
+}
+
+/// Success rate ξ_j (eq. 30) over (ε_max, κ) pairs of one range.
+pub fn success_rate(eps_maxes: &[f64], kappas: &[f64], tau_base: f64) -> f64 {
+    assert_eq!(eps_maxes.len(), kappas.len());
+    if eps_maxes.is_empty() {
+        return f64::NAN;
+    }
+    let thr = success_threshold(tau_base, kappas);
+    let ok = eps_maxes.iter().filter(|&&e| e < thr).count();
+    ok as f64 / eps_maxes.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// The paper's three condition ranges (§5.2): low 10⁰–10³, medium
+/// 10³–10⁶, high 10⁶–10⁹ (we put κ ≥ 10⁹ into "high" as well: the sparse
+/// test set exceeds the nominal bound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CondRange {
+    Low,
+    Medium,
+    High,
+}
+
+impl CondRange {
+    pub const ALL: [CondRange; 3] = [CondRange::Low, CondRange::Medium, CondRange::High];
+
+    pub fn of(kappa: f64) -> CondRange {
+        if kappa < 1e3 {
+            CondRange::Low
+        } else if kappa < 1e6 {
+            CondRange::Medium
+        } else {
+            CondRange::High
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CondRange::Low => "Low (1e0-1e3)",
+            CondRange::Medium => "Medium (1e3-1e6)",
+            CondRange::High => "High (1e6-1e9)",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ferr_basics() {
+        assert_eq!(ferr(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((ferr(&[1.1, 2.0], &[1.0, 2.0]) - 0.05).abs() < 1e-15);
+        assert!(ferr(&[1.0], &[0.0]).is_nan());
+    }
+
+    #[test]
+    fn nbe_zero_for_exact_solution() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = vec![1.0, -1.0];
+        let b = a.matvec(&x);
+        assert_eq!(nbe(&a, &x, &b), 0.0);
+        assert!(nbe(&a, &[1.0, 0.0], &b) > 0.0);
+    }
+
+    #[test]
+    fn nbe_is_scale_invariant() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = vec![0.9, -1.1];
+        let b = a.matvec(&[1.0, -1.0]);
+        let e1 = nbe(&a, &x, &b);
+        // scale the whole system by 1000
+        let mut a2 = a.clone();
+        for v in a2.data.iter_mut() {
+            *v *= 1000.0;
+        }
+        let b2: Vec<f64> = b.iter().map(|v| v * 1000.0).collect();
+        let e2 = nbe(&a2, &x, &b2);
+        assert!((e1 - e2).abs() < 1e-12 * e1.max(e2));
+    }
+
+    #[test]
+    fn median_and_mean() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&[]).is_nan());
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn success_rate_uses_condition_scaled_threshold() {
+        // threshold = tau_base * median(kappa) = 1e-8 * 1e4 = 1e-4
+        let kappas = vec![1e3, 1e4, 1e5];
+        let eps = vec![1e-6, 1e-5, 1e-3];
+        let xi = success_rate(&eps, &kappas, 1e-8);
+        assert!((xi - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cond_ranges_partition() {
+        assert_eq!(CondRange::of(10.0), CondRange::Low);
+        assert_eq!(CondRange::of(1e3), CondRange::Medium);
+        assert_eq!(CondRange::of(1e6), CondRange::High);
+        assert_eq!(CondRange::of(1e10), CondRange::High);
+    }
+}

@@ -1,0 +1,65 @@
+//! The GMRES-IR solver layer: the backend abstraction over the four
+//! precision-controlled computational steps, the Alg.-2 driver with the
+//! paper's stopping criteria (eq. 14–16), and the evaluation metrics
+//! (eq. 17, 28–30).
+
+pub mod ir;
+pub mod metrics;
+
+use anyhow::Result;
+
+use crate::chop::Prec;
+use crate::linalg::Mat;
+
+/// Opaque LU factor handle: backends return host-resident packed factors
+/// (the PJRT backend keeps them as f64 buffers it re-uploads per call —
+/// sizes here are ≤ 512², marshalling is trivial next to the solves).
+#[derive(Clone, Debug)]
+pub struct LuHandle {
+    pub lu: Mat,
+    pub piv: Vec<i32>,
+    pub prec: Prec,
+}
+
+/// Result of one inner GMRES solve.
+#[derive(Clone, Debug)]
+pub struct GmresOutcome {
+    pub z: Vec<f64>,
+    pub iters: usize,
+    pub relres: f64,
+    pub ok: bool,
+}
+
+/// The four precision-controlled steps of Alg. 2, each in an emulated
+/// precision. Implementations: [`crate::backend_native::NativeBackend`]
+/// (pure Rust) and [`crate::runtime::PjrtBackend`] (AOT artifacts).
+pub trait SolverBackend {
+    /// Step 1 (u_f): M = LU ≈ A. `Err` = factorization breakdown
+    /// (singular / overflow in the emulated format) — a normal outcome
+    /// that the reward maps to `fail_reward`.
+    fn lu_factor(&mut self, a: &Mat, p: Prec) -> Result<LuHandle>;
+
+    /// Steps 1b/within-GMRES (u_f / u_g): x = U⁻¹L⁻¹P b.
+    fn lu_solve(&mut self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>>;
+
+    /// Step 2 (u_r): r = b − A x.
+    fn residual(&mut self, a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>>;
+
+    /// Step 3 (u_g): solve M⁻¹A z = M⁻¹r by preconditioned GMRES.
+    fn gmres(
+        &mut self,
+        a: &Mat,
+        f: &LuHandle,
+        r: &[f64],
+        tol: f64,
+        max_m: usize,
+        p: Prec,
+    ) -> Result<GmresOutcome>;
+
+    /// Human-readable backend name (logs / EXPERIMENTS.md provenance).
+    fn name(&self) -> &'static str;
+
+    /// Invalidate any per-problem cached state (e.g. the chopped copy of
+    /// A a native backend keeps between steps of the same solve).
+    fn reset(&mut self) {}
+}

@@ -1,0 +1,224 @@
+//! CSR sparse matrices — substrate for the §5.3 sparse experiments.
+//!
+//! The paper's sparse systems (n ≤ 500, λ_s = 0.01, A = A₀A₀ᵀ + βI) are
+//! factorized densely (as in the paper's own Python simulation), but the
+//! CSR form carries the structural features (sparsity, bandwidth,
+//! diagonal dominance) and provides a fast matvec used by tests and the
+//! feature extractor.
+
+use crate::linalg::Mat;
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicate entries sum.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Csr {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n_rows];
+        for &(i, j, v) in triplets {
+            assert!(i < n_rows && j < n_cols, "triplet out of bounds");
+            per_row[i].push((j, v));
+        }
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for row in per_row.iter_mut() {
+            row.sort_by_key(|&(j, _)| j);
+            let mut k = 0;
+            while k < row.len() {
+                let j = row[k].0;
+                let mut v = 0.0;
+                while k < row.len() && row[k].0 == j {
+                    v += row[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    col_idx.push(j);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { n_rows, n_cols, row_ptr, col_idx, values }
+    }
+
+    pub fn from_dense(a: &Mat) -> Csr {
+        let mut triplets = Vec::new();
+        for i in 0..a.n_rows {
+            for j in 0..a.n_cols {
+                if a[(i, j)] != 0.0 {
+                    triplets.push((i, j, a[(i, j)]));
+                }
+            }
+        }
+        Csr::from_triplets(a.n_rows, a.n_cols, &triplets)
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                m[(i, self.col_idx[k])] = self.values[k];
+            }
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of structurally non-zero entries (paper Table 3's
+    /// "Sparsity" column reports this as a percentage).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_rows * self.n_cols) as f64
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        for i in 0..self.n_rows {
+            let mut acc = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.values[k] * x[self.col_idx[k]];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// ‖A‖∞.
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.n_rows)
+            .map(|i| {
+                self.values[self.row_ptr[i]..self.row_ptr[i + 1]]
+                    .iter()
+                    .map(|v| v.abs())
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// C = A·Aᵀ, returned dense (the §5.3 generator's A₀A₀ᵀ step; result
+    /// is structurally fairly dense, so dense output is the right call).
+    pub fn aat_dense(&self) -> Mat {
+        let mut c = Mat::zeros(self.n_rows, self.n_rows);
+        // (A Aᵀ)_{ij} = <row_i, row_j>; exploit sparsity of row_i.
+        for i in 0..self.n_rows {
+            let (si, ei) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for j in i..self.n_rows {
+                let (sj, ej) = (self.row_ptr[j], self.row_ptr[j + 1]);
+                let mut acc = 0.0;
+                let (mut p, mut q) = (si, sj);
+                while p < ei && q < ej {
+                    match self.col_idx[p].cmp(&self.col_idx[q]) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            acc += self.values[p] * self.values[q];
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                c[(i, j)] = acc;
+                c[(j, i)] = acc;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triplets_roundtrip_dense() {
+        let a = Mat::from_rows(&[&[1.0, 0.0, 2.0], &[0.0, 0.0, 0.0], &[3.0, 4.0, 0.0]]);
+        let s = Csr::from_dense(&a);
+        assert_eq!(s.nnz(), 4);
+        assert_eq!(s.to_dense(), a);
+    }
+
+    #[test]
+    fn duplicates_sum_and_zeros_drop() {
+        let s = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0), (1, 0, 0.0)]);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense()[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        use crate::util::proptest::{check, gen};
+        check("csr_matvec", 31, 30, |rng| {
+            let n = gen::size(rng, 1, 40);
+            let m = gen::size(rng, 1, 40);
+            let mut a = Mat::zeros(m, n);
+            for v in a.data.iter_mut() {
+                if rng.uniform() < 0.15 {
+                    *v = rng.gauss();
+                }
+            }
+            let x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let s = Csr::from_dense(&a);
+            let y1 = s.matvec(&x);
+            let y2 = a.matvec(&x);
+            for (u, v) in y1.iter().zip(&y2) {
+                crate::prop_assert!((u - v).abs() < 1e-12, "{u} vs {v}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn aat_matches_dense_computation() {
+        use crate::util::proptest::{check, gen};
+        check("csr_aat", 33, 15, |rng| {
+            let n = gen::size(rng, 1, 25);
+            let mut a = Mat::zeros(n, n);
+            for v in a.data.iter_mut() {
+                if rng.uniform() < 0.2 {
+                    *v = rng.gauss();
+                }
+            }
+            let s = Csr::from_dense(&a);
+            let got = s.aat_dense();
+            let want = a.matmul(&a.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    crate::prop_assert!(
+                        (got[(i, j)] - want[(i, j)]).abs() < 1e-11,
+                        "({i},{j})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn norm_inf_matches_dense() {
+        let a = Mat::from_rows(&[&[1.0, -2.0], &[-3.0, 4.0]]);
+        assert_eq!(Csr::from_dense(&a).norm_inf(), a.norm_inf());
+    }
+
+    #[test]
+    fn density_fraction() {
+        let s = Csr::from_triplets(10, 10, &[(0, 0, 1.0), (5, 5, 1.0)]);
+        assert!((s.density() - 0.02).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,100 @@
+//! Minimal benchmarking kit (criterion is unavailable offline —
+//! DESIGN.md §6): warmup + repeated timing with median/min/mean stats,
+//! used by every `rust/benches/*.rs` custom-harness bench.
+
+use std::time::Instant;
+
+/// Timing result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   median {:>12}   min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; prints and
+/// returns the stats. `f` should return something to defeat DCE — pass
+/// its result through `std::hint::black_box`.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        median_ns: samples[iters / 2],
+        min_ns: samples[0],
+    };
+    stats.print();
+    stats
+}
+
+/// Time a single long-running call (suite-scale benches).
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{:<44} {:>44}", name, format!("{secs:.2} s"));
+    (out, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-ish", 2, 10, || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.min_ns >= 0.0 && s.mean_ns >= s.min_ns);
+        assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("us"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §6).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`
+//! Flags and options may appear in any order after the subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|e| anyhow!("--{name} expects a number, got {v:?}: {e}"))
+            })
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|e| anyhow!("--{name} expects an integer, got {v:?}: {e}"))
+            })
+            .transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Args {
+        Args::parse(list.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args(&["train", "--episodes", "100", "--out", "q.json", "--quiet"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("episodes"), Some("100"));
+        assert_eq!(a.get_usize("episodes").unwrap(), Some(100));
+        assert_eq!(a.get("out"), Some("q.json"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let a = args(&["repro", "table2", "--tau=1e-8"]);
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.get_f64("tau").unwrap(), Some(1e-8));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args(&["x", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args(&["x", "--tau", "abc"]);
+        assert!(a.get_f64("tau").is_err());
+    }
+
+    #[test]
+    fn negative_number_as_option_value() {
+        // "-1.5" does not start with "--", so it is consumed as a value.
+        let a = args(&["x", "--shift", "-1.5"]);
+        assert_eq!(a.get_f64("shift").unwrap(), Some(-1.5));
+    }
+}

@@ -1,0 +1,349 @@
+//! Experiment configuration: every hyperparameter of the paper's §5 setup
+//! in one struct, with named presets and a TOML-subset file loader
+//! (`key = value` lines, `[section]` headers flatten to `section.key`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::cli::Args;
+
+/// Reward weight settings of §5: W1 (conservative) and W2 (aggressive).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Weights {
+    pub w1: f64, // accuracy weight
+    pub w2: f64, // precision (cost) weight
+    pub w3: f64, // penalty weight (paper §4.2: "one can also enforce a weight w3
+                 // on this term to avoid hiding the effect of other terms";
+                 // calibrated to 0.5 — EXPERIMENTS.md §Calibration)
+}
+
+impl Weights {
+    pub const W1: Weights = Weights { w1: 1.0, w2: 0.1, w3: 0.25 };
+    pub const W2: Weights = Weights { w1: 1.0, w2: 1.0, w3: 0.25 };
+
+    pub fn by_name(name: &str) -> Result<Weights> {
+        match name {
+            "W1" | "w1" => Ok(Weights::W1),
+            "W2" | "w2" => Ok(Weights::W2),
+            _ => bail!("unknown weight setting {name:?} (use W1 or W2)"),
+        }
+    }
+}
+
+/// Full experiment configuration (defaults = paper §5 settings).
+#[derive(Clone, Debug)]
+pub struct Config {
+    // ---- dataset (§5.1) ----
+    pub n_train: usize,
+    pub n_test: usize,
+    pub size_min: usize,
+    pub size_max: usize,
+    pub kappa_log10_min: f64,
+    pub kappa_log10_max: f64,
+    pub sparsity: f64,     // λ_s for the sparse generator (§5.3)
+    pub sparse_beta: f64,  // diagonal shift β
+    pub seed: u64,
+
+    // ---- features / discretization (§4.2) ----
+    pub bins_kappa: usize, // n1
+    pub bins_norm: usize,  // n2
+    pub delta_c: f64,
+    pub delta_n: f64,
+
+    // ---- bandit (§3.2) ----
+    pub episodes: usize,     // T
+    pub alpha: f64,          // learning rate (0 => 1/N(s,a) schedule)
+    pub eps_min: f64,        // minimum exploration
+    pub k_top: usize,        // 0 => keep all reduced actions (35)
+    pub weights: Weights,
+
+    // ---- reward (eq. 21–25) ----
+    pub c1: f64,
+    pub theta: f64,        // truncation threshold (paper: 2.5)
+    pub acc_eps: f64,      // ε in eq. 24 (paper: 1e-10)
+    pub penalty_enabled: bool,
+    pub fail_reward: f64,  // reward on solver failure
+
+    // ---- solver (§4.1) ----
+    pub tau: f64,          // convergence tolerance τ (1e-6 / 1e-8)
+    pub stag_ratio: f64,   // legacy/extra guard (eq. 15 now uses tau itself)
+    pub max_outer: usize,  // i_max
+    pub gmres_max_m: usize,
+    pub gmres_tol_factor: f64, // inner tol = factor * tau
+
+    // ---- evaluation (eq. 28–30) ----
+    pub tau_base: f64,
+
+    // ---- runtime ----
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            n_train: 100,
+            n_test: 100,
+            size_min: 100,
+            size_max: 500,
+            kappa_log10_min: 1.0,
+            kappa_log10_max: 9.0,
+            sparsity: 0.01,
+            sparse_beta: 1e-8,
+            seed: 20260710,
+            bins_kappa: 10,
+            bins_norm: 10,
+            delta_c: 1.0,
+            delta_n: 1e-30,
+            episodes: 100,
+            alpha: 0.5,
+            eps_min: 0.05,
+            k_top: 9, // §5: "one-fourth of the valid precision combinations"
+            weights: Weights::W1,
+            c1: 1.0,
+            theta: 2.5,
+            acc_eps: 1e-10,
+            penalty_enabled: true,
+            fail_reward: -10.0,
+            tau: 1e-6,
+            stag_ratio: 0.9,
+            max_outer: 10,
+            gmres_max_m: 50,
+            gmres_tol_factor: 1.0,
+            tau_base: 1e-8,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Paper-scale preset (the default).
+    pub fn paper() -> Config {
+        Config::default()
+    }
+
+    /// Scaled-down preset for quick runs / CI (same structure, ~8x less
+    /// work: fewer/smaller systems, fewer episodes).
+    pub fn small() -> Config {
+        Config {
+            n_train: 30,
+            n_test: 30,
+            size_min: 60,
+            size_max: 200,
+            episodes: 40,
+            ..Config::default()
+        }
+    }
+
+    /// Minimal preset for unit/integration tests.
+    pub fn tiny() -> Config {
+        Config {
+            n_train: 8,
+            n_test: 8,
+            size_min: 24,
+            size_max: 64,
+            episodes: 10,
+            bins_kappa: 4,
+            bins_norm: 4,
+            ..Config::default()
+        }
+    }
+
+    pub fn preset(name: &str) -> Result<Config> {
+        match name {
+            "paper" => Ok(Config::paper()),
+            "small" => Ok(Config::small()),
+            "tiny" => Ok(Config::tiny()),
+            _ => bail!("unknown preset {name:?} (paper|small|tiny)"),
+        }
+    }
+
+    /// Load `key = value` / `[section]` TOML-subset file.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let kv = parse_kv(&text)?;
+        let mut cfg = match kv.get("preset") {
+            Some(p) => Config::preset(trim_quotes(p))?,
+            None => Config::default(),
+        };
+        for (k, v) in &kv {
+            if k != "preset" {
+                cfg.set(k, v)?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides: `--config file.toml`, `--preset small`,
+    /// `--set key=value` (repeatable via comma list) plus first-class
+    /// options (`--tau`, `--episodes`, `--weights`, `--seed`...).
+    pub fn from_args(args: &Args) -> Result<Config> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            Config::from_file(path)?
+        } else if let Some(p) = args.get("preset") {
+            Config::preset(p)?
+        } else {
+            Config::default()
+        };
+        if let Some(list) = args.get("set") {
+            for item in list.split(',') {
+                let (k, v) = item
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("--set expects key=value, got {item:?}"))?;
+                cfg.set(k.trim(), v.trim())?;
+            }
+        }
+        for key in [
+            "tau", "alpha", "eps-min", "episodes", "seed", "weights", "k-top",
+            "n-train", "n-test", "tau-base", "artifacts-dir", "size-min", "size-max",
+        ] {
+            if let Some(v) = args.get(key) {
+                cfg.set(&key.replace('-', "_"), v)?;
+            }
+        }
+        if args.flag("no-penalty") {
+            cfg.penalty_enabled = false;
+        }
+        Ok(cfg)
+    }
+
+    /// Set one field by (snake_case) name.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = trim_quotes(value);
+        macro_rules! num {
+            () => {
+                v.parse().map_err(|e| anyhow!("{key}={v:?}: {e}"))?
+            };
+        }
+        match key {
+            "n_train" => self.n_train = num!(),
+            "n_test" => self.n_test = num!(),
+            "size_min" => self.size_min = num!(),
+            "size_max" => self.size_max = num!(),
+            "kappa_log10_min" => self.kappa_log10_min = num!(),
+            "kappa_log10_max" => self.kappa_log10_max = num!(),
+            "sparsity" => self.sparsity = num!(),
+            "sparse_beta" => self.sparse_beta = num!(),
+            "seed" => self.seed = num!(),
+            "bins_kappa" => self.bins_kappa = num!(),
+            "bins_norm" => self.bins_norm = num!(),
+            "delta_c" => self.delta_c = num!(),
+            "delta_n" => self.delta_n = num!(),
+            "episodes" => self.episodes = num!(),
+            "alpha" => self.alpha = num!(),
+            "eps_min" => self.eps_min = num!(),
+            "k_top" => self.k_top = num!(),
+            "weights" => self.weights = Weights::by_name(v)?,
+            "c1" => self.c1 = num!(),
+            "theta" => self.theta = num!(),
+            "acc_eps" => self.acc_eps = num!(),
+            "penalty_enabled" => self.penalty_enabled = v == "true" || v == "1",
+            "fail_reward" => self.fail_reward = num!(),
+            "tau" => self.tau = num!(),
+            "stag_ratio" => self.stag_ratio = num!(),
+            "max_outer" => self.max_outer = num!(),
+            "gmres_max_m" => self.gmres_max_m = num!(),
+            "gmres_tol_factor" => self.gmres_tol_factor = num!(),
+            "tau_base" => self.tau_base = num!(),
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+}
+
+fn trim_quotes(s: &str) -> &str {
+    s.trim().trim_matches('"').trim_matches('\'')
+}
+
+fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.episodes, 100);
+        assert_eq!(c.n_train, 100);
+        assert_eq!((c.bins_kappa, c.bins_norm), (10, 10));
+        assert_eq!(c.alpha, 0.5);
+        assert_eq!(c.theta, 2.5);
+        assert_eq!(c.size_min, 100);
+        assert_eq!(c.size_max, 500);
+    }
+
+    #[test]
+    fn weight_presets() {
+        assert_eq!(Weights::by_name("W1").unwrap(), Weights { w1: 1.0, w2: 0.1, w3: 0.25 });
+        assert_eq!(Weights::by_name("W2").unwrap(), Weights { w1: 1.0, w2: 1.0, w3: 0.25 });
+        assert!(Weights::by_name("W9").is_err());
+    }
+
+    #[test]
+    fn set_and_reject() {
+        let mut c = Config::default();
+        c.set("tau", "1e-8").unwrap();
+        assert_eq!(c.tau, 1e-8);
+        c.set("weights", "W2").unwrap();
+        assert_eq!(c.weights, Weights::W2);
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("tau", "xyz").is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("pa_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.toml");
+        std::fs::write(
+            &path,
+            "preset = \"small\"\ntau = 1e-8  # stricter\nweights = \"W2\"\n",
+        )
+        .unwrap();
+        let c = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.n_train, 30); // from preset
+        assert_eq!(c.tau, 1e-8);
+        assert_eq!(c.weights, Weights::W2);
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = crate::util::cli::Args::parse(
+            ["train", "--preset", "tiny", "--tau", "1e-8", "--set", "alpha=0.25,theta=3.0", "--no-penalty"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.n_train, 8);
+        assert_eq!(c.tau, 1e-8);
+        assert_eq!(c.alpha, 0.25);
+        assert_eq!(c.theta, 3.0);
+        assert!(!c.penalty_enabled);
+    }
+}

@@ -1,0 +1,442 @@
+//! Minimal JSON reader/writer (serde is unavailable offline — DESIGN.md §6).
+//!
+//! Used for: the AOT `artifacts/manifest.json`, Q-table persistence, and
+//! the cross-language chop golden vectors. Numbers round-trip exactly:
+//! the writer emits the shortest representation that parses back to the
+//! same f64 (Rust's `{:?}` float formatting).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value. Objects preserve no insertion order (BTreeMap) — fine
+/// for our usage and keeps output deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("expected non-negative integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            _ => bail!("expected object, got {self:?}"),
+        }
+    }
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(x) => {
+                if x.is_finite() {
+                    // {:?} prints the shortest string that round-trips.
+                    let _ = write!(out, "{x:?}");
+                } else {
+                    // JSON has no inf/nan; encode as strings the parser
+                    // (ours) maps back — only used by our own files.
+                    let _ = write!(
+                        out,
+                        "\"{}\"",
+                        if x.is_nan() {
+                            "__nan__"
+                        } else if *x > 0.0 {
+                            "__inf__"
+                        } else {
+                            "__-inf__"
+                        }
+                    );
+                }
+            }
+            Value::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Value::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Value::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+pub fn arr(values: Vec<Value>) -> Value {
+    Value::Arr(values)
+}
+pub fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+pub fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+pub fn num_arr(xs: &[f64]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
+}
+
+pub fn parse(text: &str) -> Result<Value> {
+    let mut p = Parser {
+        b: text.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing characters at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!(
+                "expected {:?} at offset {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => {
+                let st = self.string()?;
+                // our inf/nan encoding
+                Ok(match st.as_str() {
+                    "__inf__" => Value::Num(f64::INFINITY),
+                    "__-inf__" => Value::Num(f64::NEG_INFINITY),
+                    "__nan__" => Value::Num(f64::NAN),
+                    _ => Value::Str(st),
+                })
+            }
+            b't' => {
+                self.lit("true")?;
+                Ok(Value::Bool(true))
+            }
+            b'f' => {
+                self.lit("false")?;
+                Ok(Value::Bool(false))
+            }
+            b'n' => {
+                self.lit("null")?;
+                Ok(Value::Null)
+            }
+            b'N' => {
+                // python json.dump emits bare NaN/Infinity by default
+                self.lit("NaN")?;
+                Ok(Value::Num(f64::NAN))
+            }
+            b'I' => {
+                self.lit("Infinity")?;
+                Ok(Value::Num(f64::INFINITY))
+            }
+            b'-' if self.b.get(self.i + 1) == Some(&b'I') => {
+                self.i += 1;
+                self.lit("Infinity")?;
+                Ok(Value::Num(f64::NEG_INFINITY))
+            }
+            _ => self.number(),
+        }
+    }
+    fn lit(&mut self, word: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(m));
+                }
+                c => bail!("expected ',' or '}}' at offset {}, found {:?}", self.i, c as char),
+            }
+        }
+    }
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(v));
+                }
+                c => bail!("expected ',' or ']' at offset {}, found {:?}", self.i, c as char),
+            }
+        }
+    }
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at offset {}", self.i),
+                    }
+                }
+                c => {
+                    // Re-borrow the full UTF-8 char.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let chunk = std::str::from_utf8(&self.b[start..start + len])?;
+                        s.push_str(chunk);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+    }
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Value::Num(txt.parse::<f64>().map_err(|e| {
+            anyhow!("bad number {txt:?} at offset {start}: {e}")
+        })?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basics() {
+        let v = obj(vec![
+            ("a", num(1.5)),
+            ("b", arr(vec![num(1.0), Value::Bool(true), Value::Null])),
+            ("c", s("hi \"there\"\n")),
+        ]);
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn exact_float_roundtrip() {
+        for &x in &[
+            0.1,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            5e-324,
+            1.7976931348623157e308,
+            -2.2250738585072014e-308,
+            123456789.123456789,
+        ] {
+            let text = Value::Num(x).to_string();
+            assert_eq!(parse(&text).unwrap().as_f64().unwrap(), x, "{text}");
+        }
+    }
+
+    #[test]
+    fn inf_nan_roundtrip() {
+        let v = num_arr(&[f64::INFINITY, f64::NEG_INFINITY, f64::NAN]);
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        let xs = back.as_arr().unwrap();
+        assert!(xs[0].as_f64().unwrap().is_infinite());
+        assert!(xs[1].as_f64().unwrap() < 0.0);
+        assert!(xs[2].as_f64().unwrap().is_nan());
+    }
+
+    #[test]
+    fn parses_python_json_dump_output() {
+        let text = r#"{"version": 1, "artifacts": [{"name": "lu", "shape": [64, 64], "ok": true}], "x": NaN, "y": Infinity, "z": -Infinity}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
+        assert!(v.get("x").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(
+            v.get("artifacts").unwrap().as_arr().unwrap()[0]
+                .get("name")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "lu"
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("hello").is_err());
+        assert!(parse("{\"a\": 1} x").is_err());
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let v = s("héllo ☃ \u{1F600}");
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+        assert_eq!(
+            parse(r#""Aé""#).unwrap().as_str().unwrap(),
+            "Aé"
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built in-repo (the build is fully offline; see
+//! DESIGN.md §6 for the crate-substitution table).
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod tables;

@@ -1,0 +1,94 @@
+//! Scoped-thread parallel map (rayon/tokio are unavailable offline —
+//! DESIGN.md §6; on this testbed `nproc = 1`, so the pool degrades to a
+//! sequential loop with zero overhead, but the implementation is a real
+//! work-stealing-free chunked pool that scales on multi-core hosts).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (`PA_THREADS` overrides).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("PA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every index in `0..n`, writing results into a Vec in
+/// order. Work is distributed by an atomic cursor so uneven item costs
+/// (e.g. different matrix sizes) balance automatically.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cursor = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let cursor = &cursor;
+            let out_ptr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic cursor; slots are disjoint; the scope outlives
+                // all writes.
+                unsafe { *out_ptr.0.add(i) = Some(v) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: used only for disjoint index writes inside a thread::scope.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let v = parallel_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let v: Vec<usize> = parallel_map(0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn uneven_workloads_complete() {
+        let v = parallel_map(37, |i| {
+            if i % 5 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            i + 1
+        });
+        assert_eq!(v.iter().sum::<usize>(), (1..=37).sum::<usize>());
+    }
+
+    #[test]
+    fn respects_env_override() {
+        std::env::set_var("PA_THREADS", "3");
+        assert_eq!(num_threads(), 3);
+        std::env::remove_var("PA_THREADS");
+    }
+}

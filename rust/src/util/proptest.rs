@@ -1,0 +1,101 @@
+//! Property-test harness (the proptest crate is unavailable offline —
+//! DESIGN.md §6). Deterministic seeded case generation with failure
+//! reporting that names the reproducing seed; a light-weight stand-in for
+//! proptest's runner covering the invariant-checking style used across
+//! the crate's test suites.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. On failure, panics with the base
+/// seed + case index so the exact case replays.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).fork(case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed on seed={seed} case={case}: {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Generators used by the suites.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// f64 covering many magnitudes plus specials.
+    pub fn any_f64(rng: &mut Rng) -> f64 {
+        match rng.below(20) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f64::INFINITY,
+            3 => f64::NEG_INFINITY,
+            4 => f64::NAN,
+            5 => f64::MIN_POSITIVE,
+            6 => 5e-324,
+            7 => f64::MAX,
+            8 => -f64::MAX,
+            _ => rng.gauss() * (rng.uniform_in(-300.0, 300.0)).exp2(),
+        }
+    }
+
+    /// Finite f64 in a sane magnitude band.
+    pub fn finite_f64(rng: &mut Rng) -> f64 {
+        rng.gauss() * (rng.uniform_in(-30.0, 30.0)).exp2()
+    }
+
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn vec_f64(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| finite_f64(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_properties() {
+        check("tautology", 1, 50, |rng| {
+            let x = gen::finite_f64(rng);
+            crate::prop_assert!(x == x, "finite f64 equals itself: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"must_fail\"")]
+    fn reports_failures_with_seed() {
+        check("must_fail", 2, 50, |rng| {
+            let x = gen::any_f64(rng);
+            crate::prop_assert!(!x.is_nan(), "hit NaN");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generator_covers_specials() {
+        let mut seen_nan = false;
+        let mut seen_inf = false;
+        let mut seen_zero = false;
+        for case in 0..200 {
+            let mut rng = Rng::new(3).fork(case);
+            let x = gen::any_f64(&mut rng);
+            seen_nan |= x.is_nan();
+            seen_inf |= x.is_infinite();
+            seen_zero |= x == 0.0;
+        }
+        assert!(seen_nan && seen_inf && seen_zero);
+    }
+}

@@ -1,0 +1,239 @@
+//! Table / figure emitters: markdown tables in the paper's formatting
+//! (errors to 2 significant digits, `x.yz e-k`), CSV series for figures,
+//! and a small ASCII scatter plot used by the Figure-3 regenerator.
+
+use std::fmt::Write as _;
+
+/// Format a value like the paper's tables: 2 significant digits,
+/// scientific notation ("1.19e-14"). NaN/inf/dashes handled.
+pub fn sci2(x: f64) -> String {
+    if x.is_nan() {
+        return "-".to_string();
+    }
+    if x.is_infinite() {
+        return if x > 0.0 { "inf" } else { "-inf" }.to_string();
+    }
+    if x == 0.0 {
+        return "0.0".to_string();
+    }
+    format!("{:.2e}", x)
+}
+
+/// Fixed-point with 2 decimals (iteration counts etc.).
+pub fn fix2(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Percentage with one decimal ("89.2%").
+pub fn pct(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * x)
+    }
+}
+
+/// Render a markdown table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "\n### {}\n", self.title);
+        }
+        let line = |cells: &[String], width: &[usize], out: &mut String| {
+            let _ = write!(out, "|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, " {:<w$} |", c, w = width[i]);
+            }
+            let _ = writeln!(out);
+        };
+        line(&self.headers, &width, &mut out);
+        let _ = write!(out, "|");
+        for w in &width {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out);
+        for row in &self.rows {
+            line(row, &width, &mut out);
+        }
+        out
+    }
+
+    /// Also emit machine-readable CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Write CSV columns (figure series).
+pub fn write_csv(path: &str, headers: &[&str], columns: &[&[f64]]) -> anyhow::Result<()> {
+    assert_eq!(headers.len(), columns.len());
+    let n = columns.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", headers.join(","));
+    for i in 0..n {
+        let row: Vec<String> = columns
+            .iter()
+            .map(|c| c.get(i).map(|x| format!("{x:?}")).unwrap_or_default())
+            .collect();
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// ASCII log-log scatter: one char per point bucket ('*' RL, 'o' baseline,
+/// '@' overlap). Rough but enough to eyeball Figure-3 shape in a terminal.
+pub fn ascii_scatter(
+    title: &str,
+    xs_a: &[f64],
+    ys_a: &[f64],
+    xs_b: &[f64],
+    ys_b: &[f64],
+    w: usize,
+    h: usize,
+) -> String {
+    let all_x: Vec<f64> = xs_a.iter().chain(xs_b).copied().filter(|v| *v > 0.0).collect();
+    let all_y: Vec<f64> = ys_a.iter().chain(ys_b).copied().filter(|v| *v > 0.0).collect();
+    if all_x.is_empty() || all_y.is_empty() {
+        return format!("{title}: no positive data\n");
+    }
+    let (lx0, lx1) = minmax_log(&all_x);
+    let (ly0, ly1) = minmax_log(&all_y);
+    let mut grid = vec![vec![' '; w]; h];
+    let mut put = |xs: &[f64], ys: &[f64], ch: char| {
+        for (&x, &y) in xs.iter().zip(ys) {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.log10() - lx0) / (lx1 - lx0 + 1e-12) * (w - 1) as f64).round() as usize;
+            let cy = ((y.log10() - ly0) / (ly1 - ly0 + 1e-12) * (h - 1) as f64).round() as usize;
+            let cell = &mut grid[h - 1 - cy.min(h - 1)][cx.min(w - 1)];
+            *cell = if *cell == ' ' || *cell == ch { ch } else { '@' };
+        }
+    };
+    put(xs_a, ys_a, '*');
+    put(xs_b, ys_b, 'o');
+    let mut out = format!("{title}  [x: 1e{lx0:.1}..1e{lx1:.1}, y: 1e{ly0:.1}..1e{ly1:.1}; '*' RL, 'o' FP64, '@' both]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push_str("|\n");
+    }
+    out
+}
+
+fn minmax_log(xs: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        let l = x.log10();
+        lo = lo.min(l);
+        hi = hi.max(l);
+    }
+    if lo == hi {
+        hi = lo + 1.0;
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sci2_matches_paper_style() {
+        assert_eq!(sci2(1.19e-14), "1.19e-14");
+        assert_eq!(sci2(7.90e-17), "7.90e-17");
+        assert_eq!(sci2(0.0), "0.0");
+        assert_eq!(sci2(f64::NAN), "-");
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let md = t.render();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a | b"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn scatter_handles_data() {
+        let s = ascii_scatter("t", &[1e-8, 1e-6], &[1.0, 10.0], &[1e-7], &[2.0], 20, 5);
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn csv_writer_roundtrip() {
+        let p = std::env::temp_dir().join("pa_csv_test.csv");
+        write_csv(p.to_str().unwrap(), &["ep", "r"], &[&[1.0, 2.0], &[0.5, 0.6]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("ep,r\n1.0,0.5\n"));
+    }
+}

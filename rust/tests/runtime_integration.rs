@@ -1,0 +1,207 @@
+//! Integration tests over the full three-layer stack: AOT artifacts
+//! (JAX/Pallas -> HLO text) executed via PJRT from the Rust coordinator,
+//! cross-validated against the native backend.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! the Makefile runs artifacts before `cargo test`).
+
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::action::Action;
+use precision_autotune::chop::{chop, format_by_name, Prec, ALL_FORMATS};
+use precision_autotune::gen::{finish_problem, randsvd_mode2};
+use precision_autotune::linalg::Mat;
+use precision_autotune::runtime::{literal_to_f64s, vec_literal, PjrtBackend, PjrtRuntime};
+use precision_autotune::solver::ir::gmres_ir;
+use precision_autotune::solver::SolverBackend;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::rng::Rng;
+
+const DIR: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{DIR}/manifest.json")).exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let b = a.matvec(&xt);
+    (a, xt, b)
+}
+
+#[test]
+fn chop_artifacts_match_rust_chop_bitwise() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::open(DIR).unwrap();
+    let mut rng = Rng::new(99);
+    let xs: Vec<f64> = (0..4096)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => f64::INFINITY,
+            2 => 5e-324,
+            _ => rng.gauss() * (rng.uniform_in(-300.0, 300.0)).exp2(),
+        })
+        .collect();
+    for fmt in ALL_FORMATS {
+        let name = format!("chop_{}_4096", fmt.name);
+        if rt.manifest.by_name(&name).is_none() {
+            continue;
+        }
+        let outs = rt.run(&name, &[vec_literal(&xs)]).unwrap();
+        let got = literal_to_f64s(&outs[0]).unwrap();
+        for (i, (&g, &x)) in got.iter().zip(&xs).enumerate() {
+            let want = chop(x, &format_by_name(fmt.name).unwrap());
+            assert!(
+                g.to_bits() == want.to_bits() || (g.is_nan() && want.is_nan()),
+                "{name}[{i}]: chop({x:e}) = {g:e} (pjrt) vs {want:e} (rust)"
+            );
+        }
+    }
+}
+
+#[test]
+fn lu_factor_pjrt_matches_native_fp64() {
+    require_artifacts!();
+    let (a, _, b) = system(64, 1);
+    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let mut native = NativeBackend::new();
+    let fp = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
+    let fnat = native.lu_factor(&a, Prec::Fp64).unwrap();
+    assert_eq!(fp.piv[..64], fnat.piv[..]);
+    for i in 0..64 {
+        for j in 0..64 {
+            let (u, v) = (fp.lu[(i, j)], fnat.lu[(i, j)]);
+            assert!(
+                (u - v).abs() <= 1e-11 * (1.0 + v.abs()),
+                "LU mismatch at ({i},{j}): {u} vs {v}"
+            );
+        }
+    }
+    let xp = pjrt.lu_solve(&fp, &b, Prec::Fp64).unwrap();
+    let xn = native.lu_solve(&fnat, &b, Prec::Fp64).unwrap();
+    for (u, v) in xp.iter().zip(&xn) {
+        assert!((u - v).abs() < 1e-9 * (1.0 + v.abs()));
+    }
+}
+
+#[test]
+fn residual_pjrt_matches_native_chopped() {
+    require_artifacts!();
+    let (a, _, b) = system(48, 2); // n=48 pads into the 64 bucket
+    let x = vec![0.25; 48];
+    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let mut native = NativeBackend::new();
+    for p in [Prec::Bf16, Prec::Fp64] {
+        let rp = pjrt.residual(&a, &x, &b, p).unwrap();
+        let rn = native.residual(&a, &x, &b, p).unwrap();
+        native.reset();
+        for (i, (u, v)) in rp.iter().zip(&rn).enumerate() {
+            // identical chop grids; differences only from summation order
+            let tol = if p == Prec::Fp64 { 1e-10 } else { 2.0 * p.unit_roundoff() * v.abs().max(1.0) };
+            assert!((u - v).abs() <= tol, "{p}[{i}]: {u} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn full_ir_solve_through_pjrt_converges() {
+    require_artifacts!();
+    let mut rng = Rng::new(3);
+    let a = randsvd_mode2(60, 1e3, &mut rng);
+    let p = finish_problem(0, a, 1e3, 1.0, &mut rng);
+    let mut cfg = Config::tiny();
+    cfg.tau = 1e-8;
+    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let action = Action {
+        u_f: Prec::Bf16,
+        u: Prec::Fp64,
+        u_g: Prec::Fp32,
+        u_r: Prec::Fp64,
+    };
+    let out = gmres_ir(&mut pjrt, &p, &action, &cfg).unwrap();
+    assert!(!out.failed, "PJRT IR failed");
+    assert!(out.ferr < 1e-8, "ferr {}", out.ferr);
+    // the native backend agrees on convergence behaviour
+    let mut native = NativeBackend::new();
+    let outn = gmres_ir(&mut native, &p, &action, &cfg).unwrap();
+    assert!(!outn.failed);
+    assert!(
+        (out.outer_iters as i64 - outn.outer_iters as i64).abs() <= 2,
+        "outer iters diverge: pjrt {} vs native {}",
+        out.outer_iters,
+        outn.outer_iters
+    );
+}
+
+#[test]
+fn bucket_padding_used_for_odd_sizes() {
+    require_artifacts!();
+    let (a, _, b) = system(100, 4); // pads to 128
+    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let f = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
+    assert_eq!(f.lu.n_rows, 128);
+    let x = pjrt.lu_solve(&f, &b, Prec::Fp64).unwrap();
+    assert_eq!(x.len(), 100); // unpadded for the caller
+    let mut native = NativeBackend::new();
+    let fn_ = native.lu_factor(&a, Prec::Fp64).unwrap();
+    let xn = native.lu_solve(&fn_, &b, Prec::Fp64).unwrap();
+    for (u, v) in x.iter().zip(&xn) {
+        assert!((u - v).abs() < 1e-8 * (1.0 + v.abs()));
+    }
+}
+
+#[test]
+fn lu_breakdown_reported_from_artifact() {
+    require_artifacts!();
+    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let a = Mat::zeros(64, 64);
+    assert!(pjrt.lu_factor(&a, Prec::Fp64).is_err());
+    // overflow in bf16
+    let mut big = Mat::eye(64);
+    for i in 0..64 {
+        big[(i, i)] = 1e39;
+    }
+    assert!(pjrt.lu_factor(&big, Prec::Bf16).is_err());
+    assert!(pjrt.lu_factor(&big, Prec::Fp64).is_ok());
+}
+
+#[test]
+fn gmres_artifact_iteration_reporting() {
+    require_artifacts!();
+    let (a, _, b) = system(64, 5);
+    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let f = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
+    let g = pjrt.gmres(&a, &f, &b, 1e-10, 50, Prec::Fp64).unwrap();
+    assert!(g.ok);
+    assert!(g.iters >= 1 && g.iters <= 3, "iters {}", g.iters);
+    assert!(g.relres <= 1e-10);
+    // maxit cap honored
+    let g2 = pjrt.gmres(&a, &f, &b, 1e-30, 2, Prec::Fp64).unwrap();
+    assert!(g2.iters <= 2);
+}
+
+#[test]
+fn manifest_is_complete_for_experiment_formats() {
+    require_artifacts!();
+    let rt = PjrtRuntime::open(DIR).unwrap();
+    assert!(rt.manifest.is_complete(), "artifact set incomplete");
+    assert!(rt.manifest.buckets.contains(&64));
+    for f in ["bf16", "tf32", "fp32", "fp64"] {
+        assert!(rt.manifest.formats.iter().any(|x| x == f), "{f} missing");
+    }
+}
