@@ -2,17 +2,23 @@
 //! chop throughput, chopped LU / GEMV, GMRES, condest, Q-table ops,
 //! reward evaluation. These are the numbers the performance pass
 //! (EXPERIMENTS.md §Perf) tracks before/after each optimization.
+//!
+//! Emits `BENCH_micro.json` (path override: `PA_BENCH_JSON`) so the perf
+//! trajectory is machine-diffable across PRs. `PA_THREADS` controls the
+//! pool; results are bit-identical for any value, only timings move.
 
 use precision_autotune::bandit::action::{Action, ActionSpace};
 use precision_autotune::bandit::qtable::QTable;
 use precision_autotune::bandit::reward::{reward, RewardInputs};
-use precision_autotune::chop::{chop_p, chop_slice, Prec};
+use precision_autotune::chop::{chop_p, chop_slice, chop_sub_scaled_row, Prec};
 use precision_autotune::linalg::condest::condest_1;
 use precision_autotune::linalg::gmres::gmres_preconditioned;
 use precision_autotune::linalg::lu::lu_factor_chopped;
-use precision_autotune::linalg::Mat;
-use precision_autotune::util::benchkit::bench;
+use precision_autotune::linalg::{chopped_matvec_prechopped, Mat};
+use precision_autotune::util::benchkit::{bench, JsonReport};
 use precision_autotune::util::config::Config;
+use precision_autotune::util::json::num;
+use precision_autotune::util::pool::num_threads;
 use precision_autotune::util::rng::Rng;
 
 fn gauss_mat(n: usize, seed: u64, diag: f64) -> Mat {
@@ -27,9 +33,10 @@ fn gauss_mat(n: usize, seed: u64, diag: f64) -> Mat {
 }
 
 fn main() {
-    println!("micro benches (L3 hot paths)\n");
+    println!("micro benches (L3 hot paths), PA_THREADS={}\n", num_threads());
+    let mut rep = JsonReport::new("micro");
 
-    // --- chop throughput ---
+    // --- chop throughput (vectorized block kernel) ---
     let mut rng = Rng::new(0);
     let xs: Vec<f64> = (0..65536).map(|_| rng.gauss()).collect();
     for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32] {
@@ -41,47 +48,95 @@ fn main() {
         });
         let per = s.median_ns / 65536.0;
         println!("    -> {:.2} ns/elem ({:.1} Melem/s)", per, 1e3 / per);
+        rep.push_with(&s, vec![("n", num(65536.0)), ("ns_per_elem", num(per))]);
     }
     let _ = chop_p(1.5, Prec::Bf16);
 
-    // --- chopped LU (the dominant solve cost) ---
-    for n in [128usize, 256, 384] {
+    // --- fused LU row kernel ---
+    {
+        let u: Vec<f64> = (0..4096).map(|_| rng.gauss()).collect();
+        let y0: Vec<f64> = (0..4096).map(|_| rng.gauss()).collect();
+        let mut y = y0.clone();
+        let fmt = Prec::Bf16.format();
+        let s = bench("chop_sub_scaled_row 4k bf16", 3, 50, || {
+            y.copy_from_slice(&y0);
+            chop_sub_scaled_row(&mut y, 1.25, &u, fmt);
+            y[0]
+        });
+        let per = s.median_ns / 4096.0;
+        println!("    -> {per:.2} ns/elem (2 chops fused)");
+        rep.push_with(&s, vec![("n", num(4096.0)), ("ns_per_elem", num(per))]);
+    }
+
+    // --- chopped LU (the dominant solve cost; the §Perf headline) ---
+    for n in [64usize, 128, 256] {
         let a = gauss_mat(n, 1, n as f64);
-        for p in [Prec::Bf16, Prec::Fp64] {
-            bench(&format!("lu_factor_chopped n={n} {p}"), 1, 5, || {
+        for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32, Prec::Fp64] {
+            let iters = if n >= 256 { 5 } else { 10 };
+            let s = bench(&format!("lu_factor_chopped n={n} {p}"), 1, iters, || {
                 lu_factor_chopped(&a, p).unwrap().lu.data[0]
             });
+            rep.push_with(&s, vec![("n", num(n as f64))]);
         }
     }
 
-    // --- matvec + GMRES ---
+    // --- matvec + chopped GEMV + GMRES ---
     let n = 256;
     let a = gauss_mat(n, 2, n as f64);
     let x: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
-    bench("matvec n=256 f64", 3, 50, || a.matvec(&x)[0]);
+    rep.push_with(
+        &bench("matvec n=256 f64", 3, 50, || a.matvec(&x)[0]),
+        vec![("n", num(256.0))],
+    );
+    let a16 = a.chopped(Prec::Bf16);
+    let mut x16 = x.clone();
+    chop_slice(&mut x16, Prec::Bf16);
+    rep.push_with(
+        &bench("chopped_matvec n=256 bf16", 3, 50, || {
+            chopped_matvec_prechopped(&a16, &x16, Prec::Bf16)[0]
+        }),
+        vec![("n", num(256.0))],
+    );
+    {
+        let n2 = 512;
+        let a2 = gauss_mat(n2, 6, n2 as f64).chopped(Prec::Bf16);
+        let mut x2: Vec<f64> = (0..n2).map(|i| i as f64 / n2 as f64).collect();
+        chop_slice(&mut x2, Prec::Bf16);
+        rep.push_with(
+            &bench("chopped_matvec n=512 bf16 (parallel)", 3, 30, || {
+                chopped_matvec_prechopped(&a2, &x2, Prec::Bf16)[0]
+            }),
+            vec![("n", num(512.0))],
+        );
+    }
     let lu = lu_factor_chopped(&a, Prec::Fp64).unwrap();
     let b = a.matvec(&x);
-    bench("gmres n=256 fp64 (exact precond)", 1, 10, || {
+    rep.push(&bench("gmres n=256 fp64 (exact precond)", 1, 10, || {
         gmres_preconditioned(&a, &lu, &b, 1e-8, 50, Prec::Fp64).iters
-    });
+    }));
     let lu16 = lu_factor_chopped(&a, Prec::Bf16).unwrap();
-    let a16 = a.chopped(Prec::Bf16);
-    bench("gmres n=256 bf16 (chopped)", 1, 5, || {
+    rep.push(&bench("gmres n=256 bf16 (chopped)", 1, 5, || {
         gmres_preconditioned(&a16, &lu16, &b, 1e-6, 50, Prec::Bf16).iters
-    });
+    }));
 
     // --- condest (feature extraction) ---
-    bench("condest_1 n=256", 1, 10, || condest_1(&a, &lu) as u64);
+    rep.push(&bench("condest_1 n=256", 1, 10, || condest_1(&a, &lu) as u64));
 
     // --- bandit ops ---
     let space = ActionSpace::reduced();
     let mut q = QTable::new(100, space);
     let mut r = Rng::new(3);
-    bench("qtable update", 10, 1000, || {
+    rep.push(&bench("qtable update", 10, 1000, || {
         q.update(r.below(100), r.below(35), r.uniform(), 0.5)
-    });
-    bench("qtable argmax", 10, 1000, || q.argmax(r.below(100)));
+    }));
+    rep.push(&bench("qtable argmax", 10, 1000, || q.argmax(r.below(100))));
     let cfg = Config::default();
     let inp = RewardInputs { ferr: 1e-12, nbe: 1e-16, gmres_iters: 8, kappa: 1e4, failed: false };
-    bench("reward eval", 10, 1000, || reward(&cfg, &Action::FP64, &inp));
+    rep.push(&bench("reward eval", 10, 1000, || reward(&cfg, &Action::FP64, &inp)));
+
+    let path = std::env::var("PA_BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
+    match rep.write(&path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

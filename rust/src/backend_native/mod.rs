@@ -5,6 +5,8 @@
 //! step — so the PJRT path and this path agree to summation-order noise
 //! (verified by the runtime integration tests).
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::chop::Prec;
@@ -15,10 +17,11 @@ use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
 
 /// Native backend. Caches the chopped copy of A between the residual /
 /// GMRES steps of one solve (invalidated by [`SolverBackend::reset`]).
+/// The cache hands out `Arc` clones — a hit is O(1), never an O(n²) copy.
 #[derive(Default)]
 pub struct NativeBackend {
     /// (matrix fingerprint, precision) -> chopped copy of A
-    a_cache: Option<(u64, Prec, Mat)>,
+    a_cache: Option<(u64, Prec, Arc<Mat>)>,
 }
 
 impl NativeBackend {
@@ -26,39 +29,54 @@ impl NativeBackend {
         NativeBackend { a_cache: None }
     }
 
-    fn chopped_a(&mut self, a: &Mat, p: Prec) -> Mat {
+    fn chopped_a(&mut self, a: &Mat, p: Prec) -> Arc<Mat> {
         let fp = fingerprint(a);
         if let Some((cfp, cp, cached)) = &self.a_cache {
             if *cfp == fp && *cp == p {
-                return cached.clone();
+                return Arc::clone(cached);
             }
         }
-        let m = a.chopped(p);
-        self.a_cache = Some((fp, p, m.clone()));
+        let m = Arc::new(a.chopped(p));
+        self.a_cache = Some((fp, p, Arc::clone(&m)));
         m
     }
 }
 
-fn fingerprint(a: &Mat) -> u64 {
-    // cheap structural fingerprint: dims + a few sampled entries
-    let mut h = 0xcbf29ce484222325u64;
-    let mut mix = |v: u64| {
-        h ^= v;
-        h = h.wrapping_mul(0x100000001b3);
-    };
-    mix(a.n_rows as u64);
-    mix(a.n_cols as u64);
-    let n = a.data.len();
-    let step = (n / 16).max(1);
-    for i in (0..n).step_by(step) {
-        mix(a.data[i].to_bits());
+/// Content fingerprint of a matrix: both dims plus a full pass over the
+/// data. The seed version sampled 16 entries, which silently returned a
+/// stale cached matrix whenever two problems agreed on those entries; a
+/// full pass closes that hole. Four independent FNV lanes keep the chain
+/// ILP-bound (~4 entries/cycle), so even at n=512 the hash is ≪ one
+/// chopped GEMV. Shared with the PJRT backend's padded-A cache.
+pub(crate) fn fingerprint(a: &Mat) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut lanes = [
+        FNV_OFFSET,
+        FNV_OFFSET ^ 0x9e3779b97f4a7c15,
+        FNV_OFFSET ^ 0x6a09e667f3bcc908,
+        FNV_OFFSET ^ 0xbb67ae8584caa73b,
+    ];
+    let mut chunks = a.data.chunks_exact(4);
+    for c in &mut chunks {
+        for (l, x) in lanes.iter_mut().zip(c) {
+            *l = (*l ^ x.to_bits()).wrapping_mul(FNV_PRIME);
+        }
+    }
+    for (l, x) in lanes.iter_mut().zip(chunks.remainder()) {
+        *l = (*l ^ x.to_bits()).wrapping_mul(FNV_PRIME);
+    }
+    let mut h = FNV_OFFSET;
+    for v in [a.n_rows as u64, a.n_cols as u64, lanes[0], lanes[1], lanes[2], lanes[3]] {
+        h = (h ^ v).wrapping_mul(FNV_PRIME);
     }
     h
 }
 
+/// Zero-copy view of a handle as linalg factors (`Arc` clone + O(n) piv).
 fn to_factors(f: &LuHandle) -> LuFactors {
     LuFactors {
-        lu: f.lu.clone(),
+        lu: Arc::clone(&f.lu),
         piv: f.piv.iter().map(|&p| p as usize).collect(),
         prec: f.prec,
     }
@@ -104,8 +122,16 @@ impl SolverBackend for NativeBackend {
         max_m: usize,
         p: Prec,
     ) -> Result<GmresOutcome> {
-        let ap = if p == Prec::Fp64 { a.clone() } else { self.chopped_a(a, p) };
-        let res = gmres_preconditioned(&ap, &to_factors(f), r, tol, max_m, p);
+        // fp64 needs no chopped copy at all; other precisions borrow the
+        // cached Arc — no O(n²) clone on either path.
+        let cached;
+        let ap: &Mat = if p == Prec::Fp64 {
+            a
+        } else {
+            cached = self.chopped_a(a, p);
+            &cached
+        };
+        let res = gmres_preconditioned(ap, &to_factors(f), r, tol, max_m, p);
         Ok(GmresOutcome {
             z: res.z,
             iters: res.iters,
@@ -186,5 +212,34 @@ mod tests {
         let mut be = NativeBackend::new();
         let a = Mat::zeros(5, 5);
         assert!(be.lu_factor(&a, Prec::Fp64).is_err());
+    }
+
+    #[test]
+    fn fingerprint_sees_every_entry() {
+        // Regression: the seed fingerprint sampled ~16 entries, so two
+        // matrices agreeing on those returned a stale cached chop. The
+        // full-pass hash must distinguish a single-entry change anywhere.
+        let (a, _, b) = system(20, 5);
+        for idx in [1usize, 3, 7, 26, 399] {
+            let mut a2 = a.clone();
+            a2.data[idx] += 10.0;
+            assert_ne!(fingerprint(&a), fingerprint(&a2), "idx {idx}");
+            let x = vec![1.0; 20];
+            let mut be = NativeBackend::new();
+            let _ = be.residual(&a, &x, &b, Prec::Bf16).unwrap();
+            let r2 = be.residual(&a2, &x, &b, Prec::Bf16).unwrap();
+            let direct = crate::linalg::chopped_residual(&a2, &x, &b, Prec::Bf16);
+            assert_eq!(r2, direct, "stale cache served for idx {idx}");
+        }
+        // transpose-shaped data with identical content must differ too
+        let mut tall = Mat::zeros(4, 2);
+        let mut wide = Mat::zeros(2, 4);
+        for (i, v) in tall.data.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        for (i, v) in wide.data.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        assert_ne!(fingerprint(&tall), fingerprint(&wide));
     }
 }

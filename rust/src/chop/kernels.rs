@@ -1,0 +1,240 @@
+//! Branch-free slice kernels for the chop emulation (DESIGN.md §Perf).
+//!
+//! The scalar [`chop`](super::chop) takes a hot/cold branch per element;
+//! on contiguous data that branch defeats auto-vectorization. The kernels
+//! here classify through exponent-field arithmetic only — every lane runs
+//! the same instruction sequence (two selects, no calls), so LLVM turns
+//! the inner loops into SIMD.
+//!
+//! **Semantics contract** (regression-tested in `tests/kernel_bitexact.rs`
+//! against the golden vectors and the scalar reference): for every eligible
+//! format the kernels are bit-identical to per-element `chop()`, including
+//! signed zeros, subnormal inputs, overflow-to-±inf, and NaN passthrough.
+//!
+//! Eligibility: the branch-free path builds the quantum q = 2^shift *and*
+//! its reciprocal directly from exponent bits, which requires both to be
+//! normal f64 for every possible input exponent: `3 ≤ t < 53` and
+//! `emin - t + 1 ≥ -1022`. All Table-1 (+FP8) formats qualify; a format
+//! outside that envelope falls back to the scalar loop, so the kernels are
+//! total over arbitrary [`Format`]s.
+
+use super::{chop, Format};
+
+/// Can `fmt` take the branch-free path? (See module docs for the bound.)
+#[inline]
+pub fn branchless_ok(fmt: &Format) -> bool {
+    fmt.t >= 3 && fmt.t < 53 && fmt.emin - (fmt.t - 1) >= -1022
+}
+
+/// One element of the branch-free sequence. Mirrors the Pallas kernel
+/// (`chop.chop_bits`) shape: clamp the exponent, build q and q⁻¹ from
+/// bits (both exact powers of two, so scale/unscale are exact), round
+/// ties-to-even, saturate past xmax to ±inf. Zeros, subnormals, ±inf and
+/// NaN all fall out of the arithmetic without a dedicated branch.
+#[inline(always)]
+fn chop_one(x: f64, t: i32, emin: i32, xmax: f64) -> f64 {
+    let bits = x.to_bits();
+    let expf = ((bits >> 52) & 0x7FF) as i32;
+    // f64-subnormal inputs (expf == 0) are below 2^emin for every eligible
+    // format: clamping their exponent to emin lands them on the target's
+    // subnormal grid, same as the scalar cold path.
+    let e = if expf == 0 { -1023 } else { expf - 1023 };
+    let e_eff = if e < emin { emin } else { e };
+    let shift = e_eff - (t - 1); // in [emin - t + 1, 1025 - t] ⊂ [-1022, 1022]
+    let q = f64::from_bits(((shift + 1023) as u64) << 52);
+    let q_inv = f64::from_bits(((1023 - shift) as u64) << 52);
+    let y = (x * q_inv).round_ties_even() * q;
+    if y.abs() > xmax {
+        f64::INFINITY.copysign(y)
+    } else {
+        y
+    }
+}
+
+/// Chop a contiguous block in place — the vectorized equivalent of
+/// `for x in xs { *x = chop(*x, fmt) }`.
+pub fn chop_block(xs: &mut [f64], fmt: &Format) {
+    if fmt.t == 53 {
+        return; // carrier format: identity
+    }
+    if !branchless_ok(fmt) {
+        for x in xs.iter_mut() {
+            *x = chop(*x, fmt);
+        }
+        return;
+    }
+    let (t, emin, xmax) = (fmt.t, fmt.emin, fmt.xmax);
+    for x in xs.iter_mut() {
+        *x = chop_one(*x, t, emin, xmax);
+    }
+}
+
+/// Fused `y[i] = chop(y[i] + chop(alpha * x[i]))` — the per-op-rounded
+/// axpy. For fp64 this degenerates to a plain (exact) axpy.
+pub fn chop_axpy(y: &mut [f64], alpha: f64, x: &[f64], fmt: &Format) {
+    debug_assert_eq!(y.len(), x.len());
+    if fmt.t == 53 {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+        return;
+    }
+    if !branchless_ok(fmt) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = chop(*yi + chop(alpha * xi, fmt), fmt);
+        }
+        return;
+    }
+    let (t, emin, xmax) = (fmt.t, fmt.emin, fmt.xmax);
+    for (yi, xi) in y.iter_mut().zip(x) {
+        let p = chop_one(alpha * xi, t, emin, xmax);
+        *yi = chop_one(*yi + p, t, emin, xmax);
+    }
+}
+
+/// Fused `y[i] = chop(y[i] - chop(m * u[i]))` — the rank-1 Schur-update
+/// row step of `lu_factor_chopped` (mirror of `pallas_outer_update`),
+/// one kernel call per row instead of 2·n scalar `chop()` calls.
+/// For fp64 this is the plain right-looking update `y -= m·u`.
+pub fn chop_sub_scaled_row(y: &mut [f64], m: f64, u: &[f64], fmt: &Format) {
+    debug_assert_eq!(y.len(), u.len());
+    if fmt.t == 53 {
+        for (yi, ui) in y.iter_mut().zip(u) {
+            *yi -= m * ui;
+        }
+        return;
+    }
+    if !branchless_ok(fmt) {
+        for (yi, ui) in y.iter_mut().zip(u) {
+            *yi = chop(*yi - chop(m * ui, fmt), fmt);
+        }
+        return;
+    }
+    let (t, emin, xmax) = (fmt.t, fmt.emin, fmt.xmax);
+    for (yi, ui) in y.iter_mut().zip(u) {
+        let p = chop_one(m * ui, t, emin, xmax);
+        *yi = chop_one(*yi - p, t, emin, xmax);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chop::{chop_p, Prec, ALL_FORMATS};
+
+    #[test]
+    fn all_table1_formats_take_the_fast_path() {
+        for f in &ALL_FORMATS {
+            if f.t == 53 {
+                continue;
+            }
+            assert!(branchless_ok(f), "{}", f.name);
+        }
+        // an fp64-adjacent hypothetical format must fall back
+        let odd = Format { name: "t50", t: 50, emin: -1022, emax: 1023, xmax: f64::MAX };
+        assert!(!branchless_ok(&odd));
+    }
+
+    #[test]
+    fn block_matches_scalar_on_edge_classes() {
+        let cases = [
+            0.0,
+            -0.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            5e-324,
+            -5e-324,
+            1e-310,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -f64::MAX,
+            1.0,
+            1.0 + 2f64.powi(-8),
+            1.0 + 2f64.powi(-7),
+            65504.0,
+            65520.0,
+            3.39e38,
+            -1.0e-40,
+        ];
+        for f in &ALL_FORMATS {
+            let mut buf = cases.to_vec();
+            chop_block(&mut buf, f);
+            for (i, (&got, &x)) in buf.iter().zip(&cases).enumerate() {
+                let want = chop(x, f);
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "{}[{i}]: chop_block({x:e}) = {got:e}, scalar {want:e}",
+                    f.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_scalar_property() {
+        use crate::util::proptest::{check, gen};
+        check("chop_block_bitexact", 0xB10C, 2000, |rng| {
+            let x = gen::any_f64(rng);
+            for f in &ALL_FORMATS {
+                let mut buf = [x];
+                chop_block(&mut buf, f);
+                let want = chop(x, f);
+                crate::prop_assert!(
+                    buf[0].to_bits() == want.to_bits() || (buf[0].is_nan() && want.is_nan()),
+                    "chop_block({x:e}, {}) = {:e}, scalar {want:e}",
+                    f.name,
+                    buf[0]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_kernels_match_scalar_composition() {
+        use crate::util::proptest::{check, gen};
+        check("fused_bitexact", 0xF05E, 500, |rng| {
+            let n = gen::size(rng, 1, 40);
+            let y0: Vec<f64> = (0..n).map(|_| gen::finite_f64(rng)).collect();
+            let u: Vec<f64> = (0..n).map(|_| gen::finite_f64(rng)).collect();
+            let m = gen::finite_f64(rng);
+            for f in &ALL_FORMATS {
+                let mut fast = y0.clone();
+                chop_sub_scaled_row(&mut fast, m, &u, f);
+                let mut fast_a = y0.clone();
+                chop_axpy(&mut fast_a, m, &u, f);
+                for j in 0..n {
+                    let want_s = chop(y0[j] - chop(m * u[j], f), f);
+                    let want_a = chop(y0[j] + chop(m * u[j], f), f);
+                    crate::prop_assert!(
+                        fast[j].to_bits() == want_s.to_bits()
+                            || (fast[j].is_nan() && want_s.is_nan()),
+                        "sub_scaled {} j={j}: {:e} vs {want_s:e}",
+                        f.name,
+                        fast[j]
+                    );
+                    crate::prop_assert!(
+                        fast_a[j].to_bits() == want_a.to_bits()
+                            || (fast_a[j].is_nan() && want_a.is_nan()),
+                        "axpy {} j={j}: {:e} vs {want_a:e}",
+                        f.name,
+                        fast_a[j]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fp64_kernels_are_exact_updates() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        chop_sub_scaled_row(&mut y, 2.0, &[0.5, 0.5, 0.5], Prec::Fp64.format());
+        assert_eq!(y, vec![0.0, 1.0, 2.0]);
+        chop_axpy(&mut y, 2.0, &[0.5, 0.5, 0.5], Prec::Fp64.format());
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+        let x = chop_p(1.0 + 2f64.powi(-60), Prec::Fp64);
+        assert_eq!(x, 1.0 + 2f64.powi(-60));
+    }
+}

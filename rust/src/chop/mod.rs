@@ -12,6 +12,10 @@
 //! the paper's introduction discusses). The experiment set 𝒰 of §5.1 is
 //! `{BF16, TF32, FP32, FP64}` — see [`Prec`].
 
+pub mod kernels;
+
+pub use kernels::{chop_axpy, chop_block, chop_sub_scaled_row};
+
 /// A floating-point format (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Format {
@@ -164,15 +168,13 @@ pub fn chop_p(x: f64, p: Prec) -> f64 {
     chop(x, p.format())
 }
 
-/// Chop a slice in place.
+/// Chop a slice in place (vectorized: delegates to [`kernels::chop_block`],
+/// bit-identical to the per-element scalar loop).
 pub fn chop_slice(xs: &mut [f64], p: Prec) {
     if p == Prec::Fp64 {
         return;
     }
-    let f = p.format();
-    for x in xs {
-        *x = chop(*x, f);
-    }
+    kernels::chop_block(xs, p.format());
 }
 
 /// y = chop(chop(A)·chop(x)) row dot: operands in `p`, f64 accumulation,
@@ -270,7 +272,9 @@ mod tests {
     #[test]
     fn golden_vectors_cross_language() {
         // Shared ground truth with the Python oracle/kernel.
-        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/testdata/chop_golden.json");
+        // single cross-language copy at the repo root (python/tests reads
+        // the same file)
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/chop_golden.json");
         let text = std::fs::read_to_string(path).expect("golden vectors present");
         let v = crate::util::json::parse(&text).unwrap();
         let mut n = 0;

@@ -8,14 +8,18 @@
 //! on zero / non-finite pivots (overflow in a narrow format is a *normal*
 //! outcome the bandit's reward must see, not a panic).
 
-use crate::chop::{chop, chop_p, Prec};
+use std::sync::Arc;
+
+use crate::chop::{chop, chop_p, chop_sub_scaled_row, Prec};
 use crate::linalg::{dot, Mat};
 
 /// Packed LU factors (unit-lower L below the diagonal, U on and above),
 /// with the pivot-swap vector `piv[k] = row swapped with k at step k`.
+/// The factor matrix is `Arc`-shared: backends hand the same buffer
+/// through [`crate::solver::LuHandle`] and back without O(n²) copies.
 #[derive(Clone, Debug)]
 pub struct LuFactors {
-    pub lu: Mat,
+    pub lu: Arc<Mat>,
     pub piv: Vec<usize>,
     /// Precision the factorization was carried out in (u_f of Alg. 2).
     pub prec: Prec,
@@ -35,12 +39,30 @@ impl std::fmt::Display for LuError {
 }
 impl std::error::Error for LuError {}
 
+/// Panel width of the blocked right-looking update. Narrow enough that a
+/// panel of rows stays cache-resident, wide enough to amortize one
+/// thread-pool dispatch per panel (instead of one per column).
+const PANEL: usize = 32;
+
+/// Minimum trailing-update size (elements × panel depth) worth a parallel
+/// dispatch; below this the spawn cost dwarfs the arithmetic.
+const PAR_MIN_WORK: usize = 1 << 17;
+
 /// Right-looking LU with partial pivoting in emulated precision `p`.
 ///
 /// Semantics match the L2 graph: `A` is storage-rounded up front; at step
 /// k the multiplier column is `chop(a[i][k] / pivot)` and the trailing
 /// update is `chop(a[i][j] - chop(m_i * u_kj))` (for rank-1 updates,
 /// per-op and accumulate emulation modes coincide).
+///
+/// The implementation is panel-blocked (EXPERIMENTS.md §Perf): pivoting,
+/// multipliers and panel-column updates run column-by-column as before,
+/// but the trailing-matrix updates of a panel are deferred and applied
+/// per row in ascending-k order — the exact per-element operation stream
+/// of the unblocked algorithm, so results are bit-identical while the
+/// trailing sweep becomes one fused-kernel pass per (row, panel) that
+/// parallelizes across rows (row-disjoint writes; any `PA_THREADS` gives
+/// the same bits — regression-locked in tests/kernel_bitexact.rs).
 pub fn lu_factor_chopped(a: &Mat, p: Prec) -> Result<LuFactors, LuError> {
     assert_eq!(a.n_rows, a.n_cols);
     let n = a.n_rows;
@@ -48,53 +70,86 @@ pub fn lu_factor_chopped(a: &Mat, p: Prec) -> Result<LuFactors, LuError> {
     let mut lu = a.chopped(p);
     let mut piv = vec![0usize; n];
 
-    for k in 0..n {
-        // NaN-safe pivot search: |a[i][k]| max over i >= k, first winner.
-        let mut best = -f64::INFINITY;
-        let mut pk = k;
-        for i in k..n {
-            let v = lu[(i, k)].abs();
-            if v > best {
-                best = v;
-                pk = i;
-            }
-        }
-        piv[k] = pk;
-        lu.swap_rows(k, pk);
-        let pivot = lu[(k, k)];
-        if pivot == 0.0 || !pivot.is_finite() {
-            return Err(LuError { step: k });
-        }
-        if p == Prec::Fp64 {
-            // fast path: no chop calls
-            for i in k + 1..n {
-                let m = lu[(i, k)] / pivot;
-                lu[(i, k)] = m;
-                if m != 0.0 {
-                    let (top, bottom) = lu.data.split_at_mut((k + 1) * n);
-                    let urow = &top[k * n..k * n + n];
-                    let irow = &mut bottom[(i - k - 1) * n..(i - k - 1) * n + n];
-                    for j in k + 1..n {
-                        irow[j] -= m * urow[j];
-                    }
+    let mut k0 = 0;
+    while k0 < n {
+        let kend = (k0 + PANEL).min(n);
+
+        // --- Panel phase (sequential): pivot search over the fully
+        // updated column, full-row swaps, multipliers, and updates
+        // restricted to the panel columns [k+1, kend).
+        for k in k0..kend {
+            // NaN-safe pivot search: |a[i][k]| max over i >= k, first winner.
+            let mut best = -f64::INFINITY;
+            let mut pk = k;
+            for i in k..n {
+                let v = lu[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    pk = i;
                 }
             }
+            piv[k] = pk;
+            lu.swap_rows(k, pk);
+            let pivot = lu[(k, k)];
+            if pivot == 0.0 || !pivot.is_finite() {
+                return Err(LuError { step: k });
+            }
+            let (top, bottom) = lu.data.split_at_mut((k + 1) * n);
+            let urow = &top[k * n + k + 1..k * n + kend];
+            for irow in bottom.chunks_exact_mut(n) {
+                let m = chop(irow[k] / pivot, fmt);
+                irow[k] = m;
+                if m != 0.0 {
+                    chop_sub_scaled_row(&mut irow[k + 1..kend], m, urow, fmt);
+                }
+            }
+        }
+
+        if kend >= n {
+            break;
+        }
+
+        // --- Finalize the panel's U rows on the trailing columns: row k
+        // receives the deferred updates k0..k in order (row k0 is already
+        // complete from previous panels).
+        for k in k0 + 1..kend {
+            let (top, rest) = lu.data.split_at_mut(k * n);
+            let row_k = &mut rest[..n];
+            for kk in k0..k {
+                let m = row_k[kk];
+                if m != 0.0 {
+                    let urow = &top[kk * n + kend..kk * n + n];
+                    chop_sub_scaled_row(&mut row_k[kend..], m, urow, fmt);
+                }
+            }
+        }
+
+        // --- Trailing update: every row below the panel receives updates
+        // k0..kend in order. Row-disjoint writes against read-only U rows:
+        // parallelizes without changing any per-element operation order.
+        let (top, bottom) = lu.data.split_at_mut(kend * n);
+        let panel_rows: &[f64] = top;
+        let update_row = |row: &mut [f64]| {
+            for k in k0..kend {
+                let m = row[k];
+                if m != 0.0 {
+                    let urow = &panel_rows[k * n + kend..k * n + n];
+                    chop_sub_scaled_row(&mut row[kend..], m, urow, fmt);
+                }
+            }
+        };
+        let work = (n - kend) * (n - kend) * (kend - k0);
+        if work >= PAR_MIN_WORK {
+            crate::util::pool::parallel_for_rows(bottom, n, |_, row| update_row(row));
         } else {
-            for i in k + 1..n {
-                let m = chop(lu[(i, k)] / pivot, fmt);
-                lu[(i, k)] = m;
-                if m != 0.0 {
-                    let (top, bottom) = lu.data.split_at_mut((k + 1) * n);
-                    let urow = &top[k * n..k * n + n];
-                    let irow = &mut bottom[(i - k - 1) * n..(i - k - 1) * n + n];
-                    for j in k + 1..n {
-                        irow[j] = chop(irow[j] - chop(m * urow[j], fmt), fmt);
-                    }
-                }
+            for row in bottom.chunks_exact_mut(n) {
+                update_row(row);
             }
         }
+
+        k0 = kend;
     }
-    Ok(LuFactors { lu, piv, prec: p })
+    Ok(LuFactors { lu: Arc::new(lu), piv, prec: p })
 }
 
 /// Native f64 LU (used for the κ features and the FP64 baseline).

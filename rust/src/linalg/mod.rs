@@ -124,9 +124,14 @@ impl Mat {
         self.data.iter().any(|x| !x.is_finite())
     }
 
-    /// y = A x (f64).
+    /// y = A x (f64). Row-parallel above [`PAR_MIN_ELEMS`]: each output
+    /// element is one independent f64-accumulated row dot, so the result
+    /// is bit-identical for any thread count.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n_cols);
+        if self.data.len() >= PAR_MIN_ELEMS {
+            return crate::util::pool::parallel_map(self.n_rows, |i| dot(self.row(i), x));
+        }
         (0..self.n_rows)
             .map(|i| dot(self.row(i), x))
             .collect()
@@ -166,16 +171,28 @@ impl Mat {
         c
     }
 
-    /// Chop every entry to precision `p` (storage rounding).
+    /// Chop every entry to precision `p` (storage rounding). Elementwise,
+    /// so the row-parallel path is trivially bit-identical.
     pub fn chopped(&self, p: Prec) -> Mat {
         if p == Prec::Fp64 {
             return self.clone();
         }
         let mut m = self.clone();
-        crate::chop::chop_slice(&mut m.data, p);
+        if m.data.len() >= PAR_MIN_ELEMS && m.n_cols > 0 {
+            let fmt = p.format();
+            crate::util::pool::parallel_for_rows(&mut m.data, m.n_cols, |_, row| {
+                crate::chop::chop_block(row, fmt);
+            });
+        } else {
+            crate::chop::chop_slice(&mut m.data, p);
+        }
         m
     }
 }
+
+/// Matrix size (elements) above which row-parallel kernels dispatch to the
+/// thread pool; below it the per-call spawn cost exceeds the arithmetic.
+const PAR_MIN_ELEMS: usize = 1 << 18;
 
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = f64;
@@ -220,7 +237,13 @@ pub fn norm1_vec(v: &[f64]) -> f64 {
 
 /// Chopped matvec matching the Pallas kernel semantics: operands already
 /// in precision `p` (pre-chopped), f64 accumulation, result chopped.
+/// Row-parallel above [`PAR_MIN_ELEMS`] (this is the GMRES inner matvec);
+/// each element is `chop(dot(row, x))` either way — bit-identical.
 pub fn chopped_matvec_prechopped(a: &Mat, x: &[f64], p: Prec) -> Vec<f64> {
+    assert_eq!(x.len(), a.n_cols);
+    if a.data.len() >= PAR_MIN_ELEMS {
+        return crate::util::pool::parallel_map(a.n_rows, |i| chop_p(dot(a.row(i), x), p));
+    }
     let mut y = a.matvec(x);
     crate::chop::chop_slice(&mut y, p);
     y

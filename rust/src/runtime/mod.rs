@@ -3,143 +3,41 @@
 //! Loads the HLO-text artifacts produced by `python/compile/aot.py`
 //! (manifest-described, one per (op, format, size-bucket)), compiles them
 //! once on the PJRT CPU client (`xla` crate), caches the executables, and
-//! exposes them as a [`SolverBackend`]. Matrices whose size falls between
-//! buckets are padded block-diagonally with the identity
+//! exposes them as a [`crate::solver::SolverBackend`]. Matrices whose size
+//! falls between buckets are padded block-diagonally with the identity
 //! (`A ↦ diag(A, I)`, `b ↦ [b; 0]`), which leaves the solution, the LU
 //! block structure and the residual of the original system untouched
 //! (see `padding_invariance` tests).
 //!
 //! Python runs only at `make artifacts` time; this module is the entire
 //! request path.
+//!
+//! The `xla` crate cannot be vendored into the offline build (DESIGN.md
+//! §6), so the PJRT client lives behind the `pjrt` cargo feature. Without
+//! it, [`PjrtBackend::open`] is a stub that returns an error, keeping the
+//! CLI's `--backend pjrt` plumbing compiling everywhere.
 
 pub mod manifest;
 
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{
+    ivec_literal, literal_scalar_f64, literal_scalar_i32, literal_to_f64s, literal_to_i32s,
+    mat_literal, vec_literal, PjrtBackend, PjrtRuntime,
+};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtBackend, PjrtRuntime};
 
-use crate::chop::Prec;
-use crate::linalg::Mat;
-use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
 pub use manifest::{ArtifactMeta, Manifest};
 
-/// Compiled-executable cache over the artifact set.
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: String,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// executions per artifact name (perf telemetry)
-    pub exec_counts: HashMap<String, u64>,
-}
-
-impl PjrtRuntime {
-    /// Open the artifact directory (expects `manifest.json` inside).
-    pub fn open(dir: &str) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(&format!("{dir}/manifest.json"))
-            .with_context(|| format!("loading manifest from {dir} (run `make artifacts`)"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(PjrtRuntime {
-            client,
-            manifest,
-            dir: dir.to_string(),
-            exes: HashMap::new(),
-            exec_counts: HashMap::new(),
-        })
-    }
-
-    /// Smallest bucket >= n (error if none).
-    pub fn bucket_for(&self, n: usize) -> Result<usize> {
-        self.manifest
-            .buckets
-            .iter()
-            .copied()
-            .filter(|&b| b >= n)
-            .min()
-            .ok_or_else(|| {
-                anyhow!(
-                    "no artifact bucket fits n={n} (buckets: {:?}); regenerate with larger --buckets",
-                    self.manifest.buckets
-                )
-            })
-    }
-
-    /// Get (compiling + caching on first use) the executable for `name`.
-    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(name) {
-            let meta = self
-                .manifest
-                .by_name(name)
-                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
-            let path = format!("{}/{}", self.dir, meta.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {path}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-            self.exes.insert(name.to_string(), exe);
-        }
-        Ok(&self.exes[name])
-    }
-
-    /// Execute an artifact with the given inputs; returns the output
-    /// tuple elements as Literals.
-    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
-        let exe = self.executable(name)?;
-        let out = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
-        out.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
-    }
-
-    pub fn artifacts_compiled(&self) -> usize {
-        self.exes.len()
-    }
-}
+use crate::linalg::Mat;
 
 // ---------------------------------------------------------------------------
-// literal marshalling helpers
-// ---------------------------------------------------------------------------
-
-pub fn mat_literal(a: &Mat) -> Result<xla::Literal> {
-    xla::Literal::vec1(&a.data)
-        .reshape(&[a.n_rows as i64, a.n_cols as i64])
-        .map_err(|e| anyhow!("reshape literal: {e}"))
-}
-
-pub fn vec_literal(v: &[f64]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-pub fn ivec_literal(v: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-pub fn literal_to_f64s(l: &xla::Literal) -> Result<Vec<f64>> {
-    l.to_vec::<f64>().map_err(|e| anyhow!("literal->f64s: {e}"))
-}
-
-pub fn literal_to_i32s(l: &xla::Literal) -> Result<Vec<i32>> {
-    l.to_vec::<i32>().map_err(|e| anyhow!("literal->i32s: {e}"))
-}
-
-pub fn literal_scalar_f64(l: &xla::Literal) -> Result<f64> {
-    l.get_first_element::<f64>()
-        .map_err(|e| anyhow!("literal->f64: {e}"))
-}
-
-pub fn literal_scalar_i32(l: &xla::Literal) -> Result<i32> {
-    l.get_first_element::<i32>()
-        .map_err(|e| anyhow!("literal->i32: {e}"))
-}
-
-// ---------------------------------------------------------------------------
-// padding
+// padding (xla-free; shared by both runtime flavors and their tests)
 // ---------------------------------------------------------------------------
 
 /// A ↦ diag(A, I_{nb-n}) — preserves the leading block's solution and
@@ -165,149 +63,6 @@ pub fn pad_vec(v: &[f64], nb: usize) -> Vec<f64> {
     let mut p = v.to_vec();
     p.resize(nb, 0.0);
     p
-}
-
-// ---------------------------------------------------------------------------
-// the backend
-// ---------------------------------------------------------------------------
-
-/// [`SolverBackend`] over the AOT artifacts. All reduced-precision
-/// arithmetic happens *inside* the artifacts (the Pallas chop kernel);
-/// only f64 buffers cross the PJRT boundary.
-pub struct PjrtBackend {
-    pub rt: PjrtRuntime,
-    /// (fingerprint, bucket) -> padded A, reused across the steps and
-    /// outer iterations of one solve
-    a_pad_cache: Option<(u64, usize, Mat)>,
-}
-
-impl PjrtBackend {
-    pub fn open(dir: &str) -> Result<PjrtBackend> {
-        Ok(PjrtBackend { rt: PjrtRuntime::open(dir)?, a_pad_cache: None })
-    }
-
-    fn padded_a(&mut self, a: &Mat) -> Result<(usize, Mat)> {
-        let nb = self.rt.bucket_for(a.n_rows)?;
-        let fp = fingerprint(a);
-        if let Some((cfp, cnb, cached)) = &self.a_pad_cache {
-            if *cfp == fp && *cnb == nb {
-                return Ok((nb, cached.clone()));
-            }
-        }
-        let p = pad_matrix(a, nb);
-        self.a_pad_cache = Some((fp, nb, p.clone()));
-        Ok((nb, p))
-    }
-
-    fn artifact(&self, op: &str, p: Prec, nb: usize) -> String {
-        format!("{op}_{}_{nb}", p.name())
-    }
-}
-
-fn fingerprint(a: &Mat) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    let mut mix = |v: u64| {
-        h ^= v;
-        h = h.wrapping_mul(0x100000001b3);
-    };
-    mix(a.n_rows as u64);
-    let n = a.data.len();
-    let step = (n / 16).max(1);
-    for i in (0..n).step_by(step) {
-        mix(a.data[i].to_bits());
-    }
-    h
-}
-
-impl SolverBackend for PjrtBackend {
-    fn lu_factor(&mut self, a: &Mat, p: Prec) -> Result<LuHandle> {
-        let (nb, ap) = self.padded_a(a)?;
-        let name = self.artifact("lu_factor", p, nb);
-        let outs = self.rt.run(&name, &[mat_literal(&ap)?])?;
-        let ok = literal_scalar_i32(&outs[2])?;
-        if ok == 0 {
-            bail!("LU breakdown in artifact {name}");
-        }
-        let lu_data = literal_to_f64s(&outs[0])?;
-        let piv = literal_to_i32s(&outs[1])?;
-        Ok(LuHandle {
-            lu: Mat { n_rows: nb, n_cols: nb, data: lu_data },
-            piv,
-            prec: p,
-        })
-    }
-
-    fn lu_solve(&mut self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>> {
-        let nb = f.lu.n_rows;
-        let name = self.artifact("lu_solve", p, nb);
-        let outs = self.rt.run(
-            &name,
-            &[
-                mat_literal(&f.lu)?,
-                ivec_literal(&f.piv),
-                vec_literal(&pad_vec(b, nb)),
-            ],
-        )?;
-        let mut x = literal_to_f64s(&outs[0])?;
-        x.truncate(b.len());
-        Ok(x)
-    }
-
-    fn residual(&mut self, a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
-        let (nb, ap) = self.padded_a(a)?;
-        let name = self.artifact("residual", p, nb);
-        let outs = self.rt.run(
-            &name,
-            &[
-                mat_literal(&ap)?,
-                vec_literal(&pad_vec(x, nb)),
-                vec_literal(&pad_vec(b, nb)),
-            ],
-        )?;
-        let mut r = literal_to_f64s(&outs[0])?;
-        r.truncate(x.len());
-        Ok(r)
-    }
-
-    fn gmres(
-        &mut self,
-        a: &Mat,
-        f: &LuHandle,
-        r: &[f64],
-        tol: f64,
-        max_m: usize,
-        p: Prec,
-    ) -> Result<GmresOutcome> {
-        let (nb, ap) = self.padded_a(a)?;
-        let name = self.artifact("gmres", p, nb);
-        let outs = self.rt.run(
-            &name,
-            &[
-                mat_literal(&ap)?,
-                mat_literal(&f.lu)?,
-                ivec_literal(&f.piv),
-                vec_literal(&pad_vec(r, nb)),
-                xla::Literal::scalar(tol),
-                xla::Literal::scalar(max_m.min(self.rt.manifest.gmres_max_m) as i32),
-            ],
-        )?;
-        let mut z = literal_to_f64s(&outs[0])?;
-        z.truncate(r.len());
-        Ok(GmresOutcome {
-            z,
-            iters: literal_scalar_i32(&outs[1])? as usize,
-            relres: literal_scalar_f64(&outs[2])?,
-            ok: literal_scalar_i32(&outs[3])? != 0,
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-
-    fn reset(&mut self) {
-        self.a_pad_cache = None;
-    }
 }
 
 #[cfg(test)]
@@ -346,12 +101,13 @@ mod tests {
         assert_eq!(pad_vec(&[1.0], 1), vec![1.0]);
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn fingerprint_distinguishes() {
-        let a = Mat::eye(4);
-        let mut b = Mat::eye(4);
-        b[(2, 2)] = 2.0;
-        assert_ne!(fingerprint(&a), fingerprint(&b));
-        assert_eq!(fingerprint(&a), fingerprint(&Mat::eye(4)));
+    fn stub_backend_reports_missing_feature() {
+        let err = match PjrtBackend::open("artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("stub backend must not open"),
+        };
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,71 @@
+//! Offline stand-in for the PJRT backend (the default build: no `pjrt`
+//! feature, no `xla` crate). Every call-site type-checks; `open()` fails
+//! with an actionable message, so `--backend pjrt` degrades to a clean
+//! runtime error instead of a compile-time hole.
+
+use anyhow::{bail, Result};
+
+use crate::chop::Prec;
+use crate::linalg::Mat;
+use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
+
+const MSG: &str = "PJRT backend unavailable: this binary was built without the `pjrt` \
+cargo feature (the `xla` crate cannot be vendored offline). Rebuild with \
+`--features pjrt` on a host with the xla dependency.";
+
+/// Stub runtime: exists so `backend.rt.artifacts_compiled()` call sites
+/// compile; unreachable at runtime because [`PjrtBackend::open`] errors.
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+impl PjrtRuntime {
+    pub fn open(_dir: &str) -> Result<PjrtRuntime> {
+        bail!("{MSG}");
+    }
+
+    pub fn artifacts_compiled(&self) -> usize {
+        0
+    }
+}
+
+/// Stub backend mirroring the real `pjrt::PjrtBackend` surface.
+pub struct PjrtBackend {
+    pub rt: PjrtRuntime,
+}
+
+impl PjrtBackend {
+    pub fn open(_dir: &str) -> Result<PjrtBackend> {
+        bail!("{MSG}");
+    }
+}
+
+impl SolverBackend for PjrtBackend {
+    fn lu_factor(&mut self, _a: &Mat, _p: Prec) -> Result<LuHandle> {
+        bail!("{MSG}");
+    }
+
+    fn lu_solve(&mut self, _f: &LuHandle, _b: &[f64], _p: Prec) -> Result<Vec<f64>> {
+        bail!("{MSG}");
+    }
+
+    fn residual(&mut self, _a: &Mat, _x: &[f64], _b: &[f64], _p: Prec) -> Result<Vec<f64>> {
+        bail!("{MSG}");
+    }
+
+    fn gmres(
+        &mut self,
+        _a: &Mat,
+        _f: &LuHandle,
+        _r: &[f64],
+        _tol: f64,
+        _max_m: usize,
+        _p: Prec,
+    ) -> Result<GmresOutcome> {
+        bail!("{MSG}");
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}

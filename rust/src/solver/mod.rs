@@ -6,6 +6,8 @@
 pub mod ir;
 pub mod metrics;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::chop::Prec;
@@ -14,9 +16,13 @@ use crate::linalg::Mat;
 /// Opaque LU factor handle: backends return host-resident packed factors
 /// (the PJRT backend keeps them as f64 buffers it re-uploads per call —
 /// sizes here are ≤ 512², marshalling is trivial next to the solves).
+/// The factor matrix is `Arc`-shared so cloning a handle — the trainer
+/// shares one factorization across every action with the same u_f — and
+/// converting to [`crate::linalg::lu::LuFactors`] never copies the O(n²)
+/// buffer.
 #[derive(Clone, Debug)]
 pub struct LuHandle {
-    pub lu: Mat,
+    pub lu: Arc<Mat>,
     pub piv: Vec<i32>,
     pub prec: Prec,
 }

@@ -1,8 +1,14 @@
 //! Minimal benchmarking kit (criterion is unavailable offline —
 //! DESIGN.md §6): warmup + repeated timing with median/min/mean stats,
 //! used by every `rust/benches/*.rs` custom-harness bench.
+//!
+//! [`JsonReport`] collects the stats of a run and writes them as a
+//! machine-readable `BENCH_<suite>.json` so the perf trajectory is
+//! diffable across PRs (protocol: EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
+
+use crate::util::json::{self, Value};
 
 /// Timing result for one benchmark case.
 #[derive(Clone, Debug)]
@@ -64,6 +70,51 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f:
     stats
 }
 
+/// Machine-readable collector for a bench suite: push every
+/// [`BenchStats`] (plus optional extra fields like `ns_per_elem`), then
+/// [`JsonReport::write`] emits `{suite, threads, cases: [...]}` JSON.
+pub struct JsonReport {
+    suite: String,
+    cases: Vec<Value>,
+}
+
+impl JsonReport {
+    pub fn new(suite: &str) -> JsonReport {
+        JsonReport { suite: suite.to_string(), cases: Vec::new() }
+    }
+
+    pub fn push(&mut self, s: &BenchStats) {
+        self.push_with(s, Vec::new());
+    }
+
+    /// Record stats with extra per-case fields (e.g. problem size n,
+    /// derived throughput numbers).
+    pub fn push_with(&mut self, s: &BenchStats, extra: Vec<(&str, Value)>) {
+        let mut pairs = vec![
+            ("name", json::s(&s.name)),
+            ("iters", json::num(s.iters as f64)),
+            ("mean_ns", json::num(s.mean_ns)),
+            ("median_ns", json::num(s.median_ns)),
+            ("min_ns", json::num(s.min_ns)),
+        ];
+        pairs.extend(extra);
+        self.cases.push(json::obj(pairs));
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("suite", json::s(&self.suite)),
+            ("threads", json::num(crate::util::pool::num_threads() as f64)),
+            ("cases", Value::Arr(self.cases.clone())),
+        ])
+    }
+
+    /// Write the report; returns the path it wrote for logging.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_string())
+    }
+}
+
 /// Time a single long-running call (suite-scale benches).
 pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
     let t0 = Instant::now();
@@ -88,6 +139,26 @@ mod tests {
         });
         assert!(s.min_ns >= 0.0 && s.mean_ns >= s.min_ns);
         assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new("unit");
+        let s = BenchStats {
+            name: "case_a".into(),
+            iters: 3,
+            mean_ns: 10.0,
+            median_ns: 9.0,
+            min_ns: 8.0,
+        };
+        rep.push(&s);
+        rep.push_with(&s, vec![("n", crate::util::json::num(64.0))]);
+        let v = crate::util::json::parse(&rep.to_value().to_string()).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "unit");
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("median_ns").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(cases[1].get("n").unwrap().as_usize().unwrap(), 64);
     }
 
     #[test]

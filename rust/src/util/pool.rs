@@ -58,6 +58,48 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 
+/// Apply `f(row_index, row)` to every `row_len`-sized row of `data` in
+/// place, splitting the rows across workers in contiguous bands (equal-cost
+/// rows — the LU trailing update, chopped GEMV — balance statically).
+///
+/// Writes are row-disjoint and the arithmetic order *within* each row is
+/// whatever `f` does sequentially, so results are bit-identical to the
+/// plain `for` loop for any `PA_THREADS` — the invariant the chopped-LU
+/// parallelization relies on (tests/kernel_bitexact.rs).
+pub fn parallel_for_rows<F>(data: &mut [f64], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert!(row_len > 0 && data.len() % row_len == 0);
+    let n_rows = data.len() / row_len;
+    let workers = num_threads().min(n_rows.max(1));
+    if workers <= 1 || n_rows <= 1 {
+        for (i, row) in data.chunks_exact_mut(row_len).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let base = n_rows / workers;
+    let extra = n_rows % workers;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = data;
+        let mut row0 = 0usize;
+        for w in 0..workers {
+            let take = base + usize::from(w < extra);
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+            rest = tail;
+            let start = row0;
+            row0 += take;
+            scope.spawn(move || {
+                for (r, row) in band.chunks_exact_mut(row_len).enumerate() {
+                    f(start + r, row);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +132,21 @@ mod tests {
         std::env::set_var("PA_THREADS", "3");
         assert_eq!(num_threads(), 3);
         std::env::remove_var("PA_THREADS");
+    }
+
+    #[test]
+    fn for_rows_covers_every_row_once() {
+        let row_len = 7;
+        for n_rows in [0usize, 1, 2, 5, 33] {
+            let mut data = vec![0.0f64; n_rows * row_len];
+            parallel_for_rows(&mut data, row_len, |i, row| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v += (i * row_len + j) as f64 + 1.0;
+                }
+            });
+            for (k, v) in data.iter().enumerate() {
+                assert_eq!(*v, k as f64 + 1.0, "slot {k} with {n_rows} rows");
+            }
+        }
     }
 }

@@ -1,0 +1,250 @@
+//! Bit-exactness regression lock for the vectorized chop kernels and the
+//! blocked/parallel chopped LU (DESIGN.md §Perf semantics contract):
+//!
+//! * the branch-free slice/fused kernels must match the scalar reference
+//!   `chop()` bit-for-bit on the golden vectors and on property-generated
+//!   inputs;
+//! * the panel-blocked, row-parallel `lu_factor_chopped` must match an
+//!   in-test copy of the seed's unblocked right-looking algorithm
+//!   bit-for-bit — for every precision, for sizes straddling the panel
+//!   width, and for `PA_THREADS` ∈ {1, 4}.
+
+use precision_autotune::chop::{
+    chop, chop_axpy, chop_block, chop_sub_scaled_row, format_by_name, Format, Prec, ALL_FORMATS,
+};
+use precision_autotune::linalg::lu::{lu_factor_chopped, LuError};
+use std::sync::Mutex;
+
+use precision_autotune::linalg::Mat;
+use precision_autotune::util::rng::Rng;
+
+/// Serializes the tests that mutate the process-global `PA_THREADS` env
+/// var — without this, cargo's parallel harness could interleave them and
+/// silently void the threads=4 coverage.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn bits_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn hex_to_bytes(s: &str) -> Vec<u8> {
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+#[test]
+fn chop_block_matches_golden_vectors() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/chop_golden.json");
+    let text = std::fs::read_to_string(path).expect("golden vectors present");
+    let v = precision_autotune::util::json::parse(&text).unwrap();
+    let mut n = 0;
+    for case in v.get("cases").unwrap().as_arr().unwrap() {
+        let x = f64::from_bits(u64::from_le_bytes(
+            hex_to_bytes(case.get("x").unwrap().as_str().unwrap()).try_into().unwrap(),
+        ));
+        for (fname, want_hex) in case.get("out").unwrap().as_obj().unwrap() {
+            let fmt = format_by_name(fname).unwrap();
+            let want = f64::from_bits(u64::from_le_bytes(
+                hex_to_bytes(want_hex.as_str().unwrap()).try_into().unwrap(),
+            ));
+            let mut buf = [x];
+            chop_block(&mut buf, &fmt);
+            assert!(
+                bits_eq(buf[0], want),
+                "chop_block({x:e}, {fname}) = {:e}, want {want:e}",
+                buf[0]
+            );
+            n += 1;
+        }
+    }
+    assert!(n > 2000, "golden coverage: {n}");
+}
+
+#[test]
+fn slice_and_fused_kernels_match_scalar_chop() {
+    let mut rng = Rng::new(0xB17E);
+    for trial in 0..200 {
+        let n = 1 + (trial % 65);
+        let xs: Vec<f64> = (0..n)
+            .map(|_| match rng.below(12) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f64::INFINITY,
+                3 => f64::NAN,
+                4 => 5e-324,
+                5 => -1e-310,
+                6 => f64::MAX,
+                _ => rng.gauss() * (rng.uniform_in(-300.0, 300.0)).exp2(),
+            })
+            .collect();
+        let ys: Vec<f64> = (0..n)
+            .map(|_| rng.gauss() * (rng.uniform_in(-40.0, 40.0)).exp2())
+            .collect();
+        let m = rng.gauss() * (rng.uniform_in(-20.0, 20.0)).exp2();
+        for f in &ALL_FORMATS {
+            let mut blk = xs.clone();
+            chop_block(&mut blk, f);
+            for (j, (&got, &x)) in blk.iter().zip(&xs).enumerate() {
+                assert!(bits_eq(got, chop(x, f)), "{} block[{j}] x={x:e}", f.name);
+            }
+            let mut sub = ys.clone();
+            chop_sub_scaled_row(&mut sub, m, &xs, f);
+            let mut axp = ys.clone();
+            chop_axpy(&mut axp, m, &xs, f);
+            for j in 0..n {
+                let p = chop(m * xs[j], f);
+                assert!(
+                    bits_eq(sub[j], chop(ys[j] - p, f)),
+                    "{} sub_scaled[{j}]",
+                    f.name
+                );
+                assert!(bits_eq(axp[j], chop(ys[j] + p, f)), "{} axpy[{j}]", f.name);
+            }
+        }
+    }
+}
+
+/// The seed's unblocked right-looking chopped LU, kept verbatim as the
+/// semantics reference the optimized implementation must reproduce.
+fn lu_reference(a: &Mat, p: Prec) -> Result<(Mat, Vec<usize>), LuError> {
+    let n = a.n_rows;
+    let fmt = p.format();
+    let mut lu = a.chopped(p);
+    let mut piv = vec![0usize; n];
+    for k in 0..n {
+        let mut best = -f64::INFINITY;
+        let mut pk = k;
+        for i in k..n {
+            let v = lu[(i, k)].abs();
+            if v > best {
+                best = v;
+                pk = i;
+            }
+        }
+        piv[k] = pk;
+        lu.swap_rows(k, pk);
+        let pivot = lu[(k, k)];
+        if pivot == 0.0 || !pivot.is_finite() {
+            return Err(LuError { step: k });
+        }
+        for i in k + 1..n {
+            let m = chop(lu[(i, k)] / pivot, fmt);
+            lu[(i, k)] = m;
+            if m != 0.0 {
+                let (top, bottom) = lu.data.split_at_mut((k + 1) * n);
+                let urow = &top[k * n..k * n + n];
+                let irow = &mut bottom[(i - k - 1) * n..(i - k - 1) * n + n];
+                if p == Prec::Fp64 {
+                    for j in k + 1..n {
+                        irow[j] -= m * urow[j];
+                    }
+                } else {
+                    for j in k + 1..n {
+                        irow[j] = chop(irow[j] - chop(m * urow[j], fmt), fmt);
+                    }
+                }
+            }
+        }
+    }
+    Ok((lu, piv))
+}
+
+fn random_mat(n: usize, seed: u64, diag: f64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { diag } else { 0.0 };
+        }
+    }
+    a
+}
+
+fn assert_lu_bitexact(a: &Mat, p: Prec, label: &str) {
+    let want = lu_reference(a, p);
+    let got = lu_factor_chopped(a, p);
+    match (want, got) {
+        (Err(we), Err(ge)) => assert_eq!(we.step, ge.step, "{label}: breakdown step"),
+        (Ok((wlu, wpiv)), Ok(g)) => {
+            assert_eq!(wpiv, g.piv, "{label}: pivots");
+            for (i, (x, y)) in wlu.data.iter().zip(&g.lu.data).enumerate() {
+                assert!(
+                    bits_eq(*x, *y),
+                    "{label}: lu[{i}] {x:e} vs {y:e} ({:016x} vs {:016x})",
+                    x.to_bits(),
+                    y.to_bits()
+                );
+            }
+        }
+        (w, g) => panic!("{label}: outcome mismatch {w:?} vs {g:?}"),
+    }
+}
+
+#[test]
+fn blocked_parallel_lu_matches_reference_across_threads() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Sizes straddle the 32-wide panel: below, at, just above, multiple
+    // panels, and a non-multiple tail.
+    let sizes = [3usize, 17, 31, 32, 33, 48, 64, 65, 96];
+    for threads in ["1", "4"] {
+        std::env::set_var("PA_THREADS", threads);
+        for (si, &n) in sizes.iter().enumerate() {
+            let a = random_mat(n, 1000 + si as u64, n as f64);
+            for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32, Prec::Fp64] {
+                assert_lu_bitexact(&a, p, &format!("n={n} {p} threads={threads}"));
+            }
+            // near-singular / no diagonal boost exercises pivot churn
+            let a2 = random_mat(n, 2000 + si as u64, 0.0);
+            assert_lu_bitexact(&a2, Prec::Bf16, &format!("wild n={n} threads={threads}"));
+        }
+        // breakdown parity: singular and bf16-overflow inputs
+        assert_lu_bitexact(&Mat::zeros(40, 40), Prec::Bf16, &format!("zeros threads={threads}"));
+        let mut big = Mat::eye(40);
+        for i in 0..40 {
+            big[(i, i)] = 1e39;
+        }
+        assert_lu_bitexact(&big, Prec::Bf16, &format!("overflow threads={threads}"));
+    }
+    std::env::remove_var("PA_THREADS");
+}
+
+#[test]
+fn parallel_chopped_matvec_matches_sequential_reference() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // n=512 crosses the parallel-dispatch threshold.
+    for threads in ["1", "4"] {
+        std::env::set_var("PA_THREADS", threads);
+        for n in [64usize, 512] {
+            let a = random_mat(n, 7, 1.0).chopped(Prec::Bf16);
+            let mut x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+            precision_autotune::chop::chop_slice(&mut x, Prec::Bf16);
+            let got = precision_autotune::linalg::chopped_matvec_prechopped(&a, &x, Prec::Bf16);
+            for i in 0..n {
+                let want = precision_autotune::chop::chop_p(
+                    precision_autotune::linalg::dot(a.row(i), &x),
+                    Prec::Bf16,
+                );
+                assert!(bits_eq(got[i], want), "row {i} n={n} threads={threads}");
+            }
+        }
+    }
+    std::env::remove_var("PA_THREADS");
+}
+
+#[test]
+fn custom_format_falls_back_to_scalar_path() {
+    // An fp64-adjacent format is outside the branch-free envelope; the
+    // kernels must still agree with scalar chop via the fallback loop.
+    let odd = Format { name: "t50", t: 50, emin: -1022, emax: 1023, xmax: f64::MAX };
+    let mut rng = Rng::new(5);
+    let xs: Vec<f64> = (0..256)
+        .map(|_| rng.gauss() * (rng.uniform_in(-320.0, 320.0)).exp2())
+        .collect();
+    let mut blk = xs.clone();
+    chop_block(&mut blk, &odd);
+    for (&got, &x) in blk.iter().zip(&xs) {
+        assert!(bits_eq(got, chop(x, &odd)), "x={x:e}");
+    }
+}
