@@ -47,10 +47,10 @@ fn main() -> Result<()> {
 
     // ---- Phase I: train (native backend — the fast sweep path) ----
     let train = dense_dataset(&cfg, cfg.n_train, 0);
-    let mut native = NativeBackend::new();
+    let native = NativeBackend::new();
     let mut cache = SolveCache::new();
     let t0 = Instant::now();
-    let (policy, _) = Trainer::new(&cfg, &mut cache).train(&mut native, &train, true)?;
+    let (policy, _) = Trainer::new(&cfg, &mut cache).train(&native, &train, true)?;
     println!(
         "phase I  (train, native): {} systems x {} episodes, {} unique solves, {:.1}s",
         train.len(),
@@ -61,12 +61,12 @@ fn main() -> Result<()> {
 
     // ---- Phase II: serve through the AOT artifacts (PJRT) ----
     let test = dense_dataset(&cfg, cfg.n_test, 1);
-    let mut pjrt = PjrtBackend::open("artifacts")?;
+    let pjrt = PjrtBackend::open("artifacts")?;
     let t1 = Instant::now();
-    let recs_pjrt = evaluate(&mut pjrt, &test, Some(&policy), &cfg)?;
+    let recs_pjrt = evaluate(&pjrt, &test, Some(&policy), &cfg)?;
     let serve_s = t1.elapsed().as_secs_f64();
-    let recs_native = evaluate(&mut native, &test, Some(&policy), &cfg)?;
-    let recs_fp64 = evaluate(&mut pjrt, &test, None, &cfg)?;
+    let recs_native = evaluate(&native, &test, Some(&policy), &cfg)?;
+    let recs_fp64 = evaluate(&pjrt, &test, None, &cfg)?;
 
     let mut t = Table::new(
         "Phase II: serving unseen systems through the PJRT artifacts",

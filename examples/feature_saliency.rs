@@ -50,9 +50,9 @@ fn main() -> Result<()> {
         cfg.bins_kappa = bk;
         cfg.bins_norm = bn;
         let mut cache = SolveCache::new();
-        let mut backend = NativeBackend::new();
-        let (policy, _) = Trainer::new(&cfg, &mut cache).train(&mut backend, &train, true)?;
-        let recs = evaluate(&mut backend, &test, Some(&policy), &cfg)?;
+        let backend = NativeBackend::new();
+        let (policy, _) = Trainer::new(&cfg, &mut cache).train(&backend, &train, true)?;
+        let recs = evaluate(&backend, &test, Some(&policy), &cfg)?;
         let rewards: Vec<f64> = recs
             .iter()
             .map(|r| {

@@ -39,7 +39,7 @@ fn main() -> Result<()> {
 
     let space = ActionSpace::reduced();
     let mut q = QTable::new(disc.n_states(), space.clone());
-    let mut backend = NativeBackend::new();
+    let backend = NativeBackend::new();
     let mut rng = Rng::new(cfg.seed);
 
     let mut window_reward = Vec::new();
@@ -53,7 +53,7 @@ fn main() -> Result<()> {
         let eps = (1.0 - i as f64 / stream_len as f64).max(cfg.eps_min);
         let (ai, _) = select_action(&q, s, eps, &mut rng);
         let action = space.actions[ai];
-        let out = gmres_ir(&mut backend, p, &action, &cfg)?;
+        let out = gmres_ir(&backend, p, &action, &cfg)?;
         let r = reward(
             &cfg,
             &action,
@@ -68,7 +68,7 @@ fn main() -> Result<()> {
         q.update(s, ai, r, 0.0); // 1/N(s,a) schedule — no retraining ever
 
         // baseline reward on the same instance
-        let base_out = gmres_ir(&mut backend, p, &Action::FP64, &cfg)?;
+        let base_out = gmres_ir(&backend, p, &Action::FP64, &cfg)?;
         let base_r = reward(
             &cfg,
             &Action::FP64,

@@ -5,9 +5,8 @@
 //!     cargo run --release --example quickstart
 
 use anyhow::Result;
+use precision_autotune::api::Autotuner;
 use precision_autotune::backend_native::NativeBackend;
-use precision_autotune::bandit::{SolveCache, Trainer};
-use precision_autotune::coordinator::eval::evaluate;
 use precision_autotune::gen::dense_dataset;
 use precision_autotune::util::config::{Config, Weights};
 use precision_autotune::util::tables::sci2;
@@ -25,20 +24,22 @@ fn main() -> Result<()> {
     // 2. Generate training systems (randsvd mode-2, κ ∈ 10^1..10^9) and
     //    train the contextual bandit (Alg. 3).
     let train = dense_dataset(&cfg, cfg.n_train, 0);
-    let mut backend = NativeBackend::new();
-    let mut cache = SolveCache::new();
+    let mut tuner = Autotuner::builder()
+        .backend(NativeBackend::new())
+        .config(cfg.clone())
+        .build()?;
     println!("training on {} systems x {} episodes ...", train.len(), cfg.episodes);
-    let (policy, trace) = Trainer::new(&cfg, &mut cache).train(&mut backend, &train, false)?;
+    let summary = tuner.train(&train, false)?;
     println!(
         "done: {} unique solves (memoized), final mean reward {:.3}\n",
-        cache.unique_solves(),
-        trace.mean_reward.last().unwrap()
+        summary.unique_solves,
+        summary.trace.mean_reward.last().unwrap()
     );
 
     // 3. Inference on unseen systems: the policy reads (κ̂, ‖A‖∞),
     //    discretizes, and greedily picks (u_f, u, u_g, u_r).
     let test = dense_dataset(&cfg, cfg.n_test, 1);
-    let records = evaluate(&mut backend, &test, Some(&policy), &cfg)?;
+    let records = tuner.evaluate(&test)?;
     println!("{:<4} {:>5} {:>10}  {:<28} {:>10} {:>6}", "id", "n", "kappa", "chosen action", "ferr", "gmres");
     for r in &records {
         println!(
@@ -52,8 +53,18 @@ fn main() -> Result<()> {
         );
     }
 
-    // 4. Save / reload the policy.
-    policy.save("results/quickstart_policy.json")?;
-    println!("\npolicy saved to results/quickstart_policy.json");
+    // 4. Serve a raw (A, b) pair through the facade — the deployment
+    //    path: features -> discretize -> greedy action -> GMRES-IR.
+    let rep = tuner.solve(&test[0].a, &test[0].b)?;
+    println!(
+        "\nfacade solve: action {} nbe {} ({} GMRES iters)",
+        rep.action,
+        sci2(rep.nbe),
+        rep.gmres_iters
+    );
+
+    // 5. Save the (versioned) policy JSON for `precision-autotune solve`.
+    tuner.policy().unwrap().save("results/quickstart_policy.json")?;
+    println!("policy saved to results/quickstart_policy.json");
     Ok(())
 }

@@ -9,7 +9,7 @@ use precision_autotune::chop::Prec;
 use precision_autotune::gen::{finish_problem, randsvd_mode2};
 use precision_autotune::runtime::PjrtBackend;
 use precision_autotune::solver::ir::gmres_ir;
-use precision_autotune::solver::SolverBackend;
+use precision_autotune::solver::{ProblemSession, SolverBackend};
 use precision_autotune::util::benchkit::{bench, bench_once};
 use precision_autotune::util::config::Config;
 use precision_autotune::util::rng::Rng;
@@ -20,26 +20,27 @@ fn main() {
         return;
     }
     println!("PJRT runtime benches\n");
-    let mut pjrt = PjrtBackend::open("artifacts").expect("open artifacts");
+    let pjrt = PjrtBackend::open("artifacts").expect("open artifacts");
 
     let mut rng = Rng::new(7);
     for n in [64usize, 128, 256] {
         let a = randsvd_mode2(n, 1e3, &mut rng);
+        let s = ProblemSession::new(&a);
         // first call includes XLA compilation (cached afterwards)
         let (_, compile_s) = bench_once(&format!("first lu_factor fp64 n={n} (compile+run)"), || {
-            pjrt.lu_factor(&a, Prec::Fp64).unwrap()
+            pjrt.lu_factor(&s, Prec::Fp64).unwrap()
         });
         let _ = compile_s;
-        let f = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
+        let f = pjrt.lu_factor(&s, Prec::Fp64).unwrap();
         bench(&format!("pjrt lu_factor fp64 n={n} (cached)"), 1, 5, || {
-            pjrt.lu_factor(&a, Prec::Fp64).unwrap().piv[0]
+            pjrt.lu_factor(&s, Prec::Fp64).unwrap().piv[0]
         });
         let b: Vec<f64> = (0..n).map(|i| i as f64).collect();
         bench(&format!("pjrt lu_solve  fp64 n={n}"), 1, 10, || {
             pjrt.lu_solve(&f, &b, Prec::Fp64).unwrap()[0]
         });
         bench(&format!("pjrt residual  bf16 n={n}"), 1, 10, || {
-            pjrt.residual(&a, &b, &b, Prec::Bf16).unwrap()[0]
+            pjrt.residual(&s, &b, &b, Prec::Bf16).unwrap()[0]
         });
     }
 
@@ -49,11 +50,11 @@ fn main() {
     let cfg = Config::small();
     let action = Action::FP64;
     bench("e2e IR solve n=96 fp64 [pjrt]", 1, 3, || {
-        gmres_ir(&mut pjrt, &p, &action, &cfg).unwrap().outer_iters
+        gmres_ir(&pjrt, &p, &action, &cfg).unwrap().outer_iters
     });
-    let mut native = NativeBackend::new();
+    let native = NativeBackend::new();
     bench("e2e IR solve n=96 fp64 [native]", 1, 3, || {
-        gmres_ir(&mut native, &p, &action, &cfg).unwrap().outer_iters
+        gmres_ir(&native, &p, &action, &cfg).unwrap().outer_iters
     });
     println!(
         "\nartifacts compiled this session: {}",

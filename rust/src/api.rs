@@ -1,0 +1,450 @@
+//! Library-first serving facade: the [`Autotuner`].
+//!
+//! The repro CLI drives the bandit through the experiment harness; this
+//! module is the public API for everything *after* training — the
+//! deployment mode of "Learning to Relax": a tuned policy applied across
+//! a stream of incoming linear systems, solver-agnostic behind
+//! [`SolverBackend`].
+//!
+//! ```no_run
+//! use precision_autotune::api::Autotuner;
+//! use precision_autotune::backend_native::NativeBackend;
+//! use precision_autotune::bandit::TrainedPolicy;
+//! use precision_autotune::linalg::Mat;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let tuner = Autotuner::builder()
+//!     .backend(NativeBackend::new())
+//!     .policy(TrainedPolicy::load("results/policy.json")?)
+//!     .build()?;
+//! let a = Mat::eye(64);
+//! let b = vec![1.0; 64];
+//! let report = tuner.solve(&a, &b)?;
+//! println!("{} in {} GMRES iters, nbe {:.2e}", report.action, report.gmres_iters, report.nbe);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! One [`Autotuner`] is immutable after `build()` and `Send + Sync` —
+//! callers may share it across request threads; every `solve` opens its
+//! own [`crate::solver::ProblemSession`] internally.
+
+use anyhow::{bail, Result};
+
+use crate::backend_native::NativeBackend;
+use crate::bandit::action::Action;
+use crate::bandit::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};
+use crate::chop::Prec;
+use crate::coordinator::eval::EvalRecord;
+use crate::gen::Problem;
+use crate::linalg::condest::condest_1;
+use crate::linalg::lu::lu_factor;
+use crate::linalg::Mat;
+use crate::solver::ir::{gmres_ir_prefactored, StopReason};
+use crate::solver::{LuHandle, ProblemSession, SolverBackend};
+use crate::util::config::Config;
+
+/// Everything one facade solve reports. There is no reference solution
+/// for user-supplied systems, so accuracy is the normwise relative
+/// backward error (`nbe`); `ferr` of the underlying driver is NaN.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// The computed solution.
+    pub x: Vec<f64>,
+    /// The precision configuration the policy picked (all-FP64 without a
+    /// policy, or for context bins the agent never visited).
+    pub action: Action,
+    /// Normwise relative backward error of `x`.
+    pub nbe: f64,
+    /// Outer refinement iterations.
+    pub outer_iters: usize,
+    /// Total inner GMRES iterations.
+    pub gmres_iters: usize,
+    /// Why refinement stopped.
+    pub stop: StopReason,
+    /// True when the solve broke down (LU breakdown, divergence, or a
+    /// non-finite backward error).
+    pub failed: bool,
+    /// Hager–Higham κ₁ estimate of A (context feature φ₁).
+    pub kappa_est: f64,
+    /// ‖A‖∞ (context feature φ₂).
+    pub norm_inf: f64,
+    /// Which backend solved it.
+    pub backend: &'static str,
+}
+
+/// What [`Autotuner::train`] returns besides the policy it installs.
+#[derive(Clone, Debug)]
+pub struct TrainSummary {
+    pub trace: EpisodeTrace,
+    pub unique_solves: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Serving facade over (backend, policy, config). Built via
+/// [`Autotuner::builder`]; see the module docs for the quickstart.
+pub struct Autotuner {
+    backend: Box<dyn SolverBackend>,
+    policy: Option<TrainedPolicy>,
+    cfg: Config,
+}
+
+/// Builder for [`Autotuner`]. Defaults: native backend, no policy (every
+/// solve uses the all-FP64 baseline action), `Config::default()`.
+#[derive(Default)]
+pub struct AutotunerBuilder {
+    backend: Option<Box<dyn SolverBackend>>,
+    policy: Option<TrainedPolicy>,
+    cfg: Option<Config>,
+}
+
+impl AutotunerBuilder {
+    /// Use a concrete backend value (boxed internally).
+    pub fn backend(mut self, b: impl SolverBackend + 'static) -> AutotunerBuilder {
+        self.backend = Some(Box::new(b));
+        self
+    }
+
+    /// Use an already-boxed backend (e.g. from a CLI `--backend` switch).
+    pub fn boxed_backend(mut self, b: Box<dyn SolverBackend>) -> AutotunerBuilder {
+        self.backend = Some(b);
+        self
+    }
+
+    /// Serve this trained policy (see [`TrainedPolicy::load`]).
+    pub fn policy(mut self, p: TrainedPolicy) -> AutotunerBuilder {
+        self.policy = Some(p);
+        self
+    }
+
+    /// Solver configuration (τ, iteration caps, ...); defaults to the
+    /// paper's §5 settings.
+    pub fn config(mut self, cfg: Config) -> AutotunerBuilder {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Validate and assemble. Fails loudly on an inconsistent policy
+    /// (empty action list or Q-table/discretizer shape mismatch) instead
+    /// of deferring the surprise to the first solve.
+    pub fn build(self) -> Result<Autotuner> {
+        let backend = self
+            .backend
+            .unwrap_or_else(|| Box::new(NativeBackend::new()));
+        let cfg = self.cfg.unwrap_or_default();
+        if let Some(pol) = &self.policy {
+            if pol.qtable.space.is_empty() {
+                bail!("policy has an empty action space");
+            }
+            if pol.qtable.n_states != pol.discretizer.n_states() {
+                bail!(
+                    "policy Q-table covers {} states but its discretizer defines {}",
+                    pol.qtable.n_states,
+                    pol.discretizer.n_states()
+                );
+            }
+        }
+        Ok(Autotuner { backend, policy: self.policy, cfg })
+    }
+}
+
+impl Autotuner {
+    pub fn builder() -> AutotunerBuilder {
+        AutotunerBuilder::default()
+    }
+
+    /// The served policy, if any.
+    pub fn policy(&self) -> Option<&TrainedPolicy> {
+        self.policy.as_ref()
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Extract context features and pick the precision configuration the
+    /// policy would use for `a` — without solving. Returns the action
+    /// plus the (κ₁ estimate, ‖A‖∞) features it was chosen from.
+    pub fn select_action(&self, a: &Mat) -> Result<(Action, f64, f64)> {
+        let (p, _) = self.wrap_problem(a, &[])?;
+        let action = match &self.policy {
+            Some(pol) => pol.select(&p),
+            None => Action::FP64,
+        };
+        Ok((action, p.kappa_est, p.norm_inf))
+    }
+
+    /// Solve `A x = b`: features → discretize → greedy action → GMRES-IR
+    /// → metrics. Thread-safe; call freely from concurrent requests.
+    ///
+    /// When the chosen action factors in fp64 and the backend accepts
+    /// host factors (the native one does), the f64 LU already computed
+    /// for the κ₁ feature is reused as the refinement factorization —
+    /// one O(n³) factorization per request instead of two.
+    pub fn solve(&self, a: &Mat, b: &[f64]) -> Result<SolveReport> {
+        let (p, f64_lu) = self.wrap_problem(a, b)?;
+        let action = match &self.policy {
+            Some(pol) => pol.select(&p),
+            None => Action::FP64,
+        };
+        self.solve_prepared(p, f64_lu, action)
+    }
+
+    /// Solve with an explicit precision configuration, bypassing the
+    /// policy (baselines, A/B comparisons).
+    pub fn solve_with_action(&self, a: &Mat, b: &[f64], action: Action) -> Result<SolveReport> {
+        let (p, f64_lu) = self.wrap_problem(a, b)?;
+        self.solve_prepared(p, f64_lu, action)
+    }
+
+    /// Evaluate the served policy over generated [`Problem`]s (which carry
+    /// reference solutions — this is the harness path, parallel across
+    /// problems).
+    pub fn evaluate(&self, problems: &[Problem]) -> Result<Vec<EvalRecord>> {
+        crate::coordinator::eval::evaluate(
+            self.backend.as_ref(),
+            problems,
+            self.policy.as_ref(),
+            &self.cfg,
+        )
+    }
+
+    /// Train a policy on `problems` with this tuner's config and backend,
+    /// install it, and return the training telemetry. Subsequent
+    /// [`Autotuner::solve`] calls serve the fresh policy.
+    pub fn train(&mut self, problems: &[Problem], quiet: bool) -> Result<TrainSummary> {
+        let mut cache = SolveCache::new();
+        let (policy, trace) =
+            Trainer::new(&self.cfg, &mut cache).train(self.backend.as_ref(), problems, quiet)?;
+        self.policy = Some(policy);
+        Ok(TrainSummary {
+            trace,
+            unique_solves: cache.unique_solves(),
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+        })
+    }
+
+    /// Wrap a raw (A, b) into the [`Problem`] shape the driver and the
+    /// discretizer consume, plus the f64 LU the κ₁ estimate was derived
+    /// from (None on a singular matrix), kept for factorization reuse.
+    /// `x_true` stays empty — the serving path has no reference solution
+    /// (see `solver::ir`). `b` may be empty for feature-only paths. The
+    /// O(n²) clone of A is noise next to the O(n³) feature
+    /// factorization run on the same call.
+    fn wrap_problem(&self, a: &Mat, b: &[f64]) -> Result<(Problem, Option<LuHandle>)> {
+        if a.n_rows != a.n_cols {
+            bail!("matrix must be square, got {}x{}", a.n_rows, a.n_cols);
+        }
+        if a.n_rows == 0 {
+            bail!("matrix is empty");
+        }
+        if !b.is_empty() && b.len() != a.n_rows {
+            bail!("rhs length {} does not match matrix size {}", b.len(), a.n_rows);
+        }
+        if a.has_non_finite() || b.iter().any(|v| !v.is_finite()) {
+            bail!("matrix or rhs contains non-finite entries");
+        }
+        // same semantics as gen::features_of, but keeping the LU
+        let norm_inf = a.norm_inf();
+        let (kappa_est, f64_lu) = match lu_factor(a) {
+            Ok(lu) => {
+                let kappa = condest_1(a, &lu);
+                let handle = LuHandle {
+                    lu: lu.lu,
+                    piv: lu.piv.iter().map(|&x| x as i32).collect(),
+                    prec: Prec::Fp64,
+                };
+                (kappa, Some(handle))
+            }
+            Err(_) => (f64::INFINITY, None),
+        };
+        let p = Problem {
+            id: 0,
+            a: a.clone(),
+            b: b.to_vec(),
+            x_true: Vec::new(),
+            n: a.n_rows,
+            kappa_target: f64::NAN,
+            kappa_est,
+            norm_inf,
+            density: a.nnz_fraction(),
+        };
+        Ok((p, f64_lu))
+    }
+
+    fn solve_prepared(
+        &self,
+        p: Problem,
+        f64_lu: Option<LuHandle>,
+        action: Action,
+    ) -> Result<SolveReport> {
+        if p.b.len() != p.n {
+            bail!("rhs length {} does not match matrix size {}", p.b.len(), p.n);
+        }
+        // Reuse the feature LU as the refinement factorization when it is
+        // exactly what the action asks for (u_f = fp64) and the backend
+        // consumes host-layout factors (PJRT needs bucket-padded ones
+        // produced by its own lu_factor, so it opts out).
+        let prefactored = if action.u_f == Prec::Fp64 && self.backend.accepts_host_factors() {
+            f64_lu.as_ref()
+        } else {
+            None
+        };
+        let session = ProblemSession::new(&p.a);
+        let out =
+            gmres_ir_prefactored(self.backend.as_ref(), &session, &p, &action, &self.cfg, prefactored)?;
+        Ok(SolveReport {
+            x: out.x,
+            action,
+            nbe: out.nbe,
+            outer_iters: out.outer_iters,
+            gmres_iters: out.gmres_iters,
+            stop: out.stop,
+            failed: out.failed,
+            kappa_est: p.kappa_est,
+            norm_inf: p.norm_inf,
+            backend: self.backend.name(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::dense_dataset;
+    use crate::util::rng::Rng;
+
+    fn well_conditioned_system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        (a, xt, b)
+    }
+
+    fn tiny_cfg() -> Config {
+        let mut c = Config::tiny();
+        c.size_min = 24;
+        c.size_max = 40;
+        c.episodes = 15;
+        c
+    }
+
+    #[test]
+    fn solve_without_policy_uses_fp64_baseline() {
+        let tuner = Autotuner::builder().build().unwrap();
+        let (a, xt, b) = well_conditioned_system(32, 1);
+        let rep = tuner.solve(&a, &b).unwrap();
+        assert_eq!(rep.action, Action::FP64);
+        assert!(!rep.failed);
+        assert!(rep.nbe < 1e-14, "nbe {}", rep.nbe);
+        assert_eq!(rep.backend, "native");
+        // the solution really solves the system
+        let ferr = crate::solver::metrics::ferr(&rep.x, &xt);
+        assert!(ferr < 1e-10, "ferr {ferr}");
+        assert!(rep.kappa_est >= 1.0 && rep.norm_inf > 0.0);
+    }
+
+    #[test]
+    fn trained_tuner_serves_policy_end_to_end() {
+        let cfg = tiny_cfg();
+        let train = dense_dataset(&cfg, 10, 40);
+        let mut tuner = Autotuner::builder()
+            .backend(NativeBackend::new())
+            .config(cfg)
+            .build()
+            .unwrap();
+        let summary = tuner.train(&train, true).unwrap();
+        assert!(summary.unique_solves > 0);
+        assert!(tuner.policy().is_some());
+        let (a, _, b) = well_conditioned_system(30, 7);
+        let rep = tuner.solve(&a, &b).unwrap();
+        assert!(!rep.failed, "stop {:?}", rep.stop);
+        // the policy may legitimately pick a very low precision config for
+        // this easy system; refinement still bounds the backward error
+        assert!(rep.nbe.is_finite() && rep.nbe < 1e-2, "nbe {}", rep.nbe);
+        // select_action agrees with what solve used
+        let (action, kappa, norm) = tuner.select_action(&a).unwrap();
+        assert_eq!(action, rep.action);
+        assert_eq!(kappa.to_bits(), rep.kappa_est.to_bits());
+        assert_eq!(norm.to_bits(), rep.norm_inf.to_bits());
+    }
+
+    #[test]
+    fn shape_errors_are_loud() {
+        let tuner = Autotuner::builder().build().unwrap();
+        let rect = Mat::zeros(3, 4);
+        assert!(tuner.solve(&rect, &[1.0; 3]).is_err());
+        let (a, _, _) = well_conditioned_system(8, 2);
+        let err = tuner.solve(&a, &[1.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("rhs length"), "{err}");
+        let mut bad = a.clone();
+        bad[(0, 0)] = f64::NAN;
+        assert!(tuner.solve(&bad, &[1.0; 8]).is_err());
+    }
+
+    #[test]
+    fn builder_rejects_inconsistent_policy() {
+        let cfg = tiny_cfg();
+        let train = dense_dataset(&cfg, 4, 60);
+        let mut cache = SolveCache::new();
+        let (mut policy, _) = Trainer::new(&cfg, &mut cache)
+            .train(&NativeBackend::new(), &train, true)
+            .unwrap();
+        policy.qtable.n_states += 1; // break the shape invariant
+        let err = Autotuner::builder().policy(policy).build().unwrap_err();
+        assert!(err.to_string().contains("states"), "{err}");
+    }
+
+    #[test]
+    fn solve_with_action_overrides_policy() {
+        let tuner = Autotuner::builder().build().unwrap();
+        let (a, _, b) = well_conditioned_system(24, 3);
+        let act = Action {
+            u_f: crate::chop::Prec::Bf16,
+            u: crate::chop::Prec::Fp64,
+            u_g: crate::chop::Prec::Fp64,
+            u_r: crate::chop::Prec::Fp64,
+        };
+        let rep = tuner.solve_with_action(&a, &b, act).unwrap();
+        assert_eq!(rep.action, act);
+        assert!(!rep.failed);
+    }
+
+    #[test]
+    fn fp64_factor_reuse_is_bit_identical_to_refactoring() {
+        // solve() reuses the feature LU when u_f = fp64; the result must
+        // be bit-identical to the driver factoring for itself (both call
+        // the same lu_factor_chopped(A, Fp64)).
+        let tuner = Autotuner::builder().build().unwrap();
+        let (a, _, b) = well_conditioned_system(28, 9);
+        let rep = tuner.solve(&a, &b).unwrap();
+        let (p, _) = tuner.wrap_problem(&a, &b).unwrap();
+        let out =
+            crate::solver::ir::gmres_ir(tuner.backend.as_ref(), &p, &Action::FP64, tuner.config())
+                .unwrap();
+        assert_eq!(rep.x.len(), out.x.len());
+        for (u, v) in rep.x.iter().zip(&out.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(rep.nbe.to_bits(), out.nbe.to_bits());
+        assert_eq!(rep.gmres_iters, out.gmres_iters);
+    }
+
+    #[test]
+    fn autotuner_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Autotuner>();
+    }
+}

@@ -4,6 +4,11 @@
 //! Pallas kernel, dot products accumulate in f64, storage is rounded per
 //! step — so the PJRT path and this path agree to summation-order noise
 //! (verified by the runtime integration tests).
+//!
+//! The backend itself is a zero-sized, stateless value: all per-problem
+//! derived state (the chopped copies of A shared between the residual and
+//! GMRES steps of one solve) lives in the caller's [`ProblemSession`],
+//! which is what lets one `NativeBackend` serve concurrent solves.
 
 use std::sync::Arc;
 
@@ -13,64 +18,17 @@ use crate::chop::Prec;
 use crate::linalg::gmres::gmres_preconditioned;
 use crate::linalg::lu::{lu_factor_chopped, LuFactors};
 use crate::linalg::{chopped_residual, Mat};
-use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
+use crate::solver::{GmresOutcome, LuHandle, ProblemSession, SolverBackend};
 
-/// Native backend. Caches the chopped copy of A between the residual /
-/// GMRES steps of one solve (invalidated by [`SolverBackend::reset`]).
-/// The cache hands out `Arc` clones — a hit is O(1), never an O(n²) copy.
-#[derive(Default)]
-pub struct NativeBackend {
-    /// (matrix fingerprint, precision) -> chopped copy of A
-    a_cache: Option<(u64, Prec, Arc<Mat>)>,
-}
+/// Native backend. Stateless — see [`ProblemSession`] for where the
+/// chopped-A copies live.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend { a_cache: None }
+        NativeBackend
     }
-
-    fn chopped_a(&mut self, a: &Mat, p: Prec) -> Arc<Mat> {
-        let fp = fingerprint(a);
-        if let Some((cfp, cp, cached)) = &self.a_cache {
-            if *cfp == fp && *cp == p {
-                return Arc::clone(cached);
-            }
-        }
-        let m = Arc::new(a.chopped(p));
-        self.a_cache = Some((fp, p, Arc::clone(&m)));
-        m
-    }
-}
-
-/// Content fingerprint of a matrix: both dims plus a full pass over the
-/// data. The seed version sampled 16 entries, which silently returned a
-/// stale cached matrix whenever two problems agreed on those entries; a
-/// full pass closes that hole. Four independent FNV lanes keep the chain
-/// ILP-bound (~4 entries/cycle), so even at n=512 the hash is ≪ one
-/// chopped GEMV. Shared with the PJRT backend's padded-A cache.
-pub(crate) fn fingerprint(a: &Mat) -> u64 {
-    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
-    const FNV_PRIME: u64 = 0x100000001b3;
-    let mut lanes = [
-        FNV_OFFSET,
-        FNV_OFFSET ^ 0x9e3779b97f4a7c15,
-        FNV_OFFSET ^ 0x6a09e667f3bcc908,
-        FNV_OFFSET ^ 0xbb67ae8584caa73b,
-    ];
-    let mut chunks = a.data.chunks_exact(4);
-    for c in &mut chunks {
-        for (l, x) in lanes.iter_mut().zip(c) {
-            *l = (*l ^ x.to_bits()).wrapping_mul(FNV_PRIME);
-        }
-    }
-    for (l, x) in lanes.iter_mut().zip(chunks.remainder()) {
-        *l = (*l ^ x.to_bits()).wrapping_mul(FNV_PRIME);
-    }
-    let mut h = FNV_OFFSET;
-    for v in [a.n_rows as u64, a.n_cols as u64, lanes[0], lanes[1], lanes[2], lanes[3]] {
-        h = (h ^ v).wrapping_mul(FNV_PRIME);
-    }
-    h
 }
 
 /// Zero-copy view of a handle as linalg factors (`Arc` clone + O(n) piv).
@@ -83,8 +41,8 @@ fn to_factors(f: &LuHandle) -> LuFactors {
 }
 
 impl SolverBackend for NativeBackend {
-    fn lu_factor(&mut self, a: &Mat, p: Prec) -> Result<LuHandle> {
-        let f = lu_factor_chopped(a, p).map_err(|e| anyhow!("{e}"))?;
+    fn lu_factor(&self, s: &ProblemSession<'_>, p: Prec) -> Result<LuHandle> {
+        let f = lu_factor_chopped(s.a(), p).map_err(|e| anyhow!("{e}"))?;
         Ok(LuHandle {
             lu: f.lu,
             piv: f.piv.iter().map(|&x| x as i32).collect(),
@@ -92,21 +50,21 @@ impl SolverBackend for NativeBackend {
         })
     }
 
-    fn lu_solve(&mut self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>> {
+    fn lu_solve(&self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>> {
         Ok(to_factors(f).solve_chopped(b, p))
     }
 
-    fn residual(&mut self, a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
-        // chopped_residual chops A internally; reuse the cached copy when
-        // the precision matches to avoid re-chopping 512^2 entries per
-        // outer iteration.
+    fn residual(&self, s: &ProblemSession<'_>, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
+        // chopped_residual chops A internally; reuse the session's cached
+        // copy when the precision matters to avoid re-chopping 512^2
+        // entries per outer iteration.
         if p == Prec::Fp64 {
-            return Ok(chopped_residual(a, x, b, p));
+            return Ok(chopped_residual(s.a(), x, b, p));
         }
-        let ac = self.chopped_a(a, p);
+        let ac = s.chopped(p);
         let mut xc = x.to_vec();
         crate::chop::chop_slice(&mut xc, p);
-        let ax = crate::linalg::chopped_matvec_prechopped(&ac, &xc, p);
+        let ax = crate::linalg::chopped_matvec_prechopped(ac, &xc, p);
         Ok(b.iter()
             .zip(ax)
             .map(|(bi, axi)| crate::chop::chop_p(crate::chop::chop_p(*bi, p) - axi, p))
@@ -114,8 +72,8 @@ impl SolverBackend for NativeBackend {
     }
 
     fn gmres(
-        &mut self,
-        a: &Mat,
+        &self,
+        s: &ProblemSession<'_>,
         f: &LuHandle,
         r: &[f64],
         tol: f64,
@@ -123,14 +81,8 @@ impl SolverBackend for NativeBackend {
         p: Prec,
     ) -> Result<GmresOutcome> {
         // fp64 needs no chopped copy at all; other precisions borrow the
-        // cached Arc — no O(n²) clone on either path.
-        let cached;
-        let ap: &Mat = if p == Prec::Fp64 {
-            a
-        } else {
-            cached = self.chopped_a(a, p);
-            &cached
-        };
+        // session's cached copy — no O(n²) clone on either path.
+        let ap: &Mat = s.chopped(p);
         let res = gmres_preconditioned(ap, &to_factors(f), r, tol, max_m, p);
         Ok(GmresOutcome {
             z: res.z,
@@ -144,8 +96,8 @@ impl SolverBackend for NativeBackend {
         "native"
     }
 
-    fn reset(&mut self) {
-        self.a_cache = None;
+    fn accepts_host_factors(&self) -> bool {
+        true
     }
 }
 
@@ -170,11 +122,12 @@ mod tests {
     #[test]
     fn full_step_sequence_solves() {
         let (a, xt, b) = system(40, 0);
-        let mut be = NativeBackend::new();
-        let f = be.lu_factor(&a, Prec::Fp64).unwrap();
+        let be = NativeBackend::new();
+        let s = ProblemSession::new(&a);
+        let f = be.lu_factor(&s, Prec::Fp64).unwrap();
         let x0 = be.lu_solve(&f, &b, Prec::Fp64).unwrap();
-        let r = be.residual(&a, &x0, &b, Prec::Fp64).unwrap();
-        let g = be.gmres(&a, &f, &r, 1e-10, 50, Prec::Fp64).unwrap();
+        let r = be.residual(&s, &x0, &b, Prec::Fp64).unwrap();
+        let g = be.gmres(&s, &f, &r, 1e-10, 50, Prec::Fp64).unwrap();
         assert!(g.ok);
         let x1: Vec<f64> = x0.iter().zip(&g.z).map(|(a, b)| a + b).collect();
         let ferr = crate::solver::metrics::ferr(&x1, &xt);
@@ -182,64 +135,63 @@ mod tests {
     }
 
     #[test]
-    fn residual_cache_consistent_with_uncached() {
+    fn residual_session_cache_consistent_with_uncached() {
         let (a, _, b) = system(30, 1);
         let x = vec![0.5; 30];
-        let mut be = NativeBackend::new();
-        let r1 = be.residual(&a, &x, &b, Prec::Bf16).unwrap();
-        let r2 = be.residual(&a, &x, &b, Prec::Bf16).unwrap(); // cached path
+        let be = NativeBackend::new();
+        let s = ProblemSession::new(&a);
+        let r1 = be.residual(&s, &x, &b, Prec::Bf16).unwrap();
+        let r2 = be.residual(&s, &x, &b, Prec::Bf16).unwrap(); // cached path
         let r3 = crate::linalg::chopped_residual(&a, &x, &b, Prec::Bf16);
         assert_eq!(r1, r2);
         assert_eq!(r1, r3);
     }
 
     #[test]
-    fn cache_distinguishes_precisions_and_matrices() {
+    fn sessions_isolate_problems_and_precisions() {
         let (a, _, b) = system(20, 2);
         let (a2, _, b2) = system(20, 3);
         let x = vec![1.0; 20];
-        let mut be = NativeBackend::new();
-        let r16 = be.residual(&a, &x, &b, Prec::Bf16).unwrap();
-        let r32 = be.residual(&a, &x, &b, Prec::Fp32).unwrap();
+        let be = NativeBackend::new();
+        let s = ProblemSession::new(&a);
+        let r16 = be.residual(&s, &x, &b, Prec::Bf16).unwrap();
+        let r32 = be.residual(&s, &x, &b, Prec::Fp32).unwrap();
         assert_ne!(r16, r32);
-        let ra2 = be.residual(&a2, &x, &b2, Prec::Fp32).unwrap();
+        // a second session over a different matrix sees only its own data
+        let s2 = ProblemSession::new(&a2);
+        let ra2 = be.residual(&s2, &x, &b2, Prec::Fp32).unwrap();
         let ra2_direct = crate::linalg::chopped_residual(&a2, &x, &b2, Prec::Fp32);
         assert_eq!(ra2, ra2_direct);
     }
 
     #[test]
     fn factorization_failure_is_err() {
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let a = Mat::zeros(5, 5);
-        assert!(be.lu_factor(&a, Prec::Fp64).is_err());
+        let s = ProblemSession::new(&a);
+        assert!(be.lu_factor(&s, Prec::Fp64).is_err());
     }
 
     #[test]
-    fn fingerprint_sees_every_entry() {
-        // Regression: the seed fingerprint sampled ~16 entries, so two
-        // matrices agreeing on those returned a stale cached chop. The
-        // full-pass hash must distinguish a single-entry change anywhere.
-        let (a, _, b) = system(20, 5);
-        for idx in [1usize, 3, 7, 26, 399] {
-            let mut a2 = a.clone();
-            a2.data[idx] += 10.0;
-            assert_ne!(fingerprint(&a), fingerprint(&a2), "idx {idx}");
-            let x = vec![1.0; 20];
-            let mut be = NativeBackend::new();
-            let _ = be.residual(&a, &x, &b, Prec::Bf16).unwrap();
-            let r2 = be.residual(&a2, &x, &b, Prec::Bf16).unwrap();
-            let direct = crate::linalg::chopped_residual(&a2, &x, &b, Prec::Bf16);
-            assert_eq!(r2, direct, "stale cache served for idx {idx}");
-        }
-        // transpose-shaped data with identical content must differ too
-        let mut tall = Mat::zeros(4, 2);
-        let mut wide = Mat::zeros(2, 4);
-        for (i, v) in tall.data.iter_mut().enumerate() {
-            *v = i as f64;
-        }
-        for (i, v) in wide.data.iter_mut().enumerate() {
-            *v = i as f64;
-        }
-        assert_ne!(fingerprint(&tall), fingerprint(&wide));
+    fn shared_backend_parallel_solves_match_serial() {
+        // The thread-safety contract: one backend value, many concurrent
+        // sessions, bit-identical results to the serial loop.
+        let systems: Vec<(Mat, Vec<f64>, Vec<f64>)> = (0..6).map(|i| system(24, 10 + i)).collect();
+        let be = NativeBackend::new();
+        let serial: Vec<Vec<f64>> = systems
+            .iter()
+            .map(|(a, _, b)| {
+                let s = ProblemSession::new(a);
+                let f = be.lu_factor(&s, Prec::Bf16).unwrap();
+                be.lu_solve(&f, b, Prec::Bf16).unwrap()
+            })
+            .collect();
+        let parallel = crate::util::pool::parallel_map(systems.len(), |i| {
+            let (a, _, b) = &systems[i];
+            let s = ProblemSession::new(a);
+            let f = be.lu_factor(&s, Prec::Bf16).unwrap();
+            be.lu_solve(&f, b, Prec::Bf16).unwrap()
+        });
+        assert_eq!(serial, parallel);
     }
 }

@@ -6,21 +6,30 @@
 //! T × N_train (10⁴); everything else is O(1) lookups. This is the key
 //! L3 optimization that makes paper-scale training tractable on one core
 //! (EXPERIMENTS.md §Perf).
+//!
+//! With the stateless-session backend API the exhaustive precompute is
+//! additionally **parallel across problems** (`PA_THREADS` workers):
+//! each worker owns a private [`ProblemSession`] and a private per-u_f
+//! factor memo, outcomes are keyed by (problem, action), and every solve
+//! is deterministic — so the cache contents are bit-identical for any
+//! thread count (regression-locked by `tests/api_parallel.rs`).
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use anyhow::{bail, Context as _, Result};
 
 use crate::bandit::action::ActionSpace;
 use crate::bandit::policy::{epsilon_at, select_action};
 use crate::bandit::qtable::QTable;
 use crate::bandit::reward::{reward, RewardInputs};
+use crate::chop::Prec;
 use crate::features::Discretizer;
 use crate::gen::Problem;
-use crate::solver::ir::gmres_ir;
-use crate::solver::SolverBackend;
+use crate::solver::ir::{gmres_ir_prefactored, SolveOutcome};
+use crate::solver::{LuHandle, ProblemSession, SolverBackend};
 use crate::util::config::Config;
 use crate::util::json::{self, Value};
+use crate::util::pool::parallel_map;
 use crate::util::rng::Rng;
 
 /// Per-episode training telemetry (appendix Figures 5–12: total reward
@@ -45,6 +54,18 @@ pub struct CachedOutcome {
     pub failed: bool,
 }
 
+impl CachedOutcome {
+    fn of(out: &SolveOutcome) -> CachedOutcome {
+        CachedOutcome {
+            ferr: out.ferr,
+            nbe: out.nbe,
+            outer_iters: out.outer_iters,
+            gmres_iters: out.gmres_iters,
+            failed: out.failed,
+        }
+    }
+}
+
 /// Memoized solve outcomes keyed by (problem index, action index).
 ///
 /// Rewards depend on the weight setting but *outcomes* do not, so one
@@ -53,6 +74,14 @@ pub struct CachedOutcome {
 #[derive(Default)]
 pub struct SolveCache {
     map: HashMap<(usize, usize), CachedOutcome>,
+    /// LU memo for the non-precomputed fallback path, keyed by (problem
+    /// index, u_f index); `None` records a breakdown. Factors recur
+    /// across episodes (ε-greedy visits each problem once per episode,
+    /// in problem-major order), so the memo must span problems to ever
+    /// hit. Worst-case retention is N·4 `Arc`'d factor matrices while a
+    /// large-action-space training is in flight; [`Trainer::train`]
+    /// releases it when the episode loop finishes.
+    factor_memo: HashMap<(usize, usize), Option<LuHandle>>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -66,10 +95,23 @@ impl SolveCache {
         self.map.len()
     }
 
+    /// The memoized outcome for `(pi, ai)`, if already computed.
+    pub fn cached(&self, pi: usize, ai: usize) -> Option<CachedOutcome> {
+        self.map.get(&(pi, ai)).copied()
+    }
+
     /// Get or compute the outcome of solving `problems[pi]` with `action`.
+    ///
+    /// The compute path shares one LU factorization per (problem, u_f)
+    /// through the `factor_memo`, instead of re-factoring A on every
+    /// action (the seed version called plain `gmres_ir`, which re-ran the
+    /// O(n³) factorization per action). Unlike `precompute`, the chopped
+    /// copies of A are *not* shared across actions — each miss opens a
+    /// fresh session, an accepted O(n²) cost on this fallback path
+    /// (sessions borrow the problem and cannot outlive one call here).
     pub fn outcome(
         &mut self,
-        backend: &mut dyn SolverBackend,
+        backend: &dyn SolverBackend,
         problems: &[Problem],
         pi: usize,
         action: &crate::bandit::action::Action,
@@ -81,16 +123,27 @@ impl SolveCache {
             return Ok(*o);
         }
         self.misses += 1;
-        let out = gmres_ir(backend, &problems[pi], action, cfg)?;
-        let c = CachedOutcome {
-            ferr: out.ferr,
-            nbe: out.nbe,
-            outer_iters: out.outer_iters,
-            gmres_iters: out.gmres_iters,
-            failed: out.failed,
+        let p = &problems[pi];
+        let session = ProblemSession::new(&p.a);
+        let fi = action.u_f as usize;
+        let slot = self
+            .factor_memo
+            .entry((pi, fi))
+            .or_insert_with(|| backend.lu_factor(&session, action.u_f).ok());
+        let out = match slot.as_ref() {
+            Some(f) => gmres_ir_prefactored(backend, &session, p, action, cfg, Some(f))?,
+            None => SolveOutcome::failure(p.n),
         };
+        let c = CachedOutcome::of(&out);
         self.map.insert((pi, ai), c);
         Ok(c)
+    }
+
+    /// Release the LU factor memo (outcomes stay). Called when a training
+    /// run finishes; factors are only useful while (problem, action)
+    /// pairs are still being discovered.
+    pub fn release_factors(&mut self) {
+        self.factor_memo.clear();
     }
 
     /// Exhaustive per-problem precompute (§Perf): with the reduced action
@@ -98,67 +151,91 @@ impl SolveCache {
     /// (problem, action) pair anyway, so computing them problem-by-problem
     /// costs the same number of solves while letting every action with the
     /// same u_f share one LU factorization (9 actions / 4 factorizations)
-    /// and the backend reuse its chopped-A cache across actions.
+    /// and the session reuse its chopped-A copies across actions.
+    ///
+    /// Problems are distributed over `PA_THREADS` workers. Outcomes are
+    /// keyed by (pi, ai) and each solve is deterministic, so the resulting
+    /// cache is bit-identical for any thread count.
     pub fn precompute(
         &mut self,
-        backend: &mut dyn SolverBackend,
+        backend: &dyn SolverBackend,
         problems: &[Problem],
         space: &ActionSpace,
         cfg: &Config,
     ) -> Result<()> {
-        use crate::chop::Prec;
-        use crate::solver::ir::gmres_ir_prefactored;
-        for (pi, p) in problems.iter().enumerate() {
-            if (0..space.len()).all(|ai| self.map.contains_key(&(pi, ai))) {
-                continue;
-            }
-            backend.reset();
-            // Factor once per u_f actually used by the space.
-            let mut factors: [Option<Option<crate::solver::LuHandle>>; 4] =
-                [None, None, None, None];
-            for (ai, action) in space.actions.iter().enumerate() {
-                if self.map.contains_key(&(pi, ai)) {
-                    continue;
-                }
-                self.misses += 1;
-                let fi = action.u_f as usize;
-                if factors[fi].is_none() {
-                    factors[fi] = Some(backend.lu_factor(&p.a, Prec::from_index(fi)).ok());
-                }
-                let out = match factors[fi].as_ref().unwrap() {
-                    Some(f) => gmres_ir_prefactored(backend, p, action, cfg, Some(f))?,
-                    None => {
+        // Snapshot the missing (problem, action-list) pairs first so the
+        // workers never touch `self`.
+        let todo: Vec<(usize, Vec<usize>)> = (0..problems.len())
+            .filter_map(|pi| {
+                let ais: Vec<usize> = (0..space.len())
+                    .filter(|&ai| !self.map.contains_key(&(pi, ai)))
+                    .collect();
+                if ais.is_empty() { None } else { Some((pi, ais)) }
+            })
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let computed: Vec<Result<Vec<((usize, usize), CachedOutcome)>>> =
+            parallel_map(todo.len(), |k| {
+                let (pi, ais) = &todo[k];
+                let p = &problems[*pi];
+                let session = ProblemSession::new(&p.a);
+                // Factor once per u_f actually used by the space.
+                let mut factors: [Option<Option<LuHandle>>; 4] = [None, None, None, None];
+                let mut out = Vec::with_capacity(ais.len());
+                for &ai in ais {
+                    let action = &space.actions[ai];
+                    let fi = action.u_f as usize;
+                    if factors[fi].is_none() {
+                        factors[fi] =
+                            Some(backend.lu_factor(&session, Prec::from_index(fi)).ok());
+                    }
+                    let o = match factors[fi].as_ref().unwrap() {
+                        Some(f) => {
+                            gmres_ir_prefactored(backend, &session, p, action, cfg, Some(f))?
+                        }
                         // factorization breakdown: same failure outcome
                         // gmres_ir would produce
-                        crate::solver::ir::SolveOutcome {
-                            x: vec![f64::NAN; p.n],
-                            ferr: f64::INFINITY,
-                            nbe: f64::INFINITY,
-                            eps_max: f64::INFINITY,
-                            outer_iters: 0,
-                            gmres_iters: 0,
-                            stop: crate::solver::ir::StopReason::Failure,
-                            failed: true,
-                        }
-                    }
-                };
-                self.map.insert(
-                    (pi, ai),
-                    CachedOutcome {
-                        ferr: out.ferr,
-                        nbe: out.nbe,
-                        outer_iters: out.outer_iters,
-                        gmres_iters: out.gmres_iters,
-                        failed: out.failed,
-                    },
-                );
+                        None => SolveOutcome::failure(p.n),
+                    };
+                    out.push(((*pi, ai), CachedOutcome::of(&o)));
+                }
+                Ok(out)
+            });
+        for worker in computed {
+            for (key, o) in worker? {
+                self.misses += 1;
+                self.map.insert(key, o);
             }
         }
         Ok(())
     }
 }
 
-/// The trained artifact: Q-table + the discretizer it was fitted with.
+/// Version of the policy-JSON schema written by [`TrainedPolicy::save`].
+/// Bump whenever the serialized layout or its semantics change; loading
+/// rejects any other version loudly instead of misreading the file.
+pub const POLICY_SCHEMA_VERSION: usize = 1;
+
+/// Order-sensitive FNV-1a over the action list (each action as its four
+/// precision indices). A policy JSON carries this hash so a policy
+/// trained against one action space can never be silently applied to
+/// another (e.g. after a `k_top` change reorders the reduced list).
+pub fn action_space_hash(space: &ActionSpace) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = FNV_OFFSET;
+    for a in &space.actions {
+        for p in a.tuple() {
+            h = (h ^ (p as u64 + 1)).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// The trained artifact: Q-table + the discretizer it was fitted with,
+/// persisted as versioned JSON (`schema_version`, `action_space_hash`).
 #[derive(Clone, Debug)]
 pub struct TrainedPolicy {
     pub qtable: QTable,
@@ -176,16 +253,56 @@ impl TrainedPolicy {
 
     pub fn to_json(&self) -> Value {
         json::obj(vec![
+            ("schema_version", json::num(POLICY_SCHEMA_VERSION as f64)),
+            (
+                "action_space_hash",
+                json::s(&format!("{:016x}", action_space_hash(&self.qtable.space))),
+            ),
             ("qtable", self.qtable.to_json()),
             ("discretizer", self.discretizer.to_json()),
         ])
     }
 
+    /// Parse a policy, rejecting loudly on any schema mismatch: a missing
+    /// or unsupported `schema_version`, an `action_space_hash` that does
+    /// not match the action list actually stored, or a Q-table whose
+    /// state count disagrees with the discretizer.
     pub fn from_json(v: &Value) -> Result<TrainedPolicy> {
-        Ok(TrainedPolicy {
-            qtable: QTable::from_json(v.get("qtable")?)?,
-            discretizer: Discretizer::from_json(v.get("discretizer")?)?,
-        })
+        let ver = v
+            .get("schema_version")
+            .context(
+                "policy JSON has no schema_version — not a policy artifact of this \
+                 crate (or a pre-versioning file; retrain with the current binary)",
+            )?
+            .as_usize()?;
+        if ver != POLICY_SCHEMA_VERSION {
+            bail!(
+                "unsupported policy schema_version {ver} (this build reads version \
+                 {POLICY_SCHEMA_VERSION}); retrain the policy or use a matching binary"
+            );
+        }
+        let qtable = QTable::from_json(v.get("qtable")?)?;
+        let stored = v.get("action_space_hash")?.as_str()?.to_string();
+        let actual = format!("{:016x}", action_space_hash(&qtable.space));
+        if stored != actual {
+            bail!(
+                "policy action-space hash mismatch: file declares {stored} but its \
+                 action list hashes to {actual} — the policy was trained for a \
+                 different action space (k_top / ordering change?)"
+            );
+        }
+        let discretizer = Discretizer::from_json(v.get("discretizer")?)?;
+        if qtable.n_states != discretizer.n_states() {
+            bail!(
+                "policy shape mismatch: Q-table has {} states but the discretizer \
+                 defines {} ({}x{} bins)",
+                qtable.n_states,
+                discretizer.n_states(),
+                discretizer.kappa.n_bins,
+                discretizer.norm.n_bins
+            );
+        }
+        Ok(TrainedPolicy { qtable, discretizer })
     }
 
     pub fn save(&self, path: &str) -> Result<()> {
@@ -197,8 +314,9 @@ impl TrainedPolicy {
     }
 
     pub fn load(path: &str) -> Result<TrainedPolicy> {
-        let text = std::fs::read_to_string(path)?;
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         TrainedPolicy::from_json(&json::parse(&text)?)
+            .with_context(|| format!("loading policy {path}"))
     }
 }
 
@@ -221,9 +339,14 @@ impl<'a> Trainer<'a> {
 
     /// Train on `problems` for `cfg.episodes` episodes (Alg. 3 lines
     /// 5–22). Returns the policy and the per-episode trace.
+    ///
+    /// The dominant cost — the exhaustive (problem, action) solve sweep —
+    /// runs parallel across problems; the ε-greedy episode loop itself is
+    /// serial (it is pure cache lookups + Q updates) so the RNG draw
+    /// sequence, and therefore the result, is independent of `PA_THREADS`.
     pub fn train(
         &mut self,
-        backend: &mut dyn SolverBackend,
+        backend: &dyn SolverBackend,
         problems: &[Problem],
         quiet: bool,
     ) -> Result<(TrainedPolicy, EpisodeTrace)> {
@@ -297,6 +420,9 @@ impl<'a> Trainer<'a> {
                 );
             }
         }
+        // factors only help while pairs are being discovered; outcomes
+        // stay memoized for the next training (e.g. W2 after W1).
+        self.cache.release_factors();
         Ok((TrainedPolicy { qtable: q, discretizer: disc }, trace))
     }
 }
@@ -305,7 +431,6 @@ impl<'a> Trainer<'a> {
 mod tests {
     use super::*;
     use crate::backend_native::NativeBackend;
-    use crate::chop::Prec;
     use crate::gen::dense_dataset;
 
     fn quick_cfg() -> Config {
@@ -322,10 +447,10 @@ mod tests {
         let mut cfg = quick_cfg();
         cfg.weights = crate::util::config::Weights::W2;
         let problems = dense_dataset(&cfg, 12, 100);
-        let mut backend = NativeBackend::new();
+        let backend = NativeBackend::new();
         let mut cache = SolveCache::new();
         let mut trainer = Trainer::new(&cfg, &mut cache);
-        let (policy, trace) = trainer.train(&mut backend, &problems, true).unwrap();
+        let (policy, trace) = trainer.train(&backend, &problems, true).unwrap();
         assert_eq!(trace.mean_reward.len(), cfg.episodes);
         // Every training state visited at least once per episode count.
         let visited: u64 = (0..policy.qtable.n_states)
@@ -350,10 +475,10 @@ mod tests {
     fn cache_bounds_unique_solves() {
         let cfg = quick_cfg();
         let problems = dense_dataset(&cfg, 6, 200);
-        let mut backend = NativeBackend::new();
+        let backend = NativeBackend::new();
         let mut cache = SolveCache::new();
         let mut trainer = Trainer::new(&cfg, &mut cache);
-        trainer.train(&mut backend, &problems, true).unwrap();
+        trainer.train(&backend, &problems, true).unwrap();
         let space_len = trainer.space.len() as u64;
         let unique_max = problems.len() as u64 * space_len;
         // precompute sweeps every (problem, action) pair exactly once ...
@@ -363,18 +488,134 @@ mod tests {
         assert_eq!(cache.hits, (cfg.episodes * problems.len()) as u64);
     }
 
+    /// Wrapper backend counting `lu_factor` calls — also exercises the
+    /// decorator pattern the `Send + Sync` trait enables.
+    struct CountingBackend {
+        inner: NativeBackend,
+        factor_calls: std::sync::atomic::AtomicUsize,
+    }
+
+    impl CountingBackend {
+        fn new() -> CountingBackend {
+            CountingBackend {
+                inner: NativeBackend::new(),
+                factor_calls: std::sync::atomic::AtomicUsize::new(0),
+            }
+        }
+
+        fn factor_calls(&self) -> usize {
+            self.factor_calls.load(std::sync::atomic::Ordering::SeqCst)
+        }
+    }
+
+    impl crate::solver::SolverBackend for CountingBackend {
+        fn lu_factor(
+            &self,
+            s: &ProblemSession<'_>,
+            p: Prec,
+        ) -> anyhow::Result<crate::solver::LuHandle> {
+            self.factor_calls
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            self.inner.lu_factor(s, p)
+        }
+
+        fn lu_solve(
+            &self,
+            f: &crate::solver::LuHandle,
+            b: &[f64],
+            p: Prec,
+        ) -> anyhow::Result<Vec<f64>> {
+            self.inner.lu_solve(f, b, p)
+        }
+
+        fn residual(
+            &self,
+            s: &ProblemSession<'_>,
+            x: &[f64],
+            b: &[f64],
+            p: Prec,
+        ) -> anyhow::Result<Vec<f64>> {
+            self.inner.residual(s, x, b, p)
+        }
+
+        fn gmres(
+            &self,
+            s: &ProblemSession<'_>,
+            f: &crate::solver::LuHandle,
+            r: &[f64],
+            tol: f64,
+            max_m: usize,
+            p: Prec,
+        ) -> anyhow::Result<crate::solver::GmresOutcome> {
+            self.inner.gmres(s, f, r, tol, max_m, p)
+        }
+
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    #[test]
+    fn outcome_fallback_memoizes_factorizations() {
+        // With a large action space (k_top = 0 => 35 actions) precompute
+        // is skipped and outcome() takes the fallback path; the (problem,
+        // u_f) factor memo must dedupe LU work even in the trainer's
+        // episode-like order (problem-major, actions spread over time)
+        // and produce outcomes identical to the precompute path.
+        let mut cfg = quick_cfg();
+        cfg.k_top = 0;
+        let problems = dense_dataset(&cfg, 3, 225);
+        let backend = CountingBackend::new();
+        let space = ActionSpace::reduced_top_k(0);
+        assert!(space.len() > 12);
+        let mut via_outcome = SolveCache::new();
+        // action-major sweep = worst case for any single-problem memo:
+        // consecutive calls never share a problem
+        for (ai, action) in space.actions.iter().enumerate() {
+            for (pi, _) in problems.iter().enumerate() {
+                via_outcome
+                    .outcome(&backend, &problems, pi, action, ai, &cfg)
+                    .unwrap();
+            }
+        }
+        // exactly one factorization per (problem, u_f) pair, not per action
+        let distinct_uf = {
+            let mut seen = std::collections::HashSet::new();
+            for a in &space.actions {
+                seen.insert(a.u_f as usize);
+            }
+            seen.len()
+        };
+        assert_eq!(backend.factor_calls(), problems.len() * distinct_uf);
+
+        let mut via_precompute = SolveCache::new();
+        via_precompute
+            .precompute(&backend, &problems, &space, &cfg)
+            .unwrap();
+        for pi in 0..problems.len() {
+            for ai in 0..space.len() {
+                let a = via_outcome.cached(pi, ai).unwrap();
+                let b = via_precompute.cached(pi, ai).unwrap();
+                assert_eq!(a.ferr.to_bits(), b.ferr.to_bits(), "({pi},{ai})");
+                assert_eq!(a.nbe.to_bits(), b.nbe.to_bits(), "({pi},{ai})");
+                assert_eq!(a.gmres_iters, b.gmres_iters, "({pi},{ai})");
+                assert_eq!(a.failed, b.failed, "({pi},{ai})");
+            }
+        }
+    }
+
     #[test]
     fn cache_shared_across_weight_settings_skips_resolves() {
         let mut cfg = quick_cfg();
         let problems = dense_dataset(&cfg, 5, 250);
         let mut cache = SolveCache::new();
         Trainer::new(&cfg, &mut cache)
-            .train(&mut NativeBackend::new(), &problems, true)
+            .train(&NativeBackend::new(), &problems, true)
             .unwrap();
         let misses_after_w1 = cache.misses;
         cfg.weights = crate::util::config::Weights::W2;
         Trainer::new(&cfg, &mut cache)
-            .train(&mut NativeBackend::new(), &problems, true)
+            .train(&NativeBackend::new(), &problems, true)
             .unwrap();
         // W2 re-training mostly reuses W1's solve outcomes.
         assert!(
@@ -392,9 +633,9 @@ mod tests {
         let mut c1 = SolveCache::new();
         let mut c2 = SolveCache::new();
         let mut t1 = Trainer::new(&cfg, &mut c1);
-        let (p1, tr1) = t1.train(&mut NativeBackend::new(), &problems, true).unwrap();
+        let (p1, tr1) = t1.train(&NativeBackend::new(), &problems, true).unwrap();
         let mut t2 = Trainer::new(&cfg, &mut c2);
-        let (p2, tr2) = t2.train(&mut NativeBackend::new(), &problems, true).unwrap();
+        let (p2, tr2) = t2.train(&NativeBackend::new(), &problems, true).unwrap();
         assert_eq!(tr1.mean_reward, tr2.mean_reward);
         for s in 0..p1.qtable.n_states {
             assert_eq!(p1.qtable.argmax(s), p2.qtable.argmax(s));
@@ -408,7 +649,7 @@ mod tests {
         let mut cache = SolveCache::new();
         let mut trainer = Trainer::new(&cfg, &mut cache);
         let (policy, _) = trainer
-            .train(&mut NativeBackend::new(), &problems, true)
+            .train(&NativeBackend::new(), &problems, true)
             .unwrap();
         let path = std::env::temp_dir().join("pa_policy_test.json");
         policy.save(path.to_str().unwrap()).unwrap();
@@ -419,6 +660,36 @@ mod tests {
     }
 
     #[test]
+    fn policy_json_rejects_schema_and_hash_mismatch() {
+        let cfg = quick_cfg();
+        let problems = dense_dataset(&cfg, 3, 450);
+        let mut cache = SolveCache::new();
+        let (policy, _) = Trainer::new(&cfg, &mut cache)
+            .train(&NativeBackend::new(), &problems, true)
+            .unwrap();
+        let text = policy.to_json().to_string();
+
+        // wrong version
+        let bad = text.replacen("\"schema_version\":1.0", "\"schema_version\":99.0", 1);
+        assert_ne!(bad, text);
+        let err = TrainedPolicy::from_json(&json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("schema_version"), "{err}");
+
+        // missing version (schema_version sorts last in the object)
+        let missing = text.replacen(",\"schema_version\":1.0", "", 1);
+        assert_ne!(missing, text);
+        let err = TrainedPolicy::from_json(&json::parse(&missing).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("schema_version"), "{err}");
+
+        // tampered action-space hash
+        let hash = format!("{:016x}", action_space_hash(&policy.qtable.space));
+        let tampered = text.replacen(&hash, "deadbeefdeadbeef", 1);
+        assert_ne!(tampered, text);
+        let err = TrainedPolicy::from_json(&json::parse(&tampered).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("action-space hash"), "{err}");
+    }
+
+    #[test]
     fn rpe_decreases_as_learning_converges() {
         let mut cfg = quick_cfg();
         cfg.episodes = 60;
@@ -426,7 +697,7 @@ mod tests {
         let mut cache = SolveCache::new();
         let mut trainer = Trainer::new(&cfg, &mut cache);
         let (_, trace) = trainer
-            .train(&mut NativeBackend::new(), &problems, true)
+            .train(&NativeBackend::new(), &problems, true)
             .unwrap();
         let early: f64 = trace.mean_abs_rpe[..10].iter().sum::<f64>() / 10.0;
         let late: f64 = trace.mean_abs_rpe[50..].iter().sum::<f64>() / 10.0;

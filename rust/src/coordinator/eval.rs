@@ -13,6 +13,7 @@ use crate::solver::ir::{gmres_ir, SolveOutcome};
 use crate::solver::metrics::{mean, success_rate, CondRange};
 use crate::solver::SolverBackend;
 use crate::util::config::Config;
+use crate::util::pool::parallel_map;
 
 /// One evaluated test system.
 #[derive(Clone, Debug)]
@@ -48,22 +49,29 @@ impl EvalRecord {
 
 /// Evaluate a trained policy (or the FP64 baseline when `policy` is None)
 /// over a test set.
+///
+/// Problems are solved in parallel across `PA_THREADS` workers — the
+/// stateless backend is shared, each worker opens its own per-problem
+/// session inside [`gmres_ir`]. Records come back in problem order and
+/// each solve is deterministic, so the result is bit-identical for any
+/// thread count (regression-locked by `tests/api_parallel.rs`).
 pub fn evaluate(
-    backend: &mut dyn SolverBackend,
+    backend: &dyn SolverBackend,
     problems: &[Problem],
     policy: Option<&TrainedPolicy>,
     cfg: &Config,
 ) -> Result<Vec<EvalRecord>> {
-    let mut out = Vec::with_capacity(problems.len());
-    for p in problems {
+    parallel_map(problems.len(), |i| {
+        let p = &problems[i];
         let action = match policy {
             Some(pol) => pol.select(p),
             None => Action::FP64,
         };
         let o = gmres_ir(backend, p, &action, cfg)?;
-        out.push(EvalRecord::from_outcome(p, action, &o));
-    }
-    Ok(out)
+        Ok(EvalRecord::from_outcome(p, action, &o))
+    })
+    .into_iter()
+    .collect()
 }
 
 /// Row of Table 2 / 4 / 6: aggregated metrics over one condition range.
@@ -160,8 +168,8 @@ mod tests {
     fn baseline_eval_produces_records() {
         let c = cfg();
         let problems = dense_dataset(&c, 6, 900);
-        let mut be = NativeBackend::new();
-        let recs = evaluate(&mut be, &problems, None, &c).unwrap();
+        let be = NativeBackend::new();
+        let recs = evaluate(&be, &problems, None, &c).unwrap();
         assert_eq!(recs.len(), 6);
         for r in &recs {
             assert_eq!(r.action, Action::FP64);
@@ -181,10 +189,10 @@ mod tests {
         let test = dense_dataset(&c, 8, 902);
         let mut cache = SolveCache::new();
         let (policy, _) = Trainer::new(&c, &mut cache)
-            .train(&mut NativeBackend::new(), &train, true)
+            .train(&NativeBackend::new(), &train, true)
             .unwrap();
-        let mut be = NativeBackend::new();
-        let recs = evaluate(&mut be, &test, Some(&policy), &c).unwrap();
+        let be = NativeBackend::new();
+        let recs = evaluate(&be, &test, Some(&policy), &c).unwrap();
         let usage = PrecisionUsage::of(&recs, None);
         assert!((usage.total() - 4.0).abs() < 1e-12, "rows sum to 4");
         let s = summarize(&recs, None, c.tau_base, true);
@@ -198,8 +206,8 @@ mod tests {
         cfg_wide.kappa_log10_min = 1.0;
         cfg_wide.kappa_log10_max = 8.5;
         let problems = dense_dataset(&cfg_wide, 10, 903);
-        let mut be = NativeBackend::new();
-        let recs = evaluate(&mut be, &problems, None, &cfg_wide).unwrap();
+        let be = NativeBackend::new();
+        let recs = evaluate(&be, &problems, None, &cfg_wide).unwrap();
         let total: usize = CondRange::ALL
             .iter()
             .map(|g| summarize(&recs, Some(*g), c.tau_base, false).count)

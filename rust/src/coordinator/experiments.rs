@@ -81,18 +81,18 @@ fn run_suite(
     cfg_w2.weights = Weights::W2;
 
     let mut cache = SolveCache::new();
-    let mut backend = make_backend();
+    let backend = make_backend();
 
     if !quiet {
         eprintln!("[suite] training W1 (w1=1, w2=0.1) ...");
     }
     let (policy_w1, trace_w1) =
-        Trainer::new(&cfg_w1, &mut cache).train(backend.as_mut(), &train, quiet)?;
+        Trainer::new(&cfg_w1, &mut cache).train(backend.as_ref(), &train, quiet)?;
     if !quiet {
         eprintln!("[suite] training W2 (w1=w2=1) — reusing solve cache ...");
     }
     let (policy_w2, trace_w2) =
-        Trainer::new(&cfg_w2, &mut cache).train(backend.as_mut(), &train, quiet)?;
+        Trainer::new(&cfg_w2, &mut cache).train(backend.as_ref(), &train, quiet)?;
 
     if !quiet {
         eprintln!(
@@ -101,9 +101,9 @@ fn run_suite(
             cache.unique_solves()
         );
     }
-    let records_w1 = evaluate(backend.as_mut(), &test, Some(&policy_w1), &cfg_w1)?;
-    let records_w2 = evaluate(backend.as_mut(), &test, Some(&policy_w2), &cfg_w2)?;
-    let records_fp64 = evaluate(backend.as_mut(), &test, None, cfg)?;
+    let records_w1 = evaluate(backend.as_ref(), &test, Some(&policy_w1), &cfg_w1)?;
+    let records_w2 = evaluate(backend.as_ref(), &test, Some(&policy_w2), &cfg_w2)?;
+    let records_fp64 = evaluate(backend.as_ref(), &test, None, cfg)?;
 
     Ok(SuiteResult {
         cfg_w1,

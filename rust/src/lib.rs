@@ -20,8 +20,16 @@
 //!   the PJRT CPU client via the `xla` crate. Python never runs on the
 //!   request path.
 //!
+//! Serving is library-first: [`api::Autotuner`] wraps (backend, trained
+//! policy, config) behind a thread-safe facade — features → discretize →
+//! greedy action → GMRES-IR → metrics — and the `SolverBackend` trait is
+//! stateless (`&self`, `Send + Sync`, per-problem state in
+//! [`solver::ProblemSession`]), so training sweeps and evaluation fan out
+//! across `PA_THREADS` workers with bit-identical results.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
+pub mod api;
 pub mod backend_native;
 pub mod bandit;
 pub mod chop;

@@ -1,8 +1,10 @@
-//! `precision-autotune` — Layer-3 coordinator CLI.
+//! `precision-autotune` — Layer-3 coordinator CLI, a thin shell over the
+//! [`precision_autotune::api::Autotuner`] facade.
 //!
 //! Subcommands:
-//!   train     train a bandit policy and save it (JSON)
+//!   train     train a bandit policy and save it (versioned JSON)
 //!   infer     load a policy and pick precision configs for fresh systems
+//!   solve     solve one A x = b through a served policy
 //!   repro     regenerate a paper table/figure (table2..6, fig2..4,
 //!             figs5_12, actions, all)
 //!   selftest  quick end-to-end sanity run (native + PJRT if artifacts)
@@ -12,17 +14,20 @@
 //! --tau, --weights W1|W2, --episodes, --seed, --set k=v,...,
 //! --no-penalty, --out <dir|file>, --backend native|pjrt, --quiet.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use precision_autotune::api::Autotuner;
 use precision_autotune::backend_native::NativeBackend;
-use precision_autotune::bandit::{SolveCache, TrainedPolicy, Trainer};
-use precision_autotune::coordinator::eval::{evaluate, summarize};
+use precision_autotune::bandit::TrainedPolicy;
+use precision_autotune::coordinator::eval::summarize;
 use precision_autotune::coordinator::repro::ReproContext;
 use precision_autotune::gen::{dense_dataset, sparse_dataset};
+use precision_autotune::linalg::Mat;
 use precision_autotune::runtime::PjrtBackend;
 use precision_autotune::solver::SolverBackend;
 use precision_autotune::util::cli::Args;
 use precision_autotune::util::config::Config;
+use precision_autotune::util::pool::num_threads;
 use precision_autotune::util::tables::{fix2, pct, sci2};
 
 const HELP: &str = "\
@@ -38,6 +43,11 @@ SUBCOMMANDS:
                 --out results/policy.json
   infer       greedy precision selection on freshly generated systems
                 --policy results/policy.json [--count 5]
+  solve       solve one system A x = b through the serving facade
+                --policy results/policy.json (omit => FP64 baseline)
+                --matrix a.txt --rhs b.txt   (whitespace/comma numbers;
+                  one matrix row per line; omit => random demo system
+                  controlled by --n / --kappa)
   repro       regenerate paper artifacts:
                 table2 table3 table4 table5 table6 fig2 fig3 fig4
                 figs5_12 actions all     [--out results/]
@@ -55,6 +65,10 @@ COMMON OPTIONS:
   --backend native|pjrt       solver backend (default native)
   --artifacts-dir <dir>       AOT artifacts (default artifacts/)
   --quiet                     suppress progress logs
+
+PARALLELISM:
+  training precompute and evaluation fan out across PA_THREADS workers
+  (default: all cores); results are bit-identical for any value.
 ";
 
 fn main() {
@@ -70,6 +84,57 @@ fn make_backend(kind: &str, cfg: &Config) -> Result<Box<dyn SolverBackend>> {
         "pjrt" => Ok(Box::new(PjrtBackend::open(&cfg.artifacts_dir)?)),
         other => bail!("unknown backend {other:?} (native|pjrt)"),
     }
+}
+
+/// Assemble the serving facade from the common CLI options.
+fn make_tuner(args: &Args, cfg: &Config, policy: Option<TrainedPolicy>) -> Result<Autotuner> {
+    let backend = make_backend(args.get("backend").unwrap_or("native"), cfg)?;
+    let mut b = Autotuner::builder().boxed_backend(backend).config(cfg.clone());
+    if let Some(p) = policy {
+        b = b.policy(p);
+    }
+    b.build()
+}
+
+/// Whitespace/comma-separated numbers; one matrix row per line.
+fn read_matrix(path: &str) -> Result<Mat> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f64> = line
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.parse::<f64>()
+                    .map_err(|e| anyhow!("{path}:{}: bad number {t:?}: {e}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        if let Some(first) = rows.first() {
+            if row.len() != first.len() {
+                bail!(
+                    "{path}:{}: row has {} entries, expected {}",
+                    lineno + 1,
+                    row.len(),
+                    first.len()
+                );
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        bail!("{path}: no rows");
+    }
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    Ok(Mat::from_rows(&refs))
+}
+
+fn read_vec(path: &str) -> Result<Vec<f64>> {
+    let m = read_matrix(path)?;
+    Ok(m.data)
 }
 
 fn run() -> Result<()> {
@@ -91,26 +156,26 @@ fn run() -> Result<()> {
             };
             if !quiet {
                 eprintln!(
-                    "[train] {} systems (n {}-{}), {} episodes, weights w1={} w2={}, tau={:e}",
+                    "[train] {} systems (n {}-{}), {} episodes, weights w1={} w2={}, tau={:e}, PA_THREADS={}",
                     problems.len(),
                     cfg.size_min,
                     cfg.size_max,
                     cfg.episodes,
                     cfg.weights.w1,
                     cfg.weights.w2,
-                    cfg.tau
+                    cfg.tau,
+                    num_threads()
                 );
             }
-            let mut backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
-            let mut cache = SolveCache::new();
-            let (policy, trace) =
-                Trainer::new(&cfg, &mut cache).train(backend.as_mut(), &problems, quiet)?;
+            let mut tuner = make_tuner(&args, &cfg, None)?;
+            let summary = tuner.train(&problems, quiet)?;
+            let policy = tuner.policy().expect("train installs a policy");
             policy.save(out)?;
             println!(
                 "trained: {} episodes, {} unique solves, final mean reward {:.3}; saved {}",
                 cfg.episodes,
-                cache.unique_solves(),
-                trace.mean_reward.last().copied().unwrap_or(f64::NAN),
+                summary.unique_solves,
+                summary.trace.mean_reward.last().copied().unwrap_or(f64::NAN),
                 out
             );
             Ok(())
@@ -121,12 +186,11 @@ fn run() -> Result<()> {
                 .get("policy")
                 .ok_or_else(|| anyhow!("--policy <file> required"))?;
             let count = args.get_usize("count")?.unwrap_or(5);
-            let policy = TrainedPolicy::load(path)?;
+            let tuner = make_tuner(&args, &cfg, Some(TrainedPolicy::load(path)?))?;
             let problems = dense_dataset(&cfg, count, 0xFEED);
-            let mut backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
             println!("| id | n | kappa_est | action (u_f,u,u_g,u_r) | ferr | nbe | outer | gmres |");
             println!("|----|---|-----------|------------------------|------|-----|-------|-------|");
-            let records = evaluate(backend.as_mut(), &problems, Some(&policy), &cfg)?;
+            let records = tuner.evaluate(&problems)?;
             for r in &records {
                 println!(
                     "| {} | {} | {} | {} | {} | {} | {} | {} |",
@@ -147,6 +211,75 @@ fn run() -> Result<()> {
                 sci2(s.avg_ferr),
                 fix2(s.avg_gmres)
             );
+            Ok(())
+        }
+        Some("solve") => {
+            let cfg = Config::from_args(&args)?;
+            let policy = match args.get("policy") {
+                Some(p) => Some(TrainedPolicy::load(p)?),
+                None => None,
+            };
+            let served = policy.is_some();
+            let tuner = make_tuner(&args, &cfg, policy)?;
+            let (a, b) = match (args.get("matrix"), args.get("rhs")) {
+                (Some(mp), Some(bp)) => (read_matrix(mp)?, read_vec(bp)?),
+                (Some(mp), None) => {
+                    // no rhs: b = A·1, so the expected solution is all-ones
+                    let a = read_matrix(mp)?;
+                    let ones = vec![1.0; a.n_rows];
+                    let b = a.matvec(&ones);
+                    (a, b)
+                }
+                (None, Some(_)) => {
+                    bail!("--rhs given without --matrix (supply both, or neither for a demo system)")
+                }
+                (None, None) => {
+                    use precision_autotune::gen::{finish_problem, randsvd_mode2};
+                    use precision_autotune::util::rng::Rng;
+                    let n = args.get_usize("n")?.unwrap_or(64);
+                    let kappa = args.get_f64("kappa")?.unwrap_or(1e4);
+                    let mut rng = Rng::new(cfg.seed);
+                    let a = randsvd_mode2(n, kappa, &mut rng);
+                    let p = finish_problem(0, a, kappa, 1.0, &mut rng);
+                    if !quiet {
+                        eprintln!("[solve] no --matrix given; demo system n={n} kappa={kappa:e}");
+                    }
+                    (p.a, p.b)
+                }
+            };
+            let rep = tuner.solve(&a, &b)?;
+            println!(
+                "backend={} policy={} n={}",
+                rep.backend,
+                if served { "served" } else { "none (FP64 baseline)" },
+                a.n_rows
+            );
+            println!(
+                "features: kappa_est={} norm_inf={}",
+                sci2(rep.kappa_est),
+                sci2(rep.norm_inf)
+            );
+            println!("action:   {}", rep.action);
+            println!(
+                "result:   nbe={} outer={} gmres={} stop={:?} failed={}",
+                sci2(rep.nbe),
+                rep.outer_iters,
+                rep.gmres_iters,
+                rep.stop,
+                rep.failed
+            );
+            if let Some(out) = args.get("out") {
+                let text: String = rep
+                    .x
+                    .iter()
+                    .map(|v| format!("{v:?}\n"))
+                    .collect();
+                std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+                println!("solution written to {out}");
+            }
+            if rep.failed {
+                bail!("solve failed (stop: {:?})", rep.stop);
+            }
             Ok(())
         }
         Some("repro") => {
@@ -212,13 +345,13 @@ fn run() -> Result<()> {
                 cfg.k_top
             );
             let space = ActionSpace::reduced_top_k(cfg.k_top);
-            let mut backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
+            let backend = make_backend(args.get("backend").unwrap_or("native"), &cfg)?;
             println!(
                 "{:<28} {:>10} {:>10} {:>6} {:>6} {:>9} {:>9}",
                 "action", "ferr", "nbe", "outer", "gmres", "R(W1)", "R(W2)"
             );
             for act in &space.actions {
-                let out = gmres_ir(backend.as_mut(), &p, act, &cfg)?;
+                let out = gmres_ir(backend.as_ref(), &p, act, &cfg)?;
                 let inp = RewardInputs {
                     ferr: out.ferr,
                     nbe: out.nbe,
@@ -250,20 +383,31 @@ fn run() -> Result<()> {
             cfg.episodes = 15;
             cfg.n_train = 8;
             let problems = dense_dataset(&cfg, 8, 0);
-            let mut cache = SolveCache::new();
-            let mut native = NativeBackend::new();
-            let (policy, _) = Trainer::new(&cfg, &mut cache).train(&mut native, &problems, true)?;
+            let mut tuner = Autotuner::builder()
+                .backend(NativeBackend::new())
+                .config(cfg.clone())
+                .build()?;
+            tuner.train(&problems, true)?;
             let test = dense_dataset(&cfg, 4, 1);
-            let recs = evaluate(&mut native, &test, Some(&policy), &cfg)?;
+            let recs = tuner.evaluate(&test)?;
             println!("native backend: {} test solves OK", recs.len());
+            // facade solve on a raw (A, b) pair — the serving path
+            let rep = tuner.solve(&test[0].a, &test[0].b)?;
+            println!(
+                "facade solve:   action {} nbe {} ({})",
+                rep.action,
+                sci2(rep.nbe),
+                rep.backend
+            );
             if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
-                let mut pjrt = PjrtBackend::open(&cfg.artifacts_dir)?;
-                let recs2 = evaluate(&mut pjrt, &test[..2], Some(&policy), &cfg)?;
-                println!(
-                    "pjrt backend:   {} test solves OK ({} artifacts compiled)",
-                    recs2.len(),
-                    pjrt.rt.artifacts_compiled()
-                );
+                let policy = tuner.policy().expect("trained above").clone();
+                let pjrt_tuner = Autotuner::builder()
+                    .backend(PjrtBackend::open(&cfg.artifacts_dir)?)
+                    .policy(policy)
+                    .config(cfg.clone())
+                    .build()?;
+                let recs2 = pjrt_tuner.evaluate(&test[..2])?;
+                println!("pjrt backend:   {} test solves OK", recs2.len());
             } else {
                 println!("pjrt backend:   skipped (run `make artifacts`)");
             }

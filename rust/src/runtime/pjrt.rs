@@ -3,28 +3,56 @@
 //!
 //! Building this module requires the `xla` crate, which must be added to
 //! `[dependencies]` on a networked host — it cannot be vendored offline.
+//!
+//! Thread-safety: the stateless-session trait requires `Send + Sync`.
+//! The executable cache and the PJRT client are guarded by one mutex, so
+//! concurrent solves through this backend serialize at the XLA boundary
+//! (the native backend is the parallel sweep path; this one exists for
+//! cross-validation and artifact serving, where per-call latency is
+//! dominated by the executable anyway).
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{pad_matrix, pad_vec};
-use crate::backend_native::fingerprint;
+use super::pad_vec;
 use crate::chop::Prec;
 use crate::linalg::Mat;
 use crate::runtime::Manifest;
-use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
+use crate::solver::{GmresOutcome, LuHandle, ProblemSession, SolverBackend};
 
 /// Compiled-executable cache over the artifact set.
 pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: String,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// executions per artifact name (perf telemetry)
-    pub exec_counts: HashMap<String, u64>,
+    /// PJRT client + compiled executables + per-artifact execution counts
+    /// (perf telemetry), all behind one lock: every XLA interaction is
+    /// serialized, which is what lets the backend be `Sync`.
+    inner: Mutex<RuntimeInner>,
 }
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    exec_counts: HashMap<String, u64>,
+}
+
+// SAFETY: two distinct claims.
+// * Sync: all access to the XLA client and executables goes through
+//   `inner`'s mutex (no method hands out references to them), so the
+//   runtime is never *used* from two threads at once even though the
+//   xla crate's types don't advertise Send/Sync themselves.
+// * Send: moving (and eventually dropping) the runtime on another
+//   thread additionally requires that the PJRT handles are not
+//   thread-affine. The PJRT C API specifies its client/executable
+//   objects as thread-safe with no thread-affinity requirements, and
+//   the CPU plugin allocates with plain host allocators, so destruction
+//   from a foreign thread is within contract. If a future plugin
+//   violates this, drop the `Send` impl and pin the backend to its
+//   creating thread instead.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     /// Open the artifact directory (expects `manifest.json` inside).
@@ -33,11 +61,13 @@ impl PjrtRuntime {
             .with_context(|| format!("loading manifest from {dir} (run `make artifacts`)"))?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
         Ok(PjrtRuntime {
-            client,
             manifest,
             dir: dir.to_string(),
-            exes: HashMap::new(),
-            exec_counts: HashMap::new(),
+            inner: Mutex::new(RuntimeInner {
+                client,
+                exes: HashMap::new(),
+                exec_counts: HashMap::new(),
+            }),
         })
     }
 
@@ -57,9 +87,13 @@ impl PjrtRuntime {
             })
     }
 
-    /// Get (compiling + caching on first use) the executable for `name`.
-    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(name) {
+    /// Execute an artifact with the given inputs (compiling + caching the
+    /// executable on first use); returns the output tuple elements as
+    /// Literals.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        if !inner.exes.contains_key(name) {
             let meta = self
                 .manifest
                 .by_name(name)
@@ -68,20 +102,13 @@ impl PjrtRuntime {
             let proto = xla::HloModuleProto::from_text_file(&path)
                 .map_err(|e| anyhow!("parsing {path}: {e}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
+            let exe = inner
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-            self.exes.insert(name.to_string(), exe);
+            inner.exes.insert(name.to_string(), exe);
         }
-        Ok(&self.exes[name])
-    }
-
-    /// Execute an artifact with the given inputs; returns the output
-    /// tuple elements as Literals.
-    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
-        let exe = self.executable(name)?;
+        let exe = &inner.exes[name];
         let out = exe
             .execute::<xla::Literal>(inputs)
             .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
@@ -91,7 +118,18 @@ impl PjrtRuntime {
     }
 
     pub fn artifacts_compiled(&self) -> usize {
-        self.exes.len()
+        self.inner.lock().unwrap().exes.len()
+    }
+
+    /// Executions of one artifact so far (perf telemetry).
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .exec_counts
+            .get(name)
+            .copied()
+            .unwrap_or(0)
     }
 }
 
@@ -137,30 +175,21 @@ pub fn literal_scalar_i32(l: &xla::Literal) -> Result<i32> {
 
 /// [`SolverBackend`] over the AOT artifacts. All reduced-precision
 /// arithmetic happens *inside* the artifacts (the Pallas chop kernel);
-/// only f64 buffers cross the PJRT boundary.
+/// only f64 buffers cross the PJRT boundary. The padded copy of A is
+/// cached in the caller's [`ProblemSession`]; the backend holds only the
+/// (lock-guarded) executable cache.
 pub struct PjrtBackend {
     pub rt: PjrtRuntime,
-    /// (fingerprint, bucket) -> padded A, reused (by Arc, no copy) across
-    /// the steps and outer iterations of one solve
-    a_pad_cache: Option<(u64, usize, Arc<Mat>)>,
 }
 
 impl PjrtBackend {
     pub fn open(dir: &str) -> Result<PjrtBackend> {
-        Ok(PjrtBackend { rt: PjrtRuntime::open(dir)?, a_pad_cache: None })
+        Ok(PjrtBackend { rt: PjrtRuntime::open(dir)? })
     }
 
-    fn padded_a(&mut self, a: &Mat) -> Result<(usize, Arc<Mat>)> {
-        let nb = self.rt.bucket_for(a.n_rows)?;
-        let fp = fingerprint(a);
-        if let Some((cfp, cnb, cached)) = &self.a_pad_cache {
-            if *cfp == fp && *cnb == nb {
-                return Ok((nb, Arc::clone(cached)));
-            }
-        }
-        let p = Arc::new(pad_matrix(a, nb));
-        self.a_pad_cache = Some((fp, nb, Arc::clone(&p)));
-        Ok((nb, p))
+    fn padded_a<'s>(&self, s: &'s ProblemSession<'_>) -> Result<(usize, &'s Mat)> {
+        let nb = self.rt.bucket_for(s.n())?;
+        Ok((nb, s.padded(nb)))
     }
 
     fn artifact(&self, op: &str, p: Prec, nb: usize) -> String {
@@ -169,10 +198,10 @@ impl PjrtBackend {
 }
 
 impl SolverBackend for PjrtBackend {
-    fn lu_factor(&mut self, a: &Mat, p: Prec) -> Result<LuHandle> {
-        let (nb, ap) = self.padded_a(a)?;
+    fn lu_factor(&self, s: &ProblemSession<'_>, p: Prec) -> Result<LuHandle> {
+        let (nb, ap) = self.padded_a(s)?;
         let name = self.artifact("lu_factor", p, nb);
-        let outs = self.rt.run(&name, &[mat_literal(&ap)?])?;
+        let outs = self.rt.run(&name, &[mat_literal(ap)?])?;
         let ok = literal_scalar_i32(&outs[2])?;
         if ok == 0 {
             bail!("LU breakdown in artifact {name}");
@@ -186,7 +215,7 @@ impl SolverBackend for PjrtBackend {
         })
     }
 
-    fn lu_solve(&mut self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>> {
+    fn lu_solve(&self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>> {
         let nb = f.lu.n_rows;
         let name = self.artifact("lu_solve", p, nb);
         let outs = self.rt.run(
@@ -202,13 +231,13 @@ impl SolverBackend for PjrtBackend {
         Ok(x)
     }
 
-    fn residual(&mut self, a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
-        let (nb, ap) = self.padded_a(a)?;
+    fn residual(&self, s: &ProblemSession<'_>, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
+        let (nb, ap) = self.padded_a(s)?;
         let name = self.artifact("residual", p, nb);
         let outs = self.rt.run(
             &name,
             &[
-                mat_literal(&ap)?,
+                mat_literal(ap)?,
                 vec_literal(&pad_vec(x, nb)),
                 vec_literal(&pad_vec(b, nb)),
             ],
@@ -219,20 +248,20 @@ impl SolverBackend for PjrtBackend {
     }
 
     fn gmres(
-        &mut self,
-        a: &Mat,
+        &self,
+        s: &ProblemSession<'_>,
         f: &LuHandle,
         r: &[f64],
         tol: f64,
         max_m: usize,
         p: Prec,
     ) -> Result<GmresOutcome> {
-        let (nb, ap) = self.padded_a(a)?;
+        let (nb, ap) = self.padded_a(s)?;
         let name = self.artifact("gmres", p, nb);
         let outs = self.rt.run(
             &name,
             &[
-                mat_literal(&ap)?,
+                mat_literal(ap)?,
                 mat_literal(&f.lu)?,
                 ivec_literal(&f.piv),
                 vec_literal(&pad_vec(r, nb)),
@@ -252,9 +281,5 @@ impl SolverBackend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
-    }
-
-    fn reset(&mut self) {
-        self.a_pad_cache = None;
     }
 }

@@ -6,8 +6,7 @@
 use anyhow::{bail, Result};
 
 use crate::chop::Prec;
-use crate::linalg::Mat;
-use crate::solver::{GmresOutcome, LuHandle, SolverBackend};
+use crate::solver::{GmresOutcome, LuHandle, ProblemSession, SolverBackend};
 
 const MSG: &str = "PJRT backend unavailable: this binary was built without the `pjrt` \
 cargo feature (the `xla` crate cannot be vendored offline). Rebuild with \
@@ -41,21 +40,21 @@ impl PjrtBackend {
 }
 
 impl SolverBackend for PjrtBackend {
-    fn lu_factor(&mut self, _a: &Mat, _p: Prec) -> Result<LuHandle> {
+    fn lu_factor(&self, _s: &ProblemSession<'_>, _p: Prec) -> Result<LuHandle> {
         bail!("{MSG}");
     }
 
-    fn lu_solve(&mut self, _f: &LuHandle, _b: &[f64], _p: Prec) -> Result<Vec<f64>> {
+    fn lu_solve(&self, _f: &LuHandle, _b: &[f64], _p: Prec) -> Result<Vec<f64>> {
         bail!("{MSG}");
     }
 
-    fn residual(&mut self, _a: &Mat, _x: &[f64], _b: &[f64], _p: Prec) -> Result<Vec<f64>> {
+    fn residual(&self, _s: &ProblemSession<'_>, _x: &[f64], _b: &[f64], _p: Prec) -> Result<Vec<f64>> {
         bail!("{MSG}");
     }
 
     fn gmres(
-        &mut self,
-        _a: &Mat,
+        &self,
+        _s: &ProblemSession<'_>,
         _f: &LuHandle,
         _r: &[f64],
         _tol: f64,

@@ -24,6 +24,11 @@
 //! Table-2 trend from τ=1e-6 to 1e-8). With these semantics the FP64
 //! baseline profile is the paper's: exactly 2 outer / ~1 inner per outer
 //! (first ratio test fires since consecutive updates shrink by ≫ τ).
+//!
+//! The driver is stateless: each call opens a [`ProblemSession`] over the
+//! problem matrix (or reuses the caller's, for the trainer's
+//! factorization-sharing sweep) and every backend call takes `&self`, so
+//! solves of different problems run concurrently over one backend.
 
 use anyhow::Result;
 
@@ -32,7 +37,7 @@ use crate::chop::chop_p;
 use crate::gen::Problem;
 use crate::linalg::norm_inf_vec;
 use crate::solver::metrics::{eps_max, ferr, nbe};
-use crate::solver::SolverBackend;
+use crate::solver::{ProblemSession, SolverBackend};
 use crate::util::config::Config;
 
 /// Why the refinement loop stopped.
@@ -65,7 +70,8 @@ pub struct SolveOutcome {
 }
 
 impl SolveOutcome {
-    fn failure(n: usize) -> SolveOutcome {
+    /// The canonical failure outcome (LU breakdown / non-finite iterate).
+    pub fn failure(n: usize) -> SolveOutcome {
         SolveOutcome {
             x: vec![f64::NAN; n],
             ferr: f64::INFINITY,
@@ -79,23 +85,31 @@ impl SolveOutcome {
     }
 }
 
-/// Run GMRES-IR on `p` with precision configuration `action`.
+/// Run GMRES-IR on `p` with precision configuration `action`, in a fresh
+/// per-problem session.
 pub fn gmres_ir(
-    backend: &mut dyn SolverBackend,
+    backend: &dyn SolverBackend,
     p: &Problem,
     action: &Action,
     cfg: &Config,
 ) -> Result<SolveOutcome> {
-    backend.reset();
-    gmres_ir_prefactored(backend, p, action, cfg, None)
+    let session = ProblemSession::new(&p.a);
+    gmres_ir_prefactored(backend, &session, p, action, cfg, None)
 }
 
-/// GMRES-IR with an optionally pre-computed factorization: the LU depends
-/// only on (A, u_f), so the trainer's exhaustive per-problem sweep factors
-/// each u_f once and shares it across every action with that u_f
-/// (EXPERIMENTS.md §Perf — 9 actions share 4 factorizations).
+/// GMRES-IR inside an existing session, with an optionally pre-computed
+/// factorization: the LU depends only on (A, u_f), so the trainer's
+/// exhaustive per-problem sweep factors each u_f once and shares it
+/// across every action with that u_f (EXPERIMENTS.md §Perf — 9 actions
+/// share 4 factorizations), while the shared session reuses the chopped
+/// copies of A across those actions.
+///
+/// `p.x_true` may be empty (the serving path of [`crate::api`], where no
+/// reference solution exists): then `ferr` is NaN, `eps_max` degrades to
+/// `nbe`, and failure detection relies on the backward error alone.
 pub fn gmres_ir_prefactored(
-    backend: &mut dyn SolverBackend,
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
     p: &Problem,
     action: &Action,
     cfg: &Config,
@@ -110,7 +124,7 @@ pub fn gmres_ir_prefactored(
             debug_assert_eq!(f.prec, action.u_f);
             f
         }
-        None => match backend.lu_factor(&p.a, action.u_f) {
+        None => match backend.lu_factor(session, action.u_f) {
             Ok(f) => {
                 owned = f;
                 &owned
@@ -135,9 +149,9 @@ pub fn gmres_ir_prefactored(
 
     for _ in 0..cfg.max_outer {
         // Step 2 (u_r)
-        let r = backend.residual(&p.a, &x, &p.b, action.u_r)?;
+        let r = backend.residual(session, &x, &p.b, action.u_r)?;
         // Step 3 (u_g)
-        let g = backend.gmres(&p.a, factors, &r, inner_tol, cfg.gmres_max_m, action.u_g)?;
+        let g = backend.gmres(session, factors, &r, inner_tol, cfg.gmres_max_m, action.u_g)?;
         if !g.ok {
             stop = StopReason::Failure;
             break;
@@ -174,9 +188,10 @@ pub fn gmres_ir_prefactored(
         return Ok(out);
     }
 
-    let fe = ferr(&x, &p.x_true);
+    // ferr needs a reference solution; the serving path has none.
+    let fe = if p.x_true.is_empty() { f64::NAN } else { ferr(&x, &p.x_true) };
     let be = nbe(&p.a, &x, &p.b);
-    let failed = !fe.is_finite() || !be.is_finite();
+    let failed = !be.is_finite() || (!p.x_true.is_empty() && !fe.is_finite());
     Ok(SolveOutcome {
         eps_max: eps_max(fe, be),
         ferr: fe,
@@ -192,7 +207,7 @@ pub fn gmres_ir_prefactored(
 /// The FP64 baseline the paper compares against: the same driver with the
 /// all-FP64 action.
 pub fn fp64_baseline(
-    backend: &mut dyn SolverBackend,
+    backend: &dyn SolverBackend,
     p: &Problem,
     cfg: &Config,
 ) -> Result<SolveOutcome> {
@@ -221,11 +236,11 @@ mod tests {
         // Table 2 FP64 baseline: ferr ~ u*kappa level, EXACTLY 2 outer
         // iterations (the eq.-15 stagnation test fires on the second
         // update ratio), ~1 inner iteration per outer.
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let c = cfg();
         for (kappa, max_ferr) in [(1e2, 1e-12), (1e5, 1e-10), (1e8, 1e-7)] {
             let p = problem(60, kappa, 42);
-            let out = fp64_baseline(&mut be, &p, &c).unwrap();
+            let out = fp64_baseline(&be, &p, &c).unwrap();
             assert!(!out.failed);
             assert!(
                 matches!(out.stop, StopReason::Stagnated | StopReason::Converged),
@@ -242,7 +257,7 @@ mod tests {
     #[test]
     fn bf16_factorization_recovers_fp64_accuracy_when_well_conditioned() {
         // The GMRES-IR premise [10, 11]: u_f can be very low for small κ.
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let c = cfg();
         let p = problem(60, 1e2, 7);
         let a = Action {
@@ -251,7 +266,7 @@ mod tests {
             u_g: crate::chop::Prec::Fp64,
             u_r: crate::chop::Prec::Fp64,
         };
-        let out = gmres_ir(&mut be, &p, &a, &c).unwrap();
+        let out = gmres_ir(&be, &p, &a, &c).unwrap();
         assert!(!out.failed);
         assert!(
             matches!(out.stop, StopReason::Stagnated | StopReason::Converged),
@@ -260,13 +275,13 @@ mod tests {
         );
         assert!(out.ferr < 1e-10, "ferr {}", out.ferr);
         // pays for the cheap factorization with extra inner iterations
-        let base = fp64_baseline(&mut be, &p, &c).unwrap();
+        let base = fp64_baseline(&be, &p, &c).unwrap();
         assert!(out.gmres_iters >= base.gmres_iters);
     }
 
     #[test]
     fn all_low_precision_degrades_accuracy() {
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let c = cfg();
         let p = problem(48, 1e2, 9);
         let a = Action {
@@ -275,14 +290,14 @@ mod tests {
             u_g: crate::chop::Prec::Bf16,
             u_r: crate::chop::Prec::Bf16,
         };
-        let out = gmres_ir(&mut be, &p, &a, &c).unwrap();
+        let out = gmres_ir(&be, &p, &a, &c).unwrap();
         // Not a failure, but far from fp64 accuracy.
         assert!(out.ferr > 1e-6, "ferr {}", out.ferr);
     }
 
     #[test]
     fn failure_surfaces_not_panics() {
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let c = cfg();
         let mut p = problem(16, 1e2, 11);
         // scale beyond bf16 range so the chopped factorization overflows
@@ -299,7 +314,7 @@ mod tests {
             u_g: crate::chop::Prec::Fp64,
             u_r: crate::chop::Prec::Fp64,
         };
-        let out = gmres_ir(&mut be, &p, &a, &c).unwrap();
+        let out = gmres_ir(&be, &p, &a, &c).unwrap();
         assert!(out.failed);
         assert_eq!(out.stop, StopReason::Failure);
         assert_eq!(out.eps_max, f64::INFINITY);
@@ -307,27 +322,43 @@ mod tests {
 
     #[test]
     fn stricter_tau_means_no_fewer_iterations() {
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let p = problem(50, 1e4, 13);
         let mut c6 = cfg();
         c6.tau = 1e-6;
         let mut c8 = cfg();
         c8.tau = 1e-8;
-        let o6 = fp64_baseline(&mut be, &p, &c6).unwrap();
-        let o8 = fp64_baseline(&mut be, &p, &c8).unwrap();
+        let o6 = fp64_baseline(&be, &p, &c6).unwrap();
+        let o8 = fp64_baseline(&be, &p, &c8).unwrap();
         assert!(o8.outer_iters >= o6.outer_iters);
         assert!(o8.ferr <= o6.ferr * 10.0);
     }
 
     #[test]
     fn max_outer_respected() {
-        let mut be = NativeBackend::new();
+        let be = NativeBackend::new();
         let mut c = cfg();
         c.max_outer = 2;
         c.tau = 1e-30; // unreachable => runs to the cap or stagnates
         let p = problem(30, 1e3, 17);
-        let out = fp64_baseline(&mut be, &p, &c).unwrap();
+        let out = fp64_baseline(&be, &p, &c).unwrap();
         assert!(out.outer_iters <= 2);
         assert!(matches!(out.stop, StopReason::MaxIterations | StopReason::Stagnated));
+    }
+
+    #[test]
+    fn empty_x_true_serving_path_reports_nbe_only() {
+        // The api facade solves systems with no reference solution:
+        // ferr is NaN, eps_max falls back to nbe, success is judged on
+        // the backward error alone.
+        let be = NativeBackend::new();
+        let c = cfg();
+        let mut p = problem(32, 1e3, 21);
+        p.x_true = Vec::new();
+        let out = fp64_baseline(&be, &p, &c).unwrap();
+        assert!(!out.failed);
+        assert!(out.ferr.is_nan());
+        assert!(out.nbe.is_finite() && out.nbe < 1e-14, "nbe {}", out.nbe);
+        assert_eq!(out.eps_max, out.nbe);
     }
 }

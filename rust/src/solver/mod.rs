@@ -2,16 +2,85 @@
 //! precision-controlled computational steps, the Alg.-2 driver with the
 //! paper's stopping criteria (eq. 14–16), and the evaluation metrics
 //! (eq. 17, 28–30).
+//!
+//! # Threading contract (DESIGN.md §2b)
+//!
+//! [`SolverBackend`] is **stateless and thread-safe**: every method takes
+//! `&self` and the trait requires `Send + Sync`, so one backend instance
+//! can serve any number of concurrent solves. All per-problem derived
+//! state — the chopped copies of A a native solve reuses across steps,
+//! the padded copy the PJRT path uploads — lives in an explicit
+//! [`ProblemSession`] created per (backend, problem) pair. This replaces
+//! the old hidden `reset()`-guarded cache inside the backend, which
+//! serialized every episode and made cross-problem staleness possible.
 
 pub mod ir;
 pub mod metrics;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
 use crate::chop::Prec;
 use crate::linalg::Mat;
+
+/// Per-problem solve session: borrows the problem matrix and lazily
+/// caches the derived copies every backend step wants to share — the
+/// chopped A per precision (native path) and the bucket-padded A (PJRT
+/// path). Interior mutability is `OnceLock`, so a session may be shared
+/// across threads, but the intended pattern is one session per worker:
+/// sessions are cheap (no up-front copies) and drop all derived state at
+/// the end of the problem, which is what makes the backend itself
+/// stateless.
+pub struct ProblemSession<'a> {
+    a: &'a Mat,
+    /// chopped copies of A, one slot per [`Prec`] (Fp64 aliases `a`)
+    chopped: [OnceLock<Mat>; 4],
+    /// bucket-padded copy of A (PJRT); one bucket per session
+    padded: OnceLock<Mat>,
+}
+
+impl<'a> ProblemSession<'a> {
+    pub fn new(a: &'a Mat) -> ProblemSession<'a> {
+        ProblemSession {
+            a,
+            chopped: Default::default(),
+            padded: OnceLock::new(),
+        }
+    }
+
+    /// The problem matrix.
+    pub fn a(&self) -> &Mat {
+        self.a
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.n_rows
+    }
+
+    /// The chopped copy of A in precision `p`, computed once per session.
+    /// Fp64 needs no copy at all and aliases the original matrix.
+    pub fn chopped(&self, p: Prec) -> &Mat {
+        if p == Prec::Fp64 {
+            return self.a;
+        }
+        self.chopped[p as usize].get_or_init(|| self.a.chopped(p))
+    }
+
+    /// The block-diagonally padded copy `diag(A, I_{nb-n})`, computed once
+    /// per session. A session serves one problem and a problem maps to one
+    /// size bucket, so a single slot suffices (asserted).
+    pub fn padded(&self, nb: usize) -> &Mat {
+        let m = self
+            .padded
+            .get_or_init(|| crate::runtime::pad_matrix(self.a, nb));
+        assert_eq!(
+            m.n_rows, nb,
+            "ProblemSession::padded called with two different buckets"
+        );
+        m
+    }
+}
 
 /// Opaque LU factor handle: backends return host-resident packed factors
 /// (the PJRT backend keeps them as f64 buffers it re-uploads per call —
@@ -39,22 +108,27 @@ pub struct GmresOutcome {
 /// The four precision-controlled steps of Alg. 2, each in an emulated
 /// precision. Implementations: [`crate::backend_native::NativeBackend`]
 /// (pure Rust) and [`crate::runtime::PjrtBackend`] (AOT artifacts).
-pub trait SolverBackend {
+///
+/// Methods take `&self` — backends hold no per-problem state (that lives
+/// in the [`ProblemSession`] the caller threads through) — and the trait
+/// requires `Send + Sync`, so the trainer and evaluator may fan solves
+/// out across threads over one shared backend.
+pub trait SolverBackend: Send + Sync {
     /// Step 1 (u_f): M = LU ≈ A. `Err` = factorization breakdown
     /// (singular / overflow in the emulated format) — a normal outcome
     /// that the reward maps to `fail_reward`.
-    fn lu_factor(&mut self, a: &Mat, p: Prec) -> Result<LuHandle>;
+    fn lu_factor(&self, s: &ProblemSession<'_>, p: Prec) -> Result<LuHandle>;
 
     /// Steps 1b/within-GMRES (u_f / u_g): x = U⁻¹L⁻¹P b.
-    fn lu_solve(&mut self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>>;
+    fn lu_solve(&self, f: &LuHandle, b: &[f64], p: Prec) -> Result<Vec<f64>>;
 
     /// Step 2 (u_r): r = b − A x.
-    fn residual(&mut self, a: &Mat, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>>;
+    fn residual(&self, s: &ProblemSession<'_>, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>>;
 
     /// Step 3 (u_g): solve M⁻¹A z = M⁻¹r by preconditioned GMRES.
     fn gmres(
-        &mut self,
-        a: &Mat,
+        &self,
+        s: &ProblemSession<'_>,
         f: &LuHandle,
         r: &[f64],
         tol: f64,
@@ -65,7 +139,53 @@ pub trait SolverBackend {
     /// Human-readable backend name (logs / EXPERIMENTS.md provenance).
     fn name(&self) -> &'static str;
 
-    /// Invalidate any per-problem cached state (e.g. the chopped copy of
-    /// A a native backend keeps between steps of the same solve).
-    fn reset(&mut self) {}
+    /// Whether `lu_solve`/`gmres` accept a host-built [`LuHandle`] (the
+    /// unpadded `linalg::lu` layout) that did not come from this
+    /// backend's own `lu_factor`. The native backend does; the PJRT
+    /// backend requires bucket-padded factors shaped by its artifacts,
+    /// so the default is `false`. Callers (e.g. [`crate::api::Autotuner`])
+    /// use this to reuse an existing f64 factorization instead of
+    /// factoring twice.
+    fn accepts_host_factors(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_chopped_is_cached_and_fp64_aliases() {
+        let mut a = Mat::eye(8);
+        a[(0, 1)] = 0.1234567890123;
+        let s = ProblemSession::new(&a);
+        // Fp64 returns the original matrix (pointer-equal data)
+        assert!(std::ptr::eq(s.chopped(Prec::Fp64), s.a()));
+        let c1 = s.chopped(Prec::Bf16) as *const Mat;
+        let c2 = s.chopped(Prec::Bf16) as *const Mat;
+        assert_eq!(c1, c2, "second call must hit the cached copy");
+        // the chopped copy matches the direct chop
+        assert_eq!(s.chopped(Prec::Bf16).data, a.chopped(Prec::Bf16).data);
+        // precisions are cached independently
+        assert_ne!(s.chopped(Prec::Bf16).data, s.chopped(Prec::Fp32).data);
+    }
+
+    #[test]
+    fn session_padded_is_cached() {
+        let a = Mat::eye(3);
+        let s = ProblemSession::new(&a);
+        let p1 = s.padded(8) as *const Mat;
+        let p2 = s.padded(8) as *const Mat;
+        assert_eq!(p1, p2);
+        assert_eq!(s.padded(8).n_rows, 8);
+        assert_eq!(s.padded(8)[(7, 7)], 1.0);
+    }
+
+    #[test]
+    fn session_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ProblemSession<'static>>();
+        assert_send_sync::<LuHandle>();
+    }
 }

@@ -3,6 +3,7 @@
 //! sequential loop with zero overhead, but the implementation is a real
 //! work-stealing-free chunked pool that scales on multi-core hosts).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use (`PA_THREADS` overrides).
@@ -17,6 +18,19 @@ pub fn num_threads() -> usize {
         .unwrap_or(1)
 }
 
+thread_local! {
+    /// True on pool worker threads. Nested pool calls (e.g. the
+    /// row-parallel LU inside a problem-parallel `precompute`) degrade to
+    /// the sequential loop instead of spawning PA_THREADS² threads — the
+    /// outer, coarser level keeps every core busy, and the sequential
+    /// fallback is bit-identical by the pool contract anyway.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool() -> bool {
+    IN_POOL.with(|f| f.get())
+}
+
 /// Apply `f` to every index in `0..n`, writing results into a Vec in
 /// order. Work is distributed by an atomic cursor so uneven item costs
 /// (e.g. different matrix sizes) balance automatically.
@@ -26,7 +40,7 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n <= 1 {
+    if workers <= 1 || n <= 1 || in_pool() {
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -37,16 +51,19 @@ where
             let f = &f;
             let cursor = &cursor;
             let out_ptr = &out_ptr;
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(move || {
+                IN_POOL.with(|flag| flag.set(true));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic cursor; slots are disjoint; the scope outlives
+                    // all writes.
+                    unsafe { *out_ptr.0.add(i) = Some(v) };
                 }
-                let v = f(i);
-                // SAFETY: each index i is claimed exactly once via the
-                // atomic cursor; slots are disjoint; the scope outlives
-                // all writes.
-                unsafe { *out_ptr.0.add(i) = Some(v) };
             });
         }
     });
@@ -73,7 +90,7 @@ where
     assert!(row_len > 0 && data.len() % row_len == 0);
     let n_rows = data.len() / row_len;
     let workers = num_threads().min(n_rows.max(1));
-    if workers <= 1 || n_rows <= 1 {
+    if workers <= 1 || n_rows <= 1 || in_pool() {
         for (i, row) in data.chunks_exact_mut(row_len).enumerate() {
             f(i, row);
         }
@@ -92,6 +109,7 @@ where
             let start = row0;
             row0 += take;
             scope.spawn(move || {
+                IN_POOL.with(|flag| flag.set(true));
                 for (r, row) in band.chunks_exact_mut(row_len).enumerate() {
                     f(start + r, row);
                 }
@@ -132,6 +150,21 @@ mod tests {
         std::env::set_var("PA_THREADS", "3");
         assert_eq!(num_threads(), 3);
         std::env::remove_var("PA_THREADS");
+    }
+
+    #[test]
+    fn nested_calls_stay_correct_and_flag_resets() {
+        // an inner parallel_map on a worker thread runs inline (IN_POOL
+        // guard) — results must be unchanged for any thread count; no
+        // env mutation here so the test cannot race siblings.
+        let v = parallel_map(8, |i| {
+            let inner = parallel_map(16, |j| i * 100 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..16).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(v, want);
+        // the calling thread is never flagged as a pool worker
+        assert!(!super::in_pool());
     }
 
     #[test]

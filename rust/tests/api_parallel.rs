@@ -1,0 +1,245 @@
+//! Integration tests for the stateless-session solver API:
+//!
+//! * `PA_THREADS` invariance — the parallel `SolveCache::precompute`,
+//!   `coordinator::eval::evaluate`, and full `Trainer::train` must be
+//!   **bit-identical** for any worker count (the contract that makes the
+//!   parallelization safe to enable by default).
+//! * the versioned policy JSON — save → load → greedy-action roundtrip,
+//!   a golden policy file, and loud rejection of schema mismatches.
+
+use precision_autotune::api::Autotuner;
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::action::{Action, ActionSpace};
+use precision_autotune::bandit::{SolveCache, TrainedPolicy, Trainer};
+use precision_autotune::chop::Prec;
+use precision_autotune::coordinator::eval::{evaluate, EvalRecord};
+use precision_autotune::gen::{dense_dataset, Problem};
+use precision_autotune::util::config::Config;
+use precision_autotune::util::json;
+
+/// One test in this binary mutates `PA_THREADS` while every pipeline
+/// reads the environment (`num_threads()`); concurrent setenv/getenv is
+/// UB on glibc. Every test takes this lock, serializing the binary.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn tiny_cfg() -> Config {
+    let mut c = Config::tiny();
+    c.size_min = 24;
+    c.size_max = 48;
+    c.episodes = 20;
+    c.n_train = 8;
+    c
+}
+
+fn assert_records_bit_identical(a: &[EvalRecord], b: &[EvalRecord]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.action, y.action, "system {}", x.id);
+        assert_eq!(x.ferr.to_bits(), y.ferr.to_bits(), "system {}", x.id);
+        assert_eq!(x.nbe.to_bits(), y.nbe.to_bits(), "system {}", x.id);
+        assert_eq!(x.eps_max.to_bits(), y.eps_max.to_bits(), "system {}", x.id);
+        assert_eq!(x.outer_iters, y.outer_iters, "system {}", x.id);
+        assert_eq!(x.gmres_iters, y.gmres_iters, "system {}", x.id);
+        assert_eq!(x.failed, y.failed, "system {}", x.id);
+    }
+}
+
+/// One run of the full pipeline (precompute + train + evaluate) under the
+/// current PA_THREADS setting.
+struct PipelineResult {
+    cache_outcomes: Vec<(f64, f64, usize, bool)>,
+    policy: TrainedPolicy,
+    mean_reward: Vec<f64>,
+    records: Vec<EvalRecord>,
+}
+
+fn run_pipeline(cfg: &Config, train: &[Problem], test: &[Problem]) -> PipelineResult {
+    let backend = NativeBackend::new();
+    let space = ActionSpace::reduced_top_k(cfg.k_top);
+
+    let mut pre = SolveCache::new();
+    pre.precompute(&backend, train, &space, cfg).unwrap();
+    let mut cache_outcomes = Vec::new();
+    for pi in 0..train.len() {
+        for ai in 0..space.len() {
+            let o = pre.cached(pi, ai).expect("precompute covers everything");
+            cache_outcomes.push((o.ferr, o.nbe, o.gmres_iters, o.failed));
+        }
+    }
+
+    let mut cache = SolveCache::new();
+    let (policy, trace) = Trainer::new(cfg, &mut cache)
+        .train(&backend, train, true)
+        .unwrap();
+    let records = evaluate(&backend, test, Some(&policy), cfg).unwrap();
+    PipelineResult {
+        cache_outcomes,
+        policy,
+        mean_reward: trace.mean_reward,
+        records,
+    }
+}
+
+#[test]
+fn pa_threads_1_vs_4_bit_identical() {
+    let _env = env_lock();
+    let cfg = tiny_cfg();
+    let train = dense_dataset(&cfg, 6, 42);
+    let test = dense_dataset(&cfg, 6, 43);
+
+    std::env::set_var("PA_THREADS", "1");
+    let serial = run_pipeline(&cfg, &train, &test);
+    std::env::set_var("PA_THREADS", "4");
+    let parallel = run_pipeline(&cfg, &train, &test);
+    std::env::remove_var("PA_THREADS");
+
+    // precompute: every (problem, action) outcome bit-identical
+    assert_eq!(serial.cache_outcomes.len(), parallel.cache_outcomes.len());
+    for (i, (a, b)) in serial
+        .cache_outcomes
+        .iter()
+        .zip(&parallel.cache_outcomes)
+        .enumerate()
+    {
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "ferr differs at pair {i}");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "nbe differs at pair {i}");
+        assert_eq!(a.2, b.2, "gmres_iters differs at pair {i}");
+        assert_eq!(a.3, b.3, "failed differs at pair {i}");
+    }
+
+    // training: identical episode trace and identical Q-table bits
+    assert_eq!(serial.mean_reward.len(), parallel.mean_reward.len());
+    for (t, (a, b)) in serial.mean_reward.iter().zip(&parallel.mean_reward).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "mean reward differs at episode {t}");
+    }
+    let (qs, qp) = (&serial.policy.qtable, &parallel.policy.qtable);
+    assert_eq!(qs.n_states, qp.n_states);
+    assert_eq!(qs.space.actions, qp.space.actions);
+    for s in 0..qs.n_states {
+        for a in 0..qs.space.len() {
+            assert_eq!(qs.q(s, a).to_bits(), qp.q(s, a).to_bits(), "Q({s},{a})");
+            assert_eq!(qs.visits(s, a), qp.visits(s, a), "N({s},{a})");
+        }
+    }
+
+    // evaluation: identical records
+    assert_records_bit_identical(&serial.records, &parallel.records);
+}
+
+#[test]
+fn policy_save_load_greedy_roundtrip() {
+    let _env = env_lock();
+    let cfg = tiny_cfg();
+    let train = dense_dataset(&cfg, 8, 1000);
+    let backend = NativeBackend::new();
+    let mut cache = SolveCache::new();
+    let (policy, _) = Trainer::new(&cfg, &mut cache)
+        .train(&backend, &train, true)
+        .unwrap();
+
+    let path = std::env::temp_dir().join("pa_api_roundtrip_policy.json");
+    policy.save(path.to_str().unwrap()).unwrap();
+    let loaded = TrainedPolicy::load(path.to_str().unwrap()).unwrap();
+
+    // greedy action agrees on training systems and on fresh ones
+    let fresh = dense_dataset(&cfg, 8, 1001);
+    for p in train.iter().chain(&fresh) {
+        assert_eq!(policy.select(p), loaded.select(p), "system {}", p.id);
+    }
+
+    // and the loaded policy serves through the facade
+    let tuner = Autotuner::builder()
+        .backend(NativeBackend::new())
+        .policy(loaded)
+        .config(cfg.clone())
+        .build()
+        .unwrap();
+    let rep = tuner.solve(&fresh[0].a, &fresh[0].b).unwrap();
+    assert_eq!(rep.action, policy.select(&fresh[0]));
+}
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden.json");
+
+fn golden_text() -> String {
+    std::fs::read_to_string(GOLDEN).expect("golden policy present")
+}
+
+/// A problem with prescribed features (the golden discretizer bins on
+/// log10 κ over [1, 5] with 2 bins).
+fn feature_probe(kappa_est: f64) -> Problem {
+    use precision_autotune::linalg::Mat;
+    Problem {
+        id: 0,
+        a: Mat::eye(4),
+        b: vec![1.0; 4],
+        x_true: vec![1.0; 4],
+        n: 4,
+        kappa_target: kappa_est,
+        kappa_est,
+        norm_inf: 1.0,
+        density: 1.0,
+    }
+}
+
+#[test]
+fn golden_policy_loads_and_selects() {
+    let _env = env_lock();
+    let policy = TrainedPolicy::load(GOLDEN).unwrap();
+    assert_eq!(policy.qtable.n_states, 2);
+    assert_eq!(policy.qtable.space.len(), 2);
+    // state 0 (low κ): the visited bf16-factorization action wins on Q
+    let low = policy.select(&feature_probe(1e2));
+    assert_eq!(
+        low,
+        Action {
+            u_f: Prec::Bf16,
+            u: Prec::Fp64,
+            u_g: Prec::Fp64,
+            u_r: Prec::Fp64,
+        }
+    );
+    // state 1 (high κ): never visited => safe all-FP64 fallback
+    let high = policy.select(&feature_probe(1e8));
+    assert_eq!(high, Action::FP64);
+}
+
+#[test]
+fn golden_policy_schema_mismatches_rejected() {
+    let _env = env_lock();
+    let text = golden_text();
+    // baseline sanity: the pristine golden parses
+    assert!(TrainedPolicy::from_json(&json::parse(&text).unwrap()).is_ok());
+
+    // unsupported version
+    let bad_ver = text.replacen("\"schema_version\":1.0", "\"schema_version\":99.0", 1);
+    assert_ne!(bad_ver, text);
+    let err = TrainedPolicy::from_json(&json::parse(&bad_ver).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("schema_version"), "{err}");
+
+    // missing version entirely
+    let no_ver = text.replacen(",\"schema_version\":1.0", "", 1);
+    assert_ne!(no_ver, text);
+    let err = TrainedPolicy::from_json(&json::parse(&no_ver).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("schema_version"), "{err}");
+
+    // action-space hash that does not match the stored action list
+    let bad_hash = text.replacen("11739f42dda79100", "0000000000000000", 1);
+    assert_ne!(bad_hash, text);
+    let err = TrainedPolicy::from_json(&json::parse(&bad_hash).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("action-space hash"), "{err}");
+
+    // a tampered action list invalidates the stored hash too
+    let bad_actions = text.replacen(
+        "[\"bf16\",\"fp64\",\"fp64\",\"fp64\"]",
+        "[\"tf32\",\"fp64\",\"fp64\",\"fp64\"]",
+        1,
+    );
+    assert_ne!(bad_actions, text);
+    let err = TrainedPolicy::from_json(&json::parse(&bad_actions).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("action-space hash"), "{err}");
+}

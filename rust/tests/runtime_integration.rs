@@ -12,7 +12,7 @@ use precision_autotune::gen::{finish_problem, randsvd_mode2};
 use precision_autotune::linalg::Mat;
 use precision_autotune::runtime::{literal_to_f64s, vec_literal, PjrtBackend, PjrtRuntime};
 use precision_autotune::solver::ir::gmres_ir;
-use precision_autotune::solver::SolverBackend;
+use precision_autotune::solver::{ProblemSession, SolverBackend};
 use precision_autotune::util::config::Config;
 use precision_autotune::util::rng::Rng;
 
@@ -47,7 +47,7 @@ fn system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
 #[test]
 fn chop_artifacts_match_rust_chop_bitwise() {
     require_artifacts!();
-    let mut rt = PjrtRuntime::open(DIR).unwrap();
+    let rt = PjrtRuntime::open(DIR).unwrap();
     let mut rng = Rng::new(99);
     let xs: Vec<f64> = (0..4096)
         .map(|i| match i % 7 {
@@ -78,10 +78,11 @@ fn chop_artifacts_match_rust_chop_bitwise() {
 fn lu_factor_pjrt_matches_native_fp64() {
     require_artifacts!();
     let (a, _, b) = system(64, 1);
-    let mut pjrt = PjrtBackend::open(DIR).unwrap();
-    let mut native = NativeBackend::new();
-    let fp = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
-    let fnat = native.lu_factor(&a, Prec::Fp64).unwrap();
+    let pjrt = PjrtBackend::open(DIR).unwrap();
+    let native = NativeBackend::new();
+    let s = ProblemSession::new(&a);
+    let fp = pjrt.lu_factor(&s, Prec::Fp64).unwrap();
+    let fnat = native.lu_factor(&s, Prec::Fp64).unwrap();
     assert_eq!(fp.piv[..64], fnat.piv[..]);
     for i in 0..64 {
         for j in 0..64 {
@@ -104,12 +105,14 @@ fn residual_pjrt_matches_native_chopped() {
     require_artifacts!();
     let (a, _, b) = system(48, 2); // n=48 pads into the 64 bucket
     let x = vec![0.25; 48];
-    let mut pjrt = PjrtBackend::open(DIR).unwrap();
-    let mut native = NativeBackend::new();
+    let pjrt = PjrtBackend::open(DIR).unwrap();
+    let native = NativeBackend::new();
     for p in [Prec::Bf16, Prec::Fp64] {
-        let rp = pjrt.residual(&a, &x, &b, p).unwrap();
-        let rn = native.residual(&a, &x, &b, p).unwrap();
-        native.reset();
+        // fresh sessions per precision: no state leaks between solves
+        let sp = ProblemSession::new(&a);
+        let sn = ProblemSession::new(&a);
+        let rp = pjrt.residual(&sp, &x, &b, p).unwrap();
+        let rn = native.residual(&sn, &x, &b, p).unwrap();
         for (i, (u, v)) in rp.iter().zip(&rn).enumerate() {
             // identical chop grids; differences only from summation order
             let tol = if p == Prec::Fp64 { 1e-10 } else { 2.0 * p.unit_roundoff() * v.abs().max(1.0) };
@@ -126,19 +129,19 @@ fn full_ir_solve_through_pjrt_converges() {
     let p = finish_problem(0, a, 1e3, 1.0, &mut rng);
     let mut cfg = Config::tiny();
     cfg.tau = 1e-8;
-    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let pjrt = PjrtBackend::open(DIR).unwrap();
     let action = Action {
         u_f: Prec::Bf16,
         u: Prec::Fp64,
         u_g: Prec::Fp32,
         u_r: Prec::Fp64,
     };
-    let out = gmres_ir(&mut pjrt, &p, &action, &cfg).unwrap();
+    let out = gmres_ir(&pjrt, &p, &action, &cfg).unwrap();
     assert!(!out.failed, "PJRT IR failed");
     assert!(out.ferr < 1e-8, "ferr {}", out.ferr);
     // the native backend agrees on convergence behaviour
-    let mut native = NativeBackend::new();
-    let outn = gmres_ir(&mut native, &p, &action, &cfg).unwrap();
+    let native = NativeBackend::new();
+    let outn = gmres_ir(&native, &p, &action, &cfg).unwrap();
     assert!(!outn.failed);
     assert!(
         (out.outer_iters as i64 - outn.outer_iters as i64).abs() <= 2,
@@ -152,13 +155,14 @@ fn full_ir_solve_through_pjrt_converges() {
 fn bucket_padding_used_for_odd_sizes() {
     require_artifacts!();
     let (a, _, b) = system(100, 4); // pads to 128
-    let mut pjrt = PjrtBackend::open(DIR).unwrap();
-    let f = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
+    let pjrt = PjrtBackend::open(DIR).unwrap();
+    let s = ProblemSession::new(&a);
+    let f = pjrt.lu_factor(&s, Prec::Fp64).unwrap();
     assert_eq!(f.lu.n_rows, 128);
     let x = pjrt.lu_solve(&f, &b, Prec::Fp64).unwrap();
     assert_eq!(x.len(), 100); // unpadded for the caller
-    let mut native = NativeBackend::new();
-    let fn_ = native.lu_factor(&a, Prec::Fp64).unwrap();
+    let native = NativeBackend::new();
+    let fn_ = native.lu_factor(&s, Prec::Fp64).unwrap();
     let xn = native.lu_solve(&fn_, &b, Prec::Fp64).unwrap();
     for (u, v) in x.iter().zip(&xn) {
         assert!((u - v).abs() < 1e-8 * (1.0 + v.abs()));
@@ -168,30 +172,33 @@ fn bucket_padding_used_for_odd_sizes() {
 #[test]
 fn lu_breakdown_reported_from_artifact() {
     require_artifacts!();
-    let mut pjrt = PjrtBackend::open(DIR).unwrap();
+    let pjrt = PjrtBackend::open(DIR).unwrap();
     let a = Mat::zeros(64, 64);
-    assert!(pjrt.lu_factor(&a, Prec::Fp64).is_err());
+    let sa = ProblemSession::new(&a);
+    assert!(pjrt.lu_factor(&sa, Prec::Fp64).is_err());
     // overflow in bf16
     let mut big = Mat::eye(64);
     for i in 0..64 {
         big[(i, i)] = 1e39;
     }
-    assert!(pjrt.lu_factor(&big, Prec::Bf16).is_err());
-    assert!(pjrt.lu_factor(&big, Prec::Fp64).is_ok());
+    let sb = ProblemSession::new(&big);
+    assert!(pjrt.lu_factor(&sb, Prec::Bf16).is_err());
+    assert!(pjrt.lu_factor(&sb, Prec::Fp64).is_ok());
 }
 
 #[test]
 fn gmres_artifact_iteration_reporting() {
     require_artifacts!();
     let (a, _, b) = system(64, 5);
-    let mut pjrt = PjrtBackend::open(DIR).unwrap();
-    let f = pjrt.lu_factor(&a, Prec::Fp64).unwrap();
-    let g = pjrt.gmres(&a, &f, &b, 1e-10, 50, Prec::Fp64).unwrap();
+    let pjrt = PjrtBackend::open(DIR).unwrap();
+    let s = ProblemSession::new(&a);
+    let f = pjrt.lu_factor(&s, Prec::Fp64).unwrap();
+    let g = pjrt.gmres(&s, &f, &b, 1e-10, 50, Prec::Fp64).unwrap();
     assert!(g.ok);
     assert!(g.iters >= 1 && g.iters <= 3, "iters {}", g.iters);
     assert!(g.relres <= 1e-10);
     // maxit cap honored
-    let g2 = pjrt.gmres(&a, &f, &b, 1e-30, 2, Prec::Fp64).unwrap();
+    let g2 = pjrt.gmres(&s, &f, &b, 1e-30, 2, Prec::Fp64).unwrap();
     assert!(g2.iters <= 2);
 }
 
