@@ -55,7 +55,7 @@ fn main() -> Result<()> {
 
     // 4. Serve a raw (A, b) pair through the facade — the deployment
     //    path: features -> discretize -> greedy action -> GMRES-IR.
-    let rep = tuner.solve(&test[0].a, &test[0].b)?;
+    let rep = tuner.solve(&test[0].system, &test[0].b)?;
     println!(
         "\nfacade solve: action {} nbe {} ({} GMRES iters)",
         rep.action,

@@ -25,6 +25,25 @@
 //! # }
 //! ```
 //!
+//! `solve` accepts anything `Into<`[`SystemInput`]`>` — a CSR system
+//! solves sparse-natively (O(nnz) residual and GMRES matvecs,
+//! bit-identical to the densified path; only the LU factorization
+//! densifies):
+//!
+//! ```no_run
+//! use precision_autotune::api::Autotuner;
+//! use precision_autotune::sparse::Csr;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let tuner = Autotuner::builder().build()?;
+//! // 2x2 SPD system in CSR
+//! let a = Csr::from_triplets(2, 2, &[(0, 0, 4.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 3.0)]);
+//! let report = tuner.solve(&a, &[6.0, 5.0])?;
+//! println!("nnz {} density {:.2}: x = {:?}", report.nnz, report.density, report.x);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! One [`Autotuner`] is immutable after `build()` and `Send + Sync` —
 //! callers may share it across request threads; every `solve` opens its
 //! own [`crate::solver::ProblemSession`] internally.
@@ -39,9 +58,9 @@ use crate::coordinator::eval::EvalRecord;
 use crate::gen::Problem;
 use crate::linalg::condest::condest_1;
 use crate::linalg::lu::lu_factor;
-use crate::linalg::Mat;
 use crate::solver::ir::{gmres_ir_prefactored, StopReason};
 use crate::solver::{LuHandle, ProblemSession, SolverBackend};
+use crate::system::SystemInput;
 use crate::util::config::Config;
 
 /// Everything one facade solve reports. There is no reference solution
@@ -69,6 +88,11 @@ pub struct SolveReport {
     pub kappa_est: f64,
     /// ‖A‖∞ (context feature φ₂).
     pub norm_inf: f64,
+    /// Structural density of the input (1.0 for dense systems) — lets
+    /// downstream consumers log the workload mix.
+    pub density: f64,
+    /// Stored entries of the input (n² for dense systems).
+    pub nnz: usize,
     /// Which backend solved it.
     pub backend: &'static str,
 }
@@ -170,8 +194,8 @@ impl Autotuner {
     /// Extract context features and pick the precision configuration the
     /// policy would use for `a` — without solving. Returns the action
     /// plus the (κ₁ estimate, ‖A‖∞) features it was chosen from.
-    pub fn select_action(&self, a: &Mat) -> Result<(Action, f64, f64)> {
-        let (p, _) = self.wrap_problem(a, &[])?;
+    pub fn select_action(&self, a: impl Into<SystemInput>) -> Result<(Action, f64, f64)> {
+        let (p, _) = self.wrap_problem(a.into(), &[])?;
         let action = match &self.policy {
             Some(pol) => pol.select(&p),
             None => Action::FP64,
@@ -182,12 +206,17 @@ impl Autotuner {
     /// Solve `A x = b`: features → discretize → greedy action → GMRES-IR
     /// → metrics. Thread-safe; call freely from concurrent requests.
     ///
+    /// `a` is anything `Into<SystemInput>` — `&Mat`/`Mat` for dense
+    /// systems (the pre-existing call shape), `&Csr`/`Csr` for sparse
+    /// ones, which run the IR loop's residual and GMRES matvecs in
+    /// O(nnz) and densify only for the factorization.
+    ///
     /// When the chosen action factors in fp64 and the backend accepts
     /// host factors (the native one does), the f64 LU already computed
     /// for the κ₁ feature is reused as the refinement factorization —
     /// one O(n³) factorization per request instead of two.
-    pub fn solve(&self, a: &Mat, b: &[f64]) -> Result<SolveReport> {
-        let (p, f64_lu) = self.wrap_problem(a, b)?;
+    pub fn solve(&self, a: impl Into<SystemInput>, b: &[f64]) -> Result<SolveReport> {
+        let (p, f64_lu) = self.wrap_problem(a.into(), b)?;
         let action = match &self.policy {
             Some(pol) => pol.select(&p),
             None => Action::FP64,
@@ -197,8 +226,13 @@ impl Autotuner {
 
     /// Solve with an explicit precision configuration, bypassing the
     /// policy (baselines, A/B comparisons).
-    pub fn solve_with_action(&self, a: &Mat, b: &[f64], action: Action) -> Result<SolveReport> {
-        let (p, f64_lu) = self.wrap_problem(a, b)?;
+    pub fn solve_with_action(
+        &self,
+        a: impl Into<SystemInput>,
+        b: &[f64],
+        action: Action,
+    ) -> Result<SolveReport> {
+        let (p, f64_lu) = self.wrap_problem(a.into(), b)?;
         self.solve_prepared(p, f64_lu, action)
     }
 
@@ -234,46 +268,56 @@ impl Autotuner {
     /// discretizer consume, plus the f64 LU the κ₁ estimate was derived
     /// from (None on a singular matrix), kept for factorization reuse.
     /// `x_true` stays empty — the serving path has no reference solution
-    /// (see `solver::ir`). `b` may be empty for feature-only paths. The
-    /// O(n²) clone of A is noise next to the O(n³) feature
-    /// factorization run on the same call.
-    fn wrap_problem(&self, a: &Mat, b: &[f64]) -> Result<(Problem, Option<LuHandle>)> {
-        if a.n_rows != a.n_cols {
-            bail!("matrix must be square, got {}x{}", a.n_rows, a.n_cols);
+    /// (see `solver::ir`). `b` may be empty for feature-only paths.
+    ///
+    /// The κ₁ feature needs an f64 LU, so sparse inputs densify here
+    /// transiently (the dense copy is dropped before the [`Problem`] is
+    /// built; the solve session re-densifies only if the action's u_f
+    /// factorization runs, which it always does — an accepted O(n²)
+    /// duplication that keeps the feature path and the solve session
+    /// independent).
+    fn wrap_problem(&self, system: SystemInput, b: &[f64]) -> Result<(Problem, Option<LuHandle>)> {
+        let (nr, nc) = (system.n_rows(), system.n_cols());
+        if nr != nc {
+            bail!("matrix must be square, got {nr}x{nc}");
         }
-        if a.n_rows == 0 {
+        if nr == 0 {
             bail!("matrix is empty");
         }
-        if !b.is_empty() && b.len() != a.n_rows {
-            bail!("rhs length {} does not match matrix size {}", b.len(), a.n_rows);
+        if !b.is_empty() && b.len() != nr {
+            bail!("rhs length {} does not match matrix size {}", b.len(), nr);
         }
-        if a.has_non_finite() || b.iter().any(|v| !v.is_finite()) {
+        if system.has_non_finite() || b.iter().any(|v| !v.is_finite()) {
             bail!("matrix or rhs contains non-finite entries");
         }
-        // same semantics as gen::features_of, but keeping the LU
-        let norm_inf = a.norm_inf();
-        let (kappa_est, f64_lu) = match lu_factor(a) {
-            Ok(lu) => {
-                let kappa = condest_1(a, &lu);
-                let handle = LuHandle {
-                    lu: lu.lu,
-                    piv: lu.piv.iter().map(|&x| x as i32).collect(),
-                    prec: Prec::Fp64,
-                };
-                (kappa, Some(handle))
+        // same semantics as gen::features_of_system, but keeping the LU
+        let norm_inf = system.norm_inf();
+        let (kappa_est, f64_lu) = {
+            let dense = system.to_dense_for_factorization();
+            match lu_factor(&dense) {
+                Ok(lu) => {
+                    let kappa = condest_1(&dense, &lu);
+                    let handle = LuHandle {
+                        lu: lu.lu,
+                        piv: lu.piv.iter().map(|&x| x as i32).collect(),
+                        prec: Prec::Fp64,
+                    };
+                    (kappa, Some(handle))
+                }
+                Err(_) => (f64::INFINITY, None),
             }
-            Err(_) => (f64::INFINITY, None),
         };
+        let density = system.density();
         let p = Problem {
             id: 0,
-            a: a.clone(),
+            system,
             b: b.to_vec(),
             x_true: Vec::new(),
-            n: a.n_rows,
+            n: nr,
             kappa_target: f64::NAN,
             kappa_est,
             norm_inf,
-            density: a.nnz_fraction(),
+            density,
         };
         Ok((p, f64_lu))
     }
@@ -296,7 +340,7 @@ impl Autotuner {
         } else {
             None
         };
-        let session = ProblemSession::new(&p.a);
+        let session = ProblemSession::new(&p.system);
         let out =
             gmres_ir_prefactored(self.backend.as_ref(), &session, &p, &action, &self.cfg, prefactored)?;
         Ok(SolveReport {
@@ -309,6 +353,8 @@ impl Autotuner {
             failed: out.failed,
             kappa_est: p.kappa_est,
             norm_inf: p.norm_inf,
+            density: p.density,
+            nnz: p.system.nnz(),
             backend: self.backend.name(),
         })
     }
@@ -318,6 +364,8 @@ impl Autotuner {
 mod tests {
     use super::*;
     use crate::gen::dense_dataset;
+    use crate::linalg::Mat;
+    use crate::sparse::Csr;
     use crate::util::rng::Rng;
 
     fn well_conditioned_system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
@@ -430,7 +478,7 @@ mod tests {
         let tuner = Autotuner::builder().build().unwrap();
         let (a, _, b) = well_conditioned_system(28, 9);
         let rep = tuner.solve(&a, &b).unwrap();
-        let (p, _) = tuner.wrap_problem(&a, &b).unwrap();
+        let (p, _) = tuner.wrap_problem(SystemInput::from(&a), &b).unwrap();
         let out =
             crate::solver::ir::gmres_ir(tuner.backend.as_ref(), &p, &Action::FP64, tuner.config())
                 .unwrap();
@@ -446,5 +494,84 @@ mod tests {
     fn autotuner_is_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Autotuner>();
+    }
+
+    /// A sparse SPD system with moderate conditioning (diagonally
+    /// boosted), plus its exact densification.
+    fn sparse_system(n: usize, seed: u64) -> (Csr, Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 8.0 + rng.gauss().abs();
+            for j in 0..n {
+                if i != j && rng.uniform() < 0.08 {
+                    a[(i, j)] = rng.gauss();
+                }
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        (Csr::from_dense(&a), a, b)
+    }
+
+    #[test]
+    fn sparse_solve_bit_identical_to_densified_path() {
+        // The tentpole's acceptance bar: a CSR input must produce the
+        // exact bits of the dense pipeline, for the policy-free FP64
+        // path and for a low-precision action exercising the chopped-CSR
+        // residual + GMRES kernels.
+        let tuner = Autotuner::builder().build().unwrap();
+        let (csr, a, b) = sparse_system(48, 11);
+        let dense_rep = tuner.solve(&a, &b).unwrap();
+        let sparse_rep = tuner.solve(&csr, &b).unwrap();
+        assert!(!dense_rep.failed && !sparse_rep.failed);
+        assert_eq!(dense_rep.action, sparse_rep.action);
+        assert_eq!(dense_rep.x.len(), sparse_rep.x.len());
+        for (u, v) in dense_rep.x.iter().zip(&sparse_rep.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(dense_rep.nbe.to_bits(), sparse_rep.nbe.to_bits());
+        assert_eq!(dense_rep.kappa_est.to_bits(), sparse_rep.kappa_est.to_bits());
+        assert_eq!(dense_rep.norm_inf.to_bits(), sparse_rep.norm_inf.to_bits());
+        assert_eq!(dense_rep.outer_iters, sparse_rep.outer_iters);
+        assert_eq!(dense_rep.gmres_iters, sparse_rep.gmres_iters);
+
+        let act = Action {
+            u_f: crate::chop::Prec::Fp32,
+            u: crate::chop::Prec::Fp64,
+            u_g: crate::chop::Prec::Fp32,
+            u_r: crate::chop::Prec::Fp32,
+        };
+        let d = tuner.solve_with_action(&a, &b, act).unwrap();
+        let s = tuner.solve_with_action(&csr, &b, act).unwrap();
+        assert!(!d.failed && !s.failed);
+        for (u, v) in d.x.iter().zip(&s.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(d.nbe.to_bits(), s.nbe.to_bits());
+        assert_eq!(d.gmres_iters, s.gmres_iters);
+    }
+
+    #[test]
+    fn report_surfaces_structure() {
+        // Satellite: density/nnz in SolveReport — 1.0 / n² for dense
+        // inputs, the CSR structural counts for sparse ones.
+        let tuner = Autotuner::builder().build().unwrap();
+        let (csr, a, b) = sparse_system(32, 13);
+        let d = tuner.solve(&a, &b).unwrap();
+        assert_eq!(d.density, 1.0);
+        assert_eq!(d.nnz, 32 * 32);
+        let s = tuner.solve(&csr, &b).unwrap();
+        assert_eq!(s.nnz, csr.nnz());
+        assert_eq!(s.density, csr.density());
+        assert!(s.density < 1.0);
+    }
+
+    #[test]
+    fn sparse_shape_errors_are_loud() {
+        let tuner = Autotuner::builder().build().unwrap();
+        let rect = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]);
+        assert!(tuner.solve(&rect, &[1.0; 2]).is_err());
+        let bad = Csr::from_triplets(2, 2, &[(0, 0, f64::NAN), (1, 1, 1.0)]);
+        assert!(tuner.solve(&bad, &[1.0; 2]).is_err());
     }
 }

@@ -9,15 +9,20 @@
 //! derived state (the chopped copies of A shared between the residual and
 //! GMRES steps of one solve) lives in the caller's [`ProblemSession`],
 //! which is what lets one `NativeBackend` serve concurrent solves.
+//!
+//! The residual and GMRES steps apply A **through the session's
+//! operator** (DESIGN.md §2c): O(n²) cached-dense matvecs for dense
+//! inputs, O(nnz) chopped-CSR matvecs for sparse ones — bit-identical
+//! either way. Only `lu_factor` touches the dense form (factorization
+//! stays dense, as in the paper's simulation).
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::chop::Prec;
-use crate::linalg::gmres::gmres_preconditioned;
+use crate::chop::{chop_p, Prec};
+use crate::linalg::gmres::gmres_preconditioned_op;
 use crate::linalg::lu::{lu_factor_chopped, LuFactors};
-use crate::linalg::{chopped_residual, Mat};
 use crate::solver::{GmresOutcome, LuHandle, ProblemSession, SolverBackend};
 
 /// Native backend. Stateless — see [`ProblemSession`] for where the
@@ -42,7 +47,9 @@ fn to_factors(f: &LuHandle) -> LuFactors {
 
 impl SolverBackend for NativeBackend {
     fn lu_factor(&self, s: &ProblemSession<'_>, p: Prec) -> Result<LuHandle> {
-        let f = lu_factor_chopped(s.a(), p).map_err(|e| anyhow!("{e}"))?;
+        // Factorization stays dense — the one step that goes through the
+        // session's densification escape hatch for sparse inputs.
+        let f = lu_factor_chopped(s.dense_for_factorization(), p).map_err(|e| anyhow!("{e}"))?;
         Ok(LuHandle {
             lu: f.lu,
             piv: f.piv.iter().map(|&x| x as i32).collect(),
@@ -55,19 +62,19 @@ impl SolverBackend for NativeBackend {
     }
 
     fn residual(&self, s: &ProblemSession<'_>, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
-        // chopped_residual chops A internally; reuse the session's cached
-        // copy when the precision matters to avoid re-chopping 512^2
-        // entries per outer iteration.
+        // r = chop(chop(b) − Aₚ·chop(x)) through the session operator:
+        // cached chopped-dense matvec for dense inputs, chopped-CSR
+        // (O(nnz)) for sparse ones — bit-identical either way.
         if p == Prec::Fp64 {
-            return Ok(chopped_residual(s.a(), x, b, p));
+            let ax = s.matvec(x);
+            return Ok(b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect());
         }
-        let ac = s.chopped(p);
         let mut xc = x.to_vec();
         crate::chop::chop_slice(&mut xc, p);
-        let ax = crate::linalg::chopped_matvec_prechopped(ac, &xc, p);
+        let ax = s.chopped_matvec(&xc, p);
         Ok(b.iter()
             .zip(ax)
-            .map(|(bi, axi)| crate::chop::chop_p(crate::chop::chop_p(*bi, p) - axi, p))
+            .map(|(bi, axi)| chop_p(chop_p(*bi, p) - axi, p))
             .collect())
     }
 
@@ -80,10 +87,17 @@ impl SolverBackend for NativeBackend {
         max_m: usize,
         p: Prec,
     ) -> Result<GmresOutcome> {
-        // fp64 needs no chopped copy at all; other precisions borrow the
-        // session's cached copy — no O(n²) clone on either path.
-        let ap: &Mat = s.chopped(p);
-        let res = gmres_preconditioned(ap, &to_factors(f), r, tol, max_m, p);
+        // Arnoldi matvecs run through the session operator too — the
+        // session's cached chopped copy (dense or CSR) on every path.
+        let res = gmres_preconditioned_op(
+            |xc| s.chopped_matvec(xc, p),
+            s.n(),
+            &to_factors(f),
+            r,
+            tol,
+            max_m,
+            p,
+        );
         Ok(GmresOutcome {
             z: res.z,
             iters: res.iters,
@@ -104,6 +118,7 @@ impl SolverBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
     use crate::util::rng::Rng;
 
     fn system(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
@@ -162,6 +177,53 @@ mod tests {
         let ra2 = be.residual(&s2, &x, &b2, Prec::Fp32).unwrap();
         let ra2_direct = crate::linalg::chopped_residual(&a2, &x, &b2, Prec::Fp32);
         assert_eq!(ra2, ra2_direct);
+    }
+
+    #[test]
+    fn sparse_session_steps_bit_identical_to_dense() {
+        // Every backend step over a CSR session must reproduce the dense
+        // session bit for bit — and never touch the dense matvec path.
+        let n = 40;
+        let mut rng = Rng::new(5);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 6.0 + rng.gauss();
+            for j in 0..n {
+                if i != j && rng.uniform() < 0.1 {
+                    a[(i, j)] = rng.gauss();
+                }
+            }
+        }
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        let csr = crate::sparse::Csr::from_dense(&a);
+        let be = NativeBackend::new();
+        let sd = ProblemSession::new(&a);
+        let ss = ProblemSession::new(&csr);
+        for p in [Prec::Bf16, Prec::Fp32, Prec::Fp64] {
+            let fd = be.lu_factor(&sd, p).unwrap();
+            let fs = be.lu_factor(&ss, p).unwrap();
+            for (u, v) in fd.lu.data.iter().zip(&fs.lu.data) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p} LU");
+            }
+            let x0 = be.lu_solve(&fd, &b, p).unwrap();
+            let rd = be.residual(&sd, &x0, &b, p).unwrap();
+            let rs = be.residual(&ss, &x0, &b, p).unwrap();
+            for (u, v) in rd.iter().zip(&rs) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p} residual");
+            }
+            let gd = be.gmres(&sd, &fd, &rd, 1e-6, 20, p).unwrap();
+            let gs = be.gmres(&ss, &fs, &rs, 1e-6, 20, p).unwrap();
+            assert_eq!(gd.iters, gs.iters, "{p}");
+            assert_eq!(gd.ok, gs.ok, "{p}");
+            for (u, v) in gd.z.iter().zip(&gs.z) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p} gmres z");
+            }
+        }
+        // the sparse session never ran a dense operator application
+        assert_eq!(ss.dense_matvec_count(), 0);
+        assert!(ss.sparse_matvec_count() > 0);
+        assert!(sd.dense_matvec_count() > 0);
     }
 
     #[test]

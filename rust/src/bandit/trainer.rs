@@ -124,7 +124,7 @@ impl SolveCache {
         }
         self.misses += 1;
         let p = &problems[pi];
-        let session = ProblemSession::new(&p.a);
+        let session = ProblemSession::new(&p.system);
         let fi = action.u_f as usize;
         let slot = self
             .factor_memo
@@ -180,7 +180,7 @@ impl SolveCache {
             parallel_map(todo.len(), |k| {
                 let (pi, ais) = &todo[k];
                 let p = &problems[*pi];
-                let session = ProblemSession::new(&p.a);
+                let session = ProblemSession::new(&p.system);
                 // Factor once per u_f actually used by the space.
                 let mut factors: [Option<Option<LuHandle>>; 4] = [None, None, None, None];
                 let mut out = Vec::with_capacity(ais.len());

@@ -117,6 +117,52 @@ pub fn chop_sub_scaled_row(y: &mut [f64], m: f64, u: &[f64], fmt: &Format) {
     }
 }
 
+/// One CSR row dot, f64 accumulation over the stored entries only.
+#[inline(always)]
+fn csr_row_dot(col_idx: &[usize], values: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(col_idx.len(), values.len());
+    let mut acc = 0.0;
+    for (j, v) in col_idx.iter().zip(values) {
+        acc += v * x[*j];
+    }
+    acc
+}
+
+/// Chopped CSR matvec: `values` and `x` pre-chopped to `fmt`, f64 row
+/// accumulation, one branch-free rounding per output element — the
+/// sparse mirror of `chopped_matvec_prechopped` on the chopped dense
+/// form, and **bit-identical** to it for finite `x`: the structural
+/// zeros the dense loop visits contribute exactly-`+0.0` products, and a
+/// running f64 sum that starts at `+0.0` can never be `-0.0` under
+/// round-to-nearest, so skipping them cannot change a single bit
+/// (property-locked in `sparse::tests` across all [`super::Prec`]s).
+///
+/// The kernel itself assumes finite `x` — a ±inf operand would multiply
+/// the *skipped* zeros into NaN on the dense side. The caller
+/// (`Csr::chopped_matvec_prechopped`) screens for that and poisons the
+/// result, matching the dense path's deterministic failure.
+pub fn chop_csr_matvec(
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    values: &[f64],
+    x: &[f64],
+    fmt: &Format,
+) -> Vec<f64> {
+    let n_rows = row_ptr.len().saturating_sub(1);
+    let row = |i: usize| {
+        let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+        csr_row_dot(&col_idx[s..e], &values[s..e], x)
+    };
+    if fmt.t == 53 {
+        return (0..n_rows).map(row).collect(); // carrier format: no rounding
+    }
+    if !branchless_ok(fmt) {
+        return (0..n_rows).map(|i| chop(row(i), fmt)).collect();
+    }
+    let (t, emin, xmax) = (fmt.t, fmt.emin, fmt.xmax);
+    (0..n_rows).map(|i| chop_one(row(i), t, emin, xmax)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +271,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn csr_matvec_kernel_matches_scalar_composition() {
+        // 2x3 matrix [[1.5, 0, -2.25], [0, 3.5, 0]] in CSR
+        let row_ptr = [0usize, 2, 3];
+        let col_idx = [0usize, 2, 1];
+        let values = [1.5, -2.25, 3.5];
+        let x = [2.0, -1.0, 4.0];
+        for f in &ALL_FORMATS {
+            let got = chop_csr_matvec(&row_ptr, &col_idx, &values, &x, f);
+            let want = [
+                chop(1.5 * 2.0 + -2.25 * 4.0, f),
+                chop(3.5 * -1.0, f),
+            ];
+            assert_eq!(got.len(), 2);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{}", f.name);
+            }
+        }
+        // empty matrix: no rows, no output
+        assert!(chop_csr_matvec(&[0], &[], &[], &[], &crate::chop::BF16).is_empty());
     }
 
     #[test]

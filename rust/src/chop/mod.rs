@@ -14,7 +14,7 @@
 
 pub mod kernels;
 
-pub use kernels::{chop_axpy, chop_block, chop_sub_scaled_row};
+pub use kernels::{chop_axpy, chop_block, chop_csr_matvec, chop_sub_scaled_row};
 
 /// A floating-point format (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -146,11 +146,12 @@ impl Discretizer {
 mod tests {
     use super::*;
     use crate::linalg::Mat;
+    use crate::system::SystemInput;
 
     fn problem_with(kappa_est: f64, norm_inf: f64) -> Problem {
         Problem {
             id: 0,
-            a: Mat::eye(2),
+            system: SystemInput::Dense(Mat::eye(2)),
             b: vec![1.0, 1.0],
             x_true: vec![1.0, 1.0],
             n: 2,

@@ -13,17 +13,21 @@ use crate::linalg::lu::{lu_factor, LuFactors};
 use crate::linalg::qr::qr_haar;
 use crate::linalg::Mat;
 use crate::sparse::Csr;
+use crate::system::{LinearOperator, SystemInput};
 use crate::util::config::Config;
 use crate::util::pool::parallel_map;
 use crate::util::rng::Rng;
 
 /// One linear system instance p = (A, b) with its generation metadata and
 /// the cached f64 machinery every experiment needs (x_true for ferr, the
-/// f64 LU for the condition estimate).
+/// f64 LU for the condition estimate). `A` is stored as a
+/// [`SystemInput`] operator — dense sets carry a `Mat`, sparse sets a
+/// `Csr` (no redundant dense copy rides through training/eval; the solve
+/// path densifies only for factorization, per session).
 #[derive(Clone, Debug)]
 pub struct Problem {
     pub id: usize,
-    pub a: Mat,
+    pub system: SystemInput,
     pub b: Vec<f64>,
     pub x_true: Vec<f64>,
     pub n: usize,
@@ -57,9 +61,11 @@ pub fn randsvd_mode2(n: usize, kappa: f64, rng: &mut Rng) -> Mat {
     us.matmul(&v.transpose())
 }
 
-/// Sparse SPD matrix of §5.3: A = A₀A₀ᵀ + βI, returned with its CSR form
-/// (of A, for the structural features).
-pub fn sparse_spd(n: usize, lambda_s: f64, beta: f64, rng: &mut Rng) -> (Mat, Csr) {
+/// Sparse SPD matrix of §5.3: A = A₀A₀ᵀ + βI, built **directly in CSR**
+/// (`Csr::aat_plus_diag` — no dense product + O(n²) rescan; values are
+/// bit-identical to the old densified construction, locked in
+/// `sparse::tests`).
+pub fn sparse_spd(n: usize, lambda_s: f64, beta: f64, rng: &mut Rng) -> Csr {
     let nnz = ((lambda_s * (n * n) as f64).floor() as usize).max(n);
     let mut triplets = Vec::with_capacity(nnz);
     for _ in 0..nnz {
@@ -68,16 +74,30 @@ pub fn sparse_spd(n: usize, lambda_s: f64, beta: f64, rng: &mut Rng) -> (Mat, Cs
         triplets.push((i, j, rng.gauss()));
     }
     let a0 = Csr::from_triplets(n, n, &triplets);
-    let mut a = a0.aat_dense();
-    for i in 0..n {
-        a[(i, i)] += beta;
-    }
-    let csr = Csr::from_dense(&a);
-    (a, csr)
+    a0.aat_plus_diag(beta)
 }
 
-/// Build a [`Problem`] around a generated matrix: x_true ~ N(0,1),
-/// b = A x_true (both f64), features from the f64 LU.
+/// Build a [`Problem`] around a generated operator: x_true ~ N(0,1),
+/// b = A x_true (both f64, through the operator), features from the f64
+/// LU of the (transiently densified, for sparse inputs) matrix. Density
+/// is the operator's structural density.
+pub fn finish_system(
+    id: usize,
+    system: SystemInput,
+    kappa_target: f64,
+    rng: &mut Rng,
+) -> Problem {
+    let n = system.n_rows();
+    let x_true = rng.gauss_vec(n);
+    let b = system.matvec(&x_true);
+    let (kappa_est, norm_inf) = features_of_system(&system);
+    let density = system.density();
+    Problem { id, system, b, x_true, n, kappa_target, kappa_est, norm_inf, density }
+}
+
+/// Dense-matrix convenience over [`finish_system`]; `density` is kept as
+/// an explicit argument for callers that report a measured density for a
+/// densified operand.
 pub fn finish_problem(
     id: usize,
     a: Mat,
@@ -85,11 +105,9 @@ pub fn finish_problem(
     density: f64,
     rng: &mut Rng,
 ) -> Problem {
-    let n = a.n_rows;
-    let x_true = rng.gauss_vec(n);
-    let b = a.matvec(&x_true);
-    let (kappa_est, norm_inf) = features_of(&a);
-    Problem { id, a, b, x_true, n, kappa_target, kappa_est, norm_inf, density }
+    let mut p = finish_system(id, SystemInput::Dense(a), kappa_target, rng);
+    p.density = density;
+    p
 }
 
 /// (κ₁ estimate, ‖A‖∞) — the paper's two context features' raw inputs.
@@ -97,6 +115,21 @@ pub fn features_of(a: &Mat) -> (f64, f64) {
     let norm_inf = a.norm_inf();
     let kappa_est = match lu_factor(a) {
         Ok(lu) => condest_1(a, &lu),
+        Err(_) => f64::INFINITY,
+    };
+    (kappa_est, norm_inf)
+}
+
+/// Operator form of [`features_of`], generic over any
+/// [`LinearOperator`]: ‖A‖∞ comes straight off the operator (O(nnz) for
+/// sparse); the κ₁ estimate needs an f64 LU, so sparse inputs densify
+/// transiently (the dense copy is dropped before the [`Problem`] is
+/// built — sparse problems carry only their CSR).
+pub fn features_of_system<O: LinearOperator>(system: &O) -> (f64, f64) {
+    let norm_inf = system.norm_inf();
+    let dense = system.to_dense_for_factorization();
+    let kappa_est = match lu_factor(&dense) {
+        Ok(lu) => condest_1(&dense, &lu),
         Err(_) => f64::INFINITY,
     };
     (kappa_est, norm_inf)
@@ -121,15 +154,16 @@ pub fn dense_dataset(cfg: &Config, count: usize, stream: u64) -> Vec<Problem> {
     })
 }
 
-/// The sparse dataset of §5.3.
+/// The sparse dataset of §5.3. Problems carry their CSR form only — the
+/// solve path streams residuals/GMRES matvecs O(nnz) through it and
+/// densifies per session for the factorization alone.
 pub fn sparse_dataset(cfg: &Config, count: usize, stream: u64) -> Vec<Problem> {
     let base = Rng::new(cfg.seed).fork(stream ^ 0x5A5A_5A5A);
     parallel_map(count, |i| {
         let mut rng = base.fork(i as u64);
         let n = cfg.size_min + rng.below(cfg.size_max - cfg.size_min + 1);
-        let (a, csr) = sparse_spd(n, cfg.sparsity, cfg.sparse_beta, &mut rng);
-        let density = csr.density();
-        finish_problem(i, a, f64::NAN, density, &mut rng)
+        let csr = sparse_spd(n, cfg.sparsity, cfg.sparse_beta, &mut rng);
+        finish_system(i, SystemInput::Sparse(csr), f64::NAN, &mut rng)
     })
 }
 
@@ -169,7 +203,8 @@ mod tests {
     #[test]
     fn sparse_spd_is_symmetric_positive_diag() {
         let mut rng = Rng::new(3);
-        let (a, csr) = sparse_spd(50, 0.02, 1e-2, &mut rng);
+        let csr = sparse_spd(50, 0.02, 1e-2, &mut rng);
+        let a = csr.to_dense();
         for i in 0..50 {
             assert!(a[(i, i)] > 0.0);
             for j in 0..50 {
@@ -184,7 +219,7 @@ mod tests {
         let cfg = tiny_cfg();
         let ps = dense_dataset(&cfg, 3, 0);
         for p in &ps {
-            let ax = p.a.matvec(&p.x_true);
+            let ax = p.system.matvec(&p.x_true);
             for (u, v) in ax.iter().zip(&p.b) {
                 assert_eq!(u, v); // b built exactly as A x_true in f64
             }
@@ -198,9 +233,9 @@ mod tests {
         let cfg = tiny_cfg();
         let a1 = dense_dataset(&cfg, 2, 0);
         let a2 = dense_dataset(&cfg, 2, 0);
-        assert_eq!(a1[0].a, a2[0].a);
+        assert_eq!(a1[0].system, a2[0].system);
         let b = dense_dataset(&cfg, 2, 1);
-        assert_ne!(a1[0].a, b[0].a);
+        assert_ne!(a1[0].system, b[0].system);
     }
 
     #[test]
@@ -211,6 +246,26 @@ mod tests {
         for p in dense_dataset(&cfg, 5, 7) {
             assert!(p.n >= 20 && p.n <= 40);
             assert!(p.kappa_target >= 1e2 && p.kappa_target <= 1e4);
+        }
+    }
+
+    #[test]
+    fn sparse_problems_carry_csr_only() {
+        // tentpole contract: sparse datasets no longer drag a redundant
+        // dense copy through training/eval
+        let mut cfg = tiny_cfg();
+        cfg.size_min = 40;
+        cfg.size_max = 60;
+        let ps = sparse_dataset(&cfg, 2, 0);
+        for p in &ps {
+            assert!(p.system.is_sparse());
+            assert_eq!(p.density, p.system.density());
+            assert!(p.kappa_est.is_finite());
+            assert_eq!(p.norm_inf.to_bits(), p.system.norm_inf().to_bits());
+            let ax = p.system.matvec(&p.x_true);
+            for (u, v) in ax.iter().zip(&p.b) {
+                assert_eq!(u, v);
+            }
         }
     }
 

@@ -27,6 +27,12 @@
 //! [`solver::ProblemSession`]), so training sweeps and evaluation fan out
 //! across `PA_THREADS` workers with bit-identical results.
 //!
+//! Systems enter the solve path as [`system::SystemInput`] operators —
+//! dense `Mat` or CSR [`sparse::Csr`] — so the §5.3 sparse workload runs
+//! its IR-loop residuals and GMRES matvecs in O(nnz), densifying only
+//! for the LU factorization (bit-identical to the densified path; see
+//! DESIGN.md §2c).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod api;
@@ -40,4 +46,5 @@ pub mod linalg;
 pub mod runtime;
 pub mod solver;
 pub mod sparse;
+pub mod system;
 pub mod util;

@@ -33,7 +33,32 @@ pub fn gmres_preconditioned(
     max_m: usize,
     p: Prec,
 ) -> GmresResult {
-    let n = a_pre.n_rows;
+    gmres_preconditioned_op(
+        |xc| chopped_matvec_prechopped(a_pre, xc, p),
+        a_pre.n_rows,
+        lu,
+        r,
+        tol,
+        max_m,
+        p,
+    )
+}
+
+/// Operator form of [`gmres_preconditioned`]: `matvec` is the chopped
+/// operator application y = chop(Aₚ·xc) on a pre-chopped operand — a
+/// cached dense matrix, a chopped-CSR kernel (O(nnz) per iteration for
+/// sparse inputs; see `solver::ProblemSession::chopped_matvec`), or
+/// anything else. The Arnoldi process itself is unchanged, so with the
+/// dense closure this is bit-identical to the pre-operator code path.
+pub fn gmres_preconditioned_op(
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    lu: &LuFactors,
+    r: &[f64],
+    tol: f64,
+    max_m: usize,
+    p: Prec,
+) -> GmresResult {
     let m = max_m.min(n).max(1);
 
     // r0 = M^-1 r, beta = ||r0||_2 (chopped norm as in the L2 graph)
@@ -73,7 +98,7 @@ pub fn gmres_preconditioned(
         // w = M^-1 (A v_j), both in precision p
         let mut xc = v[j].clone();
         crate::chop::chop_slice(&mut xc, p);
-        let av = chopped_matvec_prechopped(a_pre, &xc, p);
+        let av = matvec(&xc);
         let mut w = lu.solve_chopped(&av, p);
 
         // Modified Gram-Schmidt
@@ -249,6 +274,34 @@ mod tests {
                 .fold(0.0, f64::max)
                 / crate::linalg::norm_inf_vec(&xt);
             assert!(rel < 0.3, "{p}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn op_form_with_sparse_closure_matches_dense_bitwise() {
+        // The operator seam: driving the Arnoldi matvec through a
+        // chopped-CSR closure must reproduce the dense path bit for bit.
+        let (a, _, b) = system(40, 7);
+        for p in [Prec::Bf16, Prec::Fp32, Prec::Fp64] {
+            let lu = lu_factor_chopped(&a, p).unwrap();
+            let ap = a.chopped(p);
+            let dense = gmres_preconditioned(&ap, &lu, &b, 1e-6, 30, p);
+            let csr = crate::sparse::Csr::from_dense(&a).chopped(p);
+            let via_op = gmres_preconditioned_op(
+                |xc| csr.chopped_matvec_prechopped(xc, p),
+                40,
+                &lu,
+                &b,
+                1e-6,
+                30,
+                p,
+            );
+            assert_eq!(dense.iters, via_op.iters, "{p}");
+            assert_eq!(dense.ok, via_op.ok, "{p}");
+            assert_eq!(dense.relres.to_bits(), via_op.relres.to_bits(), "{p}");
+            for (u, v) in dense.z.iter().zip(&via_op.z) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p}");
+            }
         }
     }
 

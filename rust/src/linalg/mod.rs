@@ -95,12 +95,6 @@ impl Mat {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
-    /// Fraction of non-zero entries (sparsity feature, §5.3).
-    pub fn nnz_fraction(&self) -> f64 {
-        let nnz = self.data.iter().filter(|&&x| x != 0.0).count();
-        nnz as f64 / self.data.len() as f64
-    }
-
     /// Diagonal dominance ratio: min_i |a_ii| / Σ_{j≠i} |a_ij| (extension
     /// feature mentioned in the paper's intro / future work).
     pub fn diag_dominance(&self) -> f64 {

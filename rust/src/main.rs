@@ -25,7 +25,9 @@ use precision_autotune::gen::{dense_dataset, sparse_dataset};
 use precision_autotune::linalg::Mat;
 use precision_autotune::runtime::PjrtBackend;
 use precision_autotune::solver::SolverBackend;
+use precision_autotune::system::SystemInput;
 use precision_autotune::util::cli::Args;
+use precision_autotune::util::mtx;
 use precision_autotune::util::config::Config;
 use precision_autotune::util::pool::num_threads;
 use precision_autotune::util::tables::{fix2, pct, sci2};
@@ -48,6 +50,9 @@ SUBCOMMANDS:
                 --matrix a.txt --rhs b.txt   (whitespace/comma numbers;
                   one matrix row per line; omit => random demo system
                   controlled by --n / --kappa)
+                *.mtx inputs are auto-detected by extension and parsed
+                  as Matrix Market (coordinate files solve sparse-natively
+                  through the CSR path; array files solve dense)
   repro       regenerate paper artifacts:
                 table2 table3 table4 table5 table6 fig2 fig3 fig4
                 figs5_12 actions all     [--out results/]
@@ -137,6 +142,32 @@ fn read_vec(path: &str) -> Result<Vec<f64>> {
     Ok(m.data)
 }
 
+fn is_mtx(path: &str) -> bool {
+    std::path::Path::new(path)
+        .extension()
+        .map(|e| e.eq_ignore_ascii_case("mtx"))
+        .unwrap_or(false)
+}
+
+/// Load a system operand: `.mtx` files are Matrix Market (coordinate ⇒
+/// sparse CSR, array ⇒ dense); anything else is the plain text layout of
+/// [`read_matrix`].
+fn read_system(path: &str) -> Result<SystemInput> {
+    if is_mtx(path) {
+        mtx::load_system(path)
+    } else {
+        Ok(SystemInput::Dense(read_matrix(path)?))
+    }
+}
+
+fn read_rhs(path: &str) -> Result<Vec<f64>> {
+    if is_mtx(path) {
+        mtx::load_vector(path)
+    } else {
+        read_vec(path)
+    }
+}
+
 fn run() -> Result<()> {
     let args = Args::from_env()?;
     let quiet = args.flag("quiet");
@@ -221,14 +252,14 @@ fn run() -> Result<()> {
             };
             let served = policy.is_some();
             let tuner = make_tuner(&args, &cfg, policy)?;
-            let (a, b) = match (args.get("matrix"), args.get("rhs")) {
-                (Some(mp), Some(bp)) => (read_matrix(mp)?, read_vec(bp)?),
+            let (system, b) = match (args.get("matrix"), args.get("rhs")) {
+                (Some(mp), Some(bp)) => (read_system(mp)?, read_rhs(bp)?),
                 (Some(mp), None) => {
                     // no rhs: b = A·1, so the expected solution is all-ones
-                    let a = read_matrix(mp)?;
-                    let ones = vec![1.0; a.n_rows];
-                    let b = a.matvec(&ones);
-                    (a, b)
+                    let system = read_system(mp)?;
+                    let ones = vec![1.0; system.n_rows()];
+                    let b = system.matvec(&ones);
+                    (system, b)
                 }
                 (None, Some(_)) => {
                     bail!("--rhs given without --matrix (supply both, or neither for a demo system)")
@@ -244,15 +275,19 @@ fn run() -> Result<()> {
                     if !quiet {
                         eprintln!("[solve] no --matrix given; demo system n={n} kappa={kappa:e}");
                     }
-                    (p.a, p.b)
+                    (p.system, p.b)
                 }
             };
-            let rep = tuner.solve(&a, &b)?;
+            let sparse_input = system.is_sparse();
+            let rep = tuner.solve(system, &b)?;
             println!(
-                "backend={} policy={} n={}",
+                "backend={} policy={} n={} input={} nnz={} density={:.4}",
                 rep.backend,
                 if served { "served" } else { "none (FP64 baseline)" },
-                a.n_rows
+                rep.x.len(),
+                if sparse_input { "sparse(csr)" } else { "dense" },
+                rep.nnz,
+                rep.density
             );
             println!(
                 "features: kappa_est={} norm_inf={}",
@@ -392,7 +427,7 @@ fn run() -> Result<()> {
             let recs = tuner.evaluate(&test)?;
             println!("native backend: {} test solves OK", recs.len());
             // facade solve on a raw (A, b) pair — the serving path
-            let rep = tuner.solve(&test[0].a, &test[0].b)?;
+            let rep = tuner.solve(&test[0].system, &test[0].b)?;
             println!(
                 "facade solve:   action {} nbe {} ({})",
                 rep.action,

@@ -26,9 +26,12 @@
 //! (first ratio test fires since consecutive updates shrink by ≫ τ).
 //!
 //! The driver is stateless: each call opens a [`ProblemSession`] over the
-//! problem matrix (or reuses the caller's, for the trainer's
-//! factorization-sharing sweep) and every backend call takes `&self`, so
-//! solves of different problems run concurrently over one backend.
+//! problem's [`crate::system::SystemInput`] operator (or reuses the
+//! caller's, for the trainer's factorization-sharing sweep) and every
+//! backend call takes `&self`, so solves of different problems run
+//! concurrently over one backend. Residuals, GMRES matvecs, and the
+//! final backward error all apply A through the operator — O(nnz) for
+//! sparse inputs, with only the u_f factorization densifying.
 
 use anyhow::Result;
 
@@ -36,7 +39,7 @@ use crate::bandit::action::Action;
 use crate::chop::chop_p;
 use crate::gen::Problem;
 use crate::linalg::norm_inf_vec;
-use crate::solver::metrics::{eps_max, ferr, nbe};
+use crate::solver::metrics::{eps_max, ferr, nbe_from_parts};
 use crate::solver::{ProblemSession, SolverBackend};
 use crate::util::config::Config;
 
@@ -93,7 +96,7 @@ pub fn gmres_ir(
     action: &Action,
     cfg: &Config,
 ) -> Result<SolveOutcome> {
-    let session = ProblemSession::new(&p.a);
+    let session = ProblemSession::new(&p.system);
     gmres_ir_prefactored(backend, &session, p, action, cfg, None)
 }
 
@@ -190,7 +193,9 @@ pub fn gmres_ir_prefactored(
 
     // ferr needs a reference solution; the serving path has none.
     let fe = if p.x_true.is_empty() { f64::NAN } else { ferr(&x, &p.x_true) };
-    let be = nbe(&p.a, &x, &p.b);
+    // nbe through the session operator: O(nnz) for sparse inputs,
+    // bit-identical to the dense computation.
+    let be = nbe_from_parts(&session.matvec(&x), &p.b, session.norm_inf(), &x);
     let failed = !be.is_finite() || (!p.x_true.is_empty() && !fe.is_finite());
     Ok(SolveOutcome {
         eps_max: eps_max(fe, be),
@@ -301,13 +306,13 @@ mod tests {
         let c = cfg();
         let mut p = problem(16, 1e2, 11);
         // scale beyond bf16 range so the chopped factorization overflows
-        for v in p.a.data.iter_mut() {
+        for v in p.system.as_dense_mut().unwrap().data.iter_mut() {
             *v *= 1e39;
         }
         for v in p.b.iter_mut() {
             *v *= 1e39;
         }
-        p.norm_inf = p.a.norm_inf();
+        p.norm_inf = p.system.norm_inf();
         let a = Action {
             u_f: crate::chop::Prec::Bf16,
             u: crate::chop::Prec::Fp64,

@@ -18,19 +18,26 @@ pub fn ferr(x_solve: &[f64], x_true: &[f64]) -> f64 {
     num / denom
 }
 
-/// Normwise relative backward error (eq. 17).
-pub fn nbe(a: &Mat, x_solve: &[f64], b: &[f64]) -> f64 {
-    let ax = a.matvec(x_solve);
+/// Normwise relative backward error (eq. 17) from precomputed pieces —
+/// `ax` = A·x and `a_norm_inf` = ‖A‖∞ arrive from the caller so the
+/// matvec can be routed through a sparse operator (O(nnz); see
+/// `solver::ir`). [`nbe`] is the dense convenience wrapper.
+pub fn nbe_from_parts(ax: &[f64], b: &[f64], a_norm_inf: f64, x_solve: &[f64]) -> f64 {
     let rnorm = ax
         .iter()
         .zip(b)
         .map(|(axi, bi)| (bi - axi).abs())
         .fold(0.0, f64::max);
-    let denom = a.norm_inf() * norm_inf_vec(x_solve) + norm_inf_vec(b);
+    let denom = a_norm_inf * norm_inf_vec(x_solve) + norm_inf_vec(b);
     if denom == 0.0 {
         return f64::NAN;
     }
     rnorm / denom
+}
+
+/// Normwise relative backward error (eq. 17).
+pub fn nbe(a: &Mat, x_solve: &[f64], b: &[f64]) -> f64 {
+    nbe_from_parts(&a.matvec(x_solve), b, a.norm_inf(), x_solve)
 }
 
 /// ε_max(P, a) = max(ferr, nbe) (§5.1).

@@ -8,72 +8,173 @@
 //! [`SolverBackend`] is **stateless and thread-safe**: every method takes
 //! `&self` and the trait requires `Send + Sync`, so one backend instance
 //! can serve any number of concurrent solves. All per-problem derived
-//! state — the chopped copies of A a native solve reuses across steps,
-//! the padded copy the PJRT path uploads — lives in an explicit
-//! [`ProblemSession`] created per (backend, problem) pair. This replaces
-//! the old hidden `reset()`-guarded cache inside the backend, which
-//! serialized every episode and made cross-problem staleness possible.
+//! state — the chopped copies of A (dense or CSR) a native solve reuses
+//! across steps, the densified copy a sparse factorization needs, the
+//! padded copy the PJRT path uploads — lives in an explicit
+//! [`ProblemSession`] created per (backend, problem) pair over a
+//! [`crate::system::SystemRef`] operator view (DESIGN.md §2b/§2c). This
+//! replaces the old hidden `reset()`-guarded cache inside the backend,
+//! which serialized every episode and made cross-problem staleness
+//! possible.
 
 pub mod ir;
 pub mod metrics;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
 use crate::chop::Prec;
 use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::system::SystemRef;
 
-/// Per-problem solve session: borrows the problem matrix and lazily
-/// caches the derived copies every backend step wants to share — the
-/// chopped A per precision (native path) and the bucket-padded A (PJRT
-/// path). Interior mutability is `OnceLock`, so a session may be shared
-/// across threads, but the intended pattern is one session per worker:
-/// sessions are cheap (no up-front copies) and drop all derived state at
-/// the end of the problem, which is what makes the backend itself
-/// stateless.
+/// Per-problem solve session: borrows the problem operator (dense `Mat`
+/// or CSR `Csr`, via [`SystemRef`]) and lazily caches the derived copies
+/// every backend step wants to share — the chopped A per precision
+/// (dense inputs), the chopped CSR values per precision (sparse inputs),
+/// the densified A for factorization (sparse inputs), and the
+/// bucket-padded A (PJRT path). Interior mutability is `OnceLock`, so a
+/// session may be shared across threads, but the intended pattern is one
+/// session per worker: sessions are cheap (no up-front copies) and drop
+/// all derived state at the end of the problem, which is what makes the
+/// backend itself stateless.
+///
+/// The session also counts how many operator applications ran through
+/// the dense vs. the sparse path — cheap relaxed-atomic telemetry that
+/// lets tests *prove* the IR loop performs zero dense matvecs on sparse
+/// inputs (`tests/system_input.rs`).
 pub struct ProblemSession<'a> {
-    a: &'a Mat,
-    /// chopped copies of A, one slot per [`Prec`] (Fp64 aliases `a`)
+    src: SystemRef<'a>,
+    /// densified copy of a sparse input — factorization stays dense
+    /// (DESIGN.md §2c); dense inputs alias the borrowed matrix instead
+    densified: OnceLock<Mat>,
+    /// chopped dense copies of A, one slot per [`Prec`] (dense inputs)
     chopped: [OnceLock<Mat>; 4],
+    /// chopped CSR values, one slot per [`Prec`] (sparse inputs; Fp64
+    /// aliases the original)
+    chopped_csr: [OnceLock<Csr>; 4],
     /// bucket-padded copy of A (PJRT); one bucket per session
     padded: OnceLock<Mat>,
+    dense_matvecs: AtomicUsize,
+    sparse_matvecs: AtomicUsize,
 }
 
 impl<'a> ProblemSession<'a> {
-    pub fn new(a: &'a Mat) -> ProblemSession<'a> {
+    /// Open a session over a stored [`crate::system::SystemInput`], a
+    /// `&Mat`, or a `&Csr` (anything `Into<SystemRef>`).
+    pub fn new(src: impl Into<SystemRef<'a>>) -> ProblemSession<'a> {
         ProblemSession {
-            a,
+            src: src.into(),
+            densified: OnceLock::new(),
             chopped: Default::default(),
+            chopped_csr: Default::default(),
             padded: OnceLock::new(),
+            dense_matvecs: AtomicUsize::new(0),
+            sparse_matvecs: AtomicUsize::new(0),
         }
-    }
-
-    /// The problem matrix.
-    pub fn a(&self) -> &Mat {
-        self.a
     }
 
     pub fn n(&self) -> usize {
-        self.a.n_rows
+        match self.src {
+            SystemRef::Dense(m) => m.n_rows,
+            SystemRef::Sparse(c) => c.n_rows,
+        }
     }
 
-    /// The chopped copy of A in precision `p`, computed once per session.
-    /// Fp64 needs no copy at all and aliases the original matrix.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.src, SystemRef::Sparse(_))
+    }
+
+    /// The dense form of A — the factorization escape hatch (LU stays
+    /// dense, as in the paper's own simulation). Dense inputs alias the
+    /// borrowed matrix; sparse inputs densify lazily, once per session.
+    pub fn dense_for_factorization(&self) -> &Mat {
+        match self.src {
+            SystemRef::Dense(m) => m,
+            SystemRef::Sparse(c) => self.densified.get_or_init(|| c.to_dense()),
+        }
+    }
+
+    /// The chopped dense copy of A in precision `p`, computed once per
+    /// session. Fp64 needs no copy at all and aliases the dense form.
+    /// (Dense-input hot path; sparse inputs only reach this through the
+    /// factorization/PJRT escape hatches.)
     pub fn chopped(&self, p: Prec) -> &Mat {
         if p == Prec::Fp64 {
-            return self.a;
+            return self.dense_for_factorization();
         }
-        self.chopped[p as usize].get_or_init(|| self.a.chopped(p))
+        self.chopped[p as usize].get_or_init(|| self.dense_for_factorization().chopped(p))
+    }
+
+    /// The chopped CSR copy of a sparse input (values rounded, structure
+    /// untouched), computed once per session; Fp64 aliases the original.
+    fn chopped_sparse(&self, c: &'a Csr, p: Prec) -> &Csr {
+        if p == Prec::Fp64 {
+            return c;
+        }
+        self.chopped_csr[p as usize].get_or_init(|| c.chopped(p))
+    }
+
+    /// y = A x (f64) through the operator: O(nnz) for sparse inputs.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self.src {
+            SystemRef::Dense(m) => {
+                self.dense_matvecs.fetch_add(1, Ordering::Relaxed);
+                m.matvec(x)
+            }
+            SystemRef::Sparse(c) => {
+                self.sparse_matvecs.fetch_add(1, Ordering::Relaxed);
+                c.matvec(x)
+            }
+        }
+    }
+
+    /// y = chop(Aₚ · xc) through the operator, `xc` pre-chopped to `p`:
+    /// the session's cached chopped copy (dense or CSR) with f64
+    /// accumulation and one rounding per element. The two paths are
+    /// bit-identical (see `chop::kernels::chop_csr_matvec`).
+    pub fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64> {
+        match self.src {
+            SystemRef::Dense(_) => {
+                self.dense_matvecs.fetch_add(1, Ordering::Relaxed);
+                crate::linalg::chopped_matvec_prechopped(self.chopped(p), xc, p)
+            }
+            SystemRef::Sparse(c) => {
+                self.sparse_matvecs.fetch_add(1, Ordering::Relaxed);
+                self.chopped_sparse(c, p).chopped_matvec_prechopped(xc, p)
+            }
+        }
+    }
+
+    /// ‖A‖∞ through the operator (O(nnz) for sparse inputs).
+    pub fn norm_inf(&self) -> f64 {
+        match self.src {
+            SystemRef::Dense(m) => m.norm_inf(),
+            SystemRef::Sparse(c) => c.norm_inf(),
+        }
+    }
+
+    /// Operator applications that ran the dense path so far.
+    pub fn dense_matvec_count(&self) -> usize {
+        self.dense_matvecs.load(Ordering::Relaxed)
+    }
+
+    /// Operator applications that ran the sparse path so far.
+    pub fn sparse_matvec_count(&self) -> usize {
+        self.sparse_matvecs.load(Ordering::Relaxed)
     }
 
     /// The block-diagonally padded copy `diag(A, I_{nb-n})`, computed once
-    /// per session. A session serves one problem and a problem maps to one
-    /// size bucket, so a single slot suffices (asserted).
+    /// per session (PJRT is a dense-only backend: sparse inputs densify
+    /// through the factorization escape hatch first). A session serves
+    /// one problem and a problem maps to one size bucket, so a single
+    /// slot suffices (asserted).
     pub fn padded(&self, nb: usize) -> &Mat {
         let m = self
             .padded
-            .get_or_init(|| crate::runtime::pad_matrix(self.a, nb));
+            .get_or_init(|| crate::runtime::pad_matrix(self.dense_for_factorization(), nb));
         assert_eq!(
             m.n_rows, nb,
             "ProblemSession::padded called with two different buckets"
@@ -161,7 +262,8 @@ mod tests {
         a[(0, 1)] = 0.1234567890123;
         let s = ProblemSession::new(&a);
         // Fp64 returns the original matrix (pointer-equal data)
-        assert!(std::ptr::eq(s.chopped(Prec::Fp64), s.a()));
+        assert!(std::ptr::eq(s.chopped(Prec::Fp64), s.dense_for_factorization()));
+        assert!(std::ptr::eq(s.dense_for_factorization(), &a));
         let c1 = s.chopped(Prec::Bf16) as *const Mat;
         let c2 = s.chopped(Prec::Bf16) as *const Mat;
         assert_eq!(c1, c2, "second call must hit the cached copy");
@@ -169,6 +271,48 @@ mod tests {
         assert_eq!(s.chopped(Prec::Bf16).data, a.chopped(Prec::Bf16).data);
         // precisions are cached independently
         assert_ne!(s.chopped(Prec::Bf16).data, s.chopped(Prec::Fp32).data);
+    }
+
+    #[test]
+    fn sparse_session_caches_chopped_csr_and_densifies_lazily() {
+        let mut a = Mat::eye(10);
+        a[(0, 3)] = 0.1234567890123;
+        a[(7, 2)] = -3.75;
+        let csr = Csr::from_dense(&a);
+        let s = ProblemSession::new(&csr);
+        assert!(s.is_sparse());
+        assert_eq!(s.n(), 10);
+        // chopped CSR is cached per precision; fp64 aliases the input
+        let xc = vec![1.0; 10];
+        let y1 = s.chopped_matvec(&xc, Prec::Bf16);
+        let y2 = s.chopped_matvec(&xc, Prec::Bf16);
+        assert_eq!(y1, y2);
+        assert_eq!(s.sparse_matvec_count(), 2);
+        assert_eq!(s.dense_matvec_count(), 0);
+        // fp64 matvec matches the dense computation bit for bit
+        let y64 = s.chopped_matvec(&xc, Prec::Fp64);
+        for (u, v) in y64.iter().zip(a.matvec(&xc)) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // densification happens once, on demand, and matches the input
+        let d1 = s.dense_for_factorization() as *const Mat;
+        let d2 = s.dense_for_factorization() as *const Mat;
+        assert_eq!(d1, d2);
+        assert_eq!(s.dense_for_factorization(), &a);
+        // norm_inf through the operator agrees with dense
+        assert_eq!(s.norm_inf().to_bits(), a.norm_inf().to_bits());
+    }
+
+    #[test]
+    fn session_opens_over_all_source_shapes() {
+        let a = Mat::eye(4);
+        let csr = Csr::from_dense(&a);
+        let sys_d = crate::system::SystemInput::Dense(a.clone());
+        let sys_s = crate::system::SystemInput::Sparse(csr.clone());
+        assert!(!ProblemSession::new(&a).is_sparse());
+        assert!(ProblemSession::new(&csr).is_sparse());
+        assert!(!ProblemSession::new(&sys_d).is_sparse());
+        assert!(ProblemSession::new(&sys_s).is_sparse());
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //!
 //! The paper's sparse systems (n ≤ 500, λ_s = 0.01, A = A₀A₀ᵀ + βI) are
 //! factorized densely (as in the paper's own Python simulation), but the
-//! CSR form carries the structural features (sparsity, bandwidth,
-//! diagonal dominance) and provides a fast matvec used by tests and the
-//! feature extractor.
+//! CSR form is a first-class solve input since the
+//! [`crate::system::SystemInput`] abstraction (DESIGN.md §2c): the IR
+//! loop's residual and GMRES matvecs run O(nnz) through [`Csr::matvec`]
+//! and the chopped variant [`Csr::chopped_matvec_prechopped`], both
+//! bit-identical to the densified path.
 
+use crate::chop::Prec;
 use crate::linalg::Mat;
+
+/// Stored-entry count above which the CSR matvecs dispatch rows to the
+/// thread pool (the sparse mirror of `linalg::PAR_MIN_ELEMS`); below it
+/// the per-call spawn cost exceeds the arithmetic.
+const PAR_MIN_NNZ: usize = 1 << 18;
 
 /// Compressed sparse row matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -86,18 +94,26 @@ impl Csr {
         self.nnz() as f64 / (self.n_rows * self.n_cols) as f64
     }
 
-    /// y = A x.
+    /// One row dot, f64 accumulation over the stored entries.
+    #[inline]
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+            acc += self.values[k] * x[self.col_idx[k]];
+        }
+        acc
+    }
+
+    /// y = A x. Row-parallel above `PAR_MIN_NNZ` stored entries —
+    /// each output element is one independent f64-accumulated row dot,
+    /// so the result is bit-identical for any thread count (the same
+    /// contract as the dense `Mat::matvec`).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n_cols);
-        let mut y = vec![0.0; self.n_rows];
-        for i in 0..self.n_rows {
-            let mut acc = 0.0;
-            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
-                acc += self.values[k] * x[self.col_idx[k]];
-            }
-            y[i] = acc;
+        if self.nnz() >= PAR_MIN_NNZ {
+            return crate::util::pool::parallel_map(self.n_rows, |i| self.row_dot(i, x));
         }
-        y
+        (0..self.n_rows).map(|i| self.row_dot(i, x)).collect()
     }
 
     /// ‖A‖∞.
@@ -110,6 +126,89 @@ impl Csr {
                     .sum::<f64>()
             })
             .fold(0.0, f64::max)
+    }
+
+    /// Same structure, values storage-rounded to `p`. Entries that round
+    /// to zero stay *stored* (explicit zeros), keeping the value stream
+    /// aligned with the chopped dense form — part of the bit-identity
+    /// contract of [`Csr::chopped_matvec_prechopped`].
+    pub fn chopped(&self, p: Prec) -> Csr {
+        let mut c = self.clone();
+        crate::chop::chop_slice(&mut c.values, p);
+        c
+    }
+
+    /// y = chop(A·x) with `self.values` and `x` already rounded to `p`:
+    /// f64 accumulation over the stored entries, one rounding per output
+    /// element. Bit-identical to `chopped_matvec_prechopped` on the
+    /// chopped dense form for finite `x` (see `chop::kernels`);
+    /// row-parallel above `PAR_MIN_NNZ`, bit-identical for any thread
+    /// count.
+    ///
+    /// A non-finite `x` entry (a chopped operand that overflowed to
+    /// ±inf) poisons *every* row of the dense reference — its structural
+    /// zeros multiply `0.0·inf = NaN` and its stored entries go ±inf —
+    /// so the solver deterministically fails there. Skipping the zeros
+    /// would let the sparse path sail past that failure; instead the
+    /// whole result is poisoned to NaN, which drives GMRES to the exact
+    /// same (constant) failure outcome the dense path reaches.
+    pub fn chopped_matvec_prechopped(&self, x: &[f64], p: Prec) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        if x.iter().any(|v| !v.is_finite()) {
+            return vec![f64::NAN; self.n_rows];
+        }
+        if self.nnz() >= PAR_MIN_NNZ {
+            return crate::util::pool::parallel_map(self.n_rows, |i| {
+                crate::chop::chop_p(self.row_dot(i, x), p)
+            });
+        }
+        crate::chop::chop_csr_matvec(&self.row_ptr, &self.col_idx, &self.values, x, p.format())
+    }
+
+    /// C = A·Aᵀ + βI computed **directly in CSR** — the §5.3 generator's
+    /// product without the old double construction (dense product, then
+    /// an O(n²) `from_dense` rescan). Row i is built left-to-right with
+    /// the same ascending merge-join dot as [`Csr::aat_dense`], so every
+    /// stored value is bit-identical to the dense path's entry (the
+    /// mirrored (j,i) dot multiplies the same pairs in the same order
+    /// with the factors swapped — f64 multiplication commutes bitwise);
+    /// entries whose dot is exactly 0.0 are dropped exactly where
+    /// `Csr::from_dense` would drop them.
+    pub fn aat_plus_diag(&self, beta: f64) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols);
+        let n = self.n_rows;
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for i in 0..n {
+            let (si, ei) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for j in 0..n {
+                let (sj, ej) = (self.row_ptr[j], self.row_ptr[j + 1]);
+                let mut acc = 0.0;
+                let (mut p, mut q) = (si, sj);
+                while p < ei && q < ej {
+                    match self.col_idx[p].cmp(&self.col_idx[q]) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            acc += self.values[p] * self.values[q];
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                if i == j {
+                    acc += beta;
+                }
+                if acc != 0.0 {
+                    col_idx.push(j);
+                    values.push(acc);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { n_rows: n, n_cols: n, row_ptr, col_idx, values }
     }
 
     /// C = A·Aᵀ, returned dense (the §5.3 generator's A₀A₀ᵀ step; result
@@ -205,6 +304,113 @@ mod tests {
                         "({i},{j})"
                     );
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chopped_csr_matvec_bitexact_vs_chop_then_dense() {
+        // The bit-identity contract behind the sparse-native IR loop:
+        // chopped-CSR matvec == chop-then-dense matvec, every bit, for
+        // every Prec, across random sparsity patterns and magnitudes
+        // (including entries that underflow to explicit zeros when
+        // chopped).
+        use crate::util::proptest::{check, gen};
+        check("csr_chop_matvec_bitexact", 0x5CA2, 120, |rng| {
+            let n = gen::size(rng, 1, 36);
+            let m = gen::size(rng, 1, 36);
+            let fill = rng.uniform_in(0.02, 0.6);
+            let mut a = Mat::zeros(m, n);
+            for v in a.data.iter_mut() {
+                if rng.uniform() < fill {
+                    // wide magnitude band so some entries chop to 0/inf
+                    *v = rng.gauss() * rng.uniform_in(-320.0, 40.0).exp2();
+                }
+            }
+            let x: Vec<f64> = (0..n)
+                .map(|_| rng.gauss() * rng.uniform_in(-30.0, 30.0).exp2())
+                .collect();
+            let s = Csr::from_dense(&a);
+            for p in Prec::ALL {
+                let ac = a.chopped(p);
+                let mut xc = x.clone();
+                crate::chop::chop_slice(&mut xc, p);
+                let want = crate::linalg::chopped_matvec_prechopped(&ac, &xc, p);
+                let got = s.chopped(p).chopped_matvec_prechopped(&xc, p);
+                crate::prop_assert!(got.len() == want.len(), "len at {p}");
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    crate::prop_assert!(
+                        g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan()),
+                        "{p} row {i}: sparse {g:e} vs dense {w:e}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn non_finite_chopped_operand_poisons_both_paths() {
+        // An operand entry that overflowed to ±inf under chopping: the
+        // dense reference goes non-finite in every row (structural zeros
+        // contribute 0·inf = NaN, stored entries go ±inf), so the solver
+        // deterministically fails. The sparse path must not sail past
+        // that by skipping the zeros — it poisons the whole result.
+        let a = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let s = Csr::from_dense(&a);
+        let xc = vec![1.0, f64::INFINITY];
+        for p in [Prec::Bf16, Prec::Fp64] {
+            let sparse = s.chopped(p).chopped_matvec_prechopped(&xc, p);
+            assert!(sparse.iter().all(|v| v.is_nan()), "{p}");
+            let dense = crate::linalg::chopped_matvec_prechopped(&a.chopped(p), &xc, p);
+            assert!(dense.iter().all(|v| !v.is_finite()), "{p}");
+        }
+    }
+
+    #[test]
+    fn chopped_keeps_structure_and_rounds_values() {
+        let s = Csr::from_triplets(2, 2, &[(0, 0, 1.0 + 2f64.powi(-9)), (1, 1, 1e-320)]);
+        let c = s.chopped(Prec::Bf16);
+        // structure untouched, even though 1e-320 rounds to an explicit 0
+        assert_eq!(c.row_ptr, s.row_ptr);
+        assert_eq!(c.col_idx, s.col_idx);
+        assert_eq!(c.values, vec![1.0, 0.0]);
+        // fp64 is the identity
+        assert_eq!(s.chopped(Prec::Fp64), s);
+    }
+
+    #[test]
+    fn aat_plus_diag_matches_dense_path_bitwise() {
+        // Satellite: the direct-CSR A₀A₀ᵀ + βI must reproduce the old
+        // double-construction path (dense product + rescan) bit for bit,
+        // in both its CSR and its derived dense form.
+        use crate::util::proptest::{check, gen};
+        check("csr_aat_plus_diag", 0xAA7, 30, |rng| {
+            let n = gen::size(rng, 1, 28);
+            let beta = 10f64.powf(rng.uniform_in(-3.0, 0.0));
+            let mut a0 = Mat::zeros(n, n);
+            for v in a0.data.iter_mut() {
+                if rng.uniform() < 0.15 {
+                    *v = rng.gauss();
+                }
+            }
+            let s = Csr::from_dense(&a0);
+            let direct = s.aat_plus_diag(beta);
+            // the old path
+            let mut dense = s.aat_dense();
+            for i in 0..n {
+                dense[(i, i)] += beta;
+            }
+            let via_dense = Csr::from_dense(&dense);
+            crate::prop_assert!(direct.row_ptr == via_dense.row_ptr, "row_ptr differs");
+            crate::prop_assert!(direct.col_idx == via_dense.col_idx, "col_idx differs");
+            for (k, (u, v)) in direct.values.iter().zip(&via_dense.values).enumerate() {
+                crate::prop_assert!(u.to_bits() == v.to_bits(), "value {k}: {u:e} vs {v:e}");
+            }
+            let back = direct.to_dense();
+            for (k, (u, v)) in back.data.iter().zip(&dense.data).enumerate() {
+                crate::prop_assert!(u.to_bits() == v.to_bits(), "dense {k}: {u:e} vs {v:e}");
             }
             Ok(())
         });

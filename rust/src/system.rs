@@ -1,0 +1,420 @@
+//! First-class linear-system input: the [`SystemInput`] operator
+//! abstraction (DESIGN.md §2c).
+//!
+//! The §5.3 sparse experiments used to be served through a fully
+//! densified pipeline — `sparse::Csr` existed, but every residual matvec
+//! in the IR loop ran O(n²) dense even at density 0.01. [`SystemInput`]
+//! makes the input's structure first-class: a system is *dense* (`Mat`)
+//! or *CSR-sparse* (`Csr`), both behind the [`LinearOperator`] trait, and
+//! the whole solve path ([`crate::api::Autotuner`] → IR driver →
+//! backends) applies the operator instead of a dense matrix wherever the
+//! math only needs A·x or ‖A‖∞.
+//!
+//! **What stays dense.** LU factorization (and therefore the κ₁ feature
+//! estimate and the PJRT padded upload) densifies through
+//! [`LinearOperator::to_dense_for_factorization`] — exactly as in the
+//! paper's own simulation, which factorizes the sparse systems densely.
+//! The escape hatch is explicit so call sites that pay O(n²)/O(n³) are
+//! greppable.
+//!
+//! **Bit-identity contract.** For any finite x, the sparse paths are
+//! bit-identical to the densified ones: skipping a structural zero of A
+//! drops a `+0.0·x_j` term, and an f64 running sum that starts at `+0.0`
+//! can never be `-0.0` under round-to-nearest, so the skipped additions
+//! cannot change a single bit (regression-locked in `sparse::tests` and
+//! `tests/system_input.rs`). When a chopped operand overflows to ±inf —
+//! where the dense path's zeros would produce `0·inf = NaN` and the
+//! solver deterministically fails — the sparse matvec poisons its whole
+//! result to NaN, reaching the same failure outcome.
+//!
+//! [`SystemInput`] deliberately carries the operator surface twice: as
+//! inherent methods (so the many enum call sites need no trait import)
+//! and as a [`LinearOperator`] impl that forwards to them (so generic
+//! consumers like `gen::features_of_system` exist). Add new operator
+//! methods in both places.
+
+use std::borrow::Cow;
+
+use crate::chop::Prec;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+
+/// The operator interface the solve path consumes: matrix-vector
+/// products (plain f64 and chopped), ‖A‖∞, dims, structure counts, and
+/// the explicit densification escape hatch for factorization.
+pub trait LinearOperator {
+    fn n_rows(&self) -> usize;
+    fn n_cols(&self) -> usize;
+
+    /// y = A x, f64 accumulation. O(nnz).
+    fn matvec(&self, x: &[f64]) -> Vec<f64>;
+
+    /// y = chop(Aₚ · xc): the operator's entries storage-rounded to `p`,
+    /// `xc` already rounded by the caller, f64 accumulation, one final
+    /// rounding per output element (the Pallas chopped-GEMV semantics).
+    fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64>;
+
+    /// ‖A‖∞ = max row sum of |a_ij| (context feature φ₂).
+    fn norm_inf(&self) -> f64;
+
+    /// Stored entries (n·n for dense — density is structural, not a scan
+    /// for exact zeros).
+    fn nnz(&self) -> usize;
+
+    /// Structural density nnz / (rows·cols); 1.0 for dense inputs.
+    fn density(&self) -> f64 {
+        let cells = self.n_rows() * self.n_cols();
+        if cells == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / cells as f64
+    }
+
+    /// The dense form, for the factorization-only paths (LU, κ₁ estimate,
+    /// PJRT padding). Borrowed for dense inputs, materialized O(n²) for
+    /// sparse ones — callers that need it repeatedly should cache it (see
+    /// [`crate::solver::ProblemSession::dense_for_factorization`]).
+    fn to_dense_for_factorization(&self) -> Cow<'_, Mat>;
+}
+
+impl LinearOperator for Mat {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        Mat::matvec(self, x)
+    }
+
+    /// NB: chops the whole matrix on every call — this is the *semantic*
+    /// definition. Loops must go through
+    /// [`crate::solver::ProblemSession::chopped_matvec`], which caches
+    /// the chopped copy per precision.
+    fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64> {
+        if p == Prec::Fp64 {
+            return Mat::matvec(self, xc);
+        }
+        crate::linalg::chopped_matvec_prechopped(&self.chopped(p), xc, p)
+    }
+
+    fn norm_inf(&self) -> f64 {
+        Mat::norm_inf(self)
+    }
+
+    fn nnz(&self) -> usize {
+        self.n_rows * self.n_cols
+    }
+
+    fn to_dense_for_factorization(&self) -> Cow<'_, Mat> {
+        Cow::Borrowed(self)
+    }
+}
+
+impl LinearOperator for Csr {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        Csr::matvec(self, x)
+    }
+
+    fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64> {
+        if p == Prec::Fp64 {
+            return self.chopped_matvec_prechopped(xc, p);
+        }
+        self.chopped(p).chopped_matvec_prechopped(xc, p)
+    }
+
+    fn norm_inf(&self) -> f64 {
+        Csr::norm_inf(self)
+    }
+
+    fn nnz(&self) -> usize {
+        Csr::nnz(self)
+    }
+
+    fn density(&self) -> f64 {
+        Csr::density(self)
+    }
+
+    fn to_dense_for_factorization(&self) -> Cow<'_, Mat> {
+        Cow::Owned(self.to_dense())
+    }
+}
+
+/// One linear-system operand, dense or CSR-sparse. The owned form stored
+/// by [`crate::gen::Problem`] and accepted by
+/// [`crate::api::Autotuner::solve`] (via `impl Into<SystemInput>`, so
+/// `&Mat` / `&Csr` call sites keep working).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SystemInput {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl SystemInput {
+    pub fn n_rows(&self) -> usize {
+        match self {
+            SystemInput::Dense(m) => m.n_rows,
+            SystemInput::Sparse(c) => c.n_rows,
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        match self {
+            SystemInput::Dense(m) => m.n_cols,
+            SystemInput::Sparse(c) => c.n_cols,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, SystemInput::Sparse(_))
+    }
+
+    pub fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            SystemInput::Dense(m) => Some(m),
+            SystemInput::Sparse(_) => None,
+        }
+    }
+
+    pub fn as_dense_mut(&mut self) -> Option<&mut Mat> {
+        match self {
+            SystemInput::Dense(m) => Some(m),
+            SystemInput::Sparse(_) => None,
+        }
+    }
+
+    pub fn as_sparse(&self) -> Option<&Csr> {
+        match self {
+            SystemInput::Sparse(c) => Some(c),
+            SystemInput::Dense(_) => None,
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            SystemInput::Dense(m) => m.matvec(x),
+            SystemInput::Sparse(c) => c.matvec(x),
+        }
+    }
+
+    pub fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64> {
+        match self {
+            SystemInput::Dense(m) => LinearOperator::chopped_matvec(m, xc, p),
+            SystemInput::Sparse(c) => LinearOperator::chopped_matvec(c, xc, p),
+        }
+    }
+
+    pub fn norm_inf(&self) -> f64 {
+        match self {
+            SystemInput::Dense(m) => m.norm_inf(),
+            SystemInput::Sparse(c) => c.norm_inf(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            SystemInput::Dense(m) => m.n_rows * m.n_cols,
+            SystemInput::Sparse(c) => c.nnz(),
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        match self {
+            SystemInput::Dense(_) => 1.0,
+            SystemInput::Sparse(c) => c.density(),
+        }
+    }
+
+    pub fn has_non_finite(&self) -> bool {
+        match self {
+            SystemInput::Dense(m) => m.has_non_finite(),
+            SystemInput::Sparse(c) => c.values.iter().any(|v| !v.is_finite()),
+        }
+    }
+
+    pub fn to_dense_for_factorization(&self) -> Cow<'_, Mat> {
+        match self {
+            SystemInput::Dense(m) => Cow::Borrowed(m),
+            SystemInput::Sparse(c) => Cow::Owned(c.to_dense()),
+        }
+    }
+}
+
+impl LinearOperator for SystemInput {
+    fn n_rows(&self) -> usize {
+        SystemInput::n_rows(self)
+    }
+
+    fn n_cols(&self) -> usize {
+        SystemInput::n_cols(self)
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        SystemInput::matvec(self, x)
+    }
+
+    fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64> {
+        SystemInput::chopped_matvec(self, xc, p)
+    }
+
+    fn norm_inf(&self) -> f64 {
+        SystemInput::norm_inf(self)
+    }
+
+    fn nnz(&self) -> usize {
+        SystemInput::nnz(self)
+    }
+
+    fn density(&self) -> f64 {
+        SystemInput::density(self)
+    }
+
+    fn to_dense_for_factorization(&self) -> Cow<'_, Mat> {
+        SystemInput::to_dense_for_factorization(self)
+    }
+}
+
+impl From<Mat> for SystemInput {
+    fn from(m: Mat) -> SystemInput {
+        SystemInput::Dense(m)
+    }
+}
+
+impl From<&Mat> for SystemInput {
+    fn from(m: &Mat) -> SystemInput {
+        SystemInput::Dense(m.clone())
+    }
+}
+
+impl From<Csr> for SystemInput {
+    fn from(c: Csr) -> SystemInput {
+        SystemInput::Sparse(c)
+    }
+}
+
+impl From<&Csr> for SystemInput {
+    fn from(c: &Csr) -> SystemInput {
+        SystemInput::Sparse(c.clone())
+    }
+}
+
+impl From<&SystemInput> for SystemInput {
+    fn from(s: &SystemInput) -> SystemInput {
+        s.clone()
+    }
+}
+
+/// Borrowed view of a system — what [`crate::solver::ProblemSession`]
+/// holds, so sessions can be opened over a stored [`SystemInput`] *or*
+/// directly over a `&Mat` / `&Csr` without wrapping.
+#[derive(Clone, Copy, Debug)]
+pub enum SystemRef<'a> {
+    Dense(&'a Mat),
+    Sparse(&'a Csr),
+}
+
+impl<'a> From<&'a Mat> for SystemRef<'a> {
+    fn from(m: &'a Mat) -> SystemRef<'a> {
+        SystemRef::Dense(m)
+    }
+}
+
+impl<'a> From<&'a Csr> for SystemRef<'a> {
+    fn from(c: &'a Csr) -> SystemRef<'a> {
+        SystemRef::Sparse(c)
+    }
+}
+
+impl<'a> From<&'a SystemInput> for SystemRef<'a> {
+    fn from(s: &'a SystemInput) -> SystemRef<'a> {
+        match s {
+            SystemInput::Dense(m) => SystemRef::Dense(m),
+            SystemInput::Sparse(c) => SystemRef::Sparse(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(n: usize, fill: f64, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for v in a.data.iter_mut() {
+            if rng.uniform() < fill {
+                *v = rng.gauss();
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_on_operator_surface() {
+        let a = random_sparse(30, 0.2, 1);
+        let csr = Csr::from_dense(&a);
+        let d = SystemInput::Dense(a.clone());
+        let s = SystemInput::Sparse(csr.clone());
+        assert_eq!(d.n_rows(), s.n_rows());
+        assert_eq!(d.norm_inf().to_bits(), s.norm_inf().to_bits());
+        let x: Vec<f64> = (0..30).map(|i| (i as f64) - 14.5).collect();
+        for (u, v) in d.matvec(&x).iter().zip(s.matvec(&x)) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert!(!d.is_sparse() && s.is_sparse());
+        assert_eq!(d.density(), 1.0);
+        assert_eq!(d.nnz(), 900);
+        assert_eq!(s.nnz(), csr.nnz());
+        assert!(s.density() < 1.0);
+    }
+
+    #[test]
+    fn densification_escape_hatch_roundtrips() {
+        let a = random_sparse(12, 0.3, 2);
+        let s = SystemInput::Sparse(Csr::from_dense(&a));
+        let back = s.to_dense_for_factorization();
+        assert_eq!(&*back, &a);
+        // dense inputs borrow — no copy
+        let d = SystemInput::Dense(a.clone());
+        match d.to_dense_for_factorization() {
+            Cow::Borrowed(m) => assert_eq!(m, &a),
+            Cow::Owned(_) => panic!("dense input must not be copied"),
+        }
+    }
+
+    #[test]
+    fn conversions_cover_all_call_shapes() {
+        let a = Mat::eye(3);
+        let c = Csr::from_dense(&a);
+        assert!(matches!(SystemInput::from(&a), SystemInput::Dense(_)));
+        assert!(matches!(SystemInput::from(a.clone()), SystemInput::Dense(_)));
+        assert!(matches!(SystemInput::from(&c), SystemInput::Sparse(_)));
+        assert!(matches!(SystemInput::from(c.clone()), SystemInput::Sparse(_)));
+        let s = SystemInput::Sparse(c);
+        assert_eq!(SystemInput::from(&s), s);
+        assert!(matches!(SystemRef::from(&a), SystemRef::Dense(_)));
+        assert!(matches!(SystemRef::from(&s), SystemRef::Sparse(_)));
+    }
+
+    #[test]
+    fn non_finite_detection_both_forms() {
+        let mut a = Mat::eye(4);
+        assert!(!SystemInput::from(&a).has_non_finite());
+        a[(1, 2)] = f64::NAN;
+        assert!(SystemInput::from(&a).has_non_finite());
+        let c = Csr::from_triplets(2, 2, &[(0, 0, f64::INFINITY)]);
+        assert!(SystemInput::Sparse(c).has_non_finite());
+    }
+}

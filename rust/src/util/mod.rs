@@ -5,6 +5,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod json;
+pub mod mtx;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

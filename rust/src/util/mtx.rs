@@ -1,0 +1,328 @@
+//! Matrix Market (`.mtx`) loader — the interchange format of the
+//! SuiteSparse collection the paper's §5.3 sparse workload models.
+//!
+//! Supports the common subset: `coordinate` and `array` storage, `real`
+//! / `integer` / `pattern` fields, `general` / `symmetric` /
+//! `skew-symmetric` symmetry. Coordinate files load as CSR
+//! ([`crate::sparse::Csr`] → [`SystemInput::Sparse`], solving
+//! sparse-natively through the operator path); array files load dense.
+//! Complex and Hermitian files are rejected loudly.
+//!
+//! Format reference: NIST Matrix Market, "Text File Formats".
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::system::SystemInput;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Sym {
+    General,
+    Symmetric,
+    Skew,
+}
+
+/// Load a `.mtx` file as a solve input (coordinate ⇒ sparse CSR, array ⇒
+/// dense).
+pub fn load_system(path: &str) -> Result<SystemInput> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_system(&text).with_context(|| format!("parsing Matrix Market file {path}"))
+}
+
+/// Load a `.mtx` file holding a vector (n×1 or 1×n) as a dense `Vec`.
+pub fn load_vector(path: &str) -> Result<Vec<f64>> {
+    let sys = load_system(path)?;
+    let (r, c) = (sys.n_rows(), sys.n_cols());
+    if r != 1 && c != 1 {
+        bail!("{path}: expected a vector (n x 1 or 1 x n), got {r} x {c}");
+    }
+    // row-major data of an n×1 (or 1×n) matrix is the vector itself
+    Ok(match sys {
+        SystemInput::Dense(m) => m.data,
+        SystemInput::Sparse(s) => s.to_dense().data,
+    })
+}
+
+/// Parse Matrix Market text. Exposed for in-memory use and tests; the
+/// file-level entry points are [`load_system`] / [`load_vector`].
+pub fn parse_system(text: &str) -> Result<SystemInput> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty file"))?;
+    let head: Vec<String> = header
+        .split_whitespace()
+        .map(|t| t.to_ascii_lowercase())
+        .collect();
+    if head.len() < 4 || head[0] != "%%matrixmarket" || head[1] != "matrix" {
+        bail!("not a MatrixMarket matrix header: {header:?}");
+    }
+    let storage = head[2].as_str();
+    let field = head[3].as_str();
+    match field {
+        "real" | "integer" | "pattern" => {}
+        other => bail!("unsupported field {other:?} (supported: real, integer, pattern)"),
+    }
+    let sym = match head.get(4).map(|s| s.as_str()).unwrap_or("general") {
+        "general" => Sym::General,
+        "symmetric" => Sym::Symmetric,
+        "skew-symmetric" => Sym::Skew,
+        other => bail!(
+            "unsupported symmetry {other:?} (supported: general, symmetric, skew-symmetric)"
+        ),
+    };
+    // checked once the size line is parsed (below): symmetric storage
+    // only makes sense for square matrices
+    let require_square = |r: usize, c: usize| -> Result<()> {
+        if sym != Sym::General && r != c {
+            bail!("symmetric/skew-symmetric matrix must be square, got {r} x {c}");
+        }
+        Ok(())
+    };
+
+    // token cursor over the data lines (blank lines and % comments skipped)
+    let mut toks = Cursor {
+        toks: lines
+            .filter(|l| {
+                let t = l.trim();
+                !t.is_empty() && !t.starts_with('%')
+            })
+            .flat_map(|l| l.split_whitespace())
+            .collect(),
+        pos: 0,
+    };
+
+    match storage {
+        "coordinate" => {
+            let n_rows = toks.next_usize("row count")?;
+            let n_cols = toks.next_usize("column count")?;
+            require_square(n_rows, n_cols)?;
+            let nnz = toks.next_usize("entry count")?;
+            let pattern = field == "pattern";
+            let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(2 * nnz);
+            for k in 0..nnz {
+                let i = toks.next_usize("row index")?;
+                let j = toks.next_usize("column index")?;
+                // pattern files carry structure only; 1.0 per stored entry
+                let v = if pattern { 1.0 } else { toks.next_f64(k)? };
+                if i == 0 || j == 0 || i > n_rows || j > n_cols {
+                    bail!(
+                        "entry {} ({i}, {j}) out of bounds for a {n_rows}x{n_cols} matrix \
+                         (indices are 1-based)",
+                        k + 1
+                    );
+                }
+                let (i, j) = (i - 1, j - 1);
+                triplets.push((i, j, v));
+                match sym {
+                    Sym::General => {}
+                    Sym::Symmetric => {
+                        if i != j {
+                            triplets.push((j, i, v));
+                        }
+                    }
+                    Sym::Skew => {
+                        if i == j {
+                            bail!(
+                                "skew-symmetric file stores a diagonal entry ({}, {})",
+                                i + 1,
+                                j + 1
+                            );
+                        }
+                        triplets.push((j, i, -v));
+                    }
+                }
+            }
+            if !toks.done() {
+                bail!("trailing data after {nnz} declared entries");
+            }
+            Ok(SystemInput::Sparse(Csr::from_triplets(n_rows, n_cols, &triplets)))
+        }
+        "array" => {
+            if field == "pattern" {
+                bail!("pattern field requires coordinate storage");
+            }
+            let n_rows = toks.next_usize("row count")?;
+            let n_cols = toks.next_usize("column count")?;
+            require_square(n_rows, n_cols)?;
+            let mut m = Mat::zeros(n_rows, n_cols);
+            let mut k = 0usize;
+            // array storage is column-major; symmetric/skew files store
+            // the lower triangle (diagonal included for symmetric only)
+            for j in 0..n_cols {
+                let i0 = match sym {
+                    Sym::General => 0,
+                    Sym::Symmetric => j,
+                    Sym::Skew => j + 1,
+                };
+                for i in i0..n_rows {
+                    let v = toks.next_f64(k)?;
+                    k += 1;
+                    m[(i, j)] = v;
+                    match sym {
+                        Sym::General => {}
+                        Sym::Symmetric => m[(j, i)] = v,
+                        Sym::Skew => m[(j, i)] = -v,
+                    }
+                }
+            }
+            if !toks.done() {
+                bail!("trailing data after the declared {n_rows}x{n_cols} array");
+            }
+            Ok(SystemInput::Dense(m))
+        }
+        other => bail!("unsupported storage {other:?} (supported: coordinate, array)"),
+    }
+}
+
+struct Cursor<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bump(&mut self) -> Option<&'a str> {
+        let t = self.toks.get(self.pos).copied();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn next_usize(&mut self, what: &str) -> Result<usize> {
+        let t = self
+            .bump()
+            .ok_or_else(|| anyhow!("unexpected end of file reading {what}"))?;
+        t.parse::<usize>().map_err(|e| anyhow!("bad {what} {t:?}: {e}"))
+    }
+
+    fn next_f64(&mut self, k: usize) -> Result<f64> {
+        let t = self
+            .bump()
+            .ok_or_else(|| anyhow!("unexpected end of file at value {}", k + 1))?;
+        t.parse::<f64>()
+            .map_err(|e| anyhow!("bad value {t:?} at value {}: {e}", k + 1))
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.toks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinate_general_parses_to_csr() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % a comment\n\
+                    3 3 4\n\
+                    1 1 2.0\n\
+                    2 2 3.0\n\
+                    3 3 4.0\n\
+                    1 3 -1.5\n";
+        let sys = parse_system(text).unwrap();
+        let csr = sys.as_sparse().expect("coordinate loads sparse");
+        assert_eq!((csr.n_rows, csr.n_cols, csr.nnz()), (3, 3, 4));
+        let d = csr.to_dense();
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(0, 2)], -1.5);
+        assert_eq!(d[(2, 0)], 0.0);
+    }
+
+    #[test]
+    fn coordinate_symmetric_mirrors_off_diagonal() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    3 3 4\n\
+                    1 1 4.0\n\
+                    2 1 -1.0\n\
+                    2 2 4.0\n\
+                    3 3 4.0\n";
+        let d = parse_system(text).unwrap().as_sparse().unwrap().to_dense();
+        assert_eq!(d[(0, 1)], -1.0);
+        assert_eq!(d[(1, 0)], -1.0);
+        assert_eq!(d[(0, 0)], 4.0);
+    }
+
+    #[test]
+    fn coordinate_skew_symmetric_negates_mirror() {
+        let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n\
+                    2 2 1\n\
+                    2 1 5.0\n";
+        let d = parse_system(text).unwrap().as_sparse().unwrap().to_dense();
+        assert_eq!(d[(1, 0)], 5.0);
+        assert_eq!(d[(0, 1)], -5.0);
+        // a stored diagonal is an error for skew files
+        let bad = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n1 1 1.0\n";
+        assert!(parse_system(bad).is_err());
+    }
+
+    #[test]
+    fn array_general_is_column_major() {
+        let text = "%%MatrixMarket matrix array real general\n\
+                    2 3\n1.0\n2.0\n3.0\n4.0\n5.0\n6.0\n";
+        let sys = parse_system(text).unwrap();
+        let m = sys.as_dense().expect("array loads dense");
+        assert_eq!(m.row(0), &[1.0, 3.0, 5.0]);
+        assert_eq!(m.row(1), &[2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn array_symmetric_fills_upper_triangle() {
+        // lower triangle by columns: col 1 = [1, 2, 3], col 2 = [4, 5], col 3 = [6]
+        let text = "%%MatrixMarket matrix array real symmetric\n\
+                    3 3\n1.0\n2.0\n3.0\n4.0\n5.0\n6.0\n";
+        let m = parse_system(text).unwrap();
+        let m = m.as_dense().unwrap();
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[2.0, 4.0, 5.0]);
+        assert_eq!(m.row(2), &[3.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn malformed_inputs_fail_loudly() {
+        for bad in [
+            "",
+            "%%MatrixMarket tensor coordinate real general\n1 1 0\n",
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1.0 0.0\n",
+            "%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 1.0\n",
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 9.9\n",
+            "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n",
+            // symmetric storage on a non-square shape
+            "%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 3 5.0\n",
+            "%%MatrixMarket matrix array real symmetric\n3 2\n1.0\n2.0\n3.0\n4.0\n5.0\n",
+        ] {
+            assert!(parse_system(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn vector_loading_accepts_single_column() {
+        let dir = std::env::temp_dir().join("pa_mtx_vec_test.mtx");
+        std::fs::write(
+            &dir,
+            "%%MatrixMarket matrix array real general\n3 1\n1.5\n-2.5\n0.5\n",
+        )
+        .unwrap();
+        let v = load_vector(dir.to_str().unwrap()).unwrap();
+        assert_eq!(v, vec![1.5, -2.5, 0.5]);
+    }
+
+    #[test]
+    fn committed_sample_loads_and_is_spd_shaped() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/sample_spd.mtx");
+        let sys = load_system(path).unwrap();
+        let csr = sys.as_sparse().expect("sample is coordinate ⇒ sparse");
+        assert_eq!((csr.n_rows, csr.n_cols), (10, 10));
+        assert_eq!(csr.nnz(), 28); // 10 diagonal + 2·9 mirrored off-diagonal
+        let d = csr.to_dense();
+        for i in 0..10 {
+            assert_eq!(d[(i, i)], 4.0);
+            for j in 0..10 {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+            }
+        }
+    }
+}

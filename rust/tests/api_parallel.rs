@@ -159,7 +159,7 @@ fn policy_save_load_greedy_roundtrip() {
         .config(cfg.clone())
         .build()
         .unwrap();
-    let rep = tuner.solve(&fresh[0].a, &fresh[0].b).unwrap();
+    let rep = tuner.solve(&fresh[0].system, &fresh[0].b).unwrap();
     assert_eq!(rep.action, policy.select(&fresh[0]));
 }
 
@@ -173,9 +173,10 @@ fn golden_text() -> String {
 /// log10 κ over [1, 5] with 2 bins).
 fn feature_probe(kappa_est: f64) -> Problem {
     use precision_autotune::linalg::Mat;
+    use precision_autotune::system::SystemInput;
     Problem {
         id: 0,
-        a: Mat::eye(4),
+        system: SystemInput::Dense(Mat::eye(4)),
         b: vec![1.0; 4],
         x_true: vec![1.0; 4],
         n: 4,
