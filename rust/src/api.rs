@@ -51,14 +51,15 @@
 use anyhow::{bail, Result};
 
 use crate::backend_native::NativeBackend;
-use crate::bandit::action::Action;
+use crate::bandit::action::{Action, SolverFamily};
 use crate::bandit::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};
 use crate::chop::Prec;
 use crate::coordinator::eval::EvalRecord;
 use crate::gen::Problem;
 use crate::linalg::condest::condest_1;
 use crate::linalg::lu::lu_factor;
-use crate::solver::ir::{gmres_ir_prefactored, StopReason};
+use crate::solver::family::solve_refinement;
+use crate::solver::ir::StopReason;
 use crate::solver::{LuHandle, ProblemSession, SolverBackend};
 use crate::system::SystemInput;
 use crate::util::config::Config;
@@ -70,9 +71,13 @@ use crate::util::config::Config;
 pub struct SolveReport {
     /// The computed solution.
     pub x: Vec<f64>,
-    /// The precision configuration the policy picked (all-FP64 without a
-    /// policy, or for context bins the agent never visited).
+    /// The (solver family, precision configuration) the policy picked
+    /// (all-FP64 LU-IR without a policy, or for context bins the agent
+    /// never visited).
     pub action: Action,
+    /// Which refinement family solved it (`action.solver`, surfaced for
+    /// logging without digging into the action encoding).
+    pub solver: SolverFamily,
     /// Normwise relative backward error of `x`.
     pub nbe: f64,
     /// Outer refinement iterations.
@@ -84,7 +89,10 @@ pub struct SolveReport {
     /// True when the solve broke down (LU breakdown, divergence, or a
     /// non-finite backward error).
     pub failed: bool,
-    /// Hager–Higham κ₁ estimate of A (context feature φ₁).
+    /// Hager–Higham κ₁ estimate of A (context feature φ₁). NaN when the
+    /// solve skipped the feature pass — explicit CG actions and forced
+    /// `cg-ir` without a policy need no context and avoid its transient
+    /// densification + f64 LU (see [`Autotuner::solve_with_action`]).
     pub kappa_est: f64,
     /// ‖A‖∞ (context feature φ₂).
     pub norm_inf: f64,
@@ -221,19 +229,64 @@ impl Autotuner {
             Some(pol) => pol.select(&p),
             None => Action::FP64,
         };
-        self.solve_prepared(p, f64_lu, action)
+        let rep = self.solve_prepared(&p, f64_lu.as_ref(), action)?;
+        // Serving fallback: the context features carry no SPD bit, so an
+        // extended-space policy can mis-route a non-SPD system to CG-IR,
+        // whose curvature test then breaks down deterministically. A
+        // policy-driven solve falls back to the safe all-FP64 LU action
+        // (reusing the feature LU — no extra factorization) instead of
+        // failing a request the LU family handles fine; the report's
+        // `action`/`solver` show what actually ran. Explicit routes
+        // (`solve_with_action`, forced `--solver cg-ir`) do not fall
+        // back — the caller asked for that family and failure is the
+        // honest answer.
+        if rep.failed && action.solver == SolverFamily::CgIr {
+            return self.solve_prepared(&p, f64_lu.as_ref(), Action::FP64);
+        }
+        Ok(rep)
     }
 
     /// Solve with an explicit precision configuration, bypassing the
     /// policy (baselines, A/B comparisons).
+    ///
+    /// With no policy to consult, the κ₁ context feature is only needed
+    /// for the LU family's f64-factor reuse — an explicit **CG action
+    /// skips the feature pass entirely**, so a sparse input runs truly
+    /// matvec-only end to end (no transient densification, no O(n³)
+    /// feature LU; `SolveReport::kappa_est` is NaN in that case).
     pub fn solve_with_action(
         &self,
         a: impl Into<SystemInput>,
         b: &[f64],
         action: Action,
     ) -> Result<SolveReport> {
-        let (p, f64_lu) = self.wrap_problem(a.into(), b)?;
-        self.solve_prepared(p, f64_lu, action)
+        let features = action.solver == SolverFamily::LuIr;
+        let (p, f64_lu) = self.wrap_problem_inner(a.into(), b, features)?;
+        self.solve_prepared(&p, f64_lu.as_ref(), action)
+    }
+
+    /// Solve with the policy's precision pick but a forced refinement
+    /// family (the CLI's `--solver lu-ir|cg-ir`). One feature
+    /// extraction / f64 LU serves both the selection and the solve —
+    /// unlike chaining [`Autotuner::select_action`] +
+    /// [`Autotuner::solve_with_action`], which would densify and factor
+    /// twice. Forcing `cg-ir` **without** a policy needs no context
+    /// feature at all and skips the dense κ₁ pass like
+    /// [`Autotuner::solve_with_action`] does.
+    pub fn solve_with_solver(
+        &self,
+        a: impl Into<SystemInput>,
+        b: &[f64],
+        family: SolverFamily,
+    ) -> Result<SolveReport> {
+        let features = self.policy.is_some() || family == SolverFamily::LuIr;
+        let (p, f64_lu) = self.wrap_problem_inner(a.into(), b, features)?;
+        let action = match &self.policy {
+            Some(pol) => pol.select(&p),
+            None => Action::FP64,
+        }
+        .with_solver(family);
+        self.solve_prepared(&p, f64_lu.as_ref(), action)
     }
 
     /// Evaluate the served policy over generated [`Problem`]s (which carry
@@ -269,14 +322,24 @@ impl Autotuner {
     /// from (None on a singular matrix), kept for factorization reuse.
     /// `x_true` stays empty — the serving path has no reference solution
     /// (see `solver::ir`). `b` may be empty for feature-only paths.
-    ///
-    /// The κ₁ feature needs an f64 LU, so sparse inputs densify here
-    /// transiently (the dense copy is dropped before the [`Problem`] is
-    /// built; the solve session re-densifies only if the action's u_f
-    /// factorization runs, which it always does — an accepted O(n²)
-    /// duplication that keeps the feature path and the solve session
-    /// independent).
     fn wrap_problem(&self, system: SystemInput, b: &[f64]) -> Result<(Problem, Option<LuHandle>)> {
+        self.wrap_problem_inner(system, b, true)
+    }
+
+    /// `features = true` runs the κ₁ feature pass: it needs an f64 LU,
+    /// so sparse inputs densify here transiently (the dense copy is
+    /// dropped before the [`Problem`] is built; the solve session
+    /// re-densifies only if the action's u_f factorization runs — CG
+    /// actions never do). Paths that neither consult the policy nor can
+    /// reuse an f64 factor (explicit CG actions, forced `cg-ir` without
+    /// a policy) pass `features = false` and skip the densification and
+    /// the O(n³) LU entirely: κ is reported as NaN.
+    fn wrap_problem_inner(
+        &self,
+        system: SystemInput,
+        b: &[f64],
+        features: bool,
+    ) -> Result<(Problem, Option<LuHandle>)> {
         let (nr, nc) = (system.n_rows(), system.n_cols());
         if nr != nc {
             bail!("matrix must be square, got {nr}x{nc}");
@@ -292,7 +355,7 @@ impl Autotuner {
         }
         // same semantics as gen::features_of_system, but keeping the LU
         let norm_inf = system.norm_inf();
-        let (kappa_est, f64_lu) = {
+        let (kappa_est, f64_lu) = if features {
             let dense = system.to_dense_for_factorization();
             match lu_factor(&dense) {
                 Ok(lu) => {
@@ -306,6 +369,8 @@ impl Autotuner {
                 }
                 Err(_) => (f64::INFINITY, None),
             }
+        } else {
+            (f64::NAN, None)
         };
         let density = system.density();
         let p = Problem {
@@ -318,33 +383,41 @@ impl Autotuner {
             kappa_est,
             norm_inf,
             density,
+            // unknown for user-supplied systems; the policy's action
+            // encoding decides the family, not this flag
+            spd: false,
         };
         Ok((p, f64_lu))
     }
 
     fn solve_prepared(
         &self,
-        p: Problem,
-        f64_lu: Option<LuHandle>,
+        p: &Problem,
+        f64_lu: Option<&LuHandle>,
         action: Action,
     ) -> Result<SolveReport> {
         if p.b.len() != p.n {
             bail!("rhs length {} does not match matrix size {}", p.b.len(), p.n);
         }
         // Reuse the feature LU as the refinement factorization when it is
-        // exactly what the action asks for (u_f = fp64) and the backend
-        // consumes host-layout factors (PJRT needs bucket-padded ones
-        // produced by its own lu_factor, so it opts out).
-        let prefactored = if action.u_f == Prec::Fp64 && self.backend.accepts_host_factors() {
-            f64_lu.as_ref()
+        // exactly what the action asks for (LU family, u_f = fp64) and
+        // the backend consumes host-layout factors (PJRT needs
+        // bucket-padded ones produced by its own lu_factor, so it opts
+        // out; the CG family has no factorization to reuse).
+        let prefactored = if action.solver == SolverFamily::LuIr
+            && action.u_f == Prec::Fp64
+            && self.backend.accepts_host_factors()
+        {
+            f64_lu
         } else {
             None
         };
         let session = ProblemSession::new(&p.system);
         let out =
-            gmres_ir_prefactored(self.backend.as_ref(), &session, &p, &action, &self.cfg, prefactored)?;
+            solve_refinement(self.backend.as_ref(), &session, p, &action, &self.cfg, prefactored)?;
         Ok(SolveReport {
             x: out.x,
+            solver: action.solver,
             action,
             nbe: out.nbe,
             outer_iters: out.outer_iters,
@@ -459,14 +532,15 @@ mod tests {
     fn solve_with_action_overrides_policy() {
         let tuner = Autotuner::builder().build().unwrap();
         let (a, _, b) = well_conditioned_system(24, 3);
-        let act = Action {
-            u_f: crate::chop::Prec::Bf16,
-            u: crate::chop::Prec::Fp64,
-            u_g: crate::chop::Prec::Fp64,
-            u_r: crate::chop::Prec::Fp64,
-        };
+        let act = Action::lu(
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp64,
+        );
         let rep = tuner.solve_with_action(&a, &b, act).unwrap();
         assert_eq!(rep.action, act);
+        assert_eq!(rep.solver, SolverFamily::LuIr);
         assert!(!rep.failed);
     }
 
@@ -535,12 +609,12 @@ mod tests {
         assert_eq!(dense_rep.outer_iters, sparse_rep.outer_iters);
         assert_eq!(dense_rep.gmres_iters, sparse_rep.gmres_iters);
 
-        let act = Action {
-            u_f: crate::chop::Prec::Fp32,
-            u: crate::chop::Prec::Fp64,
-            u_g: crate::chop::Prec::Fp32,
-            u_r: crate::chop::Prec::Fp32,
-        };
+        let act = Action::lu(
+            crate::chop::Prec::Fp32,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp32,
+            crate::chop::Prec::Fp32,
+        );
         let d = tuner.solve_with_action(&a, &b, act).unwrap();
         let s = tuner.solve_with_action(&csr, &b, act).unwrap();
         assert!(!d.failed && !s.failed);
@@ -549,6 +623,99 @@ mod tests {
         }
         assert_eq!(d.nbe.to_bits(), s.nbe.to_bits());
         assert_eq!(d.gmres_iters, s.gmres_iters);
+    }
+
+    #[test]
+    fn cg_family_serves_spd_systems_through_the_facade() {
+        // forcing the CG family on a (diagonally boosted, symmetrized)
+        // SPD system must solve matvec-only and report its family
+        let tuner = Autotuner::builder().build().unwrap();
+        let n = 40;
+        let mut rng = Rng::new(17);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 8.0;
+            for j in 0..i {
+                if rng.uniform() < 0.1 {
+                    let v = rng.gauss() * 0.5;
+                    a[(i, j)] = v;
+                    a[(j, i)] = v;
+                }
+            }
+        }
+        let csr = Csr::from_dense(&a);
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        let rep = tuner.solve_with_action(&csr, &b, Action::CG_FP64).unwrap();
+        assert_eq!(rep.solver, SolverFamily::CgIr);
+        assert!(!rep.failed, "stop {:?}", rep.stop);
+        assert!(rep.nbe < 1e-12, "nbe {}", rep.nbe);
+        // explicit CG actions skip the dense kappa feature pass entirely
+        assert!(rep.kappa_est.is_nan(), "kappa {}", rep.kappa_est);
+        let ferr = crate::solver::metrics::ferr(&rep.x, &xt);
+        assert!(ferr < 1e-9, "ferr {ferr}");
+        // the default (no policy) path stays on the LU family, with the
+        // feature pass (finite kappa)
+        let base = tuner.solve(&csr, &b).unwrap();
+        assert_eq!(base.solver, SolverFamily::LuIr);
+        assert_eq!(base.action, Action::FP64);
+        assert!(base.kappa_est.is_finite());
+        // solve_with_solver matches the explicit action route bit for
+        // bit, and (policy-less cg-ir) also skips the feature pass
+        let forced = tuner.solve_with_solver(&csr, &b, SolverFamily::CgIr).unwrap();
+        assert_eq!(forced.action, Action::CG_FP64);
+        assert!(forced.kappa_est.is_nan());
+        for (u, v) in forced.x.iter().zip(&rep.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn policy_cg_pick_on_non_spd_falls_back_to_lu_in_serving() {
+        use crate::bandit::action::ActionSpace;
+        use crate::bandit::qtable::QTable;
+        use crate::features::{Binner, Discretizer};
+        // a 1-state policy whose only learned action is CG-IR
+        let mut q = QTable::new(1, ActionSpace { actions: vec![Action::CG_FP64, Action::FP64] });
+        q.update(0, 0, 1.0, 1.0);
+        let policy = TrainedPolicy {
+            qtable: q,
+            discretizer: Discretizer {
+                kappa: Binner { lo: 0.0, hi: 1.0, n_bins: 1 },
+                norm: Binner { lo: 0.0, hi: 1.0, n_bins: 1 },
+                delta_c: 1.0,
+                delta_n: 1e-30,
+            },
+        };
+        let tuner = Autotuner::builder().policy(policy).build().unwrap();
+        // symmetric **indefinite** system (2x2 blocks [[1,2],[2,1]],
+        // eigenvalues {3, -1}): well-conditioned, LU-trivial, and the
+        // CG curvature test provably breaks down on it
+        let n = 16;
+        let mut a = Mat::zeros(n, n);
+        let mut k = 0;
+        while k < n {
+            a[(k, k)] = 1.0;
+            a[(k + 1, k + 1)] = 1.0;
+            a[(k, k + 1)] = 2.0;
+            a[(k + 1, k)] = 2.0;
+            k += 2;
+        }
+        let mut rng = Rng::new(21);
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        // policy-driven serving: the CG mis-route falls back to the safe
+        // LU baseline instead of failing the request
+        let rep = tuner.solve(&a, &b).unwrap();
+        assert!(!rep.failed, "fallback must rescue the request: {:?}", rep.stop);
+        assert_eq!(rep.solver, SolverFamily::LuIr);
+        assert_eq!(rep.action, Action::FP64);
+        let ferr = crate::solver::metrics::ferr(&rep.x, &xt);
+        assert!(ferr < 1e-10, "ferr {ferr}");
+        // the explicit route stays honest: forced CG on the same system
+        // reports the breakdown
+        let forced = tuner.solve_with_action(&a, &b, Action::CG_FP64).unwrap();
+        assert!(forced.failed);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::chop::{chop_p, Prec};
+use crate::chop::Prec;
 use crate::linalg::gmres::gmres_preconditioned_op;
 use crate::linalg::lu::{lu_factor_chopped, LuFactors};
 use crate::solver::{GmresOutcome, LuHandle, ProblemSession, SolverBackend};
@@ -64,18 +64,10 @@ impl SolverBackend for NativeBackend {
     fn residual(&self, s: &ProblemSession<'_>, x: &[f64], b: &[f64], p: Prec) -> Result<Vec<f64>> {
         // r = chop(chop(b) − Aₚ·chop(x)) through the session operator:
         // cached chopped-dense matvec for dense inputs, chopped-CSR
-        // (O(nnz)) for sparse ones — bit-identical either way.
-        if p == Prec::Fp64 {
-            let ax = s.matvec(x);
-            return Ok(b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect());
-        }
-        let mut xc = x.to_vec();
-        crate::chop::chop_slice(&mut xc, p);
-        let ax = s.chopped_matvec(&xc, p);
-        Ok(b.iter()
-            .zip(ax)
-            .map(|(bi, axi)| chop_p(chop_p(*bi, p) - axi, p))
-            .collect())
+        // (O(nnz)) for sparse ones — bit-identical either way. The chop
+        // sequence lives once, on the session, shared with the CG-IR
+        // family's driver.
+        Ok(s.residual(x, b, p))
     }
 
     fn gmres(

@@ -1,53 +1,140 @@
-//! Joint action space (eq. 1) and its structured reduction (eq. 11–12).
+//! Joint action space (eq. 1) and its structured reduction (eq. 11–12),
+//! extended with the solver family dimension.
 //!
-//! An action is the precision 4-tuple a = (u_f, u, u_g, u_r) for the four
-//! precision-controlled steps of GMRES-IR. The reduced space keeps only
-//! monotone tuples u_f ≤ u ≤ u_g ≤ u_r (ordered by significand bits),
-//! giving C(m+k−1, k) combinations — 35 for m=4 precisions, k=4 steps, an
-//! ~86% cut from the full 256 (§3.2).
+//! An action is a **(solver family, precision 4-tuple)** pair: which
+//! refinement engine runs the solve ([`SolverFamily`]) and the precision
+//! a = (u_f, u, u_g, u_r) for its four precision-controlled steps. For
+//! the LU family these are the paper's GMRES-IR steps; for the CG family
+//! the same four slots map onto the CG-IR analogues (see
+//! `solver::family`):
+//!
+//! | slot | LU/GMRES-IR | CG-IR |
+//! |---|---|---|
+//! | u_f | LU factorization + initial solve | Jacobi preconditioner build + diagonal initial solve |
+//! | u   | solution update | solution update |
+//! | u_g | inner GMRES working precision | inner PCG working precision (matvecs) |
+//! | u_r | residual computation | residual computation |
+//!
+//! The per-family reduced space keeps only monotone tuples
+//! u_f ≤ u ≤ u_g ≤ u_r (ordered by significand bits), giving
+//! C(m+k−1, k) combinations — 35 for m=4 precisions, k=4 steps, an ~86%
+//! cut from the full 256 (§3.2). The *extended* space is the union over
+//! both families (70 actions, or 2·(k_top+1)-ish after pruning).
 
 use crate::chop::Prec;
 
-/// A precision configuration for one GMRES-IR solve.
+/// Which refinement engine an action runs (DESIGN.md §2d).
+///
+/// * `LuIr` — the paper's LU-preconditioned GMRES-IR: O(n³) dense
+///   factorization in u_f, inner GMRES in u_g.
+/// * `CgIr` — matvec-only Jacobi-preconditioned CG-IR for SPD systems:
+///   no factorization, no densification; every operator application is
+///   O(nnz) on sparse inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SolverFamily {
+    LuIr = 0,
+    CgIr = 1,
+}
+
+impl SolverFamily {
+    pub const ALL: [SolverFamily; 2] = [SolverFamily::LuIr, SolverFamily::CgIr];
+
+    /// Stable name used in policy JSON and the CLI `--solver` switch.
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverFamily::LuIr => "lu-ir",
+            SolverFamily::CgIr => "cg-ir",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SolverFamily> {
+        SolverFamily::ALL.iter().copied().find(|f| f.name() == name)
+    }
+}
+
+impl std::fmt::Display for SolverFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// A (solver family, precision configuration) pair for one solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Action {
-    /// u_f — LU factorization + initial solve
+    /// which refinement engine runs the solve
+    pub solver: SolverFamily,
+    /// u_f — LU factorization + initial solve (LU) / preconditioner
+    /// build + diagonal initial solve (CG)
     pub u_f: Prec,
     /// u — solution update x_{i+1} = x_i + z_i
     pub u: Prec,
-    /// u_g — GMRES working precision (incl. preconditioner application)
+    /// u_g — inner-solver working precision (incl. preconditioner
+    /// application)
     pub u_g: Prec,
     /// u_r — residual computation
     pub u_r: Prec,
 }
 
 impl Action {
+    /// The all-FP64 LU/GMRES-IR baseline the paper compares against.
     pub const FP64: Action = Action {
+        solver: SolverFamily::LuIr,
         u_f: Prec::Fp64,
         u: Prec::Fp64,
         u_g: Prec::Fp64,
         u_r: Prec::Fp64,
     };
 
-    /// The tuple in paper order (u_f, u, u_g, u_r).
+    /// The all-FP64 CG-IR anchor (the CG family's safe configuration).
+    pub const CG_FP64: Action = Action {
+        solver: SolverFamily::CgIr,
+        u_f: Prec::Fp64,
+        u: Prec::Fp64,
+        u_g: Prec::Fp64,
+        u_r: Prec::Fp64,
+    };
+
+    /// LU/GMRES-IR action with the given precisions.
+    pub fn lu(u_f: Prec, u: Prec, u_g: Prec, u_r: Prec) -> Action {
+        Action { solver: SolverFamily::LuIr, u_f, u, u_g, u_r }
+    }
+
+    /// CG-IR action with the given precisions.
+    pub fn cg(u_f: Prec, u: Prec, u_g: Prec, u_r: Prec) -> Action {
+        Action { solver: SolverFamily::CgIr, u_f, u, u_g, u_r }
+    }
+
+    /// The same precision configuration under a different solver family.
+    pub fn with_solver(mut self, solver: SolverFamily) -> Action {
+        self.solver = solver;
+        self
+    }
+
+    /// The precision tuple in paper order (u_f, u, u_g, u_r).
     pub fn tuple(&self) -> [Prec; 4] {
         [self.u_f, self.u, self.u_g, self.u_r]
     }
 
     /// Monotone constraint of eq. (11): u_f ≤ u ≤ u_g ≤ u_r by
-    /// significand bits.
+    /// significand bits (applied per family).
     pub fn is_monotone(&self) -> bool {
         self.u_f <= self.u && self.u <= self.u_g && self.u_g <= self.u_r
     }
 
     pub fn name(&self) -> String {
-        format!(
+        let precs = format!(
             "({},{},{},{})",
             self.u_f.name(),
             self.u.name(),
             self.u_g.name(),
             self.u_r.name()
-        )
+        );
+        match self.solver {
+            // LU keeps the historical bare-tuple rendering (tables/CSVs
+            // stay diffable against earlier runs)
+            SolverFamily::LuIr => precs,
+            SolverFamily::CgIr => format!("cg{precs}"),
+        }
     }
 }
 
@@ -57,21 +144,23 @@ impl std::fmt::Display for Action {
     }
 }
 
-/// The reduced action space 𝒜_reduced (plus helpers over the full space).
+/// An ordered action list: the per-family reduced space 𝒜_reduced, the
+/// two-family extended space, or any pruned subset (a policy's Q-table
+/// carries the exact list it was trained over).
 #[derive(Clone, Debug)]
 pub struct ActionSpace {
     pub actions: Vec<Action>,
 }
 
 impl ActionSpace {
-    /// All m^k joint actions (k=4 fixed by GMRES-IR).
+    /// All m^k joint LU-family actions (k=4 fixed by GMRES-IR).
     pub fn full() -> ActionSpace {
         let mut actions = Vec::new();
         for &u_f in &Prec::ALL {
             for &u in &Prec::ALL {
                 for &u_g in &Prec::ALL {
                     for &u_r in &Prec::ALL {
-                        actions.push(Action { u_f, u, u_g, u_r });
+                        actions.push(Action::lu(u_f, u, u_g, u_r));
                     }
                 }
             }
@@ -79,7 +168,8 @@ impl ActionSpace {
         ActionSpace { actions }
     }
 
-    /// The monotone reduction of eq. (11): non-decreasing tuples only.
+    /// The monotone reduction of eq. (11) for the LU family:
+    /// non-decreasing tuples only.
     pub fn reduced() -> ActionSpace {
         let mut actions: Vec<Action> = ActionSpace::full()
             .actions
@@ -109,6 +199,30 @@ impl ActionSpace {
         ActionSpace { actions }
     }
 
+    /// The two-family extended space: the LU reduced list followed by the
+    /// same precision tuples under the CG family (70 actions unpruned).
+    /// Family-major order keeps the LU block's indices identical to
+    /// [`ActionSpace::reduced`], and the Q-table tie-break ("lowest
+    /// index wins") therefore still resolves toward cheap LU configs
+    /// when a state has no evidence either way.
+    pub fn extended() -> ActionSpace {
+        ActionSpace::extended_top_k(0)
+    }
+
+    /// Pruned extended space: [`ActionSpace::reduced_top_k`] per family,
+    /// so both the LU all-FP64 fallback and the CG all-FP64 anchor
+    /// survive pruning.
+    pub fn extended_top_k(k_top: usize) -> ActionSpace {
+        let lu = ActionSpace::reduced_top_k(k_top);
+        let mut actions = lu.actions.clone();
+        actions.extend(
+            lu.actions
+                .iter()
+                .map(|a| a.with_solver(SolverFamily::CgIr)),
+        );
+        ActionSpace { actions }
+    }
+
     pub fn len(&self) -> usize {
         self.actions.len()
     }
@@ -119,6 +233,11 @@ impl ActionSpace {
 
     pub fn index_of(&self, a: &Action) -> Option<usize> {
         self.actions.iter().position(|x| x == a)
+    }
+
+    /// Does the list contain any action of the given family?
+    pub fn has_family(&self, f: SolverFamily) -> bool {
+        self.actions.iter().any(|a| a.solver == f)
     }
 
     /// C(m+k−1, k) — the reduced-space cardinality formula (eq. 12).
@@ -152,6 +271,42 @@ mod tests {
         assert_eq!(ActionSpace::reduced_cardinality(4, 4), 35);
         let cut = 1.0 - 35.0 / 256.0;
         assert!(cut > 0.86 && cut < 0.87);
+        // the reduced space is the LU family only
+        assert!(r.has_family(SolverFamily::LuIr));
+        assert!(!r.has_family(SolverFamily::CgIr));
+    }
+
+    #[test]
+    fn extended_space_doubles_reduced_and_keeps_lu_prefix() {
+        let r = ActionSpace::reduced();
+        let e = ActionSpace::extended();
+        assert_eq!(e.len(), 70);
+        // LU block first, indices unchanged vs reduced()
+        for (i, a) in r.actions.iter().enumerate() {
+            assert_eq!(&e.actions[i], a, "index {i}");
+        }
+        // CG block mirrors the tuples
+        for (i, a) in r.actions.iter().enumerate() {
+            let c = &e.actions[r.len() + i];
+            assert_eq!(c.solver, SolverFamily::CgIr);
+            assert_eq!(c.tuple(), a.tuple());
+        }
+        assert!(e.index_of(&Action::FP64).is_some());
+        assert!(e.index_of(&Action::CG_FP64).is_some());
+    }
+
+    #[test]
+    fn extended_top_k_keeps_both_fp64_anchors() {
+        let e = ActionSpace::extended_top_k(9);
+        assert_eq!(e.len(), 2 * ActionSpace::reduced_top_k(9).len());
+        assert!(e.index_of(&Action::FP64).is_some());
+        assert!(e.index_of(&Action::CG_FP64).is_some());
+        assert!(e.has_family(SolverFamily::CgIr));
+        // no duplicates
+        let mut set = std::collections::HashSet::new();
+        for a in &e.actions {
+            assert!(set.insert(*a), "duplicate {a}");
+        }
     }
 
     #[test]
@@ -177,31 +332,16 @@ mod tests {
     fn reduced_contains_extremes() {
         let r = ActionSpace::reduced();
         assert!(r.index_of(&Action::FP64).is_some());
-        let all_bf16 = Action {
-            u_f: Prec::Bf16,
-            u: Prec::Bf16,
-            u_g: Prec::Bf16,
-            u_r: Prec::Bf16,
-        };
+        let all_bf16 = Action::lu(Prec::Bf16, Prec::Bf16, Prec::Bf16, Prec::Bf16);
         assert!(r.index_of(&all_bf16).is_some());
         // the paper's flagship mixed config: low factorization, high residual
-        let flagship = Action {
-            u_f: Prec::Bf16,
-            u: Prec::Fp64,
-            u_g: Prec::Fp64,
-            u_r: Prec::Fp64,
-        };
+        let flagship = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64);
         assert!(r.index_of(&flagship).is_some());
     }
 
     #[test]
     fn non_monotone_rejected() {
-        let bad = Action {
-            u_f: Prec::Fp64,
-            u: Prec::Bf16,
-            u_g: Prec::Fp64,
-            u_r: Prec::Fp64,
-        };
+        let bad = Action::lu(Prec::Fp64, Prec::Bf16, Prec::Fp64, Prec::Fp64);
         assert!(!bad.is_monotone());
         assert!(ActionSpace::reduced().index_of(&bad).is_none());
     }
@@ -217,6 +357,18 @@ mod tests {
         // k_top = 0 disables pruning
         assert_eq!(ActionSpace::reduced_top_k(0).len(), 35);
         assert_eq!(ActionSpace::reduced_top_k(100).len(), 35);
+    }
+
+    #[test]
+    fn family_names_roundtrip() {
+        for f in SolverFamily::ALL {
+            assert_eq!(SolverFamily::by_name(f.name()), Some(f));
+        }
+        assert_eq!(SolverFamily::by_name("qr-ir"), None);
+        // action rendering: LU keeps the bare tuple, CG is prefixed
+        assert_eq!(Action::FP64.name(), "(fp64,fp64,fp64,fp64)");
+        assert_eq!(Action::CG_FP64.name(), "cg(fp64,fp64,fp64,fp64)");
+        assert_eq!(Action::FP64.with_solver(SolverFamily::CgIr), Action::CG_FP64);
     }
 
     #[test]

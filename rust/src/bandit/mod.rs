@@ -2,7 +2,8 @@
 //! (§3, Alg. 1) instantiated for GMRES-IR (§4, Alg. 3).
 //!
 //! * [`action`] — the joint action space 𝒜 = 𝒜₁⁴ and its monotone
-//!   reduction (eq. 11–12): 256 → 35 configurations.
+//!   reduction (eq. 11–12): 256 → 35 configurations — extended with the
+//!   solver-family dimension (LU/GMRES-IR vs CG-IR; DESIGN.md §2d).
 //! * [`reward`] — the multi-objective reward (eq. 21–25).
 //! * [`qtable`] — tabular action-value estimator Q(s_d, a) with the
 //!   incremental update (eq. 6/27) and both learning-rate schedules.
@@ -17,7 +18,7 @@ pub mod qtable;
 pub mod reward;
 pub mod trainer;
 
-pub use action::{Action, ActionSpace};
+pub use action::{Action, ActionSpace, SolverFamily};
 pub use policy::{epsilon_at, select_action};
 pub use qtable::QTable;
 pub use reward::{reward, RewardInputs};

@@ -4,11 +4,13 @@
 //! eq. (6)/(27): Q ← Q + α (R − Q). Supports the fixed-α schedule the
 //! paper uses in §5 (α = 0.5) and the 1/N(s,a) visit-count schedule of
 //! Alg. 1 line 13. Persists to JSON together with its action list so a
-//! trained policy is self-describing.
+//! trained policy is self-describing. Since policy schema v2 each
+//! serialized action is a 5-tuple `[family, u_f, u, u_g, u_r]` — the
+//! solver family rides in front of the four precisions.
 
 use anyhow::{bail, Result};
 
-use crate::bandit::action::{Action, ActionSpace};
+use crate::bandit::action::{Action, ActionSpace, SolverFamily};
 use crate::chop::Prec;
 use crate::util::json::{self, Value};
 
@@ -128,12 +130,9 @@ impl QTable {
                         .actions
                         .iter()
                         .map(|a| {
-                            Value::Arr(
-                                a.tuple()
-                                    .iter()
-                                    .map(|p| json::s(p.name()))
-                                    .collect(),
-                            )
+                            let mut parts = vec![json::s(a.solver.name())];
+                            parts.extend(a.tuple().iter().map(|p| json::s(p.name())));
+                            Value::Arr(parts)
                         })
                         .collect(),
                 ),
@@ -151,17 +150,24 @@ impl QTable {
         let mut actions = Vec::new();
         for a in v.get("actions")?.as_arr()? {
             let parts = a.as_arr()?;
-            if parts.len() != 4 {
-                bail!("action tuple must have 4 precisions");
+            if parts.len() != 5 {
+                bail!(
+                    "action tuple must have 5 entries [family, u_f, u, u_g, u_r], got {} \
+                     (pre-v2 4-tuple layout?)",
+                    parts.len()
+                );
             }
-            let p: Vec<Prec> = parts
+            let fam_name = parts[0].as_str()?;
+            let solver = SolverFamily::by_name(fam_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown solver family {fam_name:?}"))?;
+            let p: Vec<Prec> = parts[1..]
                 .iter()
                 .map(|x| {
                     Prec::by_name(x.as_str()?)
                         .ok_or_else(|| anyhow::anyhow!("unknown precision {:?}", x))
                 })
                 .collect::<Result<_>>()?;
-            actions.push(Action { u_f: p[0], u: p[1], u_g: p[2], u_r: p[3] });
+            actions.push(Action { solver, u_f: p[0], u: p[1], u_g: p[2], u_r: p[3] });
         }
         let space = ActionSpace { actions };
         let q: Vec<f64> = v
@@ -255,6 +261,29 @@ mod tests {
                 assert_eq!(back.visits(s, a), t.visits(s, a));
             }
         }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_solver_family() {
+        // extended space: the serialized 5-tuples must carry the family
+        let mut t = QTable::new(2, ActionSpace::extended_top_k(9));
+        t.update(1, t.space.len() - 1, 3.5, 1.0); // a CG action
+        let text = t.to_json().to_string();
+        assert!(text.contains("\"cg-ir\""), "family missing from JSON: {text}");
+        assert!(text.contains("\"lu-ir\""));
+        let back = QTable::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.space.actions, t.space.actions);
+        assert_eq!(back.q(1, t.space.len() - 1), 3.5);
+        // a 4-tuple (pre-v2) action list is rejected loudly
+        let legacy = text.replacen("[\"lu-ir\",", "[", 1);
+        assert_ne!(legacy, text);
+        let err = QTable::from_json(&crate::util::json::parse(&legacy).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("5 entries"), "{err}");
+        // an unknown family name is rejected loudly
+        let bad = text.replacen("\"cg-ir\"", "\"qr-ir\"", 1);
+        assert_ne!(bad, text);
+        let err = QTable::from_json(&crate::util::json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown solver family"), "{err}");
     }
 
     #[test]

@@ -3,7 +3,14 @@
 //!   R(s_d, a) = w₂ f_precision + w₁ f_accuracy − w₃ f_penalty
 //!
 //! * f_precision (eq. 22): rewards low-precision steps, discounted by the
-//!   system's conditioning — Σ_p t_FP64 / (t_p (1 + log10 max(κ, 1))).
+//!   system's conditioning — Σ_p w_step · t_FP64 / (t_p (1 + log10 max(κ, 1))).
+//!   The per-step weights encode each family's cost model (DESIGN.md
+//!   §2d): the LU family keeps the paper's equal weights (the O(n³)
+//!   factorization, the O(n²) GMRES matvecs, and the O(n²) residual are
+//!   all dense-BLAS bound); the CG family has **no factorization** and
+//!   its cost is dominated by the u_g matvecs, so its weights shift onto
+//!   the inner-solver slot — (0.5, 0.5, 2.0, 1.0) over (u_f, u, u_g,
+//!   u_r), summing to 4 so rewards stay comparable across families.
 //! * f_accuracy (eq. 24): −C₁ (min(log10 max(ferr, ε), θ) +
 //!   min(log10 max(nbe, ε), θ)) — positive for small errors, truncated at
 //!   θ so catastrophic errors don't dominate the scale.
@@ -14,7 +21,7 @@
 //! `fail_reward` — the environment's "this configuration is unusable"
 //! signal.
 
-use crate::bandit::action::Action;
+use crate::bandit::action::{Action, SolverFamily};
 use crate::chop::Prec;
 use crate::util::config::Config;
 
@@ -29,14 +36,29 @@ pub struct RewardInputs {
     pub failed: bool,
 }
 
-/// f_precision (eq. 22).
+/// Per-step cost-model weights over (u_f, u, u_g, u_r) — each family's
+/// share of work per slot, normalized to sum to 4 so an all-FP64 action
+/// scores 4/(1+log₁₀κ) under either family (cross-family comparability).
+pub fn step_weights(family: SolverFamily) -> [f64; 4] {
+    match family {
+        // equal weights: the paper's eq. 22 as-is
+        SolverFamily::LuIr => [1.0, 1.0, 1.0, 1.0],
+        // no factorization; u_g matvecs dominate (one per PCG iteration),
+        // the residual is one more matvec, u_f/u are O(n) vector work
+        SolverFamily::CgIr => [0.5, 0.5, 2.0, 1.0],
+    }
+}
+
+/// f_precision (eq. 22), weighted by the family's cost model.
 pub fn f_precision(action: &Action, kappa: f64) -> f64 {
     let t64 = Prec::Fp64.t() as f64;
     let discount = 1.0 + kappa.max(1.0).log10();
+    let w = step_weights(action.solver);
     action
         .tuple()
         .iter()
-        .map(|p| t64 / (p.t() as f64 * discount))
+        .zip(w)
+        .map(|(p, wi)| wi * t64 / (p.t() as f64 * discount))
         .sum()
 }
 
@@ -82,12 +104,7 @@ mod tests {
     #[test]
     fn f_precision_prefers_low_precision() {
         let all64 = Action::FP64;
-        let all16 = Action {
-            u_f: Prec::Bf16,
-            u: Prec::Bf16,
-            u_g: Prec::Bf16,
-            u_r: Prec::Bf16,
-        };
+        let all16 = Action::lu(Prec::Bf16, Prec::Bf16, Prec::Bf16, Prec::Bf16);
         assert!(f_precision(&all16, 10.0) > f_precision(&all64, 10.0));
         // all-FP64 at kappa=1: 4 * 53/53 / 1 = 4
         assert!((f_precision(&all64, 1.0) - 4.0).abs() < 1e-12);
@@ -96,13 +113,34 @@ mod tests {
     }
 
     #[test]
+    fn cg_cost_model_weights_matvec_slot() {
+        // families agree on the all-FP64 anchor ...
+        assert!((f_precision(&Action::CG_FP64, 1.0) - 4.0).abs() < 1e-12);
+        assert_eq!(step_weights(SolverFamily::LuIr).iter().sum::<f64>(), 4.0);
+        assert_eq!(step_weights(SolverFamily::CgIr).iter().sum::<f64>(), 4.0);
+        // ... but CG pays (and earns) most through u_g: lowering u_g
+        // yields a bigger f_precision gain than lowering u_f, the
+        // opposite emphasis of the factorization-dominated LU family.
+        let cg_low_g = Action::cg(Prec::Fp64, Prec::Fp64, Prec::Fp64, Prec::Fp64);
+        let mut lower_g = cg_low_g;
+        lower_g.u_g = Prec::Bf16;
+        let mut lower_f = cg_low_g;
+        lower_f.u_f = Prec::Bf16;
+        let gain_g = f_precision(&lower_g, 1.0) - f_precision(&cg_low_g, 1.0);
+        let gain_f = f_precision(&lower_f, 1.0) - f_precision(&cg_low_g, 1.0);
+        assert!(gain_g > gain_f, "u_g gain {gain_g} must beat u_f gain {gain_f}");
+        // for LU the same comparison is equal-weight
+        let lu = Action::FP64;
+        let mut lu_g = lu;
+        lu_g.u_g = Prec::Bf16;
+        let mut lu_f = lu;
+        lu_f.u_f = Prec::Bf16;
+        assert!((f_precision(&lu_g, 1.0) - f_precision(&lu_f, 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn f_precision_discounted_by_conditioning() {
-        let a = Action {
-            u_f: Prec::Bf16,
-            u: Prec::Fp32,
-            u_g: Prec::Fp64,
-            u_r: Prec::Fp64,
-        };
+        let a = Action::lu(Prec::Bf16, Prec::Fp32, Prec::Fp64, Prec::Fp64);
         let low = f_precision(&a, 1e2);
         let high = f_precision(&a, 1e8);
         // eq. 22: the (1 + log10 kappa) denominator shrinks the incentive
@@ -164,12 +202,7 @@ mod tests {
         // accuracy and a few iterations, W2 must rank the cheap action
         // higher than W1 does relative to all-FP64.
         let mut c = cfg();
-        let cheap = Action {
-            u_f: Prec::Bf16,
-            u: Prec::Fp64,
-            u_g: Prec::Fp64,
-            u_r: Prec::Fp64,
-        };
+        let cheap = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64);
         // plausible outcomes at kappa=1e2:
         let cheap_out = inputs(1e-13, 1e-16, 6, 1e2);
         let fp64_out = inputs(1e-15, 1e-17, 2, 1e2);
@@ -186,7 +219,8 @@ mod tests {
         use crate::util::proptest::{check, gen};
         let c = cfg();
         check("reward_monotone", 13, 300, |rng| {
-            let a = ActionSpace::reduced().actions[rng.below(35)];
+            // both families: the monotonicity contract is family-blind
+            let a = ActionSpace::extended().actions[rng.below(70)];
             let kappa = 10f64.powf(rng.uniform_in(0.0, 10.0));
             let e1 = 10f64.powf(rng.uniform_in(-16.0, 1.0));
             let e2 = e1 * 10f64.powf(rng.uniform_in(0.1, 3.0));

@@ -18,13 +18,14 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::bandit::action::ActionSpace;
+use crate::bandit::action::{ActionSpace, SolverFamily};
 use crate::bandit::policy::{epsilon_at, select_action};
 use crate::bandit::qtable::QTable;
 use crate::bandit::reward::{reward, RewardInputs};
 use crate::chop::Prec;
 use crate::features::Discretizer;
 use crate::gen::Problem;
+use crate::solver::family::solve_refinement;
 use crate::solver::ir::{gmres_ir_prefactored, SolveOutcome};
 use crate::solver::{LuHandle, ProblemSession, SolverBackend};
 use crate::util::config::Config;
@@ -125,14 +126,20 @@ impl SolveCache {
         self.misses += 1;
         let p = &problems[pi];
         let session = ProblemSession::new(&p.system);
-        let fi = action.u_f as usize;
-        let slot = self
-            .factor_memo
-            .entry((pi, fi))
-            .or_insert_with(|| backend.lu_factor(&session, action.u_f).ok());
-        let out = match slot.as_ref() {
-            Some(f) => gmres_ir_prefactored(backend, &session, p, action, cfg, Some(f))?,
-            None => SolveOutcome::failure(p.n),
+        let out = if action.solver == SolverFamily::CgIr {
+            // factorization-free family: nothing to memoize besides the
+            // outcome itself
+            solve_refinement(backend, &session, p, action, cfg, None)?
+        } else {
+            let fi = action.u_f as usize;
+            let slot = self
+                .factor_memo
+                .entry((pi, fi))
+                .or_insert_with(|| backend.lu_factor(&session, action.u_f).ok());
+            match slot.as_ref() {
+                Some(f) => gmres_ir_prefactored(backend, &session, p, action, cfg, Some(f))?,
+                None => SolveOutcome::failure(p.n),
+            }
         };
         let c = CachedOutcome::of(&out);
         self.map.insert((pi, ai), c);
@@ -186,18 +193,25 @@ impl SolveCache {
                 let mut out = Vec::with_capacity(ais.len());
                 for &ai in ais {
                     let action = &space.actions[ai];
-                    let fi = action.u_f as usize;
-                    if factors[fi].is_none() {
-                        factors[fi] =
-                            Some(backend.lu_factor(&session, Prec::from_index(fi)).ok());
-                    }
-                    let o = match factors[fi].as_ref().unwrap() {
-                        Some(f) => {
-                            gmres_ir_prefactored(backend, &session, p, action, cfg, Some(f))?
+                    let o = if action.solver == SolverFamily::CgIr {
+                        // factorization-free family: straight dispatch
+                        // (the session still shares its chopped copies
+                        // across the CG actions of this problem)
+                        solve_refinement(backend, &session, p, action, cfg, None)?
+                    } else {
+                        let fi = action.u_f as usize;
+                        if factors[fi].is_none() {
+                            factors[fi] =
+                                Some(backend.lu_factor(&session, Prec::from_index(fi)).ok());
                         }
-                        // factorization breakdown: same failure outcome
-                        // gmres_ir would produce
-                        None => SolveOutcome::failure(p.n),
+                        match factors[fi].as_ref().unwrap() {
+                            Some(f) => {
+                                gmres_ir_prefactored(backend, &session, p, action, cfg, Some(f))?
+                            }
+                            // factorization breakdown: same failure outcome
+                            // gmres_ir would produce
+                            None => SolveOutcome::failure(p.n),
+                        }
                     };
                     out.push(((*pi, ai), CachedOutcome::of(&o)));
                 }
@@ -216,17 +230,26 @@ impl SolveCache {
 /// Version of the policy-JSON schema written by [`TrainedPolicy::save`].
 /// Bump whenever the serialized layout or its semantics change; loading
 /// rejects any other version loudly instead of misreading the file.
-pub const POLICY_SCHEMA_VERSION: usize = 1;
+///
+/// * v1 — 4-tuple actions (precisions only; pre-solver-family)
+/// * v2 — 5-tuple actions `[family, u_f, u, u_g, u_r]`; the
+///   `action_space_hash` covers the family dimension
+pub const POLICY_SCHEMA_VERSION: usize = 2;
 
-/// Order-sensitive FNV-1a over the action list (each action as its four
-/// precision indices). A policy JSON carries this hash so a policy
-/// trained against one action space can never be silently applied to
-/// another (e.g. after a `k_top` change reorders the reduced list).
+/// Order-sensitive FNV-1a over the action list (each action as its
+/// solver family followed by its four precision indices). A policy JSON
+/// carries this hash so a policy trained against one action space can
+/// never be silently applied to another (e.g. after a `k_top` change
+/// reorders the reduced list, or a family-swapped list with identical
+/// precision tuples).
 pub fn action_space_hash(space: &ActionSpace) -> u64 {
     const FNV_OFFSET: u64 = 0xcbf29ce484222325;
     const FNV_PRIME: u64 = 0x100000001b3;
     let mut h = FNV_OFFSET;
     for a in &space.actions {
+        // family byte offset past the precision codes so (family, prec)
+        // streams can never collide
+        h = (h ^ (a.solver as u64 + 0x10)).wrapping_mul(FNV_PRIME);
         for p in a.tuple() {
             h = (h ^ (p as u64 + 1)).wrapping_mul(FNV_PRIME);
         }
@@ -278,7 +301,8 @@ impl TrainedPolicy {
         if ver != POLICY_SCHEMA_VERSION {
             bail!(
                 "unsupported policy schema_version {ver} (this build reads version \
-                 {POLICY_SCHEMA_VERSION}); retrain the policy or use a matching binary"
+                 {POLICY_SCHEMA_VERSION}; v1 predates the solver-family action \
+                 encoding); retrain the policy or use a matching binary"
             );
         }
         let qtable = QTable::from_json(v.get("qtable")?)?;
@@ -322,8 +346,19 @@ impl TrainedPolicy {
 
 /// Alg.-3 trainer. Borrows a [`SolveCache`] so multiple trainings (e.g.
 /// W1 and W2 at the same τ) share solve outcomes.
+///
+/// The action space routes on the dataset (DESIGN.md §2d): an all-SPD
+/// training set (`Problem::spd`, e.g. `gen::sparse_dataset`) trains over
+/// the two-family **extended** space — CG-IR is only meaningful on SPD
+/// systems, and the context features carry no SPD bit the policy could
+/// condition on, so mixed datasets stay LU-only.
 pub struct Trainer<'a> {
     pub cfg: &'a Config,
+    /// The action space of the **last** `train` call (dataset-derived:
+    /// recomputed via [`Trainer::space_for`] at the start of every
+    /// `train`, clobbering whatever was here). Read it *after* training
+    /// — e.g. a dense run reports 10 actions, an SPD run 20. Setting it
+    /// by hand has no effect; use `cfg.families` to pin the routing.
     pub space: ActionSpace,
     pub cache: &'a mut SolveCache,
 }
@@ -334,6 +369,19 @@ impl<'a> Trainer<'a> {
             cfg,
             space: ActionSpace::reduced_top_k(cfg.k_top),
             cache,
+        }
+    }
+
+    /// The action space `train` will use for this dataset: extended
+    /// (both families) iff every problem is SPD and `cfg.families` is
+    /// "auto". `families = "lu-only"` pins the paper's LU-only space
+    /// everywhere (the §5.3 repro tables use this for fidelity).
+    pub fn space_for(cfg: &Config, problems: &[Problem]) -> ActionSpace {
+        let all_spd = !problems.is_empty() && problems.iter().all(|p| p.spd);
+        if all_spd && cfg.families != "lu-only" {
+            ActionSpace::extended_top_k(cfg.k_top)
+        } else {
+            ActionSpace::reduced_top_k(cfg.k_top)
         }
     }
 
@@ -351,6 +399,8 @@ impl<'a> Trainer<'a> {
         quiet: bool,
     ) -> Result<(TrainedPolicy, EpisodeTrace)> {
         let cfg = self.cfg;
+        // dataset-routed action space: both families on all-SPD sets
+        self.space = Trainer::space_for(cfg, problems);
         let disc = Discretizer::fit(
             problems,
             cfg.bins_kappa,
@@ -364,8 +414,13 @@ impl<'a> Trainer<'a> {
 
         // §Perf: exhaustive per-problem precompute with LU sharing when
         // the action space is small enough that training would visit
-        // (almost) everything anyway.
-        if self.space.len() <= 12 {
+        // (almost) everything anyway. The cap doubles for the extended
+        // space (2 families × (k_top=9 ⇒ 10) actions) and only then —
+        // LU-only datasets keep the historical threshold, so raising it
+        // for CG cannot flip an existing LU-only config from
+        // incremental training to a full N×|𝒜| sweep.
+        let precompute_cap = if self.space.has_family(SolverFamily::CgIr) { 24 } else { 12 };
+        if self.space.len() <= precompute_cap {
             let space = self.space.clone();
             self.cache.precompute(backend, problems, &space, cfg)?;
         }
@@ -431,7 +486,7 @@ impl<'a> Trainer<'a> {
 mod tests {
     use super::*;
     use crate::backend_native::NativeBackend;
-    use crate::gen::dense_dataset;
+    use crate::gen::{dense_dataset, sparse_dataset};
 
     fn quick_cfg() -> Config {
         let mut c = Config::tiny();
@@ -670,13 +725,13 @@ mod tests {
         let text = policy.to_json().to_string();
 
         // wrong version
-        let bad = text.replacen("\"schema_version\":1.0", "\"schema_version\":99.0", 1);
+        let bad = text.replacen("\"schema_version\":2.0", "\"schema_version\":99.0", 1);
         assert_ne!(bad, text);
         let err = TrainedPolicy::from_json(&json::parse(&bad).unwrap()).unwrap_err();
         assert!(err.to_string().contains("schema_version"), "{err}");
 
         // missing version (schema_version sorts last in the object)
-        let missing = text.replacen(",\"schema_version\":1.0", "", 1);
+        let missing = text.replacen(",\"schema_version\":2.0", "", 1);
         assert_ne!(missing, text);
         let err = TrainedPolicy::from_json(&json::parse(&missing).unwrap()).unwrap_err();
         assert!(err.to_string().contains("schema_version"), "{err}");
@@ -687,6 +742,67 @@ mod tests {
         assert_ne!(tampered, text);
         let err = TrainedPolicy::from_json(&json::parse(&tampered).unwrap()).unwrap_err();
         assert!(err.to_string().contains("action-space hash"), "{err}");
+    }
+
+    #[test]
+    fn spd_dataset_routes_to_extended_space_dense_stays_lu_only() {
+        let mut cfg = quick_cfg();
+        cfg.size_min = 40;
+        cfg.size_max = 56;
+        cfg.episodes = 12;
+        let dense = dense_dataset(&cfg, 4, 600);
+        let sparse = sparse_dataset(&cfg, 4, 600);
+        assert!(sparse.iter().all(|p| p.spd));
+        assert!(dense.iter().all(|p| !p.spd));
+        // static routing helper agrees with what train() installs
+        assert!(!Trainer::space_for(&cfg, &dense).has_family(SolverFamily::CgIr));
+        assert!(Trainer::space_for(&cfg, &sparse).has_family(SolverFamily::CgIr));
+        // families = "lu-only" pins the paper's space even on SPD sets
+        // (the sparse repro tables rely on this opt-out)
+        let mut lu_cfg = cfg.clone();
+        lu_cfg.families = "lu-only".to_string();
+        assert!(!Trainer::space_for(&lu_cfg, &sparse).has_family(SolverFamily::CgIr));
+
+        let backend = NativeBackend::new();
+        let mut cache = SolveCache::new();
+        let mut tr = Trainer::new(&cfg, &mut cache);
+        let (policy, _) = tr.train(&backend, &sparse, true).unwrap();
+        assert!(policy.qtable.space.has_family(SolverFamily::CgIr));
+        assert!(policy.qtable.space.has_family(SolverFamily::LuIr));
+        assert_eq!(
+            policy.qtable.space.len(),
+            2 * ActionSpace::reduced_top_k(cfg.k_top).len()
+        );
+        // CG actions were actually exercised (precompute sweeps all)
+        let visited_cg = (0..policy.qtable.n_states).any(|s| {
+            policy.qtable.space.actions.iter().enumerate().any(|(ai, a)| {
+                a.solver == SolverFamily::CgIr && policy.qtable.visits(s, ai) > 0
+            })
+        });
+        assert!(visited_cg, "extended training never tried a CG action");
+
+        let mut cache2 = SolveCache::new();
+        let mut tr2 = Trainer::new(&cfg, &mut cache2);
+        let (policy_d, _) = tr2.train(&backend, &dense, true).unwrap();
+        assert!(!policy_d.qtable.space.has_family(SolverFamily::CgIr));
+        // the two spaces hash differently — policies cannot cross-load
+        assert_ne!(
+            action_space_hash(&policy.qtable.space),
+            action_space_hash(&policy_d.qtable.space)
+        );
+    }
+
+    #[test]
+    fn family_swapped_spaces_hash_differently() {
+        let lu = ActionSpace::reduced_top_k(9);
+        let cg = ActionSpace {
+            actions: lu
+                .actions
+                .iter()
+                .map(|a| a.with_solver(SolverFamily::CgIr))
+                .collect(),
+        };
+        assert_ne!(action_space_hash(&lu), action_space_hash(&cg));
     }
 
     #[test]

@@ -48,7 +48,9 @@ impl EvalRecord {
 }
 
 /// Evaluate a trained policy (or the FP64 baseline when `policy` is None)
-/// over a test set.
+/// over a test set. Actions dispatch on their [`crate::bandit::action::SolverFamily`]
+/// — a policy trained over the extended space may route individual
+/// systems to the CG-IR engine.
 ///
 /// Problems are solved in parallel across `PA_THREADS` workers — the
 /// stateless backend is shared, each worker opens its own per-problem
@@ -61,12 +63,37 @@ pub fn evaluate(
     policy: Option<&TrainedPolicy>,
     cfg: &Config,
 ) -> Result<Vec<EvalRecord>> {
+    evaluate_each(backend, problems, cfg, |p| match policy {
+        Some(pol) => pol.select(p),
+        None => Action::FP64,
+    })
+}
+
+/// Evaluate one fixed action over a test set — the head-to-head suite's
+/// per-family baseline arms (e.g. [`Action::FP64`] vs
+/// [`Action::CG_FP64`]). Same parallelism/determinism contract as
+/// [`evaluate`].
+pub fn evaluate_with_action(
+    backend: &dyn SolverBackend,
+    problems: &[Problem],
+    action: Action,
+    cfg: &Config,
+) -> Result<Vec<EvalRecord>> {
+    evaluate_each(backend, problems, cfg, move |_| action)
+}
+
+/// The one per-problem solve/record pipeline both entry points share —
+/// only the action choice differs, so the arms of a head-to-head
+/// comparison can never drift apart.
+fn evaluate_each(
+    backend: &dyn SolverBackend,
+    problems: &[Problem],
+    cfg: &Config,
+    pick: impl Fn(&Problem) -> Action + Sync,
+) -> Result<Vec<EvalRecord>> {
     parallel_map(problems.len(), |i| {
         let p = &problems[i];
-        let action = match policy {
-            Some(pol) => pol.select(p),
-            None => Action::FP64,
-        };
+        let action = pick(p);
         let o = gmres_ir(backend, p, &action, cfg)?;
         Ok(EvalRecord::from_outcome(p, action, &o))
     })
@@ -154,7 +181,7 @@ mod tests {
     use super::*;
     use crate::backend_native::NativeBackend;
     use crate::bandit::{SolveCache, Trainer};
-    use crate::gen::dense_dataset;
+    use crate::gen::{dense_dataset, sparse_dataset};
 
     fn cfg() -> Config {
         let mut c = Config::tiny();
@@ -197,6 +224,34 @@ mod tests {
         assert!((usage.total() - 4.0).abs() < 1e-12, "rows sum to 4");
         let s = summarize(&recs, None, c.tau_base, true);
         assert!(s.xi >= 0.0 && s.xi <= 1.0);
+    }
+
+    #[test]
+    fn forced_action_eval_covers_both_families() {
+        // the head-to-head arms: one fixed action per run, both families
+        let mut c = cfg();
+        c.size_min = 40;
+        c.size_max = 56;
+        let problems = sparse_dataset(&c, 4, 910);
+        let be = NativeBackend::new();
+        let lu = evaluate_with_action(&be, &problems, Action::FP64, &c).unwrap();
+        let cg = evaluate_with_action(&be, &problems, Action::CG_FP64, &c).unwrap();
+        assert_eq!(lu.len(), 4);
+        assert_eq!(cg.len(), 4);
+        for r in &lu {
+            assert_eq!(r.action, Action::FP64);
+            assert!(!r.failed);
+        }
+        for r in &cg {
+            assert_eq!(r.action, Action::CG_FP64);
+            // severely ill-conditioned SPD systems: CG may stagnate
+            // short of τ, but it must report coherently
+            if r.failed {
+                assert!(r.eps_max.is_infinite());
+            } else {
+                assert!(r.nbe.is_finite());
+            }
+        }
     }
 
     #[test]

@@ -14,11 +14,13 @@ use anyhow::Result;
 use std::time::Instant;
 
 use crate::backend_native::NativeBackend;
+use crate::bandit::action::{Action, SolverFamily};
 use crate::bandit::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};
-use crate::coordinator::eval::{evaluate, EvalRecord};
+use crate::coordinator::eval::{evaluate, evaluate_with_action, summarize, EvalRecord};
 use crate::gen::{dense_dataset, sparse_dataset, Problem};
 use crate::solver::SolverBackend;
 use crate::util::config::{Config, Weights};
+use crate::util::json::{self, Value};
 
 /// Everything one suite run produces.
 pub struct SuiteResult {
@@ -150,6 +152,133 @@ pub fn ablation_suite(cfg: &Config, quiet: bool) -> Result<SuiteResult> {
     dense_suite(&c, quiet)
 }
 
+/// Everything the LU-IR vs CG-IR head-to-head suite produces
+/// (EXPERIMENTS.md §Head-to-head): three arms over one held-out sparse
+/// SPD test set — the two per-family all-FP64 baselines plus a policy
+/// trained over the extended two-family action space.
+pub struct HeadToHead {
+    pub cfg: Config,
+    pub test: Vec<Problem>,
+    pub policy: TrainedPolicy,
+    /// forced [`Action::FP64`] (LU-IR baseline arm)
+    pub records_lu64: Vec<EvalRecord>,
+    /// forced [`Action::CG_FP64`] (CG-IR baseline arm)
+    pub records_cg64: Vec<EvalRecord>,
+    /// the trained extended policy's per-system picks
+    pub records_policy: Vec<EvalRecord>,
+    pub unique_solves: usize,
+    pub wall_seconds: f64,
+}
+
+impl HeadToHead {
+    /// Fraction of policy-served test systems routed to the CG family.
+    pub fn policy_cg_share(&self) -> f64 {
+        if self.records_policy.is_empty() {
+            return 0.0;
+        }
+        let cg = self
+            .records_policy
+            .iter()
+            .filter(|r| r.action.solver == SolverFamily::CgIr)
+            .count();
+        cg as f64 / self.records_policy.len() as f64
+    }
+
+    /// Machine-readable suite result (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Value {
+        let arm = |records: &[EvalRecord]| -> Value {
+            let s = summarize(records, None, self.cfg.tau_base, true);
+            let failures = records.iter().filter(|r| r.failed).count();
+            json::obj(vec![
+                ("count", json::num(s.count as f64)),
+                ("xi", json::num(s.xi)),
+                ("avg_ferr", json::num(s.avg_ferr)),
+                ("avg_nbe", json::num(s.avg_nbe)),
+                ("avg_outer", json::num(s.avg_outer)),
+                ("avg_inner", json::num(s.avg_gmres)),
+                ("failures", json::num(failures as f64)),
+                (
+                    "records",
+                    Value::Arr(
+                        records
+                            .iter()
+                            .map(|r| {
+                                json::obj(vec![
+                                    ("id", json::num(r.id as f64)),
+                                    ("n", json::num(r.n as f64)),
+                                    ("kappa", json::num(r.kappa)),
+                                    ("action", json::s(&r.action.name())),
+                                    ("ferr", json::num(r.ferr)),
+                                    ("nbe", json::num(r.nbe)),
+                                    ("outer", json::num(r.outer_iters as f64)),
+                                    ("inner", json::num(r.gmres_iters as f64)),
+                                    ("failed", json::num(r.failed as u8 as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        json::obj(vec![
+            ("suite", json::s("head_to_head_sparse_spd")),
+            ("n_train", json::num(self.cfg.n_train as f64)),
+            ("n_test", json::num(self.test.len() as f64)),
+            ("tau", json::num(self.cfg.tau)),
+            ("unique_solves", json::num(self.unique_solves as f64)),
+            ("wall_seconds", json::num(self.wall_seconds)),
+            ("policy_cg_share", json::num(self.policy_cg_share())),
+            ("lu_ir_fp64", arm(&self.records_lu64)),
+            ("cg_ir_fp64", arm(&self.records_cg64)),
+            ("policy_extended", arm(&self.records_policy)),
+        ])
+    }
+}
+
+/// The LU-IR vs CG-IR head-to-head suite (DESIGN.md §2d): train an
+/// extended-space policy on the §5.3 sparse SPD workload, then evaluate
+/// the two per-family all-FP64 baselines and the policy on the same
+/// held-out test set. Deterministic given `cfg.seed` and bit-identical
+/// for any `PA_THREADS` (the same contracts as the other suites).
+pub fn head_to_head_suite(cfg: &Config, quiet: bool) -> Result<HeadToHead> {
+    let t0 = Instant::now();
+    // the suite's whole point is the family comparison: force the
+    // two-family routing even if the caller's config pins lu-only
+    let mut auto_cfg = cfg.clone();
+    auto_cfg.families = "auto".to_string();
+    let cfg = &auto_cfg;
+    let train = sparse_dataset(cfg, cfg.n_train, 0);
+    let test = sparse_dataset(cfg, cfg.n_test, 1);
+    let backend = NativeBackend::new();
+    let mut cache = SolveCache::new();
+    if !quiet {
+        eprintln!(
+            "[head2head] training extended-space policy on {} sparse SPD systems ...",
+            train.len()
+        );
+    }
+    let (policy, _) = Trainer::new(cfg, &mut cache).train(&backend, &train, quiet)?;
+    if !quiet {
+        eprintln!(
+            "[head2head] evaluating 3 arms on {} held-out systems",
+            test.len()
+        );
+    }
+    let records_lu64 = evaluate_with_action(&backend, &test, Action::FP64, cfg)?;
+    let records_cg64 = evaluate_with_action(&backend, &test, Action::CG_FP64, cfg)?;
+    let records_policy = evaluate(&backend, &test, Some(&policy), cfg)?;
+    Ok(HeadToHead {
+        cfg: cfg.clone(),
+        test,
+        policy,
+        records_lu64,
+        records_cg64,
+        records_policy,
+        unique_solves: cache.unique_solves(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
 /// Suite over an externally supplied backend factory (used by the PJRT
 /// end-to-end example and the runtime integration tests).
 pub fn dense_suite_with_backend(
@@ -238,6 +367,34 @@ mod tests {
         }
         let total = r.records_w1.len() + r.records_w2.len();
         assert!(failures * 2 < total, "{failures}/{total} failures");
+    }
+
+    #[test]
+    fn head_to_head_suite_shapes_and_json() {
+        let mut c = cfg();
+        c.size_min = 40;
+        c.size_max = 60;
+        let r = head_to_head_suite(&c, true).unwrap();
+        assert_eq!(r.records_lu64.len(), c.n_test);
+        assert_eq!(r.records_cg64.len(), c.n_test);
+        assert_eq!(r.records_policy.len(), c.n_test);
+        // arms really are the forced per-family baselines
+        assert!(r.records_lu64.iter().all(|x| x.action == Action::FP64));
+        assert!(r.records_cg64.iter().all(|x| x.action == Action::CG_FP64));
+        // the policy was trained over both families
+        assert!(r.policy.qtable.space.has_family(SolverFamily::CgIr));
+        let share = r.policy_cg_share();
+        assert!((0.0..=1.0).contains(&share));
+        // JSON artifact carries all three arms
+        let text = r.to_json().to_string();
+        for key in ["lu_ir_fp64", "cg_ir_fp64", "policy_extended", "policy_cg_share"] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("n_test").unwrap().as_usize().unwrap(),
+            c.n_test
+        );
     }
 
     #[test]

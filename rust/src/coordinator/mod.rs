@@ -6,5 +6,5 @@ pub mod eval;
 pub mod experiments;
 pub mod repro;
 
-pub use eval::{evaluate, EvalRecord, EvalSummary, PrecisionUsage};
-pub use experiments::{dense_suite, sparse_suite, SuiteResult};
+pub use eval::{evaluate, evaluate_with_action, EvalRecord, EvalSummary, PrecisionUsage};
+pub use experiments::{dense_suite, head_to_head_suite, sparse_suite, HeadToHead, SuiteResult};

@@ -74,7 +74,14 @@ impl ReproContext {
     }
 
     pub fn sparse(&mut self, tau: f64) -> Result<&SuiteResult> {
-        Self::suite(&mut self.sparse, &self.cfg, tau, self.quiet, sparse_suite, "sparse")
+        // Paper fidelity: Tables 3–5 / Figs 9–12 reproduce the paper's
+        // LU-only-space experiment, so the sparse repro suites pin
+        // `families = "lu-only"` instead of the SPD auto-routing that
+        // would add CG-IR actions (the `head2head` suite is where the
+        // two families are compared — DESIGN.md §2d).
+        let mut cfg = self.cfg.clone();
+        cfg.families = "lu-only".to_string();
+        Self::suite(&mut self.sparse, &cfg, tau, self.quiet, sparse_suite, "sparse")
     }
 
     pub fn ablation(&mut self, tau: f64) -> Result<&SuiteResult> {
@@ -489,6 +496,11 @@ impl ReproContext {
                 "C(m+k-1,k) = C(7,4); cut {:.1}%",
                 100.0 * (1.0 - reduced.len() as f64 / full.len() as f64)
             ),
+        ]);
+        t.row(vec![
+            "extended (x families)".into(),
+            ActionSpace::extended().len().to_string(),
+            "2 families (lu-ir, cg-ir) x 35 — SPD datasets (DESIGN.md 2d)".into(),
         ]);
         t.render()
     }

@@ -159,6 +159,7 @@ mod tests {
             kappa_est,
             norm_inf,
             density: 1.0,
+            spd: false,
         }
     }
 

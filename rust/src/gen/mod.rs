@@ -39,6 +39,12 @@ pub struct Problem {
     pub norm_inf: f64,
     /// structural density (sparse sets; 1.0 for dense)
     pub density: f64,
+    /// known symmetric positive definite by construction (the §5.3
+    /// A₀A₀ᵀ+βI sets). Routes the trainer's action space: all-SPD
+    /// datasets train over both refinement families (CG-IR is only
+    /// meaningful on SPD systems — DESIGN.md §2d). False means
+    /// "unknown", not "indefinite".
+    pub spd: bool,
 }
 
 /// Dense randsvd matrix, mode 2 (eq. 31), σ_max = 1.
@@ -92,7 +98,9 @@ pub fn finish_system(
     let b = system.matvec(&x_true);
     let (kappa_est, norm_inf) = features_of_system(&system);
     let density = system.density();
-    Problem { id, system, b, x_true, n, kappa_target, kappa_est, norm_inf, density }
+    // spd defaults to false ("unknown"); generators with a structural
+    // guarantee (sparse_dataset) set it after construction
+    Problem { id, system, b, x_true, n, kappa_target, kappa_est, norm_inf, density, spd: false }
 }
 
 /// Dense-matrix convenience over [`finish_system`]; `density` is kept as
@@ -156,14 +164,19 @@ pub fn dense_dataset(cfg: &Config, count: usize, stream: u64) -> Vec<Problem> {
 
 /// The sparse dataset of §5.3. Problems carry their CSR form only — the
 /// solve path streams residuals/GMRES matvecs O(nnz) through it and
-/// densifies per session for the factorization alone.
+/// densifies per session for the factorization alone. Every system is
+/// SPD by construction (A₀A₀ᵀ + βI), so the dataset carries the `spd`
+/// marker that routes training to the extended two-family action space
+/// (LU-IR × CG-IR).
 pub fn sparse_dataset(cfg: &Config, count: usize, stream: u64) -> Vec<Problem> {
     let base = Rng::new(cfg.seed).fork(stream ^ 0x5A5A_5A5A);
     parallel_map(count, |i| {
         let mut rng = base.fork(i as u64);
         let n = cfg.size_min + rng.below(cfg.size_max - cfg.size_min + 1);
         let csr = sparse_spd(n, cfg.sparsity, cfg.sparse_beta, &mut rng);
-        finish_system(i, SystemInput::Sparse(csr), f64::NAN, &mut rng)
+        let mut p = finish_system(i, SystemInput::Sparse(csr), f64::NAN, &mut rng);
+        p.spd = true;
+        p
     })
 }
 
@@ -259,6 +272,7 @@ mod tests {
         let ps = sparse_dataset(&cfg, 2, 0);
         for p in &ps {
             assert!(p.system.is_sparse());
+            assert!(p.spd, "sparse SPD sets must carry the spd marker");
             assert_eq!(p.density, p.system.density());
             assert!(p.kappa_est.is_finite());
             assert_eq!(p.norm_inf.to_bits(), p.system.norm_inf().to_bits());

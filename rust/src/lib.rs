@@ -33,6 +33,13 @@
 //! for the LU factorization (bit-identical to the densified path; see
 //! DESIGN.md §2c).
 //!
+//! Refinement itself is pluggable behind
+//! [`solver::family::RefinementSolver`] (DESIGN.md §2d): an action is a
+//! (solver family × precision config) pair, dispatching to the paper's
+//! LU/GMRES-IR engine or to the matvec-only Jacobi-PCG CG-IR engine for
+//! SPD systems — which never densifies at all. SPD datasets train the
+//! bandit over both families; the `head2head` CLI suite compares them.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod api;

@@ -1,0 +1,295 @@
+//! Jacobi-preconditioned conjugate gradients in emulated precision — the
+//! inner solver of the CG-IR refinement family (`solver::family`,
+//! DESIGN.md §2d).
+//!
+//! The kernel is **operator-form only**: the matvec arrives as a closure
+//! (the session's cached chopped operator — dense or CSR, bit-identical
+//! either way), so CG never needs a materialized matrix, never densifies,
+//! and runs O(nnz) per iteration on sparse inputs. Emulation semantics
+//! mirror `linalg::gmres`: vectors are kept storage-rounded to the
+//! working precision `p`, dot products accumulate in f64 and round once,
+//! and every vector update rounds once per element. All reductions are
+//! sequential f64 sums and the matvec honors the row-parallel
+//! bit-identity contract, so the result is bit-identical for any
+//! `PA_THREADS` (locked by `tests/solver_family.rs`).
+//!
+//! Loss of positive definiteness (pᵀAp ≤ 0 — a non-SPD operator, or an
+//! emulated-precision collapse) is a deterministic *failure* outcome
+//! (`ok = false`), the CG analogue of an LU breakdown: the bandit's
+//! reward maps it to `fail_reward` rather than panicking.
+
+use crate::chop::{chop_p, Prec};
+use crate::linalg::dot;
+
+/// Outcome of one (non-restarted) PCG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub z: Vec<f64>,
+    /// inner iterations performed (= chopped matvecs; the unit of the
+    /// CG cost model's penalty term)
+    pub iters: usize,
+    /// final residual norm relative to the initial residual norm
+    pub relres: f64,
+    /// false on breakdown (non-SPD curvature, emulated overflow, NaN)
+    pub ok: bool,
+}
+
+/// Solve A z = r by Jacobi-preconditioned CG, everything in precision
+/// `p`.
+///
+/// * `matvec` — y = chop(Aₚ·xc) on an operand already rounded to `p`
+///   (the session's cached chopped operator).
+/// * `m_inv` — the inverse diagonal of A, pre-chopped to `p` (the caller
+///   builds it once per precision; entries must be finite).
+/// * `r` — the refinement residual (any precision; rounded to `p` on
+///   entry, mirroring how GMRES re-rounds through the preconditioner).
+/// * `tol` — relative residual target; `max_it` caps iterations.
+///
+/// The same stall guard as the GMRES kernel applies: in precision `p`
+/// the residual estimate bottoms out near `u_p·‖r‖`, and once three
+/// consecutive iterations fail to improve the best estimate by >10% the
+/// solve has hit its precision floor — more matvecs are pure waste and
+/// would only distort the iteration-count economics the reward sees.
+pub fn pcg_jacobi_op(
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    m_inv: &[f64],
+    r: &[f64],
+    tol: f64,
+    max_it: usize,
+    p: Prec,
+) -> CgResult {
+    debug_assert_eq!(m_inv.len(), n);
+    debug_assert_eq!(r.len(), n);
+
+    // res = chop(r), beta0 = ||res||_2 (chopped norm, as in the GMRES
+    // kernel's beta)
+    let mut res: Vec<f64> = r.iter().map(|x| chop_p(*x, p)).collect();
+    let beta0 = chop_p(dot(&res, &res).sqrt(), p);
+    if !beta0.is_finite() || beta0 == 0.0 {
+        return CgResult {
+            z: vec![0.0; n],
+            iters: 0,
+            relres: 0.0,
+            ok: beta0 == 0.0, // zero RHS is fine; NaN/inf is not
+        };
+    }
+
+    let mut z = vec![0.0f64; n];
+    // y = M⁻¹ res (Jacobi: elementwise), dir = y, rho = <res, y>
+    let mut y: Vec<f64> = res
+        .iter()
+        .zip(m_inv)
+        .map(|(ri, mi)| chop_p(ri * mi, p))
+        .collect();
+    let mut dir = y.clone();
+    let mut rho = chop_p(dot(&res, &y), p);
+    if !rho.is_finite() {
+        return CgResult { z, iters: 0, relres: 1.0, ok: false };
+    }
+
+    let mut j = 0usize;
+    let mut rnorm = beta0;
+    let mut ok = true;
+    let mut best = beta0;
+    let mut stall = 0u32;
+
+    while j < max_it && rnorm > tol * beta0 && ok && stall < 3 {
+        // dir is storage-rounded to p by construction
+        let q = matvec(&dir);
+        let pq = chop_p(dot(&dir, &q), p);
+        if !pq.is_finite() || pq <= 0.0 {
+            // curvature breakdown: not SPD (or emulated round-off
+            // collapsed the quadratic form) — deterministic failure
+            ok = false;
+            break;
+        }
+        let alpha = chop_p(rho / pq, p);
+        if !alpha.is_finite() {
+            ok = false;
+            break;
+        }
+        for (zi, di) in z.iter_mut().zip(&dir) {
+            *zi = chop_p(*zi + alpha * di, p);
+        }
+        for (ri, qi) in res.iter_mut().zip(&q) {
+            *ri = chop_p(*ri - alpha * qi, p);
+        }
+        j += 1;
+        rnorm = chop_p(dot(&res, &res).sqrt(), p);
+        if !rnorm.is_finite() {
+            ok = false;
+            break;
+        }
+        if rnorm < 0.9 * best {
+            best = rnorm;
+            stall = 0;
+        } else {
+            stall += 1;
+        }
+        // prepare the next direction (harmless extra work when the loop
+        // exits: dir is not read after)
+        for ((yi, ri), mi) in y.iter_mut().zip(&res).zip(m_inv) {
+            *yi = chop_p(ri * mi, p);
+        }
+        let rho_new = chop_p(dot(&res, &y), p);
+        if !rho_new.is_finite() || rho == 0.0 {
+            ok = false;
+            break;
+        }
+        let beta = chop_p(rho_new / rho, p);
+        for (di, yi) in dir.iter_mut().zip(&y) {
+            *di = chop_p(yi + beta * *di, p);
+        }
+        rho = rho_new;
+    }
+
+    let ok = ok && z.iter().all(|v| v.is_finite());
+    CgResult { z, iters: j, relres: rnorm / beta0, ok }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    /// SPD system with controllable diagonal dominance.
+    fn spd_system(n: usize, boost: f64, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut g = Mat::zeros(n, n);
+        for v in g.data.iter_mut() {
+            *v = rng.gauss() * 0.3;
+        }
+        // A = GᵀG + boost·I: SPD with smallest eigenvalue ≥ boost
+        let mut a = g.transpose().matmul(&g);
+        for i in 0..n {
+            a[(i, i)] += boost;
+        }
+        let xt: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = a.matvec(&xt);
+        (a, xt, b)
+    }
+
+    fn m_inv(a: &Mat, p: Prec) -> Vec<f64> {
+        a.diag()
+            .iter()
+            .map(|&d| chop_p(1.0 / chop_p(d, p), p))
+            .collect()
+    }
+
+    #[test]
+    fn fp64_converges_on_spd() {
+        let (a, xt, b) = spd_system(40, 2.0, 1);
+        let p = Prec::Fp64;
+        let m = m_inv(&a, p);
+        let res = pcg_jacobi_op(|x| a.matvec(x), 40, &m, &b, 1e-12, 200, p);
+        assert!(res.ok);
+        assert!(res.relres <= 1e-12, "relres {}", res.relres);
+        for (zi, xi) in res.z.iter().zip(&xt) {
+            assert!((zi - xi).abs() < 1e-9, "{zi} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn non_spd_operator_breaks_down_not_panics() {
+        // an indefinite matrix: CG's curvature test must fire
+        let mut a = Mat::eye(12);
+        a[(0, 0)] = -5.0;
+        let p = Prec::Fp64;
+        let m: Vec<f64> = vec![1.0; 12];
+        let b = vec![1.0; 12];
+        let res = pcg_jacobi_op(|x| a.matvec(x), 12, &m, &b, 1e-10, 50, p);
+        assert!(!res.ok);
+    }
+
+    #[test]
+    fn zero_rhs_is_ok_and_zero() {
+        let (a, _, _) = spd_system(10, 1.0, 3);
+        let m = m_inv(&a, Prec::Fp64);
+        let res = pcg_jacobi_op(|x| a.matvec(x), 10, &m, &vec![0.0; 10], 1e-10, 10, Prec::Fp64);
+        assert!(res.ok);
+        assert_eq!(res.iters, 0);
+        assert!(res.z.iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn nan_rhs_not_ok() {
+        let (a, _, _) = spd_system(10, 1.0, 4);
+        let m = m_inv(&a, Prec::Fp64);
+        let res =
+            pcg_jacobi_op(|x| a.matvec(x), 10, &m, &vec![f64::NAN; 10], 1e-10, 10, Prec::Fp64);
+        assert!(!res.ok);
+    }
+
+    #[test]
+    fn maxit_caps_iterations() {
+        let (a, _, b) = spd_system(30, 0.05, 5);
+        let m = m_inv(&a, Prec::Fp64);
+        let res = pcg_jacobi_op(|x| a.matvec(x), 30, &m, &b, 1e-14, 4, Prec::Fp64);
+        assert!(res.iters <= 4);
+        assert!(res.ok);
+    }
+
+    #[test]
+    fn low_precision_stalls_at_its_floor_without_failing() {
+        // bf16 CG cannot reach 1e-10; the stall guard must exit cleanly
+        // with ok = true and a meaningful partial correction.
+        let (a, _, b) = spd_system(24, 4.0, 6);
+        let p = Prec::Bf16;
+        let ac = a.chopped(p);
+        let m = m_inv(&a, p);
+        let mut bc = b.clone();
+        crate::chop::chop_slice(&mut bc, p);
+        let res = pcg_jacobi_op(
+            |x| crate::linalg::chopped_matvec_prechopped(&ac, x, p),
+            24,
+            &m,
+            &bc,
+            1e-10,
+            100,
+            p,
+        );
+        assert!(res.ok, "stall exit must not be a failure");
+        assert!(res.iters < 100, "stall guard should cap the work");
+        assert!(res.relres < 1.0, "some progress expected: {}", res.relres);
+    }
+
+    #[test]
+    fn chopped_csr_closure_matches_dense_bitwise() {
+        // the operator seam: CSR and dense closures must agree bit for
+        // bit at every precision (same contract as the GMRES kernel)
+        let (a, _, b) = spd_system(32, 1.5, 7);
+        for p in [Prec::Bf16, Prec::Tf32, Prec::Fp32, Prec::Fp64] {
+            let ac = a.chopped(p);
+            let csr = crate::sparse::Csr::from_dense(&a).chopped(p);
+            let m = m_inv(&a, p);
+            let mut bc = b.clone();
+            crate::chop::chop_slice(&mut bc, p);
+            let dense = pcg_jacobi_op(
+                |x| crate::linalg::chopped_matvec_prechopped(&ac, x, p),
+                32,
+                &m,
+                &bc,
+                1e-8,
+                60,
+                p,
+            );
+            let sparse = pcg_jacobi_op(
+                |x| csr.chopped_matvec_prechopped(x, p),
+                32,
+                &m,
+                &bc,
+                1e-8,
+                60,
+                p,
+            );
+            assert_eq!(dense.iters, sparse.iters, "{p}");
+            assert_eq!(dense.ok, sparse.ok, "{p}");
+            assert_eq!(dense.relres.to_bits(), sparse.relres.to_bits(), "{p}");
+            for (u, v) in dense.z.iter().zip(&sparse.z) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p}");
+            }
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! triangular solves, preconditioned GMRES, and Hager–Higham condition
 //! estimation.
 
+pub mod cg;
 pub mod condest;
 pub mod gmres;
 pub mod lu;
@@ -116,6 +117,13 @@ impl Mat {
 
     pub fn has_non_finite(&self) -> bool {
         self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// The main diagonal (a_00, ..., a_{n-1,n-1}) — the Jacobi
+    /// preconditioner's input (square matrices only).
+    pub fn diag(&self) -> Vec<f64> {
+        assert_eq!(self.n_rows, self.n_cols);
+        (0..self.n_rows).map(|i| self[(i, i)]).collect()
     }
 
     /// y = A x (f64). Row-parallel above [`PAR_MIN_ELEMS`]: each output

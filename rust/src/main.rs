@@ -5,9 +5,12 @@
 //!   train     train a bandit policy and save it (versioned JSON)
 //!   infer     load a policy and pick precision configs for fresh systems
 //!   solve     solve one A x = b through a served policy
+//!             (--solver auto|lu-ir|cg-ir picks the refinement family)
+//!   head2head LU-IR vs CG-IR suite on the sparse SPD workload (JSON out)
 //!   repro     regenerate a paper table/figure (table2..6, fig2..4,
 //!             figs5_12, actions, all)
-//!   selftest  quick end-to-end sanity run (native + PJRT if artifacts)
+//!   selftest  quick end-to-end sanity run (native + PJRT if artifacts;
+//!             smokes both solver families)
 //!   help      this text
 //!
 //! Common options: --preset paper|small|tiny, --config file.toml,
@@ -18,8 +21,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use precision_autotune::api::Autotuner;
 use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::bandit::action::SolverFamily;
 use precision_autotune::bandit::TrainedPolicy;
 use precision_autotune::coordinator::eval::summarize;
+use precision_autotune::coordinator::experiments::head_to_head_suite;
 use precision_autotune::coordinator::repro::ReproContext;
 use precision_autotune::gen::{dense_dataset, sparse_dataset};
 use precision_autotune::linalg::Mat;
@@ -47,12 +52,19 @@ SUBCOMMANDS:
                 --policy results/policy.json [--count 5]
   solve       solve one system A x = b through the serving facade
                 --policy results/policy.json (omit => FP64 baseline)
+                --solver auto|lu-ir|cg-ir    refinement family (default
+                  auto = the policy's pick; cg-ir is matvec-only Jacobi-PCG
+                  refinement for SPD systems — never densifies)
                 --matrix a.txt --rhs b.txt   (whitespace/comma numbers;
                   one matrix row per line; omit => random demo system
                   controlled by --n / --kappa)
                 *.mtx inputs are auto-detected by extension and parsed
                   as Matrix Market (coordinate files solve sparse-natively
                   through the CSR path; array files solve dense)
+  head2head   LU-IR vs CG-IR on the sparse SPD workload: trains an
+                extended-space policy, evaluates both all-FP64 family
+                baselines + the policy on one held-out set
+                --out results/head_to_head.json
   repro       regenerate paper artifacts:
                 table2 table3 table4 table5 table6 fig2 fig3 fig4
                 figs5_12 actions all     [--out results/]
@@ -65,6 +77,9 @@ COMMON OPTIONS:
   --set k=v[,k=v...]          override any config key
   --tau 1e-6|1e-8             convergence tolerance
   --weights W1|W2             reward weights
+  --families auto|lu-only     action-space routing: auto trains all-SPD
+                              datasets over both solver families,
+                              lu-only pins the paper's LU-only space
   --episodes N  --seed N      training length / determinism
   --no-penalty                ablate f_penalty (§5.4)
   --backend native|pjrt       solver backend (default native)
@@ -279,11 +294,25 @@ fn run() -> Result<()> {
                 }
             };
             let sparse_input = system.is_sparse();
-            let rep = tuner.solve(system, &b)?;
+            // --solver auto: the policy's pick (or the FP64 LU baseline
+            // without a policy); lu-ir/cg-ir force the family while
+            // keeping the policy's precision configuration
+            let forced = match args.get("solver").unwrap_or("auto") {
+                "auto" => None,
+                name => Some(SolverFamily::by_name(name).ok_or_else(|| {
+                    anyhow!("unknown solver {name:?} (auto|lu-ir|cg-ir)")
+                })?),
+            };
+            let rep = match forced {
+                None => tuner.solve(system, &b)?,
+                // one feature pass: selection + solve share the f64 LU
+                Some(f) => tuner.solve_with_solver(system, &b, f)?,
+            };
             println!(
-                "backend={} policy={} n={} input={} nnz={} density={:.4}",
+                "backend={} policy={} solver={} n={} input={} nnz={} density={:.4}",
                 rep.backend,
                 if served { "served" } else { "none (FP64 baseline)" },
+                rep.solver,
                 rep.x.len(),
                 if sparse_input { "sparse(csr)" } else { "dense" },
                 rep.nnz,
@@ -315,6 +344,43 @@ fn run() -> Result<()> {
             if rep.failed {
                 bail!("solve failed (stop: {:?})", rep.stop);
             }
+            Ok(())
+        }
+        Some("head2head") => {
+            let cfg = Config::from_args(&args)?;
+            let out = args.get("out").unwrap_or("results/head_to_head.json");
+            let r = head_to_head_suite(&cfg, quiet)?;
+            let row = |name: &str, recs: &[precision_autotune::coordinator::eval::EvalRecord]| {
+                let s = summarize(recs, None, cfg.tau_base, true);
+                let failures = recs.iter().filter(|x| x.failed).count();
+                println!(
+                    "| {:<16} | {} | {} | {} | {} | {} |",
+                    name,
+                    pct(s.xi),
+                    sci2(s.avg_ferr),
+                    sci2(s.avg_nbe),
+                    fix2(s.avg_gmres),
+                    failures
+                );
+            };
+            println!("| arm              | xi | avg ferr | avg nbe | avg inner | failures |");
+            println!("|------------------|----|----------|---------|-----------|----------|");
+            row("lu-ir fp64", &r.records_lu64);
+            row("cg-ir fp64", &r.records_cg64);
+            row("policy (ext)", &r.records_policy);
+            println!(
+                "policy routed {:.0}% of systems to cg-ir; {} unique solves in {:.1}s",
+                100.0 * r.policy_cg_share(),
+                r.unique_solves,
+                r.wall_seconds
+            );
+            if let Some(dir) = std::path::Path::new(out).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(out, r.to_json().to_string()).with_context(|| format!("writing {out}"))?;
+            println!("suite JSON written to {out}");
             Ok(())
         }
         Some("repro") => {
@@ -434,6 +500,25 @@ fn run() -> Result<()> {
                 sci2(rep.nbe),
                 rep.backend
             );
+            // solver-family smoke: both engines on one sparse SPD system
+            {
+                use precision_autotune::bandit::action::Action;
+                use precision_autotune::gen::sparse_spd;
+                use precision_autotune::util::rng::Rng;
+                let mut rng = Rng::new(7);
+                let csr = sparse_spd(60, 0.05, 1.0, &mut rng);
+                let ones = vec![1.0; 60];
+                let b = csr.matvec(&ones);
+                let lu = tuner.solve_with_action(&csr, &b, Action::FP64)?;
+                let cg = tuner.solve_with_action(&csr, &b, Action::CG_FP64)?;
+                anyhow::ensure!(!lu.failed, "lu-ir family smoke failed: {:?}", lu.stop);
+                anyhow::ensure!(!cg.failed, "cg-ir family smoke failed: {:?}", cg.stop);
+                println!(
+                    "family smoke:   lu-ir nbe {} / cg-ir nbe {} (sparse SPD n=60)",
+                    sci2(lu.nbe),
+                    sci2(cg.nbe)
+                );
+            }
             if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
                 let policy = tuner.policy().expect("trained above").clone();
                 let pjrt_tuner = Autotuner::builder()

@@ -1,0 +1,166 @@
+//! The pluggable refinement-solver family seam (DESIGN.md §2d).
+//!
+//! [`RefinementSolver`] sits between [`ProblemSession`] and the inner
+//! solve: a family owns step 1 (its "factorization" — LU, or the Jacobi
+//! diagonal) and step 3 (its inner solver — preconditioned GMRES, or
+//! Jacobi-PCG), while the shared Alg.-2 outer loop, the stopping
+//! criteria, and the metrics live in `solver::ir::refinement_loop`.
+//! Every consumer that used to hard-code GMRES-IR (trainer sweep,
+//! evaluator, serving facade, CLI) now dispatches through
+//! [`solve_refinement`] on the action's [`SolverFamily`].
+//!
+//! | | [`LuIrSolver`] | [`CgIrSolver`] |
+//! |---|---|---|
+//! | step 1 (u_f) | dense LU (densifies sparse inputs) | Jacobi inverse diagonal, O(nnz) |
+//! | step 3 (u_g) | left-preconditioned GMRES | Jacobi-PCG, matvec-only |
+//! | requires | any nonsingular A | SPD A (curvature breakdown otherwise) |
+//! | densifies | yes (factorization only) | **never** |
+//! | backend | [`SolverBackend`] steps (native or PJRT) | session operator (always native kernels) |
+//!
+//! The CG family ignores the backend handle by design: its whole value
+//! is the matvec-only data path, and the AOT/PJRT artifacts are
+//! dense-shaped (matvec-only graphs are future work). Passing a PJRT
+//! backend therefore runs CG actions on the native chopped kernels —
+//! semantically identical, since both backends share the `chop`
+//! bit-contract.
+
+use anyhow::Result;
+
+use crate::bandit::action::{Action, SolverFamily};
+use crate::gen::Problem;
+use crate::solver::ir::{cg_ir, gmres_ir_prefactored, SolveOutcome};
+use crate::solver::{LuHandle, ProblemSession, SolverBackend};
+use crate::util::config::Config;
+
+/// One refinement engine: everything between "here is a session over A
+/// and a precision configuration" and "here is the refined solution with
+/// its metrics".
+pub trait RefinementSolver: Send + Sync {
+    /// Which [`SolverFamily`] this engine implements.
+    fn family(&self) -> SolverFamily;
+
+    /// Human-readable engine name (logs, reports).
+    fn name(&self) -> &'static str;
+
+    /// Run one refinement solve inside the caller's session.
+    ///
+    /// `prefactored` is the LU family's factorization-sharing hook (the
+    /// trainer factors each (problem, u_f) once); families without a
+    /// factorization ignore it.
+    fn solve(
+        &self,
+        backend: &dyn SolverBackend,
+        session: &ProblemSession<'_>,
+        p: &Problem,
+        action: &Action,
+        cfg: &Config,
+        prefactored: Option<&LuHandle>,
+    ) -> Result<SolveOutcome>;
+}
+
+/// The paper's LU-preconditioned GMRES-IR engine.
+pub struct LuIrSolver;
+
+impl RefinementSolver for LuIrSolver {
+    fn family(&self) -> SolverFamily {
+        SolverFamily::LuIr
+    }
+
+    fn name(&self) -> &'static str {
+        "lu-ir"
+    }
+
+    fn solve(
+        &self,
+        backend: &dyn SolverBackend,
+        session: &ProblemSession<'_>,
+        p: &Problem,
+        action: &Action,
+        cfg: &Config,
+        prefactored: Option<&LuHandle>,
+    ) -> Result<SolveOutcome> {
+        gmres_ir_prefactored(backend, session, p, action, cfg, prefactored)
+    }
+}
+
+/// The matvec-only Jacobi-PCG CG-IR engine for SPD systems.
+pub struct CgIrSolver;
+
+impl RefinementSolver for CgIrSolver {
+    fn family(&self) -> SolverFamily {
+        SolverFamily::CgIr
+    }
+
+    fn name(&self) -> &'static str {
+        "cg-ir"
+    }
+
+    fn solve(
+        &self,
+        _backend: &dyn SolverBackend,
+        session: &ProblemSession<'_>,
+        p: &Problem,
+        action: &Action,
+        cfg: &Config,
+        _prefactored: Option<&LuHandle>,
+    ) -> Result<SolveOutcome> {
+        cg_ir(session, p, action, cfg)
+    }
+}
+
+/// The engine for a [`SolverFamily`] (both are zero-sized; the returned
+/// reference is `'static` via const promotion).
+pub fn solver_for(family: SolverFamily) -> &'static dyn RefinementSolver {
+    match family {
+        SolverFamily::LuIr => &LuIrSolver,
+        SolverFamily::CgIr => &CgIrSolver,
+    }
+}
+
+/// Dispatch one solve on the action's family — the single entry point
+/// the trainer, evaluator, and serving facade share.
+pub fn solve_refinement(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    p: &Problem,
+    action: &Action,
+    cfg: &Config,
+    prefactored: Option<&LuHandle>,
+) -> Result<SolveOutcome> {
+    solver_for(action.solver).solve(backend, session, p, action, cfg, prefactored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend_native::NativeBackend;
+    use crate::gen::{finish_system, sparse_spd};
+    use crate::system::SystemInput;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solver_for_maps_families() {
+        assert_eq!(solver_for(SolverFamily::LuIr).family(), SolverFamily::LuIr);
+        assert_eq!(solver_for(SolverFamily::CgIr).family(), SolverFamily::CgIr);
+        assert_eq!(solver_for(SolverFamily::LuIr).name(), "lu-ir");
+        assert_eq!(solver_for(SolverFamily::CgIr).name(), "cg-ir");
+    }
+
+    #[test]
+    fn both_families_solve_the_same_spd_system() {
+        let mut rng = Rng::new(77);
+        let csr = sparse_spd(50, 0.05, 1.0, &mut rng);
+        let p = finish_system(0, SystemInput::Sparse(csr), f64::NAN, &mut rng);
+        let backend = NativeBackend::new();
+        let cfg = Config::tiny();
+        for action in [Action::FP64, Action::CG_FP64] {
+            let session = ProblemSession::new(&p.system);
+            let out = solve_refinement(&backend, &session, &p, &action, &cfg, None).unwrap();
+            assert!(!out.failed, "{action}: {:?}", out.stop);
+            assert!(out.nbe < 1e-12, "{action}: nbe {}", out.nbe);
+            // only the LU family densifies
+            let expect_densify = usize::from(action.solver == SolverFamily::LuIr);
+            assert_eq!(session.densify_count(), expect_densify, "{action}");
+        }
+    }
+}

@@ -1,14 +1,17 @@
-//! GMRES-based iterative refinement — the Alg.-2 driver the Layer-3
-//! coordinator runs, step by step, through a [`SolverBackend`]:
+//! Iterative-refinement drivers — the Alg.-2 outer loop shared by both
+//! refinement families (DESIGN.md §2d), with the paper's stopping
+//! criteria (eq. 14–16):
 //!
 //! ```text
-//! 1. M = LU ≈ A, x₀ = M⁻¹b              (precision u_f)
-//! 2. loop: rᵢ = b − A xᵢ                 (precision u_r)
-//! 3.       solve M⁻¹A zᵢ = M⁻¹rᵢ (GMRES) (precision u_g)
-//! 4.       xᵢ₊₁ = xᵢ + zᵢ                (precision u)
+//! 1. x₀ from the family's "factorization" step     (precision u_f)
+//!    LU/GMRES-IR: M = LU ≈ A, x₀ = M⁻¹b
+//!    CG-IR:       M = diag(A), x₀ = M⁻¹b (Jacobi)
+//! 2. loop: rᵢ = b − A xᵢ                            (precision u_r)
+//! 3.       inner-solve A zᵢ ≈ rᵢ                    (precision u_g)
+//!    LU/GMRES-IR: M⁻¹A zᵢ = M⁻¹rᵢ by GMRES
+//!    CG-IR:       Jacobi-PCG (matvec-only)
+//! 4.       xᵢ₊₁ = xᵢ + zᵢ                           (precision u)
 //! ```
-//!
-//! with the paper's stopping criteria:
 //!
 //! ```text
 //! (14) convergence:  ‖zᵢ‖∞ / ‖xᵢ‖∞ ≤ u_work   (unit roundoff of the
@@ -19,25 +22,32 @@
 //! (16) max iterations: i ≥ i_max
 //! ```
 //!
-//! τ is also the inner GMRES relative tolerance (the inner solve refines
-//! each correction to τ; stricter τ costs more inner iterations — the
+//! τ is also the inner relative tolerance (the inner solve refines each
+//! correction to τ; stricter τ costs more inner iterations — the
 //! Table-2 trend from τ=1e-6 to 1e-8). With these semantics the FP64
 //! baseline profile is the paper's: exactly 2 outer / ~1 inner per outer
 //! (first ratio test fires since consecutive updates shrink by ≫ τ).
 //!
-//! The driver is stateless: each call opens a [`ProblemSession`] over the
-//! problem's [`crate::system::SystemInput`] operator (or reuses the
+//! The shared outer loop lives in `refinement_loop`; the families plug
+//! in their step-1/3 closures. The LU path's operation stream is exactly
+//! the pre-seam code's, so its results are bit-identical to earlier
+//! releases. The CG path is **operator-native**: every step (initial
+//! solve, residual, Arnoldi-free PCG matvecs, backward error) runs
+//! through the session operator — O(nnz) on sparse inputs, with zero
+//! densifications (asserted in `tests/solver_family.rs`).
+//!
+//! The drivers are stateless: each call opens a [`ProblemSession`] over
+//! the problem's [`crate::system::SystemInput`] operator (or reuses the
 //! caller's, for the trainer's factorization-sharing sweep) and every
 //! backend call takes `&self`, so solves of different problems run
-//! concurrently over one backend. Residuals, GMRES matvecs, and the
-//! final backward error all apply A through the operator — O(nnz) for
-//! sparse inputs, with only the u_f factorization densifying.
+//! concurrently over one backend.
 
 use anyhow::Result;
 
-use crate::bandit::action::Action;
-use crate::chop::chop_p;
+use crate::bandit::action::{Action, SolverFamily};
+use crate::chop::{chop_p, Prec};
 use crate::gen::Problem;
+use crate::linalg::cg::pcg_jacobi_op;
 use crate::linalg::norm_inf_vec;
 use crate::solver::metrics::{eps_max, ferr, nbe_from_parts};
 use crate::solver::{ProblemSession, SolverBackend};
@@ -52,7 +62,7 @@ pub enum StopReason {
     Stagnated,
     /// eq. (16)
     MaxIterations,
-    /// LU breakdown / non-finite iterate — failure path
+    /// LU/preconditioner breakdown / non-finite iterate — failure path
     Failure,
 }
 
@@ -65,8 +75,9 @@ pub struct SolveOutcome {
     pub eps_max: f64,
     /// outer refinement iterations ("Avg iter." column)
     pub outer_iters: usize,
-    /// total inner GMRES iterations ("Avg. GMRES iter." column; T_iter
-    /// of the penalty eq. 25)
+    /// total inner iterations (GMRES iterations for the LU family, PCG
+    /// iterations = chopped matvecs for the CG family; T_iter of the
+    /// penalty eq. 25)
     pub gmres_iters: usize,
     pub stop: StopReason,
     pub failed: bool,
@@ -88,8 +99,10 @@ impl SolveOutcome {
     }
 }
 
-/// Run GMRES-IR on `p` with precision configuration `action`, in a fresh
-/// per-problem session.
+/// Solve `p` with `action` in a fresh per-problem session, dispatching
+/// on the action's [`SolverFamily`]. (The name is historical — it
+/// predates the CG family; LU actions run GMRES-IR exactly as before,
+/// CG actions run [`cg_ir`].)
 pub fn gmres_ir(
     backend: &dyn SolverBackend,
     p: &Problem,
@@ -97,52 +110,34 @@ pub fn gmres_ir(
     cfg: &Config,
 ) -> Result<SolveOutcome> {
     let session = ProblemSession::new(&p.system);
-    gmres_ir_prefactored(backend, &session, p, action, cfg, None)
+    crate::solver::family::solve_refinement(backend, &session, p, action, cfg, None)
 }
 
-/// GMRES-IR inside an existing session, with an optionally pre-computed
-/// factorization: the LU depends only on (A, u_f), so the trainer's
-/// exhaustive per-problem sweep factors each u_f once and shares it
-/// across every action with that u_f (EXPERIMENTS.md §Perf — 9 actions
-/// share 4 factorizations), while the shared session reuses the chopped
-/// copies of A across those actions.
+/// The shared Alg.-2 outer loop: starting iterate `x`, a residual step
+/// and an inner solve supplied by the family. Returns the full outcome
+/// including the operator-path backward error. The closure seam is what
+/// [`crate::solver::family::RefinementSolver`] implementations plug
+/// into; the loop body is the exact operation stream of the pre-seam
+/// GMRES-IR driver, so the LU family's results are bit-identical to
+/// earlier releases.
 ///
 /// `p.x_true` may be empty (the serving path of [`crate::api`], where no
 /// reference solution exists): then `ferr` is NaN, `eps_max` degrades to
 /// `nbe`, and failure detection relies on the backward error alone.
-pub fn gmres_ir_prefactored(
-    backend: &dyn SolverBackend,
+fn refinement_loop(
     session: &ProblemSession<'_>,
     p: &Problem,
     action: &Action,
     cfg: &Config,
-    prefactored: Option<&crate::solver::LuHandle>,
+    mut x: Vec<f64>,
+    mut residual: impl FnMut(&[f64]) -> Result<Vec<f64>>,
+    mut inner_solve: impl FnMut(&[f64]) -> Result<(Vec<f64>, usize, bool)>,
 ) -> Result<SolveOutcome> {
     let n = p.n;
-
-    // Step 1 (u_f): factor + initial solve. Breakdown => failure outcome.
-    let owned;
-    let factors = match prefactored {
-        Some(f) => {
-            debug_assert_eq!(f.prec, action.u_f);
-            f
-        }
-        None => match backend.lu_factor(session, action.u_f) {
-            Ok(f) => {
-                owned = f;
-                &owned
-            }
-            Err(_) => return Ok(SolveOutcome::failure(n)),
-        },
-    };
-    let mut x = backend.lu_solve(factors, &p.b, action.u_f)?;
     if x.iter().any(|v| !v.is_finite()) {
         return Ok(SolveOutcome::failure(n));
     }
 
-    // τ drives both the inner solve accuracy and the stagnation test;
-    // gmres_tol_factor (default 1.0) is an ablation knob.
-    let inner_tol = cfg.gmres_tol_factor * cfg.tau;
     // eq. (14): u_work of the update precision u.
     let u_work = action.u.unit_roundoff();
     let mut outer = 0usize;
@@ -152,24 +147,24 @@ pub fn gmres_ir_prefactored(
 
     for _ in 0..cfg.max_outer {
         // Step 2 (u_r)
-        let r = backend.residual(session, &x, &p.b, action.u_r)?;
+        let r = residual(&x)?;
         // Step 3 (u_g)
-        let g = backend.gmres(session, factors, &r, inner_tol, cfg.gmres_max_m, action.u_g)?;
-        if !g.ok {
+        let (z, iters, ok) = inner_solve(&r)?;
+        if !ok {
             stop = StopReason::Failure;
             break;
         }
         // Step 4 (u): chopped update
-        for (xi, zi) in x.iter_mut().zip(&g.z) {
+        for (xi, zi) in x.iter_mut().zip(&z) {
             *xi = chop_p(*xi + zi, action.u);
         }
         outer += 1;
-        inner_total += g.iters;
+        inner_total += iters;
         if x.iter().any(|v| !v.is_finite()) {
             stop = StopReason::Failure;
             break;
         }
-        let nz = norm_inf_vec(&g.z);
+        let nz = norm_inf_vec(&z);
         let nx = norm_inf_vec(&x);
         if nx > 0.0 && nz / nx <= u_work {
             stop = StopReason::Converged; // eq. (14)
@@ -209,8 +204,136 @@ pub fn gmres_ir_prefactored(
     })
 }
 
+/// GMRES-IR inside an existing session, with an optionally pre-computed
+/// factorization: the LU depends only on (A, u_f), so the trainer's
+/// exhaustive per-problem sweep factors each u_f once and shares it
+/// across every action with that u_f (EXPERIMENTS.md §Perf — 9 actions
+/// share 4 factorizations), while the shared session reuses the chopped
+/// copies of A across those actions. LU-family actions only.
+pub fn gmres_ir_prefactored(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    p: &Problem,
+    action: &Action,
+    cfg: &Config,
+    prefactored: Option<&crate::solver::LuHandle>,
+) -> Result<SolveOutcome> {
+    debug_assert_eq!(action.solver, SolverFamily::LuIr);
+    let n = p.n;
+
+    // Step 1 (u_f): factor + initial solve. Breakdown => failure outcome.
+    let owned;
+    let factors = match prefactored {
+        Some(f) => {
+            debug_assert_eq!(f.prec, action.u_f);
+            f
+        }
+        None => match backend.lu_factor(session, action.u_f) {
+            Ok(f) => {
+                owned = f;
+                &owned
+            }
+            Err(_) => return Ok(SolveOutcome::failure(n)),
+        },
+    };
+    let x0 = backend.lu_solve(factors, &p.b, action.u_f)?;
+
+    // τ drives both the inner solve accuracy and the stagnation test;
+    // gmres_tol_factor (default 1.0) is an ablation knob.
+    let inner_tol = cfg.gmres_tol_factor * cfg.tau;
+    refinement_loop(
+        session,
+        p,
+        action,
+        cfg,
+        x0,
+        |x| backend.residual(session, x, &p.b, action.u_r),
+        |r| {
+            let g = backend.gmres(session, factors, r, inner_tol, cfg.gmres_max_m, action.u_g)?;
+            Ok((g.z, g.iters, g.ok))
+        },
+    )
+}
+
+/// CG-IR inside an existing session: Jacobi-preconditioned CG as the
+/// inner solver, everything through the session operator — no
+/// factorization, no densification, O(nnz) per matvec on sparse inputs
+/// (DESIGN.md §2d). CG-family actions only.
+///
+/// The four precision slots map to: u_f — preconditioner build (inverse
+/// diagonal) and the diagonal initial solve x₀ = chop(D⁻¹b); u — the
+/// solution update; u_g — the inner PCG working precision (matvecs and
+/// preconditioner application); u_r — the residual. A zero / overflowed
+/// diagonal entry is the family's "factorization breakdown": the solve
+/// returns the canonical failure outcome, exactly like an LU breakdown.
+///
+/// Deliberately backend-independent: CG-IR always runs the native
+/// chopped kernels through the session (the PJRT artifacts are
+/// dense-shaped; shipping matvec-only graphs is future work), which is
+/// also what makes its zero-densification contract unconditional.
+pub fn cg_ir(
+    session: &ProblemSession<'_>,
+    p: &Problem,
+    action: &Action,
+    cfg: &Config,
+) -> Result<SolveOutcome> {
+    debug_assert_eq!(action.solver, SolverFamily::CgIr);
+    let n = p.n;
+
+    // Jacobi preconditioner from the operator diagonal — O(nnz).
+    let d = session.diag();
+    let inv_diag = |prec: Prec| -> Option<Vec<f64>> {
+        let mut m = Vec::with_capacity(n);
+        for &di in &d {
+            let v = chop_p(1.0 / chop_p(di, prec), prec);
+            if !v.is_finite() {
+                return None;
+            }
+            m.push(v);
+        }
+        Some(m)
+    };
+    // build precision u_f; application precision u_g (inside PCG)
+    let Some(m_f) = inv_diag(action.u_f) else {
+        return Ok(SolveOutcome::failure(n));
+    };
+    let Some(m_g) = inv_diag(action.u_g) else {
+        return Ok(SolveOutcome::failure(n));
+    };
+
+    // Step 1 (u_f): x₀ = chop(D⁻¹ chop(b)) — the diagonal initial solve.
+    let x0: Vec<f64> = p
+        .b
+        .iter()
+        .zip(&m_f)
+        .map(|(bi, mi)| chop_p(chop_p(*bi, action.u_f) * mi, action.u_f))
+        .collect();
+
+    let inner_tol = cfg.gmres_tol_factor * cfg.tau;
+    refinement_loop(
+        session,
+        p,
+        action,
+        cfg,
+        x0,
+        |x| Ok(session.residual(x, &p.b, action.u_r)),
+        |r| {
+            let g = pcg_jacobi_op(
+                |xc| session.chopped_matvec(xc, action.u_g),
+                n,
+                &m_g,
+                r,
+                inner_tol,
+                cfg.gmres_max_m,
+                action.u_g,
+            );
+            Ok((g.z, g.iters, g.ok))
+        },
+    )
+}
+
 /// The FP64 baseline the paper compares against: the same driver with the
-/// all-FP64 action.
+/// all-FP64 LU action.
 pub fn fp64_baseline(
     backend: &dyn SolverBackend,
     p: &Problem,
@@ -223,13 +346,20 @@ pub fn fp64_baseline(
 mod tests {
     use super::*;
     use crate::backend_native::NativeBackend;
-    use crate::gen::{finish_problem, randsvd_mode2};
+    use crate::gen::{finish_problem, finish_system, randsvd_mode2, sparse_spd};
+    use crate::system::SystemInput;
     use crate::util::rng::Rng;
 
     fn problem(n: usize, kappa: f64, seed: u64) -> Problem {
         let mut rng = Rng::new(seed);
         let a = randsvd_mode2(n, kappa, &mut rng);
         finish_problem(0, a, kappa, 1.0, &mut rng)
+    }
+
+    fn spd_problem(n: usize, seed: u64) -> Problem {
+        let mut rng = Rng::new(seed);
+        let csr = sparse_spd(n, 0.05, 1.0, &mut rng);
+        finish_system(0, SystemInput::Sparse(csr), f64::NAN, &mut rng)
     }
 
     fn cfg() -> Config {
@@ -265,12 +395,12 @@ mod tests {
         let be = NativeBackend::new();
         let c = cfg();
         let p = problem(60, 1e2, 7);
-        let a = Action {
-            u_f: crate::chop::Prec::Bf16,
-            u: crate::chop::Prec::Fp64,
-            u_g: crate::chop::Prec::Fp64,
-            u_r: crate::chop::Prec::Fp64,
-        };
+        let a = Action::lu(
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp64,
+        );
         let out = gmres_ir(&be, &p, &a, &c).unwrap();
         assert!(!out.failed);
         assert!(
@@ -289,12 +419,12 @@ mod tests {
         let be = NativeBackend::new();
         let c = cfg();
         let p = problem(48, 1e2, 9);
-        let a = Action {
-            u_f: crate::chop::Prec::Bf16,
-            u: crate::chop::Prec::Bf16,
-            u_g: crate::chop::Prec::Bf16,
-            u_r: crate::chop::Prec::Bf16,
-        };
+        let a = Action::lu(
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Bf16,
+        );
         let out = gmres_ir(&be, &p, &a, &c).unwrap();
         // Not a failure, but far from fp64 accuracy.
         assert!(out.ferr > 1e-6, "ferr {}", out.ferr);
@@ -313,12 +443,12 @@ mod tests {
             *v *= 1e39;
         }
         p.norm_inf = p.system.norm_inf();
-        let a = Action {
-            u_f: crate::chop::Prec::Bf16,
-            u: crate::chop::Prec::Fp64,
-            u_g: crate::chop::Prec::Fp64,
-            u_r: crate::chop::Prec::Fp64,
-        };
+        let a = Action::lu(
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp64,
+            crate::chop::Prec::Fp64,
+        );
         let out = gmres_ir(&be, &p, &a, &c).unwrap();
         assert!(out.failed);
         assert_eq!(out.stop, StopReason::Failure);
@@ -365,5 +495,65 @@ mod tests {
         assert!(out.ferr.is_nan());
         assert!(out.nbe.is_finite() && out.nbe < 1e-14, "nbe {}", out.nbe);
         assert_eq!(out.eps_max, out.nbe);
+    }
+
+    #[test]
+    fn cg_ir_solves_spd_without_densifying() {
+        // The CG family's core contract on a sparse SPD system: accurate
+        // solve, zero dense operator applications, zero densifications.
+        let c = cfg();
+        let p = spd_problem(60, 23);
+        let session = ProblemSession::new(&p.system);
+        let out = cg_ir(&session, &p, &Action::CG_FP64, &c).unwrap();
+        assert!(!out.failed, "stop {:?}", out.stop);
+        assert!(out.nbe < 1e-12, "nbe {}", out.nbe);
+        assert!(out.ferr < 1e-9, "ferr {}", out.ferr);
+        assert_eq!(session.dense_matvec_count(), 0);
+        assert_eq!(session.densify_count(), 0);
+        assert!(session.sparse_matvec_count() > 0);
+    }
+
+    #[test]
+    fn cg_ir_dispatches_through_gmres_ir_entry() {
+        // the historical entry point routes CG actions to cg_ir
+        let be = NativeBackend::new();
+        let c = cfg();
+        let p = spd_problem(40, 29);
+        let via_entry = gmres_ir(&be, &p, &Action::CG_FP64, &c).unwrap();
+        let session = ProblemSession::new(&p.system);
+        let direct = cg_ir(&session, &p, &Action::CG_FP64, &c).unwrap();
+        assert_eq!(via_entry.x.len(), direct.x.len());
+        for (u, v) in via_entry.x.iter().zip(&direct.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(via_entry.nbe.to_bits(), direct.nbe.to_bits());
+        assert_eq!(via_entry.gmres_iters, direct.gmres_iters);
+    }
+
+    #[test]
+    fn cg_ir_fails_cleanly_on_non_spd() {
+        // dense randsvd systems are not SPD: the curvature test must
+        // surface a failure outcome, not a panic — the environment
+        // signal that teaches the bandit to avoid CG there.
+        let be = NativeBackend::new();
+        let c = cfg();
+        let p = problem(24, 1e3, 31);
+        let out = gmres_ir(&be, &p, &Action::CG_FP64, &c).unwrap();
+        assert!(out.failed, "non-SPD CG must fail, got stop {:?}", out.stop);
+        assert_eq!(out.stop, StopReason::Failure);
+    }
+
+    #[test]
+    fn cg_ir_zero_diagonal_is_preconditioner_breakdown() {
+        let c = cfg();
+        let mut rng = Rng::new(33);
+        let mut a = crate::linalg::Mat::eye(8);
+        a[(3, 3)] = 0.0;
+        let p = finish_problem(0, a, f64::NAN, 1.0, &mut rng);
+        let session = ProblemSession::new(&p.system);
+        let out = cg_ir(&session, &p, &Action::CG_FP64, &c).unwrap();
+        assert!(out.failed);
+        assert_eq!(out.stop, StopReason::Failure);
+        assert_eq!(out.outer_iters, 0, "breakdown happens before the loop");
     }
 }

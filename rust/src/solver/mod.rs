@@ -17,6 +17,7 @@
 //! which serialized every episode and made cross-problem staleness
 //! possible.
 
+pub mod family;
 pub mod ir;
 pub mod metrics;
 
@@ -25,7 +26,7 @@ use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
-use crate::chop::Prec;
+use crate::chop::{chop_p, Prec};
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 use crate::system::SystemRef;
@@ -59,6 +60,9 @@ pub struct ProblemSession<'a> {
     padded: OnceLock<Mat>,
     dense_matvecs: AtomicUsize,
     sparse_matvecs: AtomicUsize,
+    /// sparse-input densifications performed (0 or 1; the CG-IR family's
+    /// zero-densification contract is asserted against this counter)
+    densifications: AtomicUsize,
 }
 
 impl<'a> ProblemSession<'a> {
@@ -73,6 +77,7 @@ impl<'a> ProblemSession<'a> {
             padded: OnceLock::new(),
             dense_matvecs: AtomicUsize::new(0),
             sparse_matvecs: AtomicUsize::new(0),
+            densifications: AtomicUsize::new(0),
         }
     }
 
@@ -93,7 +98,10 @@ impl<'a> ProblemSession<'a> {
     pub fn dense_for_factorization(&self) -> &Mat {
         match self.src {
             SystemRef::Dense(m) => m,
-            SystemRef::Sparse(c) => self.densified.get_or_init(|| c.to_dense()),
+            SystemRef::Sparse(c) => self.densified.get_or_init(|| {
+                self.densifications.fetch_add(1, Ordering::Relaxed);
+                c.to_dense()
+            }),
         }
     }
 
@@ -156,6 +164,34 @@ impl<'a> ProblemSession<'a> {
         }
     }
 
+    /// The operator diagonal (Jacobi preconditioner input for the CG-IR
+    /// family) — O(nnz) for sparse inputs, never densifies.
+    pub fn diag(&self) -> Vec<f64> {
+        match self.src {
+            SystemRef::Dense(m) => m.diag(),
+            SystemRef::Sparse(c) => c.diag(),
+        }
+    }
+
+    /// r = chop(chop(b) − Aₚ·chop(x)) through the operator — the Alg.-2
+    /// residual step. This bit-sensitivity-critical chop sequence exists
+    /// exactly once: the native backend's `residual` and the CG family's
+    /// driver both call it, so the cross-family and dense-vs-CSR bit
+    /// contracts cannot drift apart.
+    pub fn residual(&self, x: &[f64], b: &[f64], p: Prec) -> Vec<f64> {
+        if p == Prec::Fp64 {
+            let ax = self.matvec(x);
+            return b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect();
+        }
+        let mut xc = x.to_vec();
+        crate::chop::chop_slice(&mut xc, p);
+        let ax = self.chopped_matvec(&xc, p);
+        b.iter()
+            .zip(ax)
+            .map(|(bi, axi)| chop_p(chop_p(*bi, p) - axi, p))
+            .collect()
+    }
+
     /// Operator applications that ran the dense path so far.
     pub fn dense_matvec_count(&self) -> usize {
         self.dense_matvecs.load(Ordering::Relaxed)
@@ -164,6 +200,14 @@ impl<'a> ProblemSession<'a> {
     /// Operator applications that ran the sparse path so far.
     pub fn sparse_matvec_count(&self) -> usize {
         self.sparse_matvecs.load(Ordering::Relaxed)
+    }
+
+    /// Sparse-input densifications so far (0 or 1; always 0 for dense
+    /// inputs, which alias the borrowed matrix). The CG-IR family's
+    /// zero-densification contract (`tests/solver_family.rs`) asserts
+    /// this stays 0 for its whole solve.
+    pub fn densify_count(&self) -> usize {
+        self.densifications.load(Ordering::Relaxed)
     }
 
     /// The block-diagonally padded copy `diag(A, I_{nb-n})`, computed once
@@ -295,10 +339,14 @@ mod tests {
             assert_eq!(u.to_bits(), v.to_bits());
         }
         // densification happens once, on demand, and matches the input
+        assert_eq!(s.densify_count(), 0, "no densification before first use");
         let d1 = s.dense_for_factorization() as *const Mat;
         let d2 = s.dense_for_factorization() as *const Mat;
         assert_eq!(d1, d2);
+        assert_eq!(s.densify_count(), 1, "exactly one materialization");
         assert_eq!(s.dense_for_factorization(), &a);
+        // the operator diagonal never touches the dense form
+        assert_eq!(s.diag(), a.diag());
         // norm_inf through the operator agrees with dense
         assert_eq!(s.norm_inf().to_bits(), a.norm_inf().to_bits());
     }

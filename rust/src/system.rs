@@ -57,6 +57,11 @@ pub trait LinearOperator {
     /// ‖A‖∞ = max row sum of |a_ij| (context feature φ₂).
     fn norm_inf(&self) -> f64;
 
+    /// The main diagonal (structurally missing sparse entries are 0.0) —
+    /// the Jacobi preconditioner's input for the CG-IR family. O(nnz);
+    /// never densifies.
+    fn diag(&self) -> Vec<f64>;
+
     /// Stored entries (n·n for dense — density is structural, not a scan
     /// for exact zeros).
     fn nnz(&self) -> usize;
@@ -105,6 +110,10 @@ impl LinearOperator for Mat {
         Mat::norm_inf(self)
     }
 
+    fn diag(&self) -> Vec<f64> {
+        Mat::diag(self)
+    }
+
     fn nnz(&self) -> usize {
         self.n_rows * self.n_cols
     }
@@ -136,6 +145,10 @@ impl LinearOperator for Csr {
 
     fn norm_inf(&self) -> f64 {
         Csr::norm_inf(self)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        Csr::diag(self)
     }
 
     fn nnz(&self) -> usize {
@@ -222,6 +235,13 @@ impl SystemInput {
         }
     }
 
+    pub fn diag(&self) -> Vec<f64> {
+        match self {
+            SystemInput::Dense(m) => m.diag(),
+            SystemInput::Sparse(c) => c.diag(),
+        }
+    }
+
     pub fn nnz(&self) -> usize {
         match self {
             SystemInput::Dense(m) => m.n_rows * m.n_cols,
@@ -270,6 +290,10 @@ impl LinearOperator for SystemInput {
 
     fn norm_inf(&self) -> f64 {
         SystemInput::norm_inf(self)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        SystemInput::diag(self)
     }
 
     fn nnz(&self) -> usize {
@@ -374,6 +398,7 @@ mod tests {
             assert_eq!(u.to_bits(), v.to_bits());
         }
         assert!(!d.is_sparse() && s.is_sparse());
+        assert_eq!(d.diag(), s.diag());
         assert_eq!(d.density(), 1.0);
         assert_eq!(d.nnz(), 900);
         assert_eq!(s.nnz(), csr.nnz());

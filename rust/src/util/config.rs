@@ -57,6 +57,11 @@ pub struct Config {
     pub eps_min: f64,        // minimum exploration
     pub k_top: usize,        // 0 => keep all reduced actions (35)
     pub weights: Weights,
+    /// Solver-family routing of the action space (DESIGN.md §2d):
+    /// "auto" trains all-SPD datasets over both families (LU-IR ×
+    /// CG-IR); "lu-only" pins the paper's LU-only space everywhere
+    /// (the §5.3 repro tables use this for fidelity).
+    pub families: String,
 
     // ---- reward (eq. 21–25) ----
     pub c1: f64,
@@ -100,6 +105,7 @@ impl Default for Config {
             eps_min: 0.05,
             k_top: 9, // §5: "one-fourth of the valid precision combinations"
             weights: Weights::W1,
+            families: "auto".to_string(),
             c1: 1.0,
             theta: 2.5,
             acc_eps: 1e-10,
@@ -196,6 +202,7 @@ impl Config {
         for key in [
             "tau", "alpha", "eps-min", "episodes", "seed", "weights", "k-top",
             "n-train", "n-test", "tau-base", "artifacts-dir", "size-min", "size-max",
+            "families",
         ] {
             if let Some(v) = args.get(key) {
                 cfg.set(&key.replace('-', "_"), v)?;
@@ -234,6 +241,10 @@ impl Config {
             "eps_min" => self.eps_min = num!(),
             "k_top" => self.k_top = num!(),
             "weights" => self.weights = Weights::by_name(v)?,
+            "families" => match v {
+                "auto" | "lu-only" => self.families = v.to_string(),
+                _ => bail!("unknown families setting {v:?} (auto|lu-only)"),
+            },
             "c1" => self.c1 = num!(),
             "theta" => self.theta = num!(),
             "acc_eps" => self.acc_eps = num!(),
@@ -311,6 +322,9 @@ mod tests {
         assert_eq!(c.tau, 1e-8);
         c.set("weights", "W2").unwrap();
         assert_eq!(c.weights, Weights::W2);
+        c.set("families", "lu-only").unwrap();
+        assert_eq!(c.families, "lu-only");
+        assert!(c.set("families", "qr-only").is_err());
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("tau", "xyz").is_err());
     }

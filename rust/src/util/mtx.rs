@@ -8,6 +8,15 @@
 //! sparse-natively through the operator path); array files load dense.
 //! Complex and Hermitian files are rejected loudly.
 //!
+//! **Duplicate coordinate entries are rejected**, with the offending
+//! line number in the error. The MM format stores each position at most
+//! once (symmetric/skew files store exactly one triangle); a repeated
+//! (i, j) almost always means a corrupted or hand-edited file, and the
+//! two plausible recovery semantics (sum vs last-wins) silently produce
+//! different matrices — so the loader refuses to guess. Mirrored
+//! positions count: a symmetric file that stores both (i, j) and (j, i)
+//! is rejected at the second one.
+//!
 //! Format reference: NIST Matrix Market, "Text File Formats".
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -47,8 +56,8 @@ pub fn load_vector(path: &str) -> Result<Vec<f64>> {
 /// Parse Matrix Market text. Exposed for in-memory use and tests; the
 /// file-level entry points are [`load_system`] / [`load_vector`].
 pub fn parse_system(text: &str) -> Result<SystemInput> {
-    let mut lines = text.lines();
-    let header = lines.next().ok_or_else(|| anyhow!("empty file"))?;
+    let mut lines = text.lines().enumerate();
+    let header = lines.next().map(|(_, l)| l).ok_or_else(|| anyhow!("empty file"))?;
     let head: Vec<String> = header
         .split_whitespace()
         .map(|t| t.to_ascii_lowercase())
@@ -79,14 +88,16 @@ pub fn parse_system(text: &str) -> Result<SystemInput> {
         Ok(())
     };
 
-    // token cursor over the data lines (blank lines and % comments skipped)
+    // token cursor over the data lines (blank lines and % comments
+    // skipped), each token tagged with its 1-based source line so
+    // errors point at the file
     let mut toks = Cursor {
         toks: lines
-            .filter(|l| {
+            .filter(|(_, l)| {
                 let t = l.trim();
                 !t.is_empty() && !t.starts_with('%')
             })
-            .flat_map(|l| l.split_whitespace())
+            .flat_map(|(ln, l)| l.split_whitespace().map(move |t| (t, ln + 1)))
             .collect(),
         pos: 0,
     };
@@ -99,7 +110,11 @@ pub fn parse_system(text: &str) -> Result<SystemInput> {
             let nnz = toks.next_usize("entry count")?;
             let pattern = field == "pattern";
             let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(2 * nnz);
+            // every stored (and mirrored) position, for duplicate
+            // rejection — see module docs for why we refuse to guess
+            let mut seen = std::collections::HashSet::with_capacity(2 * nnz);
             for k in 0..nnz {
+                let line = toks.peek_line();
                 let i = toks.next_usize("row index")?;
                 let j = toks.next_usize("column index")?;
                 // pattern files carry structure only; 1.0 per stored entry
@@ -111,12 +126,21 @@ pub fn parse_system(text: &str) -> Result<SystemInput> {
                         k + 1
                     );
                 }
+                if !seen.insert((i, j)) {
+                    bail!(
+                        "line {line}: duplicate entry ({i}, {j}) — each position may be \
+                         stored once (entry {} of {nnz}; for symmetric/skew files the \
+                         mirrored position counts as stored)",
+                        k + 1
+                    );
+                }
                 let (i, j) = (i - 1, j - 1);
                 triplets.push((i, j, v));
                 match sym {
                     Sym::General => {}
                     Sym::Symmetric => {
                         if i != j {
+                            seen.insert((j + 1, i + 1));
                             triplets.push((j, i, v));
                         }
                     }
@@ -128,6 +152,7 @@ pub fn parse_system(text: &str) -> Result<SystemInput> {
                                 j + 1
                             );
                         }
+                        seen.insert((j + 1, i + 1));
                         triplets.push((j, i, -v));
                     }
                 }
@@ -174,13 +199,15 @@ pub fn parse_system(text: &str) -> Result<SystemInput> {
     }
 }
 
+/// Token cursor over the data section; each token carries its 1-based
+/// source line so truncation/parse/duplicate errors name the line.
 struct Cursor<'a> {
-    toks: Vec<&'a str>,
+    toks: Vec<(&'a str, usize)>,
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn bump(&mut self) -> Option<&'a str> {
+    fn bump(&mut self) -> Option<(&'a str, usize)> {
         let t = self.toks.get(self.pos).copied();
         if t.is_some() {
             self.pos += 1;
@@ -188,19 +215,25 @@ impl<'a> Cursor<'a> {
         t
     }
 
+    /// Line of the next unconsumed token (0 when exhausted).
+    fn peek_line(&self) -> usize {
+        self.toks.get(self.pos).map(|&(_, ln)| ln).unwrap_or(0)
+    }
+
     fn next_usize(&mut self, what: &str) -> Result<usize> {
-        let t = self
+        let (t, line) = self
             .bump()
-            .ok_or_else(|| anyhow!("unexpected end of file reading {what}"))?;
-        t.parse::<usize>().map_err(|e| anyhow!("bad {what} {t:?}: {e}"))
+            .ok_or_else(|| anyhow!("unexpected end of file reading {what} (truncated?)"))?;
+        t.parse::<usize>()
+            .map_err(|e| anyhow!("line {line}: bad {what} {t:?}: {e}"))
     }
 
     fn next_f64(&mut self, k: usize) -> Result<f64> {
-        let t = self
+        let (t, line) = self
             .bump()
-            .ok_or_else(|| anyhow!("unexpected end of file at value {}", k + 1))?;
+            .ok_or_else(|| anyhow!("unexpected end of file at value {} (truncated?)", k + 1))?;
         t.parse::<f64>()
-            .map_err(|e| anyhow!("bad value {t:?} at value {}: {e}", k + 1))
+            .map_err(|e| anyhow!("line {line}: bad value {t:?} at value {}: {e}", k + 1))
     }
 
     fn done(&self) -> bool {
@@ -284,11 +317,17 @@ mod tests {
         for bad in [
             "",
             "%%MatrixMarket tensor coordinate real general\n1 1 0\n",
+            // header with too few tokens
+            "%%MatrixMarket matrix\n1 1 0\n",
             "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1.0 0.0\n",
             "%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 1.0\n",
             "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
             "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
             "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 9.9\n",
+            // truncated mid-entry (row/col present, value missing)
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n2 2\n",
+            // missing size line entirely
+            "%%MatrixMarket matrix coordinate real general\n",
             "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n",
             // symmetric storage on a non-square shape
             "%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 3 5.0\n",
@@ -296,6 +335,59 @@ mod tests {
         ] {
             assert!(parse_system(bad).is_err(), "should reject: {bad:?}");
         }
+    }
+
+    #[test]
+    fn truncation_errors_name_the_problem() {
+        let truncated = "%%MatrixMarket matrix coordinate real general\n3 3 4\n1 1 2.0\n2 2 3.0\n";
+        let err = parse_system(truncated).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        let bad_value = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n";
+        let err = parse_system(bad_value).unwrap_err();
+        assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_entries_rejected_with_line_number() {
+        // plain duplicate in a general file: the second (2,2) is line 5
+        let dup = "%%MatrixMarket matrix coordinate real general\n\
+                   3 3 3\n\
+                   1 1 1.0\n\
+                   2 2 2.0\n\
+                   2 2 5.0\n";
+        let err = parse_system(dup).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("duplicate entry (2, 2)"), "{msg}");
+        assert!(msg.contains("line 5"), "{msg}");
+
+        // comments don't shift the reported line numbers
+        let dup_comments = "%%MatrixMarket matrix coordinate real general\n\
+                            % a comment\n\
+                            2 2 2\n\
+                            1 1 1.0\n\
+                            % another\n\
+                            1 1 4.0\n";
+        let err = parse_system(dup_comments).unwrap_err();
+        assert!(err.to_string().contains("line 6"), "{err}");
+
+        // a symmetric file storing both triangles: the mirror of (2,1)
+        // already claimed (1,2), so the explicit (1,2) on line 5 dies
+        let both_triangles = "%%MatrixMarket matrix coordinate real symmetric\n\
+                              2 2 3\n\
+                              1 1 4.0\n\
+                              2 1 -1.0\n\
+                              1 2 -1.0\n";
+        let err = parse_system(both_triangles).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("duplicate entry (1, 2)"), "{msg}");
+        assert!(msg.contains("line 5"), "{msg}");
+
+        // pattern files get the same guard
+        let dup_pattern = "%%MatrixMarket matrix coordinate pattern general\n\
+                           2 2 2\n\
+                           1 2\n\
+                           1 2\n";
+        assert!(parse_system(dup_pattern).is_err());
     }
 
     #[test]

@@ -163,7 +163,10 @@ fn policy_save_load_greedy_roundtrip() {
     assert_eq!(rep.action, policy.select(&fresh[0]));
 }
 
-const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden.json");
+// the current (v2, solver-family) golden; the committed v1 file
+// `policy_golden.json` is kept as a migration fixture — its loud
+// rejection is locked in tests/solver_family.rs
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
 
 fn golden_text() -> String {
     std::fs::read_to_string(GOLDEN).expect("golden policy present")
@@ -184,6 +187,7 @@ fn feature_probe(kappa_est: f64) -> Problem {
         kappa_est,
         norm_inf: 1.0,
         density: 1.0,
+        spd: false,
     }
 }
 
@@ -193,17 +197,12 @@ fn golden_policy_loads_and_selects() {
     let policy = TrainedPolicy::load(GOLDEN).unwrap();
     assert_eq!(policy.qtable.n_states, 2);
     assert_eq!(policy.qtable.space.len(), 2);
-    // state 0 (low κ): the visited bf16-factorization action wins on Q
+    // state 0 (low κ): the visited bf16-factorization LU action wins on Q
     let low = policy.select(&feature_probe(1e2));
-    assert_eq!(
-        low,
-        Action {
-            u_f: Prec::Bf16,
-            u: Prec::Fp64,
-            u_g: Prec::Fp64,
-            u_r: Prec::Fp64,
-        }
-    );
+    assert_eq!(low, Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64));
+    // the golden's action list spans both families
+    use precision_autotune::bandit::action::SolverFamily;
+    assert!(policy.qtable.space.has_family(SolverFamily::CgIr));
     // state 1 (high κ): never visited => safe all-FP64 fallback
     let high = policy.select(&feature_probe(1e8));
     assert_eq!(high, Action::FP64);
@@ -217,30 +216,40 @@ fn golden_policy_schema_mismatches_rejected() {
     assert!(TrainedPolicy::from_json(&json::parse(&text).unwrap()).is_ok());
 
     // unsupported version
-    let bad_ver = text.replacen("\"schema_version\":1.0", "\"schema_version\":99.0", 1);
+    let bad_ver = text.replacen("\"schema_version\":2.0", "\"schema_version\":99.0", 1);
     assert_ne!(bad_ver, text);
     let err = TrainedPolicy::from_json(&json::parse(&bad_ver).unwrap()).unwrap_err();
     assert!(err.to_string().contains("schema_version"), "{err}");
 
     // missing version entirely
-    let no_ver = text.replacen(",\"schema_version\":1.0", "", 1);
+    let no_ver = text.replacen(",\"schema_version\":2.0", "", 1);
     assert_ne!(no_ver, text);
     let err = TrainedPolicy::from_json(&json::parse(&no_ver).unwrap()).unwrap_err();
     assert!(err.to_string().contains("schema_version"), "{err}");
 
     // action-space hash that does not match the stored action list
-    let bad_hash = text.replacen("11739f42dda79100", "0000000000000000", 1);
+    let bad_hash = text.replacen("9938cbb383ba38e1", "0000000000000000", 1);
     assert_ne!(bad_hash, text);
     let err = TrainedPolicy::from_json(&json::parse(&bad_hash).unwrap()).unwrap_err();
     assert!(err.to_string().contains("action-space hash"), "{err}");
 
     // a tampered action list invalidates the stored hash too
     let bad_actions = text.replacen(
-        "[\"bf16\",\"fp64\",\"fp64\",\"fp64\"]",
-        "[\"tf32\",\"fp64\",\"fp64\",\"fp64\"]",
+        "[\"lu-ir\",\"bf16\",\"fp64\",\"fp64\",\"fp64\"]",
+        "[\"lu-ir\",\"tf32\",\"fp64\",\"fp64\",\"fp64\"]",
         1,
     );
     assert_ne!(bad_actions, text);
     let err = TrainedPolicy::from_json(&json::parse(&bad_actions).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("action-space hash"), "{err}");
+
+    // a family swap with unchanged precisions also invalidates the hash
+    let family_swap = text.replacen(
+        "[\"cg-ir\",\"fp64\",\"fp64\",\"fp64\",\"fp64\"]",
+        "[\"lu-ir\",\"fp64\",\"fp64\",\"fp64\",\"fp64\"]",
+        1,
+    );
+    assert_ne!(family_swap, text);
+    let err = TrainedPolicy::from_json(&json::parse(&family_swap).unwrap()).unwrap_err();
     assert!(err.to_string().contains("action-space hash"), "{err}");
 }

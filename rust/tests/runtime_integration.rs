@@ -130,12 +130,7 @@ fn full_ir_solve_through_pjrt_converges() {
     let mut cfg = Config::tiny();
     cfg.tau = 1e-8;
     let pjrt = PjrtBackend::open(DIR).unwrap();
-    let action = Action {
-        u_f: Prec::Bf16,
-        u: Prec::Fp64,
-        u_g: Prec::Fp32,
-        u_r: Prec::Fp64,
-    };
+    let action = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp32, Prec::Fp64);
     let out = gmres_ir(&pjrt, &p, &action, &cfg).unwrap();
     assert!(!out.failed, "PJRT IR failed");
     assert!(out.ferr < 1e-8, "ferr {}", out.ferr);

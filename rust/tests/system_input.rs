@@ -37,7 +37,7 @@ fn sparse_ir_loop_runs_zero_dense_matvecs() {
     let cfg = Config::tiny();
     for action in [
         Action::FP64,
-        Action { u_f: Prec::Fp64, u: Prec::Fp64, u_g: Prec::Fp32, u_r: Prec::Fp32 },
+        Action::lu(Prec::Fp64, Prec::Fp64, Prec::Fp32, Prec::Fp32),
     ] {
         let session = ProblemSession::new(&p.system);
         let out = gmres_ir_prefactored(&backend, &session, &p, &action, &cfg, None).unwrap();
