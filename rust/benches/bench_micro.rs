@@ -11,10 +11,12 @@ use precision_autotune::bandit::action::{Action, ActionSpace};
 use precision_autotune::bandit::qtable::QTable;
 use precision_autotune::bandit::reward::{reward, RewardInputs};
 use precision_autotune::chop::{chop_p, chop_slice, chop_sub_scaled_row, Prec};
+use precision_autotune::linalg::cg::{pcg_jacobi_op, pcg_jacobi_ws};
 use precision_autotune::linalg::condest::condest_1;
-use precision_autotune::linalg::gmres::gmres_preconditioned;
+use precision_autotune::linalg::gmres::{gmres_preconditioned, gmres_preconditioned_ws};
 use precision_autotune::linalg::lu::lu_factor_chopped;
-use precision_autotune::linalg::{chopped_matvec_prechopped, Mat};
+use precision_autotune::linalg::{chopped_matvec_prechopped, chopped_matvec_prechopped_into, Mat};
+use precision_autotune::solver::workspace::InnerWs;
 use precision_autotune::util::benchkit::{bench, JsonReport};
 use precision_autotune::util::config::Config;
 use precision_autotune::util::json::num;
@@ -118,6 +120,75 @@ fn main() {
     rep.push(&bench("gmres n=256 bf16 (chopped)", 1, 5, || {
         gmres_preconditioned(&a16, &lu16, &b, 1e-6, 50, Prec::Bf16).iters
     }));
+
+    // --- workspace kernels: the zero-allocation hot path vs the
+    // allocating entry points above (the before/after attribution for
+    // the flat-Hessenberg / slab-basis / in-place-PCG rewrites; the
+    // allocating entries now wrap the same kernels plus per-call
+    // buffer setup, so the delta is exactly the allocation cost)
+    {
+        let mut ws = InnerWs::default();
+        let mut z = Vec::new();
+        rep.push(&bench("gmres n=256 fp64 (ws reuse)", 1, 10, || {
+            gmres_preconditioned_ws(
+                |xc, out| chopped_matvec_prechopped_into(&a, xc, Prec::Fp64, out),
+                |v, out| lu.solve_chopped_into(v, Prec::Fp64, out),
+                n,
+                &b,
+                1e-8,
+                50,
+                Prec::Fp64,
+                &mut ws,
+                &mut z,
+            )
+            .iters
+        }));
+        rep.push(&bench("gmres n=256 bf16 (ws reuse)", 1, 5, || {
+            gmres_preconditioned_ws(
+                |xc, out| chopped_matvec_prechopped_into(&a16, xc, Prec::Bf16, out),
+                |v, out| lu16.solve_chopped_into(v, Prec::Bf16, out),
+                n,
+                &b,
+                1e-6,
+                50,
+                Prec::Bf16,
+                &mut ws,
+                &mut z,
+            )
+            .iters
+        }));
+    }
+
+    // --- PCG: allocating vs workspace form (dir = y.clone() and the
+    // per-call temporaries vs in-place buffers)
+    {
+        let g = gauss_mat(256, 9, 0.0);
+        let mut a_spd = g.transpose().matmul(&g);
+        for i in 0..256 {
+            a_spd[(i, i)] += 256.0;
+        }
+        let m_inv: Vec<f64> = a_spd.diag().iter().map(|&d| 1.0 / d).collect();
+        let b_cg = a_spd.matvec(&x);
+        rep.push(&bench("pcg_jacobi n=256 fp64 (alloc)", 1, 10, || {
+            pcg_jacobi_op(|v| a_spd.matvec(v), 256, &m_inv, &b_cg, 1e-10, 100, Prec::Fp64).iters
+        }));
+        let mut ws = InnerWs::default();
+        let mut z = Vec::new();
+        rep.push(&bench("pcg_jacobi n=256 fp64 (ws reuse)", 1, 10, || {
+            pcg_jacobi_ws(
+                |xc, out| a_spd.matvec_into(xc, out),
+                256,
+                &m_inv,
+                &b_cg,
+                1e-10,
+                100,
+                Prec::Fp64,
+                &mut ws,
+                &mut z,
+            )
+            .iters
+        }));
+    }
 
     // --- condest (feature extraction) ---
     rep.push(&bench("condest_1 n=256", 1, 10, || condest_1(&a, &lu) as u64));

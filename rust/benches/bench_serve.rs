@@ -1,0 +1,44 @@
+//! Serving-throughput bench (EXPERIMENTS.md §Serve): end-to-end
+//! `Autotuner` latency/throughput across the dense/sparse ×
+//! repeated-A/fresh-A workload mixes plus a `solve_batch` throughput
+//! case. Emits `BENCH_serve.json` (path override: `PA_BENCH_SERVE_JSON`)
+//! next to `BENCH_micro.json`, seeding the serving-perf trajectory the
+//! CI artifact tracks across PRs.
+//!
+//! Scale knobs via env (CI uses the defaults): `PA_SERVE_REQUESTS`,
+//! `PA_SERVE_N_DENSE`, `PA_SERVE_N_SPARSE`.
+
+use precision_autotune::coordinator::serve_bench::{run_serve_bench, ServeBenchOpts};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let defaults = ServeBenchOpts::default();
+    let opts = ServeBenchOpts {
+        requests: env_usize("PA_SERVE_REQUESTS", defaults.requests),
+        n_dense: env_usize("PA_SERVE_N_DENSE", defaults.n_dense),
+        n_sparse: env_usize("PA_SERVE_N_SPARSE", defaults.n_sparse),
+        quiet: false,
+    };
+    let report = match run_serve_bench(&opts) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let path =
+        std::env::var("PA_BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    match std::fs::write(&path, report.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => {
+            eprintln!("\nfailed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Cross-request session cache (DESIGN.md §2e): the amortization layer
+//! of the serving facade.
+//!
+//! Repeated-A / many-b traffic — the regime "Learning to Relax" frames,
+//! a *sequence* of related systems — used to rebuild a
+//! [`ProblemSession`] (chopped-A slabs, densified copy) and re-run the
+//! O(n³) feature LU on every request. [`SessionCache`] keys an owned,
+//! `'static` session by the operator's 256-bit
+//! [`SystemInput::fingerprint`], so a hit reuses:
+//!
+//! * the session itself — chopped-A dense slabs / chopped-CSR values per
+//!   precision, the densified copy of a sparse input, the PJRT padding;
+//! * the f64 feature LU + κ₁ estimate (computed lazily, only on routes
+//!   that need features, and then shared with the refinement step via
+//!   the facade's factor-reuse path);
+//! * the cheap per-operator facts (‖A‖∞, nnz, density).
+//!
+//! **Safety over speed on hits:** the fingerprint is the index, but a
+//! candidate hit is additionally verified bitwise against the stored
+//! operator ([`same_system`]) — a fingerprint collision can cost a
+//! rebuild, never a wrong reuse. Both the fingerprint and the verify are
+//! one O(nnz) pass, which is already the floor for accepting raw request
+//! data.
+//!
+//! **Eviction:** strict LRU over a capacity-bounded list, move-to-front
+//! on hit. Entries are `Arc`-shared, so evicting an entry mid-solve is
+//! safe — in-flight requests keep their reference alive.
+//!
+//! **Thread-safety:** the cache is `Send + Sync`; the LRU list sits
+//! behind one `Mutex` held only for lookup/reorder (entry construction
+//! and the lazy feature LU run outside it — racing builders of the same
+//! key are deduplicated on re-insert, losers adopt the winner's entry).
+//! Hit/miss counters are relaxed atomics surfaced per-request in
+//! [`crate::api::SolveReport`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::chop::Prec;
+use crate::linalg::condest::condest_1;
+use crate::linalg::lu::lu_factor;
+use crate::solver::{LuHandle, ProblemSession};
+use crate::system::SystemInput;
+
+/// One cached operator: the owned system, its `'static` solve session
+/// (all derived slabs live as long as the entry), the cheap operator
+/// facts, and the lazily computed feature pass.
+pub struct SessionEntry {
+    system: Arc<SystemInput>,
+    session: ProblemSession<'static>,
+    norm_inf: f64,
+    nnz: usize,
+    density: f64,
+    n: usize,
+    /// (κ₁ estimate, f64 LU) — `None` LU on a singular matrix (κ = ∞),
+    /// exactly the pre-cache feature-pass semantics. Computed at most
+    /// once per entry; every later request that needs features gets it
+    /// for free.
+    features: OnceLock<(f64, Option<LuHandle>)>,
+}
+
+impl SessionEntry {
+    /// Build an entry (cheap: O(nnz) facts only; no LU, no chopping —
+    /// those stay lazy in the session / feature pass).
+    pub fn new(system: SystemInput) -> Arc<SessionEntry> {
+        let norm_inf = system.norm_inf();
+        let nnz = system.nnz();
+        let density = system.density();
+        let n = system.n_rows();
+        let system = Arc::new(system);
+        let session = ProblemSession::new_owned(Arc::clone(&system));
+        Arc::new(SessionEntry {
+            system,
+            session,
+            norm_inf,
+            nnz,
+            density,
+            n,
+            features: OnceLock::new(),
+        })
+    }
+
+    pub fn session(&self) -> &ProblemSession<'static> {
+        &self.session
+    }
+
+    pub fn system(&self) -> &SystemInput {
+        &self.system
+    }
+
+    pub fn norm_inf(&self) -> f64 {
+        self.norm_inf
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The κ₁ feature pass (Hager–Higham over an f64 LU), computed once
+    /// per entry through the session's cached dense form and shared with
+    /// the facade's fp64 factor-reuse path. Same computation as the
+    /// pre-cache per-request pass, so cached and fresh solves are
+    /// bit-identical.
+    pub fn features(&self) -> &(f64, Option<LuHandle>) {
+        self.features.get_or_init(|| {
+            let dense = self.session.dense_for_factorization();
+            match lu_factor(dense) {
+                Ok(lu) => {
+                    let kappa = condest_1(dense, &lu);
+                    let handle = LuHandle {
+                        lu: lu.lu,
+                        piv: lu.piv.iter().map(|&x| x as i32).collect(),
+                        prec: Prec::Fp64,
+                    };
+                    (kappa, Some(handle))
+                }
+                Err(_) => (f64::INFINITY, None),
+            }
+        })
+    }
+}
+
+/// Bitwise operator equality (values via `to_bits`, structure exactly) —
+/// the hit verifier. Distinguishes ±0.0 and treats equal NaN bit
+/// patterns as equal, i.e. "same stored bytes", which is precisely the
+/// condition under which reusing cached derived state is sound.
+pub fn same_system(a: &SystemInput, b: &SystemInput) -> bool {
+    let bits_eq = |x: &[f64], y: &[f64]| {
+        x.len() == y.len() && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
+    };
+    match (a, b) {
+        (SystemInput::Dense(ma), SystemInput::Dense(mb)) => {
+            ma.n_rows == mb.n_rows && ma.n_cols == mb.n_cols && bits_eq(&ma.data, &mb.data)
+        }
+        (SystemInput::Sparse(ca), SystemInput::Sparse(cb)) => {
+            ca.n_rows == cb.n_rows
+                && ca.n_cols == cb.n_cols
+                && ca.row_ptr == cb.row_ptr
+                && ca.col_idx == cb.col_idx
+                && bits_eq(&ca.values, &cb.values)
+        }
+        _ => false,
+    }
+}
+
+/// (fingerprint, entry) pairs, most recently used first.
+type LruList = Vec<([u64; 4], Arc<SessionEntry>)>;
+
+/// Capacity-bounded LRU of [`SessionEntry`]s keyed by operator
+/// fingerprint. See the module docs for the contract.
+pub struct SessionCache {
+    cap: usize,
+    /// front = most recently used
+    lru: Mutex<LruList>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SessionCache {
+    /// `cap = 0` disables caching (the facade then builds a transient
+    /// entry per request — exactly the pre-cache behavior).
+    pub fn new(cap: usize) -> SessionCache {
+        SessionCache {
+            cap,
+            lru: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Cached entries currently held.
+    pub fn len(&self) -> usize {
+        self.lru.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime hit count (reused entries).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime miss count (entries built).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached entry (counters keep running).
+    pub fn clear(&self) {
+        self.lru.lock().unwrap().clear();
+    }
+
+    /// Look up `system`, building (and inserting) an entry on miss.
+    /// Returns `(entry, hit)`. The caller validates the system *before*
+    /// calling (cached entries are known-finite, so hits skip
+    /// re-validation). With `cap = 0` this must not be called — use
+    /// [`SessionEntry::new`] directly.
+    pub fn get_or_insert(&self, system: &SystemInput) -> (Arc<SessionEntry>, bool) {
+        debug_assert!(self.enabled());
+        let key = system.fingerprint();
+        if let Some(entry) = self.touch(&key, system) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (entry, true);
+        }
+        // Build outside the lock: O(nnz) clone + facts must not block
+        // unrelated requests.
+        let entry = SessionEntry::new(system.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut lru = self.lru.lock().unwrap();
+        // Re-check: a racing request may have inserted the same operator
+        // while we built. Adopt the winner (shared derived state beats a
+        // private duplicate); our build is discarded.
+        if let Some(pos) = lru
+            .iter()
+            .position(|(k, e)| *k == key && same_system(e.system(), system))
+        {
+            let existing = lru.remove(pos);
+            let arc = Arc::clone(&existing.1);
+            lru.insert(0, existing);
+            return (arc, false);
+        }
+        lru.insert(0, (key, Arc::clone(&entry)));
+        lru.truncate(self.cap);
+        (entry, false)
+    }
+
+    /// Move a verified hit to the front and return it.
+    fn touch(&self, key: &[u64; 4], system: &SystemInput) -> Option<Arc<SessionEntry>> {
+        let mut lru = self.lru.lock().unwrap();
+        let pos = lru
+            .iter()
+            .position(|(k, e)| k == key && same_system(e.system(), system))?;
+        let pair = lru.remove(pos);
+        let arc = Arc::clone(&pair.1);
+        lru.insert(0, pair);
+        Some(arc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn dense(seed: u64, n: usize) -> SystemInput {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        SystemInput::Dense(a)
+    }
+
+    #[test]
+    fn hit_returns_the_same_entry_and_counts() {
+        let cache = SessionCache::new(4);
+        let sys = dense(1, 8);
+        let (e1, hit1) = cache.get_or_insert(&sys);
+        let (e2, hit2) = cache.get_or_insert(&sys);
+        assert!(!hit1 && hit2);
+        assert!(Arc::ptr_eq(&e1, &e2));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cache = SessionCache::new(2);
+        let (s1, s2, s3) = (dense(1, 6), dense(2, 6), dense(3, 6));
+        cache.get_or_insert(&s1);
+        cache.get_or_insert(&s2);
+        cache.get_or_insert(&s1); // s1 now MRU
+        cache.get_or_insert(&s3); // evicts s2
+        assert_eq!(cache.len(), 2);
+        let (_, hit_s1) = cache.get_or_insert(&s1);
+        assert!(hit_s1, "recently used survives");
+        let (_, hit_s2) = cache.get_or_insert(&s2);
+        assert!(!hit_s2, "LRU victim was rebuilt");
+    }
+
+    #[test]
+    fn features_computed_once_and_shared() {
+        let sys = dense(5, 10);
+        let entry = SessionEntry::new(sys);
+        let f1 = entry.features() as *const _;
+        let f2 = entry.features() as *const _;
+        assert_eq!(f1, f2);
+        let (kappa, lu) = entry.features();
+        assert!(*kappa >= 1.0);
+        assert!(lu.is_some());
+    }
+
+    #[test]
+    fn singular_matrix_features_are_infinite_kappa() {
+        let entry = SessionEntry::new(SystemInput::Dense(Mat::zeros(5, 5)));
+        let (kappa, lu) = entry.features();
+        assert_eq!(*kappa, f64::INFINITY);
+        assert!(lu.is_none());
+    }
+
+    #[test]
+    fn same_system_is_bitwise() {
+        let a = dense(7, 5);
+        assert!(same_system(&a, &a.clone()));
+        if let SystemInput::Dense(m) = &a {
+            let mut b = m.clone();
+            b[(0, 0)] = f64::from_bits(b[(0, 0)].to_bits() ^ 1);
+            assert!(!same_system(&a, &SystemInput::Dense(b)));
+            // ±0.0 are different stored bytes => different systems
+            let mut z1 = m.clone();
+            let mut z2 = m.clone();
+            z1[(1, 1)] = 0.0;
+            z2[(1, 1)] = -0.0;
+            assert!(!same_system(&SystemInput::Dense(z1), &SystemInput::Dense(z2)));
+        }
+        let c = crate::sparse::Csr::from_dense(match &a {
+            SystemInput::Dense(m) => m,
+            _ => unreachable!(),
+        });
+        assert!(!same_system(&a, &SystemInput::Sparse(c)), "shape is identity");
+    }
+
+    #[test]
+    fn cache_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SessionCache>();
+        assert_send_sync::<SessionEntry>();
+    }
+}

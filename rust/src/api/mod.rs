@@ -45,8 +45,22 @@
 //! ```
 //!
 //! One [`Autotuner`] is immutable after `build()` and `Send + Sync` —
-//! callers may share it across request threads; every `solve` opens its
-//! own [`crate::solver::ProblemSession`] internally.
+//! callers may share it across request threads. Serving state is
+//! amortized two ways (DESIGN.md §2e):
+//!
+//! * a cross-request [`SessionCache`] (LRU over operator fingerprints)
+//!   reuses chopped-A slabs, the f64 feature LU, and per-operator facts
+//!   across repeated-A / many-b traffic — hit/miss counters surface in
+//!   every [`SolveReport`];
+//! * a [`crate::solver::workspace::WorkspacePool`] hands each in-flight
+//!   solve a warmed scratch set, making the steady-state IR loop
+//!   allocation-free (locked by `tests/alloc_regression.rs`).
+//!
+//! Batched serving goes through [`Autotuner::solve_batch`], which fans
+//! requests across `PA_THREADS` workers with per-thread workspaces and
+//! is bit-identical to calling [`Autotuner::solve`] sequentially.
+
+pub mod cache;
 
 use anyhow::{bail, Result};
 
@@ -56,13 +70,20 @@ use crate::bandit::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};
 use crate::chop::Prec;
 use crate::coordinator::eval::EvalRecord;
 use crate::gen::Problem;
-use crate::linalg::condest::condest_1;
-use crate::linalg::lu::lu_factor;
-use crate::solver::family::solve_refinement;
+use crate::solver::family::solve_refinement_ws;
 use crate::solver::ir::StopReason;
-use crate::solver::{LuHandle, ProblemSession, SolverBackend};
+use crate::solver::workspace::WorkspacePool;
+use crate::solver::{LuHandle, SolverBackend};
 use crate::system::SystemInput;
 use crate::util::config::Config;
+use std::sync::Arc;
+
+pub use cache::{SessionCache, SessionEntry};
+
+/// Default [`SessionCache`] capacity (operators). Enough for a handful
+/// of hot systems without pinning unbounded O(n²) derived state; tune
+/// via [`AutotunerBuilder::session_cache`] (0 disables).
+pub const DEFAULT_SESSION_CACHE: usize = 16;
 
 /// Everything one facade solve reports. There is no reference solution
 /// for user-supplied systems, so accuracy is the normwise relative
@@ -90,9 +111,11 @@ pub struct SolveReport {
     /// non-finite backward error).
     pub failed: bool,
     /// Hager–Higham κ₁ estimate of A (context feature φ₁). NaN when the
-    /// solve skipped the feature pass — explicit CG actions and forced
-    /// `cg-ir` without a policy need no context and avoid its transient
-    /// densification + f64 LU (see [`Autotuner::solve_with_action`]).
+    /// solve skipped the feature pass — explicit actions that cannot
+    /// reuse its f64 LU as the refinement factorization (any CG action,
+    /// LU actions with u_f ≠ fp64, non-host-factor backends) and forced
+    /// `cg-ir` without a policy need no context and avoid the transient
+    /// densification + O(n³) LU (see [`Autotuner::solve_with_action`]).
     pub kappa_est: f64,
     /// ‖A‖∞ (context feature φ₂).
     pub norm_inf: f64,
@@ -103,6 +126,14 @@ pub struct SolveReport {
     pub nnz: usize,
     /// Which backend solved it.
     pub backend: &'static str,
+    /// True when this request reused a [`SessionCache`] entry (chopped-A
+    /// slabs + feature LU amortized from an earlier request). Always
+    /// false with the cache disabled.
+    pub cache_hit: bool,
+    /// Tuner-lifetime session-cache hit counter at report time.
+    pub cache_hits: u64,
+    /// Tuner-lifetime session-cache miss (= entry build) counter.
+    pub cache_misses: u64,
 }
 
 /// What [`Autotuner::train`] returns besides the policy it installs.
@@ -120,15 +151,33 @@ pub struct Autotuner {
     backend: Box<dyn SolverBackend>,
     policy: Option<TrainedPolicy>,
     cfg: Config,
+    cache: SessionCache,
+    workspaces: WorkspacePool,
+}
+
+/// How one request picks its action (private routing of the three
+/// public solve entry points; the feature-pass and fallback semantics
+/// differ per route — see `solve_core`).
+enum Route {
+    /// `solve`: policy pick (FP64 baseline without a policy), with the
+    /// mis-routed-CG serving fallback.
+    Policy,
+    /// `solve_with_action`: explicit action, no fallback.
+    Forced(Action),
+    /// `solve_with_solver`: policy precision pick, forced family, no
+    /// fallback.
+    Family(SolverFamily),
 }
 
 /// Builder for [`Autotuner`]. Defaults: native backend, no policy (every
-/// solve uses the all-FP64 baseline action), `Config::default()`.
+/// solve uses the all-FP64 baseline action), `Config::default()`, a
+/// [`DEFAULT_SESSION_CACHE`]-entry session cache.
 #[derive(Default)]
 pub struct AutotunerBuilder {
     backend: Option<Box<dyn SolverBackend>>,
     policy: Option<TrainedPolicy>,
     cfg: Option<Config>,
+    session_cache: Option<usize>,
 }
 
 impl AutotunerBuilder {
@@ -157,6 +206,16 @@ impl AutotunerBuilder {
         self
     }
 
+    /// Session-cache capacity in operators (default
+    /// [`DEFAULT_SESSION_CACHE`]; `0` disables cross-request caching —
+    /// every solve builds a transient session, the pre-cache behavior).
+    /// Results are bit-identical either way; only the amortization
+    /// changes.
+    pub fn session_cache(mut self, capacity: usize) -> AutotunerBuilder {
+        self.session_cache = Some(capacity);
+        self
+    }
+
     /// Validate and assemble. Fails loudly on an inconsistent policy
     /// (empty action list or Q-table/discretizer shape mismatch) instead
     /// of deferring the surprise to the first solve.
@@ -177,7 +236,13 @@ impl AutotunerBuilder {
                 );
             }
         }
-        Ok(Autotuner { backend, policy: self.policy, cfg })
+        Ok(Autotuner {
+            backend,
+            policy: self.policy,
+            cfg,
+            cache: SessionCache::new(self.session_cache.unwrap_or(DEFAULT_SESSION_CACHE)),
+            workspaces: WorkspacePool::new(),
+        })
     }
 }
 
@@ -199,16 +264,25 @@ impl Autotuner {
         self.backend.name()
     }
 
+    /// The served session cache (hit/miss counters, size, capacity).
+    pub fn session_cache(&self) -> &SessionCache {
+        &self.cache
+    }
+
     /// Extract context features and pick the precision configuration the
     /// policy would use for `a` — without solving. Returns the action
-    /// plus the (κ₁ estimate, ‖A‖∞) features it was chosen from.
+    /// plus the (κ₁ estimate, ‖A‖∞) features it was chosen from. The
+    /// feature pass lands in the session cache, so a later
+    /// [`Autotuner::solve`] of the same operator reuses its f64 LU.
     pub fn select_action(&self, a: impl Into<SystemInput>) -> Result<(Action, f64, f64)> {
-        let (p, _) = self.wrap_problem(a.into(), &[])?;
+        let system = a.into();
+        let (entry, _) = self.prepare(&system, &[])?;
+        let (kappa, _) = entry.features();
         let action = match &self.policy {
-            Some(pol) => pol.select(&p),
+            Some(pol) => pol.select_features(*kappa, entry.norm_inf()),
             None => Action::FP64,
         };
-        Ok((action, p.kappa_est, p.norm_inf))
+        Ok((action, *kappa, entry.norm_inf()))
     }
 
     /// Solve `A x = b`: features → discretize → greedy action → GMRES-IR
@@ -224,45 +298,62 @@ impl Autotuner {
     /// for the κ₁ feature is reused as the refinement factorization —
     /// one O(n³) factorization per request instead of two.
     pub fn solve(&self, a: impl Into<SystemInput>, b: &[f64]) -> Result<SolveReport> {
-        let (p, f64_lu) = self.wrap_problem(a.into(), b)?;
-        let action = match &self.policy {
-            Some(pol) => pol.select(&p),
-            None => Action::FP64,
-        };
-        let rep = self.solve_prepared(&p, f64_lu.as_ref(), action)?;
-        // Serving fallback: the context features carry no SPD bit, so an
-        // extended-space policy can mis-route a non-SPD system to CG-IR,
-        // whose curvature test then breaks down deterministically. A
-        // policy-driven solve falls back to the safe all-FP64 LU action
-        // (reusing the feature LU — no extra factorization) instead of
-        // failing a request the LU family handles fine; the report's
-        // `action`/`solver` show what actually ran. Explicit routes
-        // (`solve_with_action`, forced `--solver cg-ir`) do not fall
-        // back — the caller asked for that family and failure is the
-        // honest answer.
-        if rep.failed && action.solver == SolverFamily::CgIr {
-            return self.solve_prepared(&p, f64_lu.as_ref(), Action::FP64);
-        }
-        Ok(rep)
+        let system = a.into();
+        self.solve_core(&system, b, Route::Policy)
+    }
+
+    /// [`Autotuner::solve`] from a borrowed operator: no `Into`
+    /// conversion, so nothing is cloned on a session-cache hit (the
+    /// operator is only copied when a *new* cache entry is built). The
+    /// cheapest call shape for repeated-A serving loops — `solve(&a, b)`
+    /// with a `&Mat`/`&Csr` clones the operator per request just to
+    /// fingerprint it. [`Autotuner::solve_batch`] uses this internally.
+    pub fn solve_ref(&self, system: &SystemInput, b: &[f64]) -> Result<SolveReport> {
+        self.solve_core(system, b, Route::Policy)
+    }
+
+    /// Batched serving: solve every `(A, b)` request, fanned out across
+    /// `PA_THREADS` workers ([`crate::util::pool`]) with one pooled
+    /// workspace per in-flight solve. Per-request results (including
+    /// per-request errors — one bad request never fails the batch) are
+    /// returned in input order, and every *solve* field (`x`, `nbe`,
+    /// iteration counts, `action`, features) is **bit-identical to
+    /// calling [`Autotuner::solve`] sequentially, for any thread
+    /// count**: each request is independent, the session cache hands
+    /// racing requests of the same operator one shared entry, and cached
+    /// vs. fresh sessions are themselves bit-identical (locked by
+    /// `tests/serve_batch.rs`). The cache *telemetry* fields
+    /// (`cache_hit`, `cache_hits`, `cache_misses`) are the one
+    /// exception: two workers racing on a brand-new operator may both
+    /// record a miss (the loser discards its build and adopts the
+    /// winner's entry), so those counters can differ from the sequential
+    /// schedule — numeric results never do.
+    pub fn solve_batch(&self, requests: &[(SystemInput, &[f64])]) -> Vec<Result<SolveReport>> {
+        crate::util::pool::parallel_map(requests.len(), |i| {
+            let (system, b) = &requests[i];
+            self.solve_core(system, b, Route::Policy)
+        })
     }
 
     /// Solve with an explicit precision configuration, bypassing the
     /// policy (baselines, A/B comparisons).
     ///
     /// With no policy to consult, the κ₁ context feature is only needed
-    /// for the LU family's f64-factor reuse — an explicit **CG action
-    /// skips the feature pass entirely**, so a sparse input runs truly
-    /// matvec-only end to end (no transient densification, no O(n³)
-    /// feature LU; `SolveReport::kappa_est` is NaN in that case).
+    /// for the LU family's f64-factor reuse — so the feature pass runs
+    /// **only** when the action can actually reuse it (LU family with
+    /// u_f = fp64 on a host-factor backend). Every other explicit action
+    /// skips it: a CG action on a sparse input runs truly matvec-only
+    /// end to end (no transient densification, no O(n³) feature LU), a
+    /// low-precision LU action factors exactly once, and
+    /// `SolveReport::kappa_est` is NaN in those cases.
     pub fn solve_with_action(
         &self,
         a: impl Into<SystemInput>,
         b: &[f64],
         action: Action,
     ) -> Result<SolveReport> {
-        let features = action.solver == SolverFamily::LuIr;
-        let (p, f64_lu) = self.wrap_problem_inner(a.into(), b, features)?;
-        self.solve_prepared(&p, f64_lu.as_ref(), action)
+        let system = a.into();
+        self.solve_core(&system, b, Route::Forced(action))
     }
 
     /// Solve with the policy's precision pick but a forced refinement
@@ -279,14 +370,8 @@ impl Autotuner {
         b: &[f64],
         family: SolverFamily,
     ) -> Result<SolveReport> {
-        let features = self.policy.is_some() || family == SolverFamily::LuIr;
-        let (p, f64_lu) = self.wrap_problem_inner(a.into(), b, features)?;
-        let action = match &self.policy {
-            Some(pol) => pol.select(&p),
-            None => Action::FP64,
-        }
-        .with_solver(family);
-        self.solve_prepared(&p, f64_lu.as_ref(), action)
+        let system = a.into();
+        self.solve_core(&system, b, Route::Family(family))
     }
 
     /// Evaluate the served policy over generated [`Problem`]s (which carry
@@ -317,29 +402,11 @@ impl Autotuner {
         })
     }
 
-    /// Wrap a raw (A, b) into the [`Problem`] shape the driver and the
-    /// discretizer consume, plus the f64 LU the κ₁ estimate was derived
-    /// from (None on a singular matrix), kept for factorization reuse.
-    /// `x_true` stays empty — the serving path has no reference solution
-    /// (see `solver::ir`). `b` may be empty for feature-only paths.
-    fn wrap_problem(&self, system: SystemInput, b: &[f64]) -> Result<(Problem, Option<LuHandle>)> {
-        self.wrap_problem_inner(system, b, true)
-    }
-
-    /// `features = true` runs the κ₁ feature pass: it needs an f64 LU,
-    /// so sparse inputs densify here transiently (the dense copy is
-    /// dropped before the [`Problem`] is built; the solve session
-    /// re-densifies only if the action's u_f factorization runs — CG
-    /// actions never do). Paths that neither consult the policy nor can
-    /// reuse an f64 factor (explicit CG actions, forced `cg-ir` without
-    /// a policy) pass `features = false` and skip the densification and
-    /// the O(n³) LU entirely: κ is reported as NaN.
-    fn wrap_problem_inner(
-        &self,
-        system: SystemInput,
-        b: &[f64],
-        features: bool,
-    ) -> Result<(Problem, Option<LuHandle>)> {
+    /// Validate a request and resolve its [`SessionEntry`]: a cache
+    /// lookup (hit ⇒ every derived slab already warm) or a build —
+    /// transient when the cache is disabled, inserted otherwise. `b` may
+    /// be empty for feature-only paths ([`Autotuner::select_action`]).
+    fn prepare(&self, system: &SystemInput, b: &[f64]) -> Result<(Arc<SessionEntry>, bool)> {
         let (nr, nc) = (system.n_rows(), system.n_cols());
         if nr != nc {
             bail!("matrix must be square, got {nr}x{nc}");
@@ -353,52 +420,88 @@ impl Autotuner {
         if system.has_non_finite() || b.iter().any(|v| !v.is_finite()) {
             bail!("matrix or rhs contains non-finite entries");
         }
-        // same semantics as gen::features_of_system, but keeping the LU
-        let norm_inf = system.norm_inf();
-        let (kappa_est, f64_lu) = if features {
-            let dense = system.to_dense_for_factorization();
-            match lu_factor(&dense) {
-                Ok(lu) => {
-                    let kappa = condest_1(&dense, &lu);
-                    let handle = LuHandle {
-                        lu: lu.lu,
-                        piv: lu.piv.iter().map(|&x| x as i32).collect(),
-                        prec: Prec::Fp64,
-                    };
-                    (kappa, Some(handle))
-                }
-                Err(_) => (f64::INFINITY, None),
+        Ok(if self.cache.enabled() {
+            self.cache.get_or_insert(system)
+        } else {
+            (SessionEntry::new(system.clone()), false)
+        })
+    }
+
+    /// The one serving pipeline behind every public solve entry:
+    /// validate → session (cached or fresh) → features (lazy, per
+    /// route) → action (per route) → workspace refinement → report.
+    ///
+    /// Feature semantics per route (unchanged from the pre-cache facade):
+    /// the policy route always runs the κ₁ pass (the report carries κ
+    /// even without a policy); an explicit CG action skips it entirely —
+    /// a sparse input then runs truly matvec-only with κ = NaN; a forced
+    /// family runs it when a policy needs context or the family is LU.
+    ///
+    /// Serving fallback (policy route only): the context features carry
+    /// no SPD bit, so an extended-space policy can mis-route a non-SPD
+    /// system to CG-IR, whose curvature test then breaks down
+    /// deterministically. The policy route falls back to the safe
+    /// all-FP64 LU action (reusing the feature LU — no extra
+    /// factorization) instead of failing a request the LU family handles
+    /// fine; the report's `action`/`solver` show what actually ran.
+    /// Explicit routes do not fall back — the caller asked for that
+    /// family and failure is the honest answer.
+    fn solve_core(&self, system: &SystemInput, b: &[f64], route: Route) -> Result<SolveReport> {
+        let (entry, hit) = self.prepare(system, b)?;
+        if b.len() != entry.n() {
+            bail!("rhs length {} does not match matrix size {}", b.len(), entry.n());
+        }
+        let needs_features = match &route {
+            Route::Policy => true,
+            // An explicit action consults no policy, so the O(n³) κ₁
+            // pass pays off only when its f64 LU doubles as the
+            // refinement factorization (LU family, u_f = fp64, backend
+            // takes host factors). Every other explicit action skips it
+            // — κ is reported NaN, and an explicit CG action on a sparse
+            // input stays truly matvec-only end to end.
+            Route::Forced(a) => {
+                a.solver == SolverFamily::LuIr
+                    && a.u_f == Prec::Fp64
+                    && self.backend.accepts_host_factors()
             }
+            Route::Family(f) => self.policy.is_some() || *f == SolverFamily::LuIr,
+        };
+        let (kappa, f64_lu) = if needs_features {
+            let (k, lu) = entry.features();
+            (*k, lu.as_ref())
         } else {
             (f64::NAN, None)
         };
-        let density = system.density();
-        let p = Problem {
-            id: 0,
-            system,
-            b: b.to_vec(),
-            x_true: Vec::new(),
-            n: nr,
-            kappa_target: f64::NAN,
-            kappa_est,
-            norm_inf,
-            density,
-            // unknown for user-supplied systems; the policy's action
-            // encoding decides the family, not this flag
-            spd: false,
+        let action = match &route {
+            Route::Forced(a) => *a,
+            Route::Policy | Route::Family(_) => {
+                let picked = match &self.policy {
+                    Some(pol) => pol.select_features(kappa, entry.norm_inf()),
+                    None => Action::FP64,
+                };
+                match &route {
+                    Route::Family(f) => picked.with_solver(*f),
+                    _ => picked,
+                }
+            }
         };
-        Ok((p, f64_lu))
+        let rep = self.run_refinement(&entry, b, action, f64_lu, kappa, hit)?;
+        if rep.failed && action.solver == SolverFamily::CgIr && matches!(route, Route::Policy) {
+            return self.run_refinement(&entry, b, Action::FP64, f64_lu, kappa, hit);
+        }
+        Ok(rep)
     }
 
-    fn solve_prepared(
+    /// One workspace-backed refinement solve inside a session entry.
+    fn run_refinement(
         &self,
-        p: &Problem,
-        f64_lu: Option<&LuHandle>,
+        entry: &SessionEntry,
+        b: &[f64],
         action: Action,
+        f64_lu: Option<&LuHandle>,
+        kappa: f64,
+        cache_hit: bool,
     ) -> Result<SolveReport> {
-        if p.b.len() != p.n {
-            bail!("rhs length {} does not match matrix size {}", p.b.len(), p.n);
-        }
         // Reuse the feature LU as the refinement factorization when it is
         // exactly what the action asks for (LU family, u_f = fp64) and
         // the backend consumes host-layout factors (PJRT needs
@@ -412,9 +515,17 @@ impl Autotuner {
         } else {
             None
         };
-        let session = ProblemSession::new(&p.system);
-        let out =
-            solve_refinement(self.backend.as_ref(), &session, p, &action, &self.cfg, prefactored)?;
+        let mut ws = self.workspaces.checkout();
+        let out = solve_refinement_ws(
+            self.backend.as_ref(),
+            entry.session(),
+            b,
+            &[],
+            &action,
+            &self.cfg,
+            prefactored,
+            &mut ws,
+        )?;
         Ok(SolveReport {
             x: out.x,
             solver: action.solver,
@@ -424,11 +535,14 @@ impl Autotuner {
             gmres_iters: out.gmres_iters,
             stop: out.stop,
             failed: out.failed,
-            kappa_est: p.kappa_est,
-            norm_inf: p.norm_inf,
-            density: p.density,
-            nnz: p.system.nnz(),
+            kappa_est: kappa,
+            norm_inf: entry.norm_inf(),
+            density: entry.density(),
+            nnz: entry.nnz(),
             backend: self.backend.name(),
+            cache_hit,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
         })
     }
 }
@@ -542,6 +656,13 @@ mod tests {
         assert_eq!(rep.action, act);
         assert_eq!(rep.solver, SolverFamily::LuIr);
         assert!(!rep.failed);
+        // u_f = bf16 cannot reuse an f64 feature LU, so the explicit
+        // route skips the O(n³) feature pass entirely
+        assert!(rep.kappa_est.is_nan(), "kappa {}", rep.kappa_est);
+        // an explicit fp64-u_f action *can* reuse it and reports κ
+        let rep64 = tuner.solve_with_action(&a, &b, Action::FP64).unwrap();
+        assert!(rep64.kappa_est.is_finite());
+        assert!(!rep64.failed);
     }
 
     #[test]
@@ -552,7 +673,18 @@ mod tests {
         let tuner = Autotuner::builder().build().unwrap();
         let (a, _, b) = well_conditioned_system(28, 9);
         let rep = tuner.solve(&a, &b).unwrap();
-        let (p, _) = tuner.wrap_problem(SystemInput::from(&a), &b).unwrap();
+        let p = Problem {
+            id: 0,
+            system: SystemInput::from(&a),
+            b: b.clone(),
+            x_true: Vec::new(),
+            n: 28,
+            kappa_target: f64::NAN,
+            kappa_est: f64::NAN,
+            norm_inf: a.norm_inf(),
+            density: 1.0,
+            spd: false,
+        };
         let out =
             crate::solver::ir::gmres_ir(tuner.backend.as_ref(), &p, &Action::FP64, tuner.config())
                 .unwrap();
@@ -562,6 +694,42 @@ mod tests {
         }
         assert_eq!(rep.nbe.to_bits(), out.nbe.to_bits());
         assert_eq!(rep.gmres_iters, out.gmres_iters);
+    }
+
+    #[test]
+    fn session_cache_hits_are_bit_identical_and_counted() {
+        // second solve of the same A reuses the cached session + feature
+        // LU; every numeric field must be bit-identical to the miss.
+        let tuner = Autotuner::builder().build().unwrap();
+        let (a, _, b) = well_conditioned_system(24, 31);
+        let r1 = tuner.solve(&a, &b).unwrap();
+        assert!(!r1.cache_hit);
+        assert_eq!((r1.cache_hits, r1.cache_misses), (0, 1));
+        let r2 = tuner.solve(&a, &b).unwrap();
+        assert!(r2.cache_hit);
+        assert_eq!((r2.cache_hits, r2.cache_misses), (1, 1));
+        for (u, v) in r1.x.iter().zip(&r2.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(r1.nbe.to_bits(), r2.nbe.to_bits());
+        assert_eq!(r1.kappa_est.to_bits(), r2.kappa_est.to_bits());
+        assert_eq!(r1.gmres_iters, r2.gmres_iters);
+        // disabled cache: never a hit, same bits
+        let plain = Autotuner::builder().session_cache(0).build().unwrap();
+        let r3 = plain.solve(&a, &b).unwrap();
+        assert!(!r3.cache_hit);
+        assert_eq!((r3.cache_hits, r3.cache_misses), (0, 0));
+        for (u, v) in r1.x.iter().zip(&r3.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // borrow-taking entry point: same bits, hits without cloning the
+        // operator at the API boundary
+        let sys = SystemInput::from(&a);
+        let r4 = tuner.solve_ref(&sys, &b).unwrap();
+        assert!(r4.cache_hit);
+        for (u, v) in r1.x.iter().zip(&r4.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 
     #[test]

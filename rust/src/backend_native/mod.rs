@@ -21,8 +21,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::chop::Prec;
-use crate::linalg::gmres::gmres_preconditioned_op;
+use crate::linalg::gmres::{gmres_preconditioned_op, gmres_preconditioned_ws};
 use crate::linalg::lu::{lu_factor_chopped, LuFactors};
+use crate::solver::workspace::InnerWs;
 use crate::solver::{GmresOutcome, LuHandle, ProblemSession, SolverBackend};
 
 /// Native backend. Stateless — see [`ProblemSession`] for where the
@@ -96,6 +97,50 @@ impl SolverBackend for NativeBackend {
             relres: res.relres,
             ok: res.ok,
         })
+    }
+
+    fn residual_into(
+        &self,
+        s: &ProblemSession<'_>,
+        x: &[f64],
+        b: &[f64],
+        p: Prec,
+        xc: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        // Same single chop sequence as `residual`, in place — the
+        // zero-allocation hot path's Step 2.
+        s.residual_into(x, b, p, xc, out);
+        Ok(())
+    }
+
+    fn gmres_ws(
+        &self,
+        s: &ProblemSession<'_>,
+        f: &LuHandle,
+        r: &[f64],
+        tol: f64,
+        max_m: usize,
+        p: Prec,
+        ws: &mut InnerWs,
+        z_out: &mut Vec<f64>,
+    ) -> Result<(usize, bool)> {
+        // The workspace Arnoldi kernel with the handle-native
+        // preconditioner solve: no LuFactors conversion, no per-iteration
+        // buffers — bit-identical to `gmres` (the allocating kernel now
+        // wraps the same code).
+        let stats = gmres_preconditioned_ws(
+            |xc, out| s.chopped_matvec_into(xc, p, out),
+            |v, out| f.solve_chopped_into(v, p, out),
+            s.n(),
+            r,
+            tol,
+            max_m,
+            p,
+            ws,
+            z_out,
+        );
+        Ok((stats.iters, stats.ok))
     }
 
     fn name(&self) -> &'static str {

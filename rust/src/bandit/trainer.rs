@@ -270,8 +270,19 @@ impl TrainedPolicy {
     /// actions the agent actually tried in this state; unvisited states
     /// fall back to the safe all-FP64 configuration.
     pub fn select(&self, p: &Problem) -> crate::bandit::action::Action {
-        let s = self.discretizer.state_of(p);
-        self.qtable.best_action_visited(s)
+        self.select_features(p.kappa_est, p.norm_inf)
+    }
+
+    /// [`TrainedPolicy::select`] from raw (κ₁ estimate, ‖A‖∞) features —
+    /// the serving path, where the cached session carries the features
+    /// without a [`Problem`] wrapper. Same context mapping as
+    /// `features::context_of`, so the two entries are bit-identical.
+    pub fn select_features(&self, kappa_est: f64, norm_inf: f64) -> crate::bandit::action::Action {
+        let c = crate::features::Context {
+            phi_kappa: kappa_est.max(self.discretizer.delta_c).log10(),
+            phi_norm: norm_inf.max(self.discretizer.delta_n).log10(),
+        };
+        self.qtable.best_action_visited(self.discretizer.state_of_context(c))
     }
 
     pub fn to_json(&self) -> Value {

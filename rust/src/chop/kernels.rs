@@ -148,19 +148,39 @@ pub fn chop_csr_matvec(
     x: &[f64],
     fmt: &Format,
 ) -> Vec<f64> {
+    let mut out = Vec::new();
+    chop_csr_matvec_into(row_ptr, col_idx, values, x, fmt, &mut out);
+    out
+}
+
+/// In-place form of [`chop_csr_matvec`]: writes into `out` (cleared +
+/// refilled — allocation-free once `out` has capacity `n_rows`). Same
+/// per-element computation on every branch, so bit-identical to the
+/// allocating form.
+pub fn chop_csr_matvec_into(
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    values: &[f64],
+    x: &[f64],
+    fmt: &Format,
+    out: &mut Vec<f64>,
+) {
     let n_rows = row_ptr.len().saturating_sub(1);
     let row = |i: usize| {
         let (s, e) = (row_ptr[i], row_ptr[i + 1]);
         csr_row_dot(&col_idx[s..e], &values[s..e], x)
     };
+    out.clear();
     if fmt.t == 53 {
-        return (0..n_rows).map(row).collect(); // carrier format: no rounding
+        out.extend((0..n_rows).map(row)); // carrier format: no rounding
+        return;
     }
     if !branchless_ok(fmt) {
-        return (0..n_rows).map(|i| chop(row(i), fmt)).collect();
+        out.extend((0..n_rows).map(|i| chop(row(i), fmt)));
+        return;
     }
     let (t, emin, xmax) = (fmt.t, fmt.emin, fmt.xmax);
-    (0..n_rows).map(|i| chop_one(row(i), t, emin, xmax)).collect()
+    out.extend((0..n_rows).map(|i| chop_one(row(i), t, emin, xmax)));
 }
 
 #[cfg(test)]

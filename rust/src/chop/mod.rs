@@ -14,7 +14,9 @@
 
 pub mod kernels;
 
-pub use kernels::{chop_axpy, chop_block, chop_csr_matvec, chop_sub_scaled_row};
+pub use kernels::{
+    chop_axpy, chop_block, chop_csr_matvec, chop_csr_matvec_into, chop_sub_scaled_row,
+};
 
 /// A floating-point format (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq)]

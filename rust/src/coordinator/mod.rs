@@ -5,6 +5,8 @@
 pub mod eval;
 pub mod experiments;
 pub mod repro;
+pub mod serve_bench;
 
 pub use eval::{evaluate, evaluate_with_action, EvalRecord, EvalSummary, PrecisionUsage};
 pub use experiments::{dense_suite, head_to_head_suite, sparse_suite, HeadToHead, SuiteResult};
+pub use serve_bench::{run_serve_bench, ServeBenchOpts};

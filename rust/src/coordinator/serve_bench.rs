@@ -1,0 +1,301 @@
+//! Serving-throughput benchmark (EXPERIMENTS.md §Serve): the measured
+//! trajectory for the zero-allocation + session-cache + `solve_batch`
+//! serving stack.
+//!
+//! Times the [`crate::api::Autotuner`] end to end — request validation,
+//! fingerprint/cache, features, refinement — under the workload mixes
+//! that bracket the serving regimes:
+//!
+//! | mix | operator | cache behavior |
+//! |---|---|---|
+//! | `dense/repeated-A`  | one dense A, fresh b per request | all hits after the first |
+//! | `dense/fresh-A`     | a distinct dense A per request   | all misses |
+//! | `sparse/repeated-A` | one CSR A, fresh b per request   | all hits after the first |
+//! | `sparse/fresh-A`    | a distinct CSR A per request     | all misses |
+//! | `sparse/repeated-A/cg-ir` | one CSR A, explicit CG-IR  | hits; matvec-only, no feature LU |
+//! | `batch/dense/repeated-A`  | `solve_batch` over the repeated mix | hits; `PA_THREADS` workers |
+//!
+//! Sequential mixes report per-request p50/p99/mean latency and
+//! solves/sec; the batch mix reports wall-clock throughput (per-request
+//! latencies overlap under the pool, so percentiles would be
+//! meaningless there). Systems and right-hand sides are generated
+//! *before* the timed loop. Shared by `benches/bench_serve.rs` (CI
+//! emits `BENCH_serve.json` as an artifact) and the `serve-bench` CLI
+//! subcommand, so the trajectory is reproducible outside CI.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::api::Autotuner;
+use crate::bandit::action::Action;
+use crate::gen::sparse_spd;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::system::SystemInput;
+use crate::util::benchkit::{fmt_ns, percentile};
+use crate::util::json::{self, Value};
+use crate::util::pool::num_threads;
+use crate::util::rng::Rng;
+
+/// Workload-scale knobs (defaults match the CI smoke budget: a few
+/// seconds total in release).
+#[derive(Clone, Debug)]
+pub struct ServeBenchOpts {
+    /// requests per mix
+    pub requests: usize,
+    /// dense operator size
+    pub n_dense: usize,
+    /// sparse operator size (density 0.05, SPD)
+    pub n_sparse: usize,
+    pub quiet: bool,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> ServeBenchOpts {
+        ServeBenchOpts { requests: 48, n_dense: 96, n_sparse: 192, quiet: false }
+    }
+}
+
+fn dense_system(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    a
+}
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.gauss()).collect()
+}
+
+/// One sequential mix: time each request, fold into a JSON case.
+/// `warmup` runs untimed first (workspace growth + cache entry build
+/// land there) — for repeated-A mixes it is the shared operator, for
+/// fresh-A mixes a system *outside* the timed set so every timed
+/// request stays a miss.
+fn run_mix(
+    name: &str,
+    tuner: &Autotuner,
+    warmup: &(SystemInput, Vec<f64>),
+    requests: &[(SystemInput, Vec<f64>)],
+    action: Option<Action>,
+    quiet: bool,
+) -> Result<Value> {
+    let (wa, wb) = warmup;
+    match action {
+        Some(act) => drop(tuner.solve_with_action(wa, wb.as_slice(), act)?),
+        None => drop(tuner.solve(wa, wb.as_slice())?),
+    }
+    let hits0 = tuner.session_cache().hits();
+    let misses0 = tuner.session_cache().misses();
+    let mut lat_ns: Vec<f64> = Vec::with_capacity(requests.len());
+    let t_total = Instant::now();
+    for (a, b) in requests {
+        let t0 = Instant::now();
+        let rep = match action {
+            Some(act) => tuner.solve_with_action(a, b, act)?,
+            None => tuner.solve(a, b)?,
+        };
+        lat_ns.push(t0.elapsed().as_nanos() as f64);
+        ensure!(!rep.failed, "{name}: solve failed ({:?})", rep.stop);
+    }
+    let total_s = t_total.elapsed().as_secs_f64();
+    let hits = tuner.session_cache().hits() - hits0;
+    let misses = tuner.session_cache().misses() - misses0;
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n_req = requests.len();
+    let mean_ns = lat_ns.iter().sum::<f64>() / n_req as f64;
+    let p50 = percentile(&lat_ns, 0.50);
+    let p99 = percentile(&lat_ns, 0.99);
+    let sps = n_req as f64 / total_s;
+    if !quiet {
+        println!(
+            "{:<28} {:>7.1} solves/s   p50 {:>10}   p99 {:>10}   hits {:>3}/{:<3}",
+            name,
+            sps,
+            fmt_ns(p50),
+            fmt_ns(p99),
+            hits,
+            hits + misses
+        );
+    }
+    Ok(json::obj(vec![
+        ("name", json::s(name)),
+        ("requests", json::num(n_req as f64)),
+        ("solves_per_sec", json::num(sps)),
+        ("p50_ns", json::num(p50)),
+        ("p99_ns", json::num(p99)),
+        ("mean_ns", json::num(mean_ns)),
+        ("cache_hits", json::num(hits as f64)),
+        ("cache_misses", json::num(misses as f64)),
+    ]))
+}
+
+/// Run every mix and return the `BENCH_serve.json` value
+/// (`{suite, threads, cases: [...]}` — the shape `BENCH_micro.json`
+/// established).
+pub fn run_serve_bench(opts: &ServeBenchOpts) -> Result<Value> {
+    let r = opts.requests.max(2);
+    if !opts.quiet {
+        println!(
+            "serve bench: {} requests/mix, dense n={}, sparse n={}, PA_THREADS={}\n",
+            r,
+            opts.n_dense,
+            opts.n_sparse,
+            num_threads()
+        );
+    }
+    let mut cases: Vec<Value> = Vec::new();
+
+    // --- dense, repeated A (one operator, many right-hand sides) ---
+    let a_dense = dense_system(opts.n_dense, 1);
+    let repeated_dense: Vec<(SystemInput, Vec<f64>)> = (0..r)
+        .map(|i| (SystemInput::from(&a_dense), rhs(opts.n_dense, 100 + i as u64)))
+        .collect();
+    let tuner = Autotuner::builder().build()?;
+    cases.push(run_mix(
+        "dense/repeated-A",
+        &tuner,
+        &repeated_dense[0],
+        &repeated_dense,
+        None,
+        opts.quiet,
+    )?);
+
+    // --- dense, fresh A per request (cache always misses) ---
+    let fresh_dense: Vec<(SystemInput, Vec<f64>)> = (0..r)
+        .map(|i| {
+            let a = dense_system(opts.n_dense, 1000 + i as u64);
+            let b = rhs(opts.n_dense, 2000 + i as u64);
+            (SystemInput::Dense(a), b)
+        })
+        .collect();
+    let warm_dense = (
+        SystemInput::Dense(dense_system(opts.n_dense, 99_999)),
+        rhs(opts.n_dense, 99_998),
+    );
+    let tuner = Autotuner::builder().build()?;
+    cases.push(run_mix("dense/fresh-A", &tuner, &warm_dense, &fresh_dense, None, opts.quiet)?);
+
+    // --- sparse, repeated A ---
+    let mut rng = Rng::new(7);
+    let a_sparse: Csr = sparse_spd(opts.n_sparse, 0.05, 1.0, &mut rng);
+    let repeated_sparse: Vec<(SystemInput, Vec<f64>)> = (0..r)
+        .map(|i| (SystemInput::from(&a_sparse), rhs(opts.n_sparse, 300 + i as u64)))
+        .collect();
+    let tuner = Autotuner::builder().build()?;
+    cases.push(run_mix(
+        "sparse/repeated-A",
+        &tuner,
+        &repeated_sparse[0],
+        &repeated_sparse,
+        None,
+        opts.quiet,
+    )?);
+
+    // --- sparse, fresh A per request ---
+    let fresh_sparse: Vec<(SystemInput, Vec<f64>)> = (0..r)
+        .map(|i| {
+            let mut rng = Rng::new(5000 + i as u64);
+            let a = sparse_spd(opts.n_sparse, 0.05, 1.0, &mut rng);
+            let b = rhs(opts.n_sparse, 6000 + i as u64);
+            (SystemInput::Sparse(a), b)
+        })
+        .collect();
+    let warm_sparse = {
+        let mut rng = Rng::new(88_888);
+        (
+            SystemInput::Sparse(sparse_spd(opts.n_sparse, 0.05, 1.0, &mut rng)),
+            rhs(opts.n_sparse, 88_887),
+        )
+    };
+    let tuner = Autotuner::builder().build()?;
+    cases.push(run_mix("sparse/fresh-A", &tuner, &warm_sparse, &fresh_sparse, None, opts.quiet)?);
+
+    // --- sparse, repeated A, explicit CG-IR (matvec-only: no feature
+    // LU, no densification — the cache amortizes the chopped-CSR values)
+    let tuner = Autotuner::builder().build()?;
+    cases.push(run_mix(
+        "sparse/repeated-A/cg-ir",
+        &tuner,
+        &repeated_sparse[0],
+        &repeated_sparse,
+        Some(Action::CG_FP64),
+        opts.quiet,
+    )?);
+
+    // --- batched serving over the repeated dense mix ---
+    {
+        let tuner = Autotuner::builder().build()?;
+        let reqs: Vec<(SystemInput, &[f64])> = repeated_dense
+            .iter()
+            .map(|(a, b)| (a.clone(), b.as_slice()))
+            .collect();
+        // warmup batch: cache entry + one workspace per pool worker
+        for res in tuner.solve_batch(&reqs[..2.min(reqs.len())]) {
+            ensure!(!res?.failed, "batch warmup failed");
+        }
+        let t0 = Instant::now();
+        let results = tuner.solve_batch(&reqs);
+        let total_s = t0.elapsed().as_secs_f64();
+        for res in results {
+            ensure!(!res?.failed, "batch solve failed");
+        }
+        let sps = reqs.len() as f64 / total_s;
+        if !opts.quiet {
+            println!(
+                "{:<28} {:>7.1} solves/s   (wall {:.3} s, {} threads)",
+                "batch/dense/repeated-A",
+                sps,
+                total_s,
+                num_threads()
+            );
+        }
+        cases.push(json::obj(vec![
+            ("name", json::s("batch/dense/repeated-A")),
+            ("requests", json::num(reqs.len() as f64)),
+            ("solves_per_sec", json::num(sps)),
+            ("wall_s", json::num(total_s)),
+            ("threads", json::num(num_threads() as f64)),
+        ]));
+    }
+
+    Ok(json::obj(vec![
+        ("suite", json::s("serve")),
+        ("threads", json::num(num_threads() as f64)),
+        ("requests_per_mix", json::num(r as f64)),
+        ("n_dense", json::num(opts.n_dense as f64)),
+        ("n_sparse", json::num(opts.n_sparse as f64)),
+        ("cases", Value::Arr(cases)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_serve_bench_produces_all_mixes() {
+        // smoke at toy scale: every mix present, sane numbers
+        let opts = ServeBenchOpts { requests: 3, n_dense: 16, n_sparse: 24, quiet: true };
+        let v = run_serve_bench(&opts).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "serve");
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 6);
+        for c in cases {
+            let sps = c.get("solves_per_sec").unwrap().as_f64().unwrap();
+            assert!(sps > 0.0, "{c:?}");
+        }
+        // repeated-A mixes really hit the cache
+        let rep = &cases[0];
+        assert_eq!(rep.get("name").unwrap().as_str().unwrap(), "dense/repeated-A");
+        assert!(rep.get("cache_hits").unwrap().as_f64().unwrap() >= 2.0);
+        let fresh = &cases[1];
+        assert_eq!(fresh.get("cache_hits").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -20,6 +20,7 @@
 
 use crate::chop::{chop_p, Prec};
 use crate::linalg::dot;
+use crate::solver::workspace::{InnerStats, InnerWs};
 
 /// Outcome of one (non-restarted) PCG solve.
 #[derive(Clone, Debug)]
@@ -59,33 +60,78 @@ pub fn pcg_jacobi_op(
     max_it: usize,
     p: Prec,
 ) -> CgResult {
+    let mut ws = InnerWs::default();
+    let mut z = Vec::new();
+    let stats = pcg_jacobi_ws(
+        |xc, out| {
+            let y = matvec(xc);
+            out.clear();
+            out.extend_from_slice(&y);
+        },
+        n,
+        m_inv,
+        r,
+        tol,
+        max_it,
+        p,
+        &mut ws,
+        &mut z,
+    );
+    CgResult { z, iters: stats.iters, relres: stats.relres, ok: stats.ok }
+}
+
+/// Workspace form of [`pcg_jacobi_op`] — the zero-allocation hot path
+/// (DESIGN.md §2e). The residual, preconditioned residual, search
+/// direction, and operator-application buffers come from the caller's
+/// [`InnerWs`] (grown on first use); the direction starts as an in-place
+/// copy of the preconditioned residual instead of the old `y.clone()`,
+/// and `matvec` writes into the supplied buffer. Steady-state calls
+/// allocate nothing (locked by `tests/alloc_regression.rs`); the
+/// per-element operation stream is exactly the allocating kernel's
+/// (which now wraps this), so results are bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn pcg_jacobi_ws(
+    mut matvec: impl FnMut(&[f64], &mut Vec<f64>),
+    n: usize,
+    m_inv: &[f64],
+    r: &[f64],
+    tol: f64,
+    max_it: usize,
+    p: Prec,
+    ws: &mut InnerWs,
+    z_out: &mut Vec<f64>,
+) -> InnerStats {
     debug_assert_eq!(m_inv.len(), n);
     debug_assert_eq!(r.len(), n);
 
     // res = chop(r), beta0 = ||res||_2 (chopped norm, as in the GMRES
     // kernel's beta)
-    let mut res: Vec<f64> = r.iter().map(|x| chop_p(*x, p)).collect();
-    let beta0 = chop_p(dot(&res, &res).sqrt(), p);
+    ws.c_res.clear();
+    ws.c_res.extend(r.iter().map(|x| chop_p(*x, p)));
+    let beta0 = chop_p(dot(&ws.c_res, &ws.c_res).sqrt(), p);
+    z_out.clear();
+    z_out.resize(n, 0.0);
     if !beta0.is_finite() || beta0 == 0.0 {
-        return CgResult {
-            z: vec![0.0; n],
+        return InnerStats {
             iters: 0,
             relres: 0.0,
             ok: beta0 == 0.0, // zero RHS is fine; NaN/inf is not
         };
     }
 
-    let mut z = vec![0.0f64; n];
     // y = M⁻¹ res (Jacobi: elementwise), dir = y, rho = <res, y>
-    let mut y: Vec<f64> = res
-        .iter()
-        .zip(m_inv)
-        .map(|(ri, mi)| chop_p(ri * mi, p))
-        .collect();
-    let mut dir = y.clone();
-    let mut rho = chop_p(dot(&res, &y), p);
+    ws.c_y.clear();
+    ws.c_y.extend(
+        ws.c_res
+            .iter()
+            .zip(m_inv)
+            .map(|(ri, mi)| chop_p(ri * mi, p)),
+    );
+    ws.c_dir.clear();
+    ws.c_dir.extend_from_slice(&ws.c_y);
+    let mut rho = chop_p(dot(&ws.c_res, &ws.c_y), p);
     if !rho.is_finite() {
-        return CgResult { z, iters: 0, relres: 1.0, ok: false };
+        return InnerStats { iters: 0, relres: 1.0, ok: false };
     }
 
     let mut j = 0usize;
@@ -96,8 +142,8 @@ pub fn pcg_jacobi_op(
 
     while j < max_it && rnorm > tol * beta0 && ok && stall < 3 {
         // dir is storage-rounded to p by construction
-        let q = matvec(&dir);
-        let pq = chop_p(dot(&dir, &q), p);
+        matvec(&ws.c_dir, &mut ws.c_q);
+        let pq = chop_p(dot(&ws.c_dir, &ws.c_q), p);
         if !pq.is_finite() || pq <= 0.0 {
             // curvature breakdown: not SPD (or emulated round-off
             // collapsed the quadratic form) — deterministic failure
@@ -109,14 +155,14 @@ pub fn pcg_jacobi_op(
             ok = false;
             break;
         }
-        for (zi, di) in z.iter_mut().zip(&dir) {
+        for (zi, di) in z_out.iter_mut().zip(&ws.c_dir) {
             *zi = chop_p(*zi + alpha * di, p);
         }
-        for (ri, qi) in res.iter_mut().zip(&q) {
+        for (ri, qi) in ws.c_res.iter_mut().zip(&ws.c_q) {
             *ri = chop_p(*ri - alpha * qi, p);
         }
         j += 1;
-        rnorm = chop_p(dot(&res, &res).sqrt(), p);
+        rnorm = chop_p(dot(&ws.c_res, &ws.c_res).sqrt(), p);
         if !rnorm.is_finite() {
             ok = false;
             break;
@@ -129,23 +175,23 @@ pub fn pcg_jacobi_op(
         }
         // prepare the next direction (harmless extra work when the loop
         // exits: dir is not read after)
-        for ((yi, ri), mi) in y.iter_mut().zip(&res).zip(m_inv) {
+        for ((yi, ri), mi) in ws.c_y.iter_mut().zip(&ws.c_res).zip(m_inv) {
             *yi = chop_p(ri * mi, p);
         }
-        let rho_new = chop_p(dot(&res, &y), p);
+        let rho_new = chop_p(dot(&ws.c_res, &ws.c_y), p);
         if !rho_new.is_finite() || rho == 0.0 {
             ok = false;
             break;
         }
         let beta = chop_p(rho_new / rho, p);
-        for (di, yi) in dir.iter_mut().zip(&y) {
+        for (di, yi) in ws.c_dir.iter_mut().zip(&ws.c_y) {
             *di = chop_p(yi + beta * *di, p);
         }
         rho = rho_new;
     }
 
-    let ok = ok && z.iter().all(|v| v.is_finite());
-    CgResult { z, iters: j, relres: rnorm / beta0, ok }
+    let ok = ok && z_out.iter().all(|v| v.is_finite());
+    InnerStats { iters: j, relres: rnorm / beta0, ok }
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@
 use crate::chop::{chop_p, Prec};
 use crate::linalg::lu::LuFactors;
 use crate::linalg::{chopped_matvec_prechopped, dot, Mat};
+use crate::solver::workspace::{grow, InnerStats, InnerWs};
 
 /// Outcome of one (non-restarted) GMRES solve.
 #[derive(Clone, Debug)]
@@ -59,28 +60,86 @@ pub fn gmres_preconditioned_op(
     max_m: usize,
     p: Prec,
 ) -> GmresResult {
+    let mut ws = InnerWs::default();
+    let mut z = Vec::new();
+    let stats = gmres_preconditioned_ws(
+        |xc, out| {
+            let y = matvec(xc);
+            out.clear();
+            out.extend_from_slice(&y);
+        },
+        |v, out| lu.solve_chopped_into(v, p, out),
+        n,
+        r,
+        tol,
+        max_m,
+        p,
+        &mut ws,
+        &mut z,
+    );
+    GmresResult { z, iters: stats.iters, relres: stats.relres, ok: stats.ok }
+}
+
+/// Workspace form of [`gmres_preconditioned_op`] — the zero-allocation
+/// hot path (DESIGN.md §2e). All scratch (the contiguous `(m+1)×n`
+/// Krylov slab, the flat row-major Hessenberg, the Givens/RHS vectors,
+/// the per-iteration chop/matvec buffers) comes from the caller's
+/// [`InnerWs`], grown on first use; steady-state calls allocate nothing
+/// (locked by `tests/alloc_regression.rs`). Both operator applications
+/// arrive as in-place closures: `matvec` writes y = chop(Aₚ·xc) and
+/// `precond` writes y = M⁻¹v, each into the supplied buffer.
+///
+/// The per-element operation stream is exactly the allocating kernel's
+/// (which now wraps this), so results are bit-identical to every
+/// earlier release — the Hessenberg's old `h[j][i]` is `h[j*(m+1)+i]`,
+/// the basis's old `v[i]` is `basis[i*n..(i+1)*n]`, and the flattened
+/// buffers are zero-filled where a fresh allocation would have been.
+#[allow(clippy::too_many_arguments)]
+pub fn gmres_preconditioned_ws(
+    mut matvec: impl FnMut(&[f64], &mut Vec<f64>),
+    mut precond: impl FnMut(&[f64], &mut Vec<f64>),
+    n: usize,
+    r: &[f64],
+    tol: f64,
+    max_m: usize,
+    p: Prec,
+    ws: &mut InnerWs,
+    z_out: &mut Vec<f64>,
+) -> InnerStats {
     let m = max_m.min(n).max(1);
+    let m1 = m + 1;
+    grow(&mut ws.basis, m1 * n);
+    grow(&mut ws.h, m * m1);
+    grow(&mut ws.cs, m);
+    grow(&mut ws.sn, m);
+    grow(&mut ws.g, m1);
+    grow(&mut ws.y, m);
 
     // r0 = M^-1 r, beta = ||r0||_2 (chopped norm as in the L2 graph)
-    let r0 = lu.solve_chopped(r, p);
-    let beta = chop_p(dot(&r0, &r0).sqrt(), p);
+    precond(r, &mut ws.r0);
+    let beta = chop_p(dot(&ws.r0, &ws.r0).sqrt(), p);
+    z_out.clear();
     if !(beta.is_finite()) || beta == 0.0 {
-        return GmresResult {
-            z: vec![0.0; n],
+        z_out.resize(n, 0.0);
+        return InnerStats {
             iters: 0,
             relres: 0.0,
             ok: beta == 0.0, // zero RHS is fine; NaN/inf is not
         };
     }
 
-    let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
-    v.push(r0.iter().map(|x| chop_p(x / beta, p)).collect());
-    // Hessenberg columns after Givens, g = rotated rhs.
-    let mut h = vec![vec![0.0f64; m + 1]; m];
-    let mut cs = vec![0.0f64; m];
-    let mut sn = vec![0.0f64; m];
-    let mut g = vec![0.0f64; m + 1];
-    g[0] = beta;
+    // v_0 = r0 / beta; basis rows are fully written before they are read,
+    // so the slab needs no clearing. The Hessenberg does: the per-column
+    // finiteness check below reads the whole (m+1)-row column, which a
+    // fresh allocation would have zero-filled.
+    for (dst, x) in ws.basis[..n].iter_mut().zip(&ws.r0) {
+        *dst = chop_p(x / beta, p);
+    }
+    ws.h[..m * m1].fill(0.0);
+    ws.cs[..m].fill(0.0);
+    ws.sn[..m].fill(0.0);
+    ws.g[..m1].fill(0.0);
+    ws.g[0] = beta;
 
     let mut j = 0;
     let mut res = beta;
@@ -96,21 +155,23 @@ pub fn gmres_preconditioned_op(
 
     while j < m && res > tol * beta && ok && !happy && stall < 3 {
         // w = M^-1 (A v_j), both in precision p
-        let mut xc = v[j].clone();
-        crate::chop::chop_slice(&mut xc, p);
-        let av = matvec(&xc);
-        let mut w = lu.solve_chopped(&av, p);
+        ws.xc.clear();
+        ws.xc.extend_from_slice(&ws.basis[j * n..(j + 1) * n]);
+        crate::chop::chop_slice(ws.xc.as_mut_slice(), p);
+        matvec(&ws.xc, &mut ws.av);
+        precond(&ws.av, &mut ws.w);
 
         // Modified Gram-Schmidt
         for i in 0..=j {
-            let hij = chop_p(dot(&v[i], &w), p);
-            h[j][i] = hij;
-            for (wk, vk) in w.iter_mut().zip(&v[i]) {
+            let vi = &ws.basis[i * n..(i + 1) * n];
+            let hij = chop_p(dot(vi, &ws.w), p);
+            ws.h[j * m1 + i] = hij;
+            for (wk, vk) in ws.w.iter_mut().zip(vi) {
                 *wk = chop_p(*wk - hij * vk, p);
             }
         }
-        let hj1 = chop_p(dot(&w, &w).sqrt(), p);
-        h[j][j + 1] = hj1;
+        let hj1 = chop_p(dot(&ws.w, &ws.w).sqrt(), p);
+        ws.h[j * m1 + j + 1] = hj1;
         if !hj1.is_finite() {
             ok = false;
             break;
@@ -118,29 +179,32 @@ pub fn gmres_preconditioned_op(
         if hj1 <= 1e-300 {
             happy = true; // exact breakdown: solution lies in span(V)
         } else {
-            v.push(w.iter().map(|x| chop_p(x / hj1, p)).collect());
+            for (dst, x) in ws.basis[(j + 1) * n..(j + 2) * n].iter_mut().zip(&ws.w) {
+                *dst = chop_p(x / hj1, p);
+            }
         }
 
         // Apply accumulated Givens rotations to the new column.
         for i in 0..j {
-            let t1 = cs[i] * h[j][i] + sn[i] * h[j][i + 1];
-            let t2 = -sn[i] * h[j][i] + cs[i] * h[j][i + 1];
-            h[j][i] = t1;
-            h[j][i + 1] = t2;
+            let t1 = ws.cs[i] * ws.h[j * m1 + i] + ws.sn[i] * ws.h[j * m1 + i + 1];
+            let t2 = -ws.sn[i] * ws.h[j * m1 + i] + ws.cs[i] * ws.h[j * m1 + i + 1];
+            ws.h[j * m1 + i] = t1;
+            ws.h[j * m1 + i + 1] = t2;
         }
         // New rotation annihilating h[j+1, j].
-        let denom = (h[j][j] * h[j][j] + h[j][j + 1] * h[j][j + 1]).sqrt();
-        let (c, s) = if denom == 0.0 { (1.0, 0.0) } else { (h[j][j] / denom, h[j][j + 1] / denom) };
-        cs[j] = c;
-        sn[j] = s;
-        h[j][j] = denom;
-        h[j][j + 1] = 0.0;
-        let gj = g[j];
-        g[j] = c * gj;
-        g[j + 1] = -s * gj;
+        let (hjj, hj1j) = (ws.h[j * m1 + j], ws.h[j * m1 + j + 1]);
+        let denom = (hjj * hjj + hj1j * hj1j).sqrt();
+        let (c, s) = if denom == 0.0 { (1.0, 0.0) } else { (hjj / denom, hj1j / denom) };
+        ws.cs[j] = c;
+        ws.sn[j] = s;
+        ws.h[j * m1 + j] = denom;
+        ws.h[j * m1 + j + 1] = 0.0;
+        let gj = ws.g[j];
+        ws.g[j] = c * gj;
+        ws.g[j + 1] = -s * gj;
 
-        res = g[j + 1].abs();
-        if !res.is_finite() || h[j].iter().any(|x| !x.is_finite()) {
+        res = ws.g[j + 1].abs();
+        if !res.is_finite() || ws.h[j * m1..(j + 1) * m1].iter().any(|x| !x.is_finite()) {
             ok = false;
         }
         if res < 0.9 * best_res {
@@ -153,29 +217,30 @@ pub fn gmres_preconditioned_op(
     }
 
     // Back-substitute the j×j triangular system H y = g.
-    let mut y = vec![0.0f64; j];
+    ws.y[..j].fill(0.0);
     for i in (0..j).rev() {
-        let mut s = g[i];
+        let mut s = ws.g[i];
         for k in i + 1..j {
-            s -= h[k][i] * y[k];
+            s -= ws.h[k * m1 + i] * ws.y[k];
         }
-        let d = h[i][i];
-        y[i] = if d == 0.0 { 0.0 } else { s / d };
+        let d = ws.h[i * m1 + i];
+        ws.y[i] = if d == 0.0 { 0.0 } else { s / d };
     }
 
     // z = V y (f64 accumulate, then chop)
-    let mut z = vec![0.0f64; n];
-    for (i, yi) in y.iter().enumerate() {
+    z_out.resize(n, 0.0);
+    for (i, yi) in ws.y[..j].iter().enumerate() {
         if *yi != 0.0 {
-            for (zk, vk) in z.iter_mut().zip(&v[i]) {
+            let vi = &ws.basis[i * n..(i + 1) * n];
+            for (zk, vk) in z_out.iter_mut().zip(vi) {
                 *zk += yi * vk;
             }
         }
     }
-    crate::chop::chop_slice(&mut z, p);
-    let ok = ok && z.iter().all(|x| x.is_finite());
+    crate::chop::chop_slice(z_out.as_mut_slice(), p);
+    let ok = ok && z_out.iter().all(|x| x.is_finite());
 
-    GmresResult { z, iters: j, relres: res / beta, ok }
+    InnerStats { iters: j, relres: res / beta, ok }
 }
 
 #[cfg(test)]
@@ -301,6 +366,44 @@ mod tests {
             assert_eq!(dense.relres.to_bits(), via_op.relres.to_bits(), "{p}");
             for (u, v) in dense.z.iter().zip(&via_op.z) {
                 assert_eq!(u.to_bits(), v.to_bits(), "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical_to_fresh() {
+        // One InnerWs reused across precisions and repeated calls: stale
+        // Hessenberg / basis / Givens content from an earlier (larger)
+        // solve must never leak into a later result.
+        let (a, _, b) = system(40, 8);
+        let mut ws = InnerWs::default();
+        let mut z = Vec::new();
+        for p in [Prec::Bf16, Prec::Fp32, Prec::Fp64] {
+            let lu = lu_factor_chopped(&a, p).unwrap();
+            let ap = a.chopped(p);
+            let fresh = gmres_preconditioned(&ap, &lu, &b, 1e-6, 30, p);
+            for round in 0..2 {
+                let stats = gmres_preconditioned_ws(
+                    |xc, out| {
+                        let y = chopped_matvec_prechopped(&ap, xc, p);
+                        out.clear();
+                        out.extend_from_slice(&y);
+                    },
+                    |v, out| lu.solve_chopped_into(v, p, out),
+                    40,
+                    &b,
+                    1e-6,
+                    30,
+                    p,
+                    &mut ws,
+                    &mut z,
+                );
+                assert_eq!(stats.iters, fresh.iters, "{p} round {round}");
+                assert_eq!(stats.ok, fresh.ok, "{p} round {round}");
+                assert_eq!(stats.relres.to_bits(), fresh.relres.to_bits(), "{p}");
+                for (u, v) in z.iter().zip(&fresh.z) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{p} round {round}");
+                }
             }
         }
     }

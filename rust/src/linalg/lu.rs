@@ -157,6 +157,41 @@ pub fn lu_factor(a: &Mat) -> Result<LuFactors, LuError> {
     lu_factor_chopped(a, Prec::Fp64)
 }
 
+/// The shared chopped triangular-solve kernel: x = U⁻¹ L⁻¹ P b with the
+/// pivot swaps supplied as an index map, so both pivot encodings
+/// ([`LuFactors`]'s `Vec<usize>` and [`crate::solver::LuHandle`]'s
+/// `Vec<i32>`) run the exact same operation stream without converting a
+/// pivot vector per call (that conversion used to allocate inside the
+/// GMRES loop). Writes into `out` (cleared + refilled — allocation-free
+/// once `out` has capacity n).
+pub fn lu_solve_chopped_into(
+    lu: &Mat,
+    piv: impl Fn(usize) -> usize,
+    b: &[f64],
+    p: Prec,
+    out: &mut Vec<f64>,
+) {
+    let n = lu.n_rows;
+    assert_eq!(b.len(), n);
+    out.clear();
+    out.extend(b.iter().map(|&v| chop_p(v, p)));
+    let y = out;
+    for k in 0..n {
+        y.swap(k, piv(k));
+    }
+    // forward: L y = y (unit diagonal)
+    for i in 0..n {
+        let s = chop_p(dot(&lu.row(i)[..i], &y[..i]), p);
+        y[i] = chop_p(y[i] - s, p);
+    }
+    // backward: U x = y
+    for i in (0..n).rev() {
+        let s = chop_p(dot(&lu.row(i)[i + 1..], &y[i + 1..]), p);
+        let d = lu[(i, i)];
+        y[i] = chop_p((y[i] - s) / d, p);
+    }
+}
+
 impl LuFactors {
     fn n(&self) -> usize {
         self.lu.n_rows
@@ -165,24 +200,18 @@ impl LuFactors {
     /// x = U⁻¹ L⁻¹ P b in precision `p` (mirror of the `lu_solve` graph:
     /// f64-accumulated row dots, storage rounding per component).
     pub fn solve_chopped(&self, b: &[f64], p: Prec) -> Vec<f64> {
-        let n = self.n();
-        assert_eq!(b.len(), n);
-        let mut y: Vec<f64> = b.iter().map(|&v| chop_p(v, p)).collect();
-        for k in 0..n {
-            y.swap(k, self.piv[k]);
-        }
-        // forward: L y = y (unit diagonal)
-        for i in 0..n {
-            let s = chop_p(dot(&self.lu.row(i)[..i], &y[..i]), p);
-            y[i] = chop_p(y[i] - s, p);
-        }
-        // backward: U x = y
-        for i in (0..n).rev() {
-            let s = chop_p(dot(&self.lu.row(i)[i + 1..], &y[i + 1..]), p);
-            let d = self.lu[(i, i)];
-            y[i] = chop_p((y[i] - s) / d, p);
-        }
+        let mut y = Vec::new();
+        self.solve_chopped_into(b, p, &mut y);
         y
+    }
+
+    /// In-place form of [`LuFactors::solve_chopped`]: writes the solution
+    /// into `out` (cleared and refilled; no allocation once `out` has
+    /// capacity n). Shared triangular-solve kernel with the
+    /// [`crate::solver::LuHandle`] path — bit-identical to the allocating
+    /// form by construction.
+    pub fn solve_chopped_into(&self, b: &[f64], p: Prec, out: &mut Vec<f64>) {
+        lu_solve_chopped_into(&self.lu, |k| self.piv[k], b, p, out)
     }
 
     /// Native f64 solve.

@@ -130,13 +130,27 @@ impl Mat {
     /// element is one independent f64-accumulated row dot, so the result
     /// is bit-identical for any thread count.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// In-place form of [`Mat::matvec`]: writes into `out` (cleared and
+    /// refilled; allocation-free once `out` has capacity `n_rows`). Each
+    /// element is the same independent f64 row dot, so the parallel
+    /// branch (banded rows instead of the allocating map) is
+    /// bit-identical to the sequential one and to [`Mat::matvec`].
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(x.len(), self.n_cols);
+        out.clear();
         if self.data.len() >= PAR_MIN_ELEMS {
-            return crate::util::pool::parallel_map(self.n_rows, |i| dot(self.row(i), x));
+            out.resize(self.n_rows, 0.0);
+            crate::util::pool::parallel_for_rows(out.as_mut_slice(), 1, |i, slot| {
+                slot[0] = dot(self.row(i), x);
+            });
+            return;
         }
-        (0..self.n_rows)
-            .map(|i| dot(self.row(i), x))
-            .collect()
+        out.extend((0..self.n_rows).map(|i| dot(self.row(i), x)));
     }
 
     /// y = Aᵀ x (f64).
@@ -242,13 +256,28 @@ pub fn norm1_vec(v: &[f64]) -> f64 {
 /// Row-parallel above [`PAR_MIN_ELEMS`] (this is the GMRES inner matvec);
 /// each element is `chop(dot(row, x))` either way — bit-identical.
 pub fn chopped_matvec_prechopped(a: &Mat, x: &[f64], p: Prec) -> Vec<f64> {
-    assert_eq!(x.len(), a.n_cols);
-    if a.data.len() >= PAR_MIN_ELEMS {
-        return crate::util::pool::parallel_map(a.n_rows, |i| chop_p(dot(a.row(i), x), p));
-    }
-    let mut y = a.matvec(x);
-    crate::chop::chop_slice(&mut y, p);
+    let mut y = Vec::new();
+    chopped_matvec_prechopped_into(a, x, p, &mut y);
     y
+}
+
+/// In-place form of [`chopped_matvec_prechopped`]: writes into `out`
+/// (cleared + refilled — allocation-free once `out` has capacity
+/// `n_rows`). Every output element is `chop(dot(row, x))` on both
+/// branches, so the result is bit-identical to the allocating form and
+/// for any thread count.
+pub fn chopped_matvec_prechopped_into(a: &Mat, x: &[f64], p: Prec, out: &mut Vec<f64>) {
+    assert_eq!(x.len(), a.n_cols);
+    out.clear();
+    if a.data.len() >= PAR_MIN_ELEMS {
+        out.resize(a.n_rows, 0.0);
+        crate::util::pool::parallel_for_rows(out.as_mut_slice(), 1, |i, slot| {
+            slot[0] = chop_p(dot(a.row(i), x), p);
+        });
+        return;
+    }
+    out.extend((0..a.n_rows).map(|i| dot(a.row(i), x)));
+    crate::chop::chop_slice(out.as_mut_slice(), p);
 }
 
 /// r = chop(chop(b) − chop(A)·chop(x)) in precision `p` — the residual

@@ -7,6 +7,7 @@
 //!   solve     solve one A x = b through a served policy
 //!             (--solver auto|lu-ir|cg-ir picks the refinement family)
 //!   head2head LU-IR vs CG-IR suite on the sparse SPD workload (JSON out)
+//!   serve-bench serving-throughput mixes → BENCH_serve.json
 //!   repro     regenerate a paper table/figure (table2..6, fig2..4,
 //!             figs5_12, actions, all)
 //!   selftest  quick end-to-end sanity run (native + PJRT if artifacts;
@@ -68,6 +69,11 @@ SUBCOMMANDS:
   repro       regenerate paper artifacts:
                 table2 table3 table4 table5 table6 fig2 fig3 fig4
                 figs5_12 actions all     [--out results/]
+  serve-bench serving-throughput benchmark: dense/sparse ×
+                repeated-A/fresh-A mixes + batched solve_batch, emitting
+                solves/sec and p50/p99 latency (EXPERIMENTS.md §Serve)
+                --out BENCH_serve.json  --requests N
+                --n <dense size>  --n-sparse <sparse size>
   selftest    end-to-end sanity run (native backend; PJRT if artifacts/)
   help        print this text
 
@@ -475,6 +481,26 @@ fn run() -> Result<()> {
                     r2
                 );
             }
+            Ok(())
+        }
+        Some("serve-bench") => {
+            use precision_autotune::coordinator::serve_bench::{run_serve_bench, ServeBenchOpts};
+            let out = args.get("out").unwrap_or("BENCH_serve.json");
+            let defaults = ServeBenchOpts::default();
+            let opts = ServeBenchOpts {
+                requests: args.get_usize("requests")?.unwrap_or(defaults.requests),
+                n_dense: args.get_usize("n")?.unwrap_or(defaults.n_dense),
+                n_sparse: args.get_usize("n-sparse")?.unwrap_or(defaults.n_sparse),
+                quiet,
+            };
+            let report = run_serve_bench(&opts)?;
+            if let Some(dir) = std::path::Path::new(out).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(out, report.to_string()).with_context(|| format!("writing {out}"))?;
+            println!("serve bench JSON written to {out}");
             Ok(())
         }
         Some("selftest") => {

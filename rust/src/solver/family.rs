@@ -28,7 +28,8 @@ use anyhow::Result;
 
 use crate::bandit::action::{Action, SolverFamily};
 use crate::gen::Problem;
-use crate::solver::ir::{cg_ir, gmres_ir_prefactored, SolveOutcome};
+use crate::solver::ir::{cg_ir_ws, gmres_ir_prefactored_ws, SolveOutcome};
+use crate::solver::workspace::SolveWorkspace;
 use crate::solver::{LuHandle, ProblemSession, SolverBackend};
 use crate::util::config::Config;
 
@@ -42,11 +43,30 @@ pub trait RefinementSolver: Send + Sync {
     /// Human-readable engine name (logs, reports).
     fn name(&self) -> &'static str;
 
-    /// Run one refinement solve inside the caller's session.
+    /// Run one refinement solve inside the caller's session, with all
+    /// loop/inner scratch drawn from the caller's [`SolveWorkspace`]
+    /// (the zero-allocation hot path when the workspace is warm —
+    /// DESIGN.md §2e). `x_true` may be empty (serving path).
     ///
     /// `prefactored` is the LU family's factorization-sharing hook (the
     /// trainer factors each (problem, u_f) once); families without a
     /// factorization ignore it.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_ws(
+        &self,
+        backend: &dyn SolverBackend,
+        session: &ProblemSession<'_>,
+        b: &[f64],
+        x_true: &[f64],
+        action: &Action,
+        cfg: &Config,
+        prefactored: Option<&LuHandle>,
+        ws: &mut SolveWorkspace,
+    ) -> Result<SolveOutcome>;
+
+    /// Convenience form over a [`Problem`] with a throwaway workspace —
+    /// the harness path (trainer sweep, evaluator), bit-identical to
+    /// [`RefinementSolver::solve_ws`] by construction.
     fn solve(
         &self,
         backend: &dyn SolverBackend,
@@ -55,7 +75,10 @@ pub trait RefinementSolver: Send + Sync {
         action: &Action,
         cfg: &Config,
         prefactored: Option<&LuHandle>,
-    ) -> Result<SolveOutcome>;
+    ) -> Result<SolveOutcome> {
+        let mut ws = SolveWorkspace::new();
+        self.solve_ws(backend, session, &p.b, &p.x_true, action, cfg, prefactored, &mut ws)
+    }
 }
 
 /// The paper's LU-preconditioned GMRES-IR engine.
@@ -70,16 +93,18 @@ impl RefinementSolver for LuIrSolver {
         "lu-ir"
     }
 
-    fn solve(
+    fn solve_ws(
         &self,
         backend: &dyn SolverBackend,
         session: &ProblemSession<'_>,
-        p: &Problem,
+        b: &[f64],
+        x_true: &[f64],
         action: &Action,
         cfg: &Config,
         prefactored: Option<&LuHandle>,
+        ws: &mut SolveWorkspace,
     ) -> Result<SolveOutcome> {
-        gmres_ir_prefactored(backend, session, p, action, cfg, prefactored)
+        gmres_ir_prefactored_ws(backend, session, b, x_true, action, cfg, prefactored, ws)
     }
 }
 
@@ -95,16 +120,18 @@ impl RefinementSolver for CgIrSolver {
         "cg-ir"
     }
 
-    fn solve(
+    fn solve_ws(
         &self,
         _backend: &dyn SolverBackend,
         session: &ProblemSession<'_>,
-        p: &Problem,
+        b: &[f64],
+        x_true: &[f64],
         action: &Action,
         cfg: &Config,
         _prefactored: Option<&LuHandle>,
+        ws: &mut SolveWorkspace,
     ) -> Result<SolveOutcome> {
-        cg_ir(session, p, action, cfg)
+        cg_ir_ws(session, b, x_true, action, cfg, ws)
     }
 }
 
@@ -128,6 +155,23 @@ pub fn solve_refinement(
     prefactored: Option<&LuHandle>,
 ) -> Result<SolveOutcome> {
     solver_for(action.solver).solve(backend, session, p, action, cfg, prefactored)
+}
+
+/// Workspace form of [`solve_refinement`] — the serving facade's hot
+/// path: same dispatch, caller-owned scratch, RHS/reference passed
+/// directly so cached sessions need no per-request [`Problem`].
+#[allow(clippy::too_many_arguments)]
+pub fn solve_refinement_ws(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action: &Action,
+    cfg: &Config,
+    prefactored: Option<&LuHandle>,
+    ws: &mut SolveWorkspace,
+) -> Result<SolveOutcome> {
+    solver_for(action.solver).solve_ws(backend, session, b, x_true, action, cfg, prefactored, ws)
 }
 
 #[cfg(test)]

@@ -28,7 +28,9 @@
 //! baseline profile is the paper's: exactly 2 outer / ~1 inner per outer
 //! (first ratio test fires since consecutive updates shrink by ≫ τ).
 //!
-//! The shared outer loop lives in `refinement_loop`; the families plug
+//! The shared outer loop lives in `refinement_loop_ws` (in-place closure
+//! seams over a caller-owned [`crate::solver::workspace::SolveWorkspace`]
+//! — the zero-allocation hot path of DESIGN.md §2e); the families plug
 //! in their step-1/3 closures. The LU path's operation stream is exactly
 //! the pre-seam code's, so its results are bit-identical to earlier
 //! releases. The CG path is **operator-native**: every step (initial
@@ -47,9 +49,10 @@ use anyhow::Result;
 use crate::bandit::action::{Action, SolverFamily};
 use crate::chop::{chop_p, Prec};
 use crate::gen::Problem;
-use crate::linalg::cg::pcg_jacobi_op;
+use crate::linalg::cg::pcg_jacobi_ws;
 use crate::linalg::norm_inf_vec;
 use crate::solver::metrics::{eps_max, ferr, nbe_from_parts};
+use crate::solver::workspace::SolveWorkspace;
 use crate::solver::{ProblemSession, SolverBackend};
 use crate::util::config::Config;
 
@@ -114,26 +117,34 @@ pub fn gmres_ir(
 }
 
 /// The shared Alg.-2 outer loop: starting iterate `x`, a residual step
-/// and an inner solve supplied by the family. Returns the full outcome
-/// including the operator-path backward error. The closure seam is what
-/// [`crate::solver::family::RefinementSolver`] implementations plug
-/// into; the loop body is the exact operation stream of the pre-seam
-/// GMRES-IR driver, so the LU family's results are bit-identical to
-/// earlier releases.
+/// and an inner solve supplied by the family — both **in-place** (they
+/// write into the loop's workspace-owned `r`/`z` buffers, the
+/// zero-allocation hot path of DESIGN.md §2e; once those buffers and the
+/// inner solver's scratch are warm, the loop performs zero heap
+/// allocations — locked by `tests/alloc_regression.rs`). Returns the
+/// full outcome including the operator-path backward error. The closure
+/// seam is what [`crate::solver::family::RefinementSolver`]
+/// implementations plug into; the loop body is the exact operation
+/// stream of the pre-seam GMRES-IR driver, so the LU family's results
+/// are bit-identical to earlier releases.
 ///
-/// `p.x_true` may be empty (the serving path of [`crate::api`], where no
+/// `x_true` may be empty (the serving path of [`crate::api`], where no
 /// reference solution exists): then `ferr` is NaN, `eps_max` degrades to
 /// `nbe`, and failure detection relies on the backward error alone.
-fn refinement_loop(
+#[allow(clippy::too_many_arguments)]
+fn refinement_loop_ws(
     session: &ProblemSession<'_>,
-    p: &Problem,
+    b: &[f64],
+    x_true: &[f64],
     action: &Action,
     cfg: &Config,
     mut x: Vec<f64>,
-    mut residual: impl FnMut(&[f64]) -> Result<Vec<f64>>,
-    mut inner_solve: impl FnMut(&[f64]) -> Result<(Vec<f64>, usize, bool)>,
+    r_buf: &mut Vec<f64>,
+    z_buf: &mut Vec<f64>,
+    mut residual: impl FnMut(&[f64], &mut Vec<f64>) -> Result<()>,
+    mut inner_solve: impl FnMut(&[f64], &mut Vec<f64>) -> Result<(usize, bool)>,
 ) -> Result<SolveOutcome> {
-    let n = p.n;
+    let n = session.n();
     if x.iter().any(|v| !v.is_finite()) {
         return Ok(SolveOutcome::failure(n));
     }
@@ -147,15 +158,15 @@ fn refinement_loop(
 
     for _ in 0..cfg.max_outer {
         // Step 2 (u_r)
-        let r = residual(&x)?;
+        residual(&x, r_buf)?;
         // Step 3 (u_g)
-        let (z, iters, ok) = inner_solve(&r)?;
+        let (iters, ok) = inner_solve(r_buf, z_buf)?;
         if !ok {
             stop = StopReason::Failure;
             break;
         }
         // Step 4 (u): chopped update
-        for (xi, zi) in x.iter_mut().zip(&z) {
+        for (xi, zi) in x.iter_mut().zip(z_buf.iter()) {
             *xi = chop_p(*xi + zi, action.u);
         }
         outer += 1;
@@ -164,7 +175,7 @@ fn refinement_loop(
             stop = StopReason::Failure;
             break;
         }
-        let nz = norm_inf_vec(&z);
+        let nz = norm_inf_vec(z_buf);
         let nx = norm_inf_vec(&x);
         if nx > 0.0 && nz / nx <= u_work {
             stop = StopReason::Converged; // eq. (14)
@@ -187,11 +198,11 @@ fn refinement_loop(
     }
 
     // ferr needs a reference solution; the serving path has none.
-    let fe = if p.x_true.is_empty() { f64::NAN } else { ferr(&x, &p.x_true) };
+    let fe = if x_true.is_empty() { f64::NAN } else { ferr(&x, x_true) };
     // nbe through the session operator: O(nnz) for sparse inputs,
     // bit-identical to the dense computation.
-    let be = nbe_from_parts(&session.matvec(&x), &p.b, session.norm_inf(), &x);
-    let failed = !be.is_finite() || (!p.x_true.is_empty() && !fe.is_finite());
+    let be = nbe_from_parts(&session.matvec(&x), b, session.norm_inf(), &x);
+    let failed = !be.is_finite() || (!x_true.is_empty() && !fe.is_finite());
     Ok(SolveOutcome {
         eps_max: eps_max(fe, be),
         ferr: fe,
@@ -218,8 +229,31 @@ pub fn gmres_ir_prefactored(
     cfg: &Config,
     prefactored: Option<&crate::solver::LuHandle>,
 ) -> Result<SolveOutcome> {
+    let mut ws = SolveWorkspace::new();
+    gmres_ir_prefactored_ws(backend, session, &p.b, &p.x_true, action, cfg, prefactored, &mut ws)
+}
+
+/// Workspace form of [`gmres_ir_prefactored`] — the serving hot path:
+/// every loop buffer (residual, correction, chop scratch, the whole
+/// inner-GMRES scratch set) comes from the caller's [`SolveWorkspace`],
+/// so a warmed workspace makes the IR loop allocation-free. Takes the
+/// RHS and (possibly empty) reference solution directly instead of a
+/// [`Problem`], so the cached-session serving path never has to clone an
+/// operator into a throwaway `Problem`. Bit-identical to the allocating
+/// entry (which wraps this with a fresh workspace).
+#[allow(clippy::too_many_arguments)]
+pub fn gmres_ir_prefactored_ws(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action: &Action,
+    cfg: &Config,
+    prefactored: Option<&crate::solver::LuHandle>,
+    ws: &mut SolveWorkspace,
+) -> Result<SolveOutcome> {
     debug_assert_eq!(action.solver, SolverFamily::LuIr);
-    let n = p.n;
+    let n = session.n();
 
     // Step 1 (u_f): factor + initial solve. Breakdown => failure outcome.
     let owned;
@@ -236,21 +270,26 @@ pub fn gmres_ir_prefactored(
             Err(_) => return Ok(SolveOutcome::failure(n)),
         },
     };
-    let x0 = backend.lu_solve(factors, &p.b, action.u_f)?;
+    let x0 = backend.lu_solve(factors, b, action.u_f)?;
 
     // τ drives both the inner solve accuracy and the stagnation test;
     // gmres_tol_factor (default 1.0) is an ablation knob.
     let inner_tol = cfg.gmres_tol_factor * cfg.tau;
-    refinement_loop(
+    // Split the workspace into the disjoint parts the loop and the two
+    // closures borrow simultaneously (field-level borrows).
+    let SolveWorkspace { ir_r, ir_z, res_xc, inner, .. } = ws;
+    refinement_loop_ws(
         session,
-        p,
+        b,
+        x_true,
         action,
         cfg,
         x0,
-        |x| backend.residual(session, x, &p.b, action.u_r),
-        |r| {
-            let g = backend.gmres(session, factors, r, inner_tol, cfg.gmres_max_m, action.u_g)?;
-            Ok((g.z, g.iters, g.ok))
+        ir_r,
+        ir_z,
+        |x, out| backend.residual_into(session, x, b, action.u_r, res_xc, out),
+        |r, z| {
+            backend.gmres_ws(session, factors, r, inner_tol, cfg.gmres_max_m, action.u_g, inner, z)
         },
     )
 }
@@ -277,57 +316,87 @@ pub fn cg_ir(
     action: &Action,
     cfg: &Config,
 ) -> Result<SolveOutcome> {
+    let mut ws = SolveWorkspace::new();
+    cg_ir_ws(session, &p.b, &p.x_true, action, cfg, &mut ws)
+}
+
+/// Workspace form of [`cg_ir`] — the serving hot path: the Jacobi
+/// inverse diagonals, the PCG scratch set, and the loop buffers all come
+/// from the caller's [`SolveWorkspace`], so a warmed workspace makes the
+/// IR loop allocation-free. Bit-identical to the allocating entry
+/// (which wraps this with a fresh workspace).
+pub fn cg_ir_ws(
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action: &Action,
+    cfg: &Config,
+    ws: &mut SolveWorkspace,
+) -> Result<SolveOutcome> {
     debug_assert_eq!(action.solver, SolverFamily::CgIr);
-    let n = p.n;
+    let n = session.n();
 
     // Jacobi preconditioner from the operator diagonal — O(nnz).
     let d = session.diag();
-    let inv_diag = |prec: Prec| -> Option<Vec<f64>> {
-        let mut m = Vec::with_capacity(n);
-        for &di in &d {
+    // Inverse diagonal in precision `prec`, built in place; a zero /
+    // overflowed entry is the family's "factorization breakdown".
+    fn fill_inv(d: &[f64], prec: Prec, out: &mut Vec<f64>) -> bool {
+        out.clear();
+        for &di in d {
             let v = chop_p(1.0 / chop_p(di, prec), prec);
             if !v.is_finite() {
-                return None;
+                return false;
             }
-            m.push(v);
+            out.push(v);
         }
-        Some(m)
-    };
+        true
+    }
+    let SolveWorkspace { ir_r, ir_z, res_xc, cg_mf, cg_mg, inner } = ws;
     // build precision u_f; application precision u_g (inside PCG)
-    let Some(m_f) = inv_diag(action.u_f) else {
+    if !fill_inv(&d, action.u_f, cg_mf) {
         return Ok(SolveOutcome::failure(n));
-    };
-    let Some(m_g) = inv_diag(action.u_g) else {
+    }
+    if !fill_inv(&d, action.u_g, cg_mg) {
         return Ok(SolveOutcome::failure(n));
-    };
+    }
+    // From here the diagonals are read-only; the shared reborrow lets the
+    // PCG closure hold them alongside the inner scratch.
+    let cg_mg: &[f64] = cg_mg;
 
     // Step 1 (u_f): x₀ = chop(D⁻¹ chop(b)) — the diagonal initial solve.
-    let x0: Vec<f64> = p
-        .b
+    let x0: Vec<f64> = b
         .iter()
-        .zip(&m_f)
+        .zip(cg_mf.iter())
         .map(|(bi, mi)| chop_p(chop_p(*bi, action.u_f) * mi, action.u_f))
         .collect();
 
     let inner_tol = cfg.gmres_tol_factor * cfg.tau;
-    refinement_loop(
+    refinement_loop_ws(
         session,
-        p,
+        b,
+        x_true,
         action,
         cfg,
         x0,
-        |x| Ok(session.residual(x, &p.b, action.u_r)),
-        |r| {
-            let g = pcg_jacobi_op(
-                |xc| session.chopped_matvec(xc, action.u_g),
+        ir_r,
+        ir_z,
+        |x, out| {
+            session.residual_into(x, b, action.u_r, res_xc, out);
+            Ok(())
+        },
+        |r, z| {
+            let stats = pcg_jacobi_ws(
+                |xc, out| session.chopped_matvec_into(xc, action.u_g, out),
                 n,
-                &m_g,
+                cg_mg,
                 r,
                 inner_tol,
                 cfg.gmres_max_m,
                 action.u_g,
+                inner,
+                z,
             );
-            Ok((g.z, g.iters, g.ok))
+            Ok((stats.iters, stats.ok))
         },
     )
 }

@@ -20,6 +20,7 @@
 pub mod family;
 pub mod ir;
 pub mod metrics;
+pub mod workspace;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -29,25 +30,37 @@ use anyhow::Result;
 use crate::chop::{chop_p, Prec};
 use crate::linalg::Mat;
 use crate::sparse::Csr;
-use crate::system::SystemRef;
+use crate::system::{SystemInput, SystemRef};
+use workspace::InnerWs;
 
-/// Per-problem solve session: borrows the problem operator (dense `Mat`
-/// or CSR `Csr`, via [`SystemRef`]) and lazily caches the derived copies
-/// every backend step wants to share — the chopped A per precision
-/// (dense inputs), the chopped CSR values per precision (sparse inputs),
-/// the densified A for factorization (sparse inputs), and the
-/// bucket-padded A (PJRT path). Interior mutability is `OnceLock`, so a
-/// session may be shared across threads, but the intended pattern is one
-/// session per worker: sessions are cheap (no up-front copies) and drop
-/// all derived state at the end of the problem, which is what makes the
-/// backend itself stateless.
+/// Where a session's operator comes from: borrowed from the caller (the
+/// harness path — one session per problem per solve) or owned via `Arc`
+/// (the serving path — [`crate::api::SessionCache`] keeps the session
+/// *and* its derived chopped/densified state alive across requests, which
+/// is what makes repeated-A traffic amortize to zero rebuild work).
+enum SessionSource<'a> {
+    Borrowed(SystemRef<'a>),
+    Owned(Arc<SystemInput>),
+}
+
+/// Per-problem solve session: holds the problem operator (dense `Mat`
+/// or CSR `Csr` — borrowed via [`SystemRef`] or co-owned via `Arc` for
+/// the serving cache) and lazily caches the derived copies every backend
+/// step wants to share — the chopped A per precision (dense inputs), the
+/// chopped CSR values per precision (sparse inputs), the densified A for
+/// factorization (sparse inputs), and the bucket-padded A (PJRT path).
+/// Interior mutability is `OnceLock`, so a session may be shared across
+/// threads; the harness opens one borrowed session per problem and
+/// drops all derived state with it, while the serving cache keeps owned
+/// sessions — and their warm derived state — alive across requests
+/// (DESIGN.md §2e). Either way the backend itself stays stateless.
 ///
 /// The session also counts how many operator applications ran through
 /// the dense vs. the sparse path — cheap relaxed-atomic telemetry that
 /// lets tests *prove* the IR loop performs zero dense matvecs on sparse
 /// inputs (`tests/system_input.rs`).
 pub struct ProblemSession<'a> {
-    src: SystemRef<'a>,
+    src: SessionSource<'a>,
     /// densified copy of a sparse input — factorization stays dense
     /// (DESIGN.md §2c); dense inputs alias the borrowed matrix instead
     densified: OnceLock<Mat>,
@@ -69,8 +82,19 @@ impl<'a> ProblemSession<'a> {
     /// Open a session over a stored [`crate::system::SystemInput`], a
     /// `&Mat`, or a `&Csr` (anything `Into<SystemRef>`).
     pub fn new(src: impl Into<SystemRef<'a>>) -> ProblemSession<'a> {
+        ProblemSession::from_source(SessionSource::Borrowed(src.into()))
+    }
+
+    /// Open a session that co-owns its system (`Arc`): the session has no
+    /// borrow lifetime, so [`crate::api::SessionCache`] can keep it —
+    /// chopped slabs, densified copy, and all — alive across requests.
+    pub fn new_owned(src: Arc<SystemInput>) -> ProblemSession<'static> {
+        ProblemSession::from_source(SessionSource::Owned(src))
+    }
+
+    fn from_source(src: SessionSource<'a>) -> ProblemSession<'a> {
         ProblemSession {
-            src: src.into(),
+            src,
             densified: OnceLock::new(),
             chopped: Default::default(),
             chopped_csr: Default::default(),
@@ -81,22 +105,30 @@ impl<'a> ProblemSession<'a> {
         }
     }
 
+    /// The operator view, whichever way the session holds it.
+    fn src(&self) -> SystemRef<'_> {
+        match &self.src {
+            SessionSource::Borrowed(r) => *r,
+            SessionSource::Owned(s) => SystemRef::from(&**s),
+        }
+    }
+
     pub fn n(&self) -> usize {
-        match self.src {
+        match self.src() {
             SystemRef::Dense(m) => m.n_rows,
             SystemRef::Sparse(c) => c.n_rows,
         }
     }
 
     pub fn is_sparse(&self) -> bool {
-        matches!(self.src, SystemRef::Sparse(_))
+        matches!(self.src(), SystemRef::Sparse(_))
     }
 
     /// The dense form of A — the factorization escape hatch (LU stays
     /// dense, as in the paper's own simulation). Dense inputs alias the
     /// borrowed matrix; sparse inputs densify lazily, once per session.
     pub fn dense_for_factorization(&self) -> &Mat {
-        match self.src {
+        match self.src() {
             SystemRef::Dense(m) => m,
             SystemRef::Sparse(c) => self.densified.get_or_init(|| {
                 self.densifications.fetch_add(1, Ordering::Relaxed);
@@ -118,7 +150,7 @@ impl<'a> ProblemSession<'a> {
 
     /// The chopped CSR copy of a sparse input (values rounded, structure
     /// untouched), computed once per session; Fp64 aliases the original.
-    fn chopped_sparse(&self, c: &'a Csr, p: Prec) -> &Csr {
+    fn chopped_sparse<'s>(&'s self, c: &'s Csr, p: Prec) -> &'s Csr {
         if p == Prec::Fp64 {
             return c;
         }
@@ -127,14 +159,22 @@ impl<'a> ProblemSession<'a> {
 
     /// y = A x (f64) through the operator: O(nnz) for sparse inputs.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        match self.src {
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// In-place form of [`ProblemSession::matvec`] (allocation-free once
+    /// `out` has capacity n; bit-identical to the allocating form).
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
+        match self.src() {
             SystemRef::Dense(m) => {
                 self.dense_matvecs.fetch_add(1, Ordering::Relaxed);
-                m.matvec(x)
+                m.matvec_into(x, out)
             }
             SystemRef::Sparse(c) => {
                 self.sparse_matvecs.fetch_add(1, Ordering::Relaxed);
-                c.matvec(x)
+                c.matvec_into(x, out)
             }
         }
     }
@@ -144,21 +184,33 @@ impl<'a> ProblemSession<'a> {
     /// accumulation and one rounding per element. The two paths are
     /// bit-identical (see `chop::kernels::chop_csr_matvec`).
     pub fn chopped_matvec(&self, xc: &[f64], p: Prec) -> Vec<f64> {
-        match self.src {
+        let mut out = Vec::new();
+        self.chopped_matvec_into(xc, p, &mut out);
+        out
+    }
+
+    /// In-place form of [`ProblemSession::chopped_matvec`] — the GMRES /
+    /// PCG inner-loop operator application of the zero-allocation hot
+    /// path (allocation-free once `out` has capacity n *and* the
+    /// session's chopped copy for `p` exists; the copy is built once, on
+    /// the warmup call). Bit-identical to the allocating form.
+    pub fn chopped_matvec_into(&self, xc: &[f64], p: Prec, out: &mut Vec<f64>) {
+        match self.src() {
             SystemRef::Dense(_) => {
                 self.dense_matvecs.fetch_add(1, Ordering::Relaxed);
-                crate::linalg::chopped_matvec_prechopped(self.chopped(p), xc, p)
+                crate::linalg::chopped_matvec_prechopped_into(self.chopped(p), xc, p, out)
             }
             SystemRef::Sparse(c) => {
                 self.sparse_matvecs.fetch_add(1, Ordering::Relaxed);
-                self.chopped_sparse(c, p).chopped_matvec_prechopped(xc, p)
+                self.chopped_sparse(c, p)
+                    .chopped_matvec_prechopped_into(xc, p, out)
             }
         }
     }
 
     /// ‖A‖∞ through the operator (O(nnz) for sparse inputs).
     pub fn norm_inf(&self) -> f64 {
-        match self.src {
+        match self.src() {
             SystemRef::Dense(m) => m.norm_inf(),
             SystemRef::Sparse(c) => c.norm_inf(),
         }
@@ -167,7 +219,7 @@ impl<'a> ProblemSession<'a> {
     /// The operator diagonal (Jacobi preconditioner input for the CG-IR
     /// family) — O(nnz) for sparse inputs, never densifies.
     pub fn diag(&self) -> Vec<f64> {
-        match self.src {
+        match self.src() {
             SystemRef::Dense(m) => m.diag(),
             SystemRef::Sparse(c) => c.diag(),
         }
@@ -179,17 +231,39 @@ impl<'a> ProblemSession<'a> {
     /// driver both call it, so the cross-family and dense-vs-CSR bit
     /// contracts cannot drift apart.
     pub fn residual(&self, x: &[f64], b: &[f64], p: Prec) -> Vec<f64> {
+        let mut xc = Vec::new();
+        let mut out = Vec::new();
+        self.residual_into(x, b, p, &mut xc, &mut out);
+        out
+    }
+
+    /// In-place form of [`ProblemSession::residual`]: `xc` is the chop
+    /// scratch for x, `out` receives the residual (both cleared +
+    /// refilled — allocation-free once both have capacity n). The
+    /// per-element chop sequence is exactly the allocating form's, so
+    /// results are bit-identical.
+    pub fn residual_into(
+        &self,
+        x: &[f64],
+        b: &[f64],
+        p: Prec,
+        xc: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) {
         if p == Prec::Fp64 {
-            let ax = self.matvec(x);
-            return b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect();
+            self.matvec_into(x, out);
+            for (axi, bi) in out.iter_mut().zip(b) {
+                *axi = bi - *axi;
+            }
+            return;
         }
-        let mut xc = x.to_vec();
-        crate::chop::chop_slice(&mut xc, p);
-        let ax = self.chopped_matvec(&xc, p);
-        b.iter()
-            .zip(ax)
-            .map(|(bi, axi)| chop_p(chop_p(*bi, p) - axi, p))
-            .collect()
+        xc.clear();
+        xc.extend_from_slice(x);
+        crate::chop::chop_slice(xc.as_mut_slice(), p);
+        self.chopped_matvec_into(xc, p, out);
+        for (axi, bi) in out.iter_mut().zip(b) {
+            *axi = chop_p(chop_p(*bi, p) - *axi, p);
+        }
     }
 
     /// Operator applications that ran the dense path so far.
@@ -241,6 +315,18 @@ pub struct LuHandle {
     pub prec: Prec,
 }
 
+impl LuHandle {
+    /// x = U⁻¹ L⁻¹ P b in precision `p`, straight off the handle's `i32`
+    /// pivots — the same shared kernel as
+    /// [`crate::linalg::lu::LuFactors::solve_chopped`], so bit-identical
+    /// to converting into `LuFactors` first, without the per-call pivot
+    /// -vector allocation that conversion used to cost inside the GMRES
+    /// loop. Allocation-free once `out` has capacity n.
+    pub fn solve_chopped_into(&self, b: &[f64], p: Prec, out: &mut Vec<f64>) {
+        crate::linalg::lu::lu_solve_chopped_into(&self.lu, |k| self.piv[k] as usize, b, p, out)
+    }
+}
+
 /// Result of one inner GMRES solve.
 #[derive(Clone, Debug)]
 pub struct GmresOutcome {
@@ -280,6 +366,50 @@ pub trait SolverBackend: Send + Sync {
         max_m: usize,
         p: Prec,
     ) -> Result<GmresOutcome>;
+
+    /// In-place Step 2 for the zero-allocation hot path: write r = b − A x
+    /// into `out` (`xc` is chop scratch). The default allocates through
+    /// [`SolverBackend::residual`] — backends whose step is host-resident
+    /// (the native one) override it with a true in-place computation;
+    /// marshalling backends (PJRT) keep the default, which is simply the
+    /// old allocation behavior. Must be bit-identical to `residual`.
+    fn residual_into(
+        &self,
+        s: &ProblemSession<'_>,
+        x: &[f64],
+        b: &[f64],
+        p: Prec,
+        xc: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let _ = xc;
+        *out = self.residual(s, x, b, p)?;
+        Ok(())
+    }
+
+    /// In-place Step 3 for the zero-allocation hot path: run the inner
+    /// GMRES with scratch from `ws`, writing the correction into `z_out`;
+    /// returns (inner iterations, ok). Default allocates through
+    /// [`SolverBackend::gmres`] and copies — the native backend overrides
+    /// it with the workspace kernel. Must be bit-identical to `gmres`.
+    #[allow(clippy::too_many_arguments)]
+    fn gmres_ws(
+        &self,
+        s: &ProblemSession<'_>,
+        f: &LuHandle,
+        r: &[f64],
+        tol: f64,
+        max_m: usize,
+        p: Prec,
+        ws: &mut InnerWs,
+        z_out: &mut Vec<f64>,
+    ) -> Result<(usize, bool)> {
+        let _ = ws;
+        let g = self.gmres(s, f, r, tol, max_m, p)?;
+        z_out.clear();
+        z_out.extend_from_slice(&g.z);
+        Ok((g.iters, g.ok))
+    }
 
     /// Human-readable backend name (logs / EXPERIMENTS.md provenance).
     fn name(&self) -> &'static str;
@@ -379,5 +509,56 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ProblemSession<'static>>();
         assert_send_sync::<LuHandle>();
+    }
+
+    #[test]
+    fn owned_session_matches_borrowed_bitwise() {
+        // the serving cache's 'static sessions must behave exactly like
+        // the harness's borrowed ones — same caches, same counters, same
+        // bits — for both operator shapes
+        let mut a = Mat::eye(12);
+        a[(0, 3)] = 0.1234567890123;
+        a[(7, 2)] = -3.75;
+        let csr = Csr::from_dense(&a);
+        let x: Vec<f64> = (0..12).map(|i| (i as f64) - 5.5).collect();
+        for sys in [SystemInput::Dense(a.clone()), SystemInput::Sparse(csr)] {
+            let borrowed = ProblemSession::new(&sys);
+            let owned = ProblemSession::new_owned(Arc::new(sys.clone()));
+            assert_eq!(borrowed.is_sparse(), owned.is_sparse());
+            assert_eq!(borrowed.n(), owned.n());
+            assert_eq!(borrowed.norm_inf().to_bits(), owned.norm_inf().to_bits());
+            assert_eq!(borrowed.diag(), owned.diag());
+            for p in [Prec::Bf16, Prec::Fp64] {
+                let mut xc = x.clone();
+                crate::chop::chop_slice(&mut xc, p);
+                let yb = borrowed.chopped_matvec(&xc, p);
+                let yo = owned.chopped_matvec(&xc, p);
+                for (u, v) in yb.iter().zip(&yo) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+            assert_eq!(
+                borrowed.dense_for_factorization(),
+                owned.dense_for_factorization()
+            );
+        }
+    }
+
+    #[test]
+    fn residual_into_reuses_buffers_and_matches_allocating_form() {
+        let mut a = Mat::eye(10);
+        a[(2, 5)] = 1.5;
+        let s = ProblemSession::new(&a);
+        let x = vec![0.25; 10];
+        let b: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let (mut xc, mut out) = (Vec::new(), Vec::new());
+        for p in [Prec::Bf16, Prec::Fp32, Prec::Fp64] {
+            let r = s.residual(&x, &b, p);
+            s.residual_into(&x, &b, p, &mut xc, &mut out);
+            assert_eq!(r.len(), out.len());
+            for (u, v) in r.iter().zip(&out) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p}");
+            }
+        }
     }
 }

@@ -1,0 +1,217 @@
+//! Reusable solve scratch: the zero-allocation hot path (DESIGN.md §2e).
+//!
+//! Every buffer the Alg.-2 refinement loop and its inner solvers touch
+//! per iteration — the Krylov basis, the Hessenberg, the CG direction
+//! vectors, the residual/correction pair, the chop scratch — lives in a
+//! [`SolveWorkspace`] owned by the *caller* and grown on first use.
+//! After that warmup, a steady-state refinement solve performs **zero
+//! heap allocations inside the IR loop** (locked by
+//! `tests/alloc_regression.rs` with a counting global allocator); the
+//! only per-request allocations left are the solution vector the caller
+//! keeps and the constant pre/post-loop bookkeeping.
+//!
+//! Layout notes (vs. the pre-workspace kernels):
+//! * the GMRES Krylov basis is one contiguous `(m+1)×n` row-major slab
+//!   (`basis`), not `Vec<Vec<f64>>` — row j is `basis[j*n..(j+1)*n]`;
+//! * the Hessenberg is flat row-major with column j at
+//!   `h[j*(m+1)..(j+1)*(m+1)]` (the old `h[j][i]` becomes
+//!   `h[j*(m+1)+i]`), zero-filled per call so the column-finiteness
+//!   check reads the same zeros a fresh allocation would;
+//! * every per-element arithmetic operation and its order are unchanged,
+//!   so results are bit-identical to the allocating kernels (the legacy
+//!   entry points now wrap these and the whole pre-existing test suite
+//!   rides on them).
+//!
+//! The struct is split so the refinement loop, the residual step, and
+//! the inner solver can borrow disjoint parts simultaneously (Rust field
+//! -level borrows): `ir_r`/`ir_z` feed the outer loop, `res_xc` is the
+//! residual's chop scratch, `cg_mf`/`cg_mg` hold the Jacobi diagonals
+//! (they must sit outside [`InnerWs`] because PCG borrows them *and* the
+//! inner scratch at once), and [`InnerWs`] is everything the GMRES / PCG
+//! kernels own per iteration.
+
+use std::sync::Mutex;
+
+/// Scratch owned by the inner solvers (GMRES Arnoldi + Givens, PCG) and
+/// the preconditioner applications. See the module docs for the flat
+/// layouts.
+#[derive(Debug, Default)]
+pub struct InnerWs {
+    /// preconditioned initial residual r₀ = M⁻¹r (len n)
+    pub(crate) r0: Vec<f64>,
+    /// Krylov basis slab, (m+1) rows × n (rows fully written before read)
+    pub(crate) basis: Vec<f64>,
+    /// flat Hessenberg, column j at `[j*(m+1), (j+1)*(m+1))`
+    pub(crate) h: Vec<f64>,
+    /// Givens cosines / sines (len m)
+    pub(crate) cs: Vec<f64>,
+    pub(crate) sn: Vec<f64>,
+    /// rotated RHS (len m+1)
+    pub(crate) g: Vec<f64>,
+    /// triangular-solve solution (len m)
+    pub(crate) y: Vec<f64>,
+    /// chopped copy of the current basis vector (len n)
+    pub(crate) xc: Vec<f64>,
+    /// operator application A·v (len n)
+    pub(crate) av: Vec<f64>,
+    /// MGS work vector w (len n)
+    pub(crate) w: Vec<f64>,
+    /// PCG residual (len n)
+    pub(crate) c_res: Vec<f64>,
+    /// PCG preconditioned residual y = M⁻¹res (len n)
+    pub(crate) c_y: Vec<f64>,
+    /// PCG search direction (len n)
+    pub(crate) c_dir: Vec<f64>,
+    /// PCG operator application q = A·dir (len n)
+    pub(crate) c_q: Vec<f64>,
+}
+
+/// The full per-solve scratch set: outer-loop buffers + residual chop
+/// scratch + Jacobi diagonals + [`InnerWs`]. One workspace serves one
+/// solve at a time; reuse it across requests to stay allocation-free
+/// after warmup. `Send` (all plain buffers), so per-thread workspaces in
+/// a serving pool are just values.
+#[derive(Debug, Default)]
+pub struct SolveWorkspace {
+    /// outer-loop residual r = b − A x (len n)
+    pub(crate) ir_r: Vec<f64>,
+    /// outer-loop correction z (len n)
+    pub(crate) ir_z: Vec<f64>,
+    /// residual step's chopped-x scratch (len n)
+    pub(crate) res_xc: Vec<f64>,
+    /// CG-IR Jacobi inverse diagonal in u_f (preconditioner build)
+    pub(crate) cg_mf: Vec<f64>,
+    /// CG-IR Jacobi inverse diagonal in u_g (PCG application)
+    pub(crate) cg_mg: Vec<f64>,
+    /// inner-solver scratch (GMRES / PCG)
+    pub(crate) inner: InnerWs,
+}
+
+impl SolveWorkspace {
+    pub fn new() -> SolveWorkspace {
+        SolveWorkspace::default()
+    }
+}
+
+/// Outcome stats of one workspace-form inner solve (the correction
+/// itself is written into the caller's buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct InnerStats {
+    pub iters: usize,
+    pub relres: f64,
+    pub ok: bool,
+}
+
+/// Grow `v` to at least `len` elements (zero-filled growth). Never
+/// shrinks, so capacity is monotone and steady-state calls are
+/// allocation-free.
+#[inline]
+pub(crate) fn grow(v: &mut Vec<f64>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// A small free-list of workspaces for concurrent serving: `checkout()`
+/// pops a warmed workspace (or creates one the first time a concurrency
+/// level is reached) and the guard returns it on drop. The pool never
+/// shrinks — its size converges to the peak number of concurrent solves,
+/// which is what keeps `Autotuner::solve_batch` allocation-free after
+/// warmup for any `PA_THREADS`.
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<SolveWorkspace>>,
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Number of idle (checked-in) workspaces.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    pub fn checkout(&self) -> PooledWorkspace<'_> {
+        let ws = self.free.lock().unwrap().pop().unwrap_or_default();
+        PooledWorkspace { pool: self, ws: Some(ws) }
+    }
+}
+
+/// RAII guard for a pooled workspace; derefs to [`SolveWorkspace`] and
+/// returns the buffer to its pool on drop.
+pub struct PooledWorkspace<'a> {
+    pool: &'a WorkspacePool,
+    ws: Option<SolveWorkspace>,
+}
+
+impl std::ops::Deref for PooledWorkspace<'_> {
+    type Target = SolveWorkspace;
+    fn deref(&self) -> &SolveWorkspace {
+        self.ws.as_ref().expect("present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledWorkspace<'_> {
+    fn deref_mut(&mut self) -> &mut SolveWorkspace {
+        self.ws.as_mut().expect("present until drop")
+    }
+}
+
+impl Drop for PooledWorkspace<'_> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.free.lock().unwrap().push(ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_is_monotone_and_preserves_capacity() {
+        let mut v = Vec::new();
+        grow(&mut v, 8);
+        assert_eq!(v.len(), 8);
+        let cap = v.capacity();
+        grow(&mut v, 4);
+        assert_eq!(v.len(), 8, "never shrinks");
+        assert_eq!(v.capacity(), cap);
+    }
+
+    #[test]
+    fn pool_checkout_reuses_buffers() {
+        let pool = WorkspacePool::new();
+        {
+            let mut a = pool.checkout();
+            grow(&mut a.ir_r, 64);
+            assert_eq!(pool.idle(), 0);
+        }
+        assert_eq!(pool.idle(), 1);
+        let b = pool.checkout();
+        assert_eq!(b.ir_r.len(), 64, "warmed workspace comes back");
+        assert_eq!(pool.idle(), 0);
+        drop(b);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn pool_grows_to_concurrency() {
+        let pool = WorkspacePool::new();
+        let a = pool.checkout();
+        let b = pool.checkout();
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn workspace_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<SolveWorkspace>();
+        assert_send::<WorkspacePool>();
+    }
+}

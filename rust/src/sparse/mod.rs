@@ -109,11 +109,27 @@ impl Csr {
     /// so the result is bit-identical for any thread count (the same
     /// contract as the dense `Mat::matvec`).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// In-place form of [`Csr::matvec`]: writes into `out` (cleared +
+    /// refilled — allocation-free once `out` has capacity `n_rows`).
+    /// Each element is the same independent f64 row dot on both
+    /// branches, so bit-identical to the allocating form for any thread
+    /// count.
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(x.len(), self.n_cols);
+        out.clear();
         if self.nnz() >= PAR_MIN_NNZ {
-            return crate::util::pool::parallel_map(self.n_rows, |i| self.row_dot(i, x));
+            out.resize(self.n_rows, 0.0);
+            crate::util::pool::parallel_for_rows(out.as_mut_slice(), 1, |i, slot| {
+                slot[0] = self.row_dot(i, x);
+            });
+            return;
         }
-        (0..self.n_rows).map(|i| self.row_dot(i, x)).collect()
+        out.extend((0..self.n_rows).map(|i| self.row_dot(i, x)));
     }
 
     /// The main diagonal (structurally missing entries are 0.0) — the
@@ -170,16 +186,39 @@ impl Csr {
     /// whole result is poisoned to NaN, which drives GMRES to the exact
     /// same (constant) failure outcome the dense path reaches.
     pub fn chopped_matvec_prechopped(&self, x: &[f64], p: Prec) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.chopped_matvec_prechopped_into(x, p, &mut out);
+        out
+    }
+
+    /// In-place form of [`Csr::chopped_matvec_prechopped`]: writes into
+    /// `out` (cleared + refilled — allocation-free once `out` has
+    /// capacity `n_rows`). Same per-element computation on every branch
+    /// incl. the non-finite poisoning, so bit-identical to the
+    /// allocating form.
+    pub fn chopped_matvec_prechopped_into(&self, x: &[f64], p: Prec, out: &mut Vec<f64>) {
         assert_eq!(x.len(), self.n_cols);
         if x.iter().any(|v| !v.is_finite()) {
-            return vec![f64::NAN; self.n_rows];
+            out.clear();
+            out.resize(self.n_rows, f64::NAN);
+            return;
         }
         if self.nnz() >= PAR_MIN_NNZ {
-            return crate::util::pool::parallel_map(self.n_rows, |i| {
-                crate::chop::chop_p(self.row_dot(i, x), p)
+            out.clear();
+            out.resize(self.n_rows, 0.0);
+            crate::util::pool::parallel_for_rows(out.as_mut_slice(), 1, |i, slot| {
+                slot[0] = crate::chop::chop_p(self.row_dot(i, x), p);
             });
+            return;
         }
-        crate::chop::chop_csr_matvec(&self.row_ptr, &self.col_idx, &self.values, x, p.format())
+        crate::chop::chop_csr_matvec_into(
+            &self.row_ptr,
+            &self.col_idx,
+            &self.values,
+            x,
+            p.format(),
+            out,
+        );
     }
 
     /// C = A·Aᵀ + βI computed **directly in CSR** — the §5.3 generator's

@@ -269,6 +269,59 @@ impl SystemInput {
             SystemInput::Sparse(c) => Cow::Owned(c.to_dense()),
         }
     }
+
+    /// 256-bit operator fingerprint: 4-lane FNV-1a over the full value
+    /// and structure streams (variant tag, dims, every value's raw f64
+    /// bits, and — for CSR — the row/column index arrays). One O(nnz)
+    /// pass; words round-robin across the lanes so each lane sees a
+    /// quarter of the stream plus a distinct seed. This is the
+    /// [`crate::api::SessionCache`] key for repeated-A traffic; the cache
+    /// additionally verifies candidate hits bitwise (`same_system`), so
+    /// a collision can cost a rebuild but never a wrong reuse.
+    pub fn fingerprint(&self) -> [u64; 4] {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        // distinct lane seeds (lane index folded into the FNV offset)
+        let mut lanes = [
+            OFFSET,
+            OFFSET.wrapping_mul(PRIME) ^ 1,
+            OFFSET.wrapping_mul(PRIME) ^ 2,
+            OFFSET.wrapping_mul(PRIME) ^ 3,
+        ];
+        let mut i = 0usize;
+        let mut eat = |w: u64| {
+            let lane = &mut lanes[i & 3];
+            // FNV-1a on the 8 bytes of w, kept word-at-a-time for speed:
+            // xor-then-multiply per word is the 64-bit word variant.
+            *lane = (*lane ^ w).wrapping_mul(PRIME);
+            i += 1;
+        };
+        match self {
+            SystemInput::Dense(m) => {
+                eat(0xD);
+                eat(m.n_rows as u64);
+                eat(m.n_cols as u64);
+                for v in &m.data {
+                    eat(v.to_bits());
+                }
+            }
+            SystemInput::Sparse(c) => {
+                eat(0x5);
+                eat(c.n_rows as u64);
+                eat(c.n_cols as u64);
+                for &r in &c.row_ptr {
+                    eat(r as u64);
+                }
+                for &j in &c.col_idx {
+                    eat(j as u64);
+                }
+                for v in &c.values {
+                    eat(v.to_bits());
+                }
+            }
+        }
+        lanes
+    }
 }
 
 impl LinearOperator for SystemInput {
@@ -431,6 +484,35 @@ mod tests {
         assert_eq!(SystemInput::from(&s), s);
         assert!(matches!(SystemRef::from(&a), SystemRef::Dense(_)));
         assert!(matches!(SystemRef::from(&s), SystemRef::Sparse(_)));
+    }
+
+    #[test]
+    fn fingerprint_separates_values_structure_and_shape() {
+        let a = random_sparse(16, 0.3, 7);
+        let fp_dense = SystemInput::Dense(a.clone()).fingerprint();
+        assert_eq!(fp_dense, SystemInput::Dense(a.clone()).fingerprint());
+        // same numbers as CSR hash differently (variant + structure)
+        let csr = Csr::from_dense(&a);
+        assert_ne!(fp_dense, SystemInput::Sparse(csr.clone()).fingerprint());
+        // a single-bit value change moves the fingerprint
+        let mut b = a.clone();
+        b[(3, 4)] = f64::from_bits(b[(3, 4)].to_bits() ^ 1);
+        assert_ne!(fp_dense, SystemInput::Dense(b).fingerprint());
+        // a structure-only change (same values elsewhere) moves it too
+        let mut c2 = csr.clone();
+        if !c2.col_idx.is_empty() {
+            let last = c2.col_idx.len() - 1;
+            c2.col_idx[last] = (c2.col_idx[last] + 1) % c2.n_cols;
+            assert_ne!(
+                SystemInput::Sparse(csr).fingerprint(),
+                SystemInput::Sparse(c2).fingerprint()
+            );
+        }
+        // shape matters even with identical (empty) data streams
+        assert_ne!(
+            SystemInput::Dense(Mat::zeros(2, 3)).fingerprint(),
+            SystemInput::Dense(Mat::zeros(3, 2)).fingerprint()
+        );
     }
 
     #[test]

@@ -115,6 +115,17 @@ impl JsonReport {
     }
 }
 
+/// Nearest-rank percentile of an **ascending-sorted** sample slice
+/// (`q` in [0, 1]; q = 0.5 is the median, 0.99 the p99 the serve bench
+/// reports). NaN on an empty slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
 /// Time a single long-running call (suite-scale benches).
 pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
     let t0 = Instant::now();
@@ -159,6 +170,17 @@ mod tests {
         assert_eq!(cases.len(), 2);
         assert_eq!(cases[0].get("median_ns").unwrap().as_f64().unwrap(), 9.0);
         assert_eq!(cases[1].get("n").unwrap().as_usize().unwrap(), 64);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Allocation-count regression lock for the zero-allocation hot path
+//! (DESIGN.md §2e, ISSUE 5 acceptance): a counting global allocator
+//! proves that the steady-state IR loop — residual, inner solve
+//! (GMRES and PCG), solution update, norms — performs **zero** heap
+//! allocations once the workspace and session caches are warm, and that
+//! the driver/facade layers above it allocate a small constant that
+//! does not drift.
+//!
+//! One single `#[test]` function on purpose: the counter is a process
+//! global, and sibling tests in the same binary would run on other
+//! threads and pollute the measured windows. Scenarios run sequentially
+//! inside it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use precision_autotune::api::Autotuner;
+use precision_autotune::bandit::action::Action;
+use precision_autotune::backend_native::NativeBackend;
+use precision_autotune::chop::{chop_p, Prec};
+use precision_autotune::gen::sparse_spd;
+use precision_autotune::linalg::cg::pcg_jacobi_ws;
+use precision_autotune::linalg::gmres::gmres_preconditioned_ws;
+use precision_autotune::linalg::lu::lu_factor_chopped;
+use precision_autotune::linalg::{norm_inf_vec, Mat};
+use precision_autotune::solver::ir::{cg_ir_ws, gmres_ir_prefactored_ws};
+use precision_autotune::solver::workspace::{InnerWs, SolveWorkspace};
+use precision_autotune::solver::{ProblemSession, SolverBackend};
+use precision_autotune::system::SystemInput;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::rng::Rng;
+
+/// Counts alloc/realloc calls (not bytes, not frees) while enabled.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with counting enabled; returns (result, allocation count).
+fn count_allocs<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    ENABLED.store(true, Ordering::SeqCst);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let out = f();
+    let after = ALLOCS.load(Ordering::SeqCst);
+    ENABLED.store(false, Ordering::SeqCst);
+    (out, after - before)
+}
+
+fn dense_system(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    (a, b)
+}
+
+#[test]
+fn steady_state_hot_path_is_allocation_free() {
+    let n = 48;
+    let (a, b) = dense_system(n, 1);
+
+    // ---- 1. kernel-level IR loop body (dense, bf16): exactly ZERO ----
+    // The loop body the refinement driver runs per outer iteration:
+    // residual_into + workspace GMRES + chopped update + norms.
+    {
+        let session = ProblemSession::new(&a);
+        let lu = lu_factor_chopped(&a, Prec::Bf16).unwrap();
+        let mut x = lu.solve_chopped(&b, Prec::Bf16);
+        let mut ws = InnerWs::default();
+        let (mut xc, mut r, mut z) = (Vec::new(), Vec::new(), Vec::new());
+        let mut loop_body = |x: &mut Vec<f64>| {
+            session.residual_into(x, &b, Prec::Bf16, &mut xc, &mut r);
+            let stats = gmres_preconditioned_ws(
+                |v, out| session.chopped_matvec_into(v, Prec::Bf16, out),
+                |v, out| lu.solve_chopped_into(v, Prec::Bf16, out),
+                n,
+                &r,
+                1e-4,
+                20,
+                Prec::Bf16,
+                &mut ws,
+                &mut z,
+            );
+            for (xi, zi) in x.iter_mut().zip(&z) {
+                *xi = chop_p(*xi + zi, Prec::Bf16);
+            }
+            let _ = norm_inf_vec(&z) / norm_inf_vec(x).max(1e-300);
+            assert!(stats.iters > 0, "warmed loop body must do real work");
+            stats.iters
+        };
+        loop_body(&mut x); // warmup: session chopped copy + ws growth
+        let (_, allocs) = count_allocs(|| loop_body(&mut x));
+        assert_eq!(
+            allocs, 0,
+            "dense IR loop body allocated {allocs} times in steady state"
+        );
+    }
+
+    // ---- 2. kernel-level IR loop body (sparse CSR, PCG): ZERO ----
+    {
+        let mut rng = Rng::new(3);
+        let csr = sparse_spd(64, 0.08, 1.0, &mut rng);
+        let bs: Vec<f64> = (0..64).map(|_| rng.gauss()).collect();
+        let session = ProblemSession::new(&csr);
+        let m_inv: Vec<f64> = session
+            .diag()
+            .iter()
+            .map(|&d| chop_p(1.0 / chop_p(d, Prec::Fp32), Prec::Fp32))
+            .collect();
+        let mut x = vec![0.0; 64];
+        let mut ws = InnerWs::default();
+        let (mut xc, mut r, mut z) = (Vec::new(), Vec::new(), Vec::new());
+        let mut loop_body = |x: &mut Vec<f64>| {
+            session.residual_into(x, &bs, Prec::Fp32, &mut xc, &mut r);
+            let stats = pcg_jacobi_ws(
+                |v, out| session.chopped_matvec_into(v, Prec::Fp32, out),
+                64,
+                &m_inv,
+                &r,
+                1e-4,
+                40,
+                Prec::Fp32,
+                &mut ws,
+                &mut z,
+            );
+            for (xi, zi) in x.iter_mut().zip(&z) {
+                *xi = chop_p(*xi + zi, Prec::Fp32);
+            }
+            assert!(stats.iters > 0);
+            stats.iters
+        };
+        loop_body(&mut x);
+        let (_, allocs) = count_allocs(|| loop_body(&mut x));
+        assert_eq!(
+            allocs, 0,
+            "sparse PCG loop body allocated {allocs} times in steady state"
+        );
+    }
+
+    // ---- 3. driver level (LU-IR): small constant, no drift ----
+    // Pre/post-loop bookkeeping (the x0 initial solve and the final nbe
+    // matvec) may allocate a bounded constant; the loop itself adds
+    // nothing, so repeated steady-state calls count identically.
+    {
+        let backend = NativeBackend::new();
+        let session = ProblemSession::new(&a);
+        let f = backend.lu_factor(&session, Prec::Fp64).unwrap();
+        let cfg = Config::default();
+        let mut ws = SolveWorkspace::new();
+        let mut run = |ws: &mut SolveWorkspace| {
+            gmres_ir_prefactored_ws(
+                &backend,
+                &session,
+                &b,
+                &[],
+                &Action::FP64,
+                &cfg,
+                Some(&f),
+                ws,
+            )
+            .unwrap()
+        };
+        run(&mut ws); // warmup
+        let (o1, c1) = count_allocs(|| run(&mut ws));
+        let (o2, c2) = count_allocs(|| run(&mut ws));
+        assert_eq!(c1, c2, "steady-state driver alloc count must not drift");
+        assert!(c1 <= 8, "driver constant crept up: {c1} allocations");
+        assert!(!o1.failed && o1.outer_iters >= 1);
+        for (u, v) in o1.x.iter().zip(&o2.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    // ---- 4. driver level (CG-IR over CSR): small constant, no drift ----
+    {
+        let mut rng = Rng::new(5);
+        let csr = sparse_spd(64, 0.08, 1.0, &mut rng);
+        let bs: Vec<f64> = (0..64).map(|_| rng.gauss()).collect();
+        let session = ProblemSession::new(&csr);
+        let cfg = Config::default();
+        let mut ws = SolveWorkspace::new();
+        let mut run = |ws: &mut SolveWorkspace| {
+            cg_ir_ws(&session, &bs, &[], &Action::CG_FP64, &cfg, ws).unwrap()
+        };
+        run(&mut ws);
+        let (o1, c1) = count_allocs(|| run(&mut ws));
+        let (_, c2) = count_allocs(|| run(&mut ws));
+        assert_eq!(c1, c2);
+        assert!(c1 <= 8, "CG driver constant crept up: {c1} allocations");
+        assert!(!o1.failed);
+        assert_eq!(session.densify_count(), 0, "CG stays matvec-only");
+    }
+
+    // ---- 5. facade level: cached-session steady state, no drift ----
+    // solve_batch consumes &SystemInput without cloning the operator, so
+    // the steady state is: fingerprint + verified cache hit + pooled
+    // workspace + the driver constant + the per-request report.
+    {
+        let tuner = Autotuner::builder().build().unwrap();
+        let sys = SystemInput::from(&a);
+        let reqs: Vec<(SystemInput, &[f64])> = vec![(sys, b.as_slice())];
+        let warm = tuner.solve_batch(&reqs);
+        assert!(!warm[0].as_ref().unwrap().failed);
+        let _ = tuner.solve_batch(&reqs); // second warm: hit path + pool
+        let (r3, c3) = count_allocs(|| tuner.solve_batch(&reqs));
+        let (r4, c4) = count_allocs(|| tuner.solve_batch(&reqs));
+        assert_eq!(c3, c4, "steady-state facade alloc count must not drift");
+        assert!(c3 <= 24, "facade constant crept up: {c3} allocations");
+        let (rep3, rep4) = (r3[0].as_ref().unwrap(), r4[0].as_ref().unwrap());
+        assert!(rep3.cache_hit && rep4.cache_hit);
+        for (u, v) in rep3.x.iter().zip(&rep4.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Serving-stack bit-identity locks (ISSUE 5 acceptance):
+//!
+//! * `Autotuner::solve_batch` ≡ sequential `Autotuner::solve`, per
+//!   request, bitwise — under the ambient `PA_THREADS` (the CI matrix
+//!   runs the whole suite at 1 and 4) *and* under an explicit 1-vs-4
+//!   comparison inside one process;
+//! * cached sessions ≡ fresh sessions, bitwise, across precisions ×
+//!   solver families × dense/CSR;
+//! * LRU eviction + hit/miss counters behave as documented;
+//! * one malformed request fails alone, never the batch.
+
+use std::sync::Mutex;
+
+use precision_autotune::api::Autotuner;
+use precision_autotune::bandit::action::Action;
+use precision_autotune::chop::Prec;
+use precision_autotune::linalg::Mat;
+use precision_autotune::sparse::Csr;
+use precision_autotune::system::SystemInput;
+use precision_autotune::util::rng::Rng;
+
+/// Serializes the tests that mutate the process-global `PA_THREADS` env
+/// var (same pattern as tests/kernel_bitexact.rs). Everything else in
+/// this binary is thread-count-invariant by the pool contract, so a
+/// concurrently observed override cannot change any asserted bits.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn dense(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    a
+}
+
+/// Symmetric positive definite dense system (for the CG family).
+fn dense_spd(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        a[(i, i)] = 8.0 + rng.gauss().abs();
+        for j in 0..i {
+            if rng.uniform() < 0.15 {
+                let v = rng.gauss() * 0.4;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+    }
+    a
+}
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.gauss()).collect()
+}
+
+fn assert_reports_bit_equal(
+    a: &precision_autotune::api::SolveReport,
+    b: &precision_autotune::api::SolveReport,
+    tag: &str,
+) {
+    assert_eq!(a.action, b.action, "{tag}");
+    assert_eq!(a.solver, b.solver, "{tag}");
+    assert_eq!(a.failed, b.failed, "{tag}");
+    assert_eq!(a.outer_iters, b.outer_iters, "{tag}");
+    assert_eq!(a.gmres_iters, b.gmres_iters, "{tag}");
+    assert_eq!(a.nbe.to_bits(), b.nbe.to_bits(), "{tag}");
+    assert_eq!(a.kappa_est.to_bits(), b.kappa_est.to_bits(), "{tag}");
+    assert_eq!(a.x.len(), b.x.len(), "{tag}");
+    for (u, v) in a.x.iter().zip(&b.x) {
+        assert_eq!(u.to_bits(), v.to_bits(), "{tag}");
+    }
+}
+
+/// The mixed workload every batch test runs: repeated dense A (cache
+/// hits), a fresh dense A, and a sparse CSR system.
+fn workload() -> Vec<(SystemInput, Vec<f64>)> {
+    let a1 = dense(28, 1);
+    let a2 = dense(32, 2);
+    let sp = Csr::from_dense(&dense_spd(36, 3));
+    vec![
+        (SystemInput::from(&a1), rhs(28, 10)),
+        (SystemInput::from(&a1), rhs(28, 11)), // repeated A, new b
+        (SystemInput::from(&a2), rhs(32, 12)),
+        (SystemInput::Sparse(sp), rhs(36, 13)),
+        (SystemInput::from(&a1), rhs(28, 14)), // A1 again after others
+    ]
+}
+
+#[test]
+fn batch_matches_sequential_solve_bitwise() {
+    let reqs_owned = workload();
+    let reqs: Vec<(SystemInput, &[f64])> = reqs_owned
+        .iter()
+        .map(|(a, b)| (a.clone(), b.as_slice()))
+        .collect();
+
+    // sequential reference on its own tuner (cache state independent)
+    let seq_tuner = Autotuner::builder().build().unwrap();
+    let seq: Vec<_> = reqs_owned
+        .iter()
+        .map(|(a, b)| seq_tuner.solve(a, b).unwrap())
+        .collect();
+
+    let batch_tuner = Autotuner::builder().build().unwrap();
+    let batch = batch_tuner.solve_batch(&reqs);
+    assert_eq!(batch.len(), seq.len());
+    for (i, (s, b)) in seq.iter().zip(&batch).enumerate() {
+        let b = b.as_ref().unwrap();
+        assert!(!b.failed, "request {i} failed: {:?}", b.stop);
+        assert_reports_bit_equal(s, b, &format!("request {i}"));
+    }
+
+    // cache disabled: same bits again
+    let plain_tuner = Autotuner::builder().session_cache(0).build().unwrap();
+    let plain = plain_tuner.solve_batch(&reqs);
+    for (i, (s, p)) in seq.iter().zip(&plain).enumerate() {
+        let p = p.as_ref().unwrap();
+        assert!(!p.cache_hit);
+        assert_reports_bit_equal(s, p, &format!("uncached request {i}"));
+    }
+}
+
+#[test]
+fn batch_is_thread_count_invariant() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let reqs_owned = workload();
+    let reqs: Vec<(SystemInput, &[f64])> = reqs_owned
+        .iter()
+        .map(|(a, b)| (a.clone(), b.as_slice()))
+        .collect();
+    let run = || {
+        let tuner = Autotuner::builder().build().unwrap();
+        tuner
+            .solve_batch(&reqs)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect::<Vec<_>>()
+    };
+    std::env::set_var("PA_THREADS", "1");
+    let r1 = run();
+    std::env::set_var("PA_THREADS", "4");
+    let r4 = run();
+    std::env::remove_var("PA_THREADS");
+    for (i, (a, b)) in r1.iter().zip(&r4).enumerate() {
+        assert_reports_bit_equal(a, b, &format!("PA_THREADS 1 vs 4, request {i}"));
+    }
+}
+
+#[test]
+fn cached_sessions_bit_identical_across_prec_family_and_shape() {
+    let spd = dense_spd(30, 7);
+    let csr = Csr::from_dense(&spd);
+    let ones = vec![1.0; 30];
+    let b = spd.matvec(&ones);
+    let actions = [
+        Action::FP64,
+        Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64),
+        Action::lu(Prec::Fp32, Prec::Fp64, Prec::Fp32, Prec::Fp32),
+        Action::CG_FP64,
+    ];
+    for sys in [SystemInput::Dense(spd.clone()), SystemInput::Sparse(csr)] {
+        let shape = if sys.is_sparse() { "csr" } else { "dense" };
+        let cached = Autotuner::builder().build().unwrap();
+        let fresh = Autotuner::builder().session_cache(0).build().unwrap();
+        for action in actions {
+            let tag = format!("{shape}/{action}");
+            let miss = cached.solve_with_action(&sys, &b, action).unwrap();
+            let hit = cached.solve_with_action(&sys, &b, action).unwrap();
+            assert!(hit.cache_hit, "{tag}: second request must hit");
+            let plain = fresh.solve_with_action(&sys, &b, action).unwrap();
+            assert!(!miss.failed, "{tag}: {:?}", miss.stop);
+            assert_eq!(miss.solver, action.solver, "{tag}");
+            assert_reports_bit_equal(&miss, &hit, &format!("{tag} miss-vs-hit"));
+            assert_reports_bit_equal(&miss, &plain, &format!("{tag} cached-vs-fresh"));
+        }
+    }
+}
+
+#[test]
+fn lru_eviction_and_report_counters() {
+    let tuner = Autotuner::builder().session_cache(2).build().unwrap();
+    let (a1, a2, a3) = (dense(16, 21), dense(16, 22), dense(16, 23));
+    let b = rhs(16, 99);
+    assert_eq!(tuner.session_cache().capacity(), 2);
+    let r = tuner.solve(&a1, &b).unwrap();
+    assert!(!r.cache_hit);
+    tuner.solve(&a2, &b).unwrap();
+    let r = tuner.solve(&a1, &b).unwrap(); // a1 → MRU
+    assert!(r.cache_hit);
+    tuner.solve(&a3, &b).unwrap(); // evicts a2
+    assert_eq!(tuner.session_cache().len(), 2);
+    let r = tuner.solve(&a1, &b).unwrap();
+    assert!(r.cache_hit, "MRU entry survives eviction");
+    let r = tuner.solve(&a2, &b).unwrap();
+    assert!(!r.cache_hit, "evicted entry rebuilds");
+    // report counters mirror the cache's lifetime counters
+    assert_eq!(r.cache_hits, tuner.session_cache().hits());
+    assert_eq!(r.cache_misses, tuner.session_cache().misses());
+    assert_eq!(r.cache_misses, 4, "a1, a2, a3, a2-again");
+    assert_eq!(r.cache_hits, 2);
+}
+
+#[test]
+fn batch_isolates_per_request_errors() {
+    let good = dense(12, 31);
+    let rect = Mat::zeros(3, 4);
+    let b12 = rhs(12, 1);
+    let b3 = rhs(3, 2);
+    let reqs: Vec<(SystemInput, &[f64])> = vec![
+        (SystemInput::from(&good), b12.as_slice()),
+        (SystemInput::Dense(rect), b3.as_slice()),
+        (SystemInput::from(&good), b3.as_slice()), // wrong rhs length
+        (SystemInput::from(&good), b12.as_slice()),
+    ];
+    let tuner = Autotuner::builder().build().unwrap();
+    let out = tuner.solve_batch(&reqs);
+    assert!(out[0].is_ok());
+    let e1 = out[1].as_ref().unwrap_err().to_string();
+    assert!(e1.contains("square"), "{e1}");
+    let e2 = out[2].as_ref().unwrap_err().to_string();
+    assert!(e2.contains("rhs length"), "{e2}");
+    let last = out[3].as_ref().unwrap();
+    assert!(!last.failed && last.cache_hit, "healthy request unaffected");
+}

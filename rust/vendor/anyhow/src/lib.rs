@@ -84,6 +84,22 @@ macro_rules! bail {
     };
 }
 
+/// `ensure!(cond, "fmt", args...)` — [`bail!`] unless `cond` holds
+/// (message defaults to the stringified condition, as in anyhow).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("Condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +121,18 @@ mod tests {
         let e2: Result<()> = Err(anyhow!("inner {}", 7));
         let e2 = e2.context("outer").unwrap_err();
         assert_eq!(e2.to_string(), "outer: inner 7");
+    }
+
+    #[test]
+    fn ensure_bails_with_and_without_message() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0);
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("x >= 0"));
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
     }
 
     #[test]
