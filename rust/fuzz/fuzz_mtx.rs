@@ -1,0 +1,164 @@
+//! Deterministic structured fuzzer for the Matrix Market loader
+//! (`util::mtx::parse_system`), ISSUE 6 satellite. Zero dependencies:
+//! seeded by [`precision_autotune::util::rng::Rng`], it mutates valid
+//! fixtures — truncation, byte flips, dictionary splices, line
+//! shuffles — and asserts the loader **errors, never panics**. Every
+//! run with the same `--seed` replays the identical input sequence, so
+//! a crash report is a one-line repro.
+//!
+//! Usage: `cargo run --release --bin fuzz-mtx -- [--iters 10000] [--seed 1]`
+//!
+//! Exit status: 0 when every iteration returned (Ok or Err); 1 with
+//! the offending seed/iteration/input printed when the parser panicked.
+
+use std::panic;
+
+use precision_autotune::util::cli::Args;
+use precision_autotune::util::mtx;
+use precision_autotune::util::rng::Rng;
+
+/// Tokens that probe the paths hardened in ISSUE 6: non-finite value
+/// spellings, out-of-range literals, header keywords (splicing one
+/// mid-data desynchronizes the token cursor), and oversized counts.
+const DICT: &[&str] = &[
+    "nan",
+    "NaN",
+    "inf",
+    "-inf",
+    "Infinity",
+    "1e999",
+    "-1e999",
+    "1e-999",
+    "%%MatrixMarket",
+    "matrix",
+    "coordinate",
+    "array",
+    "pattern",
+    "symmetric",
+    "skew-symmetric",
+    "general",
+    "18446744073709551616",
+    "0",
+    "-1",
+    "99999999",
+    "%",
+];
+
+/// Valid seed inputs covering every storage/field/symmetry combination
+/// the loader supports, plus the committed SPD sample when the repo
+/// layout is available (binary run from an arbitrary cwd still works).
+fn corpus() -> Vec<String> {
+    let mut c = vec![
+        "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 4\n1 1 2.0\n2 2 3.0\n\
+         3 3 4.0\n1 3 -1.5\n"
+            .to_string(),
+        "%%MatrixMarket matrix coordinate real symmetric\n3 3 4\n1 1 4.0\n2 1 -1.0\n2 2 4.0\n\
+         3 3 4.0\n"
+            .to_string(),
+        "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 5.0\n".to_string(),
+        "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n".to_string(),
+        "%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 1 7\n2 2 -3\n".to_string(),
+        "%%MatrixMarket matrix array real general\n2 3\n1.0\n2.0\n3.0\n4.0\n5.0\n6.0\n".to_string(),
+        "%%MatrixMarket matrix array real symmetric\n3 3\n1.0\n2.0\n3.0\n4.0\n5.0\n6.0\n"
+            .to_string(),
+        "%%MatrixMarket matrix array real general\n3 1\n1.5\n-2.5\n0.5\n".to_string(),
+    ];
+    let sample = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/sample_spd.mtx");
+    if let Ok(text) = std::fs::read_to_string(sample) {
+        c.push(text);
+    }
+    c
+}
+
+/// Apply 1–3 structured mutations. Mutations operate on bytes and are
+/// repaired with `from_utf8_lossy`, so multi-byte corruption degrades
+/// to replacement characters instead of skipping the iteration.
+fn mutate(base: &str, rng: &mut Rng) -> String {
+    let mut bytes = base.as_bytes().to_vec();
+    for _ in 0..(1 + rng.below(3)) {
+        match rng.below(6) {
+            // truncate at an arbitrary byte
+            0 => {
+                if !bytes.is_empty() {
+                    bytes.truncate(rng.below(bytes.len()));
+                }
+            }
+            // flip one bit of one byte
+            1 => {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            // splice a dictionary token at a random position
+            2 => {
+                let tok = DICT[rng.below(DICT.len())];
+                let i = rng.below(bytes.len() + 1);
+                let mut spliced = bytes[..i].to_vec();
+                spliced.extend_from_slice(tok.as_bytes());
+                spliced.push(b' ');
+                spliced.extend_from_slice(&bytes[i..]);
+                bytes = spliced;
+            }
+            // duplicate a random line
+            3 => {
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                let mut lines: Vec<&str> = text.lines().collect();
+                if !lines.is_empty() {
+                    let i = rng.below(lines.len());
+                    let dup = lines[i];
+                    lines.insert(i, dup);
+                }
+                bytes = (lines.join("\n") + "\n").into_bytes();
+            }
+            // delete a random line (drops the size line, a data row, ...)
+            4 => {
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                let mut lines: Vec<&str> = text.lines().collect();
+                if lines.len() > 1 {
+                    lines.remove(rng.below(lines.len()));
+                }
+                bytes = (lines.join("\n") + "\n").into_bytes();
+            }
+            // shuffle the data lines (header kept, so parsing gets deep)
+            _ => {
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                let mut lines: Vec<&str> = text.lines().collect();
+                if lines.len() > 2 {
+                    let tail = &mut lines[1..];
+                    rng.shuffle(tail);
+                }
+                bytes = (lines.join("\n") + "\n").into_bytes();
+            }
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let iters = args.get_usize("iters").expect("--iters").unwrap_or(10_000);
+    let seed = args.get_usize("seed").expect("--seed").map(|s| s as u64).unwrap_or(1);
+    let corpus = corpus();
+    let mut parsed_ok = 0u64;
+    let mut rejected = 0u64;
+    for i in 0..iters {
+        let mut rng = Rng::new(seed).fork(i as u64);
+        let base = &corpus[rng.below(corpus.len())];
+        let input = mutate(base, &mut rng);
+        match panic::catch_unwind(|| mtx::parse_system(&input).is_ok()) {
+            Ok(true) => parsed_ok += 1,
+            Ok(false) => rejected += 1,
+            Err(_) => {
+                eprintln!(
+                    "fuzz-mtx: PANIC at iteration {i} (seed {seed})\n--- input ---\n{input:?}"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+    println!(
+        "fuzz-mtx: {iters} iterations, seed {seed}: {parsed_ok} parsed, {rejected} rejected, \
+         0 panics"
+    );
+}

@@ -1,0 +1,172 @@
+//! Deterministic structured fuzzer for the policy-JSON load path
+//! (`util::json::parse` → `TrainedPolicy::from_json`), ISSUE 6
+//! satellite. Zero dependencies: seeded by
+//! [`precision_autotune::util::rng::Rng`], it mutates valid policy
+//! artifacts — truncation, byte flips, splices of NaN/inf spellings
+//! and structural tokens — and asserts the loader **errors, never
+//! panics** and never hands back a policy holding non-finite Q values
+//! or invalid visit counts.
+//!
+//! Usage: `cargo run --release --bin fuzz-policy -- [--iters 10000] [--seed 1]`
+
+use std::panic;
+
+use precision_autotune::bandit::action::ActionSpace;
+use precision_autotune::bandit::qtable::QTable;
+use precision_autotune::bandit::TrainedPolicy;
+use precision_autotune::features::{Binner, Discretizer};
+use precision_autotune::util::cli::Args;
+use precision_autotune::util::json;
+use precision_autotune::util::rng::Rng;
+
+/// Tokens that probe the hardened deserialization paths: non-finite
+/// number spellings (raw and the writer's escaped forms), out-of-range
+/// literals, structural JSON noise, and schema keywords.
+const DICT: &[&str] = &[
+    "NaN",
+    "Infinity",
+    "-Infinity",
+    "1e999",
+    "-1e999",
+    "\"__nan__\"",
+    "\"__inf__\"",
+    "\"__-inf__\"",
+    "{",
+    "}",
+    "[",
+    "]",
+    ",",
+    ":",
+    "null",
+    "true",
+    "\"schema_version\"",
+    "\"q\"",
+    "\"visits\"",
+    "\"lu-ir\"",
+    "\"qr-ir\"",
+    "-1",
+    "0.5",
+    "18446744073709551616",
+];
+
+/// Valid policy artifacts: the committed golden fixture (when the repo
+/// layout is reachable) plus two crafted in-memory policies serialized
+/// by the real writer, so the corpus always matches the current schema.
+fn corpus() -> Vec<String> {
+    let discretizer = |bins: usize| Discretizer {
+        kappa: Binner { lo: 0.0, hi: 5.0, n_bins: bins },
+        norm: Binner { lo: -1.0, hi: 1.0, n_bins: 1 },
+        delta_c: 1.0,
+        delta_n: 1e-30,
+    };
+    let mut small = QTable::new(2, ActionSpace::reduced_top_k(3));
+    small.update(0, 1, 2.5, 1.0);
+    small.update(1, 0, -0.75, 0.5);
+    let mut ext = QTable::new(1, ActionSpace::extended_top_k(4));
+    ext.update(0, ext.space.len() - 1, 1.25, 1.0);
+    let mut c = vec![
+        TrainedPolicy { qtable: small, discretizer: discretizer(2) }.to_json().to_string(),
+        TrainedPolicy { qtable: ext, discretizer: discretizer(1) }.to_json().to_string(),
+    ];
+    let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
+    if let Ok(text) = std::fs::read_to_string(golden) {
+        c.push(text);
+    }
+    c
+}
+
+/// Apply 1–3 structured mutations (same repertoire as fuzz-mtx minus
+/// line games — JSON is one line — plus digit rewrites that keep the
+/// text parseable while corrupting values).
+fn mutate(base: &str, rng: &mut Rng) -> String {
+    let mut bytes = base.as_bytes().to_vec();
+    for _ in 0..(1 + rng.below(3)) {
+        match rng.below(5) {
+            0 => {
+                if !bytes.is_empty() {
+                    bytes.truncate(rng.below(bytes.len()));
+                }
+            }
+            1 => {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            2 => {
+                let tok = DICT[rng.below(DICT.len())];
+                let i = rng.below(bytes.len() + 1);
+                let mut spliced = bytes[..i].to_vec();
+                spliced.extend_from_slice(tok.as_bytes());
+                spliced.extend_from_slice(&bytes[i..]);
+                bytes = spliced;
+            }
+            // rewrite one digit (valid JSON, corrupted value: a shape
+            // mismatch, a fractional visit count, a wrong version)
+            3 => {
+                let digits: Vec<usize> =
+                    (0..bytes.len()).filter(|&i| bytes[i].is_ascii_digit()).collect();
+                if !digits.is_empty() {
+                    let i = digits[rng.below(digits.len())];
+                    bytes[i] = b'0' + rng.below(10) as u8;
+                }
+            }
+            // swap two bytes (reorders punctuation or digits)
+            _ => {
+                if bytes.len() > 1 {
+                    let i = rng.below(bytes.len());
+                    let j = rng.below(bytes.len());
+                    bytes.swap(i, j);
+                }
+            }
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Load the mutated text end to end. Returns whether a policy came
+/// back; panics (the bug being hunted) propagate to the catch_unwind
+/// in main. A policy that loads with a non-finite Q value would be a
+/// hardening bypass — asserted here so the fuzzer catches it as a
+/// crash rather than silently counting it as "parsed".
+fn load(text: &str) -> bool {
+    let Ok(v) = json::parse(text) else { return false };
+    let Ok(policy) = TrainedPolicy::from_json(&v) else { return false };
+    for s in 0..policy.qtable.n_states {
+        for a in 0..policy.qtable.space.len() {
+            assert!(
+                policy.qtable.q(s, a).is_finite(),
+                "loaded policy carries non-finite Q[{s},{a}]"
+            );
+        }
+    }
+    true
+}
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let iters = args.get_usize("iters").expect("--iters").unwrap_or(10_000);
+    let seed = args.get_usize("seed").expect("--seed").map(|s| s as u64).unwrap_or(1);
+    let corpus = corpus();
+    let mut parsed_ok = 0u64;
+    let mut rejected = 0u64;
+    for i in 0..iters {
+        let mut rng = Rng::new(seed).fork(i as u64);
+        let base = &corpus[rng.below(corpus.len())];
+        let input = mutate(base, &mut rng);
+        match panic::catch_unwind(|| load(&input)) {
+            Ok(true) => parsed_ok += 1,
+            Ok(false) => rejected += 1,
+            Err(_) => {
+                eprintln!(
+                    "fuzz-policy: PANIC at iteration {i} (seed {seed})\n--- input ---\n{input:?}"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+    println!(
+        "fuzz-policy: {iters} iterations, seed {seed}: {parsed_ok} loaded, {rejected} rejected, \
+         0 panics"
+    );
+}

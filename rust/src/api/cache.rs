@@ -162,6 +162,9 @@ pub struct SessionCache {
     lru: Mutex<LruList>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// entries dropped because the bitwise hit verification failed
+    /// (fingerprint collision or corrupted resident entry)
+    verify_evictions: AtomicU64,
 }
 
 impl SessionCache {
@@ -173,7 +176,16 @@ impl SessionCache {
             lru: Mutex::new(Vec::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            verify_evictions: AtomicU64::new(0),
         }
+    }
+
+    /// The LRU list is structurally valid at every lock release, so a
+    /// panicking holder (an injected worker panic, or a real one) must
+    /// not wedge the cache for every later request — recover the guard
+    /// from a poisoned mutex instead of propagating the poison.
+    fn lock(&self) -> std::sync::MutexGuard<'_, LruList> {
+        self.lru.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     pub fn enabled(&self) -> bool {
@@ -186,7 +198,7 @@ impl SessionCache {
 
     /// Cached entries currently held.
     pub fn len(&self) -> usize {
-        self.lru.lock().unwrap().len()
+        self.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -203,9 +215,16 @@ impl SessionCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Lifetime count of entries evicted because the bitwise hit
+    /// verification failed (a fingerprint collision, or a resident entry
+    /// corrupted after insert).
+    pub fn verify_evictions(&self) -> u64 {
+        self.verify_evictions.load(Ordering::Relaxed)
+    }
+
     /// Drop every cached entry (counters keep running).
     pub fn clear(&self) {
-        self.lru.lock().unwrap().clear();
+        self.lock().clear();
     }
 
     /// Look up `system`, building (and inserting) an entry on miss.
@@ -224,7 +243,7 @@ impl SessionCache {
         // unrelated requests.
         let entry = SessionEntry::new(system.clone());
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut lru = self.lru.lock().unwrap();
+        let mut lru = self.lock();
         // Re-check: a racing request may have inserted the same operator
         // while we built. Adopt the winner (shared derived state beats a
         // private duplicate); our build is discarded.
@@ -243,15 +262,74 @@ impl SessionCache {
     }
 
     /// Move a verified hit to the front and return it.
+    ///
+    /// A fingerprint match whose stored bytes fail [`same_system`] — a
+    /// collision, or a resident entry corrupted after insert — is
+    /// *evicted* (counted in [`SessionCache::verify_evictions`]) so the
+    /// caller rebuilds from the request's own bytes: corruption costs a
+    /// rebuild, never a wrong reuse and never a poisoned resident entry
+    /// serving every later request.
     fn touch(&self, key: &[u64; 4], system: &SystemInput) -> Option<Arc<SessionEntry>> {
-        let mut lru = self.lru.lock().unwrap();
-        let pos = lru
-            .iter()
-            .position(|(k, e)| k == key && same_system(e.system(), system))?;
+        let mut lru = self.lock();
+        let pos = lru.iter().position(|(k, _)| k == key)?;
+        if !same_system(lru[pos].1.system(), system) {
+            lru.remove(pos);
+            self.verify_evictions.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let pair = lru.remove(pos);
         let arc = Arc::clone(&pair.1);
         lru.insert(0, pair);
         Some(arc)
+    }
+
+    /// Chaos hook (`FaultSite::CacheCorrupt`): replace one resident
+    /// entry with a clone whose operator has a single value bit flipped,
+    /// keeping the *original* fingerprint key — exactly what silent
+    /// in-memory corruption looks like to the lookup path. In-flight
+    /// requests holding the old `Arc` are untouched (the slot is
+    /// swapped, never mutated). Returns false if there was nothing to
+    /// corrupt.
+    pub fn corrupt_entry(&self, lane: u64) -> bool {
+        let mut lru = self.lock();
+        if lru.is_empty() {
+            return false;
+        }
+        let pos = lane as usize % lru.len();
+        let mut sys = lru[pos].1.system().clone();
+        match &mut sys {
+            SystemInput::Dense(m) => {
+                if m.data.is_empty() {
+                    return false;
+                }
+                let k = lane as usize % m.data.len();
+                m.data[k] = f64::from_bits(m.data[k].to_bits() ^ 1);
+            }
+            SystemInput::Sparse(c) => {
+                if c.values.is_empty() {
+                    return false;
+                }
+                let k = lane as usize % c.values.len();
+                c.values[k] = f64::from_bits(c.values[k].to_bits() ^ 1);
+            }
+        }
+        let key = lru[pos].0;
+        lru[pos] = (key, SessionEntry::new(sys));
+        true
+    }
+
+    /// Chaos hook (`FaultSite::CacheEvict`): force-evict one resident
+    /// entry mid-flight, simulating an eviction race against the request
+    /// that just looked it up. Safe by the `Arc` contract. Returns false
+    /// on an empty cache.
+    pub fn chaos_evict(&self, lane: u64) -> bool {
+        let mut lru = self.lock();
+        if lru.is_empty() {
+            return false;
+        }
+        let pos = lane as usize % lru.len();
+        lru.remove(pos);
+        true
     }
 }
 
@@ -338,6 +416,50 @@ mod tests {
             _ => unreachable!(),
         });
         assert!(!same_system(&a, &SystemInput::Sparse(c)), "shape is identity");
+    }
+
+    #[test]
+    fn corrupted_entry_is_verify_evicted_and_rebuilt() {
+        let cache = SessionCache::new(4);
+        let sys = dense(11, 8);
+        let (e1, _) = cache.get_or_insert(&sys);
+        assert!(cache.corrupt_entry(0));
+        // the Arc held by an in-flight request is untouched
+        assert!(same_system(e1.system(), &sys));
+        // next lookup: fingerprint matches, bytes don't => evict + rebuild
+        let (e2, hit) = cache.get_or_insert(&sys);
+        assert!(!hit, "corrupt entry must not be reused");
+        assert_eq!(cache.verify_evictions(), 1);
+        assert!(same_system(e2.system(), &sys));
+        let (_, hit) = cache.get_or_insert(&sys);
+        assert!(hit, "rebuilt entry serves hits again");
+    }
+
+    #[test]
+    fn chaos_evict_drops_a_resident_entry() {
+        let cache = SessionCache::new(4);
+        let sys = dense(13, 6);
+        cache.get_or_insert(&sys);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.chaos_evict(7));
+        assert_eq!(cache.len(), 0);
+        assert!(!cache.chaos_evict(0), "empty cache: nothing to evict");
+        let (_, hit) = cache.get_or_insert(&sys);
+        assert!(!hit, "evicted entry rebuilds");
+    }
+
+    #[test]
+    fn poisoned_lock_is_recovered() {
+        let cache = SessionCache::new(2);
+        let sys = dense(9, 6);
+        cache.get_or_insert(&sys);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = cache.lru.lock().unwrap();
+            panic!("poison the cache mutex");
+        }));
+        assert!(r.is_err());
+        let (_, hit) = cache.get_or_insert(&sys);
+        assert!(hit, "cache stays usable after a panicking lock holder");
     }
 
     #[test]

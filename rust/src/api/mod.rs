@@ -69,6 +69,7 @@ use crate::bandit::action::{Action, SolverFamily};
 use crate::bandit::{EpisodeTrace, SolveCache, TrainedPolicy, Trainer};
 use crate::chop::Prec;
 use crate::coordinator::eval::EvalRecord;
+use crate::faults::{self, FaultInjector, FaultPlan, FaultSite};
 use crate::gen::Problem;
 use crate::solver::family::solve_refinement_ws;
 use crate::solver::ir::StopReason;
@@ -84,6 +85,77 @@ pub use cache::{SessionCache, SessionEntry};
 /// of hot systems without pinning unbounded O(n²) derived state; tune
 /// via [`AutotunerBuilder::session_cache`] (0 disables).
 pub const DEFAULT_SESSION_CACHE: usize = 16;
+
+/// Classifies the typed failures the facade can return (ISSUE 6: every
+/// request resolves to a success report or one of these — never a panic,
+/// never an unclassifiable string).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveErrorKind {
+    /// The request itself is malformed: non-square/empty matrix, rhs
+    /// length mismatch, non-finite matrix or rhs entries.
+    InvalidInput,
+    /// Every rung of the graceful-degradation ladder was tried and none
+    /// produced an acceptable solution.
+    LadderExhausted,
+    /// The per-request worker panicked (caught and typed by
+    /// [`Autotuner::solve_batch`]).
+    WorkerPanic,
+}
+
+impl SolveErrorKind {
+    /// Stable kebab-case code — the greppable part of the message.
+    pub fn code(self) -> &'static str {
+        match self {
+            SolveErrorKind::InvalidInput => "invalid-input",
+            SolveErrorKind::LadderExhausted => "ladder-exhausted",
+            SolveErrorKind::WorkerPanic => "worker-panic",
+        }
+    }
+
+    /// Inverse of [`SolveErrorKind::code`].
+    pub fn from_code(s: &str) -> Option<SolveErrorKind> {
+        [
+            SolveErrorKind::InvalidInput,
+            SolveErrorKind::LadderExhausted,
+            SolveErrorKind::WorkerPanic,
+        ]
+        .into_iter()
+        .find(|k| k.code() == s)
+    }
+}
+
+/// Typed facade error. Renders as `solve-error[<code>]: <detail>`, so
+/// the kind survives the string-backed `anyhow::Error` boundary and is
+/// recoverable downstream via [`SolveError::classify`].
+#[derive(Clone, Debug)]
+pub struct SolveError {
+    pub kind: SolveErrorKind,
+    pub detail: String,
+}
+
+impl SolveError {
+    pub fn new(kind: SolveErrorKind, detail: impl Into<String>) -> SolveError {
+        SolveError { kind, detail: detail.into() }
+    }
+
+    /// Recover the kind from any error whose message chain contains the
+    /// `solve-error[<code>]` marker (context wraps included). `None` for
+    /// errors that did not originate as a [`SolveError`].
+    pub fn classify(e: &anyhow::Error) -> Option<SolveErrorKind> {
+        let s = e.to_string();
+        let start = s.find("solve-error[")? + "solve-error[".len();
+        let end = s[start..].find(']')? + start;
+        SolveErrorKind::from_code(&s[start..end])
+    }
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "solve-error[{}]: {}", self.kind.code(), self.detail)
+    }
+}
+
+impl std::error::Error for SolveError {}
 
 /// Everything one facade solve reports. There is no reference solution
 /// for user-supplied systems, so accuracy is the normwise relative
@@ -134,6 +206,59 @@ pub struct SolveReport {
     pub cache_hits: u64,
     /// Tuner-lifetime session-cache miss (= entry build) counter.
     pub cache_misses: u64,
+    /// Present when this request took more than the primary ladder rung
+    /// or saw an injected fault: which rung produced the result, every
+    /// attempt along the way, and the fault sites that fired. `None` on
+    /// the clean fast path.
+    pub degradation: Option<DegradationReport>,
+}
+
+/// One rung of the graceful-degradation ladder `solve` walks when an
+/// attempt fails (policy route): primary action → next-best visited
+/// action → all-FP64 LU baseline → typed [`SolveError`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LadderRung {
+    /// The action the policy (or caller) originally chose.
+    Primary,
+    /// The next-best *visited* action from the policy's Q-ranking.
+    NextBest,
+    /// The all-FP64 LU-IR baseline (the paper's reference solver).
+    Fp64Baseline,
+}
+
+impl LadderRung {
+    /// Stable kebab-case name (JSON telemetry).
+    pub fn name(self) -> &'static str {
+        match self {
+            LadderRung::Primary => "primary",
+            LadderRung::NextBest => "next-best",
+            LadderRung::Fp64Baseline => "fp64-baseline",
+        }
+    }
+}
+
+/// One attempted ladder rung and how it ended.
+#[derive(Clone, Debug)]
+pub struct DegradationAttempt {
+    pub rung: LadderRung,
+    pub action: Action,
+    pub stop: StopReason,
+    pub nbe: f64,
+}
+
+/// Telemetry for a request that needed the degradation ladder (or ran
+/// under fault injection) — attached to [`SolveReport::degradation`] so
+/// serving dashboards see every rescue, not just the final numbers.
+#[derive(Clone, Debug)]
+pub struct DegradationReport {
+    /// The rung whose result was returned.
+    pub rung: LadderRung,
+    /// Retries beyond the primary attempt (`attempts.len() - 1`).
+    pub retries: usize,
+    /// Every attempt in ladder order, including the accepted one.
+    pub attempts: Vec<DegradationAttempt>,
+    /// Fault sites that fired during this request (empty outside chaos).
+    pub injected: Vec<FaultSite>,
 }
 
 /// What [`Autotuner::train`] returns besides the policy it installs.
@@ -153,6 +278,9 @@ pub struct Autotuner {
     cfg: Config,
     cache: SessionCache,
     workspaces: WorkspacePool,
+    /// Armed only by [`AutotunerBuilder::fault_plan`] (chaos testing);
+    /// `None` in production — the hooks then cost one thread-local read.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 /// How one request picks its action (private routing of the three
@@ -160,7 +288,7 @@ pub struct Autotuner {
 /// differ per route — see `solve_core`).
 enum Route {
     /// `solve`: policy pick (FP64 baseline without a policy), with the
-    /// mis-routed-CG serving fallback.
+    /// graceful-degradation ladder on failure.
     Policy,
     /// `solve_with_action`: explicit action, no fallback.
     Forced(Action),
@@ -178,6 +306,7 @@ pub struct AutotunerBuilder {
     policy: Option<TrainedPolicy>,
     cfg: Option<Config>,
     session_cache: Option<usize>,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl AutotunerBuilder {
@@ -216,6 +345,15 @@ impl AutotunerBuilder {
         self
     }
 
+    /// Arm a seed-deterministic fault-injection plan (chaos testing —
+    /// see [`crate::faults`]): every solve through this tuner runs with
+    /// the plan's injector ambient, so the named sites in the solver
+    /// stack can sabotage it on schedule. Never set this in production.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> AutotunerBuilder {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Validate and assemble. Fails loudly on an inconsistent policy
     /// (empty action list or Q-table/discretizer shape mismatch) instead
     /// of deferring the surprise to the first solve.
@@ -242,6 +380,7 @@ impl AutotunerBuilder {
             cfg,
             cache: SessionCache::new(self.session_cache.unwrap_or(DEFAULT_SESSION_CACHE)),
             workspaces: WorkspacePool::new(),
+            faults: self.fault_plan.map(|p| Arc::new(FaultInjector::new(p))),
         })
     }
 }
@@ -267,6 +406,12 @@ impl Autotuner {
     /// The served session cache (hit/miss counters, size, capacity).
     pub fn session_cache(&self) -> &SessionCache {
         &self.cache
+    }
+
+    /// The armed fault injector, if any (chaos harness telemetry:
+    /// per-site attempt/fire counters).
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.faults.as_ref()
     }
 
     /// Extract context features and pick the precision configuration the
@@ -328,10 +473,33 @@ impl Autotuner {
     /// record a miss (the loser discards its build and adopts the
     /// winner's entry), so those counters can differ from the sequential
     /// schedule — numeric results never do.
+    ///
+    /// Panic isolation: a panic inside one request's solve (a backend
+    /// bug, or the injected `worker-panic` fault) is caught on the
+    /// worker and returned as that entry's typed
+    /// [`SolveError`]`[worker-panic]` — sibling requests and the batch
+    /// itself are unaffected, so every batch entry always resolves to a
+    /// typed outcome.
     pub fn solve_batch(&self, requests: &[(SystemInput, &[f64])]) -> Vec<Result<SolveReport>> {
         crate::util::pool::parallel_map(requests.len(), |i| {
             let (system, b) = &requests[i];
-            self.solve_core(system, b, Route::Policy)
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.solve_core(system, b, Route::Policy)
+            })) {
+                Ok(r) => r,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    Err(SolveError::new(
+                        SolveErrorKind::WorkerPanic,
+                        format!("request {i} panicked: {msg}"),
+                    )
+                    .into())
+                }
+            }
         })
     }
 
@@ -407,18 +575,24 @@ impl Autotuner {
     /// transient when the cache is disabled, inserted otherwise. `b` may
     /// be empty for feature-only paths ([`Autotuner::select_action`]).
     fn prepare(&self, system: &SystemInput, b: &[f64]) -> Result<(Arc<SessionEntry>, bool)> {
+        let invalid = |detail: String| SolveError::new(SolveErrorKind::InvalidInput, detail);
         let (nr, nc) = (system.n_rows(), system.n_cols());
         if nr != nc {
-            bail!("matrix must be square, got {nr}x{nc}");
+            return Err(invalid(format!("matrix must be square, got {nr}x{nc}")).into());
         }
         if nr == 0 {
-            bail!("matrix is empty");
+            return Err(invalid("matrix is empty".to_string()).into());
         }
         if !b.is_empty() && b.len() != nr {
-            bail!("rhs length {} does not match matrix size {}", b.len(), nr);
+            return Err(invalid(format!(
+                "rhs length {} does not match matrix size {}",
+                b.len(),
+                nr
+            ))
+            .into());
         }
         if system.has_non_finite() || b.iter().any(|v| !v.is_finite()) {
-            bail!("matrix or rhs contains non-finite entries");
+            return Err(invalid("matrix or rhs contains non-finite entries".to_string()).into());
         }
         Ok(if self.cache.enabled() {
             self.cache.get_or_insert(system)
@@ -437,19 +611,66 @@ impl Autotuner {
     /// a sparse input then runs truly matvec-only with κ = NaN; a forced
     /// family runs it when a policy needs context or the family is LU.
     ///
-    /// Serving fallback (policy route only): the context features carry
-    /// no SPD bit, so an extended-space policy can mis-route a non-SPD
-    /// system to CG-IR, whose curvature test then breaks down
-    /// deterministically. The policy route falls back to the safe
-    /// all-FP64 LU action (reusing the feature LU — no extra
-    /// factorization) instead of failing a request the LU family handles
-    /// fine; the report's `action`/`solver` show what actually ran.
-    /// Explicit routes do not fall back — the caller asked for that
-    /// family and failure is the honest answer.
+    /// Graceful-degradation ladder (policy route only; ISSUE 6): when an
+    /// attempt fails — a genuine breakdown (e.g. an extended-space
+    /// policy mis-routing a non-SPD system to CG-IR, whose curvature
+    /// test then breaks down deterministically) or an injected fault —
+    /// the request walks rung by rung instead of failing: the next-best
+    /// *visited* action from the policy's Q-ranking, then the all-FP64
+    /// LU baseline (reusing the feature LU — no extra factorization),
+    /// then a typed [`SolveError`]`[ladder-exhausted]`. A retry rung is
+    /// accepted only if its backward error clears
+    /// `Config::ladder_nbe_max`, so a rescue can never silently return
+    /// garbage; an accepted FP64 rung with no fault firing runs the
+    /// identical instruction stream as a clean FP64 solve and is
+    /// bit-identical to it. Every rescue is recorded in
+    /// [`SolveReport::degradation`]. Explicit routes do not fall back —
+    /// the caller asked for that family and failure is the honest
+    /// answer.
     fn solve_core(&self, system: &SystemInput, b: &[f64], route: Route) -> Result<SolveReport> {
+        match &self.faults {
+            Some(inj) => faults::with_ambient(inj, || self.solve_core_inner(system, b, route)),
+            None => self.solve_core_inner(system, b, route),
+        }
+    }
+
+    fn solve_core_inner(
+        &self,
+        system: &SystemInput,
+        b: &[f64],
+        route: Route,
+    ) -> Result<SolveReport> {
+        // Chaos hooks, pre-validation: a worker panic, cache sabotage
+        // against entries resident from earlier requests, and rhs
+        // poisoning that `prepare` must catch as a typed error.
+        if faults::fire(FaultSite::WorkerPanic).is_some() {
+            panic!("injected fault: worker panic");
+        }
+        if let Some(h) = faults::fire(FaultSite::CacheCorrupt) {
+            self.cache.corrupt_entry(h);
+        }
+        if let Some(h) = faults::fire(FaultSite::CacheEvict) {
+            self.cache.chaos_evict(h);
+        }
+        let poisoned;
+        let b: &[f64] = match faults::fire(FaultSite::Ingress) {
+            Some(h) if !b.is_empty() => {
+                let mut v = b.to_vec();
+                let k = h as usize % v.len();
+                v[k] = if h & 0x80 == 0 { f64::NAN } else { f64::NEG_INFINITY };
+                poisoned = v;
+                &poisoned
+            }
+            _ => b,
+        };
+
         let (entry, hit) = self.prepare(system, b)?;
         if b.len() != entry.n() {
-            bail!("rhs length {} does not match matrix size {}", b.len(), entry.n());
+            return Err(SolveError::new(
+                SolveErrorKind::InvalidInput,
+                format!("rhs length {} does not match matrix size {}", b.len(), entry.n()),
+            )
+            .into());
         }
         let needs_features = match &route {
             Route::Policy => true,
@@ -485,9 +706,86 @@ impl Autotuner {
                 }
             }
         };
-        let rep = self.run_refinement(&entry, b, action, f64_lu, kappa, hit)?;
-        if rep.failed && action.solver == SolverFamily::CgIr && matches!(route, Route::Policy) {
-            return self.run_refinement(&entry, b, Action::FP64, f64_lu, kappa, hit);
+        // Primary attempt. A fault firing mid-attempt can leave a
+        // finite-but-wrong iterate, so under injection the primary is
+        // additionally gated on the backward error; clean solves keep
+        // the paper's semantics (the failed flag alone decides).
+        let fired_before = faults::fired_sites().len();
+        let mut rep = self.run_refinement(&entry, b, action, f64_lu, kappa, hit)?;
+        let primary_faulted = faults::fired_sites().len() > fired_before;
+        let mut attempts = vec![DegradationAttempt {
+            rung: LadderRung::Primary,
+            action,
+            stop: rep.stop,
+            nbe: rep.nbe,
+        }];
+        let mut rung = LadderRung::Primary;
+        let primary_ok = !rep.failed && (!primary_faulted || rep.nbe <= self.cfg.ladder_nbe_max);
+
+        if !primary_ok && matches!(route, Route::Policy) {
+            let mut rescued = false;
+            // Rung 2: next-best visited action (distinct from the failed
+            // pick and from the FP64 rung below).
+            if let Some(pol) = &self.policy {
+                let next = pol
+                    .select_features_ranked(kappa, entry.norm_inf())
+                    .into_iter()
+                    .find(|a| *a != action && *a != Action::FP64);
+                if let Some(next) = next {
+                    let r = self.run_refinement(&entry, b, next, f64_lu, kappa, hit)?;
+                    attempts.push(DegradationAttempt {
+                        rung: LadderRung::NextBest,
+                        action: next,
+                        stop: r.stop,
+                        nbe: r.nbe,
+                    });
+                    if !r.failed && r.nbe <= self.cfg.ladder_nbe_max {
+                        rep = r;
+                        rung = LadderRung::NextBest;
+                        rescued = true;
+                    }
+                }
+            }
+            // Rung 3: FP64-LU baseline. Pointless only when the primary
+            // *was* a clean FP64 run — rerunning would repeat the exact
+            // instruction stream; a faulted FP64 primary retries.
+            if !rescued && !(action == Action::FP64 && !primary_faulted) {
+                let r = self.run_refinement(&entry, b, Action::FP64, f64_lu, kappa, hit)?;
+                attempts.push(DegradationAttempt {
+                    rung: LadderRung::Fp64Baseline,
+                    action: Action::FP64,
+                    stop: r.stop,
+                    nbe: r.nbe,
+                });
+                if !r.failed && r.nbe <= self.cfg.ladder_nbe_max {
+                    rep = r;
+                    rung = LadderRung::Fp64Baseline;
+                    rescued = true;
+                }
+            }
+            if !rescued {
+                let injected = faults::fired_sites();
+                return Err(SolveError::new(
+                    SolveErrorKind::LadderExhausted,
+                    format!(
+                        "no ladder rung produced an acceptable solution \
+                         (primary action {action}, {} attempts, injected sites {:?})",
+                        attempts.len(),
+                        injected.iter().map(|s| s.name()).collect::<Vec<_>>()
+                    ),
+                )
+                .into());
+            }
+        }
+
+        let injected = faults::fired_sites();
+        if attempts.len() > 1 || !injected.is_empty() {
+            rep.degradation = Some(DegradationReport {
+                rung,
+                retries: attempts.len() - 1,
+                attempts,
+                injected,
+            });
         }
         Ok(rep)
     }
@@ -543,6 +841,7 @@ impl Autotuner {
             cache_hit,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
+            degradation: None,
         })
     }
 }
@@ -884,6 +1183,107 @@ mod tests {
         // reports the breakdown
         let forced = tuner.solve_with_action(&a, &b, Action::CG_FP64).unwrap();
         assert!(forced.failed);
+        // the rescue is visible in telemetry: FP64 rung, one retry
+        let deg = rep.degradation.as_ref().expect("rescue must be reported");
+        assert_eq!(deg.rung, LadderRung::Fp64Baseline);
+        assert_eq!(deg.retries, 1);
+        assert!(deg.injected.is_empty(), "no faults were injected");
+        assert_eq!(deg.attempts[0].action, Action::CG_FP64);
+        assert_eq!(deg.attempts[0].stop, StopReason::Failure);
+    }
+
+    #[test]
+    fn typed_errors_carry_classifiable_codes() {
+        let tuner = Autotuner::builder().build().unwrap();
+        let rect = Mat::zeros(3, 4);
+        let err = tuner.solve(&rect, &[1.0; 3]).unwrap_err();
+        assert_eq!(SolveError::classify(&err), Some(SolveErrorKind::InvalidInput));
+        assert!(err.to_string().contains("square"), "{err}");
+        // classification survives a context wrap
+        let wrapped = anyhow::Error::msg(format!("serving request 7: {err}"));
+        assert_eq!(SolveError::classify(&wrapped), Some(SolveErrorKind::InvalidInput));
+        for kind in [
+            SolveErrorKind::InvalidInput,
+            SolveErrorKind::LadderExhausted,
+            SolveErrorKind::WorkerPanic,
+        ] {
+            assert_eq!(SolveErrorKind::from_code(kind.code()), Some(kind));
+        }
+        assert_eq!(SolveErrorKind::from_code("no-such-code"), None);
+    }
+
+    #[test]
+    fn clean_solves_carry_no_degradation_report() {
+        let tuner = Autotuner::builder().build().unwrap();
+        let (a, _, b) = well_conditioned_system(16, 49);
+        let rep = tuner.solve(&a, &b).unwrap();
+        assert!(rep.degradation.is_none());
+    }
+
+    #[test]
+    fn injected_fault_is_rescued_bit_identical_to_clean_fp64() {
+        // one factor fault: the primary FP64 attempt fails, the ladder's
+        // FP64 rung retries (budget spent) and must reproduce the clean
+        // run's exact bits
+        let (a, _, b) = well_conditioned_system(24, 41);
+        let clean = Autotuner::builder().build().unwrap().solve(&a, &b).unwrap();
+        let plan =
+            FaultPlan::new(7).with(FaultSite::Factor, 1.0).with_budget(FaultSite::Factor, 1);
+        let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+        let rep = tuner.solve(&a, &b).unwrap();
+        assert!(!rep.failed, "stop {:?}", rep.stop);
+        let deg = rep.degradation.as_ref().expect("rescue must be reported");
+        assert_eq!(deg.rung, LadderRung::Fp64Baseline);
+        assert_eq!(deg.retries, 1);
+        assert_eq!(deg.injected, vec![FaultSite::Factor]);
+        for (u, v) in rep.x.iter().zip(&clean.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(rep.nbe.to_bits(), clean.nbe.to_bits());
+    }
+
+    #[test]
+    fn exhausted_ladder_is_a_typed_error() {
+        // unlimited factor faults: every rung breaks down, the request
+        // must resolve to the typed ladder-exhausted error — not a
+        // panic, not a silent failed report
+        let plan = FaultPlan::new(7).with(FaultSite::Factor, 1.0);
+        let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+        let (a, _, b) = well_conditioned_system(16, 43);
+        let err = tuner.solve(&a, &b).unwrap_err();
+        assert_eq!(SolveError::classify(&err), Some(SolveErrorKind::LadderExhausted));
+        assert!(err.to_string().contains("factor"), "{err}");
+    }
+
+    #[test]
+    fn injected_ingress_poison_is_a_typed_invalid_input() {
+        let plan = FaultPlan::new(3).with(FaultSite::Ingress, 1.0);
+        let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+        let (a, _, b) = well_conditioned_system(12, 47);
+        let err = tuner.solve(&a, &b).unwrap_err();
+        assert_eq!(SolveError::classify(&err), Some(SolveErrorKind::InvalidInput));
+    }
+
+    #[test]
+    fn injected_worker_panic_is_isolated_per_batch_entry() {
+        let plan = FaultPlan::new(5)
+            .with(FaultSite::WorkerPanic, 1.0)
+            .with_budget(FaultSite::WorkerPanic, 1);
+        let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+        let (a, _, b) = well_conditioned_system(12, 45);
+        let reqs: Vec<(SystemInput, &[f64])> =
+            vec![(SystemInput::from(&a), b.as_slice()), (SystemInput::from(&a), b.as_slice())];
+        let out = tuner.solve_batch(&reqs);
+        let n_err = out.iter().filter(|r| r.is_err()).count();
+        assert_eq!(n_err, 1, "exactly one panic budget slot fires");
+        for r in &out {
+            match r {
+                Ok(rep) => assert!(!rep.failed, "sibling request unaffected"),
+                Err(e) => {
+                    assert_eq!(SolveError::classify(e), Some(SolveErrorKind::WorkerPanic));
+                }
+            }
+        }
     }
 
     #[test]

@@ -113,6 +113,21 @@ impl QTable {
         }
     }
 
+    /// All *visited* actions of a state, best-Q first (stable sort, so
+    /// equal Q ties break toward the lower = cheaper index, matching
+    /// [`QTable::argmax_visited`]). This is the serving facade's
+    /// degradation ladder: rung 1 is `[0]`, rung 2 the next entry, etc.
+    /// Empty when the state was never visited.
+    pub fn visited_ranked(&self, state: usize) -> Vec<usize> {
+        let base = state * self.space.len();
+        let mut ranked: Vec<usize> =
+            (0..self.space.len()).filter(|&i| self.visits[base + i] > 0).collect();
+        ranked.sort_by(|&a, &b| {
+            self.q[base + b].partial_cmp(&self.q[base + a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        ranked
+    }
+
     /// Max Q over a state's row.
     pub fn max_q(&self, state: usize) -> f64 {
         self.q(state, self.argmax(state))
@@ -174,13 +189,27 @@ impl QTable {
             .get("q")?
             .as_arr()?
             .iter()
-            .map(|x| x.as_f64())
+            .enumerate()
+            .map(|(i, x)| {
+                let qv = x.as_f64()?;
+                if !qv.is_finite() {
+                    bail!("q[{i}] is not finite ({qv}): corrupt or truncated policy file");
+                }
+                Ok(qv)
+            })
             .collect::<Result<_>>()?;
         let visits: Vec<u32> = v
             .get("visits")?
             .as_arr()?
             .iter()
-            .map(|x| Ok(x.as_f64()? as u32))
+            .enumerate()
+            .map(|(i, x)| {
+                let raw = x.as_f64()?;
+                if !raw.is_finite() || raw < 0.0 || raw.fract() != 0.0 || raw > u32::MAX as f64 {
+                    bail!("visits[{i}] is not a valid count ({raw}): corrupt policy file");
+                }
+                Ok(raw as u32)
+            })
             .collect::<Result<_>>()?;
         if q.len() != n_states * space.len() || visits.len() != q.len() {
             bail!(
@@ -284,6 +313,40 @@ mod tests {
         assert_ne!(bad, text);
         let err = QTable::from_json(&crate::util::json::parse(&bad).unwrap()).unwrap_err();
         assert!(err.to_string().contains("unknown solver family"), "{err}");
+    }
+
+    #[test]
+    fn visited_ranked_orders_by_q_and_skips_unvisited() {
+        let mut t = table();
+        assert!(t.visited_ranked(0).is_empty()); // never visited
+        t.update(0, 4, 1.0, 1.0);
+        t.update(0, 9, 5.0, 1.0);
+        t.update(0, 2, -3.0, 1.0);
+        t.update(0, 6, 1.0, 1.0); // tie with action 4 -> lower index first
+        assert_eq!(t.visited_ranked(0), vec![9, 4, 6, 2]);
+        assert_eq!(t.visited_ranked(0)[0], t.argmax_visited(0).unwrap());
+        assert!(t.visited_ranked(1).is_empty()); // rows independent
+    }
+
+    #[test]
+    fn from_json_rejects_non_finite_q_and_bad_visits() {
+        let mut t = table();
+        t.update(0, 1, 2.5, 1.0);
+        let text = t.to_json().to_string();
+        // a raw out-of-range literal parses to +inf in our reader — the
+        // exact shape of a hand-edited/corrupt policy file
+        let bad_q = text.replacen("2.5", "1e999", 1);
+        assert_ne!(bad_q, text);
+        let err = QTable::from_json(&crate::util::json::parse(&bad_q).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("not finite"), "{err}");
+        // fractional / negative visit counts are rejected, not truncated
+        for bad in ["1.5", "-1"] {
+            let bad_v =
+                text.replacen("\"visits\":[0.0,1.0,", &format!("\"visits\":[0.0,{bad},"), 1);
+            assert_ne!(bad_v, text, "fixture must contain the visits prefix");
+            let err = QTable::from_json(&crate::util::json::parse(&bad_v).unwrap()).unwrap_err();
+            assert!(err.to_string().contains("valid count"), "{err}");
+        }
     }
 
     #[test]

@@ -285,6 +285,27 @@ impl TrainedPolicy {
         self.qtable.best_action_visited(self.discretizer.state_of_context(c))
     }
 
+    /// All visited actions for the state these features map to, best-Q
+    /// first (same context mapping as [`TrainedPolicy::select_features`],
+    /// whose pick is always entry 0 when non-empty). The serving facade
+    /// walks this list as its graceful-degradation ladder when the greedy
+    /// pick fails under fault injection.
+    pub fn select_features_ranked(
+        &self,
+        kappa_est: f64,
+        norm_inf: f64,
+    ) -> Vec<crate::bandit::action::Action> {
+        let c = crate::features::Context {
+            phi_kappa: kappa_est.max(self.discretizer.delta_c).log10(),
+            phi_norm: norm_inf.max(self.discretizer.delta_n).log10(),
+        };
+        self.qtable
+            .visited_ranked(self.discretizer.state_of_context(c))
+            .into_iter()
+            .map(|i| self.qtable.space.actions[i])
+            .collect()
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("schema_version", json::num(POLICY_SCHEMA_VERSION as f64)),
@@ -753,6 +774,27 @@ mod tests {
         assert_ne!(tampered, text);
         let err = TrainedPolicy::from_json(&json::parse(&tampered).unwrap()).unwrap_err();
         assert!(err.to_string().contains("action-space hash"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_policy_fixture_is_rejected_not_loaded() {
+        // the committed fixture is policy_golden_v2.json with one Q value
+        // swapped for 1e999 (parses to +inf in our reader) — the exact
+        // artifact a byte-flip or hand edit produces. Loading must fail
+        // loudly, never hand inference an infinite Q.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_corrupt_nan.json");
+        let err = TrainedPolicy::load(path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("not finite"), "{msg}");
+        // control: the clean golden fixture still loads
+        let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
+        let pol = TrainedPolicy::load(golden).unwrap();
+        assert_eq!(pol.qtable.n_states, 2);
+        // and its ranked view agrees with the greedy pick per state
+        for s in 0..pol.qtable.n_states {
+            let ranked = pol.qtable.visited_ranked(s);
+            assert_eq!(ranked.first().copied(), pol.qtable.argmax_visited(s));
+        }
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //! systems, the dense/sparse/ablation experiment suites (one per paper
 //! table/figure), and the `repro` drivers that print paper-shaped output.
 
+pub mod chaos;
 pub mod eval;
 pub mod experiments;
 pub mod repro;
 pub mod serve_bench;
 
+pub use chaos::{run_chaos, ChaosOpts};
 pub use eval::{evaluate, evaluate_with_action, EvalRecord, EvalSummary, PrecisionUsage};
 pub use experiments::{dense_suite, head_to_head_suite, sparse_suite, HeadToHead, SuiteResult};
 pub use serve_bench::{run_serve_bench, ServeBenchOpts};

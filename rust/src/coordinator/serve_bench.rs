@@ -57,7 +57,7 @@ impl Default for ServeBenchOpts {
     }
 }
 
-fn dense_system(n: usize, seed: u64) -> Mat {
+pub(crate) fn dense_system(n: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
     let mut a = Mat::zeros(n, n);
     for i in 0..n {
@@ -68,7 +68,7 @@ fn dense_system(n: usize, seed: u64) -> Mat {
     a
 }
 
-fn rhs(n: usize, seed: u64) -> Vec<f64> {
+pub(crate) fn rhs(n: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
     (0..n).map(|_| rng.gauss()).collect()
 }

@@ -1,0 +1,353 @@
+//! Seed-deterministic fault injection (ISSUE 6 tentpole).
+//!
+//! A `FaultPlan` names *where* faults may strike (a [`FaultSite`]), at
+//! what per-attempt probability, and under what total budget. A
+//! [`FaultInjector`] evaluates the plan: every instrumented site in the
+//! solver stack calls [`fire`] at its hook point, and the injector
+//! decides — deterministically from `(seed, site, attempt#)` — whether
+//! that particular attempt is sabotaged. No `cfg` flags, no deps: when
+//! no injector is installed, [`fire`] is a thread-local read returning
+//! `None` and the hot path stays allocation-free.
+//!
+//! Installation is scoped and thread-local: [`with_ambient`] installs an
+//! injector for the duration of a closure (panic-safe — the previous
+//! ambient injector is restored by a drop guard), which is how
+//! `Autotuner::solve_core` arms the hooks for exactly one request at a
+//! time. Fired sites are logged per scope so the facade can attach an
+//! accurate `DegradationReport` to each rescue.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A named instrumentation point in the solver stack.
+///
+/// Each variant corresponds to one hook in shipping code; the chaos
+/// harness and the property tests iterate `FaultSite::ALL` so adding a
+/// site here forces coverage everywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Poison one right-hand-side entry with NaN/inf before `prepare`.
+    Ingress,
+    /// Corrupt a resident `SessionCache` entry (one flipped value bit).
+    CacheCorrupt,
+    /// Force-evict the request's `SessionCache` entry mid-flight.
+    CacheEvict,
+    /// Force the working-precision factorization/setup to fail.
+    Factor,
+    /// Force the inner GMRES/PCG solve to report breakdown.
+    InnerBreakdown,
+    /// Replace the inner correction with garbage (stall the outer loop).
+    InnerStall,
+    /// Poison one residual entry inside `refinement_loop_ws`.
+    Residual,
+    /// Panic inside the per-request worker (exercises `solve_batch`).
+    WorkerPanic,
+}
+
+/// Number of distinct fault sites (array sizes in `FaultPlan`).
+pub const N_SITES: usize = 8;
+
+impl FaultSite {
+    /// Every site, in declaration order (index == `site as usize`).
+    pub const ALL: [FaultSite; N_SITES] = [
+        FaultSite::Ingress,
+        FaultSite::CacheCorrupt,
+        FaultSite::CacheEvict,
+        FaultSite::Factor,
+        FaultSite::InnerBreakdown,
+        FaultSite::InnerStall,
+        FaultSite::Residual,
+        FaultSite::WorkerPanic,
+    ];
+
+    /// Stable kebab-case name (CLI flags, JSON reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Ingress => "ingress",
+            FaultSite::CacheCorrupt => "cache-corrupt",
+            FaultSite::CacheEvict => "cache-evict",
+            FaultSite::Factor => "factor",
+            FaultSite::InnerBreakdown => "inner-breakdown",
+            FaultSite::InnerStall => "inner-stall",
+            FaultSite::Residual => "residual",
+            FaultSite::WorkerPanic => "worker-panic",
+        }
+    }
+
+    /// Inverse of [`FaultSite::name`].
+    pub fn by_name(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|f| f.name() == s)
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Declarative fault schedule: per-site firing probability and budget.
+///
+/// The plan is pure data — cloning it and handing the clone to a second
+/// [`FaultInjector`] replays the identical fault sequence, which is what
+/// makes chaos runs reproducible from a single seed.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Master seed; combined with site and attempt index per decision.
+    pub seed: u64,
+    /// Per-site probability in `[0, 1]` that an attempt fires.
+    pub rates: [f64; N_SITES],
+    /// Per-site cap on total fires (`u64::MAX` = unlimited).
+    pub budget: [u64; N_SITES],
+}
+
+impl FaultPlan {
+    /// All-quiet plan (every rate 0) with the given seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rates: [0.0; N_SITES], budget: [u64::MAX; N_SITES] }
+    }
+
+    /// Plan firing every site at `rate` (chaos-mode default shape).
+    pub fn uniform(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, rates: [rate; N_SITES], budget: [u64::MAX; N_SITES] }
+    }
+
+    /// Set one site's firing probability (builder-style).
+    pub fn with(mut self, site: FaultSite, rate: f64) -> FaultPlan {
+        self.rates[site as usize] = rate;
+        self
+    }
+
+    /// Cap one site's total number of fires (builder-style).
+    pub fn with_budget(mut self, site: FaultSite, k: u64) -> FaultPlan {
+        self.budget[site as usize] = k;
+        self
+    }
+}
+
+/// SplitMix64-style finalizer over `(seed, site, attempt#)`: the whole
+/// fault schedule is a pure function of the plan, independent of thread
+/// interleaving given the per-site attempt order.
+#[inline]
+fn mix(seed: u64, site: u64, seq: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(site.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(seq.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Evaluates a [`FaultPlan`] and keeps lifetime attempt/fire counters.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    attempts: [AtomicU64; N_SITES],
+    fired: [AtomicU64; N_SITES],
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            attempts: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// The plan this injector evaluates.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Times `should_fire` has been consulted for `site`.
+    pub fn attempts(&self, site: FaultSite) -> u64 {
+        self.attempts[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Times `site` has actually fired.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Decide whether this attempt at `site` fires. Returns the decision
+    /// hash on fire — hooks reuse it as a deterministic payload (which
+    /// entry to poison, which bit to flip) so faults themselves are
+    /// replayable. Budget slots are claimed by CAS so concurrent workers
+    /// never overshoot the cap.
+    pub fn should_fire(&self, site: FaultSite) -> Option<u64> {
+        let i = site as usize;
+        let seq = self.attempts[i].fetch_add(1, Ordering::Relaxed);
+        let rate = self.plan.rates[i];
+        if rate <= 0.0 {
+            return None;
+        }
+        let h = mix(self.plan.seed, i as u64 + 1, seq);
+        if rate < 1.0 && (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) >= rate {
+            return None;
+        }
+        let budget = self.plan.budget[i];
+        loop {
+            let cur = self.fired[i].load(Ordering::Relaxed);
+            if cur >= budget {
+                return None;
+            }
+            if self.fired[i]
+                .compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(h);
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// Injector armed for the current scope (None = all hooks quiet).
+    static AMBIENT: RefCell<Option<Arc<FaultInjector>>> = const { RefCell::new(None) };
+    /// Sites that fired inside the current `with_ambient` scope.
+    static FIRED_LOG: RefCell<Vec<FaultSite>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with `inj` armed as this thread's ambient injector.
+///
+/// Nesting-safe and panic-safe: the previous injector and fired-site log
+/// are restored by a drop guard even if `f` panics (the `WorkerPanic`
+/// site relies on this — the panic crosses this frame on its way to the
+/// `catch_unwind` in `solve_batch`).
+pub fn with_ambient<T>(inj: &Arc<FaultInjector>, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<Arc<FaultInjector>>, Vec<FaultSite>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            AMBIENT.with(|a| *a.borrow_mut() = self.0.take());
+            FIRED_LOG.with(|v| std::mem::swap(&mut *v.borrow_mut(), &mut self.1));
+        }
+    }
+    let prev = AMBIENT.with(|a| a.borrow_mut().replace(Arc::clone(inj)));
+    let prev_log = FIRED_LOG.with(|v| std::mem::take(&mut *v.borrow_mut()));
+    let _restore = Restore(prev, prev_log);
+    f()
+}
+
+/// Hook entry point: does the ambient injector (if any) fire at `site`?
+///
+/// On fire, the site is appended to the scope's fired log and the
+/// decision hash is returned for use as a deterministic payload. With no
+/// ambient injector this is a single thread-local read.
+pub fn fire(site: FaultSite) -> Option<u64> {
+    let inj = AMBIENT.with(|a| a.borrow().clone())?;
+    let h = inj.should_fire(site)?;
+    FIRED_LOG.with(|v| v.borrow_mut().push(site));
+    Some(h)
+}
+
+/// Sites that have fired in the current `with_ambient` scope, in order.
+pub fn fired_sites() -> Vec<FaultSite> {
+    FIRED_LOG.with(|v| v.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in FaultSite::ALL {
+            assert_eq!(FaultSite::by_name(site.name()), Some(site));
+        }
+        assert_eq!(FaultSite::by_name("no-such-site"), None);
+    }
+
+    #[test]
+    fn rate_zero_never_fires_rate_one_always_fires() {
+        let quiet = FaultInjector::new(FaultPlan::new(1));
+        let loud = FaultInjector::new(FaultPlan::uniform(1, 1.0));
+        for _ in 0..100 {
+            assert_eq!(quiet.should_fire(FaultSite::Factor), None);
+            assert!(loud.should_fire(FaultSite::Factor).is_some());
+        }
+        assert_eq!(quiet.fired(FaultSite::Factor), 0);
+        assert_eq!(quiet.attempts(FaultSite::Factor), 100);
+        assert_eq!(loud.fired(FaultSite::Factor), 100);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed_and_site() {
+        let take = |seed: u64| -> Vec<Option<u64>> {
+            let inj = FaultInjector::new(FaultPlan::uniform(seed, 0.3));
+            (0..200).map(|_| inj.should_fire(FaultSite::Residual)).collect()
+        };
+        assert_eq!(take(42), take(42));
+        assert_ne!(take(42), take(43));
+        // distinct sites see distinct streams under one seed
+        let inj = FaultInjector::new(FaultPlan::uniform(7, 0.5));
+        let a: Vec<_> = (0..64).map(|_| inj.should_fire(FaultSite::Ingress)).collect();
+        let b: Vec<_> = (0..64).map(|_| inj.should_fire(FaultSite::Factor)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn rate_is_roughly_honored() {
+        let inj = FaultInjector::new(FaultPlan::uniform(5, 0.25));
+        let n = 10_000;
+        let hits = (0..n).filter(|_| inj.should_fire(FaultSite::InnerStall).is_some()).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "observed rate {frac}");
+    }
+
+    #[test]
+    fn budget_caps_total_fires() {
+        let plan = FaultPlan::new(9)
+            .with(FaultSite::InnerBreakdown, 1.0)
+            .with_budget(FaultSite::InnerBreakdown, 3);
+        let inj = FaultInjector::new(plan);
+        let hits = (0..50).filter(|_| inj.should_fire(FaultSite::InnerBreakdown).is_some()).count();
+        assert_eq!(hits, 3);
+        assert_eq!(inj.fired(FaultSite::InnerBreakdown), 3);
+        assert_eq!(inj.attempts(FaultSite::InnerBreakdown), 50);
+    }
+
+    #[test]
+    fn ambient_scope_arms_hooks_and_logs_fires() {
+        assert_eq!(fire(FaultSite::Factor), None, "no ambient injector");
+        let inj = Arc::new(FaultInjector::new(FaultPlan::uniform(3, 1.0)));
+        let log = with_ambient(&inj, || {
+            assert!(fire(FaultSite::Factor).is_some());
+            assert!(fire(FaultSite::Residual).is_some());
+            fired_sites()
+        });
+        assert_eq!(log, vec![FaultSite::Factor, FaultSite::Residual]);
+        assert_eq!(fire(FaultSite::Factor), None, "disarmed after scope");
+        assert!(fired_sites().is_empty(), "log restored after scope");
+    }
+
+    #[test]
+    fn ambient_scopes_nest_and_restore() {
+        let outer = Arc::new(FaultInjector::new(FaultPlan::uniform(1, 1.0)));
+        let inner = Arc::new(FaultInjector::new(FaultPlan::new(2)));
+        with_ambient(&outer, || {
+            assert!(fire(FaultSite::Ingress).is_some());
+            with_ambient(&inner, || {
+                assert_eq!(fire(FaultSite::Ingress), None, "inner plan is quiet");
+                assert!(fired_sites().is_empty(), "inner scope has a fresh log");
+            });
+            assert!(fire(FaultSite::Ingress).is_some(), "outer injector restored");
+            assert_eq!(fired_sites().len(), 2);
+        });
+    }
+
+    #[test]
+    fn ambient_is_restored_after_panic() {
+        let inj = Arc::new(FaultInjector::new(FaultPlan::uniform(4, 1.0)));
+        let r = std::panic::catch_unwind(|| {
+            with_ambient(&inj, || {
+                fire(FaultSite::WorkerPanic);
+                panic!("injected");
+            })
+        });
+        assert!(r.is_err());
+        assert_eq!(fire(FaultSite::Factor), None, "disarmed after panic");
+        assert!(fired_sites().is_empty(), "log restored after panic");
+    }
+}

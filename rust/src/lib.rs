@@ -47,6 +47,7 @@ pub mod backend_native;
 pub mod bandit;
 pub mod chop;
 pub mod coordinator;
+pub mod faults;
 pub mod features;
 pub mod gen;
 pub mod linalg;

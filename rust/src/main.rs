@@ -74,6 +74,15 @@ SUBCOMMANDS:
                 solves/sec and p50/p99 latency (EXPERIMENTS.md §Serve)
                 --out BENCH_serve.json  --requests N
                 --n <dense size>  --n-sparse <sparse size>
+                --chaos also run the fault-injection suite afterwards
+                  (--chaos-out CHAOS_serve.json, --chaos-seed N)
+  chaos       fault-injection suite: the serving mixes under a seeded
+                fault schedule, asserting no panic / no hang / typed
+                outcomes / bit-identical FP64 fallback
+                (EXPERIMENTS.md §Chaos)
+                --seed N  --rate p  --requests N  --n <dense size>
+                --n-sparse <sparse size>  --watchdog-ms N
+                --preset tiny  --out results/chaos_report.json
   selftest    end-to-end sanity run (native backend; PJRT if artifacts/)
   help        print this text
 
@@ -187,6 +196,16 @@ fn read_rhs(path: &str) -> Result<Vec<f64>> {
     } else {
         read_vec(path)
     }
+}
+
+/// Write a JSON report, creating parent directories as needed.
+fn write_json_report(out: &str, report: &precision_autotune::util::json::Value) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, report.to_string()).with_context(|| format!("writing {out}"))
 }
 
 fn run() -> Result<()> {
@@ -486,7 +505,12 @@ fn run() -> Result<()> {
         Some("serve-bench") => {
             use precision_autotune::coordinator::serve_bench::{run_serve_bench, ServeBenchOpts};
             let out = args.get("out").unwrap_or("BENCH_serve.json");
-            let defaults = ServeBenchOpts::default();
+            let tiny = args.get("preset") == Some("tiny");
+            let defaults = if tiny {
+                ServeBenchOpts { requests: 6, n_dense: 16, n_sparse: 24, quiet }
+            } else {
+                ServeBenchOpts::default()
+            };
             let opts = ServeBenchOpts {
                 requests: args.get_usize("requests")?.unwrap_or(defaults.requests),
                 n_dense: args.get_usize("n")?.unwrap_or(defaults.n_dense),
@@ -494,13 +518,52 @@ fn run() -> Result<()> {
                 quiet,
             };
             let report = run_serve_bench(&opts)?;
-            if let Some(dir) = std::path::Path::new(out).parent() {
-                if !dir.as_os_str().is_empty() {
-                    std::fs::create_dir_all(dir)?;
-                }
-            }
-            std::fs::write(out, report.to_string()).with_context(|| format!("writing {out}"))?;
+            write_json_report(out, &report)?;
             println!("serve bench JSON written to {out}");
+            // --chaos: the same workload scale, re-run under the seeded
+            // fault schedule (EXPERIMENTS.md §Chaos); a violated chaos
+            // invariant fails the whole serve-bench invocation.
+            if args.flag("chaos") {
+                use precision_autotune::coordinator::chaos::{run_chaos, ChaosOpts};
+                let chaos_out = args.get("chaos-out").unwrap_or("CHAOS_serve.json");
+                let cdef = if tiny { ChaosOpts::tiny() } else { ChaosOpts::default() };
+                let copts = ChaosOpts {
+                    requests: opts.requests,
+                    n_dense: opts.n_dense,
+                    n_sparse: opts.n_sparse,
+                    seed: args.get_usize("chaos-seed")?.map(|s| s as u64).unwrap_or(cdef.seed),
+                    quiet,
+                    ..cdef
+                };
+                let chaos_report = run_chaos(&copts)?;
+                write_json_report(chaos_out, &chaos_report)?;
+                println!("chaos report JSON written to {chaos_out}");
+            }
+            Ok(())
+        }
+        Some("chaos") => {
+            use precision_autotune::coordinator::chaos::{run_chaos, ChaosOpts};
+            let out = args.get("out").unwrap_or("results/chaos_report.json");
+            let defaults = if args.get("preset") == Some("tiny") {
+                ChaosOpts::tiny()
+            } else {
+                ChaosOpts::default()
+            };
+            let opts = ChaosOpts {
+                requests: args.get_usize("requests")?.unwrap_or(defaults.requests),
+                n_dense: args.get_usize("n")?.unwrap_or(defaults.n_dense),
+                n_sparse: args.get_usize("n-sparse")?.unwrap_or(defaults.n_sparse),
+                seed: args.get_usize("seed")?.map(|s| s as u64).unwrap_or(defaults.seed),
+                rate: args.get_f64("rate")?.unwrap_or(defaults.rate),
+                watchdog_ms: args
+                    .get_usize("watchdog-ms")?
+                    .map(|w| w as u64)
+                    .unwrap_or(defaults.watchdog_ms),
+                quiet,
+            };
+            let report = run_chaos(&opts)?;
+            write_json_report(out, &report)?;
+            println!("chaos report JSON written to {out} (all invariants held)");
             Ok(())
         }
         Some("selftest") => {

@@ -48,6 +48,7 @@ use anyhow::Result;
 
 use crate::bandit::action::{Action, SolverFamily};
 use crate::chop::{chop_p, Prec};
+use crate::faults::{self, FaultSite};
 use crate::gen::Problem;
 use crate::linalg::cg::pcg_jacobi_ws;
 use crate::linalg::norm_inf_vec;
@@ -159,8 +160,28 @@ fn refinement_loop_ws(
     for _ in 0..cfg.max_outer {
         // Step 2 (u_r)
         residual(&x, r_buf)?;
+        if let Some(h) = faults::fire(FaultSite::Residual) {
+            r_buf[h as usize % n] = f64::NAN;
+        }
+        // A non-finite residual (operator overflow, injected NaN) can
+        // never drive a meaningful correction — fail here instead of
+        // feeding it to the inner solver.
+        if r_buf.iter().any(|v| !v.is_finite()) {
+            stop = StopReason::Failure;
+            break;
+        }
         // Step 3 (u_g)
-        let (iters, ok) = inner_solve(r_buf, z_buf)?;
+        let (iters, mut ok) = inner_solve(r_buf, z_buf)?;
+        if faults::fire(FaultSite::InnerBreakdown).is_some() {
+            ok = false;
+        }
+        if ok && faults::fire(FaultSite::InnerStall).is_some() {
+            // garbage correction: finite, but wrecks the iterate — the
+            // loop must stagnate/diverge, never return it silently
+            for zi in z_buf.iter_mut() {
+                *zi = 1.0;
+            }
+        }
         if !ok {
             stop = StopReason::Failure;
             break;
@@ -254,6 +275,9 @@ pub fn gmres_ir_prefactored_ws(
 ) -> Result<SolveOutcome> {
     debug_assert_eq!(action.solver, SolverFamily::LuIr);
     let n = session.n();
+    if faults::fire(FaultSite::Factor).is_some() {
+        return Ok(SolveOutcome::failure(n));
+    }
 
     // Step 1 (u_f): factor + initial solve. Breakdown => failure outcome.
     let owned;
@@ -335,6 +359,9 @@ pub fn cg_ir_ws(
 ) -> Result<SolveOutcome> {
     debug_assert_eq!(action.solver, SolverFamily::CgIr);
     let n = session.n();
+    if faults::fire(FaultSite::Factor).is_some() {
+        return Ok(SolveOutcome::failure(n));
+    }
 
     // Jacobi preconditioner from the operator diagonal — O(nnz).
     let d = session.diag();
@@ -610,6 +637,30 @@ mod tests {
         let out = gmres_ir(&be, &p, &Action::CG_FP64, &c).unwrap();
         assert!(out.failed, "non-SPD CG must fail, got stop {:?}", out.stop);
         assert_eq!(out.stop, StopReason::Failure);
+    }
+
+    #[test]
+    fn injected_faults_surface_as_failure_outcomes() {
+        use crate::faults::{with_ambient, FaultInjector, FaultPlan};
+        use std::sync::Arc;
+        let be = NativeBackend::new();
+        let c = cfg();
+        let p = problem(20, 1e2, 51);
+        for site in [FaultSite::Factor, FaultSite::InnerBreakdown, FaultSite::Residual] {
+            let inj = Arc::new(FaultInjector::new(FaultPlan::new(1).with(site, 1.0)));
+            let out = with_ambient(&inj, || gmres_ir(&be, &p, &Action::FP64, &c)).unwrap();
+            assert!(out.failed, "{site}: injected fault must surface as failure");
+            assert_eq!(out.stop, StopReason::Failure, "{site}");
+        }
+        // InnerStall never fails loudly mid-loop — it wrecks the iterate
+        // and must end in a non-converged stop with a large residual.
+        let inj =
+            Arc::new(FaultInjector::new(FaultPlan::new(1).with(FaultSite::InnerStall, 1.0)));
+        let out = with_ambient(&inj, || gmres_ir(&be, &p, &Action::FP64, &c)).unwrap();
+        assert!(out.failed || out.nbe > 1e-6, "stall must not look converged");
+        // uninjected control on the same problem stays clean
+        let out = gmres_ir(&be, &p, &Action::FP64, &c).unwrap();
+        assert!(!out.failed);
     }
 
     #[test]

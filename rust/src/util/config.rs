@@ -76,6 +76,11 @@ pub struct Config {
     pub max_outer: usize,  // i_max
     pub gmres_max_m: usize,
     pub gmres_tol_factor: f64, // inner tol = factor * tau
+    /// Acceptance bar for degradation-ladder retries in the serving
+    /// facade: a rescue rung's result is taken only if its backward
+    /// error is at or below this, so a fallback can never silently
+    /// return garbage (ISSUE 6).
+    pub ladder_nbe_max: f64,
 
     // ---- evaluation (eq. 28–30) ----
     pub tau_base: f64,
@@ -116,6 +121,7 @@ impl Default for Config {
             max_outer: 10,
             gmres_max_m: 50,
             gmres_tol_factor: 1.0,
+            ladder_nbe_max: 1e-6,
             tau_base: 1e-8,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -255,6 +261,7 @@ impl Config {
             "max_outer" => self.max_outer = num!(),
             "gmres_max_m" => self.gmres_max_m = num!(),
             "gmres_tol_factor" => self.gmres_tol_factor = num!(),
+            "ladder_nbe_max" => self.ladder_nbe_max = num!(),
             "tau_base" => self.tau_base = num!(),
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             _ => bail!("unknown config key {key:?}"),

@@ -232,8 +232,21 @@ impl<'a> Cursor<'a> {
         let (t, line) = self
             .bump()
             .ok_or_else(|| anyhow!("unexpected end of file at value {} (truncated?)", k + 1))?;
-        t.parse::<f64>()
-            .map_err(|e| anyhow!("line {line}: bad value {t:?} at value {}: {e}", k + 1))
+        let v = t
+            .parse::<f64>()
+            .map_err(|e| anyhow!("line {line}: bad value {t:?} at value {}: {e}", k + 1))?;
+        // Rust's f64 parser accepts "nan"/"inf" spellings, and any
+        // out-of-range literal (1e999) overflows silently to ±inf. A
+        // non-finite matrix entry poisons every downstream kernel, so
+        // reject it here with the source line instead.
+        if !v.is_finite() {
+            bail!(
+                "line {line}: non-finite value {t:?} at value {} \
+                 (NaN/inf entries are not valid matrix data)",
+                k + 1
+            );
+        }
+        Ok(v)
     }
 
     fn done(&self) -> bool {
@@ -345,6 +358,29 @@ mod tests {
         let bad_value = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n";
         let err = parse_system(bad_value).unwrap_err();
         assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_values_rejected_with_line_number() {
+        // every spelling Rust's f64 parser would wave through: literal
+        // NaN/inf tokens and out-of-range literals that overflow to inf
+        for tok in ["nan", "NaN", "inf", "-inf", "Infinity", "1e999", "-1e999"] {
+            let text = format!(
+                "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n2 2 {tok}\n"
+            );
+            let err = parse_system(&text).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("non-finite value"), "{tok}: {msg}");
+            assert!(msg.contains("line 4"), "{tok}: {msg}");
+            assert!(msg.contains(tok), "{tok}: {msg}");
+        }
+        // array storage goes through the same cursor guard
+        let arr = "%%MatrixMarket matrix array real general\n2 1\n1.0\ninf\n";
+        let err = parse_system(arr).unwrap_err();
+        assert!(err.to_string().contains("non-finite value"), "{err}");
+        // a huge-but-finite value still loads
+        let ok = "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 1e308\n";
+        assert!(parse_system(ok).is_ok());
     }
 
     #[test]

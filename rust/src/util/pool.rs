@@ -4,7 +4,9 @@
 //! work-stealing-free chunked pool that scales on multi-core hosts).
 
 use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use (`PA_THREADS` overrides).
 pub fn num_threads() -> usize {
@@ -34,6 +36,12 @@ fn in_pool() -> bool {
 /// Apply `f` to every index in `0..n`, writing results into a Vec in
 /// order. Work is distributed by an atomic cursor so uneven item costs
 /// (e.g. different matrix sizes) balance automatically.
+///
+/// A panic in `f` never aborts sibling workers mid-write: it is caught
+/// on the worker, carried across the scope join, and re-raised with its
+/// original payload on the calling thread — identical observable
+/// behavior to the sequential path, so callers that want per-item panic
+/// isolation (`Autotuner::solve_batch`) wrap `f` itself.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -46,11 +54,13 @@ where
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let cursor = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
+    let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let f = &f;
             let cursor = &cursor;
             let out_ptr = &out_ptr;
+            let panicked = &panicked;
             scope.spawn(move || {
                 IN_POOL.with(|flag| flag.set(true));
                 loop {
@@ -58,15 +68,26 @@ where
                     if i >= n {
                         break;
                     }
-                    let v = f(i);
-                    // SAFETY: each index i is claimed exactly once via the
-                    // atomic cursor; slots are disjoint; the scope outlives
-                    // all writes.
-                    unsafe { *out_ptr.0.add(i) = Some(v) };
+                    match panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                        // SAFETY: each index i is claimed exactly once via
+                        // the atomic cursor; slots are disjoint; the scope
+                        // outlives all writes.
+                        Ok(v) => unsafe { *out_ptr.0.add(i) = Some(v) },
+                        Err(payload) => {
+                            let mut slot = panicked.lock().unwrap_or_else(|e| e.into_inner());
+                            if slot.is_none() {
+                                *slot = Some(payload);
+                            }
+                            break;
+                        }
+                    }
                 }
             });
         }
     });
+    if let Some(payload) = panicked.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        panic::resume_unwind(payload);
+    }
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 
@@ -165,6 +186,27 @@ mod tests {
         assert_eq!(v, want);
         // the calling thread is never flagged as a pool worker
         assert!(!super::in_pool());
+    }
+
+    #[test]
+    fn worker_panic_resurfaces_with_original_payload() {
+        // threaded or sequential, the caller sees the original panic
+        // message (not thread::scope's generic join panic)
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(8, |i| {
+                if i == 3 {
+                    panic!("boom at 3");
+                }
+                i
+            })
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 3"), "payload was {msg:?}");
     }
 
     #[test]

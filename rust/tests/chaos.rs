@@ -1,0 +1,318 @@
+//! Fault-injection property tests (ISSUE 6 acceptance): every named
+//! [`FaultSite`], exercised against dense and CSR inputs and both
+//! refinement families, resolves to a typed outcome — a success report,
+//! a rescue recorded in [`SolveReport::degradation`], or a classified
+//! [`SolveError`] — and **never a panic**. Whenever the ladder lands on
+//! the FP64 baseline rung with no fault firing inside that rung, the
+//! rescue is asserted bit-identical to an uninjected FP64 solve of the
+//! same system (the "fallback story holds under fire" invariant).
+
+use precision_autotune::api::{Autotuner, LadderRung, SolveError, SolveErrorKind, SolveReport};
+use precision_autotune::bandit::action::{Action, ActionSpace};
+use precision_autotune::bandit::{QTable, TrainedPolicy};
+use precision_autotune::chop::Prec;
+use precision_autotune::faults::{FaultPlan, FaultSite};
+use precision_autotune::features::{Binner, Discretizer};
+use precision_autotune::linalg::Mat;
+use precision_autotune::sparse::Csr;
+use precision_autotune::system::SystemInput;
+use precision_autotune::util::rng::Rng;
+
+fn dense_spd(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        a[(i, i)] = 8.0 + rng.gauss().abs();
+        for j in 0..i {
+            if rng.uniform() < 0.2 {
+                let v = rng.gauss() * 0.3;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+    }
+    a
+}
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.gauss()).collect()
+}
+
+/// The dense/CSR pair every per-site sweep runs against.
+fn shapes(n: usize, seed: u64) -> Vec<(&'static str, SystemInput)> {
+    let a = dense_spd(n, seed);
+    let csr = Csr::from_dense(&a);
+    vec![("dense", SystemInput::Dense(a)), ("csr", SystemInput::Sparse(csr))]
+}
+
+/// Block-diagonal 2×2 blocks [[1, 2], [2, 1]]: symmetric, indefinite
+/// (eigenvalues 3 and −1), every entry exact in bf16 — CG-IR breaks
+/// down deterministically on it while any LU rung solves it exactly.
+fn indefinite(n: usize) -> Mat {
+    let n = (n.max(4) + 1) & !1;
+    let mut a = Mat::zeros(n, n);
+    for k in (0..n).step_by(2) {
+        a[(k, k)] = 1.0;
+        a[(k + 1, k + 1)] = 1.0;
+        a[(k, k + 1)] = 2.0;
+        a[(k + 1, k)] = 2.0;
+    }
+    a
+}
+
+/// One-state policy whose Q-ranking mis-routes everything to CG-IR.
+/// With `with_next_best` a visited low-precision LU action sits between
+/// the CG pick and the (unvisited) FP64 rung, so the ladder's next-best
+/// rung gets exercised; without it the ladder must fall through to the
+/// FP64 baseline.
+fn misroute_policy(with_next_best: bool) -> TrainedPolicy {
+    let lu_bf16 = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64);
+    let actions = if with_next_best {
+        vec![Action::CG_FP64, lu_bf16, Action::FP64]
+    } else {
+        vec![Action::CG_FP64, Action::FP64]
+    };
+    let mut q = QTable::new(1, ActionSpace { actions });
+    q.update(0, 0, 5.0, 1.0);
+    if with_next_best {
+        q.update(0, 1, 3.0, 1.0);
+    }
+    TrainedPolicy {
+        qtable: q,
+        discretizer: Discretizer {
+            kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+            norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+            delta_c: 1e-30,
+            delta_n: 1e-30,
+        },
+    }
+}
+
+fn assert_bits_equal(a: &SolveReport, b: &SolveReport, tag: &str) {
+    assert_eq!(a.nbe.to_bits(), b.nbe.to_bits(), "{tag}: nbe bits");
+    assert_eq!(a.x.len(), b.x.len(), "{tag}: x length");
+    for (i, (u, v)) in a.x.iter().zip(&b.x).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "{tag}: x[{i}] bits");
+    }
+}
+
+/// A rescue is bit-checkable against the clean FP64 baseline when the
+/// accepted rung is the FP64 one and no stall fault fired: an
+/// inner-stall during the rescue rung itself can reconverge to an
+/// equally accurate but differently rounded iterate.
+fn bit_checkable(rep: &SolveReport) -> bool {
+    match &rep.degradation {
+        Some(d) => {
+            d.rung == LadderRung::Fp64Baseline && !d.injected.contains(&FaultSite::InnerStall)
+        }
+        None => false,
+    }
+}
+
+/// Every fault site, armed alone at rate 1.0 with a budget of one fire,
+/// against dense and CSR inputs: the request resolves typed (Ok or a
+/// classified error), the injected site is recorded, and any FP64-rung
+/// rescue is bit-identical to the uninjected baseline.
+#[test]
+fn every_site_resolves_typed_on_dense_and_csr() {
+    let n = 20;
+    let b = rhs(n, 100);
+    for (shape, sys) in shapes(n, 17) {
+        let baseline =
+            Autotuner::builder().build().unwrap().solve_ref(&sys, &b).unwrap();
+        assert!(!baseline.failed && baseline.degradation.is_none());
+        for site in FaultSite::ALL {
+            let tag = format!("{shape}/{site}");
+            let plan = FaultPlan::new(0xFA17).with(site, 1.0).with_budget(site, 1);
+            let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+            if site == FaultSite::WorkerPanic {
+                // the panic site is only survivable behind solve_batch's
+                // per-request catch_unwind
+                let reqs = vec![(sys.clone(), b.as_slice()), (sys.clone(), b.as_slice())];
+                let out = tuner.solve_batch(&reqs);
+                let errs: Vec<_> = out.iter().filter(|r| r.is_err()).collect();
+                assert_eq!(errs.len(), 1, "{tag}: budget-1 panic hits exactly one entry");
+                let kind = SolveError::classify(out.iter().find_map(|r| r.as_ref().err()).unwrap());
+                assert_eq!(kind, Some(SolveErrorKind::WorkerPanic), "{tag}");
+                let ok = out.iter().find_map(|r| r.as_ref().ok()).unwrap();
+                assert!(!ok.failed, "{tag}: sibling request unaffected");
+                continue;
+            }
+            match tuner.solve_ref(&sys, &b) {
+                Ok(rep) => {
+                    assert!(!rep.failed, "{tag}: accepted result must not be failed");
+                    let d = rep.degradation.as_ref().unwrap_or_else(|| {
+                        panic!("{tag}: injected solve must carry a degradation report")
+                    });
+                    assert!(d.injected.contains(&site), "{tag}: fired site recorded");
+                    assert_eq!(d.retries, d.attempts.len() - 1, "{tag}");
+                    assert!(
+                        rep.nbe <= 1e-6 || d.rung == LadderRung::Primary,
+                        "{tag}: rescue cleared the acceptance bar (nbe {})",
+                        rep.nbe
+                    );
+                    if bit_checkable(&rep) {
+                        assert_bits_equal(&rep, &baseline, &tag);
+                    }
+                }
+                Err(e) => {
+                    let kind = SolveError::classify(&e)
+                        .unwrap_or_else(|| panic!("{tag}: untyped error {e:#}"));
+                    // with a single budgeted fault only ingress poisoning
+                    // is allowed to fail the request outright
+                    assert_eq!(kind, SolveErrorKind::InvalidInput, "{tag}: {e:#}");
+                    assert_eq!(site, FaultSite::Ingress, "{tag}: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+/// The deterministic-breakdown sites force the primary FP64 attempt
+/// down and the ladder must land on the FP64 baseline rung with a
+/// bit-identical result — on both input shapes.
+#[test]
+fn breakdown_faults_rescue_bit_identically() {
+    let n = 24;
+    let b = rhs(n, 5);
+    for (shape, sys) in shapes(n, 23) {
+        let baseline =
+            Autotuner::builder().build().unwrap().solve_ref(&sys, &b).unwrap();
+        for site in [FaultSite::Factor, FaultSite::InnerBreakdown, FaultSite::Residual] {
+            let tag = format!("{shape}/{site}");
+            let plan = FaultPlan::new(3).with(site, 1.0).with_budget(site, 1);
+            let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+            let rep = tuner.solve_ref(&sys, &b).unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+            let d = rep.degradation.as_ref().expect("degradation report");
+            assert_eq!(d.rung, LadderRung::Fp64Baseline, "{tag}");
+            assert_eq!(d.attempts.len(), 2, "{tag}: primary + baseline rung");
+            assert_bits_equal(&rep, &baseline, &tag);
+        }
+    }
+}
+
+/// An unlimited-budget factor fault takes down every rung: the request
+/// must resolve to the typed ladder-exhausted error, not a panic and
+/// not a silent garbage result.
+#[test]
+fn unbounded_factor_faults_exhaust_the_ladder_typed() {
+    let n = 16;
+    let b = rhs(n, 9);
+    for (shape, sys) in shapes(n, 31) {
+        let plan = FaultPlan::new(11).with(FaultSite::Factor, 1.0);
+        let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+        let e = tuner.solve_ref(&sys, &b).expect_err("every rung sabotaged");
+        assert_eq!(
+            SolveError::classify(&e),
+            Some(SolveErrorKind::LadderExhausted),
+            "{shape}: {e:#}"
+        );
+        assert!(e.to_string().contains("ladder-exhausted"), "{shape}: {e:#}");
+    }
+}
+
+/// Ingress poisoning is caught by request validation as a typed
+/// invalid-input error — the poisoned rhs never reaches a solver.
+#[test]
+fn ingress_poisoning_is_rejected_as_invalid_input() {
+    let n = 12;
+    let b = rhs(n, 2);
+    for (shape, sys) in shapes(n, 41) {
+        let plan = FaultPlan::new(1).with(FaultSite::Ingress, 1.0);
+        let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+        let e = tuner.solve_ref(&sys, &b).expect_err("poisoned rhs");
+        assert_eq!(
+            SolveError::classify(&e),
+            Some(SolveErrorKind::InvalidInput),
+            "{shape}: {e:#}"
+        );
+        assert!(e.to_string().contains("non-finite"), "{shape}: {e:#}");
+    }
+}
+
+/// Cache sabotage (bit corruption and forced eviction of resident
+/// entries) never changes a single result bit: corrupted entries are
+/// caught by the verify-evicting lookup and rebuilt. The corruption
+/// path is asserted via the cache's verify-eviction counter.
+#[test]
+fn cache_sabotage_never_changes_result_bits() {
+    let n = 20;
+    let b = rhs(n, 77);
+    let sys = SystemInput::Dense(dense_spd(n, 53));
+    let clean = Autotuner::builder().build().unwrap();
+    let reference = clean.solve_ref(&sys, &b).unwrap();
+
+    let plan = FaultPlan::new(21).with(FaultSite::CacheCorrupt, 1.0);
+    let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+    for round in 0..4 {
+        let rep = tuner.solve_ref(&sys, &b).unwrap();
+        assert!(!rep.failed, "round {round}");
+        assert_bits_equal(&rep, &reference, &format!("corrupt round {round}"));
+    }
+    assert!(
+        tuner.session_cache().verify_evictions() > 0,
+        "corrupted entries must be caught and evicted by verification"
+    );
+
+    let plan = FaultPlan::new(22)
+        .with(FaultSite::CacheCorrupt, 1.0)
+        .with(FaultSite::CacheEvict, 1.0);
+    let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+    for round in 0..4 {
+        let rep = tuner.solve_ref(&sys, &b).unwrap();
+        assert_bits_equal(&rep, &reference, &format!("corrupt+evict round {round}"));
+    }
+}
+
+/// Natural (uninjected) breakdown coverage for the CG family: a policy
+/// that mis-routes an indefinite system to CG-IR is rescued by the
+/// next-best visited LU action when one exists, and by the FP64
+/// baseline — bit-identically — when one does not.
+#[test]
+fn misrouted_cg_policy_walks_the_ladder() {
+    let a = indefinite(8);
+    let b = rhs(a.n_rows, 4);
+    let sys = SystemInput::Dense(a);
+
+    let tuner = Autotuner::builder().policy(misroute_policy(true)).build().unwrap();
+    let rep = tuner.solve_ref(&sys, &b).unwrap();
+    let d = rep.degradation.as_ref().expect("rescue recorded");
+    assert_eq!(d.rung, LadderRung::NextBest, "visited bf16-LU action rescues");
+    assert!(d.injected.is_empty(), "natural breakdown, no injected fault");
+    assert!(!rep.failed && rep.nbe <= 1e-6, "nbe {}", rep.nbe);
+
+    let tuner = Autotuner::builder().policy(misroute_policy(false)).build().unwrap();
+    let rep = tuner.solve_ref(&sys, &b).unwrap();
+    let d = rep.degradation.as_ref().expect("rescue recorded");
+    assert_eq!(d.rung, LadderRung::Fp64Baseline, "no visited alternative: FP64 rung");
+    let baseline = Autotuner::builder().build().unwrap().solve_ref(&sys, &b).unwrap();
+    assert_bits_equal(&rep, &baseline, "fp64 rescue vs clean fp64");
+}
+
+/// A chaotic batch (every site armed, panics included) resolves every
+/// entry to a typed outcome and never takes down a sibling request.
+#[test]
+fn chaotic_batch_resolves_every_entry_typed() {
+    let n = 16;
+    let b = rhs(n, 6);
+    let shapes = shapes(n, 61);
+    let reqs: Vec<(SystemInput, &[f64])> = (0..6)
+        .map(|i| (shapes[i % 2].1.clone(), b.as_slice()))
+        .collect();
+    let plan = FaultPlan::uniform(0xBADC0DE, 0.4);
+    let tuner = Autotuner::builder().fault_plan(plan).build().unwrap();
+    let out = tuner.solve_batch(&reqs);
+    assert_eq!(out.len(), reqs.len());
+    for (i, r) in out.iter().enumerate() {
+        match r {
+            Ok(rep) => assert!(!rep.failed, "entry {i} accepted but failed"),
+            Err(e) => {
+                assert!(
+                    SolveError::classify(e).is_some(),
+                    "entry {i}: untyped error {e:#}"
+                );
+            }
+        }
+    }
+}

@@ -206,6 +206,42 @@ fn lru_eviction_and_report_counters() {
 }
 
 #[test]
+fn poisoned_cache_entries_are_verified_away_not_served() {
+    // Warm the cache, corrupt the resident entry's slabs in place
+    // (the chaos harness's cache-corrupt fault, driven directly), and
+    // re-serve the same batch: the verify-evicting lookup must catch
+    // the damage, rebuild, and return bit-identical results.
+    let reqs_owned = workload();
+    let reqs: Vec<(SystemInput, &[f64])> = reqs_owned
+        .iter()
+        .map(|(a, b)| (a.clone(), b.as_slice()))
+        .collect();
+    let tuner = Autotuner::builder().build().unwrap();
+    let warm: Vec<_> = tuner
+        .solve_batch(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    assert!(tuner.session_cache().len() >= 2, "workload warms multiple entries");
+    for lane in 0..tuner.session_cache().len() as u64 {
+        assert!(tuner.session_cache().corrupt_entry(lane), "lane {lane} corrupted");
+    }
+    let reserved: Vec<_> = tuner
+        .solve_batch(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    assert!(
+        tuner.session_cache().verify_evictions() > 0,
+        "corrupted entries must be caught by verification, not served"
+    );
+    for (i, (w, r)) in warm.iter().zip(&reserved).enumerate() {
+        assert!(!r.failed, "request {i} failed after corruption: {:?}", r.stop);
+        assert_reports_bit_equal(w, r, &format!("poisoned-cache request {i}"));
+    }
+}
+
+#[test]
 fn batch_isolates_per_request_errors() {
     let good = dense(12, 31);
     let rect = Mat::zeros(3, 4);
