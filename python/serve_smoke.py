@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Socket smoke driver for the pallas-serve daemon (CI `serve` job).
+
+Speaks the newline-delimited JSON protocol directly over TCP — no
+project imports, stdlib only — and walks the daemon through the full
+ISSUE 7 lifecycle:
+
+  1. connect (with retries while the daemon boots) and ping;
+  2. snapshot the boot policy so reload has bytes to read;
+  3. stream the first half of the solve requests (every response must
+     be ok);
+  4. one zero-downtime hot-reload (policy version must bump by one);
+  5. shadow-load a candidate policy, stream the second half (shadow
+     scoring rides along), then one promotion: the un-forced attempt
+     must be rejected while the candidate lacks evidence, the forced
+     one must swap it live;
+  6. dump the final stats payload to --stats-out and assert the
+     counters (solves_ok, reloads, promotions);
+  7. clean shutdown.
+
+Exits non-zero on any failed request, missed counter, or protocol
+violation.
+"""
+
+import argparse
+import json
+import socket
+import sys
+import time
+
+
+def die(msg):
+    print(f"serve_smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+class Daemon:
+    """One TCP connection; each call() is a strict request/response."""
+
+    def __init__(self, addr, retries):
+        host, port = addr.rsplit(":", 1)
+        last = None
+        for _ in range(retries):
+            try:
+                self.sock = socket.create_connection((host, int(port)), timeout=60)
+                break
+            except OSError as e:
+                last = e
+                time.sleep(0.25)
+        else:
+            die(f"could not connect to {addr} after {retries} attempts: {last}")
+        self.rfile = self.sock.makefile("r", encoding="utf-8", newline="\n")
+
+    def call(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode("utf-8"))
+        line = self.rfile.readline()
+        if not line:
+            die("daemon closed the connection without responding")
+        return json.loads(line)
+
+    def admin(self, op, **extra):
+        return self.call({"op": op, **extra})
+
+
+def lcg(seed):
+    """Tiny deterministic uniform stream in [0, 1) — no numpy needed."""
+    state = (seed & 0x7FFFFFFF) or 1
+    while True:
+        state = (1103515245 * state + 12345) & 0x7FFFFFFF
+        yield state / 0x80000000
+
+
+def dense_request(req_id, n, seed):
+    """Diagonally dominant dense system as a solve-request object."""
+    r = lcg(seed)
+    a = []
+    for i in range(n):
+        row = [next(r) - 0.5 for _ in range(n)]
+        row[i] += float(n)
+        a.extend(row)
+    b = [next(r) for _ in range(n)]
+    return {"op": "solve", "id": req_id, "n": n, "a": a, "b": b}
+
+
+def expect_ok(resp, what):
+    if not resp.get("ok", False):
+        die(f"{what} rejected: {resp}")
+    return resp
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--addr", default="127.0.0.1:7747")
+    p.add_argument("--requests", type=int, default=50)
+    p.add_argument("--n", type=int, default=8, help="system size per request")
+    p.add_argument("--candidate", required=True, help="policy JSON for the shadow arm")
+    p.add_argument("--stats-out", required=True, help="where to dump the final stats payload")
+    p.add_argument("--connect-retries", type=int, default=80)
+    args = p.parse_args()
+
+    c = Daemon(args.addr, args.connect_retries)
+    ping = expect_ok(c.admin("ping"), "ping")
+    v0 = ping["policy_version"]
+
+    expect_ok(c.admin("snapshot"), "snapshot")
+
+    half = args.requests // 2
+    for i in range(half):
+        resp = c.call(dense_request(i, args.n, 100 + i))
+        expect_ok(resp, f"solve #{i}")
+
+    # zero-downtime hot-reload: version bumps by exactly one
+    expect_ok(c.admin("reload"), "reload")
+    v1 = expect_ok(c.admin("ping"), "ping")["policy_version"]
+    if v1 != v0 + 1:
+        die(f"reload must bump the policy version once ({v0} -> {v1})")
+
+    # shadow arm: load a candidate, let scoring ride the second half
+    expect_ok(c.admin("shadow-load", path=args.candidate), "shadow-load")
+    for i in range(half, args.requests):
+        resp = c.call(dense_request(i, args.n, 100 + i))
+        expect_ok(resp, f"solve #{i}")
+
+    # without evidence the promotion gate must hold...
+    bare = c.admin("promote")
+    if bare.get("ok", False):
+        die(f"un-forced promote must be rejected without a cleared win-rate: {bare}")
+    # ...and the forced promotion must swap the candidate live
+    forced = expect_ok(c.admin("promote", force=True), "forced promote")
+    if forced["policy_version"] != v1 + 1:
+        die(f"promotion must bump the policy version ({v1} -> {forced['policy_version']})")
+
+    stats = expect_ok(c.admin("stats"), "stats")
+    with open(args.stats_out, "w", encoding="utf-8") as f:
+        json.dump(stats, f, indent=2, sort_keys=True)
+    counters = stats["counters"]
+    if counters["solves_ok"] != args.requests:
+        die(f"expected {args.requests} ok solves, got {counters['solves_ok']}")
+    if counters["reloads"] < 1:
+        die(f"expected at least one reload, got {counters['reloads']}")
+    if counters["promotions"] != 1:
+        die(f"expected exactly one promotion, got {counters['promotions']}")
+
+    expect_ok(c.admin("shutdown"), "shutdown")
+    print(
+        f"serve_smoke: OK — {args.requests} solves, policy v{v0} -> "
+        f"v{forced['policy_version']} (one reload + one promotion), stats in {args.stats_out}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -213,6 +213,33 @@ pub struct SolveReport {
     pub degradation: Option<DegradationReport>,
 }
 
+impl SolveReport {
+    /// The paper's reward inputs (eq. 21) reconstructed from serving
+    /// telemetry — the plumbing that lets a live [`SolveReport`] feed the
+    /// online learner (`serve::online`).
+    ///
+    /// Serving has no reference solution, so the forward error is not
+    /// observable; the normwise backward error stands in for both
+    /// accuracy terms (`ferr = nbe`, the standard a-posteriori proxy). A
+    /// NaN κ₁ estimate (the solve skipped the feature pass) falls back to
+    /// `kappa_floor` so `f_precision`'s conditioning discount stays
+    /// finite and the observation remains usable.
+    pub fn reward_inputs(&self, kappa_floor: f64) -> crate::bandit::RewardInputs {
+        let kappa = if self.kappa_est.is_finite() {
+            self.kappa_est
+        } else {
+            kappa_floor
+        };
+        crate::bandit::RewardInputs {
+            ferr: self.nbe,
+            nbe: self.nbe,
+            gmres_iters: self.gmres_iters,
+            kappa,
+            failed: self.failed || matches!(self.stop, StopReason::Failure),
+        }
+    }
+}
+
 /// One rung of the graceful-degradation ladder `solve` walks when an
 /// attempt fails (policy route): primary action → next-best visited
 /// action → all-FP64 LU baseline → typed [`SolveError`].

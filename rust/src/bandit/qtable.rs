@@ -133,6 +133,42 @@ impl QTable {
         self.q(state, self.argmax(state))
     }
 
+    // ---- snapshot API (serve::snapshot / serve::online) ----
+
+    /// Total observations absorbed across every (state, action) cell —
+    /// the online learner's progress counter; the serving daemon embeds
+    /// it in snapshot stats so operators can see how much live traffic a
+    /// policy version has learned from.
+    pub fn total_observations(&self) -> u64 {
+        self.visits.iter().map(|&v| v as u64).sum()
+    }
+
+    /// Order-sensitive FNV-1a fingerprint of the full table contents
+    /// (shape, Q bits, visit counts). Two tables fingerprint equal iff
+    /// they are byte-identical under [`QTable::to_json`] — the cheap
+    /// equality the online-replay determinism tests and the snapshot
+    /// dedup check hinge on. (`-0.0` and `0.0` hash differently; the
+    /// update rule never produces `-0.0` from `0.0` starts.)
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut absorb = |x: u64| {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+            }
+        };
+        absorb(self.n_states as u64);
+        absorb(self.space.len() as u64);
+        for &q in &self.q {
+            absorb(q.to_bits());
+        }
+        for &v in &self.visits {
+            absorb(v as u64);
+        }
+        h
+    }
+
     // ---- persistence ----
 
     pub fn to_json(&self) -> Value {
@@ -347,6 +383,27 @@ mod tests {
             let err = QTable::from_json(&crate::util::json::parse(&bad_v).unwrap()).unwrap_err();
             assert!(err.to_string().contains("valid count"), "{err}");
         }
+    }
+
+    #[test]
+    fn fingerprint_and_observation_counter_track_content() {
+        let mut a = table();
+        let mut b = table();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.total_observations(), 0);
+        a.update(0, 1, 2.0, 0.5);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.total_observations(), 1);
+        b.update(0, 1, 2.0, 0.5);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same updates, same bits");
+        // same Q value via a different visit history -> different print
+        let mut c = table();
+        c.update(0, 1, 2.0, 0.5);
+        c.update(0, 1, 1.0, 1.0);
+        c.update(0, 1, 1.0, 1.0);
+        assert_eq!(c.q(0, 1), a.q(0, 1));
+        assert_ne!(c.fingerprint(), a.fingerprint());
+        assert_eq!(c.total_observations(), 3);
     }
 
     #[test]

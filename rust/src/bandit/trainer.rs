@@ -361,12 +361,11 @@ impl TrainedPolicy {
         Ok(TrainedPolicy { qtable, discretizer })
     }
 
+    /// Persist the policy atomically (tmp+rename via [`crate::util::fsx`])
+    /// so a crash mid-write can never leave a truncated JSON that
+    /// [`TrainedPolicy::from_json`] rejects on the next load.
     pub fn save(&self, path: &str) -> Result<()> {
-        if let Some(dir) = std::path::Path::new(path).parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.to_json().to_string())?;
-        Ok(())
+        crate::util::fsx::atomic_write_str(path, &self.to_json().to_string())
     }
 
     pub fn load(path: &str) -> Result<TrainedPolicy> {

@@ -25,7 +25,16 @@
 //! request, with the FP64 rescues bit-checked against the clean
 //! baseline. The whole suite is deterministic given `(seed, rate,
 //! sizes)`; CI pins the seed and uploads the JSON report.
+//!
+//! The final mix (ISSUE 7) starts an in-process [`crate::serve`] daemon
+//! with the two daemon-layer fault sites armed: snapshot writes fail at
+//! `rate`, and the *first* hot-reload deterministically reads back
+//! corrupted bytes. With a second connection solving throughout, the
+//! mix asserts the corrupted swap is rejected as a typed error while
+//! the old policy keeps serving, and that the retried swap lands
+//! exactly one version ahead with zero failed requests.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
@@ -41,7 +50,9 @@ use crate::faults::{FaultPlan, FaultSite, N_SITES};
 use crate::features::{Binner, Discretizer};
 use crate::gen::sparse_spd;
 use crate::linalg::Mat;
+use crate::serve::{protocol, Client, Daemon, ServeOpts};
 use crate::system::SystemInput;
+use crate::util::config::Config;
 use crate::util::json::{self, Value};
 use crate::util::pool::num_threads;
 use crate::util::rng::Rng;
@@ -156,6 +167,19 @@ impl Tally {
 
     fn rescued(&self) -> u64 {
         self.rescued_next_best + self.rescued_fp64
+    }
+
+    fn merge(&mut self, o: &Tally) {
+        self.clean += o.clean;
+        self.absorbed += o.absorbed;
+        self.rescued_next_best += o.rescued_next_best;
+        self.rescued_fp64 += o.rescued_fp64;
+        self.input_rejected += o.input_rejected;
+        self.exhausted += o.exhausted;
+        self.worker_panic += o.worker_panic;
+        self.other += o.other;
+        self.bit_checked += o.bit_checked;
+        self.bit_ok += o.bit_ok;
     }
 
     fn to_json(&self, name: &str, requests: usize) -> Value {
@@ -280,6 +304,168 @@ fn run_batch_mix(
         t.print(name, requests.len());
     }
     Ok(t)
+}
+
+/// Map one daemon solve response onto the tally buckets: a forced-FP64
+/// fallback rescue counts as an fp64-baseline save, a degraded success
+/// was absorbed by the ladder, and a typed error lands in its named
+/// bucket. `other` stays reserved for unclassifiable failures — exactly
+/// what invariant 3 forbids.
+fn record_daemon_response(t: &mut Tally, resp: &Value) -> Result<()> {
+    let flag = |key: &str| resp.get(key).and_then(Value::as_bool).unwrap_or(false);
+    if resp.get("ok")?.as_bool()? {
+        if flag("fallback") {
+            t.rescued_fp64 += 1;
+        } else if flag("degraded") {
+            t.absorbed += 1;
+        } else {
+            t.clean += 1;
+        }
+    } else {
+        match resp.get("kind").and_then(Value::as_str).unwrap_or("") {
+            "invalid-input" => t.input_rejected += 1,
+            "ladder-exhausted" => t.exhausted += 1,
+            "worker-panic" => t.worker_panic += 1,
+            _ => t.other += 1,
+        }
+    }
+    Ok(())
+}
+
+/// The daemon mix: an in-process `pallas-serve` daemon with the two
+/// daemon-layer fault sites armed — snapshot writes fail at `rate`
+/// (capped at 0.5 so one eventually lands), and the *first* hot-reload
+/// reads back corrupted bytes (rate 1.0, budget 1). A second connection
+/// hammers solves throughout, so both the failed and the successful
+/// swap happen with requests in flight. Asserts: the corrupted reload
+/// is rejected with a typed error and the old policy keeps serving
+/// (version unchanged, solves still succeed); the clean reload bumps
+/// the version exactly once; every response on both connections is
+/// classifiable.
+fn run_daemon_mix(
+    seed: u64,
+    rate: f64,
+    requests: &Arc<Vec<(SystemInput, Vec<f64>)>>,
+) -> Result<(Tally, [u64; N_SITES])> {
+    // process-unique snapshot dir: the tiny-suite and determinism tests
+    // run concurrently under `cargo test`
+    static MIX_ID: AtomicU64 = AtomicU64::new(0);
+    let policy = TrainedPolicy {
+        qtable: QTable::new(1, ActionSpace::reduced_top_k(9)),
+        discretizer: Discretizer {
+            kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+            norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+            delta_c: 1e-30,
+            delta_n: 1e-30,
+        },
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "pa_chaos_daemon_{}_{}",
+        std::process::id(),
+        MIX_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let plan = FaultPlan::new(seed ^ 7)
+        .with(FaultSite::SnapshotWrite, rate.min(0.5))
+        .with(FaultSite::PolicyReload, 1.0)
+        .with_budget(FaultSite::PolicyReload, 1);
+    let serve_opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        fault_plan: Some(plan),
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(policy, Config::default(), serve_opts)?;
+    let addr = daemon.addr();
+
+    // Second connection: solves in flight while the main connection
+    // breaks and then swaps the policy under it.
+    let hammer_reqs = Arc::clone(requests);
+    let hammer = std::thread::Builder::new()
+        .name("chaos-daemon-hammer".to_string())
+        .spawn(move || -> Result<Tally> {
+            let mut c = Client::connect(addr)?;
+            let mut t = Tally::default();
+            for (i, (a, b)) in hammer_reqs.iter().enumerate() {
+                let resp = c.call(&protocol::solve_request_json(Some(i as u64), a, b))?;
+                record_daemon_response(&mut t, &resp)?;
+            }
+            Ok(t)
+        })?;
+
+    let mut c = Client::connect(addr)?;
+    let mut t = Tally::default();
+    // A snapshot must land before reload has anything to read; writes
+    // fail at the armed rate, so retry — and every failure must be the
+    // injected one, never a real I/O error.
+    let mut snapshotted = false;
+    for _ in 0..32 {
+        let resp = c.call(&protocol::admin_request("snapshot", vec![]))?;
+        if resp.get("ok")?.as_bool()? {
+            snapshotted = true;
+            break;
+        }
+        let err = resp.get("error")?.as_str()?;
+        ensure!(err.contains("snapshot-write"), "daemon: unexpected snapshot failure: {err}");
+    }
+    ensure!(snapshotted, "daemon: no snapshot landed in 32 attempts (rate {rate})");
+    let v0 = c.call(&protocol::admin_request("ping", vec![]))?.get("policy_version")?.as_usize()?;
+
+    // First reload: the injected fault corrupts the bytes read back —
+    // must be rejected, with the old policy still serving.
+    let bad = c.call(&protocol::admin_request("reload", vec![]))?;
+    ensure!(!bad.get("ok")?.as_bool()?, "daemon: corrupted reload must be rejected: {bad:?}");
+    ensure!(
+        bad.get("error")?.as_str()?.contains("reload rejected; still serving policy v"),
+        "daemon: rejection must name the surviving policy: {bad:?}"
+    );
+    let v1 = c.call(&protocol::admin_request("ping", vec![]))?.get("policy_version")?.as_usize()?;
+    ensure!(v1 == v0, "daemon: failed reload bumped the policy version ({v0} -> {v1})");
+    let (a0, b0) = &requests[0];
+    let resp = c.call(&protocol::solve_request_json(None, a0, b0))?;
+    ensure!(resp.get("ok")?.as_bool()?, "daemon: solve after rejected reload failed: {resp:?}");
+    record_daemon_response(&mut t, &resp)?;
+
+    // Second reload: the fault budget is spent — the swap must land,
+    // exactly one version ahead, with the hammer mid-stream.
+    let good = c.call(&protocol::admin_request("reload", vec![]))?;
+    ensure!(good.get("ok")?.as_bool()?, "daemon: clean reload failed: {good:?}");
+    let v2 = c.call(&protocol::admin_request("ping", vec![]))?.get("policy_version")?.as_usize()?;
+    ensure!(v2 == v0 + 1, "daemon: clean reload must bump the version once ({v0} -> {v2})");
+    let resp = c.call(&protocol::solve_request_json(None, a0, b0))?;
+    ensure!(resp.get("ok")?.as_bool()?, "daemon: solve after hot-swap failed: {resp:?}");
+    record_daemon_response(&mut t, &resp)?;
+
+    match hammer.join() {
+        Ok(ht) => t.merge(&ht?),
+        Err(_) => bail!("daemon: hammer connection thread panicked"),
+    }
+
+    let stats = c.call(&protocol::admin_request("stats", vec![]))?;
+    let counters = stats.get("counters")?;
+    ensure!(
+        counters.get("reload_failures")?.as_f64()? >= 1.0,
+        "daemon: stats must count the rejected reload"
+    );
+    ensure!(counters.get("reloads")?.as_f64()? >= 1.0, "daemon: stats must count the clean swap");
+
+    let down = c.call(&protocol::admin_request("shutdown", vec![]))?;
+    ensure!(down.get("ok")?.as_bool()?, "daemon: shutdown refused: {down:?}");
+    let mut fired = [0u64; N_SITES];
+    if let Some(inj) = daemon.injector() {
+        for site in FaultSite::ALL {
+            fired[site as usize] += inj.fired(site);
+        }
+    }
+    drop(c);
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+    ensure!(
+        fired[FaultSite::PolicyReload as usize] == 1,
+        "daemon: the policy-reload fault must fire exactly once (budget 1)"
+    );
+    ensure!(t.other == 0, "daemon mix: {} response(s) were unclassifiable", t.other);
+    Ok((t, fired))
 }
 
 /// A one-state policy whose top-ranked action is CG-IR: on a symmetric
@@ -462,6 +648,23 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<Value> {
     absorb(&tuner, &mut fired);
     cases.push(t.to_json("batch/dense/repeated-A", r));
 
+    // --- the serving daemon under daemon-layer chaos: failing snapshot
+    // writes and a corrupted hot-reload, with a second connection
+    // solving throughout (one watchdog budget for the whole mix) ---
+    let daemon_reqs = Arc::clone(&repeated_dense);
+    let (seed, rate) = (opts.seed, opts.rate);
+    let (t, daemon_fired) =
+        watchdogged("daemon/reload-under-fire (whole mix)".to_string(), wd * 4, move || {
+            run_daemon_mix(seed, rate, &daemon_reqs)
+        })??;
+    for site in FaultSite::ALL {
+        fired[site as usize] += daemon_fired[site as usize];
+    }
+    if !opts.quiet {
+        t.print("daemon/reload-under-fire", r + 2);
+    }
+    cases.push(t.to_json("daemon/reload-under-fire", r + 2));
+
     ensure!(
         fired.iter().sum::<u64>() > 0,
         "chaos suite fired no faults at all — the schedule is vacuous (seed {:#x}, rate {})",
@@ -500,7 +703,7 @@ mod tests {
         let v = run_chaos(&opts).unwrap();
         assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "chaos");
         let cases = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(cases.len(), 6);
+        assert_eq!(cases.len(), 7);
         for c in cases {
             assert_eq!(c.get("other").unwrap().as_f64().unwrap(), 0.0, "{c:?}");
             let checked = c.get("fp64_bitmatch_checked").unwrap().as_f64().unwrap();
@@ -510,6 +713,11 @@ mod tests {
         // the deterministic mis-route mixes exercised both rescue rungs
         assert!(cases[3].get("rescued_fp64").unwrap().as_f64().unwrap() >= 2.0);
         assert!(cases[4].get("rescued_next_best").unwrap().as_f64().unwrap() >= 2.0);
+        // the daemon mix ran and survived its corrupted hot-reload
+        assert_eq!(
+            cases[6].get("name").unwrap().as_str().unwrap(),
+            "daemon/reload-under-fire"
+        );
         // and the schedule was not vacuous
         let fired = v.get("fired").unwrap();
         let total: f64 = FaultSite::ALL
@@ -517,6 +725,8 @@ mod tests {
             .map(|s| fired.get(s.name()).unwrap().as_f64().unwrap())
             .sum();
         assert!(total > 0.0);
+        // the daemon-layer reload fault fired exactly its budget
+        assert_eq!(fired.get("policy-reload").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]
@@ -524,7 +734,10 @@ mod tests {
         // the sequential mixes must reproduce exactly per seed. (The
         // batch mix is excluded: under PA_THREADS > 1 its workers race
         // for fault sequence numbers, so which request draws a fault —
-        // and hence the tally — legitimately varies run to run.)
+        // and hence the tally — legitimately varies run to run. The
+        // daemon mix is excluded for the same reason: its admin and
+        // hammer connections race for the online learner's exploration
+        // RNG, so which solve explores varies with interleaving.)
         let opts = ChaosOpts { requests: 4, quiet: true, ..ChaosOpts::tiny() };
         let a = run_chaos(&opts).unwrap();
         let b = run_chaos(&opts).unwrap();

@@ -14,6 +14,7 @@
 //! | `sparse/fresh-A`    | a distinct CSR A per request     | all misses |
 //! | `sparse/repeated-A/cg-ir` | one CSR A, explicit CG-IR  | hits; matvec-only, no feature LU |
 //! | `batch/dense/repeated-A`  | `solve_batch` over the repeated mix | hits; `PA_THREADS` workers |
+//! | `daemon/dense/repeated-A` | the repeated mix through a live [`crate::serve::Daemon`] over TCP | hits; full wire path |
 //!
 //! Sequential mixes report per-request p50/p99/mean latency and
 //! solves/sec; the batch mix reports wall-clock throughput (per-request
@@ -265,6 +266,78 @@ pub fn run_serve_bench(opts: &ServeBenchOpts) -> Result<Value> {
         ]));
     }
 
+    // --- the repeated dense mix through a resident daemon: measures the
+    // full wire path (JSON encode → TCP → parse → solve → respond) on one
+    // sequential connection; learning is off so the mix times serving,
+    // not exploration
+    {
+        use crate::serve::{protocol, Client, Daemon, ServeOpts};
+        let policy = crate::bandit::TrainedPolicy {
+            qtable: crate::bandit::QTable::new(
+                1,
+                crate::bandit::action::ActionSpace::reduced_top_k(9),
+            ),
+            discretizer: crate::features::Discretizer {
+                kappa: crate::features::Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+                norm: crate::features::Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                delta_c: 1e-30,
+                delta_n: 1e-30,
+            },
+        };
+        let dir = std::env::temp_dir().join(format!("pa_serve_bench_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let serve_opts = ServeOpts {
+            snapshot_dir: dir.to_string_lossy().to_string(),
+            learn: false,
+            quiet: true,
+            ..ServeOpts::default()
+        };
+        let daemon =
+            Daemon::start(policy, crate::util::config::Config::default(), serve_opts)?;
+        let mut client = Client::connect(daemon.addr())?;
+        let (wa, wb) = &repeated_dense[0];
+        let warm = client.call(&protocol::solve_request_json(None, wa, wb))?;
+        ensure!(warm.get("ok")?.as_bool()?, "daemon warmup failed: {warm:?}");
+        let mut lat_ns: Vec<f64> = Vec::with_capacity(repeated_dense.len());
+        let t_total = Instant::now();
+        for (i, (a, b)) in repeated_dense.iter().enumerate() {
+            let t0 = Instant::now();
+            let resp = client.call(&protocol::solve_request_json(Some(i as u64), a, b))?;
+            lat_ns.push(t0.elapsed().as_nanos() as f64);
+            ensure!(resp.get("ok")?.as_bool()?, "daemon solve failed: {resp:?}");
+        }
+        let total_s = t_total.elapsed().as_secs_f64();
+        let stats = client.call(&protocol::admin_request("stats", vec![]))?;
+        let cache_hits = stats.get("cache")?.get("hits")?.as_f64()?;
+        drop(client);
+        daemon.join();
+        let _ = std::fs::remove_dir_all(&dir);
+        lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n_req = repeated_dense.len();
+        let mean_ns = lat_ns.iter().sum::<f64>() / n_req as f64;
+        let p50 = percentile(&lat_ns, 0.50);
+        let p99 = percentile(&lat_ns, 0.99);
+        let sps = n_req as f64 / total_s;
+        if !opts.quiet {
+            println!(
+                "{:<28} {:>7.1} solves/s   p50 {:>10}   p99 {:>10}   (over TCP)",
+                "daemon/dense/repeated-A",
+                sps,
+                fmt_ns(p50),
+                fmt_ns(p99)
+            );
+        }
+        cases.push(json::obj(vec![
+            ("name", json::s("daemon/dense/repeated-A")),
+            ("requests", json::num(n_req as f64)),
+            ("solves_per_sec", json::num(sps)),
+            ("p50_ns", json::num(p50)),
+            ("p99_ns", json::num(p99)),
+            ("mean_ns", json::num(mean_ns)),
+            ("cache_hits", json::num(cache_hits)),
+        ]));
+    }
+
     Ok(json::obj(vec![
         ("suite", json::s("serve")),
         ("threads", json::num(num_threads() as f64)),
@@ -273,6 +346,78 @@ pub fn run_serve_bench(opts: &ServeBenchOpts) -> Result<Value> {
         ("n_sparse", json::num(opts.n_sparse as f64)),
         ("cases", Value::Arr(cases)),
     ]))
+}
+
+/// Outcome of gating a fresh serve-bench report against a committed
+/// baseline (`BENCH_serve.json`).
+#[derive(Debug)]
+pub struct GateOutcome {
+    /// Human-readable regressions (empty = pass).
+    pub violations: Vec<String>,
+    /// The baseline is marked `"provisional": true` — committed before
+    /// real hardware numbers existed. Violations are then advisory:
+    /// print them, don't fail CI.
+    pub provisional: bool,
+}
+
+impl GateOutcome {
+    /// Whether the caller should fail (violations against a real,
+    /// non-provisional baseline).
+    pub fn should_fail(&self) -> bool {
+        !self.provisional && !self.violations.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline`: every baseline case must still
+/// exist, keep `solves_per_sec` within `tolerance` (fractional drop) and
+/// `p99_ns` within `tolerance` (fractional rise). Throughput on shared
+/// CI runners is noisy — tolerances of 0.3–0.5 are realistic.
+pub fn gate_report(current: &Value, baseline: &Value, tolerance: f64) -> Result<GateOutcome> {
+    let provisional = baseline
+        .get("provisional")
+        .ok()
+        .map(|v| matches!(v, Value::Bool(true)))
+        .unwrap_or(false);
+    let current_by_name = |name: &str| -> Option<&Value> {
+        current
+            .get("cases")
+            .ok()?
+            .as_arr()
+            .ok()?
+            .iter()
+            .find(|c| c.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref() == Some(name))
+    };
+    let mut violations = Vec::new();
+    for base_case in baseline.get("cases")?.as_arr()? {
+        let name = base_case.get("name")?.as_str()?;
+        let Some(cur) = current_by_name(name) else {
+            violations.push(format!("{name}: present in baseline but missing from this run"));
+            continue;
+        };
+        let base_sps = base_case.get("solves_per_sec")?.as_f64()?;
+        let cur_sps = cur.get("solves_per_sec")?.as_f64()?;
+        let sps_floor = base_sps * (1.0 - tolerance);
+        if cur_sps < sps_floor {
+            violations.push(format!(
+                "{name}: solves/sec {cur_sps:.1} fell below {sps_floor:.1} \
+                 (baseline {base_sps:.1}, tolerance {tolerance})"
+            ));
+        }
+        // p99 only exists for the sequential mixes
+        if let (Ok(base_p99), Some(Ok(cur_p99))) = (
+            base_case.get("p99_ns").and_then(|v| v.as_f64()),
+            cur.get("p99_ns").ok().map(|v| v.as_f64()),
+        ) {
+            let p99_ceil = base_p99 * (1.0 + tolerance);
+            if cur_p99 > p99_ceil {
+                violations.push(format!(
+                    "{name}: p99 {cur_p99:.0} ns rose above {p99_ceil:.0} ns \
+                     (baseline {base_p99:.0} ns, tolerance {tolerance})"
+                ));
+            }
+        }
+    }
+    Ok(GateOutcome { violations, provisional })
 }
 
 #[cfg(test)]
@@ -286,7 +431,7 @@ mod tests {
         let v = run_serve_bench(&opts).unwrap();
         assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "serve");
         let cases = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(cases.len(), 6);
+        assert_eq!(cases.len(), 7);
         for c in cases {
             let sps = c.get("solves_per_sec").unwrap().as_f64().unwrap();
             assert!(sps > 0.0, "{c:?}");
@@ -297,5 +442,56 @@ mod tests {
         assert!(rep.get("cache_hits").unwrap().as_f64().unwrap() >= 2.0);
         let fresh = &cases[1];
         assert_eq!(fresh.get("cache_hits").unwrap().as_f64().unwrap(), 0.0);
+        // the daemon mix serves over real TCP and still hits the cache
+        let daemon = &cases[6];
+        assert_eq!(daemon.get("name").unwrap().as_str().unwrap(), "daemon/dense/repeated-A");
+        assert!(daemon.get("cache_hits").unwrap().as_f64().unwrap() >= 2.0);
+    }
+
+    fn report(cases: Vec<Value>, provisional: bool) -> Value {
+        let mut fields = vec![("suite", json::s("serve")), ("cases", Value::Arr(cases))];
+        if provisional {
+            fields.push(("provisional", Value::Bool(true)));
+        }
+        json::obj(fields)
+    }
+
+    fn case(name: &str, sps: f64, p99: f64) -> Value {
+        json::obj(vec![
+            ("name", json::s(name)),
+            ("solves_per_sec", json::num(sps)),
+            ("p99_ns", json::num(p99)),
+        ])
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_on_regressions() {
+        let baseline = report(vec![case("m1", 100.0, 1000.0), case("m2", 50.0, 2000.0)], false);
+        // within 30% tolerance on both axes
+        let ok = report(vec![case("m1", 80.0, 1200.0), case("m2", 60.0, 1500.0)], false);
+        let g = gate_report(&ok, &baseline, 0.30).unwrap();
+        assert!(g.violations.is_empty(), "{:?}", g.violations);
+        assert!(!g.should_fail());
+        // throughput collapse on m1, latency blowup on m2
+        let bad = report(vec![case("m1", 40.0, 1000.0), case("m2", 50.0, 5000.0)], false);
+        let g = gate_report(&bad, &baseline, 0.30).unwrap();
+        assert_eq!(g.violations.len(), 2, "{:?}", g.violations);
+        assert!(g.violations[0].contains("m1"), "{:?}", g.violations);
+        assert!(g.violations[1].contains("p99"), "{:?}", g.violations);
+        assert!(g.should_fail());
+        // a dropped mix is a violation too
+        let missing = report(vec![case("m1", 100.0, 1000.0)], false);
+        let g = gate_report(&missing, &baseline, 0.30).unwrap();
+        assert!(g.violations.iter().any(|v| v.contains("missing")), "{:?}", g.violations);
+    }
+
+    #[test]
+    fn provisional_baseline_warns_but_never_fails() {
+        let baseline = report(vec![case("m1", 1e9, 1.0)], true);
+        let hopeless = report(vec![case("m1", 1.0, 1e9)], false);
+        let g = gate_report(&hopeless, &baseline, 0.30).unwrap();
+        assert!(!g.violations.is_empty());
+        assert!(g.provisional);
+        assert!(!g.should_fail(), "provisional baselines must be advisory");
     }
 }

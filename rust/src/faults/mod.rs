@@ -43,10 +43,17 @@ pub enum FaultSite {
     Residual,
     /// Panic inside the per-request worker (exercises `solve_batch`).
     WorkerPanic,
+    /// Fail the daemon's atomic policy-snapshot write (`serve::snapshot`).
+    /// Daemon-layer site: no hook inside `Autotuner::solve_ref`.
+    SnapshotWrite,
+    /// Corrupt the policy bytes read back at daemon hot-reload time
+    /// (`serve::daemon`) — the reload must reject loudly and keep serving
+    /// on the old policy. Daemon-layer site: no solve-path hook.
+    PolicyReload,
 }
 
 /// Number of distinct fault sites (array sizes in `FaultPlan`).
-pub const N_SITES: usize = 8;
+pub const N_SITES: usize = 10;
 
 impl FaultSite {
     /// Every site, in declaration order (index == `site as usize`).
@@ -59,7 +66,16 @@ impl FaultSite {
         FaultSite::InnerStall,
         FaultSite::Residual,
         FaultSite::WorkerPanic,
+        FaultSite::SnapshotWrite,
+        FaultSite::PolicyReload,
     ];
+
+    /// Sites whose hooks live in the serving daemon rather than inside
+    /// the solve path — `solve_ref` never consults them, so solve-level
+    /// chaos sweeps over [`FaultSite::ALL`] skip these.
+    pub fn is_daemon_site(self) -> bool {
+        matches!(self, FaultSite::SnapshotWrite | FaultSite::PolicyReload)
+    }
 
     /// Stable kebab-case name (CLI flags, JSON reports).
     pub fn name(self) -> &'static str {
@@ -72,6 +88,8 @@ impl FaultSite {
             FaultSite::InnerStall => "inner-stall",
             FaultSite::Residual => "residual",
             FaultSite::WorkerPanic => "worker-panic",
+            FaultSite::SnapshotWrite => "snapshot-write",
+            FaultSite::PolicyReload => "policy-reload",
         }
     }
 

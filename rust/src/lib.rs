@@ -52,6 +52,7 @@ pub mod features;
 pub mod gen;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod sparse;
 pub mod system;

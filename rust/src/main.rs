@@ -8,6 +8,9 @@
 //!             (--solver auto|lu-ir|cg-ir picks the refinement family)
 //!   head2head LU-IR vs CG-IR suite on the sparse SPD workload (JSON out)
 //!   serve-bench serving-throughput mixes → BENCH_serve.json
+//!   serve     resident serving daemon: online Q-learning, atomic policy
+//!             snapshots, hot-reload, shadow promotion (DESIGN.md §2g)
+//!   serve-ctl client for a running daemon (ping/stats/reload/promote/...)
 //!   repro     regenerate a paper table/figure (table2..6, fig2..4,
 //!             figs5_12, actions, all)
 //!   selftest  quick end-to-end sanity run (native + PJRT if artifacts;
@@ -74,8 +77,26 @@ SUBCOMMANDS:
                 solves/sec and p50/p99 latency (EXPERIMENTS.md §Serve)
                 --out BENCH_serve.json  --requests N
                 --n <dense size>  --n-sparse <sparse size>
+                --gate BENCH_serve.json  fail on solves/sec or p99
+                  regressions vs the committed baseline
+                  (--gate-tolerance 0.5; provisional baselines warn only)
                 --chaos also run the fault-injection suite afterwards
                   (--chaos-out CHAOS_serve.json, --chaos-seed N)
+  serve       resident serving daemon (newline-delimited JSON over TCP;
+                DESIGN.md §2g): online Q-learning on live traffic,
+                atomic versioned policy snapshots, zero-downtime
+                hot-reload, and a shadow-promotion pipeline
+                --policy results/policy.json  --addr 127.0.0.1:7747
+                --snapshot-dir serve-snapshots  --no-learn
+                --epsilon 0.05  --alpha 0  (0 = 1/N(s,a) schedule)
+                --drain-every 16  --snapshot-every 0  --shadow-every 4
+                --fault-rate p --fault-seed N  (chaos hooks; tests only)
+                runs until a `shutdown` request arrives on the socket
+  serve-ctl   one-shot client for a running daemon
+                <ping|stats|snapshot|reload|shadow-load|shadow-status|
+                 promote|shutdown>   --addr 127.0.0.1:7747
+                --path policy.json   (reload / shadow-load)
+                --force              (promote past the win-rate gate)
   chaos       fault-injection suite: the serving mixes under a seeded
                 fault schedule, asserting no panic / no hang / typed
                 outcomes / bit-identical FP64 fallback
@@ -520,6 +541,38 @@ fn run() -> Result<()> {
             let report = run_serve_bench(&opts)?;
             write_json_report(out, &report)?;
             println!("serve bench JSON written to {out}");
+            // --gate <baseline>: regression gate against a committed
+            // BENCH_serve.json; a baseline marked provisional warns only
+            if let Some(baseline_path) = args.get("gate") {
+                use precision_autotune::coordinator::serve_bench::gate_report;
+                use precision_autotune::util::json;
+                let text = std::fs::read_to_string(baseline_path)
+                    .with_context(|| format!("reading baseline {baseline_path}"))?;
+                let baseline = json::parse(&text)
+                    .with_context(|| format!("parsing baseline {baseline_path}"))?;
+                let tol = args.get_f64("gate-tolerance")?.unwrap_or(0.5);
+                let gate = gate_report(&report, &baseline, tol)?;
+                for v in &gate.violations {
+                    eprintln!(
+                        "[gate]{} {v}",
+                        if gate.provisional { " (provisional baseline — warning only)" } else { "" }
+                    );
+                }
+                if gate.should_fail() {
+                    bail!(
+                        "{} serve-bench regression(s) vs {baseline_path} (tolerance {tol})",
+                        gate.violations.len()
+                    );
+                }
+                println!(
+                    "gate vs {baseline_path}: {}",
+                    if gate.violations.is_empty() {
+                        "pass".to_string()
+                    } else {
+                        format!("{} warning(s), baseline provisional", gate.violations.len())
+                    }
+                );
+            }
             // --chaos: the same workload scale, re-run under the seeded
             // fault schedule (EXPERIMENTS.md §Chaos); a violated chaos
             // invariant fails the whole serve-bench invocation.
@@ -538,6 +591,106 @@ fn run() -> Result<()> {
                 let chaos_report = run_chaos(&copts)?;
                 write_json_report(chaos_out, &chaos_report)?;
                 println!("chaos report JSON written to {chaos_out}");
+            }
+            Ok(())
+        }
+        Some("serve") => {
+            use precision_autotune::faults::FaultPlan;
+            use precision_autotune::serve::{Daemon, OnlineOpts, ServeOpts, ShadowOpts};
+            let cfg = Config::from_args(&args)?;
+            let path = args
+                .get("policy")
+                .ok_or_else(|| anyhow!("--policy <file> required (train one first)"))?;
+            let policy = TrainedPolicy::load(path)?;
+            // validate the backend choice eagerly — the daemon rebuilds
+            // through its factory on every policy swap
+            let backend_kind = args.get("backend").unwrap_or("native").to_string();
+            drop(make_backend(&backend_kind, &cfg)?);
+            let online = OnlineOpts {
+                alpha: args.get_f64("alpha")?.unwrap_or(0.0),
+                epsilon: args.get_f64("epsilon")?.unwrap_or(0.05),
+                ..OnlineOpts::default()
+            };
+            let shadow = ShadowOpts {
+                every: args.get_usize("shadow-every")?.map(|v| v as u64).unwrap_or(4),
+                ..ShadowOpts::default()
+            };
+            let fault_plan = args.get_f64("fault-rate")?.map(|rate| {
+                FaultPlan::uniform(
+                    args.get_usize("fault-seed").ok().flatten().map(|s| s as u64).unwrap_or(7),
+                    rate,
+                )
+            });
+            let opts = ServeOpts {
+                addr: args.get("addr").unwrap_or("127.0.0.1:7747").to_string(),
+                snapshot_dir: args.get("snapshot-dir").unwrap_or("serve-snapshots").to_string(),
+                learn: !args.flag("no-learn"),
+                online,
+                shadow,
+                drain_every: args.get_usize("drain-every")?.map(|v| v as u64).unwrap_or(16),
+                snapshot_every: args.get_usize("snapshot-every")?.map(|v| v as u64).unwrap_or(0),
+                fault_plan,
+                quiet,
+            };
+            let artifacts_dir = cfg.artifacts_dir.clone();
+            let daemon = match backend_kind.as_str() {
+                "native" => Daemon::start(policy, cfg, opts)?,
+                // a failed PJRT reopen at swap time surfaces as a contained
+                // per-request panic response; the old policy keeps serving
+                "pjrt" => Daemon::start_with_factory(
+                    policy,
+                    cfg,
+                    opts,
+                    Box::new(move || {
+                        Box::new(
+                            PjrtBackend::open(&artifacts_dir).expect("reopening PJRT artifacts"),
+                        )
+                    }),
+                )?,
+                other => bail!("unknown backend {other:?} (native|pjrt)"),
+            };
+            daemon.join(); // blocks until a `shutdown` request arrives
+            println!("pallas-serve stopped");
+            Ok(())
+        }
+        Some("serve-ctl") => {
+            use precision_autotune::serve::protocol::admin_request;
+            use precision_autotune::serve::Client;
+            use precision_autotune::util::json::{self, Value};
+            let op = args.positional.first().map(|s| s.as_str()).ok_or_else(|| {
+                anyhow!(
+                    "serve-ctl requires an operation: ping|stats|snapshot|reload|\
+                     shadow-load|shadow-status|promote|shutdown"
+                )
+            })?;
+            let addr = args.get("addr").unwrap_or("127.0.0.1:7747");
+            let mut extra: Vec<(&str, Value)> = Vec::new();
+            match op {
+                "reload" => {
+                    if let Some(p) = args.get("path") {
+                        extra.push(("path", json::s(p)));
+                    }
+                }
+                "shadow-load" => {
+                    let p = args
+                        .get("path")
+                        .ok_or_else(|| anyhow!("shadow-load requires --path <policy.json>"))?;
+                    extra.push(("path", json::s(p)));
+                }
+                "promote" => {
+                    if args.flag("force") {
+                        extra.push(("force", Value::Bool(true)));
+                    }
+                }
+                "ping" | "stats" | "snapshot" | "shadow-status" | "shutdown" => {}
+                other => bail!("unknown serve-ctl operation {other:?}"),
+            }
+            let mut client = Client::connect(addr)?;
+            let resp = client.call(&admin_request(op, extra))?;
+            println!("{}", resp.to_string());
+            let ok = resp.get("ok").ok().map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false);
+            if !ok {
+                bail!("daemon rejected {op:?} (see response above)");
             }
             Ok(())
         }

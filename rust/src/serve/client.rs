@@ -1,0 +1,49 @@
+//! Minimal blocking client for the daemon's line protocol.
+//!
+//! One TCP connection, synchronous request/response: write a JSON line,
+//! read a JSON line. Used by the `serve-ctl` CLI, the `serve-bench`
+//! daemon mix, and the integration tests — anything that wants to talk
+//! to a running daemon without hand-rolling socket plumbing.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// A connected daemon client. Each [`Client::call`] is one round-trip;
+/// requests on one client are strictly sequential.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to daemon")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning daemon stream")?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request object, return the parsed response object.
+    pub fn call(&mut self, request: &Value) -> Result<Value> {
+        self.call_line(&request.to_string())
+    }
+
+    /// Send one raw request line (no trailing newline), return the
+    /// parsed response. Lets tests exercise malformed payloads.
+    pub fn call_line(&mut self, line: &str) -> Result<Value> {
+        self.stream
+            .write_all(line.as_bytes())
+            .and_then(|()| self.stream.write_all(b"\n"))
+            .and_then(|()| self.stream.flush())
+            .context("writing request")?;
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response).context("reading response")?;
+        if n == 0 {
+            bail!("daemon closed the connection without responding");
+        }
+        json::parse(response.trim_end()).context("response is not valid JSON")
+    }
+}

@@ -1,0 +1,771 @@
+//! The resident serving daemon.
+//!
+//! Plain `std::net` TCP, one worker thread per connection, newline-
+//! delimited JSON (see [`super::protocol`]). Three pieces of shared
+//! state, with a strict lock order to keep the hot path deadlock-free:
+//!
+//! * `live: RwLock<Arc<Autotuner>>` — the serving facade. A request
+//!   clones the `Arc` under a brief read lock and solves entirely on its
+//!   clone, so a policy hot-swap (`reload` / `promote`) replaces the
+//!   `Arc` under the write lock without waiting for in-flight solves:
+//!   they finish on the old policy, later requests see the new one, and
+//!   zero requests fail across the swap.
+//! * `learner: Mutex<OnlineLearner>` — the online Q-copy + bounded
+//!   update queue ([`super::online`]). The solve path takes this lock
+//!   only for O(1) bookkeeping (select / observe / checkpoint drain).
+//! * `shadow: Mutex<Option<ShadowScorer>>` — the candidate arm.
+//!
+//! **Lock order:** `shadow` may take `learner` (reward scoring); nothing
+//! holding `learner` may take `shadow` (the stats endpoint drops its
+//! learner guard before reading the shadow scoreboard).
+//!
+//! Rebuilding the tuner on a policy swap starts a fresh session cache —
+//! repeated-A traffic re-warms within a few requests; that transient is
+//! the price of an immutable serving facade (no in-place policy
+//! mutation, no torn reads).
+//!
+//! The daemon owns its own [`FaultInjector`] for the daemon-layer chaos
+//! sites ([`FaultSite::SnapshotWrite`], [`FaultSite::PolicyReload`]) —
+//! those fire on connection threads, outside the tuner's ambient solve
+//! scope. The same plan is also armed on every tuner it builds, so the
+//! solver-stack sites keep firing through reloads (their counters reset
+//! with the rebuilt injector).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context as _, Result};
+
+use crate::api::Autotuner;
+use crate::backend_native::NativeBackend;
+use crate::bandit::action::Action;
+use crate::bandit::TrainedPolicy;
+use crate::faults::{self, FaultInjector, FaultPlan, FaultSite};
+use crate::solver::SolverBackend;
+use crate::util::config::Config;
+use crate::util::json::{self, Value};
+
+use super::online::{OnlineLearner, OnlineOpts};
+use super::protocol::{
+    self, error_response, ok_response, parse_request, Request, SolveRequest,
+};
+use super::shadow::{ShadowOpts, ShadowScorer, ShadowVerdict};
+use super::snapshot::PolicySnapshotter;
+use super::stats::ServeStats;
+
+/// Builds the solver backend for each tuner the daemon assembles (one at
+/// boot, one per policy swap). A factory rather than an instance so
+/// hot-reload never has to move a live backend between facades.
+pub type BackendFactory = Box<dyn Fn() -> Box<dyn SolverBackend> + Send + Sync>;
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Directory for versioned policy snapshots.
+    pub snapshot_dir: String,
+    /// Learn online from served traffic (ε-greedy over the online table);
+    /// false serves the frozen policy greedily.
+    pub learn: bool,
+    pub online: OnlineOpts,
+    pub shadow: ShadowOpts,
+    /// Drain the learner's update queue every N observations (0 = only
+    /// at snapshots/explicit checkpoints).
+    pub drain_every: u64,
+    /// Auto-snapshot the online policy every N observations (0 = only on
+    /// explicit `snapshot` requests).
+    pub snapshot_every: u64,
+    /// Chaos plan armed on the daemon (snapshot/reload sites) and on
+    /// every tuner it builds (solver-stack sites). Never in production.
+    pub fault_plan: Option<FaultPlan>,
+    /// Suppress the startup line on stdout.
+    pub quiet: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            addr: "127.0.0.1:0".to_string(),
+            snapshot_dir: "serve-snapshots".to_string(),
+            learn: true,
+            online: OnlineOpts::default(),
+            shadow: ShadowOpts::default(),
+            drain_every: 16,
+            snapshot_every: 0,
+            fault_plan: None,
+            quiet: false,
+        }
+    }
+}
+
+/// Everything the connection threads share.
+struct DaemonState {
+    addr: SocketAddr,
+    cfg: Config,
+    opts: ServeOpts,
+    factory: BackendFactory,
+    live: RwLock<Arc<Autotuner>>,
+    learner: Mutex<OnlineLearner>,
+    shadow: Mutex<Option<ShadowScorer>>,
+    snapshotter: PolicySnapshotter,
+    stats: ServeStats,
+    /// Live-policy generation: 1 at boot, +1 per successful swap.
+    version: AtomicU64,
+    shutdown: AtomicBool,
+    /// Daemon-layer injector (snapshot/reload sites fire outside the
+    /// tuner's ambient solve scope).
+    faults: Option<Arc<FaultInjector>>,
+}
+
+impl DaemonState {
+    /// Run `f` with the daemon's chaos injector ambient (no-op when
+    /// no plan is armed).
+    fn with_faults<T>(&self, f: impl FnOnce() -> T) -> T {
+        match &self.faults {
+            Some(inj) => faults::with_ambient(inj, f),
+            None => f(),
+        }
+    }
+
+    /// Assemble a fresh serving facade for `policy`.
+    fn build_tuner(&self, policy: &TrainedPolicy) -> Result<Autotuner> {
+        let mut b = Autotuner::builder()
+            .boxed_backend((self.factory)())
+            .policy(policy.clone())
+            .config(self.cfg.clone());
+        if let Some(plan) = &self.opts.fault_plan {
+            b = b.fault_plan(plan.clone());
+        }
+        b.build()
+    }
+}
+
+/// A running daemon: handle for the accept thread + shared state.
+pub struct Daemon {
+    addr: SocketAddr,
+    state: Arc<DaemonState>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Start serving `policy` with the default native backend.
+    pub fn start(policy: TrainedPolicy, cfg: Config, opts: ServeOpts) -> Result<Daemon> {
+        Daemon::start_with_factory(policy, cfg, opts, Box::new(|| Box::new(NativeBackend::new())))
+    }
+
+    /// Start serving with a custom backend factory (called once now and
+    /// once per policy swap).
+    pub fn start_with_factory(
+        policy: TrainedPolicy,
+        cfg: Config,
+        opts: ServeOpts,
+        factory: BackendFactory,
+    ) -> Result<Daemon> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let injector = opts
+            .fault_plan
+            .as_ref()
+            .map(|plan| Arc::new(FaultInjector::new(plan.clone())));
+        let learner = OnlineLearner::new(&policy, &cfg, opts.online);
+        let snapshotter = PolicySnapshotter::new(&opts.snapshot_dir);
+        let state = Arc::new(DaemonState {
+            addr,
+            cfg: cfg.clone(),
+            opts,
+            factory,
+            live: RwLock::new(Arc::new(Autotuner::builder().build()?)), // placeholder
+            learner: Mutex::new(learner),
+            shadow: Mutex::new(None),
+            snapshotter,
+            stats: ServeStats::default(),
+            version: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            faults: injector,
+        });
+        // real boot tuner (needs `state.factory`, hence the placeholder)
+        *state.live.write().unwrap() = Arc::new(state.build_tuner(&policy)?);
+        // boot snapshot so `reload` (no path) works from the start
+        match state.with_faults(|| state.snapshotter.snapshot(&policy)) {
+            Ok(_) => {
+                state.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                state.stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if !state.opts.quiet {
+            println!("pallas-serve listening on {addr}");
+        }
+        let accept_state = state.clone();
+        let accept = thread::Builder::new()
+            .name("pallas-serve-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_state))
+            .context("spawning accept thread")?;
+        Ok(Daemon { addr, state, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current live-policy generation (1 = boot policy).
+    pub fn version(&self) -> u64 {
+        self.state.version.load(Ordering::SeqCst)
+    }
+
+    /// The full `stats` payload, as served over the socket.
+    pub fn stats_json(&self) -> Value {
+        stats_value(&self.state)
+    }
+
+    /// The daemon-layer chaos injector, when a plan is armed (test
+    /// telemetry: snapshot/reload attempt and fire counts).
+    pub fn injector(&self) -> Option<Arc<FaultInjector>> {
+        self.state.faults.clone()
+    }
+
+    /// Ask the daemon to stop accepting and wind down workers.
+    pub fn stop(&self) {
+        request_shutdown(&self.state);
+    }
+
+    /// Stop and wait for the accept thread (and its workers) to finish.
+    pub fn join(mut self) {
+        self.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn request_shutdown(state: &DaemonState) {
+    if !state.shutdown.swap(true, Ordering::SeqCst) {
+        // unblock the accept loop; the connection is discarded there
+        let _ = TcpStream::connect(state.addr);
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<DaemonState>) {
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let st = state.clone();
+            if let Ok(h) = thread::Builder::new()
+                .name("pallas-serve-conn".to_string())
+                .spawn(move || handle_connection(stream, st))
+            {
+                workers.push(h);
+            }
+        }
+        workers.retain(|h| !h.is_finished());
+    }
+    for h in workers {
+        let _ = h.join();
+    }
+}
+
+/// One connection: accumulate bytes, serve complete lines, respond in
+/// order. Reads run under a short timeout so the worker notices a
+/// shutdown even while a client sits idle (the partial-line buffer
+/// survives timeouts — nothing is lost on a slow writer). Panics in the
+/// handler are contained to an error response on this connection.
+fn handle_connection(stream: TcpStream, state: Arc<DaemonState>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let resp = match catch_unwind(AssertUnwindSafe(|| handle_line(line, &state))) {
+                Ok(v) => v,
+                Err(_) => error_response(
+                    "request",
+                    None,
+                    &anyhow!("request handler panicked; connection still serving"),
+                ),
+            };
+            let write = writer
+                .write_all(resp.to_string().as_bytes())
+                .and_then(|()| writer.write_all(b"\n"))
+                .and_then(|()| writer.flush());
+            if write.is_err() {
+                return;
+            }
+        }
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_line(line: &str, state: &DaemonState) -> Value {
+    state.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            state.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            return error_response("request", None, &e);
+        }
+    };
+    match req {
+        Request::Ping => ok_response(
+            "ping",
+            vec![("policy_version", json::num(state.version.load(Ordering::SeqCst) as f64))],
+        ),
+        Request::Stats => stats_value(state),
+        Request::Snapshot => handle_snapshot(state),
+        Request::Shutdown => {
+            request_shutdown(state);
+            ok_response("shutdown", vec![])
+        }
+        Request::ShadowStatus => {
+            let guard = state.shadow.lock().unwrap();
+            let shadow = match guard.as_ref() {
+                Some(s) => s.to_json(),
+                None => Value::Null,
+            };
+            ok_response("shadow-status", vec![("shadow", shadow)])
+        }
+        Request::Solve(req) => handle_solve(&req, state),
+        Request::Reload { path } => handle_reload(state, path),
+        Request::ShadowLoad { path } => handle_shadow_load(state, &path),
+        Request::Promote { force } => handle_promote(state, force),
+    }
+}
+
+fn handle_solve(req: &SolveRequest, state: &DaemonState) -> Value {
+    // clone the facade under a brief read lock: the solve runs entirely
+    // on this clone, so a concurrent hot-swap never touches it
+    let (tuner, version) = {
+        let guard = state.live.read().unwrap();
+        (guard.clone(), state.version.load(Ordering::SeqCst))
+    };
+    let outcome = if state.opts.learn {
+        solve_learning(state, &tuner, req)
+    } else {
+        tuner.solve_ref(&req.system, &req.b).map(|rep| (rep, false, false))
+    };
+    match outcome {
+        Ok((rep, explored, fallback)) => {
+            state.stats.solves_ok.fetch_add(1, Ordering::Relaxed);
+            if rep.degradation.is_some() {
+                state.stats.degraded.fetch_add(1, Ordering::Relaxed);
+            }
+            state.stats.record_family(rep.solver, !rep.failed);
+            let shadow_scored = maybe_shadow(state, &tuner, req, &rep);
+            checkpoint(state);
+            protocol::solve_response(req.id, &rep, version, explored, fallback, shadow_scored)
+        }
+        Err(e) => {
+            state.stats.solve_errors.fetch_add(1, Ordering::Relaxed);
+            error_response("solve", req.id, &e)
+        }
+    }
+}
+
+/// The learning serve path: features once, ε-greedy pick over the online
+/// table, forced solve, observe. A failed pick still teaches the table
+/// (that is the point) but the *client* gets a forced-FP64 rescue — live
+/// traffic explores without serving garbage.
+fn solve_learning(
+    state: &DaemonState,
+    tuner: &Autotuner,
+    req: &SolveRequest,
+) -> Result<(crate::api::SolveReport, bool, bool)> {
+    let (_frozen, kappa, norm_inf) = tuner.select_action(&req.system)?;
+    let (action, explored) = state.learner.lock().unwrap().select(kappa, norm_inf);
+    if explored {
+        state.stats.explored.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut rep = tuner.solve_with_action(&req.system, &req.b, action)?;
+    if !rep.kappa_est.is_finite() {
+        // forced solves may skip the feature pass; the response and the
+        // shadow arm should still see the real estimate
+        rep.kappa_est = kappa;
+    }
+    state.learner.lock().unwrap().observe_with(kappa, norm_inf, &rep);
+    if rep.failed {
+        let mut rescue = tuner.solve_with_action(&req.system, &req.b, Action::FP64)?;
+        if !rescue.kappa_est.is_finite() {
+            rescue.kappa_est = kappa;
+        }
+        state.stats.fallback_rescues.fetch_add(1, Ordering::Relaxed);
+        return Ok((rescue, explored, true));
+    }
+    Ok((rep, explored, false))
+}
+
+/// Shadow-score every Nth request: what would the candidate have done,
+/// and would it have earned more reward? Lock order: holds `shadow`,
+/// takes `learner` (the allowed edge).
+fn maybe_shadow(
+    state: &DaemonState,
+    tuner: &Autotuner,
+    req: &SolveRequest,
+    rep: &crate::api::SolveReport,
+) -> bool {
+    let mut guard = state.shadow.lock().unwrap();
+    let Some(scorer) = guard.as_mut() else {
+        return false;
+    };
+    if !scorer.tick() {
+        return false;
+    }
+    let cand = scorer.select(rep.kappa_est, rep.norm_inf);
+    let live_r = state.learner.lock().unwrap().reward_of(rep);
+    let shadow_r = if cand == rep.action {
+        live_r
+    } else {
+        match tuner.solve_with_action(&req.system, &req.b, cand) {
+            Ok(mut srep) => {
+                if !srep.kappa_est.is_finite() {
+                    // forced candidate solves may skip the feature pass;
+                    // score both picks at the live request's estimate so
+                    // the comparison is apples-to-apples
+                    srep.kappa_est = rep.kappa_est;
+                }
+                state.learner.lock().unwrap().reward_of(&srep)
+            }
+            Err(_) => state.cfg.fail_reward,
+        }
+    };
+    scorer.record(live_r, shadow_r);
+    state.stats.shadow_scored.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
+/// Deterministic learning checkpoint: drain the update queue every
+/// `drain_every` observations (arrival order → cadence-independent
+/// tables), optionally auto-snapshot every `snapshot_every`.
+fn checkpoint(state: &DaemonState) {
+    if !state.opts.learn {
+        return;
+    }
+    let snap_policy = {
+        let mut l = state.learner.lock().unwrap();
+        let seen = l.observed();
+        if state.opts.drain_every > 0 && seen > 0 && seen % state.opts.drain_every == 0 {
+            l.drain();
+        }
+        if state.opts.snapshot_every > 0 && seen > 0 && seen % state.opts.snapshot_every == 0 {
+            l.drain();
+            Some(l.policy())
+        } else {
+            None
+        }
+    };
+    if let Some(pol) = snap_policy {
+        match state.with_faults(|| state.snapshotter.snapshot(&pol)) {
+            Ok(_) => {
+                state.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                state.stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn handle_snapshot(state: &DaemonState) -> Value {
+    let policy = {
+        let mut l = state.learner.lock().unwrap();
+        l.drain();
+        l.policy()
+    };
+    match state.with_faults(|| state.snapshotter.snapshot(&policy)) {
+        Ok((version, path)) => {
+            state.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+            ok_response(
+                "snapshot",
+                vec![("path", json::s(&path)), ("snapshot_version", json::num(version as f64))],
+            )
+        }
+        Err(e) => {
+            state.stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+            error_response("snapshot", None, &e)
+        }
+    }
+}
+
+/// Truncate to roughly half, on a char boundary — what the injected
+/// [`FaultSite::PolicyReload`] fault does to the bytes read back.
+fn corrupt_text(text: &str) -> String {
+    let mut cut = text.len() / 2;
+    while cut > 0 && !text.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    text[..cut].to_string()
+}
+
+fn handle_reload(state: &DaemonState, path: Option<String>) -> Value {
+    let path = path.unwrap_or_else(|| state.snapshotter.latest_path());
+    match reload_policy(state, &path) {
+        Ok(version) => {
+            state.stats.reloads.fetch_add(1, Ordering::Relaxed);
+            ok_response(
+                "reload",
+                vec![("path", json::s(&path)), ("policy_version", json::num(version as f64))],
+            )
+        }
+        Err(e) => {
+            state.stats.reload_failures.fetch_add(1, Ordering::Relaxed);
+            let cur = state.version.load(Ordering::SeqCst);
+            let e = e.context(format!("reload rejected; still serving policy v{cur}"));
+            error_response("reload", None, &e)
+        }
+    }
+}
+
+fn reload_policy(state: &DaemonState, path: &str) -> Result<u64> {
+    let mut text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    state.with_faults(|| {
+        if faults::fire(FaultSite::PolicyReload).is_some() {
+            text = corrupt_text(&text);
+        }
+    });
+    let policy = TrainedPolicy::from_json(
+        &json::parse(&text).with_context(|| format!("parsing policy {path}"))?,
+    )
+    .with_context(|| format!("loading policy {path}"))?;
+    install_policy(state, &policy)
+}
+
+/// Swap the live facade to `policy`: build first (a bad policy rejects
+/// before anything changes), then replace the `Arc` under the write lock
+/// and re-anchor the online learner. Returns the new generation.
+fn install_policy(state: &DaemonState, policy: &TrainedPolicy) -> Result<u64> {
+    let tuner = state.build_tuner(policy)?;
+    *state.live.write().unwrap() = Arc::new(tuner);
+    let version = state.version.fetch_add(1, Ordering::SeqCst) + 1;
+    state.learner.lock().unwrap().set_policy(policy);
+    Ok(version)
+}
+
+fn handle_shadow_load(state: &DaemonState, path: &str) -> Value {
+    match TrainedPolicy::load(path) {
+        Ok(candidate) => {
+            let scorer = ShadowScorer::new(candidate, state.opts.shadow);
+            *state.shadow.lock().unwrap() = Some(scorer);
+            ok_response("shadow-load", vec![("path", json::s(path))])
+        }
+        Err(e) => error_response("shadow-load", None, &e),
+    }
+}
+
+fn handle_promote(state: &DaemonState, force: bool) -> Value {
+    let mut guard = state.shadow.lock().unwrap();
+    let Some(scorer) = guard.as_ref() else {
+        state.stats.promotes_rejected.fetch_add(1, Ordering::Relaxed);
+        return error_response("promote", None, &anyhow!("no shadow candidate loaded"));
+    };
+    let verdict = scorer.verdict();
+    let win_rate = scorer.win_rate();
+    let trials = scorer.trials();
+    if !force && verdict != ShadowVerdict::Promote {
+        state.stats.promotes_rejected.fetch_add(1, Ordering::Relaxed);
+        return error_response(
+            "promote",
+            None,
+            &anyhow!(
+                "candidate not ready: verdict {verdict} \
+                 (win-rate {win_rate:.3} over {trials} trials)"
+            ),
+        );
+    }
+    let candidate = scorer.candidate().clone();
+    match install_policy(state, &candidate) {
+        Ok(version) => {
+            *guard = None;
+            drop(guard);
+            state.stats.promotions.fetch_add(1, Ordering::Relaxed);
+            // best-effort snapshot of what is now live
+            match state.with_faults(|| state.snapshotter.snapshot(&candidate)) {
+                Ok(_) => {
+                    state.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    state.stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            ok_response(
+                "promote",
+                vec![
+                    ("forced", Value::Bool(force)),
+                    ("policy_version", json::num(version as f64)),
+                    ("trials", json::num(trials as f64)),
+                    ("win_rate", json::num(win_rate)),
+                ],
+            )
+        }
+        // candidate stays loaded in the shadow arm on failure
+        Err(e) => error_response("promote", None, &e),
+    }
+}
+
+/// The full introspection payload. Lock discipline: live read lock and
+/// learner lock are each taken and released separately; the learner
+/// guard is dropped *before* the shadow lock (see the module docs).
+fn stats_value(state: &DaemonState) -> Value {
+    let (backend, cache) = {
+        let guard = state.live.read().unwrap();
+        let c = guard.session_cache();
+        (
+            guard.backend_name(),
+            json::obj(vec![
+                ("capacity", json::num(c.capacity() as f64)),
+                ("hits", json::num(c.hits() as f64)),
+                ("len", json::num(c.len() as f64)),
+                ("misses", json::num(c.misses() as f64)),
+            ]),
+        )
+    };
+    let online = {
+        let l = state.learner.lock().unwrap();
+        json::obj(vec![
+            ("alpha", json::num(l.alpha())),
+            ("applied", json::num(l.applied() as f64)),
+            ("dropped", json::num(l.dropped() as f64)),
+            ("epsilon", json::num(l.epsilon())),
+            ("fingerprint", json::s(&format!("{:016x}", l.qtable().fingerprint()))),
+            ("mean_reward", json::num(l.mean_reward())),
+            ("observations", json::num(l.qtable().total_observations() as f64)),
+            ("observed", json::num(l.observed() as f64)),
+            ("queued", json::num(l.queue_len() as f64)),
+            ("recent_rewards", json::num_arr(&l.recent_rewards())),
+            ("skipped_foreign", json::num(l.skipped_foreign() as f64)),
+        ])
+        // learner guard drops here — before the shadow lock below
+    };
+    let shadow = {
+        let guard = state.shadow.lock().unwrap();
+        match guard.as_ref() {
+            Some(s) => s.to_json(),
+            None => Value::Null,
+        }
+    };
+    ok_response(
+        "stats",
+        vec![
+            ("backend", json::s(backend)),
+            ("cache", cache),
+            ("counters", state.stats.to_json()),
+            ("latest_snapshot", json::s(&state.snapshotter.latest_path())),
+            ("learn", Value::Bool(state.opts.learn)),
+            ("online", online),
+            ("policy_version", json::num(state.version.load(Ordering::SeqCst) as f64)),
+            ("shadow", shadow),
+            ("snapshot_dir", json::s(state.snapshotter.dir())),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::action::ActionSpace;
+    use crate::bandit::QTable;
+    use crate::features::{Binner, Discretizer};
+    use crate::linalg::Mat;
+    use crate::serve::client::Client;
+    use crate::system::SystemInput;
+
+    fn tiny_policy() -> TrainedPolicy {
+        TrainedPolicy {
+            qtable: QTable::new(1, ActionSpace::reduced_top_k(9)),
+            discretizer: Discretizer {
+                kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+                norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                delta_c: 1e-30,
+                delta_n: 1e-30,
+            },
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("pa_daemon_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn daemon_serves_ping_solve_stats_and_shuts_down() {
+        let dir = tmp_dir("smoke");
+        let opts = ServeOpts {
+            snapshot_dir: dir.clone(),
+            quiet: true,
+            ..ServeOpts::default()
+        };
+        let d = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+        let mut c = Client::connect(d.addr()).unwrap();
+
+        let pong = c.call(&protocol::admin_request("ping", vec![])).unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool().unwrap(), true);
+        assert_eq!(pong.get("policy_version").unwrap().as_usize().unwrap(), 1);
+
+        let sys = SystemInput::Dense(Mat::eye(4));
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let resp = c.call(&protocol::solve_request_json(Some(42), &sys, &b)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool().unwrap(), true, "{resp:?}");
+        assert_eq!(resp.get("id").unwrap().as_usize().unwrap(), 42);
+        let x: Vec<f64> =
+            resp.get("x").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        for (xi, bi) in x.iter().zip(&b) {
+            assert!((xi - bi).abs() < 1e-6, "identity solve: {xi} vs {bi}");
+        }
+
+        // malformed request: loud typed rejection, connection stays up
+        let bad = c.call_line("{\"op\": \"solve\", \"n\": 0, \"b\": []}").unwrap();
+        assert_eq!(bad.get("ok").unwrap().as_bool().unwrap(), false);
+
+        let stats = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+        assert_eq!(stats.get("policy_version").unwrap().as_usize().unwrap(), 1);
+        let counters = stats.get("counters").unwrap();
+        assert_eq!(counters.get("solves_ok").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(counters.get("protocol_errors").unwrap().as_usize().unwrap(), 1);
+        assert!(stats.get("online").unwrap().get("observed").unwrap().as_usize().unwrap() >= 1);
+
+        let bye = c.call(&protocol::admin_request("shutdown", vec![])).unwrap();
+        assert_eq!(bye.get("ok").unwrap().as_bool().unwrap(), true);
+        drop(c);
+        d.join();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

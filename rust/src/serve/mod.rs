@@ -1,0 +1,54 @@
+//! `pallas-serve`: the resident serving daemon (DESIGN.md §2g).
+//!
+//! The rest of the crate is one-shot — `train` writes a policy file,
+//! `solve`/`solve_batch` read it. This subsystem turns the facade into a
+//! long-running process that **keeps learning on live traffic**:
+//!
+//! * [`daemon`] — a hand-rolled `std::net::TcpListener` loop (zero-dep
+//!   build) speaking newline-delimited JSON: one request per line, one
+//!   response per line, per-connection worker threads with panic
+//!   containment. Policy hot-reload is an `Arc<Autotuner>` swap behind
+//!   an `RwLock` — in-flight requests hold their own clone and finish on
+//!   the old policy; zero requests fail across a swap.
+//! * [`protocol`] — the wire format over [`crate::util::json`]: `solve`
+//!   (dense flat row-major or sparse COO triplets), `stats`, `reload`,
+//!   `snapshot`, `shadow-load`, `shadow-status`, `promote`, `ping`,
+//!   `shutdown`.
+//! * [`online`] — the incremental learner: every [`crate::api::SolveReport`]
+//!   is converted to the paper's multi-objective reward (eq. 21) and
+//!   queued as a single-observation Q-update; the bounded queue is
+//!   drained at deterministic checkpoints so the solve hot path never
+//!   blocks on learning and replays are byte-identical.
+//! * [`snapshot`] — atomic versioned policy snapshots (tmp+rename via
+//!   [`crate::util::fsx`], monotonic version, schema-v2
+//!   `action_space_hash` carried by the policy JSON itself).
+//! * [`shadow`] — the shadow-promotion pipeline: a candidate policy
+//!   scores every Nth request without serving it, accumulating a
+//!   win-rate against the live policy; `promote` only succeeds once the
+//!   candidate clears its threshold (or is forced).
+//! * [`stats`] — the introspection counters behind the `stats` endpoint:
+//!   request counts, cache hit rates, per-family win rates, the reward
+//!   trajectory, degradation-ladder walks, and the current policy
+//!   version.
+//!
+//! Chaos hooks: [`crate::faults::FaultSite::SnapshotWrite`] fails the
+//! snapshot write path and [`crate::faults::FaultSite::PolicyReload`]
+//! corrupts the bytes read back at hot-reload time — the reload must
+//! reject loudly and keep serving on the old policy (locked by
+//! `tests/chaos.rs` and the `chaos` CLI's daemon mix).
+
+pub mod client;
+pub mod daemon;
+pub mod online;
+pub mod protocol;
+pub mod shadow;
+pub mod snapshot;
+pub mod stats;
+
+pub use client::Client;
+pub use daemon::{Daemon, ServeOpts};
+pub use online::{OnlineLearner, OnlineObservation, OnlineOpts};
+pub use protocol::{parse_request, Request, SolveRequest};
+pub use shadow::{ShadowOpts, ShadowScorer, ShadowVerdict};
+pub use snapshot::PolicySnapshotter;
+pub use stats::ServeStats;

@@ -1,0 +1,405 @@
+//! Online Q-learning from live traffic.
+//!
+//! The paper's incremental action-value estimator (eq. 6/27) is built
+//! for exactly this regime: one observation at a time, no replay
+//! buffer. The [`OnlineLearner`] keeps an **online copy** of the live
+//! policy's Q-table; each served [`SolveReport`] is converted to the
+//! multi-objective reward (eq. 21, via [`SolveReport::reward_inputs`])
+//! and pushed onto a **bounded queue** — the solve hot path only pays a
+//! queue append, never a table write. The queue is drained at explicit
+//! checkpoints (every `drain_every` requests in the daemon), applying
+//! updates in arrival order, which makes replays byte-identical: the
+//! final table depends only on the observation sequence, not on when
+//! the checkpoints ran (locked by the determinism tests here and in
+//! `tests/serve_daemon.rs` across `PA_THREADS`).
+//!
+//! Serving telemetry differs from training in two ways the conversion
+//! has to absorb: there is no reference solution (the backward error
+//! stands in for the forward error), and κ₁ may be NaN when the solve
+//! skipped the feature pass — a NaN estimate maps to the hardest κ bin
+//! (`10^kappa.hi`), mirroring `Binner::bin`'s NaN policy.
+
+use std::collections::VecDeque;
+
+use crate::api::SolveReport;
+use crate::bandit::action::Action;
+use crate::bandit::{reward, select_action, QTable, TrainedPolicy};
+use crate::features::{Context, Discretizer};
+use crate::util::config::Config;
+use crate::util::rng::Rng;
+
+/// Bounded reward-trajectory window surfaced by the stats endpoint.
+const RECENT_CAP: usize = 256;
+
+/// One queued observation, already discretized: the drain is pure table
+/// arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineObservation {
+    pub state: usize,
+    pub action_idx: usize,
+    pub reward: f64,
+}
+
+/// Online-learning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineOpts {
+    /// Q-update step size; `0.0` selects the 1/N(s,a) schedule of Alg. 1.
+    pub alpha: f64,
+    /// ε-greedy exploration rate on the serving path (small: live
+    /// traffic is not a training sandbox).
+    pub epsilon: f64,
+    /// Update-queue capacity; observations past it are counted as
+    /// dropped instead of blocking the solve path.
+    pub queue_cap: usize,
+    /// Exploration RNG seed (pinned → deterministic replays).
+    pub seed: u64,
+}
+
+impl Default for OnlineOpts {
+    fn default() -> OnlineOpts {
+        OnlineOpts { alpha: 0.0, epsilon: 0.05, queue_cap: 1024, seed: 0x5EED_11FE }
+    }
+}
+
+/// The incremental learner: online Q-table copy + bounded update queue.
+pub struct OnlineLearner {
+    cfg: Config,
+    qtable: QTable,
+    discretizer: Discretizer,
+    opts: OnlineOpts,
+    queue: VecDeque<OnlineObservation>,
+    rng: Rng,
+    observed: u64,
+    applied: u64,
+    dropped: u64,
+    skipped_foreign: u64,
+    reward_sum: f64,
+    recent: VecDeque<f64>,
+}
+
+impl OnlineLearner {
+    /// Start learning from a copy of `policy` (the live policy is never
+    /// mutated in place — promotion/snapshot make the online table live).
+    pub fn new(policy: &TrainedPolicy, cfg: &Config, opts: OnlineOpts) -> OnlineLearner {
+        OnlineLearner {
+            cfg: cfg.clone(),
+            qtable: policy.qtable.clone(),
+            discretizer: policy.discretizer.clone(),
+            opts,
+            queue: VecDeque::new(),
+            rng: Rng::new(opts.seed),
+            observed: 0,
+            applied: 0,
+            dropped: 0,
+            skipped_foreign: 0,
+            reward_sum: 0.0,
+            recent: VecDeque::new(),
+        }
+    }
+
+    /// NaN κ (feature pass skipped) means "as hard as it gets": map it to
+    /// the top of the κ bin range so both the state index and the reward
+    /// discount treat it consistently.
+    fn effective_kappa(&self, kappa_est: f64) -> f64 {
+        if kappa_est.is_finite() {
+            kappa_est
+        } else {
+            10f64.powf(self.discretizer.kappa.hi)
+        }
+    }
+
+    /// Discretized state for serving features (same context mapping as
+    /// `TrainedPolicy::select_features`, with the NaN-κ policy above).
+    pub fn state_of_features(&self, kappa_est: f64, norm_inf: f64) -> usize {
+        let kappa = self.effective_kappa(kappa_est);
+        let c = Context {
+            phi_kappa: kappa.max(self.discretizer.delta_c).log10(),
+            phi_norm: norm_inf.max(self.discretizer.delta_n).log10(),
+        };
+        self.discretizer.state_of_context(c)
+    }
+
+    /// ε-greedy action selection over the **online** table (training-time
+    /// semantics: unvisited cells keep their optimistic Q = 0, so live
+    /// traffic explores untried configurations of its context bin).
+    /// Returns the action and whether it was an exploration pick.
+    pub fn select(&mut self, kappa_est: f64, norm_inf: f64) -> (Action, bool) {
+        let state = self.state_of_features(kappa_est, norm_inf);
+        let (idx, explored) = select_action(&self.qtable, state, self.opts.epsilon, &mut self.rng);
+        (self.qtable.space.actions[idx], explored)
+    }
+
+    fn reward_with(&self, kappa_est: f64, rep: &SolveReport) -> f64 {
+        let kappa = self.effective_kappa(kappa_est);
+        reward(&self.cfg, &rep.action, &rep.reward_inputs(kappa))
+    }
+
+    /// The reward this report earns under the learner's config — used by
+    /// the shadow scorer to compare live vs candidate picks without
+    /// touching any learning state.
+    pub fn reward_of(&self, rep: &SolveReport) -> f64 {
+        self.reward_with(rep.kappa_est, rep)
+    }
+
+    /// Observe a served report: convert to reward, enqueue the Q-update.
+    /// Returns the reward, or `None` when the report's action is not in
+    /// the online table's action space (a foreign/forced action — counted,
+    /// skipped).
+    pub fn observe(&mut self, rep: &SolveReport) -> Option<f64> {
+        self.observe_with(rep.kappa_est, rep.norm_inf, rep)
+    }
+
+    /// [`OnlineLearner::observe`] with explicit context features — the
+    /// daemon's learning path knows the κ estimate even when the
+    /// forced-action solve skipped the feature pass.
+    pub fn observe_with(
+        &mut self,
+        kappa_est: f64,
+        norm_inf: f64,
+        rep: &SolveReport,
+    ) -> Option<f64> {
+        let Some(action_idx) = self.qtable.space.index_of(&rep.action) else {
+            self.skipped_foreign += 1;
+            return None;
+        };
+        let state = self.state_of_features(kappa_est, norm_inf);
+        let r = self.reward_with(kappa_est, rep);
+        self.observed += 1;
+        self.reward_sum += r;
+        if self.recent.len() == RECENT_CAP {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(r);
+        if self.queue.len() >= self.opts.queue_cap {
+            self.dropped += 1;
+        } else {
+            self.queue.push_back(OnlineObservation { state, action_idx, reward: r });
+        }
+        Some(r)
+    }
+
+    /// Checkpoint: apply every queued update in arrival order. Returns
+    /// how many were applied. Because order is preserved, the final
+    /// table is independent of checkpoint cadence (as long as the queue
+    /// never overflowed).
+    pub fn drain(&mut self) -> usize {
+        let n = self.queue.len();
+        while let Some(o) = self.queue.pop_front() {
+            self.qtable.update(o.state, o.action_idx, o.reward, self.opts.alpha);
+        }
+        self.applied += n as u64;
+        n
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+    pub fn skipped_foreign(&self) -> u64 {
+        self.skipped_foreign
+    }
+    pub fn epsilon(&self) -> f64 {
+        self.opts.epsilon
+    }
+    pub fn alpha(&self) -> f64 {
+        self.opts.alpha
+    }
+
+    /// Mean reward over everything observed (0 before the first).
+    pub fn mean_reward(&self) -> f64 {
+        if self.observed == 0 {
+            0.0
+        } else {
+            self.reward_sum / self.observed as f64
+        }
+    }
+
+    /// The bounded recent-reward trajectory (stats endpoint).
+    pub fn recent_rewards(&self) -> Vec<f64> {
+        self.recent.iter().copied().collect()
+    }
+
+    pub fn qtable(&self) -> &QTable {
+        &self.qtable
+    }
+
+    /// The online table packaged as a policy artifact (what `snapshot`
+    /// persists and `promote` installs).
+    pub fn policy(&self) -> TrainedPolicy {
+        TrainedPolicy { qtable: self.qtable.clone(), discretizer: self.discretizer.clone() }
+    }
+
+    /// Re-anchor the online copy on a newly-installed live policy (hot
+    /// reload / promotion). The pending queue is cleared — its indices
+    /// refer to the previous table's space. Counters are cumulative
+    /// across policies.
+    pub fn set_policy(&mut self, policy: &TrainedPolicy) {
+        self.qtable = policy.qtable.clone();
+        self.discretizer = policy.discretizer.clone();
+        self.queue.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::action::ActionSpace;
+    use crate::features::Binner;
+    use crate::solver::ir::StopReason;
+
+    fn two_action_policy() -> TrainedPolicy {
+        TrainedPolicy {
+            qtable: QTable::new(
+                2,
+                ActionSpace { actions: vec![Action::CG_FP64, Action::FP64] },
+            ),
+            discretizer: Discretizer {
+                kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 2 },
+                norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                delta_c: 1e-30,
+                delta_n: 1e-30,
+            },
+        }
+    }
+
+    fn report(action: Action, nbe: f64, iters: usize, failed: bool) -> SolveReport {
+        SolveReport {
+            x: vec![1.0],
+            action,
+            solver: action.solver,
+            nbe,
+            outer_iters: 1,
+            gmres_iters: iters,
+            stop: if failed { StopReason::Failure } else { StopReason::Converged },
+            failed,
+            kappa_est: 10.0,
+            norm_inf: 1.0,
+            density: 1.0,
+            nnz: 1,
+            backend: "native",
+            cache_hit: false,
+            cache_hits: 0,
+            cache_misses: 0,
+            degradation: None,
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic_regardless_of_checkpoint_cadence() {
+        let pol = two_action_policy();
+        let cfg = Config::default();
+        let stream: Vec<SolveReport> = (0..40)
+            .map(|i| {
+                let a = if i % 3 == 0 { Action::FP64 } else { Action::CG_FP64 };
+                report(a, 1e-12 * (i + 1) as f64, i % 7, i % 11 == 0)
+            })
+            .collect();
+        let run = |drain_every: usize| {
+            let mut l = OnlineLearner::new(&pol, &cfg, OnlineOpts::default());
+            for (i, rep) in stream.iter().enumerate() {
+                l.observe(rep).unwrap();
+                if (i + 1) % drain_every == 0 {
+                    l.drain();
+                }
+            }
+            l.drain();
+            l.qtable().fingerprint()
+        };
+        let base = run(1);
+        assert_eq!(base, run(7));
+        assert_eq!(base, run(1000), "drain cadence must not change the table");
+        assert_ne!(
+            base,
+            OnlineLearner::new(&pol, &cfg, OnlineOpts::default()).qtable().fingerprint(),
+            "the stream must actually have changed the table"
+        );
+    }
+
+    #[test]
+    fn failures_teach_the_table_and_flip_selection() {
+        let pol = two_action_policy();
+        let cfg = Config::default();
+        let opts = OnlineOpts { epsilon: 0.0, ..OnlineOpts::default() };
+        let mut l = OnlineLearner::new(&pol, &cfg, opts);
+        // greedy over the all-zero table picks index 0 (CG_FP64)
+        let (first, explored) = l.select(10.0, 1.0);
+        assert_eq!(first, Action::CG_FP64);
+        assert!(!explored);
+        // that action keeps failing on this stream
+        let r = l.observe(&report(Action::CG_FP64, f64::NAN, 0, true)).unwrap();
+        assert_eq!(r, cfg.fail_reward);
+        l.drain();
+        // online update demoted it below the untried FP64 cell
+        let (second, _) = l.select(10.0, 1.0);
+        assert_eq!(second, Action::FP64, "selection must change after the update");
+        assert_eq!(l.applied(), 1);
+    }
+
+    #[test]
+    fn queue_cap_drops_instead_of_blocking() {
+        let pol = two_action_policy();
+        let cfg = Config::default();
+        let opts = OnlineOpts { queue_cap: 2, ..OnlineOpts::default() };
+        let mut l = OnlineLearner::new(&pol, &cfg, opts);
+        for _ in 0..5 {
+            l.observe(&report(Action::FP64, 1e-14, 3, false)).unwrap();
+        }
+        assert_eq!(l.queue_len(), 2);
+        assert_eq!(l.dropped(), 3);
+        assert_eq!(l.observed(), 5, "dropped observations still count in telemetry");
+        assert_eq!(l.drain(), 2);
+        assert_eq!(l.qtable().total_observations(), 2);
+    }
+
+    #[test]
+    fn foreign_actions_are_skipped_not_mislearned() {
+        let pol = two_action_policy();
+        let mut l = OnlineLearner::new(&pol, &Config::default(), OnlineOpts::default());
+        let foreign = Action::lu(
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Bf16,
+            crate::chop::Prec::Bf16,
+        );
+        assert!(l.observe(&report(foreign, 1e-14, 1, false)).is_none());
+        assert_eq!(l.skipped_foreign(), 1);
+        assert_eq!(l.queue_len(), 0);
+    }
+
+    #[test]
+    fn nan_kappa_maps_to_hardest_bin_with_finite_reward() {
+        let pol = two_action_policy();
+        let mut l = OnlineLearner::new(&pol, &Config::default(), OnlineOpts::default());
+        // 2 κ bins × 1 norm bin: NaN κ must land in the last (hard) state
+        assert_eq!(l.state_of_features(f64::NAN, 1.0), 1);
+        assert_eq!(l.state_of_features(10.0, 1.0), 0);
+        let mut rep = report(Action::FP64, 1e-14, 2, false);
+        rep.kappa_est = f64::NAN;
+        let r = l.observe(&rep).unwrap();
+        assert!(r.is_finite(), "NaN κ must not poison the reward: {r}");
+        l.drain();
+        assert_eq!(l.qtable().visits(1, 1), 1, "update landed in the hard bin");
+    }
+
+    #[test]
+    fn set_policy_reanchors_and_clears_queue() {
+        let pol = two_action_policy();
+        let mut l = OnlineLearner::new(&pol, &Config::default(), OnlineOpts::default());
+        l.observe(&report(Action::FP64, 1e-14, 1, false)).unwrap();
+        assert_eq!(l.queue_len(), 1);
+        let mut fresh = two_action_policy();
+        fresh.qtable.update(0, 0, 3.0, 1.0);
+        l.set_policy(&fresh);
+        assert_eq!(l.queue_len(), 0, "stale indices must not cross a policy swap");
+        assert_eq!(l.qtable().fingerprint(), fresh.qtable.fingerprint());
+        assert_eq!(l.observed(), 1, "telemetry is cumulative across policies");
+    }
+}

@@ -1,0 +1,337 @@
+//! The daemon's wire format: newline-delimited JSON over TCP.
+//!
+//! One request object per line, one response object per line, both via
+//! [`crate::util::json`] (zero-dep). Every request carries an `"op"`
+//! string; `solve` additionally carries the system as either a flat
+//! row-major dense `"a"` array or sparse `"coo"` triplets, validated
+//! here — malformed requests are rejected loudly before they reach the
+//! solve path (`Csr::from_triplets` would index out of bounds on bad
+//! triplets, so the bounds check happens at parse time).
+//!
+//! Responses always carry `"ok"` (bool) and `"op"`; failures add
+//! `"error"` (the full anyhow chain) and, when the cause is a typed
+//! [`crate::api::SolveError`], its machine-readable `"kind"` code.
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::{SolveError, SolveReport};
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::system::SystemInput;
+use crate::util::json::{self, Value};
+
+/// One `op: "solve"` payload, parsed and bounds-checked.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    /// Caller-supplied correlation id, echoed in the response.
+    pub id: Option<u64>,
+    pub system: SystemInput,
+    pub b: Vec<f64>,
+}
+
+/// Every operation the daemon answers.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Ping,
+    Stats,
+    Snapshot,
+    Shutdown,
+    ShadowStatus,
+    Solve(SolveRequest),
+    /// Hot-reload the live policy from `path` (default: the snapshot
+    /// directory's `policy.latest.json`).
+    Reload { path: Option<String> },
+    /// Load a candidate policy into the shadow arm.
+    ShadowLoad { path: String },
+    /// Install the shadow candidate as the live policy — gated on its
+    /// win-rate verdict unless `force`.
+    Promote { force: bool },
+}
+
+/// Non-null field lookup.
+fn opt<'a>(v: &'a Value, key: &str) -> Option<&'a Value> {
+    match v {
+        Value::Obj(map) => map.get(key).filter(|x| !matches!(x, Value::Null)),
+        _ => None,
+    }
+}
+
+/// Parse one request line. Errors name the offending field.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = json::parse(line).context("request is not valid JSON")?;
+    let op = opt(&v, "op")
+        .and_then(|o| o.as_str().ok())
+        .context("request is missing the \"op\" field")?
+        .to_string();
+    match op.as_str() {
+        "ping" => Ok(Request::Ping),
+        "stats" => Ok(Request::Stats),
+        "snapshot" => Ok(Request::Snapshot),
+        "shutdown" => Ok(Request::Shutdown),
+        "shadow-status" => Ok(Request::ShadowStatus),
+        "solve" => parse_solve(&v).map(Request::Solve),
+        "reload" => Ok(Request::Reload {
+            path: opt(&v, "path").map(|p| p.as_str().map(str::to_string)).transpose()?,
+        }),
+        "shadow-load" => Ok(Request::ShadowLoad {
+            path: opt(&v, "path")
+                .context("shadow-load requires \"path\"")?
+                .as_str()?
+                .to_string(),
+        }),
+        "promote" => Ok(Request::Promote {
+            force: opt(&v, "force").map(|f| f.as_bool()).transpose()?.unwrap_or(false),
+        }),
+        other => bail!("unknown op {other:?}"),
+    }
+}
+
+fn parse_solve(v: &Value) -> Result<SolveRequest> {
+    let n = opt(v, "n").context("solve requires \"n\"")?.as_usize().context("field \"n\"")?;
+    if n == 0 {
+        bail!("solve requires n >= 1");
+    }
+    let b: Vec<f64> = opt(v, "b")
+        .context("solve requires \"b\"")?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_f64())
+        .collect::<Result<_>>()
+        .context("field \"b\"")?;
+    if b.len() != n {
+        bail!("rhs length {} does not match n = {n}", b.len());
+    }
+    let id = opt(v, "id").map(|x| x.as_usize()).transpose().context("field \"id\"")?;
+    let system = match (opt(v, "a"), opt(v, "coo")) {
+        (Some(_), Some(_)) => bail!("solve takes either \"a\" (dense) or \"coo\" (sparse), not both"),
+        (None, None) => bail!("solve requires a system: \"a\" (dense) or \"coo\" (sparse)"),
+        (Some(a), None) => {
+            let data: Vec<f64> = a
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()
+                .context("field \"a\"")?;
+            if data.len() != n * n {
+                bail!("dense \"a\" has {} entries, expected n*n = {}", data.len(), n * n);
+            }
+            SystemInput::Dense(Mat { n_rows: n, n_cols: n, data })
+        }
+        (None, Some(coo)) => {
+            let mut triplets = Vec::new();
+            for (k, t) in coo.as_arr()?.iter().enumerate() {
+                let t = t.as_arr().with_context(|| format!("coo[{k}]"))?;
+                if t.len() != 3 {
+                    bail!("coo[{k}] must be [i, j, value], got {} elements", t.len());
+                }
+                let i = t[0].as_usize().with_context(|| format!("coo[{k}][0]"))?;
+                let j = t[1].as_usize().with_context(|| format!("coo[{k}][1]"))?;
+                let val = t[2].as_f64().with_context(|| format!("coo[{k}][2]"))?;
+                if i >= n || j >= n {
+                    bail!("coo[{k}] index ({i}, {j}) out of bounds for n = {n}");
+                }
+                triplets.push((i, j, val));
+            }
+            SystemInput::Sparse(Csr::from_triplets(n, n, &triplets))
+        }
+    };
+    Ok(SolveRequest { id, system, b })
+}
+
+/// Successful response envelope.
+pub fn ok_response(op: &str, extra: Vec<(&str, Value)>) -> Value {
+    let mut fields = vec![("ok", Value::Bool(true)), ("op", json::s(op))];
+    fields.extend(extra);
+    json::obj(fields)
+}
+
+/// Failure envelope: full error chain plus the typed kind when the
+/// cause classifies as a [`SolveError`].
+pub fn error_response(op: &str, id: Option<u64>, err: &anyhow::Error) -> Value {
+    let mut fields = vec![
+        ("error", json::s(&format!("{err:#}"))),
+        ("ok", Value::Bool(false)),
+        ("op", json::s(op)),
+    ];
+    if let Some(kind) = SolveError::classify(err) {
+        fields.push(("kind", json::s(kind.code())));
+    }
+    if let Some(id) = id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    json::obj(fields)
+}
+
+/// The solve response: solution vector plus the serving telemetry the
+/// acceptance tests and the `serve-ctl` CLI read.
+pub fn solve_response(
+    id: Option<u64>,
+    rep: &SolveReport,
+    policy_version: u64,
+    explored: bool,
+    fallback: bool,
+    shadow_scored: bool,
+) -> Value {
+    let mut fields = vec![
+        ("action", json::s(&rep.action.name())),
+        ("cache_hit", Value::Bool(rep.cache_hit)),
+        ("degraded", Value::Bool(rep.degradation.is_some())),
+        ("explored", Value::Bool(explored)),
+        ("fallback", Value::Bool(fallback)),
+        ("family", json::s(rep.solver.name())),
+        ("gmres_iters", json::num(rep.gmres_iters as f64)),
+        ("nbe", json::num(rep.nbe)),
+        ("ok", Value::Bool(true)),
+        ("op", json::s("solve")),
+        ("outer_iters", json::num(rep.outer_iters as f64)),
+        ("policy_version", json::num(policy_version as f64)),
+        ("shadow_scored", Value::Bool(shadow_scored)),
+        ("x", json::num_arr(&rep.x)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Client-side: encode a solve request for `system` (dense → flat `"a"`,
+/// sparse → `"coo"` triplets).
+pub fn solve_request_json(id: Option<u64>, system: &SystemInput, b: &[f64]) -> Value {
+    let mut fields = vec![
+        ("b", json::num_arr(b)),
+        ("n", json::num(system.n_rows() as f64)),
+        ("op", json::s("solve")),
+    ];
+    match system {
+        SystemInput::Dense(m) => fields.push(("a", json::num_arr(&m.data))),
+        SystemInput::Sparse(c) => {
+            let mut triplets = Vec::with_capacity(c.nnz());
+            for i in 0..c.n_rows {
+                for k in c.row_ptr[i]..c.row_ptr[i + 1] {
+                    triplets.push(json::arr(vec![
+                        json::num(i as f64),
+                        json::num(c.col_idx[k] as f64),
+                        json::num(c.values[k]),
+                    ]));
+                }
+            }
+            fields.push(("coo", json::arr(triplets)));
+        }
+    }
+    if let Some(id) = id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Client-side: encode an admin request (`ping`, `stats`, `reload`, ...).
+pub fn admin_request(op: &str, extra: Vec<(&str, Value)>) -> Value {
+    let mut fields = vec![("op", json::s(op))];
+    fields.extend(extra);
+    json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_solve_roundtrips_through_the_wire_format() {
+        let sys = SystemInput::Dense(Mat::eye(3));
+        let line = solve_request_json(Some(7), &sys, &[1.0, 2.0, 3.0]).to_string();
+        match parse_request(&line).unwrap() {
+            Request::Solve(req) => {
+                assert_eq!(req.id, Some(7));
+                assert_eq!(req.b, vec![1.0, 2.0, 3.0]);
+                assert_eq!(req.system, sys);
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_solve_roundtrips_as_coo() {
+        let csr = Csr::from_triplets(3, 3, &[(0, 0, 2.0), (1, 2, -1.5), (2, 1, 0.25)]);
+        let sys = SystemInput::Sparse(csr);
+        let line = solve_request_json(None, &sys, &[1.0, 0.0, -1.0]).to_string();
+        match parse_request(&line).unwrap() {
+            Request::Solve(req) => {
+                assert_eq!(req.id, None);
+                assert_eq!(req.system, sys);
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_solves_fail_loudly() {
+        let cases: Vec<(&str, &str)> = vec![
+            ("not json at all", "request is not valid JSON"),
+            ("{\"n\": 2}", "\"op\""),
+            ("{\"op\": \"warp\"}", "unknown op"),
+            ("{\"op\": \"solve\", \"b\": [1.0]}", "\"n\""),
+            ("{\"op\": \"solve\", \"n\": 2, \"b\": [1.0]}", "does not match n"),
+            (
+                "{\"op\": \"solve\", \"n\": 2, \"b\": [1.0, 2.0]}",
+                "requires a system",
+            ),
+            (
+                "{\"op\": \"solve\", \"n\": 2, \"b\": [1.0, 2.0], \"a\": [1.0, 2.0, 3.0]}",
+                "expected n*n",
+            ),
+            (
+                "{\"op\": \"solve\", \"n\": 2, \"b\": [1.0, 2.0], \"coo\": [[0, 5, 1.0]]}",
+                "out of bounds",
+            ),
+            (
+                "{\"op\": \"solve\", \"n\": 2, \"b\": [1.0, 2.0], \"coo\": [[0, 1]]}",
+                "must be [i, j, value]",
+            ),
+            (
+                "{\"op\": \"solve\", \"n\": 2, \"b\": [1.0, 2.0], \"a\": [1.0, 0.0, 0.0, 1.0], \"coo\": []}",
+                "not both",
+            ),
+        ];
+        for (line, want) in cases {
+            let err = format!("{:#}", parse_request(line).unwrap_err());
+            assert!(err.contains(want), "{line}: {err} should mention {want:?}");
+        }
+    }
+
+    #[test]
+    fn admin_ops_parse_with_their_arguments() {
+        assert!(matches!(parse_request("{\"op\": \"ping\"}").unwrap(), Request::Ping));
+        assert!(matches!(
+            parse_request("{\"op\": \"reload\"}").unwrap(),
+            Request::Reload { path: None }
+        ));
+        match parse_request("{\"op\": \"reload\", \"path\": \"/tmp/p.json\"}").unwrap() {
+            Request::Reload { path } => assert_eq!(path.as_deref(), Some("/tmp/p.json")),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request("{\"op\": \"promote\"}").unwrap(),
+            Request::Promote { force: false }
+        ));
+        assert!(matches!(
+            parse_request("{\"op\": \"promote\", \"force\": true}").unwrap(),
+            Request::Promote { force: true }
+        ));
+        let err = format!("{:#}", parse_request("{\"op\": \"shadow-load\"}").unwrap_err());
+        assert!(err.contains("path"), "{err}");
+    }
+
+    #[test]
+    fn error_envelope_carries_typed_kind() {
+        let err = anyhow::Error::new(SolveError::new(
+            crate::api::SolveErrorKind::InvalidInput,
+            "bad rhs",
+        ))
+        .context("serving request");
+        let v = error_response("solve", Some(3), &err);
+        assert_eq!(v.get("ok").unwrap().as_bool().unwrap(), false);
+        assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "invalid-input");
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 3);
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("bad rhs"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Shadow-promotion pipeline.
+//!
+//! A candidate policy rides along without serving: every Nth request
+//! the [`ShadowScorer`] asks the candidate what *it* would have done,
+//! scores both picks under the same multi-objective reward, and
+//! accumulates a win-rate against the live policy. The daemon's
+//! `promote` command consults [`ShadowScorer::verdict`] — the candidate
+//! is only installed once it has enough trials **and** clears the
+//! promote threshold; below the reject threshold it should be dropped.
+//! Ties (same action, or rewards within epsilon) count half a win, so a
+//! candidate that merely matches the live policy hovers at 0.5 and
+//! never promotes on noise alone.
+
+use crate::bandit::action::Action;
+use crate::bandit::TrainedPolicy;
+use crate::util::json::{self, Value};
+
+/// Shadow-scoring cadence and promotion thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowOpts {
+    /// Score every Nth solve request (0 disables scoring entirely).
+    pub every: u64,
+    /// Minimum scored trials before any verdict other than `Warming`.
+    pub min_trials: u64,
+    /// Win-rate at or above which the candidate may be promoted.
+    pub promote_threshold: f64,
+    /// Win-rate at or below which the candidate should be rejected.
+    pub reject_threshold: f64,
+}
+
+impl Default for ShadowOpts {
+    fn default() -> ShadowOpts {
+        ShadowOpts { every: 4, min_trials: 16, promote_threshold: 0.55, reject_threshold: 0.35 }
+    }
+}
+
+/// Where the candidate stands against the live policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShadowVerdict {
+    /// Not enough evidence yet (or win-rate between the thresholds).
+    Warming,
+    /// Cleared the promote threshold with enough trials.
+    Promote,
+    /// At or below the reject threshold with enough trials.
+    Reject,
+}
+
+impl ShadowVerdict {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShadowVerdict::Warming => "warming",
+            ShadowVerdict::Promote => "promote",
+            ShadowVerdict::Reject => "reject",
+        }
+    }
+}
+
+impl std::fmt::Display for ShadowVerdict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Rewards closer than this are a tie, not a win.
+const REWARD_EPS: f64 = 1e-12;
+
+/// Scores a candidate policy against live traffic.
+pub struct ShadowScorer {
+    candidate: TrainedPolicy,
+    opts: ShadowOpts,
+    /// Solve requests seen since the candidate was loaded.
+    seen: u64,
+    trials: u64,
+    wins: u64,
+    ties: u64,
+    losses: u64,
+}
+
+impl ShadowScorer {
+    pub fn new(candidate: TrainedPolicy, opts: ShadowOpts) -> ShadowScorer {
+        ShadowScorer { candidate, opts, seen: 0, trials: 0, wins: 0, ties: 0, losses: 0 }
+    }
+
+    /// Count a solve request; returns true when this one should be
+    /// shadow-scored (every Nth, 0 = never).
+    pub fn tick(&mut self) -> bool {
+        self.seen += 1;
+        self.opts.every > 0 && self.seen % self.opts.every == 0
+    }
+
+    /// What the candidate would have served for these features.
+    pub fn select(&self, kappa_est: f64, norm_inf: f64) -> Action {
+        self.candidate.select_features(kappa_est, norm_inf)
+    }
+
+    /// Record one scored trial from the live and shadow rewards.
+    pub fn record(&mut self, live_reward: f64, shadow_reward: f64) {
+        self.trials += 1;
+        if shadow_reward > live_reward + REWARD_EPS {
+            self.wins += 1;
+        } else if live_reward > shadow_reward + REWARD_EPS {
+            self.losses += 1;
+        } else {
+            self.ties += 1;
+        }
+    }
+
+    /// Win-rate with ties counted half (0.0 before any trials).
+    pub fn win_rate(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            (self.wins as f64 + 0.5 * self.ties as f64) / self.trials as f64
+        }
+    }
+
+    pub fn verdict(&self) -> ShadowVerdict {
+        if self.trials < self.opts.min_trials {
+            return ShadowVerdict::Warming;
+        }
+        let w = self.win_rate();
+        if w >= self.opts.promote_threshold {
+            ShadowVerdict::Promote
+        } else if w <= self.opts.reject_threshold {
+            ShadowVerdict::Reject
+        } else {
+            ShadowVerdict::Warming
+        }
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+    pub fn trials(&self) -> u64 {
+        self.trials
+    }
+    pub fn wins(&self) -> u64 {
+        self.wins
+    }
+    pub fn ties(&self) -> u64 {
+        self.ties
+    }
+    pub fn losses(&self) -> u64 {
+        self.losses
+    }
+
+    pub fn candidate(&self) -> &TrainedPolicy {
+        &self.candidate
+    }
+
+    /// Consume the scorer, handing the candidate over for installation.
+    pub fn take_candidate(self) -> TrainedPolicy {
+        self.candidate
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("losses", json::num(self.losses as f64)),
+            ("seen", json::num(self.seen as f64)),
+            ("ties", json::num(self.ties as f64)),
+            ("trials", json::num(self.trials as f64)),
+            ("verdict", json::s(self.verdict().name())),
+            ("win_rate", json::num(self.win_rate())),
+            ("wins", json::num(self.wins as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::action::ActionSpace;
+    use crate::bandit::QTable;
+    use crate::features::{Binner, Discretizer};
+
+    fn candidate() -> TrainedPolicy {
+        let mut qtable = QTable::new(1, ActionSpace { actions: vec![Action::FP64] });
+        qtable.update(0, 0, 1.0, 1.0);
+        TrainedPolicy {
+            qtable,
+            discretizer: Discretizer {
+                kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+                norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                delta_c: 1e-30,
+                delta_n: 1e-30,
+            },
+        }
+    }
+
+    #[test]
+    fn ticks_fire_every_nth_request() {
+        let mut s = ShadowScorer::new(candidate(), ShadowOpts { every: 3, ..ShadowOpts::default() });
+        let fired: Vec<bool> = (0..7).map(|_| s.tick()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, true, false]);
+        assert_eq!(s.seen(), 7);
+        let mut off = ShadowScorer::new(candidate(), ShadowOpts { every: 0, ..ShadowOpts::default() });
+        assert!((0..10).all(|_| !off.tick()), "every=0 disables scoring");
+    }
+
+    #[test]
+    fn verdict_needs_trials_then_respects_thresholds() {
+        let opts = ShadowOpts { min_trials: 4, promote_threshold: 0.6, reject_threshold: 0.3, ..ShadowOpts::default() };
+        let mut s = ShadowScorer::new(candidate(), opts);
+        for _ in 0..3 {
+            s.record(0.0, 1.0);
+        }
+        assert_eq!(s.verdict(), ShadowVerdict::Warming, "below min_trials");
+        s.record(0.0, 1.0);
+        assert_eq!(s.win_rate(), 1.0);
+        assert_eq!(s.verdict(), ShadowVerdict::Promote);
+
+        let mut r = ShadowScorer::new(candidate(), opts);
+        for _ in 0..4 {
+            r.record(1.0, 0.0);
+        }
+        assert_eq!(r.win_rate(), 0.0);
+        assert_eq!(r.verdict(), ShadowVerdict::Reject);
+    }
+
+    #[test]
+    fn ties_count_half_and_hold_warming() {
+        let opts = ShadowOpts { min_trials: 2, promote_threshold: 0.55, reject_threshold: 0.35, ..ShadowOpts::default() };
+        let mut s = ShadowScorer::new(candidate(), opts);
+        s.record(1.0, 1.0);
+        s.record(1.0, 1.0 + REWARD_EPS / 2.0);
+        assert_eq!(s.ties(), 2, "within-epsilon rewards are ties");
+        assert_eq!(s.win_rate(), 0.5);
+        assert_eq!(
+            s.verdict(),
+            ShadowVerdict::Warming,
+            "a merely-matching candidate must not promote"
+        );
+    }
+
+    #[test]
+    fn json_snapshot_carries_the_scoreboard() {
+        let mut s = ShadowScorer::new(candidate(), ShadowOpts::default());
+        s.tick();
+        s.record(0.0, 1.0);
+        s.record(1.0, 0.0);
+        let v = s.to_json();
+        assert_eq!(v.get("wins").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("losses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("verdict").unwrap().as_str().unwrap(), "warming");
+    }
+}

@@ -1,0 +1,171 @@
+//! Atomic versioned policy snapshots.
+//!
+//! Every write goes through [`crate::util::fsx::atomic_write_str`]
+//! (tmp+rename), so a crash — or the injected
+//! [`FaultSite::SnapshotWrite`] fault — can never leave a truncated
+//! artifact: readers see the previous complete snapshot or the new one.
+//! Versions are monotonic per directory and resume across restarts by
+//! scanning existing `policy.vNNNNNN.json` files; an injected write
+//! failure burns its version number (gaps are fine, regressions are
+//! not). `policy.latest.json` is an atomically-updated alias of the
+//! newest snapshot, which is what a bare `reload` pulls.
+
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bandit::TrainedPolicy;
+use crate::faults::{self, FaultSite};
+use crate::util::fsx;
+
+/// Writes monotonically-versioned policy snapshots into one directory.
+pub struct PolicySnapshotter {
+    dir: String,
+    /// Last version handed out (0 before the first snapshot).
+    version: AtomicU64,
+}
+
+/// `policy.v000123.json` → `Some(123)`.
+fn parse_version(name: &str) -> Option<u64> {
+    name.strip_prefix("policy.v")?.strip_suffix(".json")?.parse().ok()
+}
+
+impl PolicySnapshotter {
+    /// Open a snapshot directory, resuming the version counter from the
+    /// highest `policy.vNNNNNN.json` already present (0 when the
+    /// directory is empty or missing — it is created on first write).
+    pub fn new(dir: &str) -> PolicySnapshotter {
+        let start = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| parse_version(&e.file_name().to_string_lossy()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .unwrap_or(0);
+        PolicySnapshotter { dir: dir.to_string(), version: AtomicU64::new(start) }
+    }
+
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+
+    /// Highest version claimed so far (including injected-failure gaps).
+    pub fn current_version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+
+    /// Path of a given snapshot version.
+    pub fn path_for(&self, version: u64) -> String {
+        format!("{}/policy.v{version:06}.json", self.dir)
+    }
+
+    /// The atomically-maintained alias of the newest snapshot.
+    pub fn latest_path(&self) -> String {
+        format!("{}/policy.latest.json", self.dir)
+    }
+
+    /// Write the next versioned snapshot. Returns `(version, path)`.
+    ///
+    /// Claims the version number first (monotonic even under concurrent
+    /// snapshots), then consults the [`FaultSite::SnapshotWrite`] chaos
+    /// hook, then writes the versioned file and the `latest` alias —
+    /// both atomically. On any failure the directory still holds only
+    /// complete artifacts and `latest` still points at the previous one.
+    pub fn snapshot(&self, policy: &TrainedPolicy) -> Result<(u64, String)> {
+        let version = self.version.fetch_add(1, Ordering::SeqCst) + 1;
+        let path = self.path_for(version);
+        if faults::fire(FaultSite::SnapshotWrite).is_some() {
+            bail!("injected snapshot-write failure for {path}");
+        }
+        let text = policy.to_json().to_string();
+        fsx::atomic_write_str(&path, &text)
+            .with_context(|| format!("writing snapshot v{version}"))?;
+        fsx::atomic_write_str(&self.latest_path(), &text)
+            .with_context(|| format!("updating {}", self.latest_path()))?;
+        Ok((version, path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::action::ActionSpace;
+    use crate::bandit::QTable;
+    use crate::faults::{with_ambient, FaultInjector, FaultPlan};
+    use crate::features::{Binner, Discretizer};
+    use std::sync::Arc;
+
+    fn tiny_policy(reward: f64) -> TrainedPolicy {
+        let mut qtable = QTable::new(1, ActionSpace::reduced_top_k(9));
+        qtable.update(0, 0, reward, 1.0);
+        TrainedPolicy {
+            qtable,
+            discretizer: Discretizer {
+                kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+                norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                delta_c: 1e-30,
+                delta_n: 1e-30,
+            },
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("pa_snap_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn snapshots_are_versioned_and_loadable() {
+        let dir = tmp_dir("basic");
+        let snap = PolicySnapshotter::new(&dir);
+        assert_eq!(snap.current_version(), 0);
+        let (v1, p1) = snap.snapshot(&tiny_policy(1.0)).unwrap();
+        let (v2, p2) = snap.snapshot(&tiny_policy(2.0)).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        assert_ne!(p1, p2);
+        let back = TrainedPolicy::load(&p2).unwrap();
+        assert_eq!(back.qtable.q(0, 0), 2.0);
+        // latest alias tracks the newest snapshot
+        let latest = TrainedPolicy::load(&snap.latest_path()).unwrap();
+        assert_eq!(latest.qtable.fingerprint(), back.qtable.fingerprint());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_counter_resumes_from_disk() {
+        let dir = tmp_dir("resume");
+        {
+            let snap = PolicySnapshotter::new(&dir);
+            snap.snapshot(&tiny_policy(1.0)).unwrap();
+            snap.snapshot(&tiny_policy(2.0)).unwrap();
+        }
+        let reopened = PolicySnapshotter::new(&dir);
+        assert_eq!(reopened.current_version(), 2);
+        let (v3, _) = reopened.snapshot(&tiny_policy(3.0)).unwrap();
+        assert_eq!(v3, 3, "versions must never regress across restarts");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_write_fault_leaves_previous_latest_intact() {
+        let dir = tmp_dir("fault");
+        let snap = PolicySnapshotter::new(&dir);
+        snap.snapshot(&tiny_policy(1.0)).unwrap();
+        let inj = Arc::new(FaultInjector::new(
+            FaultPlan::new(7).with(FaultSite::SnapshotWrite, 1.0),
+        ));
+        let err = with_ambient(&inj, || snap.snapshot(&tiny_policy(9.0))).unwrap_err();
+        assert!(err.to_string().contains("snapshot-write"), "{err}");
+        assert_eq!(inj.fired(FaultSite::SnapshotWrite), 1);
+        // the failed version is burned, never reused ...
+        let (v3, _) = snap.snapshot(&tiny_policy(3.0)).unwrap();
+        assert_eq!(v3, 3);
+        // ... its file never appeared, and `latest` skipped straight from
+        // v1's content to v3's
+        assert!(!std::path::Path::new(&snap.path_for(2)).exists());
+        let latest = TrainedPolicy::load(&snap.latest_path()).unwrap();
+        assert_eq!(latest.qtable.q(0, 0), 3.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

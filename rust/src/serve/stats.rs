@@ -1,0 +1,115 @@
+//! Daemon introspection counters.
+//!
+//! Everything here is a relaxed [`AtomicU64`] bumped from connection
+//! threads — the counters are telemetry, not control flow, so no
+//! ordering stronger than `Relaxed` is needed and the solve hot path
+//! pays one fetch-add per event. The `stats` endpoint merges this with
+//! live-only data (cache hit rates, learner trajectory, shadow
+//! scoreboard, policy version) in `daemon::stats_value`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bandit::action::SolverFamily;
+use crate::util::json::{self, Value};
+
+/// Cumulative daemon counters since start.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Lines received (parsed or not).
+    pub requests: AtomicU64,
+    /// Lines rejected before dispatch (bad JSON / unknown op / bad shape).
+    pub protocol_errors: AtomicU64,
+    pub solves_ok: AtomicU64,
+    pub solve_errors: AtomicU64,
+    /// Solves that walked the degradation ladder before succeeding.
+    pub degraded: AtomicU64,
+    /// Learning-path solves rescued by a forced-FP64 retry.
+    pub fallback_rescues: AtomicU64,
+    /// Learning-path solves served from an ε-exploration pick.
+    pub explored: AtomicU64,
+    /// Requests additionally scored by the shadow candidate.
+    pub shadow_scored: AtomicU64,
+    pub reloads: AtomicU64,
+    pub reload_failures: AtomicU64,
+    pub snapshots: AtomicU64,
+    pub snapshot_failures: AtomicU64,
+    pub promotions: AtomicU64,
+    pub promotes_rejected: AtomicU64,
+    /// Per-family serve/success counters (win rate = ok / served).
+    pub lu_served: AtomicU64,
+    pub lu_ok: AtomicU64,
+    pub cg_served: AtomicU64,
+    pub cg_ok: AtomicU64,
+}
+
+impl ServeStats {
+    /// Count one served solve for its refinement family.
+    pub fn record_family(&self, family: SolverFamily, ok: bool) {
+        let (served, succeeded) = match family {
+            SolverFamily::LuIr => (&self.lu_served, &self.lu_ok),
+            SolverFamily::CgIr => (&self.cg_served, &self.cg_ok),
+        };
+        served.fetch_add(1, Ordering::Relaxed);
+        if ok {
+            succeeded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let get = |c: &AtomicU64| json::num(c.load(Ordering::Relaxed) as f64);
+        let family = |served: &AtomicU64, ok: &AtomicU64| {
+            let s = served.load(Ordering::Relaxed);
+            let o = ok.load(Ordering::Relaxed);
+            json::obj(vec![
+                ("ok", json::num(o as f64)),
+                ("served", json::num(s as f64)),
+                ("win_rate", json::num(o as f64 / s.max(1) as f64)),
+            ])
+        };
+        json::obj(vec![
+            ("degraded", get(&self.degraded)),
+            ("explored", get(&self.explored)),
+            ("fallback_rescues", get(&self.fallback_rescues)),
+            (
+                "families",
+                json::obj(vec![
+                    ("cg-ir", family(&self.cg_served, &self.cg_ok)),
+                    ("lu-ir", family(&self.lu_served, &self.lu_ok)),
+                ]),
+            ),
+            ("promotes_rejected", get(&self.promotes_rejected)),
+            ("promotions", get(&self.promotions)),
+            ("protocol_errors", get(&self.protocol_errors)),
+            ("reload_failures", get(&self.reload_failures)),
+            ("reloads", get(&self.reloads)),
+            ("requests", get(&self.requests)),
+            ("shadow_scored", get(&self.shadow_scored)),
+            ("snapshot_failures", get(&self.snapshot_failures)),
+            ("snapshots", get(&self.snapshots)),
+            ("solve_errors", get(&self.solve_errors)),
+            ("solves_ok", get(&self.solves_ok)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_win_rates_divide_safely() {
+        let s = ServeStats::default();
+        s.record_family(SolverFamily::LuIr, true);
+        s.record_family(SolverFamily::LuIr, false);
+        s.record_family(SolverFamily::CgIr, true);
+        let v = s.to_json();
+        let fams = v.get("families").unwrap();
+        let lu = fams.get("lu-ir").unwrap();
+        assert_eq!(lu.get("served").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(lu.get("win_rate").unwrap().as_f64().unwrap(), 0.5);
+        let cg = fams.get("cg-ir").unwrap();
+        assert_eq!(cg.get("win_rate").unwrap().as_f64().unwrap(), 1.0);
+        // untouched counters serialize as zero, not division blowups
+        assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 0);
+    }
+}

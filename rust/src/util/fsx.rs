@@ -1,0 +1,117 @@
+//! Atomic filesystem writes (write-tmp-then-rename).
+//!
+//! Every artifact the repo persists and later parses loudly — policy
+//! JSON, bench baselines, daemon snapshots — must never be observable
+//! half-written: a crash mid-`std::fs::write` leaves a truncated file
+//! that `TrainedPolicy::from_json` rejects, and a reader racing the
+//! writer sees a prefix. `atomic_write` closes both windows: the bytes
+//! go to a sibling `.tmp` file first and only an atomic `rename` (same
+//! directory, hence same filesystem) makes them visible under the final
+//! name. Readers see either the old complete file or the new complete
+//! file, never a mixture.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide counter so concurrent writers to the same destination
+/// never collide on the temp name (each rename is still last-writer-wins
+/// on the final path, which is the semantics we want).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` atomically: create parent directories, write
+/// a unique sibling temp file, then rename it over `path`.
+pub fn atomic_write(path: &str, bytes: &[u8]) -> Result<()> {
+    let dest = Path::new(path);
+    if let Some(dir) = dest.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating directory for {path}"))?;
+        }
+    }
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = dest.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing temp file {}", tmp.display()))?;
+    match std::fs::rename(&tmp, dest) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // don't leave the temp file behind on a failed rename
+            let _ = std::fs::remove_file(&tmp);
+            Err(e).with_context(|| format!("renaming {} -> {path}", tmp.display()))
+        }
+    }
+}
+
+/// [`atomic_write`] for string payloads (the common JSON case).
+pub fn atomic_write_str(path: &str, text: &str) -> Result<()> {
+    atomic_write(path, text.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "pa_fsx_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_bytes_and_creates_parents() {
+        let d = tmp_dir("parents");
+        let path = d.join("a/b/c.json");
+        let path = path.to_str().unwrap();
+        atomic_write(path, b"{\"k\":1}").unwrap();
+        assert_eq!(std::fs::read(path).unwrap(), b"{\"k\":1}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn replaces_existing_file_completely() {
+        let d = tmp_dir("replace");
+        let path = d.join("p.json");
+        let path = path.to_str().unwrap();
+        atomic_write_str(path, "old-content-that-is-longer").unwrap();
+        atomic_write_str(path, "new").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "new");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let d = tmp_dir("clean");
+        let path = d.join("p.json");
+        for i in 0..4 {
+            atomic_write_str(path.to_str().unwrap(), &format!("v{i}")).unwrap();
+        }
+        let names: Vec<String> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["p.json".to_string()], "{names:?}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rename_failure_is_loud_and_cleans_temp() {
+        let d = tmp_dir("fail");
+        // destination is a non-empty directory -> rename must fail
+        let dest = d.join("blocked");
+        std::fs::create_dir_all(dest.join("inner")).unwrap();
+        let err = atomic_write_str(dest.to_str().unwrap(), "x").unwrap_err();
+        assert!(format!("{err:#}").contains("renaming"), "{err:#}");
+        let leftovers: Vec<String> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "blocked")
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

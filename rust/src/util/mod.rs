@@ -4,6 +4,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod fsx;
 pub mod json;
 pub mod mtx;
 pub mod pool;
