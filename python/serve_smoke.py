@@ -14,9 +14,14 @@ ISSUE 7 lifecycle:
      scoring rides along), then one promotion: the un-forced attempt
      must be rejected while the candidate lacks evidence, the forced
      one must swap it live;
-  6. dump the final stats payload to --stats-out and assert the
-     counters (solves_ok, reloads, promotions);
-  7. clean shutdown.
+  6. two-tenant router scenario (ISSUE 8): register "acme" with a
+     3-request quota and "globex" unlimited, solve through both
+     partitions, assert the 4th acme request is a typed
+     rejected[quota], and check the per-tenant stats ledgers stay
+     isolated;
+  7. dump the final stats payload to --stats-out and assert the
+     counters (solves_ok, reloads, promotions, routed/rejected);
+  8. clean shutdown.
 
 Exits non-zero on any failed request, missed counter, or protocol
 violation.
@@ -82,10 +87,53 @@ def dense_request(req_id, n, seed):
     return {"op": "solve", "id": req_id, "n": n, "a": a, "b": b}
 
 
+def routed_request(req_id, n, seed, tenant, lane):
+    """A solve request carrying the ISSUE 8 routing fields."""
+    req = dense_request(req_id, n, seed)
+    req["tenant"] = tenant
+    req["lane"] = lane
+    req["deadline_ms"] = 30000
+    return req
+
+
 def expect_ok(resp, what):
     if not resp.get("ok", False):
         die(f"{what} rejected: {resp}")
     return resp
+
+
+def two_tenant_scenario(c, n):
+    """Quota + isolation over the wire; returns (routed_ok, routed_rejected)."""
+    expect_ok(c.admin("tenant", tenant="acme", quota=3), "tenant acme")
+    expect_ok(c.admin("tenant", tenant="globex"), "tenant globex")
+
+    for i in range(3):
+        resp = c.call(routed_request(i, n, 900 + i, "acme", "interactive"))
+        expect_ok(resp, f"acme solve #{i}")
+    over = c.call(routed_request(3, n, 903, "acme", "interactive"))
+    if over.get("ok", False):
+        die(f"4th acme request must exceed the 3-request quota: {over}")
+    if over.get("rejected") != "quota":
+        die(f"over-quota rejection must be typed rejected[quota]: {over}")
+
+    for i in range(2):
+        resp = c.call(routed_request(10 + i, n, 950 + i, "globex", "batch"))
+        expect_ok(resp, f"globex solve #{i}")
+
+    tenants = expect_ok(c.admin("stats"), "stats")["router"]["tenants"]
+    acme, globex = tenants["acme"], tenants["globex"]
+    if acme["admitted"]["interactive"] != 3 or acme["shed"]["quota"] != 1:
+        die(f"acme ledger must read 3 admitted / 1 quota-shed: {acme}")
+    if acme["quota_remaining"] != 0:
+        die(f"acme must have spent its whole quota: {acme}")
+    if globex["admitted"]["batch"] != 2 or globex["shed"]["quota"] != 0:
+        die(f"globex ledger must read 2 admitted / 0 shed: {globex}")
+    # isolation: each tenant's counters see only its own traffic
+    if acme["counters"]["solves_ok"] != 3 or globex["counters"]["solves_ok"] != 2:
+        die(f"per-tenant solve counters must stay isolated: {acme} / {globex}")
+    if globex["fingerprint"] == "" or acme["fingerprint"] == "":
+        die("per-tenant learner fingerprints must be reported")
+    return 5, 1
 
 
 def main():
@@ -130,12 +178,20 @@ def main():
     if forced["policy_version"] != v1 + 1:
         die(f"promotion must bump the policy version ({v1} -> {forced['policy_version']})")
 
+    # multi-tenant router scenario: quotas, typed rejection, isolation
+    routed_ok, routed_rejected = two_tenant_scenario(c, args.n)
+
     stats = expect_ok(c.admin("stats"), "stats")
     with open(args.stats_out, "w", encoding="utf-8") as f:
         json.dump(stats, f, indent=2, sort_keys=True)
     counters = stats["counters"]
-    if counters["solves_ok"] != args.requests:
-        die(f"expected {args.requests} ok solves, got {counters['solves_ok']}")
+    total_ok = args.requests + routed_ok
+    if counters["solves_ok"] != total_ok:
+        die(f"expected {total_ok} ok solves, got {counters['solves_ok']}")
+    if counters["routed"] != routed_ok + routed_rejected:
+        die(f"expected {routed_ok + routed_rejected} routed requests, got {counters['routed']}")
+    if counters["rejected_quota"] != routed_rejected:
+        die(f"expected {routed_rejected} quota rejection, got {counters['rejected_quota']}")
     if counters["reloads"] < 1:
         die(f"expected at least one reload, got {counters['reloads']}")
     if counters["promotions"] != 1:
@@ -143,8 +199,9 @@ def main():
 
     expect_ok(c.admin("shutdown"), "shutdown")
     print(
-        f"serve_smoke: OK — {args.requests} solves, policy v{v0} -> "
-        f"v{forced['policy_version']} (one reload + one promotion), stats in {args.stats_out}"
+        f"serve_smoke: OK — {total_ok} solves across 3 tenants, policy v{v0} -> "
+        f"v{forced['policy_version']} (one reload + one promotion + one quota shed), "
+        f"stats in {args.stats_out}"
     )
 
 

@@ -215,6 +215,17 @@ impl SessionCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Hits as a fraction of lookups (0 before the first lookup) — the
+    /// per-tenant cache efficiency figure the stats endpoints report.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits() + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / total as f64
+        }
+    }
+
     /// Lifetime count of entries evicted because the bitwise hit
     /// verification failed (a fingerprint collision, or a resident entry
     /// corrupted after insert).

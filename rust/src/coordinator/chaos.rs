@@ -26,13 +26,20 @@
 //! baseline. The whole suite is deterministic given `(seed, rate,
 //! sizes)`; CI pins the seed and uploads the JSON report.
 //!
-//! The final mix (ISSUE 7) starts an in-process [`crate::serve`] daemon
-//! with the two daemon-layer fault sites armed: snapshot writes fail at
-//! `rate`, and the *first* hot-reload deterministically reads back
-//! corrupted bytes. With a second connection solving throughout, the
-//! mix asserts the corrupted swap is rejected as a typed error while
-//! the old policy keeps serving, and that the retried swap lands
+//! The daemon mix (ISSUE 7) starts an in-process [`crate::serve`]
+//! daemon with the two daemon-layer fault sites armed: snapshot writes
+//! fail at `rate`, and the *first* hot-reload deterministically reads
+//! back corrupted bytes. With a second connection solving throughout,
+//! the mix asserts the corrupted swap is rejected as a typed error
+//! while the old policy keeps serving, and that the retried swap lands
 //! exactly one version ahead with zero failed requests.
+//!
+//! The final mix (ISSUE 8) turns the fire on the multi-tenant router:
+//! the `queue-drop` and `lane-starve` sites armed on exact budgets, a
+//! tenant with a hard 2-request quota, and a three-connection flood on
+//! alternating lanes — asserting every shed request resolves as a
+//! *typed* `rejected[...]` response (tallied under `shed`), the quota
+//! ledger is exact, and nothing hangs.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -45,12 +52,12 @@ use crate::bandit::action::{Action, ActionSpace, SolverFamily};
 use crate::bandit::qtable::QTable;
 use crate::bandit::TrainedPolicy;
 use crate::chop::Prec;
-use crate::coordinator::serve_bench::{dense_system, rhs};
+use crate::coordinator::serve_bench::{dense_system, rhs, tiny_serve_policy};
 use crate::faults::{FaultPlan, FaultSite, N_SITES};
 use crate::features::{Binner, Discretizer};
 use crate::gen::sparse_spd;
 use crate::linalg::Mat;
-use crate::serve::{protocol, Client, Daemon, ServeOpts};
+use crate::serve::{protocol, Client, Daemon, Lane, RouterOpts, ServeOpts};
 use crate::system::SystemInput;
 use crate::util::config::Config;
 use crate::util::json::{self, Value};
@@ -139,6 +146,10 @@ struct Tally {
     input_rejected: u64,
     exhausted: u64,
     worker_panic: u64,
+    /// Typed admission rejections from the router
+    /// (`rejected[overload|quota|deadline]`) — load shedding, not
+    /// failure; invariant 3 only demands the rejection be typed.
+    shed: u64,
     other: u64,
     /// FP64-fallback bit-identity checks performed / passed.
     bit_checked: u64,
@@ -177,6 +188,7 @@ impl Tally {
         self.input_rejected += o.input_rejected;
         self.exhausted += o.exhausted;
         self.worker_panic += o.worker_panic;
+        self.shed += o.shed;
         self.other += o.other;
         self.bit_checked += o.bit_checked;
         self.bit_ok += o.bit_ok;
@@ -193,6 +205,7 @@ impl Tally {
             ("input_rejected", json::num(self.input_rejected as f64)),
             ("exhausted", json::num(self.exhausted as f64)),
             ("worker_panic", json::num(self.worker_panic as f64)),
+            ("shed", json::num(self.shed as f64)),
             ("other", json::num(self.other as f64)),
             ("fp64_bitmatch_checked", json::num(self.bit_checked as f64)),
             ("fp64_bitmatch_ok", json::num(self.bit_ok as f64)),
@@ -202,7 +215,7 @@ impl Tally {
     fn print(&self, name: &str, requests: usize) {
         println!(
             "{:<26} {:>3} req   clean {:>3}  absorbed {:>3}  rescued {:>3}  rejected {:>2}  \
-             exhausted {:>2}  panic {:>2}  bitmatch {}/{}",
+             exhausted {:>2}  panic {:>2}  shed {:>3}  bitmatch {}/{}",
             name,
             requests,
             self.clean,
@@ -211,6 +224,7 @@ impl Tally {
             self.input_rejected,
             self.exhausted,
             self.worker_panic,
+            self.shed,
             self.bit_ok,
             self.bit_checked,
         );
@@ -332,6 +346,19 @@ fn record_daemon_response(t: &mut Tally, resp: &Value) -> Result<()> {
     Ok(())
 }
 
+/// Like [`record_daemon_response`], but routed responses may also
+/// resolve as typed admission rejections (`rejected[overload]`,
+/// `rejected[quota]`, `rejected[deadline]`) — load shedding by design,
+/// tallied as `shed`. Anything else unclassifiable still lands in
+/// `other`, which invariant 3 forbids.
+fn record_router_response(t: &mut Tally, resp: &Value) -> Result<()> {
+    if !resp.get("ok")?.as_bool()? && resp.get("rejected").and_then(Value::as_str).is_ok() {
+        t.shed += 1;
+        return Ok(());
+    }
+    record_daemon_response(t, resp)
+}
+
 /// The daemon mix: an in-process `pallas-serve` daemon with the two
 /// daemon-layer fault sites armed — snapshot writes fail at `rate`
 /// (capped at 0.5 so one eventually lands), and the *first* hot-reload
@@ -350,15 +377,7 @@ fn run_daemon_mix(
     // process-unique snapshot dir: the tiny-suite and determinism tests
     // run concurrently under `cargo test`
     static MIX_ID: AtomicU64 = AtomicU64::new(0);
-    let policy = TrainedPolicy {
-        qtable: QTable::new(1, ActionSpace::reduced_top_k(9)),
-        discretizer: Discretizer {
-            kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
-            norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
-            delta_c: 1e-30,
-            delta_n: 1e-30,
-        },
-    };
+    let policy = tiny_serve_policy();
     let dir = std::env::temp_dir().join(format!(
         "pa_chaos_daemon_{}_{}",
         std::process::id(),
@@ -465,6 +484,166 @@ fn run_daemon_mix(
         "daemon: the policy-reload fault must fire exactly once (budget 1)"
     );
     ensure!(t.other == 0, "daemon mix: {} response(s) were unclassifiable", t.other);
+    Ok((t, fired))
+}
+
+/// The router mix (ISSUE 8): an in-process daemon with the two router
+/// chaos sites armed at rate 1.0, budget 2 each. Three deterministic
+/// phases:
+///
+/// 1. **burn** — two batch submissions soak the `lane-starve` budget
+///    and two interactive submissions soak `queue-drop`; all four must
+///    come back as typed `rejected[overload]`, never a hang;
+/// 2. **quota** — a tenant registered with a 2-request budget gets 4
+///    requests: exactly 2 admitted (and solved), exactly 2 typed
+///    `rejected[quota]`, with the tenant's own stats ledger matching;
+/// 3. **flood** — three connections hammer routed solves on alternating
+///    lanes against a 4-deep queue and 2 workers; every response must
+///    resolve ok or typed within its deadline (the whole mix runs under
+///    the caller's watchdog, so a hang fails the suite).
+fn run_router_mix(
+    seed: u64,
+    requests: &Arc<Vec<(SystemInput, Vec<f64>)>>,
+) -> Result<(Tally, [u64; N_SITES])> {
+    static MIX_ID: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "pa_chaos_router_{}_{}",
+        std::process::id(),
+        MIX_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let plan = FaultPlan::new(seed ^ 11)
+        .with(FaultSite::QueueDrop, 1.0)
+        .with_budget(FaultSite::QueueDrop, 2)
+        .with(FaultSite::LaneStarve, 1.0)
+        .with_budget(FaultSite::LaneStarve, 2);
+    let serve_opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        learn: false,
+        fault_plan: Some(plan),
+        router: RouterOpts { queue_cap: 4, workers: 2, ..RouterOpts::default() },
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(tiny_serve_policy(), Config::default(), serve_opts)?;
+    let addr = daemon.addr();
+    let mut c = Client::connect(addr)?;
+    let mut t = Tally::default();
+    let (a0, b0) = &requests[0];
+
+    // Phase 1 — burn the injected budgets deterministically.
+    for lane in [Lane::Batch, Lane::Batch, Lane::Interactive, Lane::Interactive] {
+        let req =
+            protocol::routed_solve_request_json(None, a0, b0, Some("burn"), Some(lane), None);
+        let resp = c.call(&req)?;
+        ensure!(!resp.get("ok")?.as_bool()?, "router: armed chaos site must shed: {resp:?}");
+        ensure!(
+            resp.get("rejected")?.as_str()? == "overload",
+            "router: injected sheds must be typed rejected[overload]: {resp:?}"
+        );
+        record_router_response(&mut t, &resp)?;
+    }
+
+    // Phase 2 — quota, now fault-free.
+    let reg = c.call(&protocol::admin_request(
+        "tenant",
+        vec![("tenant", json::s("capped")), ("quota", json::num(2.0))],
+    ))?;
+    ensure!(reg.get("ok")?.as_bool()?, "router: tenant registration failed: {reg:?}");
+    let (mut quota_ok, mut quota_shed) = (0u64, 0u64);
+    for i in 0..4u64 {
+        let req = protocol::routed_solve_request_json(
+            Some(i),
+            a0,
+            b0,
+            Some("capped"),
+            Some(Lane::Interactive),
+            Some(30_000),
+        );
+        let resp = c.call(&req)?;
+        if resp.get("ok")?.as_bool()? {
+            quota_ok += 1;
+        } else {
+            ensure!(
+                resp.get("rejected")?.as_str()? == "quota",
+                "router: over-quota request must be rejected[quota]: {resp:?}"
+            );
+            quota_shed += 1;
+        }
+        record_router_response(&mut t, &resp)?;
+    }
+    ensure!(
+        quota_ok == 2 && quota_shed == 2,
+        "router: quota 2 must admit exactly 2 of 4 ({quota_ok} ok / {quota_shed} shed)"
+    );
+
+    // Phase 3 — saturating flood on alternating lanes.
+    let mut floods = Vec::new();
+    for k in 0..3u64 {
+        let reqs = Arc::clone(requests);
+        floods.push(
+            std::thread::Builder::new()
+                .name(format!("chaos-router-flood-{k}"))
+                .spawn(move || -> Result<Tally> {
+                    let mut c = Client::connect(addr)?;
+                    let mut t = Tally::default();
+                    for (i, (a, b)) in reqs.iter().enumerate() {
+                        let lane = if (i as u64 + k) % 2 == 0 {
+                            Lane::Interactive
+                        } else {
+                            Lane::Batch
+                        };
+                        let req = protocol::routed_solve_request_json(
+                            Some(1000 + i as u64),
+                            a,
+                            b,
+                            Some("flood"),
+                            Some(lane),
+                            Some(30_000),
+                        );
+                        let resp = c.call(&req)?;
+                        record_router_response(&mut t, &resp)?;
+                    }
+                    Ok(t)
+                })?,
+        );
+    }
+    for h in floods {
+        match h.join() {
+            Ok(ft) => t.merge(&ft?),
+            Err(_) => bail!("router: flood connection thread panicked"),
+        }
+    }
+
+    // Per-tenant ledger: the capped tenant's counters must match the
+    // phase-2 arithmetic exactly — burn/flood traffic is invisible to it.
+    let stats = c.call(&protocol::admin_request("stats", vec![]))?;
+    let capped = stats.get("router")?.get("tenants")?.get("capped")?;
+    ensure!(
+        capped.get("shed")?.get("quota")?.as_f64()? == 2.0
+            && capped.get("admitted")?.get("interactive")?.as_f64()? == 2.0,
+        "router: capped tenant ledger does not match admissions: {capped:?}"
+    );
+
+    let down = c.call(&protocol::admin_request("shutdown", vec![]))?;
+    ensure!(down.get("ok")?.as_bool()?, "router: shutdown refused: {down:?}");
+    let mut fired = [0u64; N_SITES];
+    if let Some(inj) = daemon.injector() {
+        for site in FaultSite::ALL {
+            fired[site as usize] += inj.fired(site);
+        }
+    }
+    drop(c);
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+    ensure!(
+        fired[FaultSite::QueueDrop as usize] == 2 && fired[FaultSite::LaneStarve as usize] == 2,
+        "router: chaos budgets must be spent exactly (queue-drop {}, lane-starve {})",
+        fired[FaultSite::QueueDrop as usize],
+        fired[FaultSite::LaneStarve as usize]
+    );
+    ensure!(t.other == 0, "router mix: {} response(s) were unclassifiable", t.other);
+    ensure!(t.shed >= 6, "router mix: expected >= 6 typed sheds, got {}", t.shed);
     Ok((t, fired))
 }
 
@@ -665,6 +844,23 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<Value> {
     }
     cases.push(t.to_json("daemon/reload-under-fire", r + 2));
 
+    // --- the multi-tenant router under admission chaos (ISSUE 8):
+    // injected queue drops and lane starvation, a hard tenant quota,
+    // and a saturating three-connection flood on alternating lanes ---
+    let router_reqs = Arc::clone(&repeated_dense);
+    let (t, router_fired) =
+        watchdogged("router/overload-under-fire (whole mix)".to_string(), wd * 4, move || {
+            run_router_mix(seed, &router_reqs)
+        })??;
+    for site in FaultSite::ALL {
+        fired[site as usize] += router_fired[site as usize];
+    }
+    let router_requests = 8 + 3 * r;
+    if !opts.quiet {
+        t.print("router/overload-under-fire", router_requests);
+    }
+    cases.push(t.to_json("router/overload-under-fire", router_requests));
+
     ensure!(
         fired.iter().sum::<u64>() > 0,
         "chaos suite fired no faults at all — the schedule is vacuous (seed {:#x}, rate {})",
@@ -703,7 +899,7 @@ mod tests {
         let v = run_chaos(&opts).unwrap();
         assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "chaos");
         let cases = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(cases.len(), 7);
+        assert_eq!(cases.len(), 8);
         for c in cases {
             assert_eq!(c.get("other").unwrap().as_f64().unwrap(), 0.0, "{c:?}");
             let checked = c.get("fp64_bitmatch_checked").unwrap().as_f64().unwrap();
@@ -718,6 +914,12 @@ mod tests {
             cases[6].get("name").unwrap().as_str().unwrap(),
             "daemon/reload-under-fire"
         );
+        // the router mix shed under fire — every rejection typed
+        assert_eq!(
+            cases[7].get("name").unwrap().as_str().unwrap(),
+            "router/overload-under-fire"
+        );
+        assert!(cases[7].get("shed").unwrap().as_f64().unwrap() >= 6.0, "{:?}", cases[7]);
         // and the schedule was not vacuous
         let fired = v.get("fired").unwrap();
         let total: f64 = FaultSite::ALL
@@ -727,6 +929,9 @@ mod tests {
         assert!(total > 0.0);
         // the daemon-layer reload fault fired exactly its budget
         assert_eq!(fired.get("policy-reload").unwrap().as_f64().unwrap(), 1.0);
+        // the router-layer sites fired exactly their budgets
+        assert_eq!(fired.get("queue-drop").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(fired.get("lane-starve").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod serve_bench;
 pub use chaos::{run_chaos, ChaosOpts};
 pub use eval::{evaluate, evaluate_with_action, EvalRecord, EvalSummary, PrecisionUsage};
 pub use experiments::{dense_suite, head_to_head_suite, sparse_suite, HeadToHead, SuiteResult};
-pub use serve_bench::{run_serve_bench, ServeBenchOpts};
+pub use serve_bench::{run_open_loop_bench, run_serve_bench, OpenLoopOpts, ServeBenchOpts};

@@ -50,10 +50,18 @@ pub enum FaultSite {
     /// (`serve::daemon`) — the reload must reject loudly and keep serving
     /// on the old policy. Daemon-layer site: no solve-path hook.
     PolicyReload,
+    /// Drop an admitted request at the router's queue boundary
+    /// (`serve::router`) — the client must see a typed
+    /// `rejected[overload]`, never a hang. Daemon-layer site.
+    QueueDrop,
+    /// Shed a batch-lane admission as if the lane were starved past its
+    /// watermark (`serve::router`) — typed `rejected[overload]`, never a
+    /// hang. Daemon-layer site.
+    LaneStarve,
 }
 
 /// Number of distinct fault sites (array sizes in `FaultPlan`).
-pub const N_SITES: usize = 10;
+pub const N_SITES: usize = 12;
 
 impl FaultSite {
     /// Every site, in declaration order (index == `site as usize`).
@@ -68,13 +76,22 @@ impl FaultSite {
         FaultSite::WorkerPanic,
         FaultSite::SnapshotWrite,
         FaultSite::PolicyReload,
+        FaultSite::QueueDrop,
+        FaultSite::LaneStarve,
     ];
 
-    /// Sites whose hooks live in the serving daemon rather than inside
-    /// the solve path — `solve_ref` never consults them, so solve-level
-    /// chaos sweeps over [`FaultSite::ALL`] skip these.
+    /// Sites whose hooks live in the serving daemon (snapshot/reload
+    /// handlers, request router) rather than inside the solve path —
+    /// `solve_ref` never consults them, so solve-level chaos sweeps over
+    /// [`FaultSite::ALL`] skip these.
     pub fn is_daemon_site(self) -> bool {
-        matches!(self, FaultSite::SnapshotWrite | FaultSite::PolicyReload)
+        matches!(
+            self,
+            FaultSite::SnapshotWrite
+                | FaultSite::PolicyReload
+                | FaultSite::QueueDrop
+                | FaultSite::LaneStarve
+        )
     }
 
     /// Stable kebab-case name (CLI flags, JSON reports).
@@ -90,6 +107,8 @@ impl FaultSite {
             FaultSite::WorkerPanic => "worker-panic",
             FaultSite::SnapshotWrite => "snapshot-write",
             FaultSite::PolicyReload => "policy-reload",
+            FaultSite::QueueDrop => "queue-drop",
+            FaultSite::LaneStarve => "lane-starve",
         }
     }
 

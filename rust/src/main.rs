@@ -82,6 +82,16 @@ SUBCOMMANDS:
                   (--gate-tolerance 0.5; provisional baselines warn only)
                 --chaos also run the fault-injection suite afterwards
                   (--chaos-out CHAOS_serve.json, --chaos-seed N)
+                --open-loop  run the open-loop SLO load harness instead
+                  (EXPERIMENTS.md §Load): Poisson arrivals over an
+                  offered-load ladder vs probed capacity, per-lane
+                  p50/p99/p999 + shed rate at each step
+                  --addr host:port   (omit => spawn a local daemon)
+                  --steps 0.5,1.0,2.0  --requests-per-step N
+                  --connections C  --batch-share f  --deadline-ms N
+                  --slo-p99-ms MS  --seed N  --out BENCH_load.json
+                  exits nonzero on any violation (hang, transport
+                  error, or interactive p99 over SLO at <= capacity)
   serve       resident serving daemon (newline-delimited JSON over TCP;
                 DESIGN.md §2g): online Q-learning on live traffic,
                 atomic versioned policy snapshots, zero-downtime
@@ -91,12 +101,17 @@ SUBCOMMANDS:
                 --epsilon 0.05  --alpha 0  (0 = 1/N(s,a) schedule)
                 --drain-every 16  --snapshot-every 0  --shadow-every 4
                 --fault-rate p --fault-seed N  (chaos hooks; tests only)
+                --queue-cap N  --router-workers N  --watermark f
+                --default-quota N    multi-tenant router knobs
+                  (DESIGN.md §2h; watermark = batch-lane shed fraction)
                 runs until a `shutdown` request arrives on the socket
   serve-ctl   one-shot client for a running daemon
                 <ping|stats|snapshot|reload|shadow-load|shadow-status|
-                 promote|shutdown>   --addr 127.0.0.1:7747
-                --path policy.json   (reload / shadow-load)
+                 promote|tenant|shutdown>   --addr 127.0.0.1:7747
+                --path policy.json   (reload / shadow-load / tenant)
                 --force              (promote past the win-rate gate)
+                --tenant name --quota N   (tenant: register/reset an
+                  isolated router partition; omit --quota = unlimited)
   chaos       fault-injection suite: the serving mixes under a seeded
                 fault schedule, asserting no panic / no hang / typed
                 outcomes / bit-identical FP64 fallback
@@ -525,8 +540,64 @@ fn run() -> Result<()> {
         }
         Some("serve-bench") => {
             use precision_autotune::coordinator::serve_bench::{run_serve_bench, ServeBenchOpts};
-            let out = args.get("out").unwrap_or("BENCH_serve.json");
             let tiny = args.get("preset") == Some("tiny");
+            // --open-loop: the SLO load harness (EXPERIMENTS.md §Load)
+            // replaces the closed-loop mixes entirely; its report is a
+            // hard gate — any violation exits nonzero.
+            if args.flag("open-loop") {
+                use precision_autotune::coordinator::serve_bench::{
+                    run_open_loop_bench, OpenLoopOpts,
+                };
+                let defaults = OpenLoopOpts::default();
+                let steps = match args.get("steps") {
+                    Some(spec) => spec
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|t| !t.is_empty())
+                        .map(|t| {
+                            t.parse::<f64>()
+                                .map_err(|e| anyhow!("bad --steps entry {t:?}: {e}"))
+                        })
+                        .collect::<Result<Vec<f64>>>()?,
+                    None => defaults.steps.clone(),
+                };
+                let opts = OpenLoopOpts {
+                    addr: args.get("addr").map(str::to_string),
+                    steps,
+                    requests_per_step: args
+                        .get_usize("requests-per-step")?
+                        .unwrap_or(if tiny { 12 } else { defaults.requests_per_step }),
+                    connections: args
+                        .get_usize("connections")?
+                        .unwrap_or(if tiny { 2 } else { defaults.connections }),
+                    batch_share: args.get_f64("batch-share")?.unwrap_or(defaults.batch_share),
+                    n: args.get_usize("n")?.unwrap_or(if tiny { 12 } else { defaults.n }),
+                    deadline_ms: args
+                        .get_usize("deadline-ms")?
+                        .map(|v| v as u64)
+                        .unwrap_or(defaults.deadline_ms),
+                    slo_p99_ms: args.get_f64("slo-p99-ms")?.unwrap_or(defaults.slo_p99_ms),
+                    seed: args.get_usize("seed")?.map(|s| s as u64).unwrap_or(defaults.seed),
+                    quiet,
+                };
+                let report = run_open_loop_bench(&opts)?;
+                let out = args.get("out").unwrap_or("BENCH_load.json");
+                write_json_report(out, &report)?;
+                println!("open-loop load report written to {out}");
+                let violations = report.get("violations")?.as_arr()?;
+                if !violations.is_empty() {
+                    for v in violations {
+                        eprintln!("[slo] {}", v.as_str().unwrap_or("?"));
+                    }
+                    bail!(
+                        "{} open-loop SLO violation(s); see {out}",
+                        violations.len()
+                    );
+                }
+                println!("open-loop SLO gate: pass");
+                return Ok(());
+            }
+            let out = args.get("out").unwrap_or("BENCH_serve.json");
             let defaults = if tiny {
                 ServeBenchOpts { requests: 6, n_dense: 16, n_sparse: 24, quiet }
             } else {
@@ -596,7 +667,9 @@ fn run() -> Result<()> {
         }
         Some("serve") => {
             use precision_autotune::faults::FaultPlan;
-            use precision_autotune::serve::{Daemon, OnlineOpts, ServeOpts, ShadowOpts};
+            use precision_autotune::serve::{
+                Daemon, OnlineOpts, RouterOpts, ServeOpts, ShadowOpts, UNLIMITED_QUOTA,
+            };
             let cfg = Config::from_args(&args)?;
             let path = args
                 .get("policy")
@@ -621,6 +694,19 @@ fn run() -> Result<()> {
                     rate,
                 )
             });
+            let router_defaults = RouterOpts::default();
+            let router = RouterOpts {
+                queue_cap: args.get_usize("queue-cap")?.unwrap_or(router_defaults.queue_cap),
+                shed_watermark: args
+                    .get_f64("watermark")?
+                    .unwrap_or(router_defaults.shed_watermark),
+                workers: args.get_usize("router-workers")?.unwrap_or(router_defaults.workers),
+                default_quota: args
+                    .get_usize("default-quota")?
+                    .map(|q| q as u64)
+                    .unwrap_or(UNLIMITED_QUOTA),
+                ..router_defaults
+            };
             let opts = ServeOpts {
                 addr: args.get("addr").unwrap_or("127.0.0.1:7747").to_string(),
                 snapshot_dir: args.get("snapshot-dir").unwrap_or("serve-snapshots").to_string(),
@@ -630,6 +716,7 @@ fn run() -> Result<()> {
                 drain_every: args.get_usize("drain-every")?.map(|v| v as u64).unwrap_or(16),
                 snapshot_every: args.get_usize("snapshot-every")?.map(|v| v as u64).unwrap_or(0),
                 fault_plan,
+                router,
                 quiet,
             };
             let artifacts_dir = cfg.artifacts_dir.clone();
@@ -660,7 +747,7 @@ fn run() -> Result<()> {
             let op = args.positional.first().map(|s| s.as_str()).ok_or_else(|| {
                 anyhow!(
                     "serve-ctl requires an operation: ping|stats|snapshot|reload|\
-                     shadow-load|shadow-status|promote|shutdown"
+                     shadow-load|shadow-status|promote|tenant|shutdown"
                 )
             })?;
             let addr = args.get("addr").unwrap_or("127.0.0.1:7747");
@@ -680,6 +767,18 @@ fn run() -> Result<()> {
                 "promote" => {
                     if args.flag("force") {
                         extra.push(("force", Value::Bool(true)));
+                    }
+                }
+                "tenant" => {
+                    let name = args
+                        .get("tenant")
+                        .ok_or_else(|| anyhow!("tenant requires --tenant <name>"))?;
+                    extra.push(("tenant", json::s(name)));
+                    if let Some(q) = args.get_usize("quota")? {
+                        extra.push(("quota", json::num(q as f64)));
+                    }
+                    if let Some(p) = args.get("path") {
+                        extra.push(("path", json::s(p)));
                     }
                 }
                 "ping" | "stats" | "snapshot" | "shadow-status" | "shutdown" => {}

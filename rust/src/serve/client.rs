@@ -26,6 +26,14 @@ impl Client {
         Ok(Client { stream, reader })
     }
 
+    /// Bound every subsequent response read; `None` restores blocking
+    /// reads. The writer and reader halves are fd clones of one socket,
+    /// so the timeout applies to both. Open-loop load generators use
+    /// this so a wedged daemon surfaces as a timeout error, not a hang.
+    pub fn set_read_timeout(&self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout).context("setting read timeout")
+    }
+
     /// Send one request object, return the parsed response object.
     pub fn call(&mut self, request: &Value) -> Result<Value> {
         self.call_line(&request.to_string())

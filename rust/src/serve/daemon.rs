@@ -25,11 +25,20 @@
 //! mutation, no torn reads).
 //!
 //! The daemon owns its own [`FaultInjector`] for the daemon-layer chaos
-//! sites ([`FaultSite::SnapshotWrite`], [`FaultSite::PolicyReload`]) —
-//! those fire on connection threads, outside the tuner's ambient solve
-//! scope. The same plan is also armed on every tuner it builds, so the
-//! solver-stack sites keep firing through reloads (their counters reset
-//! with the rebuilt injector).
+//! sites ([`FaultSite::SnapshotWrite`], [`FaultSite::PolicyReload`],
+//! and the router admission sites) — those fire on connection threads,
+//! outside the tuner's ambient solve scope. The same plan is also armed
+//! on every tuner it builds, so the solver-stack sites keep firing
+//! through reloads (their counters reset with the rebuilt injector).
+//!
+//! Requests carrying a routing field (`tenant` / `lane` /
+//! `deadline_ms`) are handed to the multi-tenant [`Router`]
+//! ([`super::router`], DESIGN.md §2h) instead of the shared solve path:
+//! per-tenant tuner + learner partitions, bounded priority-lane queues
+//! with typed admission rejections, and a dedicated worker pool.
+//! Requests without routing fields never touch the router, so PR 7
+//! clients (and the daemon's own determinism tests) see identical
+//! behavior.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -54,13 +63,15 @@ use super::online::{OnlineLearner, OnlineOpts};
 use super::protocol::{
     self, error_response, ok_response, parse_request, Request, SolveRequest,
 };
+use super::router::{BuildTuner, Router, RouterOpts, UNLIMITED_QUOTA};
 use super::shadow::{ShadowOpts, ShadowScorer, ShadowVerdict};
 use super::snapshot::PolicySnapshotter;
 use super::stats::ServeStats;
 
 /// Builds the solver backend for each tuner the daemon assembles (one at
-/// boot, one per policy swap). A factory rather than an instance so
-/// hot-reload never has to move a live backend between facades.
+/// boot, one per policy swap, one per tenant partition). A factory
+/// rather than an instance so hot-reload never has to move a live
+/// backend between facades.
 pub type BackendFactory = Box<dyn Fn() -> Box<dyn SolverBackend> + Send + Sync>;
 
 /// Daemon configuration.
@@ -81,9 +92,13 @@ pub struct ServeOpts {
     /// Auto-snapshot the online policy every N observations (0 = only on
     /// explicit `snapshot` requests).
     pub snapshot_every: u64,
-    /// Chaos plan armed on the daemon (snapshot/reload sites) and on
-    /// every tuner it builds (solver-stack sites). Never in production.
+    /// Chaos plan armed on the daemon (snapshot/reload/router sites)
+    /// and on every tuner it builds (solver-stack sites). Never in
+    /// production.
     pub fault_plan: Option<FaultPlan>,
+    /// Multi-tenant router knobs (queue bounds, lane weights, worker
+    /// pool, default quota).
+    pub router: RouterOpts,
     /// Suppress the startup line on stdout.
     pub quiet: bool,
 }
@@ -99,6 +114,7 @@ impl Default for ServeOpts {
             drain_every: 16,
             snapshot_every: 0,
             fault_plan: None,
+            router: RouterOpts::default(),
             quiet: false,
         }
     }
@@ -109,7 +125,11 @@ struct DaemonState {
     addr: SocketAddr,
     cfg: Config,
     opts: ServeOpts,
-    factory: BackendFactory,
+    /// `Arc` (not the public `Box` alias) so the router's tenant
+    /// builder shares the same factory.
+    factory: Arc<dyn Fn() -> Box<dyn SolverBackend> + Send + Sync>,
+    /// The multi-tenant request router (only routed requests touch it).
+    router: Router,
     live: RwLock<Arc<Autotuner>>,
     learner: Mutex<OnlineLearner>,
     shadow: Mutex<Option<ShadowScorer>>,
@@ -136,7 +156,7 @@ impl DaemonState {
     /// Assemble a fresh serving facade for `policy`.
     fn build_tuner(&self, policy: &TrainedPolicy) -> Result<Autotuner> {
         let mut b = Autotuner::builder()
-            .boxed_backend((self.factory)())
+            .boxed_backend((*self.factory)())
             .policy(policy.clone())
             .config(self.cfg.clone());
         if let Some(plan) = &self.opts.fault_plan {
@@ -176,11 +196,41 @@ impl Daemon {
             .map(|plan| Arc::new(FaultInjector::new(plan.clone())));
         let learner = OnlineLearner::new(&policy, &cfg, opts.online);
         let snapshotter = PolicySnapshotter::new(&opts.snapshot_dir);
+        // `Box<dyn Fn> -> Arc<dyn Fn>` so the router's tenant builder
+        // shares the daemon's factory (same backend, config, and armed
+        // fault plan as `build_tuner`).
+        let factory: Arc<dyn Fn() -> Box<dyn SolverBackend> + Send + Sync> = Arc::from(factory);
+        let build: BuildTuner = {
+            let factory = factory.clone();
+            let cfg = cfg.clone();
+            let fault_plan = opts.fault_plan.clone();
+            Arc::new(move |policy: &TrainedPolicy| {
+                let mut b = Autotuner::builder()
+                    .boxed_backend((*factory)())
+                    .policy(policy.clone())
+                    .config(cfg.clone());
+                if let Some(plan) = &fault_plan {
+                    b = b.fault_plan(plan.clone());
+                }
+                b.build()
+            })
+        };
+        let router = Router::new(
+            opts.router,
+            opts.learn,
+            opts.online,
+            opts.drain_every,
+            cfg.clone(),
+            policy.clone(),
+            build,
+            injector.clone(),
+        );
         let state = Arc::new(DaemonState {
             addr,
             cfg: cfg.clone(),
             opts,
             factory,
+            router,
             live: RwLock::new(Arc::new(Autotuner::builder().build()?)), // placeholder
             learner: Mutex::new(learner),
             shadow: Mutex::new(None),
@@ -258,6 +308,9 @@ impl Drop for Daemon {
 
 fn request_shutdown(state: &DaemonState) {
     if !state.shutdown.swap(true, Ordering::SeqCst) {
+        // drain the router first: queued routed jobs still get their
+        // (typed) responses before the accept loop winds down
+        state.router.shutdown();
         // unblock the accept loop; the connection is discarded there
         let _ = TcpStream::connect(state.addr);
     }
@@ -367,10 +420,53 @@ fn handle_line(line: &str, state: &DaemonState) -> Value {
         Request::Reload { path } => handle_reload(state, path),
         Request::ShadowLoad { path } => handle_shadow_load(state, &path),
         Request::Promote { force } => handle_promote(state, force),
+        Request::Tenant { tenant, quota, path } => handle_tenant(state, &tenant, quota, path),
+    }
+}
+
+/// Register (or re-register) a router tenant: fresh partition, optional
+/// request quota, optional dedicated policy (default: the daemon's base
+/// policy).
+fn handle_tenant(
+    state: &DaemonState,
+    tenant: &str,
+    quota: Option<u64>,
+    path: Option<String>,
+) -> Value {
+    let policy = match path.as_deref().map(TrainedPolicy::load).transpose() {
+        Ok(p) => p,
+        Err(e) => return error_response("tenant", None, &e),
+    };
+    let quota = quota.unwrap_or(state.opts.router.default_quota);
+    let version = state.version.load(Ordering::SeqCst);
+    match state.router.register(tenant, quota, policy.as_ref(), version) {
+        Ok(t) => ok_response(
+            "tenant",
+            vec![
+                ("policy_version", json::num(t.policy_version() as f64)),
+                (
+                    "quota",
+                    if t.quota_limit() == UNLIMITED_QUOTA {
+                        json::s("unlimited")
+                    } else {
+                        json::num(t.quota_limit() as f64)
+                    },
+                ),
+                ("tenant", json::s(tenant)),
+            ],
+        ),
+        Err(e) => error_response(
+            "tenant",
+            None,
+            &e.context(format!("registering tenant {tenant:?}")),
+        ),
     }
 }
 
 fn handle_solve(req: &SolveRequest, state: &DaemonState) -> Value {
+    if req.routed() {
+        return handle_solve_routed(req, state);
+    }
     // clone the facade under a brief read lock: the solve runs entirely
     // on this clone, so a concurrent hot-swap never touches it
     let (tuner, version) = {
@@ -398,6 +494,40 @@ fn handle_solve(req: &SolveRequest, state: &DaemonState) -> Value {
             error_response("solve", req.id, &e)
         }
     }
+}
+
+/// A solve carrying a routing field: hand it to the router (per-tenant
+/// partition, admission control, priority lanes) and keep the global
+/// counters honest. Routed traffic learns on its tenant's learner, not
+/// the daemon's, and is never shadow-scored — the shadow arm compares
+/// candidates against the single-tenant live policy only.
+fn handle_solve_routed(req: &SolveRequest, state: &DaemonState) -> Value {
+    state.stats.routed.fetch_add(1, Ordering::Relaxed);
+    let version = state.version.load(Ordering::SeqCst);
+    let resp = state.router.submit(req, version);
+    let ok = resp.get("ok").ok().and_then(|v| v.as_bool().ok()).unwrap_or(false);
+    if ok {
+        state.stats.solves_ok.fetch_add(1, Ordering::Relaxed);
+        if resp.get("degraded").ok().and_then(|v| v.as_bool().ok()).unwrap_or(false) {
+            state.stats.degraded.fetch_add(1, Ordering::Relaxed);
+        }
+    } else {
+        match resp.get("rejected").ok().and_then(|v| v.as_str().ok()) {
+            Some("overload") => {
+                state.stats.rejected_overload.fetch_add(1, Ordering::Relaxed);
+            }
+            Some("quota") => {
+                state.stats.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            }
+            Some("deadline") => {
+                state.stats.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                state.stats.solve_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    resp
 }
 
 /// The learning serve path: features once, ε-greedy pick over the online
@@ -691,6 +821,7 @@ fn stats_value(state: &DaemonState) -> Value {
             ("learn", Value::Bool(state.opts.learn)),
             ("online", online),
             ("policy_version", json::num(state.version.load(Ordering::SeqCst) as f64)),
+            ("router", state.router.stats_json()),
             ("shadow", shadow),
             ("snapshot_dir", json::s(state.snapshotter.dir())),
         ],

@@ -31,16 +31,29 @@
 //!   trajectory, degradation-ladder walks, and the current policy
 //!   version.
 //!
+//! * [`router`] — the multi-tenant request router (DESIGN.md §2h):
+//!   per-tenant partitions (own `SessionCache`, own `OnlineLearner`,
+//!   own quota), bounded priority-lane queues with admission control
+//!   (typed `rejected[overload]` / `rejected[quota]` /
+//!   `rejected[deadline]`, never a hang), and a dedicated worker pool
+//!   draining a deterministic deficit-weighted round robin so batch
+//!   traffic cannot starve interactive solves. Requests without
+//!   routing fields bypass it entirely.
+//!
 //! Chaos hooks: [`crate::faults::FaultSite::SnapshotWrite`] fails the
-//! snapshot write path and [`crate::faults::FaultSite::PolicyReload`]
+//! snapshot write path, [`crate::faults::FaultSite::PolicyReload`]
 //! corrupts the bytes read back at hot-reload time — the reload must
-//! reject loudly and keep serving on the old policy (locked by
-//! `tests/chaos.rs` and the `chaos` CLI's daemon mix).
+//! reject loudly and keep serving on the old policy — and
+//! [`crate::faults::FaultSite::QueueDrop`] /
+//! [`crate::faults::FaultSite::LaneStarve`] shed router admissions,
+//! which must resolve as typed rejections (locked by `tests/chaos.rs`,
+//! `tests/serve_router.rs`, and the `chaos` CLI's daemon/router mixes).
 
 pub mod client;
 pub mod daemon;
 pub mod online;
 pub mod protocol;
+pub mod router;
 pub mod shadow;
 pub mod snapshot;
 pub mod stats;
@@ -49,6 +62,7 @@ pub use client::Client;
 pub use daemon::{Daemon, ServeOpts};
 pub use online::{OnlineLearner, OnlineObservation, OnlineOpts};
 pub use protocol::{parse_request, Request, SolveRequest};
+pub use router::{Lane, Router, RouterOpts, Tenant, WeightedQueues, UNLIMITED_QUOTA};
 pub use shadow::{ShadowOpts, ShadowScorer, ShadowVerdict};
 pub use snapshot::PolicySnapshotter;
 pub use stats::ServeStats;

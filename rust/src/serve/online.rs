@@ -231,6 +231,12 @@ impl OnlineLearner {
         &self.qtable
     }
 
+    /// The online table's fingerprint — the bitwise witness the
+    /// determinism and tenant-isolation tests compare.
+    pub fn fingerprint(&self) -> u64 {
+        self.qtable.fingerprint()
+    }
+
     /// The online table packaged as a policy artifact (what `snapshot`
     /// persists and `promote` installs).
     pub fn policy(&self) -> TrainedPolicy {

@@ -20,6 +20,8 @@ use crate::sparse::Csr;
 use crate::system::SystemInput;
 use crate::util::json::{self, Value};
 
+use super::router::Lane;
+
 /// One `op: "solve"` payload, parsed and bounds-checked.
 #[derive(Clone, Debug)]
 pub struct SolveRequest {
@@ -27,6 +29,19 @@ pub struct SolveRequest {
     pub id: Option<u64>,
     pub system: SystemInput,
     pub b: Vec<f64>,
+    /// Routing fields (PR 8): all optional, and a request carrying none
+    /// of them takes the original single-tenant path — PR 7 clients are
+    /// wire-compatible byte for byte.
+    pub tenant: Option<String>,
+    pub lane: Option<Lane>,
+    pub deadline_ms: Option<u64>,
+}
+
+impl SolveRequest {
+    /// Does this request go through the multi-tenant router?
+    pub fn routed(&self) -> bool {
+        self.tenant.is_some() || self.lane.is_some() || self.deadline_ms.is_some()
+    }
 }
 
 /// Every operation the daemon answers.
@@ -46,6 +61,10 @@ pub enum Request {
     /// Install the shadow candidate as the live policy — gated on its
     /// win-rate verdict unless `force`.
     Promote { force: bool },
+    /// Register (or re-register, resetting the partition) a router
+    /// tenant: optional request quota and optional policy path (default:
+    /// the daemon's base policy).
+    Tenant { tenant: String, quota: Option<u64>, path: Option<String> },
 }
 
 /// Non-null field lookup.
@@ -82,6 +101,18 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "promote" => Ok(Request::Promote {
             force: opt(&v, "force").map(|f| f.as_bool()).transpose()?.unwrap_or(false),
         }),
+        "tenant" => Ok(Request::Tenant {
+            tenant: opt(&v, "tenant")
+                .context("tenant requires \"tenant\" (the tenant name)")?
+                .as_str()?
+                .to_string(),
+            quota: opt(&v, "quota")
+                .map(|q| q.as_usize())
+                .transpose()
+                .context("field \"quota\"")?
+                .map(|q| q as u64),
+            path: opt(&v, "path").map(|p| p.as_str().map(str::to_string)).transpose()?,
+        }),
         other => bail!("unknown op {other:?}"),
     }
 }
@@ -102,6 +133,22 @@ fn parse_solve(v: &Value) -> Result<SolveRequest> {
         bail!("rhs length {} does not match n = {n}", b.len());
     }
     let id = opt(v, "id").map(|x| x.as_usize()).transpose().context("field \"id\"")?;
+    let tenant = opt(v, "tenant")
+        .map(|t| t.as_str().map(str::to_string))
+        .transpose()
+        .context("field \"tenant\"")?;
+    let lane = opt(v, "lane")
+        .map(|l| -> Result<Lane> {
+            let name = l.as_str().context("field \"lane\"")?;
+            Lane::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown lane {name:?} (interactive|batch)"))
+        })
+        .transpose()?;
+    let deadline_ms = opt(v, "deadline_ms")
+        .map(|x| x.as_usize())
+        .transpose()
+        .context("field \"deadline_ms\"")?
+        .map(|x| x as u64);
     let system = match (opt(v, "a"), opt(v, "coo")) {
         (Some(_), Some(_)) => bail!("solve takes either \"a\" (dense) or \"coo\" (sparse), not both"),
         (None, None) => bail!("solve requires a system: \"a\" (dense) or \"coo\" (sparse)"),
@@ -135,7 +182,7 @@ fn parse_solve(v: &Value) -> Result<SolveRequest> {
             SystemInput::Sparse(Csr::from_triplets(n, n, &triplets))
         }
     };
-    Ok(SolveRequest { id, system, b })
+    Ok(SolveRequest { id, system, b, tenant, lane, deadline_ms })
 }
 
 /// Successful response envelope.
@@ -156,6 +203,23 @@ pub fn error_response(op: &str, id: Option<u64>, err: &anyhow::Error) -> Value {
     if let Some(kind) = SolveError::classify(err) {
         fields.push(("kind", json::s(kind.code())));
     }
+    if let Some(id) = id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Typed admission rejection (`rejected[overload]` / `rejected[quota]`
+/// / `rejected[deadline]`): the router's answer when a request is shed
+/// instead of solved. Always a response, never a hang — the `rejected`
+/// field is the machine-readable code.
+pub fn rejected_response(id: Option<u64>, code: &str, detail: &str) -> Value {
+    let mut fields = vec![
+        ("error", json::s(&format!("rejected[{code}]: {detail}"))),
+        ("ok", Value::Bool(false)),
+        ("op", json::s("solve")),
+        ("rejected", json::s(code)),
+    ];
     if let Some(id) = id {
         fields.push(("id", json::num(id as f64)));
     }
@@ -222,6 +286,32 @@ pub fn solve_request_json(id: Option<u64>, system: &SystemInput, b: &[f64]) -> V
         fields.push(("id", json::num(id as f64)));
     }
     json::obj(fields)
+}
+
+/// Client-side: [`solve_request_json`] plus the PR 8 routing fields
+/// (`tenant` / `lane` / `deadline_ms`); `None`s are omitted, so a fully
+/// unrouted call produces the exact PR 7 wire bytes.
+pub fn routed_solve_request_json(
+    id: Option<u64>,
+    system: &SystemInput,
+    b: &[f64],
+    tenant: Option<&str>,
+    lane: Option<Lane>,
+    deadline_ms: Option<u64>,
+) -> Value {
+    let mut v = solve_request_json(id, system, b);
+    if let Value::Obj(map) = &mut v {
+        if let Some(t) = tenant {
+            map.insert("tenant".to_string(), json::s(t));
+        }
+        if let Some(l) = lane {
+            map.insert("lane".to_string(), json::s(l.name()));
+        }
+        if let Some(d) = deadline_ms {
+            map.insert("deadline_ms".to_string(), json::num(d as f64));
+        }
+    }
+    v
 }
 
 /// Client-side: encode an admin request (`ping`, `stats`, `reload`, ...).
@@ -319,6 +409,65 @@ mod tests {
         ));
         let err = format!("{:#}", parse_request("{\"op\": \"shadow-load\"}").unwrap_err());
         assert!(err.contains("path"), "{err}");
+    }
+
+    #[test]
+    fn routing_fields_roundtrip_and_default_off() {
+        let sys = SystemInput::Dense(Mat::eye(2));
+        // absent fields => unrouted, PR 7 behavior
+        let line = solve_request_json(None, &sys, &[1.0, 2.0]).to_string();
+        assert!(!line.contains("tenant") && !line.contains("lane") && !line.contains("deadline"));
+        match parse_request(&line).unwrap() {
+            Request::Solve(req) => {
+                assert!(!req.routed());
+                assert_eq!((req.tenant, req.lane, req.deadline_ms), (None, None, None));
+            }
+            other => panic!("{other:?}"),
+        }
+        // present fields => routed, parsed and typed
+        let line = routed_solve_request_json(
+            Some(4),
+            &sys,
+            &[1.0, 2.0],
+            Some("acme"),
+            Some(Lane::Batch),
+            Some(250),
+        )
+        .to_string();
+        match parse_request(&line).unwrap() {
+            Request::Solve(req) => {
+                assert!(req.routed());
+                assert_eq!(req.tenant.as_deref(), Some("acme"));
+                assert_eq!(req.lane, Some(Lane::Batch));
+                assert_eq!(req.deadline_ms, Some(250));
+            }
+            other => panic!("{other:?}"),
+        }
+        // unknown lane names are rejected at parse time
+        let bad = "{\"op\": \"solve\", \"n\": 1, \"b\": [1.0], \"a\": [1.0], \"lane\": \"bulk\"}";
+        let err = format!("{:#}", parse_request(bad).unwrap_err());
+        assert!(err.contains("unknown lane"), "{err}");
+    }
+
+    #[test]
+    fn tenant_op_parses_and_rejection_envelope_is_typed() {
+        match parse_request("{\"op\": \"tenant\", \"tenant\": \"acme\", \"quota\": 3}").unwrap() {
+            Request::Tenant { tenant, quota, path } => {
+                assert_eq!(tenant, "acme");
+                assert_eq!(quota, Some(3));
+                assert_eq!(path, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        let err = format!("{:#}", parse_request("{\"op\": \"tenant\"}").unwrap_err());
+        assert!(err.contains("tenant"), "{err}");
+
+        let v = rejected_response(Some(9), "overload", "interactive lane queue full (cap 64)");
+        assert_eq!(v.get("ok").unwrap().as_bool().unwrap(), false);
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "solve");
+        assert_eq!(v.get("rejected").unwrap().as_str().unwrap(), "overload");
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
+        assert!(v.get("error").unwrap().as_str().unwrap().starts_with("rejected[overload]:"));
     }
 
     #[test]

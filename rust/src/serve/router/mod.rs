@@ -1,0 +1,466 @@
+//! Multi-tenant request router: admission control, priority lanes, and
+//! per-tenant isolation (DESIGN.md §2h).
+//!
+//! Sits between the daemon's accept loop and the solve path. A solve
+//! request carrying any routing field (`tenant` / `lane` /
+//! `deadline_ms`) is handed to [`Router::submit`], which:
+//!
+//! 1. resolves the tenant partition (auto-registering unknown names
+//!    with the default quota — explicit registration via the `tenant`
+//!    admin op picks policy and quota);
+//! 2. runs admission control — quota first (deterministic regardless of
+//!    injected faults), then the router chaos sites
+//!    ([`FaultSite::QueueDrop`] / [`FaultSite::LaneStarve`]), then the
+//!    bounded lane queue with its batch shed watermark. Every shed is a
+//!    typed `rejected[overload]` / `rejected[quota]` response — the
+//!    router never parks a producer and never hangs a client;
+//! 3. enqueues into one of two priority lanes drained by a dedicated
+//!    worker pool under a deterministic deficit-weighted round robin
+//!    ([`WeightedQueues`]), so batch traffic cannot starve interactive
+//!    solves;
+//! 4. answers over a per-request reply channel. A job whose
+//!    `deadline_ms` expired while queued is answered
+//!    `rejected[deadline]` instead of burning a worker on a dead
+//!    request.
+//!
+//! Requests with none of the routing fields bypass the router entirely
+//! and take the daemon's original single-tenant path — PR 7 clients see
+//! byte-identical behavior.
+//!
+//! **Isolation contract:** each tenant owns its `Autotuner` (and thus
+//! its `SessionCache` partition) and its `OnlineLearner`. One tenant's
+//! ε-greedy exploration updates only its own table; the isolation test
+//! locks this by fingerprint. The global (non-routed) learner is
+//! likewise never touched by routed traffic.
+//!
+//! **Shutdown:** admission starts rejecting, workers drain what is
+//! already queued (every queued job still gets its response), then the
+//! pool joins. Stragglers enqueued in the race window are flushed with
+//! typed rejections — zero silent drops.
+
+pub mod queue;
+pub mod tenant;
+
+pub use queue::{Lane, ShedReason, WeightedQueues};
+pub use tenant::{Tenant, UNLIMITED_QUOTA};
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::api::{Autotuner, SolveReport};
+use crate::bandit::action::Action;
+use crate::bandit::TrainedPolicy;
+use crate::faults::{FaultInjector, FaultSite};
+use crate::system::SystemInput;
+use crate::util::config::Config;
+use crate::util::json::{self, Value};
+use crate::util::pool;
+
+use super::online::{OnlineLearner, OnlineOpts};
+use super::protocol::{self, error_response, rejected_response, SolveRequest};
+
+/// Tenant partition used when a routed request names no tenant.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Builds a fresh serving facade for a tenant's policy — supplied by
+/// the daemon so tenant tuners share its backend factory, config, and
+/// armed fault plan.
+pub type BuildTuner = Arc<dyn Fn(&TrainedPolicy) -> Result<Autotuner> + Send + Sync>;
+
+/// Router knobs (part of `ServeOpts`).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterOpts {
+    /// Bound of each lane's queue.
+    pub queue_cap: usize,
+    /// Batch lane sheds above this fraction of `queue_cap` (interactive
+    /// admits until hard-full).
+    pub shed_watermark: f64,
+    /// Dequeue credits per refill, `[interactive, batch]`.
+    pub weights: [u64; 2],
+    /// Worker pool size; 0 = auto (`min(num_threads, 4)`).
+    pub workers: usize,
+    /// Request budget for auto-registered tenants
+    /// ([`UNLIMITED_QUOTA`] = unmetered).
+    pub default_quota: u64,
+}
+
+impl Default for RouterOpts {
+    fn default() -> RouterOpts {
+        RouterOpts {
+            queue_cap: 64,
+            shed_watermark: 0.75,
+            weights: [3, 1],
+            workers: 0,
+            default_quota: UNLIMITED_QUOTA,
+        }
+    }
+}
+
+/// One queued solve plus its reply channel. The worker sends exactly
+/// one response per job; shutdown flushes stragglers with typed
+/// rejections — either way the submitting connection thread unblocks.
+struct Job {
+    id: Option<u64>,
+    system: SystemInput,
+    b: Vec<f64>,
+    tenant: Arc<Tenant>,
+    lane: Lane,
+    enqueued: Instant,
+    deadline: Option<Duration>,
+    reply: mpsc::Sender<Value>,
+}
+
+struct RouterInner {
+    opts: RouterOpts,
+    learn: bool,
+    online: OnlineOpts,
+    drain_every: u64,
+    cfg: Config,
+    base_policy: TrainedPolicy,
+    build: BuildTuner,
+    tenants: RwLock<BTreeMap<String, Arc<Tenant>>>,
+    sched: Mutex<WeightedQueues<Job>>,
+    work_ready: Condvar,
+    shutdown: AtomicBool,
+    /// The daemon's injector — router sites fire here, at admission,
+    /// outside any tuner's ambient solve scope.
+    faults: Option<Arc<FaultInjector>>,
+    n_workers: usize,
+}
+
+/// The running router: shared state + the worker pool handles.
+pub struct Router {
+    inner: Arc<RouterInner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Router {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        opts: RouterOpts,
+        learn: bool,
+        online: OnlineOpts,
+        drain_every: u64,
+        cfg: Config,
+        base_policy: TrainedPolicy,
+        build: BuildTuner,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Router {
+        let n_workers = if opts.workers == 0 {
+            pool::num_threads().clamp(1, 4)
+        } else {
+            opts.workers
+        };
+        let inner = Arc::new(RouterInner {
+            sched: Mutex::new(WeightedQueues::new(opts.queue_cap, opts.shed_watermark, opts.weights)),
+            opts,
+            learn,
+            online,
+            drain_every,
+            cfg,
+            base_policy,
+            build,
+            tenants: RwLock::new(BTreeMap::new()),
+            work_ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            faults,
+            n_workers,
+        });
+        let mut workers = Vec::with_capacity(n_workers);
+        for k in 0..n_workers {
+            let inn = inner.clone();
+            if let Ok(h) = thread::Builder::new()
+                .name(format!("pallas-serve-router-{k}"))
+                .spawn(move || worker_loop(inn))
+            {
+                workers.push(h);
+            }
+        }
+        Router { inner, workers: Mutex::new(workers) }
+    }
+
+    fn make_tenant(
+        &self,
+        name: &str,
+        quota: u64,
+        policy: Option<&TrainedPolicy>,
+        version: u64,
+    ) -> Result<Arc<Tenant>> {
+        let policy = policy.unwrap_or(&self.inner.base_policy);
+        let tuner = (*self.inner.build)(policy)?;
+        let learner = OnlineLearner::new(policy, &self.inner.cfg, self.inner.online);
+        Ok(Arc::new(Tenant::new(name, tuner, learner, quota, version)))
+    }
+
+    /// Explicit registration (the `tenant` admin op): builds a fresh
+    /// partition for `name` and **replaces** any existing one — cache,
+    /// learner, and counters reset. `policy = None` pins the daemon's
+    /// boot/base policy.
+    pub fn register(
+        &self,
+        name: &str,
+        quota: u64,
+        policy: Option<&TrainedPolicy>,
+        version: u64,
+    ) -> Result<Arc<Tenant>> {
+        let t = self.make_tenant(name, quota, policy, version)?;
+        self.inner.tenants.write().unwrap().insert(name.to_string(), t.clone());
+        Ok(t)
+    }
+
+    /// Lookup with first-use auto-registration at the default quota.
+    /// Racing auto-registers adopt whichever partition landed first —
+    /// a tenant already taking traffic is never silently replaced.
+    fn tenant_of(&self, name: &str, version: u64) -> Result<Arc<Tenant>> {
+        if let Some(t) = self.inner.tenants.read().unwrap().get(name) {
+            return Ok(t.clone());
+        }
+        let fresh = self.make_tenant(name, self.inner.opts.default_quota, None, version)?;
+        let mut map = self.inner.tenants.write().unwrap();
+        Ok(map.entry(name.to_string()).or_insert(fresh).clone())
+    }
+
+    /// The tenant's isolation fingerprint, if registered.
+    pub fn tenant_fingerprint(&self, name: &str) -> Option<u64> {
+        self.inner.tenants.read().unwrap().get(name).map(|t| t.fingerprint())
+    }
+
+    /// Route one solve: admission control, then block until the worker
+    /// pool answers. Every exit is a response — success, typed
+    /// rejection, or typed error — never a hang.
+    pub fn submit(&self, req: &SolveRequest, version: u64) -> Value {
+        let id = req.id;
+        if self.inner.shutdown.load(Ordering::SeqCst) {
+            return rejected_response(id, "overload", "router shutting down");
+        }
+        let name = req.tenant.as_deref().unwrap_or(DEFAULT_TENANT);
+        let tenant = match self.tenant_of(name, version) {
+            Ok(t) => t,
+            Err(e) => {
+                return error_response(
+                    "solve",
+                    id,
+                    &e.context(format!("registering tenant {name:?}")),
+                )
+            }
+        };
+        let lane = req.lane.unwrap_or(Lane::Interactive);
+        // Quota before the chaos sites: budget accounting stays exact
+        // under injection, so quota rejections are deterministic.
+        if !tenant.try_consume_quota() {
+            tenant.shed_quota.fetch_add(1, Ordering::Relaxed);
+            return rejected_response(
+                id,
+                "quota",
+                &format!("tenant {name:?} exhausted its request quota"),
+            );
+        }
+        if let Some(inj) = &self.inner.faults {
+            if lane == Lane::Batch && inj.should_fire(FaultSite::LaneStarve).is_some() {
+                tenant.shed_overload.fetch_add(1, Ordering::Relaxed);
+                return rejected_response(id, "overload", "batch lane shed [injected lane-starve]");
+            }
+            if inj.should_fire(FaultSite::QueueDrop).is_some() {
+                tenant.shed_overload.fetch_add(1, Ordering::Relaxed);
+                return rejected_response(id, "overload", "queue slot dropped [injected queue-drop]");
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            id,
+            system: req.system.clone(),
+            b: req.b.clone(),
+            tenant: tenant.clone(),
+            lane,
+            enqueued: Instant::now(),
+            deadline: req.deadline_ms.map(Duration::from_millis),
+            reply: tx,
+        };
+        {
+            let mut sched = self.inner.sched.lock().unwrap();
+            if self.inner.shutdown.load(Ordering::SeqCst) {
+                return rejected_response(id, "overload", "router shutting down");
+            }
+            if let Err((reason, _job)) = sched.try_push(lane, job) {
+                drop(sched);
+                tenant.shed_overload.fetch_add(1, Ordering::Relaxed);
+                let detail = match reason {
+                    ShedReason::QueueFull => format!(
+                        "{} lane queue full (cap {})",
+                        lane.name(),
+                        self.inner.opts.queue_cap
+                    ),
+                    ShedReason::Watermark => "batch lane above the shed watermark".to_string(),
+                };
+                return rejected_response(id, "overload", &detail);
+            }
+            tenant.note_admitted(lane);
+            self.inner.work_ready.notify_one();
+        }
+        match rx.recv() {
+            Ok(v) => v,
+            // Unreachable by construction (workers always reply, and
+            // shutdown flushes the queue), but typed anyway.
+            Err(_) => error_response(
+                "solve",
+                id,
+                &anyhow!("router worker dropped the reply channel"),
+            ),
+        }
+    }
+
+    pub fn queue_depths(&self) -> [usize; 2] {
+        let sched = self.inner.sched.lock().unwrap();
+        [sched.depth(Lane::Interactive), sched.depth(Lane::Batch)]
+    }
+
+    /// The `router` block of the daemon's `stats` payload.
+    pub fn stats_json(&self) -> Value {
+        let [interactive, batch] = self.queue_depths();
+        let tenants = {
+            let map = self.inner.tenants.read().unwrap();
+            Value::Obj(map.iter().map(|(k, t)| (k.clone(), t.to_json())).collect())
+        };
+        json::obj(vec![
+            (
+                "queue_depth",
+                json::obj(vec![
+                    ("batch", json::num(batch as f64)),
+                    ("interactive", json::num(interactive as f64)),
+                ]),
+            ),
+            ("tenants", tenants),
+            ("workers", json::num(self.inner.n_workers as f64)),
+        ])
+    }
+
+    /// Stop admitting, drain queued jobs (each still answered), join
+    /// the pool, and flush any straggler with a typed rejection.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.work_ready.notify_all();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        let mut sched = self.inner.sched.lock().unwrap();
+        while let Some((_, job)) = sched.pop() {
+            let _ = job.reply.send(rejected_response(job.id, "overload", "router shutting down"));
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: Arc<RouterInner>) {
+    loop {
+        let next = {
+            let mut sched = inner.sched.lock().unwrap();
+            loop {
+                if let Some(pair) = sched.pop() {
+                    break Some(pair);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let (guard, _) = inner
+                    .work_ready
+                    .wait_timeout(sched, Duration::from_millis(100))
+                    .unwrap();
+                sched = guard;
+            }
+        };
+        let Some((_lane, job)) = next else { return };
+        let resp = match catch_unwind(AssertUnwindSafe(|| execute(&inner, &job))) {
+            Ok(v) => v,
+            Err(_) => error_response(
+                "solve",
+                job.id,
+                &anyhow!("router worker panicked; request rejected"),
+            ),
+        };
+        let _ = job.reply.send(resp);
+    }
+}
+
+/// Run one dequeued job on its tenant's partition. Mirrors the
+/// daemon's single-tenant solve path (ε-greedy pick, observe, forced-
+/// FP64 rescue) against the tenant's own tuner and learner.
+fn execute(inner: &RouterInner, job: &Job) -> Value {
+    if let Some(d) = job.deadline {
+        if job.enqueued.elapsed() >= d {
+            job.tenant.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            return rejected_response(
+                job.id,
+                "deadline",
+                &format!("deadline of {} ms expired while queued", d.as_millis()),
+            );
+        }
+    }
+    let t = &job.tenant;
+    let outcome = if inner.learn {
+        solve_learning(inner, t, job)
+    } else {
+        t.tuner.solve_ref(&job.system, &job.b).map(|rep| (rep, false, false))
+    };
+    match outcome {
+        Ok((rep, explored, fallback)) => {
+            t.stats.solves_ok.fetch_add(1, Ordering::Relaxed);
+            if rep.degradation.is_some() {
+                t.stats.degraded.fetch_add(1, Ordering::Relaxed);
+            }
+            t.stats.record_family(rep.solver, !rep.failed);
+            protocol::solve_response(job.id, &rep, t.policy_version(), explored, fallback, false)
+        }
+        Err(e) => {
+            t.stats.solve_errors.fetch_add(1, Ordering::Relaxed);
+            error_response("solve", job.id, &e)
+        }
+    }
+}
+
+fn solve_learning(
+    inner: &RouterInner,
+    t: &Tenant,
+    job: &Job,
+) -> Result<(SolveReport, bool, bool)> {
+    let (_frozen, kappa, norm_inf) = t.tuner.select_action(&job.system)?;
+    let (action, explored) = t.learner.lock().unwrap().select(kappa, norm_inf);
+    if explored {
+        t.stats.explored.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut rep = t.tuner.solve_with_action(&job.system, &job.b, action)?;
+    if !rep.kappa_est.is_finite() {
+        rep.kappa_est = kappa;
+    }
+    {
+        let mut l = t.learner.lock().unwrap();
+        l.observe_with(kappa, norm_inf, &rep);
+        // same drain cadence as the daemon checkpoint: arrival order,
+        // cadence-independent tables
+        let seen = l.observed();
+        if inner.drain_every > 0 && seen > 0 && seen % inner.drain_every == 0 {
+            l.drain();
+        }
+    }
+    if rep.failed {
+        let mut rescue = t.tuner.solve_with_action(&job.system, &job.b, Action::FP64)?;
+        if !rescue.kappa_est.is_finite() {
+            rescue.kappa_est = kappa;
+        }
+        t.stats.fallback_rescues.fetch_add(1, Ordering::Relaxed);
+        return Ok((rescue, explored, true));
+    }
+    Ok((rep, explored, false))
+}

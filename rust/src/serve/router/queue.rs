@@ -1,0 +1,250 @@
+//! Priority lanes and the bounded weighted dequeue (DESIGN.md §2h).
+//!
+//! Two lanes — [`Lane::Interactive`] for small-n latency-sensitive
+//! solves and [`Lane::Batch`] for large-n throughput traffic — each a
+//! bounded FIFO. Dequeue runs deficit-weighted round robin with **no
+//! randomness**: a fixed credit refill per lane, lanes scanned in a
+//! fixed order. The pop sequence is a pure function of push order and
+//! the configured weights, which is what makes the starvation-freedom
+//! test in `tests/serve_router.rs` exact rather than statistical.
+//!
+//! Admission is shed-first, never block: a full lane rejects
+//! immediately, and the batch lane additionally sheds above a
+//! configurable watermark so interactive headroom survives a batch
+//! flood. The queue itself never parks a producer.
+
+use std::collections::VecDeque;
+
+/// A priority lane. `Interactive` is scanned first by the dequeue loop
+/// and by convention carries the higher weight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lane {
+    Interactive = 0,
+    Batch = 1,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 2] = [Lane::Interactive, Lane::Batch];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Wire name (the `lane` field of a solve request).
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Batch => "batch",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Lane> {
+        Lane::ALL.into_iter().find(|l| l.name() == name)
+    }
+}
+
+/// Why admission shed a request (both map to `rejected[overload]` on
+/// the wire; the distinction feeds the rejection detail text).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The lane's bounded queue is at capacity.
+    QueueFull,
+    /// Batch lane above the load-shedding watermark (interactive
+    /// traffic still admits until hard-full).
+    Watermark,
+}
+
+/// Two bounded FIFOs with deterministic deficit-weighted round-robin
+/// dequeue. Not internally synchronized — the router holds it under
+/// one mutex (scheduler state is tiny; the lock covers pointer moves
+/// only, never a solve).
+pub struct WeightedQueues<T> {
+    q: [VecDeque<T>; 2],
+    credit: [u64; 2],
+    weights: [u64; 2],
+    cap: usize,
+    /// Batch lane sheds when its depth reaches this (≤ cap).
+    batch_shed_depth: usize,
+}
+
+impl<T> WeightedQueues<T> {
+    /// `cap` bounds each lane; `shed_watermark` in (0, 1] positions the
+    /// batch shed depth as a fraction of `cap`; `weights` are the
+    /// dequeue credits per refill for `[interactive, batch]` (clamped
+    /// to ≥ 1 so neither lane can be configured into starvation).
+    pub fn new(cap: usize, shed_watermark: f64, weights: [u64; 2]) -> WeightedQueues<T> {
+        let cap = cap.max(1);
+        let weights = [weights[0].max(1), weights[1].max(1)];
+        let frac = if shed_watermark.is_finite() { shed_watermark.clamp(0.0, 1.0) } else { 1.0 };
+        let batch_shed_depth = ((cap as f64) * frac).ceil().max(1.0) as usize;
+        WeightedQueues {
+            q: [VecDeque::new(), VecDeque::new()],
+            credit: weights,
+            weights,
+            cap,
+            batch_shed_depth: batch_shed_depth.min(cap),
+        }
+    }
+
+    /// Admit or shed — never blocks. On shed the item is handed back so
+    /// the caller can answer its reply channel.
+    pub fn try_push(&mut self, lane: Lane, item: T) -> Result<(), (ShedReason, T)> {
+        let depth = self.q[lane.index()].len();
+        if depth >= self.cap {
+            return Err((ShedReason::QueueFull, item));
+        }
+        if lane == Lane::Batch && depth >= self.batch_shed_depth {
+            return Err((ShedReason::Watermark, item));
+        }
+        self.q[lane.index()].push_back(item);
+        Ok(())
+    }
+
+    /// Deterministic weighted dequeue: spend credits scanning lanes in
+    /// fixed order; when no serviceable lane has credit left, refill
+    /// every lane to its weight and rescan. With both lanes busy this
+    /// serves `weights[0]` interactive per `weights[1]` batch — the
+    /// batch lane is delayed, never starved, and vice versa.
+    pub fn pop(&mut self) -> Option<(Lane, T)> {
+        if self.q[0].is_empty() && self.q[1].is_empty() {
+            return None;
+        }
+        loop {
+            for lane in Lane::ALL {
+                let i = lane.index();
+                if self.credit[i] > 0 && !self.q[i].is_empty() {
+                    self.credit[i] -= 1;
+                    return Some((lane, self.q[i].pop_front().expect("non-empty lane")));
+                }
+            }
+            // No lane with remaining credit had work: start a new cycle.
+            self.credit = self.weights;
+        }
+    }
+
+    pub fn depth(&self, lane: Lane) -> usize {
+        self.q[lane.index()].len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q[0].len() + self.q[1].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn batch_shed_depth(&self) -> usize {
+        self.batch_shed_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_names_round_trip() {
+        for lane in Lane::ALL {
+            assert_eq!(Lane::by_name(lane.name()), Some(lane));
+        }
+        assert_eq!(Lane::by_name("bulk"), None);
+    }
+
+    #[test]
+    fn weighted_dequeue_interleaves_by_credit() {
+        let mut q: WeightedQueues<u32> = WeightedQueues::new(16, 1.0, [3, 1]);
+        for k in 0..8 {
+            q.try_push(Lane::Interactive, k).unwrap();
+            q.try_push(Lane::Batch, 100 + k).unwrap();
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        // 3 interactive per 1 batch while both lanes are busy.
+        assert_eq!(&order[..8], &[0, 1, 2, 100, 3, 4, 5, 101]);
+    }
+
+    #[test]
+    fn dequeue_is_deterministic() {
+        let run = || {
+            let mut q: WeightedQueues<u32> = WeightedQueues::new(32, 1.0, [3, 1]);
+            for k in 0..10 {
+                q.try_push(if k % 3 == 0 { Lane::Batch } else { Lane::Interactive }, k).unwrap();
+            }
+            std::iter::from_fn(|| q.pop().map(|(l, v)| (l, v))).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn batch_flood_cannot_starve_interactive_and_vice_versa() {
+        // Saturating batch flood: batch lane refilled after every pop;
+        // interactive items must still drain at their weighted share.
+        let mut q: WeightedQueues<&'static str> = WeightedQueues::new(64, 1.0, [3, 1]);
+        for _ in 0..4 {
+            q.try_push(Lane::Batch, "b").unwrap();
+        }
+        for _ in 0..9 {
+            q.try_push(Lane::Interactive, "i").unwrap();
+        }
+        let mut interactive_served = 0;
+        for _ in 0..12 {
+            let (lane, _) = q.pop().unwrap();
+            if lane == Lane::Batch {
+                q.try_push(Lane::Batch, "b").unwrap(); // keep the flood saturated
+            } else {
+                interactive_served += 1;
+            }
+        }
+        assert_eq!(interactive_served, 9, "all interactive items drained under batch flood");
+
+        // And the mirror: continuous interactive flood, batch still gets
+        // its one-in-four share.
+        let mut q: WeightedQueues<&'static str> = WeightedQueues::new(64, 1.0, [3, 1]);
+        for _ in 0..4 {
+            q.try_push(Lane::Batch, "b").unwrap();
+        }
+        q.try_push(Lane::Interactive, "i").unwrap();
+        let mut batch_served = 0;
+        for _ in 0..16 {
+            let (lane, _) = q.pop().unwrap();
+            if lane == Lane::Interactive {
+                q.try_push(Lane::Interactive, "i").unwrap();
+            } else {
+                batch_served += 1;
+            }
+        }
+        assert_eq!(batch_served, 4, "batch drains at exactly its weighted share");
+    }
+
+    #[test]
+    fn queue_full_and_watermark_shed() {
+        let mut q: WeightedQueues<u32> = WeightedQueues::new(4, 0.5, [3, 1]);
+        assert_eq!(q.batch_shed_depth(), 2);
+        // batch sheds at the watermark, well before hard-full
+        q.try_push(Lane::Batch, 0).unwrap();
+        q.try_push(Lane::Batch, 1).unwrap();
+        let err = q.try_push(Lane::Batch, 2).unwrap_err();
+        assert_eq!(err.0, ShedReason::Watermark);
+        assert_eq!(err.1, 2, "shed hands the item back");
+        // interactive admits until hard-full
+        for k in 0..4 {
+            q.try_push(Lane::Interactive, k).unwrap();
+        }
+        let err = q.try_push(Lane::Interactive, 9).unwrap_err();
+        assert_eq!(err.0, ShedReason::QueueFull);
+    }
+
+    #[test]
+    fn zero_weight_is_clamped_to_one() {
+        let mut q: WeightedQueues<u32> = WeightedQueues::new(8, 1.0, [0, 0]);
+        q.try_push(Lane::Interactive, 1).unwrap();
+        q.try_push(Lane::Batch, 2).unwrap();
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+}

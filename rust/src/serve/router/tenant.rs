@@ -1,0 +1,170 @@
+//! Per-tenant partitions (DESIGN.md §2h).
+//!
+//! A [`Tenant`] owns everything that must not leak across tenants:
+//!
+//! * its own [`Autotuner`] facade — and therefore its own
+//!   `SessionCache` partition (tenant A's operators never warm or evict
+//!   tenant B's entries);
+//! * its own [`OnlineLearner`] — ε-greedy exploration and Q-updates are
+//!   bitwise-isolated per tenant (the isolation test compares table
+//!   fingerprints across foreign traffic);
+//! * its own request quota and admission/shed/win-rate counters.
+//!
+//! A tenant's policy is pinned at registration time (re-register to
+//! swap it); the partition — cache, learner, counters — resets on
+//! explicit re-registration, which is the documented way to wipe a
+//! tenant's state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::api::Autotuner;
+use crate::serve::online::OnlineLearner;
+use crate::serve::stats::ServeStats;
+use crate::util::json::{self, Value};
+
+use super::queue::Lane;
+
+/// Sentinel quota meaning "no budget limit".
+pub const UNLIMITED_QUOTA: u64 = u64::MAX;
+
+/// One tenant's isolated serving partition.
+pub struct Tenant {
+    name: String,
+    pub(super) tuner: Autotuner,
+    pub(super) learner: Mutex<OnlineLearner>,
+    /// Total solve-request budget granted at registration
+    /// ([`UNLIMITED_QUOTA`] = unmetered).
+    quota_limit: u64,
+    quota_left: AtomicU64,
+    /// Daemon policy generation this partition was built against.
+    policy_version: u64,
+    /// Solve outcome counters (ok/error/degraded/explored/rescues and
+    /// per-family win rates) — same schema as the daemon's globals.
+    pub(super) stats: ServeStats,
+    lane_admitted: [AtomicU64; 2],
+    pub(super) shed_overload: AtomicU64,
+    pub(super) shed_quota: AtomicU64,
+    pub(super) shed_deadline: AtomicU64,
+}
+
+impl Tenant {
+    pub(super) fn new(
+        name: &str,
+        tuner: Autotuner,
+        learner: OnlineLearner,
+        quota: u64,
+        policy_version: u64,
+    ) -> Tenant {
+        Tenant {
+            name: name.to_string(),
+            tuner,
+            learner: Mutex::new(learner),
+            quota_limit: quota,
+            quota_left: AtomicU64::new(quota),
+            policy_version,
+            stats: ServeStats::default(),
+            lane_admitted: [AtomicU64::new(0), AtomicU64::new(0)],
+            shed_overload: AtomicU64::new(0),
+            shed_quota: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn policy_version(&self) -> u64 {
+        self.policy_version
+    }
+
+    pub fn quota_limit(&self) -> u64 {
+        self.quota_limit
+    }
+
+    pub fn quota_remaining(&self) -> u64 {
+        self.quota_left.load(Ordering::Relaxed)
+    }
+
+    /// Spend one unit of the request budget; `false` once exhausted
+    /// (the caller answers `rejected[quota]`). Unlimited tenants never
+    /// decrement, so the sentinel survives forever.
+    pub fn try_consume_quota(&self) -> bool {
+        if self.quota_limit == UNLIMITED_QUOTA {
+            return true;
+        }
+        loop {
+            let cur = self.quota_left.load(Ordering::Relaxed);
+            if cur == 0 {
+                return false;
+            }
+            if self
+                .quota_left
+                .compare_exchange(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    pub(super) fn note_admitted(&self, lane: Lane) {
+        self.lane_admitted[lane.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn admitted(&self, lane: Lane) -> u64 {
+        self.lane_admitted[lane.index()].load(Ordering::Relaxed)
+    }
+
+    /// The tenant's online Q-table fingerprint — the bitwise isolation
+    /// witness: foreign traffic must never change it.
+    pub fn fingerprint(&self) -> u64 {
+        self.learner.lock().unwrap().qtable().fingerprint()
+    }
+
+    fn quota_value(x: u64) -> Value {
+        if x == UNLIMITED_QUOTA {
+            json::s("unlimited")
+        } else {
+            json::num(x as f64)
+        }
+    }
+
+    /// The per-tenant `stats` block: admission, shed, win-rate and
+    /// cache counters plus the learner fingerprint.
+    pub fn to_json(&self) -> Value {
+        let cache = self.tuner.session_cache();
+        json::obj(vec![
+            (
+                "admitted",
+                json::obj(vec![
+                    ("batch", json::num(self.admitted(Lane::Batch) as f64)),
+                    ("interactive", json::num(self.admitted(Lane::Interactive) as f64)),
+                ]),
+            ),
+            (
+                "cache",
+                json::obj(vec![
+                    ("hit_rate", json::num(cache.hit_rate())),
+                    ("hits", json::num(cache.hits() as f64)),
+                    ("len", json::num(cache.len() as f64)),
+                    ("misses", json::num(cache.misses() as f64)),
+                ]),
+            ),
+            ("counters", self.stats.to_json()),
+            ("fingerprint", json::s(&format!("{:016x}", self.fingerprint()))),
+            ("policy_version", json::num(self.policy_version as f64)),
+            ("quota", Tenant::quota_value(self.quota_limit)),
+            ("quota_remaining", Tenant::quota_value(self.quota_remaining())),
+            (
+                "shed",
+                json::obj(vec![
+                    ("deadline", json::num(self.shed_deadline.load(Ordering::Relaxed) as f64)),
+                    ("overload", json::num(self.shed_overload.load(Ordering::Relaxed) as f64)),
+                    ("quota", json::num(self.shed_quota.load(Ordering::Relaxed) as f64)),
+                ]),
+            ),
+        ])
+    }
+}

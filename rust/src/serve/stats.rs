@@ -35,6 +35,15 @@ pub struct ServeStats {
     pub snapshot_failures: AtomicU64,
     pub promotions: AtomicU64,
     pub promotes_rejected: AtomicU64,
+    /// Solves that carried a routing field and went through the router.
+    pub routed: AtomicU64,
+    /// Routed solves shed with `rejected[overload]` (queue full,
+    /// watermark, or an injected router fault).
+    pub rejected_overload: AtomicU64,
+    /// Routed solves shed with `rejected[quota]` (tenant budget spent).
+    pub rejected_quota: AtomicU64,
+    /// Routed solves whose deadline expired while queued.
+    pub rejected_deadline: AtomicU64,
     /// Per-family serve/success counters (win rate = ok / served).
     pub lu_served: AtomicU64,
     pub lu_ok: AtomicU64,
@@ -80,9 +89,13 @@ impl ServeStats {
             ("promotes_rejected", get(&self.promotes_rejected)),
             ("promotions", get(&self.promotions)),
             ("protocol_errors", get(&self.protocol_errors)),
+            ("rejected_deadline", get(&self.rejected_deadline)),
+            ("rejected_overload", get(&self.rejected_overload)),
+            ("rejected_quota", get(&self.rejected_quota)),
             ("reload_failures", get(&self.reload_failures)),
             ("reloads", get(&self.reloads)),
             ("requests", get(&self.requests)),
+            ("routed", get(&self.routed)),
             ("shadow_scored", get(&self.shadow_scored)),
             ("snapshot_failures", get(&self.snapshot_failures)),
             ("snapshots", get(&self.snapshots)),

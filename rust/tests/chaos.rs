@@ -133,9 +133,11 @@ fn every_site_resolves_typed_on_dense_and_csr() {
         assert!(!baseline.failed && baseline.degradation.is_none());
         for site in FaultSite::ALL {
             if site.is_daemon_site() {
-                // snapshot-write / policy-reload have no solve-path
-                // hook — they fire in the daemon's control plane and
-                // are covered by the daemon tests below
+                // snapshot-write / policy-reload / queue-drop /
+                // lane-starve have no solve-path hook — they fire in
+                // the daemon's control plane and router admission path,
+                // covered by the daemon tests below and the router
+                // chaos mix
                 continue;
             }
             let tag = format!("{shape}/{site}");

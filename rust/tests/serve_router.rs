@@ -1,0 +1,429 @@
+//! End-to-end acceptance tests for the multi-tenant request router
+//! (ISSUE 8), over the wire against a live daemon:
+//!
+//! 1. admission rejections are *typed* — an armed `queue-drop` site
+//!    sheds routed traffic as `rejected[overload]` while unrouted
+//!    requests on the same daemon keep solving;
+//! 2. a tenant quota admits exactly its budget, rejects the rest as
+//!    `rejected[quota]`, and the per-tenant ledger matches;
+//! 3. a deadline that expired while queued is answered
+//!    `rejected[deadline]` instead of burning a worker;
+//! 4. tenant partitions are bitwise-isolated: one tenant's learning
+//!    traffic changes only its own Q-table fingerprint, never a
+//!    sibling's or the daemon's global learner, and never warms a
+//!    sibling's session cache;
+//! 5. a saturating batch flood cannot starve the interactive lane —
+//!    every interactive solve completes OK while the flood resolves
+//!    ok-or-typed, with zero hangs.
+
+use precision_autotune::bandit::action::ActionSpace;
+use precision_autotune::bandit::{QTable, TrainedPolicy};
+use precision_autotune::faults::{FaultPlan, FaultSite};
+use precision_autotune::features::{Binner, Discretizer};
+use precision_autotune::linalg::Mat;
+use precision_autotune::serve::{
+    protocol, Client, Daemon, Lane, OnlineOpts, RouterOpts, ServeOpts,
+};
+use precision_autotune::system::SystemInput;
+use precision_autotune::util::config::Config;
+use precision_autotune::util::json::{self, Value};
+use precision_autotune::util::rng::Rng;
+
+fn one_bin_discretizer() -> Discretizer {
+    Discretizer {
+        kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
+        norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+        delta_c: 1e-30,
+        delta_n: 1e-30,
+    }
+}
+
+fn tiny_policy() -> TrainedPolicy {
+    TrainedPolicy {
+        qtable: QTable::new(1, ActionSpace::reduced_top_k(9)),
+        discretizer: one_bin_discretizer(),
+    }
+}
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("pa_router_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn dense_spd(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        a[(i, i)] = 8.0 + rng.gauss().abs();
+        for j in 0..i {
+            if rng.uniform() < 0.2 {
+                let v = rng.gauss() * 0.3;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+    }
+    a
+}
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.gauss()).collect()
+}
+
+fn ok_of(resp: &Value) -> bool {
+    resp.get("ok").unwrap().as_bool().unwrap()
+}
+
+fn rejected_of(resp: &Value) -> Option<String> {
+    resp.get("rejected").and_then(Value::as_str).ok().map(str::to_string)
+}
+
+fn tenant_stats<'a>(stats: &'a Value, name: &str) -> &'a Value {
+    stats.get("router").unwrap().get("tenants").unwrap().get(name).unwrap()
+}
+
+/// (1) Typed overload sheds: with `queue-drop` armed at rate 1.0 every
+/// routed request is shed as `rejected[overload]` — while an unrouted
+/// request on the same connection solves clean (the chaos site lives in
+/// the router's admission path, not the solve path), and the global
+/// counters ledger both.
+#[test]
+fn injected_queue_drop_sheds_routed_typed_while_unrouted_survives() {
+    let dir = scratch_dir("qdrop");
+    let opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        learn: false,
+        fault_plan: Some(FaultPlan::new(0xD0).with(FaultSite::QueueDrop, 1.0)),
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+    let mut c = Client::connect(daemon.addr()).unwrap();
+
+    let sys = SystemInput::Dense(dense_spd(12, 3));
+    let b = rhs(12, 4);
+    let routed = c
+        .call(&protocol::routed_solve_request_json(
+            Some(1),
+            &sys,
+            &b,
+            Some("acme"),
+            Some(Lane::Interactive),
+            None,
+        ))
+        .unwrap();
+    assert!(!ok_of(&routed), "{routed:?}");
+    assert_eq!(rejected_of(&routed).as_deref(), Some("overload"), "{routed:?}");
+    assert!(
+        routed.get("error").unwrap().as_str().unwrap().starts_with("rejected[overload]"),
+        "{routed:?}"
+    );
+
+    let unrouted = c.call(&protocol::solve_request_json(Some(2), &sys, &b)).unwrap();
+    assert!(ok_of(&unrouted), "unrouted traffic must not be shed: {unrouted:?}");
+
+    let stats = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+    let counters = stats.get("counters").unwrap();
+    assert_eq!(counters.get("routed").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(counters.get("rejected_overload").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(counters.get("solves_ok").unwrap().as_f64().unwrap(), 1.0);
+    let acme = tenant_stats(&stats, "acme");
+    assert_eq!(acme.get("shed").unwrap().get("overload").unwrap().as_f64().unwrap(), 1.0);
+
+    drop(c);
+    let down = Client::connect(daemon.addr())
+        .unwrap()
+        .call(&protocol::admin_request("shutdown", vec![]))
+        .unwrap();
+    assert!(ok_of(&down));
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// (2) Quota: a tenant registered with a 2-request budget gets exactly
+/// 2 solves; the 3rd is `rejected[quota]`, the tenant ledger shows 2
+/// admitted / 1 shed / 0 remaining, and a sibling tenant is unaffected.
+#[test]
+fn quota_exhaustion_is_typed_and_ledgered_per_tenant() {
+    let dir = scratch_dir("quota");
+    let opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        learn: false,
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+    let mut c = Client::connect(daemon.addr()).unwrap();
+
+    let reg = c
+        .call(&protocol::admin_request(
+            "tenant",
+            vec![("tenant", json::s("acme")), ("quota", json::num(2.0))],
+        ))
+        .unwrap();
+    assert!(ok_of(&reg), "{reg:?}");
+    assert_eq!(reg.get("quota").unwrap().as_f64().unwrap(), 2.0, "{reg:?}");
+
+    let sys = SystemInput::Dense(dense_spd(12, 5));
+    let b = rhs(12, 6);
+    for i in 0..2u64 {
+        let resp = c
+            .call(&protocol::routed_solve_request_json(
+                Some(i),
+                &sys,
+                &b,
+                Some("acme"),
+                Some(Lane::Interactive),
+                Some(30_000),
+            ))
+            .unwrap();
+        assert!(ok_of(&resp), "within-budget request {i} must solve: {resp:?}");
+    }
+    let over = c
+        .call(&protocol::routed_solve_request_json(
+            Some(2),
+            &sys,
+            &b,
+            Some("acme"),
+            Some(Lane::Interactive),
+            Some(30_000),
+        ))
+        .unwrap();
+    assert!(!ok_of(&over), "{over:?}");
+    assert_eq!(rejected_of(&over).as_deref(), Some("quota"), "{over:?}");
+
+    // a sibling with the default (unlimited) quota keeps solving
+    let other = c
+        .call(&protocol::routed_solve_request_json(
+            Some(3),
+            &sys,
+            &b,
+            Some("globex"),
+            Some(Lane::Interactive),
+            Some(30_000),
+        ))
+        .unwrap();
+    assert!(ok_of(&other), "{other:?}");
+
+    let stats = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+    assert_eq!(stats.get("counters").unwrap().get("rejected_quota").unwrap().as_f64().unwrap(), 1.0);
+    let acme = tenant_stats(&stats, "acme");
+    assert_eq!(acme.get("admitted").unwrap().get("interactive").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(acme.get("shed").unwrap().get("quota").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(acme.get("quota_remaining").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(
+        acme.get("counters").unwrap().get("solves_ok").unwrap().as_f64().unwrap(),
+        2.0,
+        "{acme:?}"
+    );
+
+    let down = c.call(&protocol::admin_request("shutdown", vec![])).unwrap();
+    assert!(ok_of(&down));
+    drop(c);
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// (3) Deadline: a request whose `deadline_ms` has already expired by
+/// dequeue time is answered `rejected[deadline]` — a worker never burns
+/// a solve on a dead request, and the shed is ledgered.
+#[test]
+fn expired_deadline_is_rejected_typed_not_solved() {
+    let dir = scratch_dir("deadline");
+    let opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        learn: false,
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+    let mut c = Client::connect(daemon.addr()).unwrap();
+
+    let sys = SystemInput::Dense(dense_spd(12, 7));
+    let b = rhs(12, 8);
+    // deadline 0: expired the instant it was enqueued
+    let resp = c
+        .call(&protocol::routed_solve_request_json(Some(1), &sys, &b, None, None, Some(0)))
+        .unwrap();
+    assert!(!ok_of(&resp), "{resp:?}");
+    assert_eq!(rejected_of(&resp).as_deref(), Some("deadline"), "{resp:?}");
+
+    let stats = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+    let counters = stats.get("counters").unwrap();
+    assert_eq!(counters.get("rejected_deadline").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(counters.get("solves_ok").unwrap().as_f64().unwrap(), 0.0);
+    // an unnamed routed request lands in the "default" tenant partition
+    let def = tenant_stats(&stats, "default");
+    assert_eq!(def.get("shed").unwrap().get("deadline").unwrap().as_f64().unwrap(), 1.0);
+
+    let down = c.call(&protocol::admin_request("shutdown", vec![])).unwrap();
+    assert!(ok_of(&down));
+    drop(c);
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// (4) Isolation: with online learning on (`drain_every: 1`, ε > 0),
+/// one tenant's traffic must change *only* its own Q-table fingerprint.
+/// The sibling's fingerprint stays at its registration value, its
+/// session cache sees zero lookups, and the daemon's single-tenant
+/// global learner is untouched by routed traffic.
+#[test]
+fn tenant_partitions_are_bitwise_isolated() {
+    let dir = scratch_dir("isolate");
+    let opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        online: OnlineOpts { epsilon: 0.3, ..OnlineOpts::default() },
+        drain_every: 1,
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+    let mut c = Client::connect(daemon.addr()).unwrap();
+
+    for name in ["alice", "bob"] {
+        let reg = c
+            .call(&protocol::admin_request("tenant", vec![("tenant", json::s(name))]))
+            .unwrap();
+        assert!(ok_of(&reg), "{reg:?}");
+    }
+    let fp_of = |stats: &Value, name: &str| -> String {
+        tenant_stats(stats, name).get("fingerprint").unwrap().as_str().unwrap().to_string()
+    };
+    let before = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+    let alice_0 = fp_of(&before, "alice");
+    let bob_0 = fp_of(&before, "bob");
+    assert_eq!(alice_0, bob_0, "fresh partitions from one base policy must match");
+    let global_0 =
+        before.get("online").unwrap().get("fingerprint").unwrap().as_str().unwrap().to_string();
+
+    let a = dense_spd(12, 9);
+    let sys = SystemInput::Dense(a);
+    for i in 0..8u64 {
+        let b = rhs(12, 20 + i);
+        let resp = c
+            .call(&protocol::routed_solve_request_json(
+                Some(i),
+                &sys,
+                &b,
+                Some("alice"),
+                Some(Lane::Interactive),
+                Some(30_000),
+            ))
+            .unwrap();
+        assert!(ok_of(&resp), "{resp:?}");
+    }
+
+    let after = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+    assert_ne!(fp_of(&after, "alice"), alice_0, "alice's traffic must teach alice's table");
+    assert_eq!(fp_of(&after, "bob"), bob_0, "alice's traffic must never touch bob's table");
+    let global_1 =
+        after.get("online").unwrap().get("fingerprint").unwrap().as_str().unwrap().to_string();
+    assert_eq!(global_1, global_0, "routed traffic must never touch the global learner");
+
+    // bob's cache partition saw zero lookups; alice's absorbed her
+    // repeated-A stream (keyed by operator fingerprint: 1 build, then
+    // reuse — exploration cannot cause misses)
+    let bob_cache = tenant_stats(&after, "bob").get("cache").unwrap();
+    let lookups = |cache: &Value| {
+        cache.get("hits").unwrap().as_f64().unwrap()
+            + cache.get("misses").unwrap().as_f64().unwrap()
+    };
+    assert_eq!(lookups(bob_cache), 0.0, "{bob_cache:?}");
+    let alice_cache = tenant_stats(&after, "alice").get("cache").unwrap();
+    assert!(lookups(alice_cache) >= 8.0, "{alice_cache:?}");
+    assert!(alice_cache.get("hits").unwrap().as_f64().unwrap() >= 1.0, "{alice_cache:?}");
+    assert_eq!(alice_cache.get("misses").unwrap().as_f64().unwrap(), 1.0, "{alice_cache:?}");
+
+    let down = c.call(&protocol::admin_request("shutdown", vec![])).unwrap();
+    assert!(ok_of(&down));
+    drop(c);
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// (5) Starvation-freedom end to end: three connections flood the batch
+/// lane closed-loop against a single router worker while the main
+/// connection runs interactive solves. Every interactive request must
+/// complete OK (under the deficit-weighted round robin it is served
+/// within a bounded number of dequeues), and every flood request must
+/// resolve ok-or-typed — zero hangs on either side.
+#[test]
+fn batch_flood_cannot_starve_the_interactive_lane() {
+    let dir = scratch_dir("flood");
+    let opts = ServeOpts {
+        snapshot_dir: dir.to_string_lossy().to_string(),
+        learn: false,
+        router: RouterOpts { workers: 1, queue_cap: 16, ..RouterOpts::default() },
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    let daemon = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+    let addr = daemon.addr();
+    let mut c = Client::connect(addr).unwrap();
+
+    let mut flooders = Vec::new();
+    for k in 0..3u64 {
+        flooders.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let sys = SystemInput::Dense(dense_spd(12, 40 + k));
+            let mut typed = 0usize;
+            for i in 0..8u64 {
+                let b = rhs(12, 60 + 10 * k + i);
+                let resp = c
+                    .call(&protocol::routed_solve_request_json(
+                        Some(1000 + 10 * k + i),
+                        &sys,
+                        &b,
+                        Some("bulk"),
+                        Some(Lane::Batch),
+                        Some(30_000),
+                    ))
+                    .unwrap();
+                let ok = resp.get("ok").unwrap().as_bool().unwrap();
+                let rejected = resp.get("rejected").and_then(Value::as_str).is_ok();
+                assert!(ok || rejected, "flood request must resolve typed: {resp:?}");
+                typed += 1;
+            }
+            typed
+        }));
+    }
+
+    let sys = SystemInput::Dense(dense_spd(12, 50));
+    for i in 0..6u64 {
+        let b = rhs(12, 80 + i);
+        let resp = c
+            .call(&protocol::routed_solve_request_json(
+                Some(i),
+                &sys,
+                &b,
+                Some("fast"),
+                Some(Lane::Interactive),
+                Some(30_000),
+            ))
+            .unwrap();
+        assert!(ok_of(&resp), "interactive solve {i} starved or failed: {resp:?}");
+    }
+
+    let mut flood_total = 0usize;
+    for f in flooders {
+        flood_total += f.join().expect("flood connection must not panic");
+    }
+    assert_eq!(flood_total, 24, "every flood request resolved");
+
+    let stats = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+    let fast = tenant_stats(&stats, "fast");
+    assert_eq!(fast.get("admitted").unwrap().get("interactive").unwrap().as_f64().unwrap(), 6.0);
+    assert_eq!(fast.get("counters").unwrap().get("solves_ok").unwrap().as_f64().unwrap(), 6.0);
+    let depth = stats.get("router").unwrap().get("queue_depth").unwrap();
+    assert_eq!(depth.get("batch").unwrap().as_f64().unwrap(), 0.0, "queues drained");
+    assert_eq!(depth.get("interactive").unwrap().as_f64().unwrap(), 0.0, "queues drained");
+
+    let down = c.call(&protocol::admin_request("shutdown", vec![])).unwrap();
+    assert!(ok_of(&down));
+    drop(c);
+    daemon.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -19,6 +19,19 @@ impl Error {
     pub fn msg<M: fmt::Display>(m: M) -> Error {
         Error { msg: m.to_string() }
     }
+
+    /// Construct from an error value (anyhow's `Error::new`; Display
+    /// bound rather than `std::error::Error` — same rendering offline).
+    pub fn new<E: fmt::Display>(e: E) -> Error {
+        Error::msg(e)
+    }
+
+    /// Wrap this error with higher-level context (anyhow's inherent
+    /// `Error::context`), rendered as `context: source` like the
+    /// [`Context`] trait does for `Result`.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
 }
 
 impl fmt::Display for Error {
@@ -145,6 +158,14 @@ mod tests {
         }
         assert_eq!(f(3).unwrap(), 3);
         assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn error_new_and_inherent_context() {
+        let e = Error::new(std::fmt::Error).context("rendering");
+        assert!(e.to_string().starts_with("rendering: "));
+        let e = anyhow!("deep").context("mid").context("top");
+        assert_eq!(e.to_string(), "top: mid: deep");
     }
 
     #[test]
