@@ -47,6 +47,16 @@ const DICT: &[&str] = &[
     "-1",
     "0.5",
     "18446744073709551616",
+    // v3 vocabulary: preconditioner names, restart field, decay axis
+    "\"precond\"",
+    "\"restart_m\"",
+    "\"none\"",
+    "\"jacobi\"",
+    "\"block-jacobi\"",
+    "\"ssor\"",
+    "\"decay_lo\"",
+    "\"decay_hi\"",
+    "\"decay_bins\"",
 ];
 
 /// Valid policy artifacts: the committed golden fixture (when the repo
@@ -56,19 +66,22 @@ fn corpus() -> Vec<String> {
     let discretizer = |bins: usize| Discretizer {
         kappa: Binner { lo: 0.0, hi: 5.0, n_bins: bins },
         norm: Binner { lo: -1.0, hi: 1.0, n_bins: 1 },
+        decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
         delta_c: 1.0,
         delta_n: 1e-30,
     };
     let mut small = QTable::new(2, ActionSpace::reduced_top_k(3));
     small.update(0, 1, 2.5, 1.0);
     small.update(1, 0, -0.75, 0.5);
-    let mut ext = QTable::new(1, ActionSpace::extended_top_k(4));
+    // precond-grown space: the serialized corpus carries non-trivial
+    // precond/restart_m columns, so mutations probe the v3 decode paths
+    let mut ext = QTable::new(1, ActionSpace::extended_precond_top_k(4));
     ext.update(0, ext.space.len() - 1, 1.25, 1.0);
     let mut c = vec![
         TrainedPolicy { qtable: small, discretizer: discretizer(2) }.to_json().to_string(),
         TrainedPolicy { qtable: ext, discretizer: discretizer(1) }.to_json().to_string(),
     ];
-    let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
+    let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v3.json");
     if let Ok(text) = std::fs::read_to_string(golden) {
         c.push(text);
     }

@@ -1177,6 +1177,7 @@ mod tests {
             discretizer: Discretizer {
                 kappa: Binner { lo: 0.0, hi: 1.0, n_bins: 1 },
                 norm: Binner { lo: 0.0, hi: 1.0, n_bins: 1 },
+                decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
                 delta_c: 1.0,
                 delta_n: 1e-30,
             },

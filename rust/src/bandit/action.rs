@@ -20,6 +20,16 @@
 //! C(m+k−1, k) combinations — 35 for m=4 precisions, k=4 steps, an ~86%
 //! cut from the full 256 (§3.2). The *extended* space is the union over
 //! both families (70 actions, or 2·(k_top+1)-ish after pruning).
+//!
+//! Since schema v3 (ROADMAP item 4, the PEARL axis) an action also
+//! carries two solver hyperparameters: a [`Precond`] choice (which
+//! preconditioner the inner solver applies) and a GMRES restart length
+//! `restart_m` (0 = the historical single-cycle inner solve). Every
+//! pre-v3 action keeps its family's *default* preconditioner and
+//! `restart_m = 0`, so the legacy 35/70-action spaces are unchanged in
+//! content, order, and rendering; the grown arms are appended behind
+//! them by [`ActionSpace::extended_precond_top_k`] and are opt-in via
+//! `Config::precond_arms`.
 
 use crate::chop::Prec;
 
@@ -58,6 +68,61 @@ impl std::fmt::Display for SolverFamily {
     }
 }
 
+/// Preconditioner choice for the inner solver (schema v3, PEARL axis).
+///
+/// The discriminant order is the policy-JSON / hash encoding order and
+/// must stay stable. `None` and `Jacobi` are the historical implicit
+/// choices of the LU and CG families respectively (the LU family's
+/// inner GMRES is already LU-preconditioned; "None" means *no extra*
+/// preconditioner), so every pre-v3 action maps onto its family's
+/// default and the legacy reward/cost anchors are untouched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precond {
+    None = 0,
+    Jacobi = 1,
+    BlockJacobi = 2,
+    Ssor = 3,
+}
+
+impl Precond {
+    pub const ALL: [Precond; 4] = [
+        Precond::None,
+        Precond::Jacobi,
+        Precond::BlockJacobi,
+        Precond::Ssor,
+    ];
+
+    /// Stable name used in policy JSON and the CLI `--precond` switch.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precond::None => "none",
+            Precond::Jacobi => "jacobi",
+            Precond::BlockJacobi => "block-jacobi",
+            Precond::Ssor => "ssor",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Precond> {
+        Precond::ALL.iter().copied().find(|p| p.name() == name)
+    }
+
+    /// The historical implicit preconditioner of each family: pre-v3
+    /// actions deserialize to this, and [`Action::with_solver`] resets
+    /// to it so family-mirrored spaces stay well-formed.
+    pub fn default_for(f: SolverFamily) -> Precond {
+        match f {
+            SolverFamily::LuIr => Precond::None,
+            SolverFamily::CgIr => Precond::Jacobi,
+        }
+    }
+}
+
+impl std::fmt::Display for Precond {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 /// A (solver family, precision configuration) pair for one solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Action {
@@ -73,6 +138,12 @@ pub struct Action {
     pub u_g: Prec,
     /// u_r — residual computation
     pub u_r: Prec,
+    /// which preconditioner the inner solver applies (v3 dimension;
+    /// family default for all pre-v3 actions)
+    pub precond: Precond,
+    /// GMRES restart length for the LU family's inner solver; 0 keeps
+    /// the historical single-cycle inner solve (v3 dimension)
+    pub restart_m: usize,
 }
 
 impl Action {
@@ -83,6 +154,8 @@ impl Action {
         u: Prec::Fp64,
         u_g: Prec::Fp64,
         u_r: Prec::Fp64,
+        precond: Precond::None,
+        restart_m: 0,
     };
 
     /// The all-FP64 CG-IR anchor (the CG family's safe configuration).
@@ -92,22 +165,62 @@ impl Action {
         u: Prec::Fp64,
         u_g: Prec::Fp64,
         u_r: Prec::Fp64,
+        precond: Precond::Jacobi,
+        restart_m: 0,
     };
 
     /// LU/GMRES-IR action with the given precisions.
     pub fn lu(u_f: Prec, u: Prec, u_g: Prec, u_r: Prec) -> Action {
-        Action { solver: SolverFamily::LuIr, u_f, u, u_g, u_r }
+        Action {
+            solver: SolverFamily::LuIr,
+            u_f,
+            u,
+            u_g,
+            u_r,
+            precond: Precond::None,
+            restart_m: 0,
+        }
     }
 
     /// CG-IR action with the given precisions.
     pub fn cg(u_f: Prec, u: Prec, u_g: Prec, u_r: Prec) -> Action {
-        Action { solver: SolverFamily::CgIr, u_f, u, u_g, u_r }
+        Action {
+            solver: SolverFamily::CgIr,
+            u_f,
+            u,
+            u_g,
+            u_r,
+            precond: Precond::Jacobi,
+            restart_m: 0,
+        }
     }
 
     /// The same precision configuration under a different solver family.
+    /// The preconditioner resets to the target family's default (a CG
+    /// mirror of an LU action is Jacobi-PCG, not "no preconditioner"),
+    /// so mirrored spaces contain only well-formed arms.
     pub fn with_solver(mut self, solver: SolverFamily) -> Action {
         self.solver = solver;
+        self.precond = Precond::default_for(solver);
         self
+    }
+
+    /// The same action with a different preconditioner.
+    pub fn with_precond(mut self, precond: Precond) -> Action {
+        self.precond = precond;
+        self
+    }
+
+    /// The same action with a GMRES restart length (0 = single-cycle).
+    pub fn with_restart(mut self, restart_m: usize) -> Action {
+        self.restart_m = restart_m;
+        self
+    }
+
+    /// Is every v3 hyperparameter at its family default? True for every
+    /// action of the legacy (pre-v3) spaces.
+    pub fn is_legacy_shape(&self) -> bool {
+        self.precond == Precond::default_for(self.solver) && self.restart_m == 0
     }
 
     /// The precision tuple in paper order (u_f, u, u_g, u_r).
@@ -129,12 +242,22 @@ impl Action {
             self.u_g.name(),
             self.u_r.name()
         );
-        match self.solver {
+        let mut s = match self.solver {
             // LU keeps the historical bare-tuple rendering (tables/CSVs
             // stay diffable against earlier runs)
             SolverFamily::LuIr => precs,
             SolverFamily::CgIr => format!("cg{precs}"),
+        };
+        // v3 hyperparameters render only when non-default, so every
+        // legacy arm keeps its historical name byte-for-byte.
+        if self.precond != Precond::default_for(self.solver) {
+            s.push('+');
+            s.push_str(self.precond.name());
         }
+        if self.restart_m != 0 {
+            s.push_str(&format!("@m{}", self.restart_m));
+        }
+        s
     }
 }
 
@@ -220,6 +343,42 @@ impl ActionSpace {
                 .iter()
                 .map(|a| a.with_solver(SolverFamily::CgIr)),
         );
+        ActionSpace { actions }
+    }
+
+    /// GMRES restart lengths offered as arms by
+    /// [`ActionSpace::extended_precond_top_k`]. Short restarts bound the
+    /// Arnoldi basis (memory + orthogonalization cost) at the price of
+    /// extra cycles; the bandit learns whether that trade pays per
+    /// context.
+    pub const RESTART_CHOICES: [usize; 2] = [8, 16];
+
+    /// The v3 grown space (opt-in via `Config::precond_arms`): the
+    /// pruned extended space followed by
+    ///
+    /// * CG arms with a stronger-than-Jacobi preconditioner
+    ///   (block-Jacobi and SSOR, each at the all-FP64 anchor and one
+    ///   mixed tuple), and
+    /// * LU arms with a restarted inner GMRES (each `RESTART_CHOICES`
+    ///   length at the all-FP64 anchor and the flagship bf16-factor
+    ///   tuple).
+    ///
+    /// Appending after the base keeps every legacy index — and thus the
+    /// Q-table tie-break order — identical to [`ActionSpace::extended_top_k`].
+    pub fn extended_precond_top_k(k_top: usize) -> ActionSpace {
+        let mut actions = ActionSpace::extended_top_k(k_top).actions;
+        for pc in [Precond::BlockJacobi, Precond::Ssor] {
+            actions.push(Action::CG_FP64.with_precond(pc));
+            actions.push(
+                Action::cg(Prec::Fp32, Prec::Fp64, Prec::Fp64, Prec::Fp64).with_precond(pc),
+            );
+        }
+        for m in ActionSpace::RESTART_CHOICES {
+            actions.push(Action::FP64.with_restart(m));
+            actions.push(
+                Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64).with_restart(m),
+            );
+        }
         ActionSpace { actions }
     }
 
@@ -369,6 +528,71 @@ mod tests {
         assert_eq!(Action::FP64.name(), "(fp64,fp64,fp64,fp64)");
         assert_eq!(Action::CG_FP64.name(), "cg(fp64,fp64,fp64,fp64)");
         assert_eq!(Action::FP64.with_solver(SolverFamily::CgIr), Action::CG_FP64);
+    }
+
+    #[test]
+    fn precond_names_roundtrip_and_defaults() {
+        for p in Precond::ALL {
+            assert_eq!(Precond::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Precond::by_name("ilu0"), None);
+        assert_eq!(Precond::default_for(SolverFamily::LuIr), Precond::None);
+        assert_eq!(Precond::default_for(SolverFamily::CgIr), Precond::Jacobi);
+        assert!(Action::FP64.is_legacy_shape());
+        assert!(Action::CG_FP64.is_legacy_shape());
+        assert!(!Action::CG_FP64.with_precond(Precond::Ssor).is_legacy_shape());
+        assert!(!Action::FP64.with_restart(8).is_legacy_shape());
+    }
+
+    #[test]
+    fn v3_arm_rendering_only_marks_non_defaults() {
+        // legacy arms keep their historical names byte-for-byte
+        assert_eq!(Action::FP64.name(), "(fp64,fp64,fp64,fp64)");
+        assert_eq!(Action::CG_FP64.name(), "cg(fp64,fp64,fp64,fp64)");
+        assert_eq!(
+            Action::CG_FP64.with_precond(Precond::Ssor).name(),
+            "cg(fp64,fp64,fp64,fp64)+ssor"
+        );
+        assert_eq!(
+            Action::FP64.with_restart(16).name(),
+            "(fp64,fp64,fp64,fp64)@m16"
+        );
+        assert_eq!(
+            Action::cg(Prec::Fp32, Prec::Fp64, Prec::Fp64, Prec::Fp64)
+                .with_precond(Precond::BlockJacobi)
+                .name(),
+            "cg(fp32,fp64,fp64,fp64)+block-jacobi"
+        );
+    }
+
+    #[test]
+    fn extended_precond_space_appends_after_legacy_block() {
+        let base = ActionSpace::extended_top_k(9);
+        let grown = ActionSpace::extended_precond_top_k(9);
+        assert_eq!(grown.len(), base.len() + 8);
+        // legacy indices untouched
+        for (i, a) in base.actions.iter().enumerate() {
+            assert_eq!(&grown.actions[i], a, "index {i}");
+        }
+        // grown arms are monotone, unique, and non-legacy
+        let mut set = std::collections::HashSet::new();
+        for a in &grown.actions {
+            assert!(a.is_monotone(), "{a}");
+            assert!(set.insert(*a), "duplicate {a}");
+        }
+        for a in &grown.actions[base.len()..] {
+            assert!(!a.is_legacy_shape(), "{a}");
+        }
+        // both new preconditioners and both restart lengths represented
+        for pc in [Precond::BlockJacobi, Precond::Ssor] {
+            assert!(grown.actions.iter().any(|a| a.precond == pc));
+        }
+        for m in ActionSpace::RESTART_CHOICES {
+            assert!(grown
+                .actions
+                .iter()
+                .any(|a| a.restart_m == m && a.solver == SolverFamily::LuIr));
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod qtable;
 pub mod reward;
 pub mod trainer;
 
-pub use action::{Action, ActionSpace, SolverFamily};
+pub use action::{Action, ActionSpace, Precond, SolverFamily};
 pub use policy::{epsilon_at, select_action};
 pub use qtable::QTable;
 pub use reward::{reward, RewardInputs};

@@ -4,13 +4,16 @@
 //! eq. (6)/(27): Q ← Q + α (R − Q). Supports the fixed-α schedule the
 //! paper uses in §5 (α = 0.5) and the 1/N(s,a) visit-count schedule of
 //! Alg. 1 line 13. Persists to JSON together with its action list so a
-//! trained policy is self-describing. Since policy schema v2 each
-//! serialized action is a 5-tuple `[family, u_f, u, u_g, u_r]` — the
-//! solver family rides in front of the four precisions.
+//! trained policy is self-describing. Since policy schema v3 each
+//! serialized action is a 7-tuple
+//! `[family, u_f, u, u_g, u_r, precond, restart_m]` — the solver family
+//! rides in front of the four precisions, and the v3 hyperparameters
+//! (preconditioner name, GMRES restart length) trail them. v2 5-tuples
+//! and pre-v2 4-tuples are rejected with layout-specific messages.
 
 use anyhow::{bail, Result};
 
-use crate::bandit::action::{Action, ActionSpace, SolverFamily};
+use crate::bandit::action::{Action, ActionSpace, Precond, SolverFamily};
 use crate::chop::Prec;
 use crate::util::json::{self, Value};
 
@@ -57,7 +60,18 @@ impl QTable {
     /// Incremental update (eq. 6 / 27). `alpha = 0` selects the 1/N(s,a)
     /// schedule of Alg. 1. Returns the reward-prediction error R − Q
     /// *before* the update (the RPE traced in the appendix figures).
+    ///
+    /// Non-finite rewards are **rejected**, not absorbed: a single
+    /// NaN/inf reward (e.g. a NaN nbe from a failed solve leaking past a
+    /// caller's guard) would otherwise write NaN into the table, where
+    /// it poisons `argmax`/`visited_ranked` forever. The cell is left
+    /// untouched — no visit is counted — and the returned RPE is 0.0.
+    /// Callers that need to surface the drop count it themselves (see
+    /// `OnlineLearner::skipped_nonfinite`).
     pub fn update(&mut self, state: usize, action: usize, r: f64, alpha: f64) -> f64 {
+        if !r.is_finite() {
+            return 0.0;
+        }
         let i = self.idx(state, action);
         self.visits[i] += 1;
         let a = if alpha > 0.0 { alpha } else { 1.0 / self.visits[i] as f64 };
@@ -122,9 +136,11 @@ impl QTable {
         let base = state * self.space.len();
         let mut ranked: Vec<usize> =
             (0..self.space.len()).filter(|&i| self.visits[base + i] > 0).collect();
-        ranked.sort_by(|&a, &b| {
-            self.q[base + b].partial_cmp(&self.q[base + a]).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        // total_cmp, not partial_cmp-or-Equal: a NaN cell (impossible
+        // since update() guards, but cheap to defend against) gets a
+        // deterministic total order instead of making the comparator
+        // inconsistent and scrambling the whole ladder.
+        ranked.sort_by(|&a, &b| self.q[base + b].total_cmp(&self.q[base + a]));
         ranked
     }
 
@@ -183,6 +199,8 @@ impl QTable {
                         .map(|a| {
                             let mut parts = vec![json::s(a.solver.name())];
                             parts.extend(a.tuple().iter().map(|p| json::s(p.name())));
+                            parts.push(json::s(a.precond.name()));
+                            parts.push(json::num(a.restart_m as f64));
                             Value::Arr(parts)
                         })
                         .collect(),
@@ -201,24 +219,49 @@ impl QTable {
         let mut actions = Vec::new();
         for a in v.get("actions")?.as_arr()? {
             let parts = a.as_arr()?;
-            if parts.len() != 5 {
-                bail!(
-                    "action tuple must have 5 entries [family, u_f, u, u_g, u_r], got {} \
-                     (pre-v2 4-tuple layout?)",
-                    parts.len()
-                );
+            match parts.len() {
+                7 => {}
+                4 => bail!(
+                    "action tuple must have 7 entries \
+                     [family, u_f, u, u_g, u_r, precond, restart_m], got 4 \
+                     (pre-v2 precision-only layout?)"
+                ),
+                5 => bail!(
+                    "action tuple must have 7 entries \
+                     [family, u_f, u, u_g, u_r, precond, restart_m], got 5 \
+                     (v2 layout — predates the preconditioner/restart dimensions?)"
+                ),
+                n => bail!(
+                    "action tuple must have 7 entries \
+                     [family, u_f, u, u_g, u_r, precond, restart_m], got {n}"
+                ),
             }
             let fam_name = parts[0].as_str()?;
             let solver = SolverFamily::by_name(fam_name)
                 .ok_or_else(|| anyhow::anyhow!("unknown solver family {fam_name:?}"))?;
-            let p: Vec<Prec> = parts[1..]
+            let p: Vec<Prec> = parts[1..5]
                 .iter()
                 .map(|x| {
                     Prec::by_name(x.as_str()?)
                         .ok_or_else(|| anyhow::anyhow!("unknown precision {:?}", x))
                 })
                 .collect::<Result<_>>()?;
-            actions.push(Action { solver, u_f: p[0], u: p[1], u_g: p[2], u_r: p[3] });
+            let pc_name = parts[5].as_str()?;
+            let precond = Precond::by_name(pc_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown preconditioner {pc_name:?}"))?;
+            let raw_m = parts[6].as_f64()?;
+            if !raw_m.is_finite() || raw_m < 0.0 || raw_m.fract() != 0.0 || raw_m > 4096.0 {
+                bail!("restart_m is not a valid restart length ({raw_m}): corrupt policy file");
+            }
+            actions.push(Action {
+                solver,
+                u_f: p[0],
+                u: p[1],
+                u_g: p[2],
+                u_r: p[3],
+                precond,
+                restart_m: raw_m as usize,
+            });
         }
         let space = ActionSpace { actions };
         let q: Vec<f64> = v
@@ -330,25 +373,46 @@ mod tests {
 
     #[test]
     fn json_roundtrip_preserves_solver_family() {
-        // extended space: the serialized 5-tuples must carry the family
-        let mut t = QTable::new(2, ActionSpace::extended_top_k(9));
-        t.update(1, t.space.len() - 1, 3.5, 1.0); // a CG action
+        // grown space: the serialized 7-tuples must carry the family and
+        // the v3 hyperparameters
+        let mut t = QTable::new(2, ActionSpace::extended_precond_top_k(9));
+        t.update(1, t.space.len() - 1, 3.5, 1.0); // a restart arm
         let text = t.to_json().to_string();
         assert!(text.contains("\"cg-ir\""), "family missing from JSON: {text}");
         assert!(text.contains("\"lu-ir\""));
+        assert!(text.contains("\"ssor\""), "precond missing from JSON: {text}");
+        assert!(text.contains("\"block-jacobi\""));
         let back = QTable::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.space.actions, t.space.actions);
         assert_eq!(back.q(1, t.space.len() - 1), 3.5);
-        // a 4-tuple (pre-v2) action list is rejected loudly
-        let legacy = text.replacen("[\"lu-ir\",", "[", 1);
-        assert_ne!(legacy, text);
-        let err = QTable::from_json(&crate::util::json::parse(&legacy).unwrap()).unwrap_err();
-        assert!(err.to_string().contains("5 entries"), "{err}");
+        // a tuple stripped to the bare precisions (pre-v2) is rejected
+        // with the pre-v2 hint
+        let legacy4 = text.replacen("[\"lu-ir\",", "[", 1).replacen(",\"none\",0.0]", "]", 1);
+        assert_ne!(legacy4, text);
+        let err = QTable::from_json(&crate::util::json::parse(&legacy4).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("got 4"), "{err}");
+        assert!(err.to_string().contains("pre-v2"), "{err}");
+        // a 5-tuple (v2) action is rejected with the v2 hint
+        let legacy5 = text.replacen(",\"none\",0.0]", "]", 1);
+        assert_ne!(legacy5, text);
+        let err = QTable::from_json(&crate::util::json::parse(&legacy5).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("got 5"), "{err}");
+        assert!(err.to_string().contains("v2 layout"), "{err}");
         // an unknown family name is rejected loudly
         let bad = text.replacen("\"cg-ir\"", "\"qr-ir\"", 1);
         assert_ne!(bad, text);
         let err = QTable::from_json(&crate::util::json::parse(&bad).unwrap()).unwrap_err();
         assert!(err.to_string().contains("unknown solver family"), "{err}");
+        // an unknown preconditioner name is rejected loudly
+        let bad = text.replacen("\"ssor\"", "\"ilu0\"", 1);
+        assert_ne!(bad, text);
+        let err = QTable::from_json(&crate::util::json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown preconditioner"), "{err}");
+        // a fractional restart length is rejected, not truncated
+        let bad = text.replacen("\"none\",0.0]", "\"none\",0.5]", 1);
+        assert_ne!(bad, text);
+        let err = QTable::from_json(&crate::util::json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("valid restart length"), "{err}");
     }
 
     #[test]
@@ -383,6 +447,34 @@ mod tests {
             let err = QTable::from_json(&crate::util::json::parse(&bad_v).unwrap()).unwrap_err();
             assert!(err.to_string().contains("valid count"), "{err}");
         }
+    }
+
+    #[test]
+    fn non_finite_reward_cannot_poison_argmax_or_ladder() {
+        // regression: a NaN/inf reward used to write NaN into the table,
+        // after which partial_cmp-based ranking scrambled the
+        // degradation ladder. The update is now skipped entirely.
+        let mut t = table();
+        t.update(0, 4, 1.0, 1.0);
+        t.update(0, 9, 5.0, 1.0);
+        t.update(0, 2, -3.0, 1.0);
+        let before_fp = t.fingerprint();
+        let before_ranked = t.visited_ranked(0);
+        let before_argmax = t.argmax(0);
+        for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            // poison both an already-visited cell and a fresh one
+            assert_eq!(t.update(0, 9, poison, 1.0), 0.0);
+            assert_eq!(t.update(0, 7, poison, 0.0), 0.0);
+        }
+        // no cell moved, no visit counted, ordering identical
+        assert_eq!(t.fingerprint(), before_fp);
+        assert_eq!(t.visited_ranked(0), before_ranked);
+        assert_eq!(t.argmax(0), before_argmax);
+        assert_eq!(t.visits(0, 7), 0, "poisoned cell must stay unvisited");
+        assert_eq!(t.total_observations(), 3);
+        // and the table still accepts good rewards afterwards
+        t.update(0, 9, 6.0, 1.0);
+        assert_eq!(t.q(0, 9), 6.0);
     }
 
     #[test]

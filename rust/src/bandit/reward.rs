@@ -21,7 +21,7 @@
 //! `fail_reward` — the environment's "this configuration is unusable"
 //! signal.
 
-use crate::bandit::action::{Action, SolverFamily};
+use crate::bandit::action::{Action, Precond, SolverFamily};
 use crate::chop::Prec;
 use crate::util::config::Config;
 
@@ -49,17 +49,45 @@ pub fn step_weights(family: SolverFamily) -> [f64; 4] {
     }
 }
 
-/// f_precision (eq. 22), weighted by the family's cost model.
+/// Extra work a preconditioner choice adds on top of the family's
+/// 4-unit step budget (DESIGN.md §2i). `None` and `Jacobi` are the
+/// historical implicit choices already priced into [`step_weights`], so
+/// they cost 0 and every legacy arm's reward is bit-identical to v2.
+/// Block-Jacobi pays a one-off block-LU build plus a dense block
+/// triangular solve per PCG iteration (~0.75 matvec-equivalents
+/// amortized); SSOR pays two sparse triangular sweeps per application —
+/// about one full extra matvec per iteration plus setup (~1.25).
+pub fn precond_extra_cost(p: Precond) -> f64 {
+    match p {
+        Precond::None | Precond::Jacobi => 0.0,
+        Precond::BlockJacobi => 0.75,
+        Precond::Ssor => 1.25,
+    }
+}
+
+/// f_precision (eq. 22), weighted by the family's cost model and — for
+/// v3 preconditioned arms — deflated by the preconditioner's extra
+/// work, so a cheap tuple can't hide an expensive preconditioner:
+/// scale = 4 / (4 + extra). Restart-m arms carry no static cost term;
+/// their economics (fewer orthogonalizations vs more cycles) surface
+/// through T_iter in f_penalty.
 pub fn f_precision(action: &Action, kappa: f64) -> f64 {
     let t64 = Prec::Fp64.t() as f64;
     let discount = 1.0 + kappa.max(1.0).log10();
     let w = step_weights(action.solver);
-    action
+    let base: f64 = action
         .tuple()
         .iter()
         .zip(w)
         .map(|(p, wi)| wi * t64 / (p.t() as f64 * discount))
-        .sum()
+        .sum();
+    let extra = precond_extra_cost(action.precond);
+    if extra == 0.0 {
+        // skip the scale entirely: legacy arms stay bit-identical
+        base
+    } else {
+        base * 4.0 / (4.0 + extra)
+    }
 }
 
 /// f_accuracy (eq. 24).
@@ -136,6 +164,33 @@ mod tests {
         let mut lu_f = lu;
         lu_f.u_f = Prec::Bf16;
         assert!((f_precision(&lu_g, 1.0) - f_precision(&lu_f, 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precond_cost_deflates_f_precision_but_not_legacy_arms() {
+        // legacy arms (family-default preconditioner): bit-identical to
+        // the pre-v3 formula — exact equality, not approximate
+        assert_eq!(f_precision(&Action::CG_FP64, 1.0), 4.0);
+        assert_eq!(
+            f_precision(&Action::CG_FP64.with_precond(Precond::Jacobi), 1.0),
+            4.0
+        );
+        // restart arms carry no static cost term
+        assert_eq!(
+            f_precision(&Action::FP64.with_restart(8), 1e3),
+            f_precision(&Action::FP64, 1e3)
+        );
+        // stronger preconditioners deflate by 4/(4+extra)
+        let bj = f_precision(&Action::CG_FP64.with_precond(Precond::BlockJacobi), 1.0);
+        let ssor = f_precision(&Action::CG_FP64.with_precond(Precond::Ssor), 1.0);
+        assert!((bj - 4.0 * 4.0 / 4.75).abs() < 1e-12, "{bj}");
+        assert!((ssor - 4.0 * 4.0 / 5.25).abs() < 1e-12, "{ssor}");
+        assert!(ssor < bj && bj < 4.0);
+        // the deflation is uniform over the tuple, so cheap tuples still
+        // out-earn expensive ones under the same preconditioner
+        let cheap = Action::cg(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64)
+            .with_precond(Precond::Ssor);
+        assert!(f_precision(&cheap, 1.0) > ssor);
     }
 
     #[test]
@@ -219,8 +274,10 @@ mod tests {
         use crate::util::proptest::{check, gen};
         let c = cfg();
         check("reward_monotone", 13, 300, |rng| {
-            // both families: the monotonicity contract is family-blind
-            let a = ActionSpace::extended().actions[rng.below(70)];
+            // all families and v3 arms: the monotonicity contract is
+            // family- and preconditioner-blind
+            let space = ActionSpace::extended_precond_top_k(0);
+            let a = space.actions[rng.below(space.len())];
             let kappa = 10f64.powf(rng.uniform_in(0.0, 10.0));
             let e1 = 10f64.powf(rng.uniform_in(-16.0, 1.0));
             let e2 = e1 * 10f64.powf(rng.uniform_in(0.1, 3.0));

@@ -18,15 +18,16 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::bandit::action::{ActionSpace, SolverFamily};
+use crate::bandit::action::{Action, ActionSpace, SolverFamily};
 use crate::bandit::policy::{epsilon_at, select_action};
 use crate::bandit::qtable::QTable;
 use crate::bandit::reward::{reward, RewardInputs};
 use crate::chop::Prec;
-use crate::features::Discretizer;
+use crate::features::{phi_kappa_of, phi_norm_of, Context, Discretizer};
 use crate::gen::Problem;
 use crate::solver::family::solve_refinement;
-use crate::solver::ir::{gmres_ir_prefactored, SolveOutcome};
+use crate::solver::ir::{gmres_ir_prefactored, solve_per_step_ws, SolveOutcome};
+use crate::solver::workspace::SolveWorkspace;
 use crate::solver::{LuHandle, ProblemSession, SolverBackend};
 use crate::util::config::Config;
 use crate::util::json::{self, Value};
@@ -234,14 +235,19 @@ impl SolveCache {
 /// * v1 — 4-tuple actions (precisions only; pre-solver-family)
 /// * v2 — 5-tuple actions `[family, u_f, u, u_g, u_r]`; the
 ///   `action_space_hash` covers the family dimension
-pub const POLICY_SCHEMA_VERSION: usize = 2;
+/// * v3 — 7-tuple actions `[family, u_f, u, u_g, u_r, precond,
+///   restart_m]` (DESIGN.md §2i), a required decay axis in the
+///   discretizer, and an `action_space_hash` that absorbs the two new
+///   dimensions
+pub const POLICY_SCHEMA_VERSION: usize = 3;
 
 /// Order-sensitive FNV-1a over the action list (each action as its
-/// solver family followed by its four precision indices). A policy JSON
-/// carries this hash so a policy trained against one action space can
-/// never be silently applied to another (e.g. after a `k_top` change
-/// reorders the reduced list, or a family-swapped list with identical
-/// precision tuples).
+/// solver family, its four precision indices, its preconditioner code,
+/// and its restart length). A policy JSON carries this hash so a policy
+/// trained against one action space can never be silently applied to
+/// another (e.g. after a `k_top` change reorders the reduced list, a
+/// family-swapped list with identical precision tuples, or a
+/// precond/restart variant of an otherwise-identical arm).
 pub fn action_space_hash(space: &ActionSpace) -> u64 {
     const FNV_OFFSET: u64 = 0xcbf29ce484222325;
     const FNV_PRIME: u64 = 0x100000001b3;
@@ -253,8 +259,29 @@ pub fn action_space_hash(space: &ActionSpace) -> u64 {
         for p in a.tuple() {
             h = (h ^ (p as u64 + 1)).wrapping_mul(FNV_PRIME);
         }
+        // v3 dimensions in their own byte ranges (0x20+, 0x40+): legacy
+        // arms hash to *different* values than their v2 stream — the
+        // version gate rejects cross-version loads before the hash is
+        // ever compared, so no collision pressure across versions.
+        h = (h ^ (a.precond as u64 + 0x20)).wrapping_mul(FNV_PRIME);
+        h = (h ^ (a.restart_m as u64 + 0x40)).wrapping_mul(FNV_PRIME);
     }
     h
+}
+
+/// Whether `a` is a legal per-step successor of `cur`: identical
+/// solve-level shape (family, u_f, preconditioner, restart length —
+/// those are fixed once the trajectory starts) and escalation-only
+/// working precisions. Mirrors `solver::ir::clamp_step_action`, so an
+/// action passing this filter survives the clamp unchanged.
+fn step_candidate(a: &Action, cur: &Action) -> bool {
+    a.solver == cur.solver
+        && a.u_f == cur.u_f
+        && a.precond == cur.precond
+        && a.restart_m == cur.restart_m
+        && a.u >= cur.u
+        && a.u_g >= cur.u_g
+        && a.u_r >= cur.u_r
 }
 
 /// The trained artifact: Q-table + the discretizer it was fitted with,
@@ -276,11 +303,15 @@ impl TrainedPolicy {
     /// [`TrainedPolicy::select`] from raw (κ₁ estimate, ‖A‖∞) features —
     /// the serving path, where the cached session carries the features
     /// without a [`Problem`] wrapper. Same context mapping as
-    /// `features::context_of`, so the two entries are bit-identical.
-    pub fn select_features(&self, kappa_est: f64, norm_inf: f64) -> crate::bandit::action::Action {
-        let c = crate::features::Context {
-            phi_kappa: kappa_est.max(self.discretizer.delta_c).log10(),
-            phi_norm: norm_inf.max(self.discretizer.delta_n).log10(),
+    /// `features::context_of` (via the shared `phi_*_of` helpers — this
+    /// used to inline `kappa_est.max(δ_c)`, whose NaN-eating `max`
+    /// silently routed unknown-κ requests to the *easiest* κ bin), so
+    /// the two entries are bit-identical.
+    pub fn select_features(&self, kappa_est: f64, norm_inf: f64) -> Action {
+        let c = Context {
+            phi_kappa: phi_kappa_of(kappa_est, self.discretizer.delta_c),
+            phi_norm: phi_norm_of(norm_inf, self.discretizer.delta_n),
+            phi_decay: f64::NAN,
         };
         self.qtable.best_action_visited(self.discretizer.state_of_context(c))
     }
@@ -290,20 +321,54 @@ impl TrainedPolicy {
     /// whose pick is always entry 0 when non-empty). The serving facade
     /// walks this list as its graceful-degradation ladder when the greedy
     /// pick fails under fault injection.
-    pub fn select_features_ranked(
-        &self,
-        kappa_est: f64,
-        norm_inf: f64,
-    ) -> Vec<crate::bandit::action::Action> {
-        let c = crate::features::Context {
-            phi_kappa: kappa_est.max(self.discretizer.delta_c).log10(),
-            phi_norm: norm_inf.max(self.discretizer.delta_n).log10(),
+    pub fn select_features_ranked(&self, kappa_est: f64, norm_inf: f64) -> Vec<Action> {
+        let c = Context {
+            phi_kappa: phi_kappa_of(kappa_est, self.discretizer.delta_c),
+            phi_norm: phi_norm_of(norm_inf, self.discretizer.delta_n),
+            phi_decay: f64::NAN,
         };
         self.qtable
             .visited_ranked(self.discretizer.state_of_context(c))
             .into_iter()
             .map(|i| self.qtable.space.actions[i])
             .collect()
+    }
+
+    /// Per-step (MDP) inference: the greedy action for the *current* IR
+    /// step, given the running residual-decay feature φ₃ and the arm the
+    /// trajectory is already on. Only **visited** escalation candidates
+    /// of `current` (same solver/u_f/precond/restart_m, working
+    /// precisions ⩾ current — the same set `clamp_step_action` would
+    /// admit) are considered; an unvisited state keeps the current arm,
+    /// so a per-step policy can never de-escalate or jump shapes
+    /// mid-trajectory. Used as the `decide` hook of
+    /// [`crate::solver::ir::solve_per_step_ws`].
+    pub fn decide_step(
+        &self,
+        kappa_est: f64,
+        norm_inf: f64,
+        phi_decay: f64,
+        current: &Action,
+    ) -> Action {
+        let c = Context {
+            phi_kappa: phi_kappa_of(kappa_est, self.discretizer.delta_c),
+            phi_norm: phi_norm_of(norm_inf, self.discretizer.delta_n),
+            phi_decay,
+        };
+        let s = self.discretizer.state_of_context(c);
+        let mut best: Option<usize> = None;
+        for (ai, a) in self.qtable.space.actions.iter().enumerate() {
+            if step_candidate(a, current) && self.qtable.visits(s, ai) > 0 {
+                let better = match best {
+                    Some(b) => self.qtable.q(s, ai) > self.qtable.q(s, b),
+                    None => true,
+                };
+                if better {
+                    best = Some(ai);
+                }
+            }
+        }
+        best.map_or(*current, |ai| self.qtable.space.actions[ai])
     }
 
     pub fn to_json(&self) -> Value {
@@ -331,10 +396,18 @@ impl TrainedPolicy {
             )?
             .as_usize()?;
         if ver != POLICY_SCHEMA_VERSION {
+            // version-specific hints: the two legacy layouts are common
+            // enough on disk that "unsupported" alone sends people
+            // diffing JSON by hand
+            let hint = match ver {
+                1 => "v1 predates the solver-family action encoding",
+                2 => "v2 predates the preconditioner/restart/per-step action dimensions",
+                _ => "not a version this crate has ever written",
+            };
             bail!(
                 "unsupported policy schema_version {ver} (this build reads version \
-                 {POLICY_SCHEMA_VERSION}; v1 predates the solver-family action \
-                 encoding); retrain the policy or use a matching binary"
+                 {POLICY_SCHEMA_VERSION}; {hint}); retrain the policy or use a \
+                 matching binary"
             );
         }
         let qtable = QTable::from_json(v.get("qtable")?)?;
@@ -351,11 +424,12 @@ impl TrainedPolicy {
         if qtable.n_states != discretizer.n_states() {
             bail!(
                 "policy shape mismatch: Q-table has {} states but the discretizer \
-                 defines {} ({}x{} bins)",
+                 defines {} ({}x{}x{} bins)",
                 qtable.n_states,
                 discretizer.n_states(),
                 discretizer.kappa.n_bins,
-                discretizer.norm.n_bins
+                discretizer.norm.n_bins,
+                discretizer.decay.n_bins
             );
         }
         Ok(TrainedPolicy { qtable, discretizer })
@@ -407,10 +481,21 @@ impl<'a> Trainer<'a> {
     /// (both families) iff every problem is SPD and `cfg.families` is
     /// "auto". `families = "lu-only"` pins the paper's LU-only space
     /// everywhere (the §5.3 repro tables use this for fidelity).
+    ///
+    /// `cfg.precond_arms` additionally grows the extended route with the
+    /// v3 preconditioner/restart arms
+    /// ([`ActionSpace::extended_precond_top_k`]). It is opt-in and only
+    /// meaningful on the SPD route — the grown CG arms need SPD systems,
+    /// and keeping the default space byte-stable preserves every
+    /// existing policy's `action_space_hash`.
     pub fn space_for(cfg: &Config, problems: &[Problem]) -> ActionSpace {
         let all_spd = !problems.is_empty() && problems.iter().all(|p| p.spd);
         if all_spd && cfg.families != "lu-only" {
-            ActionSpace::extended_top_k(cfg.k_top)
+            if cfg.precond_arms {
+                ActionSpace::extended_precond_top_k(cfg.k_top)
+            } else {
+                ActionSpace::extended_top_k(cfg.k_top)
+            }
         } else {
             ActionSpace::reduced_top_k(cfg.k_top)
         }
@@ -450,7 +535,17 @@ impl<'a> Trainer<'a> {
         // LU-only datasets keep the historical threshold, so raising it
         // for CG cannot flip an existing LU-only config from
         // incremental training to a full N×|𝒜| sweep.
-        let precompute_cap = if self.space.has_family(SolverFamily::CgIr) { 24 } else { 12 };
+        // The precond-grown space (extended + 8) gets its own threshold
+        // for the same reason the extended one did: raising the cap only
+        // when the grown arms are actually present can never flip an
+        // existing configuration from incremental training to a sweep.
+        let precompute_cap = if self.space.actions.iter().any(|a| !a.is_legacy_shape()) {
+            32
+        } else if self.space.has_family(SolverFamily::CgIr) {
+            24
+        } else {
+            12
+        };
         if self.space.len() <= precompute_cap {
             let space = self.space.clone();
             self.cache.precompute(backend, problems, &space, cfg)?;
@@ -509,6 +604,154 @@ impl<'a> Trainer<'a> {
         // factors only help while pairs are being discovered; outcomes
         // stay memoized for the next training (e.g. W2 after W1).
         self.cache.release_factors();
+        Ok((TrainedPolicy { qtable: q, discretizer: disc }, trace))
+    }
+
+    /// Per-step (MDP) training — DESIGN.md §2i, enabled by
+    /// `cfg.per_step`. The discretizer gains `cfg.bins_decay` bins on
+    /// the residual-decay axis and each episode runs **rollouts**
+    /// through [`solve_per_step_ws`]: the initial arm is ε-greedy at the
+    /// problem's static state (φ₃ = NaN), then before every later IR
+    /// iteration the decide hook re-selects ε-greedily among the visited
+    /// arm's escalation candidates at the (φ₁, φ₂, φ₃-bin) state. Every
+    /// (state, arm) the trajectory touched receives a Monte-Carlo update
+    /// toward the rollout's terminal reward (evaluated per arm, so each
+    /// step pays its own precision cost).
+    ///
+    /// Outcomes depend on the whole decision trajectory, not a single
+    /// arm, so the [`SolveCache`] cannot memoize them — the episode loop
+    /// re-solves every rollout. It is deliberately **serial**: no
+    /// `parallel_map`, one RNG draw sequence, so the trained table is
+    /// byte-identical for every `PA_THREADS` (locked by
+    /// `tests/solver_family.rs`).
+    pub fn train_per_step(
+        &mut self,
+        backend: &dyn SolverBackend,
+        problems: &[Problem],
+        quiet: bool,
+    ) -> Result<(TrainedPolicy, EpisodeTrace)> {
+        let cfg = self.cfg;
+        self.space = Trainer::space_for(cfg, problems);
+        let space = self.space.clone();
+        let disc = Discretizer::fit(
+            problems,
+            cfg.bins_kappa,
+            cfg.bins_norm,
+            cfg.delta_c,
+            cfg.delta_n,
+        )
+        .with_decay_bins(cfg.bins_decay);
+        let mut q = QTable::new(disc.n_states(), space.clone());
+        let mut rng = Rng::new(cfg.seed ^ 0xE715_0DE5);
+        let mut trace = EpisodeTrace::default();
+        let mut ws = SolveWorkspace::new();
+        // (state, arm) pairs of the current rollout; reused across
+        // problems
+        let mut traj: Vec<(usize, usize)> = Vec::new();
+
+        let states: Vec<usize> = problems.iter().map(|p| disc.state_of(p)).collect();
+
+        for t in 0..cfg.episodes {
+            let eps = epsilon_at(t, cfg.episodes, cfg.eps_min);
+            let mut sum_r = 0.0;
+            let mut sum_rpe = 0.0;
+            let mut updates = 0usize;
+            let mut explored_n = 0usize;
+            for (pi, p) in problems.iter().enumerate() {
+                let s0 = states[pi];
+                let (ai0, explored) = select_action(&q, s0, eps, &mut rng);
+                explored_n += explored as usize;
+                let action0 = space.actions[ai0];
+                traj.clear();
+                traj.push((s0, ai0));
+                let out = {
+                    let qref = &q;
+                    let rng_ref = &mut rng;
+                    let traj_ref = &mut traj;
+                    let mut first = true;
+                    let mut decide = |phi_decay: f64, cur: &Action| -> Action {
+                        // the first call is the same φ₃ = NaN state the
+                        // initial arm was already selected at — don't
+                        // draw (and record) twice for one decision
+                        if first {
+                            first = false;
+                            return *cur;
+                        }
+                        let c = Context {
+                            phi_kappa: phi_kappa_of(p.kappa_est, disc.delta_c),
+                            phi_norm: phi_norm_of(p.norm_inf, disc.delta_n),
+                            phi_decay,
+                        };
+                        let s = disc.state_of_context(c);
+                        let cands: Vec<usize> = space
+                            .actions
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, a)| step_candidate(a, cur))
+                            .map(|(i, _)| i)
+                            .collect();
+                        // `cur` is always a member of the space (initial
+                        // arm, or a prior candidate pick), so it matches
+                        // its own filter and `cands` is never empty
+                        let ai = if rng_ref.uniform() < eps {
+                            cands[rng_ref.below(cands.len())]
+                        } else {
+                            let mut best = cands[0];
+                            for &cand in &cands[1..] {
+                                if qref.q(s, cand) > qref.q(s, best) {
+                                    best = cand;
+                                }
+                            }
+                            best
+                        };
+                        traj_ref.push((s, ai));
+                        space.actions[ai]
+                    };
+                    let session = ProblemSession::new(&p.system);
+                    solve_per_step_ws(
+                        backend, &session, &p.b, &p.x_true, &action0, cfg, None, &mut ws,
+                        &mut decide,
+                    )?
+                };
+                // Monte-Carlo backup: every decision on the trajectory
+                // shares the terminal outcome; the reward is evaluated
+                // with that step's arm so each step pays its own cost.
+                for &(s, ai) in traj.iter() {
+                    let r = reward(
+                        cfg,
+                        &space.actions[ai],
+                        &RewardInputs {
+                            ferr: out.ferr,
+                            nbe: out.nbe,
+                            gmres_iters: out.gmres_iters,
+                            kappa: p.kappa_est,
+                            failed: out.failed,
+                        },
+                    );
+                    let rpe = q.update(s, ai, r, cfg.alpha);
+                    sum_r += r;
+                    sum_rpe += rpe.abs();
+                    updates += 1;
+                }
+            }
+            let n = updates.max(1) as f64;
+            trace.episode.push(t as f64);
+            trace.mean_reward.push(sum_r / n);
+            trace.mean_abs_rpe.push(sum_rpe / n);
+            trace.epsilon.push(eps);
+            trace.explored_frac.push(explored_n as f64 / problems.len() as f64);
+            if !quiet && (t + 1) % 10 == 0 {
+                eprintln!(
+                    "  episode {:>3}/{} (per-step): eps={:.2} mean_reward={:+.3} mean|RPE|={:.3} updates={}",
+                    t + 1,
+                    cfg.episodes,
+                    eps,
+                    sum_r / n,
+                    sum_rpe / n,
+                    updates
+                );
+            }
+        }
         Ok((TrainedPolicy { qtable: q, discretizer: disc }, trace))
     }
 }
@@ -756,13 +999,21 @@ mod tests {
         let text = policy.to_json().to_string();
 
         // wrong version
-        let bad = text.replacen("\"schema_version\":2.0", "\"schema_version\":99.0", 1);
+        let bad = text.replacen("\"schema_version\":3.0", "\"schema_version\":99.0", 1);
         assert_ne!(bad, text);
         let err = TrainedPolicy::from_json(&json::parse(&bad).unwrap()).unwrap_err();
         assert!(err.to_string().contains("schema_version"), "{err}");
 
+        // legacy versions get version-specific migration hints
+        let v1 = text.replacen("\"schema_version\":3.0", "\"schema_version\":1.0", 1);
+        let err = TrainedPolicy::from_json(&json::parse(&v1).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("solver-family"), "{err}");
+        let v2 = text.replacen("\"schema_version\":3.0", "\"schema_version\":2.0", 1);
+        let err = TrainedPolicy::from_json(&json::parse(&v2).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("preconditioner/restart"), "{err}");
+
         // missing version (schema_version sorts last in the object)
-        let missing = text.replacen(",\"schema_version\":2.0", "", 1);
+        let missing = text.replacen(",\"schema_version\":3.0", "", 1);
         assert_ne!(missing, text);
         let err = TrainedPolicy::from_json(&json::parse(&missing).unwrap()).unwrap_err();
         assert!(err.to_string().contains("schema_version"), "{err}");
@@ -777,7 +1028,7 @@ mod tests {
 
     #[test]
     fn corrupt_policy_fixture_is_rejected_not_loaded() {
-        // the committed fixture is policy_golden_v2.json with one Q value
+        // the committed fixture is policy_golden_v3.json with one Q value
         // swapped for 1e999 (parses to +inf in our reader) — the exact
         // artifact a byte-flip or hand edit produces. Loading must fail
         // loudly, never hand inference an infinite Q.
@@ -786,7 +1037,7 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("not finite"), "{msg}");
         // control: the clean golden fixture still loads
-        let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
+        let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v3.json");
         let pol = TrainedPolicy::load(golden).unwrap();
         assert_eq!(pol.qtable.n_states, 2);
         // and its ranked view agrees with the greedy pick per state
@@ -814,6 +1065,17 @@ mod tests {
         let mut lu_cfg = cfg.clone();
         lu_cfg.families = "lu-only".to_string();
         assert!(!Trainer::space_for(&lu_cfg, &sparse).has_family(SolverFamily::CgIr));
+        // precond_arms is opt-in: off ⇒ byte-stable extended space; on ⇒
+        // the precond/restart-grown space, and only on the SPD route
+        let mut pc_cfg = cfg.clone();
+        pc_cfg.precond_arms = true;
+        let grown = Trainer::space_for(&pc_cfg, &sparse);
+        assert_eq!(grown.len(), ActionSpace::extended_precond_top_k(cfg.k_top).len());
+        assert!(grown.actions.iter().any(|a| !a.is_legacy_shape()));
+        assert_eq!(
+            Trainer::space_for(&pc_cfg, &dense).len(),
+            ActionSpace::reduced_top_k(cfg.k_top).len()
+        );
 
         let backend = NativeBackend::new();
         let mut cache = SolveCache::new();
@@ -855,6 +1117,95 @@ mod tests {
                 .collect(),
         };
         assert_ne!(action_space_hash(&lu), action_space_hash(&cg));
+    }
+
+    #[test]
+    fn hash_covers_precond_and_restart_dimensions() {
+        use crate::bandit::action::Precond;
+        let base = ActionSpace::extended_top_k(9);
+        let precond_swapped = ActionSpace {
+            actions: base
+                .actions
+                .iter()
+                .map(|a| {
+                    if a.solver == SolverFamily::CgIr {
+                        a.with_precond(Precond::Ssor)
+                    } else {
+                        *a
+                    }
+                })
+                .collect(),
+        };
+        let restart_swapped = ActionSpace {
+            actions: base
+                .actions
+                .iter()
+                .map(|a| {
+                    if a.solver == SolverFamily::LuIr {
+                        a.with_restart(8)
+                    } else {
+                        *a
+                    }
+                })
+                .collect(),
+        };
+        assert_ne!(action_space_hash(&base), action_space_hash(&precond_swapped));
+        assert_ne!(action_space_hash(&base), action_space_hash(&restart_swapped));
+        assert_ne!(
+            action_space_hash(&precond_swapped),
+            action_space_hash(&restart_swapped)
+        );
+        // the grown space hashes differently from its legacy prefix
+        assert_ne!(
+            action_space_hash(&ActionSpace::extended_precond_top_k(9)),
+            action_space_hash(&base)
+        );
+    }
+
+    #[test]
+    fn per_step_training_is_deterministic_and_policy_roundtrips() {
+        let mut cfg = quick_cfg();
+        cfg.size_min = 32;
+        cfg.size_max = 48;
+        cfg.episodes = 8;
+        cfg.per_step = true;
+        cfg.bins_decay = 2;
+        let problems = sparse_dataset(&cfg, 4, 700);
+        let backend = NativeBackend::new();
+        let mut c1 = SolveCache::new();
+        let (p1, tr1) = Trainer::new(&cfg, &mut c1)
+            .train_per_step(&backend, &problems, true)
+            .unwrap();
+        let mut c2 = SolveCache::new();
+        let (p2, tr2) = Trainer::new(&cfg, &mut c2)
+            .train_per_step(&backend, &problems, true)
+            .unwrap();
+        // the serial rollout loop is deterministic given the seed
+        assert_eq!(tr1.mean_reward, tr2.mean_reward);
+        assert_eq!(p1.qtable.fingerprint(), p2.qtable.fingerprint());
+        // the decay axis widened the state space
+        assert_eq!(
+            p1.discretizer.n_states(),
+            cfg.bins_kappa * cfg.bins_norm * cfg.bins_decay
+        );
+        // the artifact (with its decay-extended discretizer) roundtrips
+        let path = std::env::temp_dir().join("pa_policy_per_step_test.json");
+        p1.save(path.to_str().unwrap()).unwrap();
+        let back = TrainedPolicy::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back.discretizer, p1.discretizer);
+        assert_eq!(back.qtable.fingerprint(), p1.qtable.fingerprint());
+        // decide_step never de-escalates or changes the solve-level shape
+        let p0 = &problems[0];
+        for a0 in &p1.qtable.space.actions {
+            for phi in [f64::NAN, -4.0, -0.1] {
+                let next = p1.decide_step(p0.kappa_est, p0.norm_inf, phi, a0);
+                assert_eq!(next.solver, a0.solver);
+                assert_eq!(next.u_f, a0.u_f);
+                assert_eq!(next.precond, a0.precond);
+                assert_eq!(next.restart_m, a0.restart_m);
+                assert!(next.u >= a0.u && next.u_g >= a0.u_g && next.u_r >= a0.u_r);
+            }
+        }
     }
 
     #[test]

@@ -48,7 +48,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Result};
 
 use crate::api::{Autotuner, LadderRung, SolveError, SolveErrorKind, SolveReport};
-use crate::bandit::action::{Action, ActionSpace, SolverFamily};
+use crate::bandit::action::{Action, ActionSpace};
 use crate::bandit::qtable::QTable;
 use crate::bandit::TrainedPolicy;
 use crate::chop::Prec;
@@ -655,13 +655,7 @@ fn run_router_mix(
 /// the `next-best` rung skips by design, so every rescue lands on the
 /// `fp64-baseline` rung.
 fn misroute_policy(with_next_best: bool) -> TrainedPolicy {
-    let lu_bf16 = Action {
-        solver: SolverFamily::LuIr,
-        u_f: Prec::Bf16,
-        u: Prec::Fp64,
-        u_g: Prec::Fp64,
-        u_r: Prec::Fp64,
-    };
+    let lu_bf16 = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64);
     let actions = if with_next_best {
         vec![Action::CG_FP64, lu_bf16, Action::FP64]
     } else {
@@ -677,6 +671,7 @@ fn misroute_policy(with_next_best: bool) -> TrainedPolicy {
         discretizer: Discretizer {
             kappa: Binner { lo: 0.0, hi: 1.0, n_bins: 1 },
             norm: Binner { lo: 0.0, hi: 1.0, n_bins: 1 },
+            decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
             delta_c: 1.0,
             delta_n: 1e-30,
         },

@@ -9,9 +9,10 @@ use crate::bandit::action::Action;
 use crate::bandit::TrainedPolicy;
 use crate::chop::Prec;
 use crate::gen::Problem;
-use crate::solver::ir::{gmres_ir, SolveOutcome};
+use crate::solver::ir::{gmres_ir, solve_per_step_ws, SolveOutcome};
 use crate::solver::metrics::{mean, success_rate, CondRange};
-use crate::solver::SolverBackend;
+use crate::solver::workspace::SolveWorkspace;
+use crate::solver::{ProblemSession, SolverBackend};
 use crate::util::config::Config;
 use crate::util::pool::parallel_map;
 
@@ -80,6 +81,40 @@ pub fn evaluate_with_action(
     cfg: &Config,
 ) -> Result<Vec<EvalRecord>> {
     evaluate_each(backend, problems, cfg, move |_| action)
+}
+
+/// Evaluate a policy in per-step (MDP) mode — DESIGN.md §2i. The policy
+/// picks the initial arm at the problem's static state (φ₃ = NaN), then
+/// re-decides the working precisions before every IR iteration through
+/// [`TrainedPolicy::decide_step`] on the observed residual decay. The
+/// record's `action` is the *initial* arm (the solve-level shape —
+/// family, u_f, preconditioner, restart — is frozen for the whole
+/// trajectory, so it is the meaningful per-solve label).
+///
+/// Greedy inference draws no randomness, so the per-problem solves stay
+/// independent and the `PA_THREADS` parallelism keeps the bit-identical
+/// contract of [`evaluate`].
+pub fn evaluate_per_step(
+    backend: &dyn SolverBackend,
+    problems: &[Problem],
+    policy: &TrainedPolicy,
+    cfg: &Config,
+) -> Result<Vec<EvalRecord>> {
+    parallel_map(problems.len(), |i| {
+        let p = &problems[i];
+        let action0 = policy.select(p);
+        let session = ProblemSession::new(&p.system);
+        let mut ws = SolveWorkspace::new();
+        let mut decide = |phi_decay: f64, cur: &Action| {
+            policy.decide_step(p.kappa_est, p.norm_inf, phi_decay, cur)
+        };
+        let o = solve_per_step_ws(
+            backend, &session, &p.b, &p.x_true, &action0, cfg, None, &mut ws, &mut decide,
+        )?;
+        Ok(EvalRecord::from_outcome(p, action0, &o))
+    })
+    .into_iter()
+    .collect()
 }
 
 /// The one per-problem solve/record pipeline both entry points share —
@@ -251,6 +286,36 @@ mod tests {
             } else {
                 assert!(r.nbe.is_finite());
             }
+        }
+    }
+
+    #[test]
+    fn per_step_eval_produces_coherent_records() {
+        let mut c = cfg();
+        c.size_min = 32;
+        c.size_max = 48;
+        c.per_step = true;
+        c.bins_decay = 2;
+        c.episodes = 8;
+        let train = sparse_dataset(&c, 4, 920);
+        let test = sparse_dataset(&c, 4, 921);
+        let be = NativeBackend::new();
+        let mut cache = SolveCache::new();
+        let (policy, _) = Trainer::new(&c, &mut cache)
+            .train_per_step(&be, &train, true)
+            .unwrap();
+        let recs = evaluate_per_step(&be, &test, &policy, &c).unwrap();
+        assert_eq!(recs.len(), 4);
+        for r in &recs {
+            assert!(r.failed || r.nbe.is_finite(), "nbe {}", r.nbe);
+            // the recorded arm is one the policy's space contains
+            assert!(policy.qtable.space.actions.contains(&r.action));
+        }
+        // deterministic: a second pass is bit-identical
+        let again = evaluate_per_step(&be, &test, &policy, &c).unwrap();
+        for (a, b) in recs.iter().zip(&again) {
+            assert_eq!(a.nbe.to_bits(), b.nbe.to_bits());
+            assert_eq!(a.action, b.action);
         }
     }
 

@@ -67,6 +67,7 @@ pub(crate) fn tiny_serve_policy() -> crate::bandit::TrainedPolicy {
         discretizer: crate::features::Discretizer {
             kappa: crate::features::Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
             norm: crate::features::Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+            decay: crate::features::Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
             delta_c: 1e-30,
             delta_n: 1e-30,
         },

@@ -4,23 +4,70 @@
 //! each feature is binned into n₁ (resp. n₂) equal-width bins over the
 //! *training set's* min/max (§5.1), with clipping for out-of-range test
 //! instances. The flat state index is s_d = bin(φ₁)·n₂ + bin(φ₂) (eq. 20).
+//!
+//! The per-step MDP extension (DESIGN.md §2i) appends a third feature,
+//! φ₃ = log10 of the running residual-decay ratio, so a step-aware
+//! policy can re-decide precision mid-refinement from how fast the
+//! residual is actually shrinking. The static path fixes the decay
+//! binner at one bin, which makes every state index bit-identical to
+//! the 2-D layout — the `per_step = false` compatibility contract.
 
 use anyhow::Result;
 
 use crate::gen::Problem;
 use crate::util::json::{self, Value};
 
-/// Continuous context vector (eq. 18).
+/// Default decay-feature range: log10 of the per-iteration residual
+/// ratio. −16 ≈ "one step wiped out the residual to roundoff"; 0 ≈
+/// "stagnated" (clipping covers divergence).
+pub const DECAY_LO: f64 = -16.0;
+pub const DECAY_HI: f64 = 0.0;
+
+/// Continuous context vector (eq. 18, extended per DESIGN.md §2i).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Context {
-    pub phi_kappa: f64, // log10 max(kappa, delta_c)
+    pub phi_kappa: f64, // log10 max(kappa, delta_c); NaN = unknown κ
     pub phi_norm: f64,  // log10 max(norm_inf, delta_n)
+    /// log10 residual-decay ratio of the running trajectory; NaN before
+    /// the first ratio exists (and always, on the static path)
+    pub phi_decay: f64,
+}
+
+/// φ₁ from a raw κ estimate. NaN stays NaN: `f64::max` *eats* NaN
+/// (`NaN.max(x) == x`), which used to silently discretize unknown-κ
+/// contexts into the lowest κ bin — as if the system were easy. A NaN
+/// φ₁ instead routes to [`Binner::bin`]'s dedicated NaN branch (the
+/// hardest bin).
+pub fn phi_kappa_of(kappa_est: f64, delta_c: f64) -> f64 {
+    if kappa_est.is_nan() {
+        f64::NAN
+    } else {
+        kappa_est.max(delta_c).log10()
+    }
+}
+
+/// φ₂ from a raw ∞-norm (never NaN for real inputs; the δ_n floor
+/// guards zero matrices).
+pub fn phi_norm_of(norm_inf: f64, delta_n: f64) -> f64 {
+    norm_inf.max(delta_n).log10()
+}
+
+/// φ₃ from two consecutive residual magnitudes (current, previous).
+/// NaN — "no usable trajectory" — when either is non-finite or
+/// non-positive; the decay binner's NaN branch then picks the
+/// stagnation bin.
+pub fn phi_decay_of(r_now: f64, r_prev: f64) -> f64 {
+    if !(r_now.is_finite() && r_prev.is_finite()) || r_now <= 0.0 || r_prev <= 0.0 {
+        return f64::NAN;
+    }
+    (r_now / r_prev).log10()
 }
 
 pub fn context_of(p: &Problem, delta_c: f64, delta_n: f64) -> Context {
     Context {
-        phi_kappa: p.kappa_est.max(delta_c).log10(),
-        phi_norm: p.norm_inf.max(delta_n).log10(),
+        phi_kappa: phi_kappa_of(p.kappa_est, delta_c),
+        phi_norm: phi_norm_of(p.norm_inf, delta_n),
+        phi_decay: f64::NAN,
     }
 }
 
@@ -73,40 +120,58 @@ impl Binner {
     }
 }
 
-/// The full 2-D discretizer of §4.2.
+/// The full discretizer of §4.2: 2-D (κ, ‖A‖∞) for the static bandit,
+/// plus the per-step residual-decay axis (DESIGN.md §2i). With
+/// `decay.n_bins == 1` — the static default — every state index is
+/// bit-identical to the historical 2-D layout.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Discretizer {
     pub kappa: Binner,
     pub norm: Binner,
+    /// residual-decay binner (φ₃); one bin ⇒ static 2-D behavior
+    pub decay: Binner,
     pub delta_c: f64,
     pub delta_n: f64,
 }
 
 impl Discretizer {
     /// Fit bins on a training set (eq. 18 features, §5.1: per-feature
-    /// min/max over the training systems).
+    /// min/max over the training systems). The decay axis starts at one
+    /// bin (the static contract); per-step training widens it with
+    /// [`Discretizer::with_decay_bins`].
     pub fn fit(train: &[Problem], n1: usize, n2: usize, delta_c: f64, delta_n: f64) -> Discretizer {
         let ctxs: Vec<Context> = train.iter().map(|p| context_of(p, delta_c, delta_n)).collect();
         Discretizer {
             kappa: Binner::fit(ctxs.iter().map(|c| c.phi_kappa), n1),
             norm: Binner::fit(ctxs.iter().map(|c| c.phi_norm), n2),
+            decay: Binner { lo: DECAY_LO, hi: DECAY_HI, n_bins: 1 },
             delta_c,
             delta_n,
         }
     }
 
-    pub fn n_states(&self) -> usize {
-        self.kappa.n_bins * self.norm.n_bins
+    /// Widen the decay axis for per-step training. The decay range is
+    /// fixed (not fit): the trajectory distribution is policy-dependent,
+    /// so a data-fit range would make training non-stationary.
+    pub fn with_decay_bins(mut self, n_bins: usize) -> Discretizer {
+        self.decay.n_bins = n_bins.max(1);
+        self
     }
 
-    /// Flat state index (eq. 20).
+    pub fn n_states(&self) -> usize {
+        self.kappa.n_bins * self.norm.n_bins * self.decay.n_bins
+    }
+
+    /// Flat state index (eq. 20, decay-extended: the decay bin is the
+    /// minor axis so decay_bins = 1 reduces to the 2-D index exactly).
     pub fn state_of(&self, p: &Problem) -> usize {
-        let c = context_of(p, self.delta_c, self.delta_n);
-        self.kappa.bin(c.phi_kappa) * self.norm.n_bins + self.norm.bin(c.phi_norm)
+        self.state_of_context(context_of(p, self.delta_c, self.delta_n))
     }
 
     pub fn state_of_context(&self, c: Context) -> usize {
-        self.kappa.bin(c.phi_kappa) * self.norm.n_bins + self.norm.bin(c.phi_norm)
+        (self.kappa.bin(c.phi_kappa) * self.norm.n_bins + self.norm.bin(c.phi_norm))
+            * self.decay.n_bins
+            + self.decay.bin(c.phi_decay)
     }
 
     // ---- persistence (trained policies carry their discretizer) ----
@@ -119,6 +184,9 @@ impl Discretizer {
             ("norm_lo", json::num(self.norm.lo)),
             ("norm_hi", json::num(self.norm.hi)),
             ("norm_bins", json::num(self.norm.n_bins as f64)),
+            ("decay_lo", json::num(self.decay.lo)),
+            ("decay_hi", json::num(self.decay.hi)),
+            ("decay_bins", json::num(self.decay.n_bins as f64)),
             ("delta_c", json::num(self.delta_c)),
             ("delta_n", json::num(self.delta_n)),
         ])
@@ -135,6 +203,13 @@ impl Discretizer {
                 lo: v.get("norm_lo")?.as_f64()?,
                 hi: v.get("norm_hi")?.as_f64()?,
                 n_bins: v.get("norm_bins")?.as_usize()?,
+            },
+            // v3 fields: required, not defaulted — a policy without them
+            // is a v2 artifact and the schema gate reports it first.
+            decay: Binner {
+                lo: v.get("decay_lo")?.as_f64()?,
+                hi: v.get("decay_hi")?.as_f64()?,
+                n_bins: v.get("decay_bins")?.as_usize()?,
             },
             delta_c: v.get("delta_c")?.as_f64()?,
             delta_n: v.get("delta_n")?.as_f64()?,
@@ -223,9 +298,61 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let train: Vec<Problem> = vec![problem_with(1e1, 0.5), problem_with(1e8, 50.0)];
-        let d = Discretizer::fit(&train, 10, 10, 1.0, 1e-30);
+        let d = Discretizer::fit(&train, 10, 10, 1.0, 1e-30).with_decay_bins(3);
         let text = d.to_json().to_string();
+        assert!(text.contains("decay_bins"), "v3 decay fields missing: {text}");
         let back = Discretizer::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(d, back);
+    }
+
+    #[test]
+    fn nan_kappa_discretizes_into_dedicated_hardest_bin() {
+        // regression: `kappa_est.max(delta_c)` ate the NaN (f64::max
+        // semantics), so unknown-κ contexts — documented NaN routes:
+        // forced cg-ir without a policy, solve_with_action with a CG
+        // action — landed in the *lowest* κ bin, as if well-conditioned.
+        let train: Vec<Problem> = vec![problem_with(1e1, 1.0), problem_with(1e9, 1.0)];
+        let d = Discretizer::fit(&train, 10, 1, 1.0, 1e-30);
+        let nan_ctx = context_of(&problem_with(f64::NAN, 1.0), d.delta_c, d.delta_n);
+        assert!(nan_ctx.phi_kappa.is_nan(), "NaN κ must survive to the binner");
+        // deterministic dedicated routing: the hardest κ bin, not bin 0
+        let s_nan = d.state_of(&problem_with(f64::NAN, 1.0));
+        assert_eq!(s_nan, d.state_of(&problem_with(1e9, 1.0)));
+        assert_eq!(s_nan, 9);
+        assert_ne!(s_nan, d.state_of(&problem_with(1e1, 1.0)));
+        // and it is stable: every NaN κ maps to the same state
+        assert_eq!(s_nan, d.state_of(&problem_with(f64::NAN, 1.0)));
+    }
+
+    #[test]
+    fn decay_axis_is_minor_and_one_bin_matches_2d_layout() {
+        let train: Vec<Problem> = vec![problem_with(1e1, 1.0), problem_with(1e9, 1e4)];
+        let d2 = Discretizer::fit(&train, 10, 10, 1.0, 1e-30);
+        let d3 = d2.clone().with_decay_bins(4);
+        assert_eq!(d2.n_states(), 100);
+        assert_eq!(d3.n_states(), 400);
+        // decay_bins = 1: every state index identical to the 2-D layout
+        for p in [problem_with(1e1, 1.0), problem_with(1e5, 3.0), problem_with(1e9, 1e4)] {
+            let c = context_of(&p, 1.0, 1e-30);
+            assert_eq!(d2.state_of(&p), d2.state_of_context(c));
+        }
+        // the decay bin is the minor axis
+        let base = context_of(&problem_with(1e5, 1.0), 1.0, 1e-30);
+        let s_nan = d3.state_of_context(base); // NaN decay -> last bin
+        let fast = Context { phi_decay: -15.9, ..base };
+        let slow = Context { phi_decay: -0.01, ..base };
+        assert_eq!(d3.state_of_context(fast), s_nan - 3);
+        assert_eq!(d3.state_of_context(slow), s_nan);
+        assert_eq!(s_nan % 4, 3, "no-trajectory (NaN) decay = stagnation bin");
+    }
+
+    #[test]
+    fn phi_decay_of_handles_degenerate_trajectories() {
+        assert!((phi_decay_of(1e-8, 1e-4) - (-4.0)).abs() < 1e-12);
+        assert_eq!(phi_decay_of(1e-4, 1e-4), 0.0);
+        assert!(phi_decay_of(0.0, 1e-4).is_nan());
+        assert!(phi_decay_of(1e-4, 0.0).is_nan());
+        assert!(phi_decay_of(f64::NAN, 1e-4).is_nan());
+        assert!(phi_decay_of(1e-4, f64::INFINITY).is_nan());
     }
 }

@@ -1,17 +1,20 @@
-//! Jacobi-preconditioned conjugate gradients in emulated precision — the
+//! Preconditioned conjugate gradients in emulated precision — the
 //! inner solver of the CG-IR refinement family (`solver::family`,
 //! DESIGN.md §2d).
 //!
-//! The kernel is **operator-form only**: the matvec arrives as a closure
-//! (the session's cached chopped operator — dense or CSR, bit-identical
-//! either way), so CG never needs a materialized matrix, never densifies,
-//! and runs O(nnz) per iteration on sparse inputs. Emulation semantics
-//! mirror `linalg::gmres`: vectors are kept storage-rounded to the
-//! working precision `p`, dot products accumulate in f64 and round once,
-//! and every vector update rounds once per element. All reductions are
-//! sequential f64 sums and the matvec honors the row-parallel
-//! bit-identity contract, so the result is bit-identical for any
-//! `PA_THREADS` (locked by `tests/solver_family.rs`).
+//! The kernel is **operator-form only**: both the matvec and the
+//! preconditioner application arrive as closures (the session's cached
+//! chopped operator — dense or CSR, bit-identical either way; and an
+//! M⁻¹-apply such as Jacobi's elementwise scale or `linalg::precond`'s
+//! block-Jacobi / SSOR solves), so CG never needs a materialized matrix,
+//! never densifies, and runs O(nnz) per iteration on sparse inputs.
+//! Emulation semantics mirror `linalg::gmres`: vectors are kept
+//! storage-rounded to the working precision `p`, dot products accumulate
+//! in f64 and round once, and every vector update rounds once per
+//! element. All reductions are sequential f64 sums and the matvec honors
+//! the row-parallel bit-identity contract, so the result is
+//! bit-identical for any `PA_THREADS` (locked by
+//! `tests/solver_family.rs`).
 //!
 //! Loss of positive definiteness (pᵀAp ≤ 0 — a non-SPD operator, or an
 //! emulated-precision collapse) is a deterministic *failure* outcome
@@ -91,7 +94,7 @@ pub fn pcg_jacobi_op(
 /// (which now wraps this), so results are bit-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn pcg_jacobi_ws(
-    mut matvec: impl FnMut(&[f64], &mut Vec<f64>),
+    matvec: impl FnMut(&[f64], &mut Vec<f64>),
     n: usize,
     m_inv: &[f64],
     r: &[f64],
@@ -102,6 +105,43 @@ pub fn pcg_jacobi_ws(
     z_out: &mut Vec<f64>,
 ) -> InnerStats {
     debug_assert_eq!(m_inv.len(), n);
+    pcg_precond_ws(
+        matvec,
+        |res, y| {
+            y.clear();
+            y.extend(res.iter().zip(m_inv).map(|(ri, mi)| chop_p(ri * mi, p)));
+        },
+        n,
+        r,
+        tol,
+        max_it,
+        p,
+        ws,
+        z_out,
+    )
+}
+
+/// Fully general PCG kernel: the preconditioner application is a closure
+/// `precond(res, y)` writing y ≈ M⁻¹·res (clear + extend/resize into `y`,
+/// entries already rounded to `p`). [`pcg_jacobi_ws`] delegates here with
+/// the elementwise Jacobi closure — its per-element value stream (one
+/// `chop(ri·mi)` per entry per application) is exactly the old inlined
+/// kernel's, so legacy Jacobi arms stay bit-identical and allocation-free
+/// at warm capacity. Non-Jacobi preconditioners (`linalg::precond`:
+/// block-Jacobi, SSOR) plug in through the same seam (v3 action
+/// dimension, DESIGN.md §2i).
+#[allow(clippy::too_many_arguments)]
+pub fn pcg_precond_ws(
+    mut matvec: impl FnMut(&[f64], &mut Vec<f64>),
+    mut precond: impl FnMut(&[f64], &mut Vec<f64>),
+    n: usize,
+    r: &[f64],
+    tol: f64,
+    max_it: usize,
+    p: Prec,
+    ws: &mut InnerWs,
+    z_out: &mut Vec<f64>,
+) -> InnerStats {
     debug_assert_eq!(r.len(), n);
 
     // res = chop(r), beta0 = ||res||_2 (chopped norm, as in the GMRES
@@ -119,14 +159,9 @@ pub fn pcg_jacobi_ws(
         };
     }
 
-    // y = M⁻¹ res (Jacobi: elementwise), dir = y, rho = <res, y>
-    ws.c_y.clear();
-    ws.c_y.extend(
-        ws.c_res
-            .iter()
-            .zip(m_inv)
-            .map(|(ri, mi)| chop_p(ri * mi, p)),
-    );
+    // y = M⁻¹ res, dir = y, rho = <res, y>
+    precond(&ws.c_res, &mut ws.c_y);
+    debug_assert_eq!(ws.c_y.len(), n);
     ws.c_dir.clear();
     ws.c_dir.extend_from_slice(&ws.c_y);
     let mut rho = chop_p(dot(&ws.c_res, &ws.c_y), p);
@@ -175,9 +210,7 @@ pub fn pcg_jacobi_ws(
         }
         // prepare the next direction (harmless extra work when the loop
         // exits: dir is not read after)
-        for ((yi, ri), mi) in ws.c_y.iter_mut().zip(&ws.c_res).zip(m_inv) {
-            *yi = chop_p(ri * mi, p);
-        }
+        precond(&ws.c_res, &mut ws.c_y);
         let rho_new = chop_p(dot(&ws.c_res, &ws.c_y), p);
         if !rho_new.is_finite() || rho == 0.0 {
             ok = false;
@@ -299,6 +332,84 @@ mod tests {
         assert!(res.ok, "stall exit must not be a failure");
         assert!(res.iters < 100, "stall guard should cap the work");
         assert!(res.relres < 1.0, "some progress expected: {}", res.relres);
+    }
+
+    #[test]
+    fn general_kernel_with_jacobi_closure_matches_jacobi_entry_bitwise() {
+        // the seam contract: pcg_jacobi_ws is a thin delegation, so
+        // calling the general kernel with the elementwise closure must
+        // reproduce it bit for bit (this is what keeps legacy CG arms
+        // unchanged under the v3 preconditioner dimension)
+        let (a, _, b) = spd_system(28, 1.0, 11);
+        for p in [Prec::Bf16, Prec::Fp32, Prec::Fp64] {
+            let ac = a.chopped(p);
+            let m = m_inv(&a, p);
+            let mut bc = b.clone();
+            crate::chop::chop_slice(&mut bc, p);
+            let mut ws1 = InnerWs::default();
+            let mut ws2 = InnerWs::default();
+            let (mut z1, mut z2) = (Vec::new(), Vec::new());
+            let s1 = pcg_jacobi_ws(
+                |x, out| crate::linalg::chopped_matvec_prechopped_into(&ac, x, p, out),
+                28,
+                &m,
+                &bc,
+                1e-8,
+                60,
+                p,
+                &mut ws1,
+                &mut z1,
+            );
+            let s2 = pcg_precond_ws(
+                |x, out| crate::linalg::chopped_matvec_prechopped_into(&ac, x, p, out),
+                |res, y| {
+                    y.clear();
+                    y.extend(res.iter().zip(&m).map(|(ri, mi)| chop_p(ri * mi, p)));
+                },
+                28,
+                &bc,
+                1e-8,
+                60,
+                p,
+                &mut ws2,
+                &mut z2,
+            );
+            assert_eq!(s1.iters, s2.iters, "{p}");
+            assert_eq!(s1.ok, s2.ok, "{p}");
+            assert_eq!(s1.relres.to_bits(), s2.relres.to_bits(), "{p}");
+            for (u, v) in z1.iter().zip(&z2) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_precond_closure_still_converges() {
+        // unpreconditioned CG through the general seam: y = res verbatim
+        let (a, xt, b) = spd_system(30, 2.0, 12);
+        let mut ws = InnerWs::default();
+        let mut z = Vec::new();
+        let stats = pcg_precond_ws(
+            |x, out| {
+                a.matvec_into(x, out);
+            },
+            |res, y| {
+                y.clear();
+                y.extend_from_slice(res);
+            },
+            30,
+            &b,
+            1e-12,
+            200,
+            Prec::Fp64,
+            &mut ws,
+            &mut z,
+        );
+        assert!(stats.ok);
+        assert!(stats.relres <= 1e-12, "relres {}", stats.relres);
+        for (zi, xi) in z.iter().zip(&xt) {
+            assert!((zi - xi).abs() < 1e-9, "{zi} vs {xi}");
+        }
     }
 
     #[test]

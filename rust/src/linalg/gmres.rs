@@ -3,6 +3,14 @@
 //! (`python/compile/model.py::gmres`), used for the inner solves of
 //! GMRES-IR (precision u_g of Alg. 2, preconditioner M = LU applied in
 //! u_g per §4.2).
+//!
+//! This kernel is deliberately **single-cycle** (one Arnoldi expansion
+//! up to `max_m`): the v3 `Action::restart_m` arms get restarted
+//! GMRES(m) by having the refinement driver call this kernel per cycle
+//! with `max_m = m` and recompute the true chopped residual between
+//! cycles (`solver::ir::lu_inner_solve`) — restart is outer-loop
+//! policy, not Arnoldi mechanics, so the kernel's bit-contract stays
+//! untouched.
 
 use crate::chop::{chop_p, Prec};
 use crate::linalg::lu::LuFactors;

@@ -8,6 +8,7 @@ pub mod cg;
 pub mod condest;
 pub mod gmres;
 pub mod lu;
+pub mod precond;
 pub mod qr;
 
 use crate::chop::{chop_p, Prec};

@@ -1,0 +1,446 @@
+//! Non-trivial preconditioners for the CG-IR inner solve — the v3 action
+//! dimension's block-Jacobi and SSOR operators (DESIGN.md §2i).
+//!
+//! The bandit's legacy CG arms keep the elementwise Jacobi path inlined
+//! in `solver::ir` (bit-identity contract); arms that select a different
+//! preconditioner build a [`PrecondOp`] here and plug it into
+//! `linalg::cg::pcg_precond_ws` through the apply-closure seam.
+//!
+//! Build/apply semantics mirror the LU factorization emulation: the
+//! operator entries are **storage-rounded to the factorization precision
+//! `u_f` at build time** (the preconditioner is "factored" at u_f, like
+//! `lu_factor`), the triangular/block solves run in f64 on that chopped
+//! data, and the applied result is rounded once per element to the inner
+//! working precision `p` (= u_g) on output — the same
+//! one-rounding-per-stored-value discipline as the chopped matvec. A
+//! zero or non-finite pivot at build time is a deterministic
+//! *preconditioner breakdown*: builders return `None` and the refinement
+//! driver maps it to a failure outcome (exactly the legacy zero-diagonal
+//! Jacobi semantics).
+//!
+//! Everything here is sequential and allocation-free per apply (the one
+//! scratch vector is caller-owned), so the PA_THREADS bit-identity
+//! contract holds trivially. Builders consume an explicit `(i, j, v)`
+//! triplet list — the session's `for_each_entry` walk — so sparse
+//! systems never densify: build is O(nnz), apply is O(nnz + n·BLOCK).
+
+use crate::chop::{chop_p, Prec};
+
+/// Fixed block edge for the block-Jacobi preconditioner. Small enough
+/// that the per-block dense LU stays O(n·BLOCK²) total, large enough to
+/// capture local coupling the pointwise Jacobi scale misses.
+pub const BLOCK: usize = 4;
+
+/// One factored diagonal block: a dense `m×m` LU (partial pivoting) of
+/// rows/cols `[start, start+m)`. Public only because it appears in the
+/// [`PrecondOp::BlockJacobi`] variant; built exclusively by
+/// [`PrecondOp::block_jacobi`].
+#[derive(Clone, Debug)]
+pub struct Block {
+    start: usize,
+    m: usize,
+    /// row-major packed LU factors (unit lower / upper in one square)
+    lu: Vec<f64>,
+    /// row permutation: solve applies `piv` before the L-sweep
+    piv: Vec<usize>,
+}
+
+/// A built preconditioner: apply computes `y ≈ M⁻¹ r`.
+#[derive(Clone, Debug)]
+pub enum PrecondOp {
+    /// M = I — `Precond::None`: y = chop(r).
+    Identity,
+    /// M = blockdiag(A; BLOCK) with each block LU-factored at build.
+    BlockJacobi { n: usize, blocks: Vec<Block> },
+    /// Symmetric SOR with ω = 1: M = (D+L)·D⁻¹·(D+U), applied as a
+    /// forward solve, a diagonal scale, and a backward solve.
+    Ssor {
+        n: usize,
+        diag: Vec<f64>,
+        /// strict lower triangle, CSR-like (sorted by row, then col)
+        low_ptr: Vec<usize>,
+        low_col: Vec<usize>,
+        low_val: Vec<f64>,
+        /// strict upper triangle, CSR-like (sorted by row, then col)
+        up_ptr: Vec<usize>,
+        up_col: Vec<usize>,
+        up_val: Vec<f64>,
+    },
+}
+
+/// Factor a dense row-major `m×m` block in place (Doolittle, partial
+/// pivoting, f64). Returns the pivot order, or `None` on a zero /
+/// non-finite pivot.
+fn lu_factor_block(a: &mut [f64], m: usize) -> Option<Vec<usize>> {
+    let mut piv: Vec<usize> = (0..m).collect();
+    for k in 0..m {
+        // pick the largest |a[i][k]|, i ≥ k
+        let mut p = k;
+        let mut best = a[k * m + k].abs();
+        for i in (k + 1)..m {
+            let v = a[i * m + k].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if !(best > 0.0) || !best.is_finite() {
+            return None; // singular or poisoned block
+        }
+        if p != k {
+            for j in 0..m {
+                a.swap(k * m + j, p * m + j);
+            }
+            piv.swap(k, p);
+        }
+        let pivot = a[k * m + k];
+        for i in (k + 1)..m {
+            let l = a[i * m + k] / pivot;
+            a[i * m + k] = l;
+            for j in (k + 1)..m {
+                a[i * m + j] -= l * a[k * m + j];
+            }
+        }
+    }
+    Some(piv)
+}
+
+/// Solve the factored block against `rhs` in place (permute, unit-L
+/// forward sweep, U backward sweep), all in f64.
+fn lu_solve_block(lu: &[f64], piv: &[usize], m: usize, rhs: &mut [f64], scratch: &mut [f64]) {
+    for (i, &pi) in piv.iter().enumerate() {
+        scratch[i] = rhs[pi];
+    }
+    for i in 0..m {
+        let mut s = scratch[i];
+        for j in 0..i {
+            s -= lu[i * m + j] * scratch[j];
+        }
+        scratch[i] = s;
+    }
+    for i in (0..m).rev() {
+        let mut s = scratch[i];
+        for j in (i + 1)..m {
+            s -= lu[i * m + j] * scratch[j];
+        }
+        scratch[i] = s / lu[i * m + i];
+    }
+    rhs[..m].copy_from_slice(&scratch[..m]);
+}
+
+impl PrecondOp {
+    /// Build M = blockdiag(A) with BLOCK-sized diagonal blocks, each
+    /// entry chopped to `build_prec` before the per-block LU. `None` on
+    /// any singular block.
+    pub fn block_jacobi(
+        n: usize,
+        entries: &[(usize, usize, f64)],
+        build_prec: Prec,
+    ) -> Option<PrecondOp> {
+        let n_blocks = (n + BLOCK - 1) / BLOCK;
+        let mut dense: Vec<Vec<f64>> = (0..n_blocks)
+            .map(|b| {
+                let m = BLOCK.min(n - b * BLOCK);
+                vec![0.0; m * m]
+            })
+            .collect();
+        for &(i, j, v) in entries {
+            let b = i / BLOCK;
+            if j / BLOCK == b {
+                let m = BLOCK.min(n - b * BLOCK);
+                dense[b][(i - b * BLOCK) * m + (j - b * BLOCK)] = chop_p(v, build_prec);
+            }
+        }
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for (b, mut a) in dense.into_iter().enumerate() {
+            let start = b * BLOCK;
+            let m = BLOCK.min(n - start);
+            let piv = lu_factor_block(&mut a, m)?;
+            blocks.push(Block { start, m, lu: a, piv });
+        }
+        Some(PrecondOp::BlockJacobi { n, blocks })
+    }
+
+    /// Build the ω = 1 SSOR operator M = (D+L)·D⁻¹·(D+U), entries
+    /// chopped to `build_prec`. `None` on a zero / non-finite diagonal
+    /// (the solves divide by every dᵢ).
+    pub fn ssor(n: usize, entries: &[(usize, usize, f64)], build_prec: Prec) -> Option<PrecondOp> {
+        let mut diag = vec![0.0; n];
+        let mut low: Vec<(usize, usize, f64)> = Vec::new();
+        let mut up: Vec<(usize, usize, f64)> = Vec::new();
+        for &(i, j, v) in entries {
+            let c = chop_p(v, build_prec);
+            if c == 0.0 {
+                continue;
+            }
+            match j.cmp(&i) {
+                std::cmp::Ordering::Less => low.push((i, j, c)),
+                std::cmp::Ordering::Equal => diag[i] = c,
+                std::cmp::Ordering::Greater => up.push((i, j, c)),
+            }
+        }
+        if diag.iter().any(|d| *d == 0.0 || !d.is_finite()) {
+            return None; // preconditioner breakdown, same as zero-diag Jacobi
+        }
+        let pack = |mut t: Vec<(usize, usize, f64)>| {
+            t.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            let mut ptr = vec![0usize; n + 1];
+            let mut col = Vec::with_capacity(t.len());
+            let mut val = Vec::with_capacity(t.len());
+            for &(i, j, v) in &t {
+                ptr[i + 1] += 1;
+                col.push(j);
+                val.push(v);
+            }
+            for i in 0..n {
+                ptr[i + 1] += ptr[i];
+            }
+            (ptr, col, val)
+        };
+        let (low_ptr, low_col, low_val) = pack(low);
+        let (up_ptr, up_col, up_val) = pack(up);
+        Some(PrecondOp::Ssor { n, diag, low_ptr, low_col, low_val, up_ptr, up_col, up_val })
+    }
+
+    /// y = chop(M⁻¹ r, p): the solve runs in f64 over the build-chopped
+    /// operator; the result is rounded once per element to `p` (the CG
+    /// working precision). `scratch` is caller-owned and regrown in
+    /// place — steady-state applies allocate nothing.
+    pub fn apply(&self, r: &[f64], p: Prec, scratch: &mut Vec<f64>, out: &mut Vec<f64>) {
+        match self {
+            PrecondOp::Identity => {
+                out.clear();
+                out.extend(r.iter().map(|x| chop_p(*x, p)));
+            }
+            PrecondOp::BlockJacobi { n, blocks } => {
+                out.clear();
+                out.extend_from_slice(r);
+                scratch.clear();
+                scratch.resize(BLOCK, 0.0);
+                for b in blocks {
+                    debug_assert!(b.start + b.m <= *n);
+                    lu_solve_block(
+                        &b.lu,
+                        &b.piv,
+                        b.m,
+                        &mut out[b.start..b.start + b.m],
+                        scratch,
+                    );
+                }
+                for v in out.iter_mut() {
+                    *v = chop_p(*v, p);
+                }
+            }
+            PrecondOp::Ssor {
+                n,
+                diag,
+                low_ptr,
+                low_col,
+                low_val,
+                up_ptr,
+                up_col,
+                up_val,
+            } => {
+                // forward: (D+L) t = r
+                scratch.clear();
+                scratch.resize(*n, 0.0);
+                for i in 0..*n {
+                    let mut s = r[i];
+                    for k in low_ptr[i]..low_ptr[i + 1] {
+                        s -= low_val[k] * scratch[low_col[k]];
+                    }
+                    scratch[i] = s / diag[i];
+                }
+                // scale: w = D t
+                for (ti, di) in scratch.iter_mut().zip(diag) {
+                    *ti *= di;
+                }
+                // backward: (D+U) y = w
+                out.clear();
+                out.resize(*n, 0.0);
+                for i in (0..*n).rev() {
+                    let mut s = scratch[i];
+                    for k in up_ptr[i]..up_ptr[i + 1] {
+                        s -= up_val[k] * out[up_col[k]];
+                    }
+                    out[i] = s / diag[i];
+                }
+                for v in out.iter_mut() {
+                    *v = chop_p(*v, p);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cg::pcg_precond_ws;
+    use crate::linalg::Mat;
+    use crate::solver::workspace::InnerWs;
+    use crate::util::rng::Rng;
+
+    fn entries_of(a: &Mat) -> Vec<(usize, usize, f64)> {
+        let mut e = Vec::new();
+        for i in 0..a.n_rows {
+            for j in 0..a.n_cols {
+                if a[(i, j)] != 0.0 {
+                    e.push((i, j, a[(i, j)]));
+                }
+            }
+        }
+        e
+    }
+
+    fn spd_system(n: usize, boost: f64, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut g = Mat::zeros(n, n);
+        for v in g.data.iter_mut() {
+            *v = rng.gauss() * 0.3;
+        }
+        let mut a = g.transpose().matmul(&g);
+        for i in 0..n {
+            a[(i, i)] += boost;
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn block_jacobi_inverts_a_block_diagonal_matrix_exactly() {
+        // for a matrix that IS block diagonal, M⁻¹ r solves A y = r
+        let mut a = Mat::zeros(6, 6);
+        let blocks = [
+            [[4.0, 1.0, 0.0, 0.5], [1.0, 3.0, 0.2, 0.0], [0.0, 0.2, 5.0, 1.0], [0.5, 0.0, 1.0, 4.0]],
+        ];
+        for (bi, blk) in blocks.iter().enumerate() {
+            for i in 0..4 {
+                for j in 0..4 {
+                    a[(bi * 4 + i, bi * 4 + j)] = blk[i][j];
+                }
+            }
+        }
+        // trailing 2×2 block
+        a[(4, 4)] = 2.0;
+        a[(4, 5)] = 0.5;
+        a[(5, 4)] = 0.5;
+        a[(5, 5)] = 2.0;
+        let op = PrecondOp::block_jacobi(6, &entries_of(&a), Prec::Fp64).unwrap();
+        let r: Vec<f64> = (0..6).map(|i| 1.0 + i as f64).collect();
+        let (mut scratch, mut y) = (Vec::new(), Vec::new());
+        op.apply(&r, Prec::Fp64, &mut scratch, &mut y);
+        let ay = a.matvec(&y);
+        for (ayi, ri) in ay.iter().zip(&r) {
+            assert!((ayi - ri).abs() < 1e-12, "{ayi} vs {ri}");
+        }
+    }
+
+    #[test]
+    fn ssor_on_a_diagonal_matrix_is_exact_diagonal_solve() {
+        // L = U = 0 ⇒ M = D·D⁻¹·D = D
+        let mut a = Mat::zeros(5, 5);
+        for i in 0..5 {
+            a[(i, i)] = (i + 1) as f64;
+        }
+        let op = PrecondOp::ssor(5, &entries_of(&a), Prec::Fp64).unwrap();
+        let r = vec![2.0; 5];
+        let (mut scratch, mut y) = (Vec::new(), Vec::new());
+        op.apply(&r, Prec::Fp64, &mut scratch, &mut y);
+        for (i, yi) in y.iter().enumerate() {
+            assert!((yi - 2.0 / (i + 1) as f64).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn ssor_matches_explicit_factored_form() {
+        // apply must equal solving (D+L)·D⁻¹·(D+U) y = r built densely
+        let (a, b) = spd_system(12, 3.0, 21);
+        let op = PrecondOp::ssor(12, &entries_of(&a), Prec::Fp64).unwrap();
+        let (mut scratch, mut y) = (Vec::new(), Vec::new());
+        op.apply(&b, Prec::Fp64, &mut scratch, &mut y);
+        // reference: M y must reproduce b, with M = (D+L)·D⁻¹·(D+U)
+        // applied stepwise through dense triangles
+        let n = 12;
+        let mut dl = Mat::zeros(n, n);
+        let mut du = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                if j < i {
+                    dl[(i, j)] = a[(i, j)];
+                } else if j > i {
+                    du[(i, j)] = a[(i, j)];
+                }
+            }
+            dl[(i, i)] = a[(i, i)];
+            du[(i, i)] = a[(i, i)];
+        }
+        let dpu_y = du.matvec(&y);
+        let dinv_dpu_y: Vec<f64> = dpu_y.iter().enumerate().map(|(i, v)| v / a[(i, i)]).collect();
+        let my = dl.matvec(&dinv_dpu_y);
+        for (mi, bi) in my.iter().zip(&b) {
+            assert!((mi - bi).abs() < 1e-10 * bi.abs().max(1.0), "{mi} vs {bi}");
+        }
+    }
+
+    #[test]
+    fn ssor_accelerates_cg_over_identity() {
+        let (a, b) = spd_system(48, 0.2, 22);
+        let op = PrecondOp::ssor(48, &entries_of(&a), Prec::Fp64).unwrap();
+        let mut ws = InnerWs::default();
+        let (mut z, mut scratch) = (Vec::new(), Vec::new());
+        let ident = pcg_precond_ws(
+            |x, out| a.matvec_into(x, out),
+            |res, y| {
+                y.clear();
+                y.extend_from_slice(res);
+            },
+            48,
+            &b,
+            1e-10,
+            500,
+            Prec::Fp64,
+            &mut ws,
+            &mut z,
+        );
+        let mut ws2 = InnerWs::default();
+        let mut z2 = Vec::new();
+        let ssor = pcg_precond_ws(
+            |x, out| a.matvec_into(x, out),
+            |res, y| op.apply(res, Prec::Fp64, &mut scratch, y),
+            48,
+            &b,
+            1e-10,
+            500,
+            Prec::Fp64,
+            &mut ws2,
+            &mut z2,
+        );
+        assert!(ident.ok && ssor.ok);
+        assert!(
+            ssor.iters <= ident.iters,
+            "ssor {} vs identity {}",
+            ssor.iters,
+            ident.iters
+        );
+        // and it still solves the system
+        let az = a.matvec(&z2);
+        for (ai, bi) in az.iter().zip(&b) {
+            assert!((ai - bi).abs() < 1e-7 * bi.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn singular_blocks_and_zero_diagonals_break_down_deterministically() {
+        // an all-zero row makes both builders refuse
+        let mut a = Mat::eye(6);
+        a[(3, 3)] = 0.0;
+        let e = entries_of(&a);
+        assert!(PrecondOp::block_jacobi(6, &e, Prec::Fp64).is_none());
+        assert!(PrecondOp::ssor(6, &e, Prec::Fp64).is_none());
+        // a well-posed identity still builds under every precision
+        let e2 = entries_of(&Mat::eye(4));
+        assert!(PrecondOp::block_jacobi(4, &e2, Prec::Bf16).is_some());
+        assert!(PrecondOp::ssor(4, &e2, Prec::Bf16).is_some());
+    }
+}

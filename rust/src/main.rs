@@ -69,6 +69,13 @@ SUBCOMMANDS:
                 extended-space policy, evaluates both all-FP64 family
                 baselines + the policy on one held-out set
                 --out results/head_to_head.json
+                --precond  add the v3 preconditioner/restart arms
+                  (block-Jacobi / SSOR CG, restarted GMRES) to the
+                  action space and an SSOR-CG baseline arm
+                --per-step also train/evaluate a per-step (MDP) policy
+                  that re-decides the working precisions at every IR
+                  iteration from the residual-decay feature
+                  (--set bins_decay=N controls the φ₃ axis, default 3)
   repro       regenerate paper artifacts:
                 table2 table3 table4 table5 table6 fig2 fig3 fig4
                 figs5_12 actions all     [--out results/]
@@ -133,6 +140,10 @@ COMMON OPTIONS:
                               lu-only pins the paper's LU-only space
   --episodes N  --seed N      training length / determinism
   --no-penalty                ablate f_penalty (§5.4)
+  --precond                   opt into the preconditioner/restart action
+                              arms (= --set precond_arms=1)
+  --per-step                  opt into per-step (MDP) precision control
+                              (= --set per_step=1)
   --backend native|pjrt       solver backend (default native)
   --artifacts-dir <dir>       AOT artifacts (default artifacts/)
   --quiet                     suppress progress logs
@@ -429,6 +440,12 @@ fn run() -> Result<()> {
             row("lu-ir fp64", &r.records_lu64);
             row("cg-ir fp64", &r.records_cg64);
             row("policy (ext)", &r.records_policy);
+            if !r.records_cg_precond.is_empty() {
+                row("cg-ir fp64+ssor", &r.records_cg_precond);
+            }
+            if !r.records_policy_step.is_empty() {
+                row("policy (step)", &r.records_policy_step);
+            }
             println!(
                 "policy routed {:.0}% of systems to cg-ir; {} unique solves in {:.1}s",
                 100.0 * r.policy_cg_share(),

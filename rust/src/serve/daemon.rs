@@ -801,6 +801,7 @@ fn stats_value(state: &DaemonState) -> Value {
             ("queued", json::num(l.queue_len() as f64)),
             ("recent_rewards", json::num_arr(&l.recent_rewards())),
             ("skipped_foreign", json::num(l.skipped_foreign() as f64)),
+            ("skipped_nonfinite", json::num(l.skipped_nonfinite() as f64)),
         ])
         // learner guard drops here — before the shadow lock below
     };
@@ -844,6 +845,7 @@ mod tests {
             discretizer: Discretizer {
                 kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
                 norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
                 delta_c: 1e-30,
                 delta_n: 1e-30,
             },

@@ -73,6 +73,7 @@ pub struct OnlineLearner {
     applied: u64,
     dropped: u64,
     skipped_foreign: u64,
+    skipped_nonfinite: u64,
     reward_sum: f64,
     recent: VecDeque<f64>,
 }
@@ -92,6 +93,7 @@ impl OnlineLearner {
             applied: 0,
             dropped: 0,
             skipped_foreign: 0,
+            skipped_nonfinite: 0,
             reward_sum: 0.0,
             recent: VecDeque::new(),
         }
@@ -113,8 +115,12 @@ impl OnlineLearner {
     pub fn state_of_features(&self, kappa_est: f64, norm_inf: f64) -> usize {
         let kappa = self.effective_kappa(kappa_est);
         let c = Context {
-            phi_kappa: kappa.max(self.discretizer.delta_c).log10(),
-            phi_norm: norm_inf.max(self.discretizer.delta_n).log10(),
+            phi_kappa: crate::features::phi_kappa_of(kappa, self.discretizer.delta_c),
+            phi_norm: crate::features::phi_norm_of(norm_inf, self.discretizer.delta_n),
+            // serving reports carry no residual trajectory; NaN is the
+            // decay binner's "no trajectory" bin (the static state when
+            // decay_bins == 1)
+            phi_decay: f64::NAN,
         };
         self.discretizer.state_of_context(c)
     }
@@ -164,6 +170,15 @@ impl OnlineLearner {
         };
         let state = self.state_of_features(kappa_est, norm_inf);
         let r = self.reward_with(kappa_est, rep);
+        // A non-finite reward (a poisoned config — e.g. an infinite
+        // fail_reward — or a future reward term gone wrong) would wedge
+        // the Q argmax and the mean-reward telemetry forever. Skip and
+        // count instead of learning from it; `QTable::update` has the
+        // same guard as a second line of defense.
+        if !r.is_finite() {
+            self.skipped_nonfinite += 1;
+            return None;
+        }
         self.observed += 1;
         self.reward_sum += r;
         if self.recent.len() == RECENT_CAP {
@@ -205,6 +220,9 @@ impl OnlineLearner {
     }
     pub fn skipped_foreign(&self) -> u64 {
         self.skipped_foreign
+    }
+    pub fn skipped_nonfinite(&self) -> u64 {
+        self.skipped_nonfinite
     }
     pub fn epsilon(&self) -> f64 {
         self.opts.epsilon
@@ -270,6 +288,7 @@ mod tests {
             discretizer: Discretizer {
                 kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 2 },
                 norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
                 delta_c: 1e-30,
                 delta_n: 1e-30,
             },
@@ -393,6 +412,31 @@ mod tests {
         assert!(r.is_finite(), "NaN κ must not poison the reward: {r}");
         l.drain();
         assert_eq!(l.qtable().visits(1, 1), 1, "update landed in the hard bin");
+    }
+
+    #[test]
+    fn nonfinite_reward_is_skipped_not_learned() {
+        // a poisoned config (−∞ fail penalty) turns every failure report
+        // into a −∞ reward; before the guard, one such observation wedged
+        // the online argmax away from that arm *forever* (no finite
+        // stream of later rewards can undo −∞ in the running mean)
+        let pol = two_action_policy();
+        let mut cfg = Config::default();
+        cfg.fail_reward = f64::NEG_INFINITY;
+        let mut l = OnlineLearner::new(&pol, &cfg, OnlineOpts::default());
+        let before = l.qtable().fingerprint();
+        assert!(l.observe(&report(Action::FP64, f64::NAN, 0, true)).is_none());
+        assert_eq!(l.skipped_nonfinite(), 1);
+        assert_eq!(l.observed(), 0, "skipped observations are not 'observed'");
+        assert_eq!(l.queue_len(), 0);
+        assert_eq!(l.mean_reward(), 0.0, "telemetry stays finite");
+        l.drain();
+        assert_eq!(l.qtable().fingerprint(), before, "table untouched");
+        // a normal failure under a sane config still teaches the table
+        let sane = Config::default();
+        let mut l2 = OnlineLearner::new(&pol, &sane, OnlineOpts::default());
+        assert!(l2.observe(&report(Action::FP64, f64::NAN, 0, true)).is_some());
+        assert_eq!(l2.skipped_nonfinite(), 0);
     }
 
     #[test]

@@ -103,6 +103,7 @@ mod tests {
             discretizer: Discretizer {
                 kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
                 norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+                decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
                 delta_c: 1e-30,
                 delta_n: 1e-30,
             },

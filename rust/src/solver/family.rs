@@ -23,6 +23,12 @@
 //! backend therefore runs CG actions on the native chopped kernels —
 //! semantically identical, since both backends share the `chop`
 //! bit-contract.
+//!
+//! The v3 action dimensions ride through this seam unchanged: the
+//! drivers read `Action::precond` (CG-IR swaps its inner M⁻¹) and
+//! `Action::restart_m` (GMRES-IR runs restarted cycles) themselves, so
+//! every consumer of [`solve_refinement`] gained the extended arms for
+//! free (DESIGN.md §2i).
 
 use anyhow::Result;
 
@@ -205,6 +211,26 @@ mod tests {
             // only the LU family densifies
             let expect_densify = usize::from(action.solver == SolverFamily::LuIr);
             assert_eq!(session.densify_count(), expect_densify, "{action}");
+        }
+    }
+
+    #[test]
+    fn v3_arms_dispatch_through_the_same_seam() {
+        use crate::bandit::action::Precond;
+        let mut rng = Rng::new(79);
+        let csr = sparse_spd(40, 0.08, 1.0, &mut rng);
+        let p = finish_system(0, SystemInput::Sparse(csr), f64::NAN, &mut rng);
+        let backend = NativeBackend::new();
+        let cfg = Config::tiny();
+        for action in [
+            Action::CG_FP64.with_precond(Precond::Ssor),
+            Action::CG_FP64.with_precond(Precond::BlockJacobi),
+            Action::FP64.with_restart(8),
+        ] {
+            let session = ProblemSession::new(&p.system);
+            let out = solve_refinement(&backend, &session, &p, &action, &cfg, None).unwrap();
+            assert!(!out.failed, "{action}: {:?}", out.stop);
+            assert!(out.nbe < 1e-12, "{action}: nbe {}", out.nbe);
         }
     }
 }

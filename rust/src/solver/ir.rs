@@ -43,17 +43,32 @@
 //! caller's, for the trainer's factorization-sharing sweep) and every
 //! backend call takes `&self`, so solves of different problems run
 //! concurrently over one backend.
+//!
+//! **v3 action dimensions (DESIGN.md §2i).** Arms may additionally carry
+//! a preconditioner choice (`Action::precond` — CG-IR's inner PCG swaps
+//! its Jacobi apply for `linalg::precond`'s block-Jacobi/SSOR through
+//! the `pcg_precond_ws` seam) and a GMRES restart length
+//! (`Action::restart_m` — the LU family's inner solve becomes restarted
+//! cycles of length m with explicit residual recomputation between
+//! cycles). Legacy arms (`Precond::default_for(family)`, `restart_m ==
+//! 0`) take the *exact* pre-v3 code paths, so their results stay
+//! bit-identical. The per-step MDP variant
+//! ([`refinement_loop_per_step_ws`] and its family drivers) lets a
+//! policy re-decide the precision tuple at every outer iteration from
+//! the running residual-decay feature φ₃; with a constant decide hook
+//! its operation stream on the iterate is exactly the static loop's.
 
 use anyhow::Result;
 
-use crate::bandit::action::{Action, SolverFamily};
+use crate::bandit::action::{Action, Precond, SolverFamily};
 use crate::chop::{chop_p, Prec};
 use crate::faults::{self, FaultSite};
 use crate::gen::Problem;
-use crate::linalg::cg::pcg_jacobi_ws;
+use crate::linalg::cg::{pcg_jacobi_ws, pcg_precond_ws};
 use crate::linalg::norm_inf_vec;
+use crate::linalg::precond::PrecondOp;
 use crate::solver::metrics::{eps_max, ferr, nbe_from_parts};
-use crate::solver::workspace::SolveWorkspace;
+use crate::solver::workspace::{InnerWs, SolveWorkspace};
 use crate::solver::{ProblemSession, SolverBackend};
 use crate::util::config::Config;
 
@@ -301,7 +316,7 @@ pub fn gmres_ir_prefactored_ws(
     let inner_tol = cfg.gmres_tol_factor * cfg.tau;
     // Split the workspace into the disjoint parts the loop and the two
     // closures borrow simultaneously (field-level borrows).
-    let SolveWorkspace { ir_r, ir_z, res_xc, inner, .. } = ws;
+    let SolveWorkspace { ir_r, ir_z, res_xc, rst_z, rst_r, inner, .. } = ws;
     refinement_loop_ws(
         session,
         b,
@@ -313,9 +328,102 @@ pub fn gmres_ir_prefactored_ws(
         ir_z,
         |x, out| backend.residual_into(session, x, b, action.u_r, res_xc, out),
         |r, z| {
-            backend.gmres_ws(session, factors, r, inner_tol, cfg.gmres_max_m, action.u_g, inner, z)
+            lu_inner_solve(
+                backend,
+                session,
+                factors,
+                r,
+                inner_tol,
+                cfg.gmres_max_m,
+                action.restart_m,
+                action.u_g,
+                inner,
+                rst_z,
+                rst_r,
+                z,
+            )
         },
     )
+}
+
+/// The LU family's inner solve: one preconditioned GMRES call for legacy
+/// arms (`restart_m == 0` — the exact pre-v3 call, bit-identical), or
+/// restarted GMRES(m) cycles for v3 `restart_m` arms. Each cycle runs at
+/// most `m = restart_m.min(gmres_max_m)` Arnoldi steps, the accumulated
+/// correction is re-rounded to `u_g` per element, and the cycle residual
+/// is recomputed through the session's chopped operator (the same
+/// one-rounding-per-element discipline as the Alg.-2 residual step). The
+/// cycle budget caps total Arnoldi work at roughly the single-cycle
+/// kernel's `gmres_max_m`, so restart arms trade basis memory for extra
+/// matvecs — exactly the economics the reward's iteration penalty sees.
+#[allow(clippy::too_many_arguments)]
+fn lu_inner_solve(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    factors: &crate::solver::LuHandle,
+    r: &[f64],
+    inner_tol: f64,
+    gmres_max_m: usize,
+    restart_m: usize,
+    u_g: Prec,
+    inner: &mut InnerWs,
+    rst_z: &mut Vec<f64>,
+    rst_r: &mut Vec<f64>,
+    z: &mut Vec<f64>,
+) -> Result<(usize, bool)> {
+    if restart_m == 0 {
+        // legacy single-cycle path — byte-for-byte the pre-v3 call
+        return backend.gmres_ws(session, factors, r, inner_tol, gmres_max_m, u_g, inner, z);
+    }
+    let n = session.n();
+    let m = restart_m.min(gmres_max_m.max(1));
+    // same total-iteration budget as the single-cycle kernel
+    let max_cycles = (gmres_max_m + m - 1) / m;
+    let beta0 = norm_inf_vec(r);
+    rst_r.clear();
+    rst_r.extend_from_slice(r);
+    rst_z.clear();
+    rst_z.resize(n, 0.0);
+    let mut total = 0usize;
+    let mut ok = true;
+    for _ in 0..max_cycles {
+        let (iters, cyc_ok) =
+            backend.gmres_ws(session, factors, rst_r, inner_tol, m, u_g, inner, z)?;
+        total += iters;
+        if !cyc_ok {
+            ok = false;
+            break;
+        }
+        // accumulate the cycle correction in the working precision
+        for (zt, zi) in rst_z.iter_mut().zip(z.iter()) {
+            *zt = chop_p(*zt + zi, u_g);
+        }
+        if rst_z.iter().any(|v| !v.is_finite()) {
+            ok = false;
+            break;
+        }
+        // recompute the cycle residual through the chopped operator:
+        // rst_r = chop(chop(r) − A_g·z_total) (inner.av as matvec
+        // scratch — gmres_ws rewrites it next cycle anyway)
+        session.chopped_matvec_into(rst_z, u_g, &mut inner.av);
+        rst_r.clear();
+        rst_r.extend(
+            r.iter()
+                .zip(inner.av.iter())
+                .map(|(ri, avi)| chop_p(chop_p(*ri, u_g) - avi, u_g)),
+        );
+        let rn = norm_inf_vec(rst_r);
+        if !rn.is_finite() {
+            ok = false;
+            break;
+        }
+        if beta0 == 0.0 || rn <= inner_tol * beta0 || total >= gmres_max_m {
+            break;
+        }
+    }
+    z.clear();
+    z.extend_from_slice(rst_z);
+    Ok((total, ok))
 }
 
 /// CG-IR inside an existing session: Jacobi-preconditioned CG as the
@@ -365,20 +473,7 @@ pub fn cg_ir_ws(
 
     // Jacobi preconditioner from the operator diagonal — O(nnz).
     let d = session.diag();
-    // Inverse diagonal in precision `prec`, built in place; a zero /
-    // overflowed entry is the family's "factorization breakdown".
-    fn fill_inv(d: &[f64], prec: Prec, out: &mut Vec<f64>) -> bool {
-        out.clear();
-        for &di in d {
-            let v = chop_p(1.0 / chop_p(di, prec), prec);
-            if !v.is_finite() {
-                return false;
-            }
-            out.push(v);
-        }
-        true
-    }
-    let SolveWorkspace { ir_r, ir_z, res_xc, cg_mf, cg_mg, inner } = ws;
+    let SolveWorkspace { ir_r, ir_z, res_xc, cg_mf, cg_mg, pc_t, inner, .. } = ws;
     // build precision u_f; application precision u_g (inside PCG)
     if !fill_inv(&d, action.u_f, cg_mf) {
         return Ok(SolveOutcome::failure(n));
@@ -391,6 +486,9 @@ pub fn cg_ir_ws(
     let cg_mg: &[f64] = cg_mg;
 
     // Step 1 (u_f): x₀ = chop(D⁻¹ chop(b)) — the diagonal initial solve.
+    // Deliberately preconditioner-independent: the v3 precond dimension
+    // swaps the *inner PCG's* M⁻¹, not the family's u_f step, so every
+    // CG arm shares one x₀ definition (and one breakdown criterion).
     let x0: Vec<f64> = b
         .iter()
         .zip(cg_mf.iter())
@@ -398,6 +496,45 @@ pub fn cg_ir_ws(
         .collect();
 
     let inner_tol = cfg.gmres_tol_factor * cfg.tau;
+    if action.precond == Precond::Jacobi {
+        // legacy arms — byte-for-byte the pre-v3 inner solve
+        return refinement_loop_ws(
+            session,
+            b,
+            x_true,
+            action,
+            cfg,
+            x0,
+            ir_r,
+            ir_z,
+            |x, out| {
+                session.residual_into(x, b, action.u_r, res_xc, out);
+                Ok(())
+            },
+            |r, z| {
+                let stats = pcg_jacobi_ws(
+                    |xc, out| session.chopped_matvec_into(xc, action.u_g, out),
+                    n,
+                    cg_mg,
+                    r,
+                    inner_tol,
+                    cfg.gmres_max_m,
+                    action.u_g,
+                    inner,
+                    z,
+                );
+                Ok((stats.iters, stats.ok))
+            },
+        );
+    }
+
+    // v3 preconditioner arms: build the selected operator at u_f (the
+    // family's "factorization" precision); a singular build is the same
+    // deterministic breakdown as a zero diagonal.
+    let op = match build_cg_precond(session, action.precond, action.u_f) {
+        Some(op) => op,
+        None => return Ok(SolveOutcome::failure(n)),
+    };
     refinement_loop_ws(
         session,
         b,
@@ -412,10 +549,10 @@ pub fn cg_ir_ws(
             Ok(())
         },
         |r, z| {
-            let stats = pcg_jacobi_ws(
+            let stats = pcg_precond_ws(
                 |xc, out| session.chopped_matvec_into(xc, action.u_g, out),
+                |res, y| op.apply(res, action.u_g, pc_t, y),
                 n,
-                cg_mg,
                 r,
                 inner_tol,
                 cfg.gmres_max_m,
@@ -426,6 +563,366 @@ pub fn cg_ir_ws(
             Ok((stats.iters, stats.ok))
         },
     )
+}
+
+/// Inverse diagonal in precision `prec`, built in place; a zero /
+/// overflowed entry is the CG family's "factorization breakdown".
+fn fill_inv(d: &[f64], prec: Prec, out: &mut Vec<f64>) -> bool {
+    out.clear();
+    for &di in d {
+        let v = chop_p(1.0 / chop_p(di, prec), prec);
+        if !v.is_finite() {
+            return false;
+        }
+        out.push(v);
+    }
+    true
+}
+
+/// Build the non-Jacobi CG preconditioner selected by a v3 arm: an
+/// O(nnz) `for_each_entry` walk feeds `linalg::precond`'s builders at
+/// the factorization precision. `None` = identity (no build can fail);
+/// a singular block / zero diagonal returns `None` → failure outcome.
+fn build_cg_precond(
+    session: &ProblemSession<'_>,
+    precond: Precond,
+    build_prec: Prec,
+) -> Option<PrecondOp> {
+    match precond {
+        Precond::None => Some(PrecondOp::Identity),
+        Precond::Jacobi => unreachable!("legacy Jacobi arms take the inlined path"),
+        Precond::BlockJacobi | Precond::Ssor => {
+            let mut entries = Vec::new();
+            session.for_each_entry(|i, j, v| entries.push((i, j, v)));
+            if precond == Precond::BlockJacobi {
+                PrecondOp::block_jacobi(session.n(), &entries, build_prec)
+            } else {
+                PrecondOp::ssor(session.n(), &entries, build_prec)
+            }
+        }
+    }
+}
+
+/// Clamp a per-step policy proposal to the step-action invariants: the
+/// solver family, factorization precision, preconditioner, and restart
+/// length are solve-level choices (the factorization / preconditioner
+/// build already happened at them) and stay frozen at the current arm's
+/// values; the working precisions u / u_g / u_r may only *escalate*
+/// (monotone non-decreasing over steps — de-escalating mid-trajectory
+/// would reintroduce rounding noise the earlier steps already paid to
+/// remove, and escalation-only is what keeps the per-step MDP's state
+/// space a DAG the tabular Q can cover).
+pub fn clamp_step_action(proposed: &Action, current: &Action) -> Action {
+    let mut a = *current;
+    a.u = proposed.u.max(current.u);
+    a.u_g = proposed.u_g.max(current.u_g);
+    a.u_r = proposed.u_r.max(current.u_r);
+    a
+}
+
+/// The per-step (MDP) variant of [`refinement_loop_ws`]: before every
+/// inner solve the policy's `decide` hook observes φ₃ — the log₁₀
+/// residual-decay of the running trajectory (`phi_decay_of`; NaN on the
+/// first step, the discretizer's stagnation bin) — and proposes the next
+/// precision tuple, clamped by [`clamp_step_action`]. The contextual
+/// bandit becomes a small MDP: state = (φ₁, φ₂, φ₃ bin), action = the
+/// per-step tuple, transition = one refinement iteration.
+///
+/// With a constant decide hook (`|_, a| *a`) the operation stream on the
+/// iterate is *exactly* the static loop's — the only extra work is the
+/// residual-norm observation, which never feeds back into x — so the
+/// static path's bit-identity contract extends to this loop (locked by
+/// `per_step_constant_decide_matches_static_bitwise`).
+#[allow(clippy::too_many_arguments)]
+fn refinement_loop_per_step_ws(
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action0: &Action,
+    cfg: &Config,
+    mut x: Vec<f64>,
+    r_buf: &mut Vec<f64>,
+    z_buf: &mut Vec<f64>,
+    mut residual: impl FnMut(&[f64], Prec, &mut Vec<f64>) -> Result<()>,
+    mut inner_solve: impl FnMut(&[f64], &Action, &mut Vec<f64>) -> Result<(usize, bool)>,
+    decide: &mut dyn FnMut(f64, &Action) -> Action,
+) -> Result<SolveOutcome> {
+    let n = session.n();
+    if x.iter().any(|v| !v.is_finite()) {
+        return Ok(SolveOutcome::failure(n));
+    }
+
+    let mut act = *action0;
+    let mut outer = 0usize;
+    let mut inner_total = 0usize;
+    let mut prev_nz: Option<f64> = None;
+    let mut prev_rnorm = f64::NAN;
+    let mut stop = StopReason::MaxIterations;
+
+    for _ in 0..cfg.max_outer {
+        // Step 2 (current u_r)
+        residual(&x, act.u_r, r_buf)?;
+        if let Some(h) = faults::fire(FaultSite::Residual) {
+            r_buf[h as usize % n] = f64::NAN;
+        }
+        if r_buf.iter().any(|v| !v.is_finite()) {
+            stop = StopReason::Failure;
+            break;
+        }
+        // φ₃ from the running trajectory, then the MDP decision
+        let rnorm = norm_inf_vec(r_buf);
+        let phi_decay = crate::features::phi_decay_of(rnorm, prev_rnorm);
+        prev_rnorm = rnorm;
+        act = clamp_step_action(&decide(phi_decay, &act), &act);
+        // Step 3 (current u_g)
+        let (iters, mut ok) = inner_solve(r_buf, &act, z_buf)?;
+        if faults::fire(FaultSite::InnerBreakdown).is_some() {
+            ok = false;
+        }
+        if ok && faults::fire(FaultSite::InnerStall).is_some() {
+            for zi in z_buf.iter_mut() {
+                *zi = 1.0;
+            }
+        }
+        if !ok {
+            stop = StopReason::Failure;
+            break;
+        }
+        // Step 4 (current u): chopped update
+        for (xi, zi) in x.iter_mut().zip(z_buf.iter()) {
+            *xi = chop_p(*xi + zi, act.u);
+        }
+        outer += 1;
+        inner_total += iters;
+        if x.iter().any(|v| !v.is_finite()) {
+            stop = StopReason::Failure;
+            break;
+        }
+        let nz = norm_inf_vec(z_buf);
+        let nx = norm_inf_vec(&x);
+        // eq. (14) against the *current* update precision's roundoff
+        if nx > 0.0 && nz / nx <= act.u.unit_roundoff() {
+            stop = StopReason::Converged;
+            break;
+        }
+        if let Some(pnz) = prev_nz {
+            if pnz > 0.0 && nz / pnz >= cfg.tau {
+                stop = StopReason::Stagnated; // eq. (15)
+                break;
+            }
+        }
+        prev_nz = Some(nz);
+    }
+
+    if stop == StopReason::Failure {
+        let mut out = SolveOutcome::failure(n);
+        out.outer_iters = outer;
+        out.gmres_iters = inner_total;
+        return Ok(out);
+    }
+    let fe = if x_true.is_empty() { f64::NAN } else { ferr(&x, x_true) };
+    let be = nbe_from_parts(&session.matvec(&x), b, session.norm_inf(), &x);
+    let failed = !be.is_finite() || (!x_true.is_empty() && !fe.is_finite());
+    Ok(SolveOutcome {
+        eps_max: eps_max(fe, be),
+        ferr: fe,
+        nbe: be,
+        x,
+        outer_iters: outer,
+        gmres_iters: inner_total,
+        stop,
+        failed,
+    })
+}
+
+/// Per-step GMRES-IR: the LU family driver with the MDP decide hook.
+/// The factorization is frozen at `action0.u_f` (and may be shared via
+/// `prefactored`, exactly like the static driver); u / u_g / u_r follow
+/// the per-step trajectory.
+#[allow(clippy::too_many_arguments)]
+pub fn gmres_ir_per_step_ws(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action0: &Action,
+    cfg: &Config,
+    prefactored: Option<&crate::solver::LuHandle>,
+    ws: &mut SolveWorkspace,
+    decide: &mut dyn FnMut(f64, &Action) -> Action,
+) -> Result<SolveOutcome> {
+    debug_assert_eq!(action0.solver, SolverFamily::LuIr);
+    let n = session.n();
+    if faults::fire(FaultSite::Factor).is_some() {
+        return Ok(SolveOutcome::failure(n));
+    }
+    let owned;
+    let factors = match prefactored {
+        Some(f) => {
+            debug_assert_eq!(f.prec, action0.u_f);
+            f
+        }
+        None => match backend.lu_factor(session, action0.u_f) {
+            Ok(f) => {
+                owned = f;
+                &owned
+            }
+            Err(_) => return Ok(SolveOutcome::failure(n)),
+        },
+    };
+    let x0 = backend.lu_solve(factors, b, action0.u_f)?;
+    let inner_tol = cfg.gmres_tol_factor * cfg.tau;
+    let SolveWorkspace { ir_r, ir_z, res_xc, rst_z, rst_r, inner, .. } = ws;
+    refinement_loop_per_step_ws(
+        session,
+        b,
+        x_true,
+        action0,
+        cfg,
+        x0,
+        ir_r,
+        ir_z,
+        |x, u_r, out| backend.residual_into(session, x, b, u_r, res_xc, out),
+        |r, act, z| {
+            lu_inner_solve(
+                backend,
+                session,
+                factors,
+                r,
+                inner_tol,
+                cfg.gmres_max_m,
+                act.restart_m,
+                act.u_g,
+                inner,
+                rst_z,
+                rst_r,
+                z,
+            )
+        },
+        decide,
+    )
+}
+
+/// Per-step CG-IR: the CG family driver with the MDP decide hook. The
+/// u_f steps (inverse diagonal, x₀, non-Jacobi preconditioner build)
+/// are frozen at `action0`; the Jacobi application diagonal is rebuilt
+/// in place whenever the trajectory escalates u_g (a rebuild that fails
+/// — overflow at the new precision — is the usual deterministic
+/// breakdown).
+#[allow(clippy::too_many_arguments)]
+pub fn cg_ir_per_step_ws(
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action0: &Action,
+    cfg: &Config,
+    ws: &mut SolveWorkspace,
+    decide: &mut dyn FnMut(f64, &Action) -> Action,
+) -> Result<SolveOutcome> {
+    debug_assert_eq!(action0.solver, SolverFamily::CgIr);
+    let n = session.n();
+    if faults::fire(FaultSite::Factor).is_some() {
+        return Ok(SolveOutcome::failure(n));
+    }
+    let d = session.diag();
+    let SolveWorkspace { ir_r, ir_z, res_xc, cg_mf, cg_mg, pc_t, inner, .. } = ws;
+    if !fill_inv(&d, action0.u_f, cg_mf) {
+        return Ok(SolveOutcome::failure(n));
+    }
+    if !fill_inv(&d, action0.u_g, cg_mg) {
+        return Ok(SolveOutcome::failure(n));
+    }
+    let x0: Vec<f64> = b
+        .iter()
+        .zip(cg_mf.iter())
+        .map(|(bi, mi)| chop_p(chop_p(*bi, action0.u_f) * mi, action0.u_f))
+        .collect();
+    let inner_tol = cfg.gmres_tol_factor * cfg.tau;
+    let op = if action0.precond == Precond::Jacobi {
+        None
+    } else {
+        match build_cg_precond(session, action0.precond, action0.u_f) {
+            Some(op) => Some(op),
+            None => return Ok(SolveOutcome::failure(n)),
+        }
+    };
+    let mut mg_prec = action0.u_g;
+    refinement_loop_per_step_ws(
+        session,
+        b,
+        x_true,
+        action0,
+        cfg,
+        x0,
+        ir_r,
+        ir_z,
+        |x, u_r, out| {
+            session.residual_into(x, b, u_r, res_xc, out);
+            Ok(())
+        },
+        |r, act, z| {
+            let stats = match &op {
+                None => {
+                    if act.u_g != mg_prec {
+                        if !fill_inv(&d, act.u_g, cg_mg) {
+                            return Ok((0, false));
+                        }
+                        mg_prec = act.u_g;
+                    }
+                    pcg_jacobi_ws(
+                        |xc, out| session.chopped_matvec_into(xc, act.u_g, out),
+                        n,
+                        cg_mg,
+                        r,
+                        inner_tol,
+                        cfg.gmres_max_m,
+                        act.u_g,
+                        inner,
+                        z,
+                    )
+                }
+                Some(op) => pcg_precond_ws(
+                    |xc, out| session.chopped_matvec_into(xc, act.u_g, out),
+                    |res, y| op.apply(res, act.u_g, pc_t, y),
+                    n,
+                    r,
+                    inner_tol,
+                    cfg.gmres_max_m,
+                    act.u_g,
+                    inner,
+                    z,
+                ),
+            };
+            Ok((stats.iters, stats.ok))
+        },
+        decide,
+    )
+}
+
+/// Per-step dispatch over the action's family — the MDP analogue of
+/// `solver::family::solve_refinement`, used by the trainer's per-step
+/// rollouts and the head-to-head per-step arm when `Config::per_step`
+/// is on.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_per_step_ws(
+    backend: &dyn SolverBackend,
+    session: &ProblemSession<'_>,
+    b: &[f64],
+    x_true: &[f64],
+    action0: &Action,
+    cfg: &Config,
+    prefactored: Option<&crate::solver::LuHandle>,
+    ws: &mut SolveWorkspace,
+    decide: &mut dyn FnMut(f64, &Action) -> Action,
+) -> Result<SolveOutcome> {
+    match action0.solver {
+        SolverFamily::LuIr => gmres_ir_per_step_ws(
+            backend, session, b, x_true, action0, cfg, prefactored, ws, decide,
+        ),
+        SolverFamily::CgIr => {
+            cg_ir_per_step_ws(session, b, x_true, action0, cfg, ws, decide)
+        }
+    }
 }
 
 /// The FP64 baseline the paper compares against: the same driver with the
@@ -675,5 +1172,169 @@ mod tests {
         assert!(out.failed);
         assert_eq!(out.stop, StopReason::Failure);
         assert_eq!(out.outer_iters, 0, "breakdown happens before the loop");
+    }
+
+    #[test]
+    fn cg_precond_arms_solve_spd_without_densifying() {
+        // v3 preconditioner arms: every choice solves the sparse SPD
+        // system accurately and keeps the zero-densification contract
+        let c = cfg();
+        let p = spd_problem(60, 63);
+        for pc in [Precond::None, Precond::BlockJacobi, Precond::Ssor] {
+            let session = ProblemSession::new(&p.system);
+            let a = Action::CG_FP64.with_precond(pc);
+            let out = cg_ir(&session, &p, &a, &c).unwrap();
+            assert!(!out.failed, "{pc}: stop {:?}", out.stop);
+            assert!(out.nbe < 1e-12, "{pc}: nbe {}", out.nbe);
+            assert_eq!(session.densify_count(), 0, "{pc}");
+            assert_eq!(session.dense_matvec_count(), 0, "{pc}");
+        }
+    }
+
+    #[test]
+    fn ssor_arm_needs_no_more_inner_iterations_than_identity() {
+        // the point of paying the SSOR cost: fewer PCG matvecs
+        let c = cfg();
+        let p = spd_problem(80, 65);
+        let session = ProblemSession::new(&p.system);
+        let none = cg_ir(&session, &p, &Action::CG_FP64.with_precond(Precond::None), &c).unwrap();
+        let ssor = cg_ir(&session, &p, &Action::CG_FP64.with_precond(Precond::Ssor), &c).unwrap();
+        assert!(!none.failed && !ssor.failed);
+        assert!(
+            ssor.gmres_iters <= none.gmres_iters,
+            "ssor {} vs identity {}",
+            ssor.gmres_iters,
+            none.gmres_iters
+        );
+    }
+
+    #[test]
+    fn restart_arm_solves_and_legacy_zero_is_bit_identical() {
+        let be = NativeBackend::new();
+        let c = cfg();
+        let p = problem(50, 1e2, 71);
+        // restart_m = 0 must route through the exact legacy call
+        let base = gmres_ir(&be, &p, &Action::FP64, &c).unwrap();
+        let zero = gmres_ir(&be, &p, &Action::FP64.with_restart(0), &c).unwrap();
+        for (u, v) in base.x.iter().zip(&zero.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(base.gmres_iters, zero.gmres_iters);
+        // short restarted cycles still reach fp64-level accuracy on a
+        // bf16-factored arm (the correction is re-solved every cycle)
+        let a = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64).with_restart(8);
+        let out = gmres_ir(&be, &p, &a, &c).unwrap();
+        assert!(!out.failed, "stop {:?}", out.stop);
+        assert!(out.ferr < 1e-8, "ferr {}", out.ferr);
+    }
+
+    #[test]
+    fn clamp_step_action_freezes_solve_level_knobs_and_escalates_only() {
+        let cur = Action::lu(Prec::Bf16, Prec::Fp32, Prec::Fp32, Prec::Fp64).with_restart(8);
+        // a proposal that tries to de-escalate, switch family, and
+        // change the restart length
+        let mut prop = Action::cg(Prec::Fp64, Prec::Bf16, Prec::Bf16, Prec::Bf16);
+        prop.restart_m = 16;
+        let c = clamp_step_action(&prop, &cur);
+        assert_eq!(c.solver, cur.solver);
+        assert_eq!(c.u_f, cur.u_f);
+        assert_eq!(c.precond, cur.precond);
+        assert_eq!(c.restart_m, cur.restart_m);
+        assert_eq!(c.u, cur.u, "u cannot de-escalate");
+        assert_eq!(c.u_g, cur.u_g);
+        assert_eq!(c.u_r, cur.u_r);
+        // escalation passes through
+        let up = Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64);
+        let c2 = clamp_step_action(&up, &cur);
+        assert_eq!(c2.u, Prec::Fp64);
+        assert_eq!(c2.u_g, Prec::Fp64);
+        assert_eq!(c2.u_r, Prec::Fp64);
+    }
+
+    #[test]
+    fn per_step_constant_decide_matches_static_bitwise() {
+        // the per-step loop with an identity decide hook must reproduce
+        // the static driver bit for bit — this is the contract that
+        // makes `Config::per_step = false` a pure routing choice
+        let be = NativeBackend::new();
+        let c = cfg();
+        // LU family (dense)
+        let p = problem(40, 1e4, 81);
+        let session = ProblemSession::new(&p.system);
+        let a = Action::lu(Prec::Fp32, Prec::Fp64, Prec::Fp64, Prec::Fp64);
+        let mut ws1 = SolveWorkspace::new();
+        let stat =
+            gmres_ir_prefactored_ws(&be, &session, &p.b, &p.x_true, &a, &c, None, &mut ws1)
+                .unwrap();
+        let mut ws2 = SolveWorkspace::new();
+        let mut ident = |_: f64, act: &Action| *act;
+        let step = solve_per_step_ws(
+            &be, &session, &p.b, &p.x_true, &a, &c, None, &mut ws2, &mut ident,
+        )
+        .unwrap();
+        assert_eq!(stat.outer_iters, step.outer_iters);
+        assert_eq!(stat.gmres_iters, step.gmres_iters);
+        assert_eq!(stat.stop, step.stop);
+        for (u, v) in stat.x.iter().zip(&step.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(stat.nbe.to_bits(), step.nbe.to_bits());
+        // CG family (sparse SPD)
+        let p2 = spd_problem(50, 83);
+        let s2 = ProblemSession::new(&p2.system);
+        let a2 = Action::CG_FP64;
+        let mut ws3 = SolveWorkspace::new();
+        let stat2 = cg_ir_ws(&s2, &p2.b, &p2.x_true, &a2, &c, &mut ws3).unwrap();
+        let mut ws4 = SolveWorkspace::new();
+        let mut ident2 = |_: f64, act: &Action| *act;
+        let step2 = solve_per_step_ws(
+            &be, &s2, &p2.b, &p2.x_true, &a2, &c, None, &mut ws4, &mut ident2,
+        )
+        .unwrap();
+        assert_eq!(stat2.outer_iters, step2.outer_iters);
+        assert_eq!(stat2.gmres_iters, step2.gmres_iters);
+        for (u, v) in stat2.x.iter().zip(&step2.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(stat2.nbe.to_bits(), step2.nbe.to_bits());
+    }
+
+    #[test]
+    fn per_step_escalation_recovers_accuracy_from_a_cheap_start() {
+        // start on an all-bf16 arm; a decide hook that escalates to
+        // fp64 once the trajectory stagnates must end far more accurate
+        // than the static bf16 arm
+        let be = NativeBackend::new();
+        let c = cfg();
+        let p = problem(48, 1e2, 91);
+        let cheap = Action::lu(Prec::Bf16, Prec::Bf16, Prec::Bf16, Prec::Bf16);
+        let static_out = gmres_ir(&be, &p, &cheap, &c).unwrap();
+        let session = ProblemSession::new(&p.system);
+        let mut ws = SolveWorkspace::new();
+        // escalate everything to fp64 whenever decay is slow (> -2
+        // orders per step) or unobserved yet (the NaN first step)
+        let mut decide = |phi: f64, act: &Action| {
+            if phi.is_nan() || phi > -2.0 {
+                let mut a = *act;
+                a.u = Prec::Fp64;
+                a.u_g = Prec::Fp64;
+                a.u_r = Prec::Fp64;
+                a
+            } else {
+                *act
+            }
+        };
+        let step = solve_per_step_ws(
+            &be, &session, &p.b, &p.x_true, &cheap, &c, None, &mut ws, &mut decide,
+        )
+        .unwrap();
+        assert!(!step.failed, "stop {:?}", step.stop);
+        assert!(
+            step.ferr < 1e-8,
+            "escalated per-step ferr {} (static bf16: {})",
+            step.ferr,
+            static_out.ferr
+        );
+        assert!(step.ferr < static_out.ferr);
     }
 }

@@ -225,6 +225,33 @@ impl<'a> ProblemSession<'a> {
         }
     }
 
+    /// Visit every stored nonzero as `(row, col, value)` — the
+    /// preconditioner builders' input (`linalg::precond`: block-Jacobi /
+    /// SSOR need per-row triangles, not just the diagonal). O(nnz) for
+    /// sparse inputs and never densifies; dense inputs skip exact zeros
+    /// so both views report the same entry set. Row-major visit order
+    /// either way (deterministic — the builders sort anyway).
+    pub fn for_each_entry(&self, mut f: impl FnMut(usize, usize, f64)) {
+        match self.src() {
+            SystemRef::Dense(m) => {
+                for i in 0..m.n_rows {
+                    for (j, &v) in m.row(i).iter().enumerate() {
+                        if v != 0.0 {
+                            f(i, j, v);
+                        }
+                    }
+                }
+            }
+            SystemRef::Sparse(c) => {
+                for i in 0..c.n_rows {
+                    for k in c.row_ptr[i]..c.row_ptr[i + 1] {
+                        f(i, c.col_idx[k], c.values[k]);
+                    }
+                }
+            }
+        }
+    }
+
     /// r = chop(chop(b) − Aₚ·chop(x)) through the operator — the Alg.-2
     /// residual step. This bit-sensitivity-critical chop sequence exists
     /// exactly once: the native backend's `residual` and the CG family's
@@ -542,6 +569,30 @@ mod tests {
                 owned.dense_for_factorization()
             );
         }
+    }
+
+    #[test]
+    fn for_each_entry_agrees_across_views_and_skips_zeros() {
+        let mut a = Mat::zeros(5, 5);
+        a[(0, 0)] = 2.0;
+        a[(1, 3)] = -0.5;
+        a[(3, 1)] = 4.25;
+        a[(4, 4)] = 1.0;
+        let csr = Csr::from_dense(&a);
+        let collect = |s: &ProblemSession| {
+            let mut e = Vec::new();
+            s.for_each_entry(|i, j, v| e.push((i, j, v)));
+            e
+        };
+        let dense_e = collect(&ProblemSession::new(&a));
+        let sparse_e = collect(&ProblemSession::new(&csr));
+        assert_eq!(dense_e.len(), 4, "exact zeros are not entries");
+        assert_eq!(dense_e, sparse_e, "both views visit the same set");
+        assert!(dense_e.contains(&(3, 1, 4.25)));
+        // row-major order
+        let mut sorted = dense_e.clone();
+        sorted.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        assert_eq!(dense_e, sorted);
     }
 
     #[test]

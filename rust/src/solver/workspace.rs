@@ -83,6 +83,12 @@ pub struct SolveWorkspace {
     pub(crate) cg_mf: Vec<f64>,
     /// CG-IR Jacobi inverse diagonal in u_g (PCG application)
     pub(crate) cg_mg: Vec<f64>,
+    /// restarted-GMRES accumulated correction (v3 `restart_m` arms; len n)
+    pub(crate) rst_z: Vec<f64>,
+    /// restarted-GMRES running cycle residual (len n)
+    pub(crate) rst_r: Vec<f64>,
+    /// non-Jacobi preconditioner apply scratch (v3 `precond` arms)
+    pub(crate) pc_t: Vec<f64>,
     /// inner-solver scratch (GMRES / PCG)
     pub(crate) inner: InnerWs,
 }

@@ -48,6 +48,11 @@ pub struct Config {
     // ---- features / discretization (§4.2) ----
     pub bins_kappa: usize, // n1
     pub bins_norm: usize,  // n2
+    /// n3 — φ₃ residual-decay bins for the per-step MDP (DESIGN.md §2i).
+    /// Only consulted when `per_step` is on; the static path always
+    /// trains with a single decay bin, which makes its state indices
+    /// bit-identical to the historical 2-D layout.
+    pub bins_decay: usize,
     pub delta_c: f64,
     pub delta_n: f64,
 
@@ -62,6 +67,15 @@ pub struct Config {
     /// CG-IR); "lu-only" pins the paper's LU-only space everywhere
     /// (the §5.3 repro tables use this for fidelity).
     pub families: String,
+    /// Opt-in to the v3 grown arms (block-Jacobi / SSOR preconditioned
+    /// CG and restarted GMRES) in the trained action space. Off by
+    /// default so legacy spaces, indices, and policies stay untouched.
+    pub precond_arms: bool,
+    /// Opt-in to the per-step precision MDP: the policy re-decides the
+    /// precision tuple at every IR iteration from the φ₃ residual-decay
+    /// bin. Off ⇒ every solve routes through the static (contextual
+    /// bandit) path, bit-identical to pre-v3 builds.
+    pub per_step: bool,
 
     // ---- reward (eq. 21–25) ----
     pub c1: f64,
@@ -103,6 +117,7 @@ impl Default for Config {
             seed: 20260710,
             bins_kappa: 10,
             bins_norm: 10,
+            bins_decay: 3,
             delta_c: 1.0,
             delta_n: 1e-30,
             episodes: 100,
@@ -111,6 +126,8 @@ impl Default for Config {
             k_top: 9, // §5: "one-fourth of the valid precision combinations"
             weights: Weights::W1,
             families: "auto".to_string(),
+            precond_arms: false,
+            per_step: false,
             c1: 1.0,
             theta: 2.5,
             acc_eps: 1e-10,
@@ -217,6 +234,12 @@ impl Config {
         if args.flag("no-penalty") {
             cfg.penalty_enabled = false;
         }
+        if args.flag("per-step") {
+            cfg.per_step = true;
+        }
+        if args.flag("precond") {
+            cfg.precond_arms = true;
+        }
         Ok(cfg)
     }
 
@@ -240,6 +263,7 @@ impl Config {
             "seed" => self.seed = num!(),
             "bins_kappa" => self.bins_kappa = num!(),
             "bins_norm" => self.bins_norm = num!(),
+            "bins_decay" => self.bins_decay = num!(),
             "delta_c" => self.delta_c = num!(),
             "delta_n" => self.delta_n = num!(),
             "episodes" => self.episodes = num!(),
@@ -251,6 +275,8 @@ impl Config {
                 "auto" | "lu-only" => self.families = v.to_string(),
                 _ => bail!("unknown families setting {v:?} (auto|lu-only)"),
             },
+            "precond_arms" => self.precond_arms = v == "true" || v == "1",
+            "per_step" => self.per_step = v == "true" || v == "1",
             "c1" => self.c1 = num!(),
             "theta" => self.theta = num!(),
             "acc_eps" => self.acc_eps = num!(),
@@ -332,6 +358,12 @@ mod tests {
         c.set("families", "lu-only").unwrap();
         assert_eq!(c.families, "lu-only");
         assert!(c.set("families", "qr-only").is_err());
+        assert!(!c.per_step && !c.precond_arms, "v3 knobs default off");
+        c.set("per_step", "1").unwrap();
+        c.set("precond_arms", "true").unwrap();
+        c.set("bins_decay", "4").unwrap();
+        assert!(c.per_step && c.precond_arms);
+        assert_eq!(c.bins_decay, 4);
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("tau", "xyz").is_err());
     }

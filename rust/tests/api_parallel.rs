@@ -163,10 +163,11 @@ fn policy_save_load_greedy_roundtrip() {
     assert_eq!(rep.action, policy.select(&fresh[0]));
 }
 
-// the current (v2, solver-family) golden; the committed v1 file
-// `policy_golden.json` is kept as a migration fixture — its loud
-// rejection is locked in tests/solver_family.rs
-const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
+// the current (v3, precond/restart-aware) golden; the committed v1/v2
+// files `policy_golden.json` / `policy_golden_v2.json` are kept as
+// migration fixtures — their loud rejection is locked in
+// tests/solver_family.rs
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v3.json");
 
 fn golden_text() -> String {
     std::fs::read_to_string(GOLDEN).expect("golden policy present")
@@ -216,27 +217,27 @@ fn golden_policy_schema_mismatches_rejected() {
     assert!(TrainedPolicy::from_json(&json::parse(&text).unwrap()).is_ok());
 
     // unsupported version
-    let bad_ver = text.replacen("\"schema_version\":2.0", "\"schema_version\":99.0", 1);
+    let bad_ver = text.replacen("\"schema_version\":3.0", "\"schema_version\":99.0", 1);
     assert_ne!(bad_ver, text);
     let err = TrainedPolicy::from_json(&json::parse(&bad_ver).unwrap()).unwrap_err();
     assert!(err.to_string().contains("schema_version"), "{err}");
 
     // missing version entirely
-    let no_ver = text.replacen(",\"schema_version\":2.0", "", 1);
+    let no_ver = text.replacen(",\"schema_version\":3.0", "", 1);
     assert_ne!(no_ver, text);
     let err = TrainedPolicy::from_json(&json::parse(&no_ver).unwrap()).unwrap_err();
     assert!(err.to_string().contains("schema_version"), "{err}");
 
     // action-space hash that does not match the stored action list
-    let bad_hash = text.replacen("9938cbb383ba38e1", "0000000000000000", 1);
+    let bad_hash = text.replacen("cbb1ae6049cf2b30", "0000000000000000", 1);
     assert_ne!(bad_hash, text);
     let err = TrainedPolicy::from_json(&json::parse(&bad_hash).unwrap()).unwrap_err();
     assert!(err.to_string().contains("action-space hash"), "{err}");
 
     // a tampered action list invalidates the stored hash too
     let bad_actions = text.replacen(
-        "[\"lu-ir\",\"bf16\",\"fp64\",\"fp64\",\"fp64\"]",
-        "[\"lu-ir\",\"tf32\",\"fp64\",\"fp64\",\"fp64\"]",
+        "[\"lu-ir\",\"bf16\",\"fp64\",\"fp64\",\"fp64\",\"none\",0.0]",
+        "[\"lu-ir\",\"tf32\",\"fp64\",\"fp64\",\"fp64\",\"none\",0.0]",
         1,
     );
     assert_ne!(bad_actions, text);
@@ -245,11 +246,24 @@ fn golden_policy_schema_mismatches_rejected() {
 
     // a family swap with unchanged precisions also invalidates the hash
     let family_swap = text.replacen(
-        "[\"cg-ir\",\"fp64\",\"fp64\",\"fp64\",\"fp64\"]",
-        "[\"lu-ir\",\"fp64\",\"fp64\",\"fp64\",\"fp64\"]",
+        "[\"cg-ir\",\"fp64\",\"fp64\",\"fp64\",\"fp64\",\"jacobi\",0.0]",
+        "[\"lu-ir\",\"fp64\",\"fp64\",\"fp64\",\"fp64\",\"jacobi\",0.0]",
         1,
     );
     assert_ne!(family_swap, text);
     let err = TrainedPolicy::from_json(&json::parse(&family_swap).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("action-space hash"), "{err}");
+
+    // the v3 dimensions are hash-absorbed too: flipping only the
+    // preconditioner (precisions untouched) invalidates the hash ...
+    let precond_swap = text.replacen("\"jacobi\",0.0]", "\"ssor\",0.0]", 1);
+    assert_ne!(precond_swap, text);
+    let err = TrainedPolicy::from_json(&json::parse(&precond_swap).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("action-space hash"), "{err}");
+
+    // ... and so does flipping only the restart length
+    let restart_swap = text.replacen("\"jacobi\",0.0]", "\"jacobi\",16.0]", 1);
+    assert_ne!(restart_swap, text);
+    let err = TrainedPolicy::from_json(&json::parse(&restart_swap).unwrap()).unwrap_err();
     assert!(err.to_string().contains("action-space hash"), "{err}");
 }

@@ -92,6 +92,7 @@ fn misroute_policy(with_next_best: bool) -> TrainedPolicy {
         discretizer: Discretizer {
             kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
             norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+            decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
             delta_c: 1e-30,
             delta_n: 1e-30,
         },
@@ -342,6 +343,7 @@ fn serving_policy() -> TrainedPolicy {
         discretizer: Discretizer {
             kappa: Binner { lo: 0.0, hi: 16.0, n_bins: 1 },
             norm: Binner { lo: -16.0, hi: 16.0, n_bins: 1 },
+            decay: Binner { lo: -16.0, hi: 0.0, n_bins: 1 },
             delta_c: 1e-30,
             delta_n: 1e-30,
         },

@@ -7,11 +7,13 @@
 //! * a sparse CG-IR solve performs **zero** dense operator applications
 //!   and **zero** densifications (session counters) while reaching the
 //!   target backward error — the acceptance bar of the CG family;
-//! * fixed-seed training over the extended (two-family) action space
+//! * fixed-seed training over the extended (two-family) action space —
+//!   and per-step (MDP) training over the decay-extended state space —
 //!   produces bit-identical policy JSON across runs and thread counts;
-//! * schema migration: the committed v2 golden loads, the committed v1
-//!   golden (`testdata/policy_golden.json`) is rejected loudly with the
-//!   schema-mismatch error.
+//! * schema migration: the committed v3 golden loads; the committed v2
+//!   (`testdata/policy_golden_v2.json`) and v1
+//!   (`testdata/policy_golden.json`) goldens are rejected loudly with
+//!   version-specific schema-mismatch errors.
 
 use precision_autotune::bandit::action::{Action, SolverFamily};
 use precision_autotune::bandit::{SolveCache, TrainedPolicy, Trainer};
@@ -186,20 +188,78 @@ fn extended_space_training_is_bit_deterministic_across_runs_and_threads() {
     assert_eq!(json_a, json_c, "PA_THREADS must not leak into the policy");
 }
 
+/// One fixed-seed per-step (MDP) training, returning the serialized
+/// policy. Serial rollouts by construction — the test below pins that.
+fn train_per_step_policy_json(cfg: &Config, problems: &[Problem]) -> (TrainedPolicy, String) {
+    let backend = precision_autotune::backend_native::NativeBackend::new();
+    let mut cache = SolveCache::new();
+    let (policy, _) = Trainer::new(cfg, &mut cache)
+        .train_per_step(&backend, problems, true)
+        .unwrap();
+    let text = policy.to_json().to_string();
+    (policy, text)
+}
+
+#[test]
+fn per_step_training_is_bit_deterministic_across_runs_and_threads() {
+    let _env = env_lock();
+    // The per-step trainer rolls out episodes serially (trajectory
+    // rewards depend on every in-flight decision, so there is nothing to
+    // farm out), which makes PA_THREADS-independence a hard invariant:
+    // the serialized policy must be byte-identical across worker counts.
+    let mut cfg = Config::tiny();
+    cfg.size_min = 40;
+    cfg.size_max = 56;
+    cfg.episodes = 8;
+    cfg.per_step = true;
+    cfg.bins_decay = 2;
+    let problems = sparse_dataset(&cfg, 5, 77);
+    assert!(problems.iter().all(|p| p.spd));
+
+    std::env::set_var("PA_THREADS", "1");
+    let (policy_a, json_a) = train_per_step_policy_json(&cfg, &problems);
+    let (_, json_b) = train_per_step_policy_json(&cfg, &problems);
+    std::env::set_var("PA_THREADS", "4");
+    let (_, json_c) = train_per_step_policy_json(&cfg, &problems);
+    std::env::remove_var("PA_THREADS");
+
+    // the decay axis really widened the state space
+    assert_eq!(
+        policy_a.discretizer.n_states(),
+        cfg.bins_kappa * cfg.bins_norm * cfg.bins_decay
+    );
+    assert_eq!(json_a, json_b, "same-seed reruns must be byte-identical");
+    assert_eq!(json_a, json_c, "PA_THREADS must not leak into the per-step policy");
+}
+
+const GOLDEN_V3: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v3.json");
 const GOLDEN_V2: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden_v2.json");
 const GOLDEN_V1: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/policy_golden.json");
 
 #[test]
-fn v1_policy_golden_rejected_v2_loads() {
+fn v1_v2_policy_goldens_rejected_v3_loads() {
     let _env = env_lock();
-    // migration pair: the v2 golden is the supported artifact ...
-    let policy = TrainedPolicy::load(GOLDEN_V2).unwrap();
+    // migration triple: the v3 golden is the supported artifact ...
+    let policy = TrainedPolicy::load(GOLDEN_V3).unwrap();
     assert_eq!(policy.qtable.space.len(), 2);
     assert!(policy.qtable.space.has_family(SolverFamily::CgIr));
-    // ... and the pre-family v1 golden dies loudly on the version gate,
-    // not with a confusing shape/parse error downstream
+    // ... the v2 golden (pre preconditioner/restart/per-step) dies
+    // loudly on the version gate with a hint naming what it predates ...
+    let err = TrainedPolicy::load(GOLDEN_V2).unwrap_err();
+    let chain = format!("{err:#}");
+    assert!(
+        chain.contains("unsupported policy schema_version 2"),
+        "v2 must be named explicitly: {chain}"
+    );
+    assert!(
+        chain.contains("preconditioner/restart"),
+        "v2 rejection must explain the gap: {chain}"
+    );
+    // ... and the pre-family v1 golden dies on the same gate, not with a
+    // confusing shape/parse error downstream
     let err = TrainedPolicy::load(GOLDEN_V1).unwrap_err();
     let chain = format!("{err:#}");
     assert!(chain.contains("schema_version"), "unexpected error: {chain}");
