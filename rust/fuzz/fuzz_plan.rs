@@ -1,0 +1,246 @@
+//! Deterministic structured fuzzer for the solve-plan artifact codec
+//! (`runtime::artifact::PlanArtifact::decode`) and the versioned
+//! manifest parser (`runtime::manifest::Manifest::from_json_text`) —
+//! PR 10 satellite. Zero dependencies: seeded by
+//! [`precision_autotune::util::rng::Rng`], it mutates valid encoded
+//! artifacts (truncation, bit flips, splices, duplicated and zeroed
+//! ranges) and valid manifest JSON, and asserts both parsers **error,
+//! never panic** — a corrupt plan must be rejected loudly, not
+//! trusted. Every run with the same `--seed` replays the identical
+//! input sequence, so a crash report is a one-line repro.
+//!
+//! Usage: `cargo run --release --bin fuzz-plan -- [--iters 10000] [--seed 1]`
+//!
+//! Exit status: 0 when every iteration returned (Ok or Err); 1 with
+//! the offending seed/iteration printed when a parser panicked.
+
+use std::panic;
+
+use precision_autotune::chop::Prec;
+use precision_autotune::gen::sparse_spd;
+use precision_autotune::linalg::Mat;
+use precision_autotune::runtime::{LuPayload, Manifest, PlanArtifact};
+use precision_autotune::system::SystemInput;
+use precision_autotune::util::cli::Args;
+use precision_autotune::util::rng::Rng;
+
+/// Valid encoded artifacts covering the payload shapes the codec
+/// round-trips: dense with a full feature pass (kappa + f64 LU), dense
+/// with no features, and a sparse CSR operand.
+fn binary_corpus() -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(42);
+    let n = 6;
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    let mut lu = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            lu[(i, j)] = rng.gauss();
+        }
+    }
+    let piv: Vec<i32> = (0..n as i32).collect();
+    let csr = sparse_spd(12, 0.3, 1.0, &mut rng);
+    let with_features = PlanArtifact::new(
+        SystemInput::Dense(a.clone()),
+        0x1234_5678_9abc_def0,
+        "fuzz-builder v0".to_string(),
+        Some((1.5e3, Some(LuPayload { lu, piv, prec: Prec::Fp64 }))),
+    );
+    let bare = PlanArtifact::new(SystemInput::Dense(a), 0, "fuzz-builder v0".to_string(), None);
+    let sparse = PlanArtifact::new(
+        SystemInput::Sparse(csr),
+        7,
+        "fuzz-builder v0".to_string(),
+        Some((2.0, None)),
+    );
+    vec![with_features.encode(), bare.encode(), sparse.encode()]
+}
+
+/// Valid manifest JSON, including a declared ops table (the field the
+/// completeness check derives from).
+fn manifest_corpus() -> Vec<String> {
+    vec![
+        r#"{
+ "version": 1, "gmres_max_m": 50,
+ "buckets": [64, 128], "formats": ["bf16", "fp64"],
+ "artifacts": [
+  {"name": "lu_factor_bf16_64", "op": "lu_factor", "fmt": "bf16", "n": 64,
+   "file": "lu_factor_bf16_64.hlo.txt",
+   "inputs": [{"name": "a", "shape": [64, 64], "dtype": "f64"}],
+   "outputs": [{"name": "lu", "shape": [64, 64], "dtype": "f64"},
+               {"name": "piv", "shape": [64], "dtype": "i32"},
+               {"name": "ok", "shape": [], "dtype": "i32"}],
+   "sha256": "abc"}
+ ]}"#
+            .to_string(),
+        r#"{
+ "version": 1, "gmres_max_m": 30,
+ "buckets": [16], "formats": ["fp64"],
+ "ops": ["lu_factor", "lu_solve", "lu_solve_many"],
+ "artifacts": [
+  {"name": "lu_solve_many_fp64_16", "op": "lu_solve_many", "fmt": "fp64", "n": 16,
+   "file": "lu_solve_many_fp64_16.hlo.txt",
+   "inputs": [{"name": "bs", "shape": [8, 16], "dtype": "f64"}],
+   "outputs": [{"name": "xs", "shape": [8, 16], "dtype": "f64"}]}
+ ]}"#
+            .to_string(),
+    ]
+}
+
+/// Tokens that probe the manifest parser's hardened paths: type
+/// confusion, absent keys, oversized counts, nested junk.
+const DICT: &[&str] = &[
+    "\"ops\":",
+    "\"ops\": []",
+    "\"ops\": [3]",
+    "\"buckets\": [-1]",
+    "\"shape\": [[]]",
+    "null",
+    "1e999",
+    "18446744073709551616",
+    "{",
+    "}",
+    "[",
+    "\"",
+    "\\u0000",
+];
+
+/// 1–3 structured byte-level mutations of an encoded artifact.
+fn mutate_bytes(base: &[u8], rng: &mut Rng) -> Vec<u8> {
+    let mut bytes = base.to_vec();
+    for _ in 0..(1 + rng.below(3)) {
+        match rng.below(6) {
+            // truncate at an arbitrary byte
+            0 => {
+                if !bytes.is_empty() {
+                    bytes.truncate(rng.below(bytes.len()));
+                }
+            }
+            // flip one bit of one byte
+            1 => {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            // zero a range (fakes padded/cleared payload sections)
+            2 => {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    let j = (i + 1 + rng.below(32)).min(bytes.len());
+                    for b in &mut bytes[i..j] {
+                        *b = 0;
+                    }
+                }
+            }
+            // duplicate a chunk in place (desynchronizes length fields)
+            3 => {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    let j = (i + 1 + rng.below(16)).min(bytes.len());
+                    let chunk = bytes[i..j].to_vec();
+                    let at = rng.below(bytes.len() + 1);
+                    bytes.splice(at..at, chunk);
+                }
+            }
+            // splice random bytes
+            4 => {
+                let at = rng.below(bytes.len() + 1);
+                let extra: Vec<u8> = (0..1 + rng.below(8)).map(|_| rng.below(256) as u8).collect();
+                bytes.splice(at..at, extra);
+            }
+            // extend past the declared end (trailing garbage)
+            _ => {
+                for _ in 0..1 + rng.below(16) {
+                    bytes.push(rng.below(256) as u8);
+                }
+            }
+        }
+    }
+    bytes
+}
+
+/// 1–3 text mutations of a manifest JSON document.
+fn mutate_text(base: &str, rng: &mut Rng) -> String {
+    let mut bytes = base.as_bytes().to_vec();
+    for _ in 0..(1 + rng.below(3)) {
+        match rng.below(4) {
+            0 => {
+                if !bytes.is_empty() {
+                    bytes.truncate(rng.below(bytes.len()));
+                }
+            }
+            1 => {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            2 => {
+                let tok = DICT[rng.below(DICT.len())];
+                let i = rng.below(bytes.len() + 1);
+                let mut spliced = bytes[..i].to_vec();
+                spliced.extend_from_slice(tok.as_bytes());
+                spliced.push(b' ');
+                spliced.extend_from_slice(&bytes[i..]);
+                bytes = spliced;
+            }
+            _ => {
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                let mut lines: Vec<&str> = text.lines().collect();
+                if lines.len() > 1 {
+                    lines.remove(rng.below(lines.len()));
+                }
+                bytes = lines.join("\n").into_bytes();
+            }
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let iters = args.get_usize("iters").expect("--iters").unwrap_or(10_000);
+    let seed = args.get_usize("seed").expect("--seed").map(|s| s as u64).unwrap_or(1);
+    let bins = binary_corpus();
+    let manifests = manifest_corpus();
+    // sanity: every corpus entry must decode cleanly before mutation —
+    // a fuzzer whose seeds are already rejected probes nothing
+    for (k, b) in bins.iter().enumerate() {
+        PlanArtifact::decode(b).unwrap_or_else(|e| panic!("corpus artifact {k} rejected: {e}"));
+    }
+    for (k, m) in manifests.iter().enumerate() {
+        Manifest::from_json_text(m).unwrap_or_else(|e| panic!("corpus manifest {k} rejected: {e}"));
+    }
+    let (mut decoded_ok, mut rejected) = (0u64, 0u64);
+    for i in 0..iters {
+        let mut rng = Rng::new(seed).fork(i as u64);
+        // alternate targets so one seed sweeps both parsers
+        let outcome = if i % 2 == 0 {
+            let input = mutate_bytes(&bins[rng.below(bins.len())], &mut rng);
+            panic::catch_unwind(move || PlanArtifact::decode(&input).is_ok())
+        } else {
+            let input = mutate_text(&manifests[rng.below(manifests.len())], &mut rng);
+            panic::catch_unwind(move || Manifest::from_json_text(&input).is_ok())
+        };
+        match outcome {
+            Ok(true) => decoded_ok += 1,
+            Ok(false) => rejected += 1,
+            Err(_) => {
+                eprintln!(
+                    "fuzz-plan: PANIC at iteration {i} (seed {seed}, target {})",
+                    if i % 2 == 0 { "artifact" } else { "manifest" }
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+    println!(
+        "fuzz-plan: {iters} iterations, seed {seed}: {decoded_ok} decoded, {rejected} rejected, \
+         0 panics"
+    );
+}

@@ -33,7 +33,7 @@
 //! Hit/miss counters are relaxed atomics surfaced per-request in
 //! [`crate::api::SolveReport`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::chop::Prec;
@@ -57,6 +57,9 @@ pub struct SessionEntry {
     /// once per entry; every later request that needs features gets it
     /// for free.
     features: OnceLock<(f64, Option<LuHandle>)>,
+    /// Whether this entry already exists in (or came from) the persistent
+    /// plan tier — the spill path's one-shot claim flag.
+    persisted: AtomicBool,
 }
 
 impl SessionEntry {
@@ -77,7 +80,47 @@ impl SessionEntry {
             density,
             n,
             features: OnceLock::new(),
+            persisted: AtomicBool::new(false),
         })
+    }
+
+    /// Build an entry with a pre-computed feature pass — the plan-store
+    /// promotion path (`api::plan`): a disk artifact carries the κ₁
+    /// estimate and f64 LU it persisted at spill time, so promoting it
+    /// skips the O(n³) feature LU entirely. `features = None` seeds
+    /// nothing (the pass stays lazy, exactly like [`SessionEntry::new`]).
+    pub fn with_features(
+        system: SystemInput,
+        features: Option<(f64, Option<LuHandle>)>,
+    ) -> Arc<SessionEntry> {
+        let entry = SessionEntry::new(system);
+        if let Some(f) = features {
+            let _ = entry.features.set(f);
+        }
+        entry
+    }
+
+    /// The feature pass if it has already been computed (or seeded by a
+    /// plan-store promotion) — never triggers the O(n³) LU. The spill
+    /// path uses this so persisting a plan stays off the hot path.
+    pub fn features_snapshot(&self) -> Option<&(f64, Option<LuHandle>)> {
+        self.features.get()
+    }
+
+    /// Claim the one-shot right to spill this entry to the plan tier.
+    /// Returns true exactly once per entry. "Cache miss on this call"
+    /// is the wrong spill trigger — the daemon's learning path warms
+    /// the entry via `select_action` before solving, so the solve
+    /// itself always sees a RAM hit; the flag makes the spill follow
+    /// the entry's lifetime instead of one request's lookup outcome.
+    pub fn claim_spill(&self) -> bool {
+        !self.persisted.swap(true, Ordering::Relaxed)
+    }
+
+    /// Mark the entry as already persisted — the plan-store promotion
+    /// path: an entry that came *from* disk must not be spilled back.
+    pub fn mark_persisted(&self) {
+        self.persisted.store(true, Ordering::Relaxed);
     }
 
     pub fn session(&self) -> &ProblemSession<'static> {
@@ -244,6 +287,20 @@ impl SessionCache {
     /// re-validation). With `cap = 0` this must not be called — use
     /// [`SessionEntry::new`] directly.
     pub fn get_or_insert(&self, system: &SystemInput) -> (Arc<SessionEntry>, bool) {
+        self.get_or_insert_with(system, |_| SessionEntry::new(system.clone()))
+    }
+
+    /// [`SessionCache::get_or_insert`] with a caller-supplied builder for
+    /// the miss path — the two-tier seam: the plan store's loader runs
+    /// inside `build` (try the disk tier first, fall back to a full
+    /// build), keeping the racing-builder adoption and LRU discipline in
+    /// one place. `build` receives the operator fingerprint and runs
+    /// *outside* the LRU lock.
+    pub fn get_or_insert_with(
+        &self,
+        system: &SystemInput,
+        build: impl FnOnce(&[u64; 4]) -> Arc<SessionEntry>,
+    ) -> (Arc<SessionEntry>, bool) {
         debug_assert!(self.enabled());
         let key = system.fingerprint();
         if let Some(entry) = self.touch(&key, system) {
@@ -252,7 +309,7 @@ impl SessionCache {
         }
         // Build outside the lock: O(nnz) clone + facts must not block
         // unrelated requests.
-        let entry = SessionEntry::new(system.clone());
+        let entry = build(&key);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut lru = self.lock();
         // Re-check: a racing request may have inserted the same operator
@@ -292,6 +349,25 @@ impl SessionCache {
         let arc = Arc::clone(&pair.1);
         lru.insert(0, pair);
         Some(arc)
+    }
+
+    /// Seed a resident entry directly — the warm-boot path (`api::plan`):
+    /// artifacts already verified against their own payload are promoted
+    /// into RAM before the first request arrives. An entry whose key is
+    /// already resident is skipped (first write wins; warm-boot never
+    /// displaces live traffic). Returns whether the entry was inserted.
+    /// Counted in neither hits nor misses — warm-boot is not a lookup.
+    pub fn insert_entry(&self, key: [u64; 4], entry: Arc<SessionEntry>) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let mut lru = self.lock();
+        if lru.iter().any(|(k, _)| *k == key) {
+            return false;
+        }
+        lru.insert(0, (key, entry));
+        lru.truncate(self.cap);
+        true
     }
 
     /// Chaos hook (`FaultSite::CacheCorrupt`): replace one resident
@@ -471,6 +547,70 @@ mod tests {
         assert!(r.is_err());
         let (_, hit) = cache.get_or_insert(&sys);
         assert!(hit, "cache stays usable after a panicking lock holder");
+    }
+
+    #[test]
+    fn with_features_seeds_the_feature_pass() {
+        let sys = dense(21, 8);
+        let fresh = SessionEntry::new(sys.clone());
+        let (kappa, lu) = fresh.features().clone();
+        let seeded = SessionEntry::with_features(sys.clone(), Some((kappa, lu.clone())));
+        let (k2, lu2) = seeded.features_snapshot().expect("seeded pass is present");
+        assert_eq!(kappa.to_bits(), k2.to_bits());
+        assert_eq!(lu.is_some(), lu2.is_some());
+        // re-running features() returns the seeded value, not a recompute
+        assert_eq!(seeded.features().0.to_bits(), kappa.to_bits());
+        // None seeds nothing: the pass stays lazy
+        let lazy = SessionEntry::with_features(sys, None);
+        assert!(lazy.features_snapshot().is_none());
+    }
+
+    #[test]
+    fn insert_entry_seeds_without_counting_and_respects_residents() {
+        let cache = SessionCache::new(2);
+        let sys = dense(23, 6);
+        let key = sys.fingerprint();
+        assert!(cache.insert_entry(key, SessionEntry::new(sys.clone())));
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+        assert!(!cache.insert_entry(key, SessionEntry::new(sys.clone())), "first write wins");
+        let (_, hit) = cache.get_or_insert(&sys);
+        assert!(hit, "seeded entry serves hits");
+        // capacity still bounds seeded inserts
+        let s2 = dense(24, 6);
+        let s3 = dense(25, 6);
+        assert!(cache.insert_entry(s2.fingerprint(), SessionEntry::new(s2)));
+        assert!(cache.insert_entry(s3.fingerprint(), SessionEntry::new(s3)));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn get_or_insert_with_uses_the_builder_on_miss_only() {
+        let cache = SessionCache::new(4);
+        let sys = dense(27, 6);
+        let mut calls = 0;
+        let (_, hit) = cache.get_or_insert_with(&sys, |key| {
+            calls += 1;
+            assert_eq!(*key, sys.fingerprint());
+            SessionEntry::new(sys.clone())
+        });
+        assert!(!hit);
+        assert_eq!(calls, 1);
+        let (_, hit) = cache.get_or_insert_with(&sys, |_| {
+            calls += 1;
+            SessionEntry::new(sys.clone())
+        });
+        assert!(hit, "resident entry skips the builder");
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn claim_spill_fires_once_and_promotion_preempts_it() {
+        let fresh = SessionEntry::new(dense(29, 6));
+        assert!(fresh.claim_spill(), "first claimant spills");
+        assert!(!fresh.claim_spill(), "later solves do not re-spill");
+        let promoted = SessionEntry::new(dense(30, 6));
+        promoted.mark_persisted();
+        assert!(!promoted.claim_spill(), "disk-promoted entries never spill back");
     }
 
     #[test]

@@ -54,13 +54,19 @@
 //!   every [`SolveReport`];
 //! * a [`crate::solver::workspace::WorkspacePool`] hands each in-flight
 //!   solve a warmed scratch set, making the steady-state IR loop
-//!   allocation-free (locked by `tests/alloc_regression.rs`).
+//!   allocation-free (locked by `tests/alloc_regression.rs`);
+//! * optionally, a persistent [`PlanStore`] (DESIGN.md §2j, via
+//!   [`AutotunerBuilder::plan_dir`]) makes the cache two-tier: LRU
+//!   misses try a verified on-disk solve-plan artifact before paying a
+//!   full build, fresh builds spill back to disk, and
+//!   [`Autotuner::warm_boot`] promotes the whole store at startup.
 //!
 //! Batched serving goes through [`Autotuner::solve_batch`], which fans
 //! requests across `PA_THREADS` workers with per-thread workspaces and
 //! is bit-identical to calling [`Autotuner::solve`] sequentially.
 
 pub mod cache;
+pub mod plan;
 
 use anyhow::{bail, Result};
 
@@ -79,7 +85,8 @@ use crate::system::SystemInput;
 use crate::util::config::Config;
 use std::sync::Arc;
 
-pub use cache::{SessionCache, SessionEntry};
+pub use cache::{same_system, SessionCache, SessionEntry};
+pub use plan::PlanStore;
 
 /// Default [`SessionCache`] capacity (operators). Enough for a handful
 /// of hot systems without pinning unbounded O(n²) derived state; tune
@@ -206,6 +213,11 @@ pub struct SolveReport {
     pub cache_hits: u64,
     /// Tuner-lifetime session-cache miss (= entry build) counter.
     pub cache_misses: u64,
+    /// True when this request's session entry was promoted from the
+    /// persistent plan tier (a disk artifact, verified bitwise) instead
+    /// of built from scratch. Always false on a RAM hit or without a
+    /// plan directory.
+    pub plan_hit: bool,
     /// Present when this request took more than the primary ladder rung
     /// or saw an injected fault: which rung produced the result, every
     /// attempt along the way, and the fault sites that fired. `None` on
@@ -304,6 +316,8 @@ pub struct Autotuner {
     policy: Option<TrainedPolicy>,
     cfg: Config,
     cache: SessionCache,
+    /// The persistent plan tier (`None` without a plan directory).
+    plans: Option<PlanStore>,
     workspaces: WorkspacePool,
     /// Armed only by [`AutotunerBuilder::fault_plan`] (chaos testing);
     /// `None` in production — the hooks then cost one thread-local read.
@@ -333,6 +347,7 @@ pub struct AutotunerBuilder {
     policy: Option<TrainedPolicy>,
     cfg: Option<Config>,
     session_cache: Option<usize>,
+    plan_dir: Option<String>,
     fault_plan: Option<FaultPlan>,
 }
 
@@ -372,6 +387,17 @@ impl AutotunerBuilder {
         self
     }
 
+    /// Persist solve plans under `dir` (created if needed), making the
+    /// session cache two-tier: LRU miss → verified disk artifact →
+    /// full build, with fresh builds spilled back atomically. Plans are
+    /// provenance-scoped to the served policy's action space, and a
+    /// promoted entry is bit-identical to a cold build — see
+    /// [`plan::PlanStore`]. Default: no persistence.
+    pub fn plan_dir(mut self, dir: impl Into<String>) -> AutotunerBuilder {
+        self.plan_dir = Some(dir.into());
+        self
+    }
+
     /// Arm a seed-deterministic fault-injection plan (chaos testing —
     /// see [`crate::faults`]): every solve through this tuner runs with
     /// the plan's injector ambient, so the named sites in the solver
@@ -401,11 +427,23 @@ impl AutotunerBuilder {
                 );
             }
         }
+        let plans = match &self.plan_dir {
+            Some(dir) => {
+                let ash = self
+                    .policy
+                    .as_ref()
+                    .map(|p| plan::action_space_hash(&p.qtable.space))
+                    .unwrap_or(0);
+                Some(PlanStore::open(dir, ash)?)
+            }
+            None => None,
+        };
         Ok(Autotuner {
             backend,
             policy: self.policy,
             cfg,
             cache: SessionCache::new(self.session_cache.unwrap_or(DEFAULT_SESSION_CACHE)),
+            plans,
             workspaces: WorkspacePool::new(),
             faults: self.fault_plan.map(|p| Arc::new(FaultInjector::new(p))),
         })
@@ -441,6 +479,30 @@ impl Autotuner {
         self.faults.as_ref()
     }
 
+    /// The persistent plan tier, when a plan directory is configured
+    /// (hit/miss/reject/spill counters, disk usage, compaction).
+    pub fn plan_store(&self) -> Option<&PlanStore> {
+        self.plans.as_ref()
+    }
+
+    /// Promote every valid plan artifact into the session cache before
+    /// the first request (the daemon's `--plan-dir` boot path). Returns
+    /// `(loaded, rejected)`; `(0, 0)` without a plan directory or with
+    /// the cache disabled. Runs under the tuner's fault injector so the
+    /// `plan-load` chaos site covers the boot path too.
+    pub fn warm_boot(&self) -> (usize, usize) {
+        let Some(plans) = &self.plans else {
+            return (0, 0);
+        };
+        if !self.cache.enabled() {
+            return (0, 0);
+        }
+        match &self.faults {
+            Some(inj) => faults::with_ambient(inj, || plans.warm_boot(&self.cache)),
+            None => plans.warm_boot(&self.cache),
+        }
+    }
+
     /// Extract context features and pick the precision configuration the
     /// policy would use for `a` — without solving. Returns the action
     /// plus the (κ₁ estimate, ‖A‖∞) features it was chosen from. The
@@ -448,7 +510,7 @@ impl Autotuner {
     /// [`Autotuner::solve`] of the same operator reuses its f64 LU.
     pub fn select_action(&self, a: impl Into<SystemInput>) -> Result<(Action, f64, f64)> {
         let system = a.into();
-        let (entry, _) = self.prepare(&system, &[])?;
+        let (entry, _, _) = self.prepare(&system, &[])?;
         let (kappa, _) = entry.features();
         let action = match &self.policy {
             Some(pol) => pol.select_features(*kappa, entry.norm_inf()),
@@ -598,10 +660,16 @@ impl Autotuner {
     }
 
     /// Validate a request and resolve its [`SessionEntry`]: a cache
-    /// lookup (hit ⇒ every derived slab already warm) or a build —
-    /// transient when the cache is disabled, inserted otherwise. `b` may
-    /// be empty for feature-only paths ([`Autotuner::select_action`]).
-    fn prepare(&self, system: &SystemInput, b: &[f64]) -> Result<(Arc<SessionEntry>, bool)> {
+    /// lookup (hit ⇒ every derived slab already warm), a plan-tier
+    /// promotion (verified disk artifact), or a build — transient when
+    /// the cache is disabled, inserted otherwise. Returns
+    /// `(entry, ram_hit, plan_hit)`. `b` may be empty for feature-only
+    /// paths ([`Autotuner::select_action`]).
+    fn prepare(
+        &self,
+        system: &SystemInput,
+        b: &[f64],
+    ) -> Result<(Arc<SessionEntry>, bool, bool)> {
         let invalid = |detail: String| SolveError::new(SolveErrorKind::InvalidInput, detail);
         let (nr, nc) = (system.n_rows(), system.n_cols());
         if nr != nc {
@@ -621,11 +689,21 @@ impl Autotuner {
         if system.has_non_finite() || b.iter().any(|v| !v.is_finite()) {
             return Err(invalid("matrix or rhs contains non-finite entries".to_string()).into());
         }
-        Ok(if self.cache.enabled() {
-            self.cache.get_or_insert(system)
-        } else {
-            (SessionEntry::new(system.clone()), false)
-        })
+        if !self.cache.enabled() {
+            return Ok((SessionEntry::new(system.clone()), false, false));
+        }
+        let mut plan_hit = false;
+        let (entry, hit) = self.cache.get_or_insert_with(system, |fp| {
+            // LRU miss: try the plan tier before paying a full build.
+            match self.plans.as_ref().and_then(|p| p.load(fp, system)) {
+                Some(promoted) => {
+                    plan_hit = true;
+                    promoted
+                }
+                None => SessionEntry::new(system.clone()),
+            }
+        });
+        Ok((entry, hit, plan_hit && !hit))
     }
 
     /// The one serving pipeline behind every public solve entry:
@@ -691,7 +769,7 @@ impl Autotuner {
             _ => b,
         };
 
-        let (entry, hit) = self.prepare(system, b)?;
+        let (entry, hit, plan_hit) = self.prepare(system, b)?;
         if b.len() != entry.n() {
             return Err(SolveError::new(
                 SolveErrorKind::InvalidInput,
@@ -738,7 +816,7 @@ impl Autotuner {
         // additionally gated on the backward error; clean solves keep
         // the paper's semantics (the failed flag alone decides).
         let fired_before = faults::fired_sites().len();
-        let mut rep = self.run_refinement(&entry, b, action, f64_lu, kappa, hit)?;
+        let mut rep = self.run_refinement(&entry, b, action, f64_lu, kappa, hit, plan_hit)?;
         let primary_faulted = faults::fired_sites().len() > fired_before;
         let mut attempts = vec![DegradationAttempt {
             rung: LadderRung::Primary,
@@ -759,7 +837,7 @@ impl Autotuner {
                     .into_iter()
                     .find(|a| *a != action && *a != Action::FP64);
                 if let Some(next) = next {
-                    let r = self.run_refinement(&entry, b, next, f64_lu, kappa, hit)?;
+                    let r = self.run_refinement(&entry, b, next, f64_lu, kappa, hit, plan_hit)?;
                     attempts.push(DegradationAttempt {
                         rung: LadderRung::NextBest,
                         action: next,
@@ -777,7 +855,8 @@ impl Autotuner {
             // *was* a clean FP64 run — rerunning would repeat the exact
             // instruction stream; a faulted FP64 primary retries.
             if !rescued && !(action == Action::FP64 && !primary_faulted) {
-                let r = self.run_refinement(&entry, b, Action::FP64, f64_lu, kappa, hit)?;
+                let r =
+                    self.run_refinement(&entry, b, Action::FP64, f64_lu, kappa, hit, plan_hit)?;
                 attempts.push(DegradationAttempt {
                     rung: LadderRung::Fp64Baseline,
                     action: Action::FP64,
@@ -814,6 +893,17 @@ impl Autotuner {
                 injected,
             });
         }
+        // Spill the entry to the plan tier the first time it is solved
+        // through — claimed once per entry, so disk-promoted entries and
+        // already-spilled residents never re-write (a `select_action`
+        // pre-warm makes "miss on this call" the wrong trigger). A
+        // failed spill (I/O, injected `plan-write`) is counted in the
+        // store and never fails the solve.
+        if let Some(plans) = &self.plans {
+            if entry.claim_spill() {
+                let _ = plans.store(&entry);
+            }
+        }
         Ok(rep)
     }
 
@@ -826,6 +916,7 @@ impl Autotuner {
         f64_lu: Option<&LuHandle>,
         kappa: f64,
         cache_hit: bool,
+        plan_hit: bool,
     ) -> Result<SolveReport> {
         // Reuse the feature LU as the refinement factorization when it is
         // exactly what the action asks for (LU family, u_f = fp64) and
@@ -868,6 +959,7 @@ impl Autotuner {
             cache_hit,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
+            plan_hit,
             degradation: None,
         })
     }
@@ -1056,6 +1148,90 @@ mod tests {
         for (u, v) in r1.x.iter().zip(&r4.x) {
             assert_eq!(u.to_bits(), v.to_bits());
         }
+    }
+
+    fn plan_tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("pa_api_plan_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn warm_boot_serves_plan_hits_bit_identical_to_cold() {
+        let dir = plan_tmp_dir("warm");
+        let (a, _, b) = well_conditioned_system(20, 61);
+        // cold tuner: builds, solves, spills the plan
+        let cold = Autotuner::builder().plan_dir(dir.clone()).build().unwrap();
+        let cold_rep = cold.solve(&a, &b).unwrap();
+        assert!(!cold_rep.plan_hit && !cold_rep.cache_hit);
+        assert_eq!(cold.plan_store().unwrap().spills(), 1);
+        // warm tuner, same dir: warm_boot promotes the artifact, the
+        // first request is a RAM hit with identical bits
+        let warm = Autotuner::builder().plan_dir(dir.clone()).build().unwrap();
+        let (loaded, rejected) = warm.warm_boot();
+        assert_eq!((loaded, rejected), (1, 0));
+        assert_eq!(warm.plan_store().unwrap().hits(), 1);
+        let warm_rep = warm.solve(&a, &b).unwrap();
+        assert!(warm_rep.cache_hit, "warm-booted entry serves from RAM");
+        for (u, v) in cold_rep.x.iter().zip(&warm_rep.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(cold_rep.nbe.to_bits(), warm_rep.nbe.to_bits());
+        assert_eq!(cold_rep.kappa_est.to_bits(), warm_rep.kappa_est.to_bits());
+        assert_eq!(cold_rep.gmres_iters, warm_rep.gmres_iters);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_miss_promotes_from_disk_and_reports_plan_hit() {
+        let dir = plan_tmp_dir("promote");
+        // capacity-1 cache so the second operator evicts the first
+        let tuner = Autotuner::builder()
+            .plan_dir(dir.clone())
+            .session_cache(1)
+            .build()
+            .unwrap();
+        let (a1, _, b1) = well_conditioned_system(18, 63);
+        let (a2, _, b2) = well_conditioned_system(18, 64);
+        let first = tuner.solve(&a1, &b1).unwrap();
+        assert!(!first.plan_hit);
+        tuner.solve(&a2, &b2).unwrap(); // evicts a1 from RAM
+        let again = tuner.solve(&a1, &b1).unwrap();
+        assert!(again.plan_hit, "evicted entry re-promoted from the plan tier");
+        assert!(!again.cache_hit);
+        for (u, v) in first.x.iter().zip(&again.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(first.nbe.to_bits(), again.nbe.to_bits());
+        assert_eq!(first.kappa_est.to_bits(), again.kappa_est.to_bits());
+        assert_eq!(tuner.plan_store().unwrap().hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_faults_never_fail_a_solve() {
+        let dir = plan_tmp_dir("faults");
+        let (a, _, b) = well_conditioned_system(16, 65);
+        let clean = Autotuner::builder().build().unwrap().solve(&a, &b).unwrap();
+        let plan = FaultPlan::new(31)
+            .with(FaultSite::PlanWrite, 1.0)
+            .with(FaultSite::PlanLoad, 1.0);
+        let tuner = Autotuner::builder()
+            .plan_dir(dir.clone())
+            .session_cache(1)
+            .fault_plan(plan)
+            .build()
+            .unwrap();
+        let rep = tuner.solve(&a, &b).unwrap();
+        assert!(!rep.failed);
+        for (u, v) in clean.x.iter().zip(&rep.x) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // every spill failed, so nothing reached disk
+        let store = tuner.plan_store().unwrap();
+        assert!(store.spill_failures() >= 1);
+        assert_eq!(store.count(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

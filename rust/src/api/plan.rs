@@ -1,0 +1,487 @@
+//! The persistent plan tier under [`super::cache::SessionCache`]
+//! (ISSUE 10 tentpole, DESIGN.md §2j).
+//!
+//! A [`PlanStore`] owns a directory of solve-plan artifacts (one file
+//! per operator fingerprint, codec in [`crate::runtime::artifact`]) and
+//! gives the session cache its two-tier shape:
+//!
+//! * **RAM hit** — the LRU path, untouched;
+//! * **disk hit** — on an LRU miss the facade's builder closure asks
+//!   [`PlanStore::load`] first: read, decode (typed
+//!   [`ArtifactError`] on any defect), check provenance (action-space
+//!   hash + builder fingerprint), bitwise-verify the decoded operand
+//!   against the request via [`same_system`], then promote a
+//!   [`SessionEntry`] seeded with the persisted feature pass;
+//! * **full build** — anything else falls through to
+//!   [`SessionEntry::new`]; after a successful solve the facade spills
+//!   the fresh entry back to disk ([`PlanStore::store`], atomic via
+//!   `util::fsx`) so the next boot finds it.
+//!
+//! **Corrupt or stale artifacts are rejected loudly and rebuilt, never
+//! trusted**: every rejection is typed, counted in
+//! [`PlanStore::rejects`], and costs at most a rebuild — a promoted
+//! entry is bit-identical to a cold build because the artifact carries
+//! the exact operand bytes and the exact feature-pass output, and all
+//! remaining derived state (chopped slabs, preconditioner blocks) is a
+//! deterministic pure function of those bytes.
+//!
+//! Fault sites: [`FaultSite::PlanWrite`] fails a spill (the solve still
+//! succeeds), [`FaultSite::PlanLoad`] flips one deterministic bit in the
+//! bytes read back (the loader must reject and rebuild).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context as _, Result};
+
+use crate::bandit::action::ActionSpace;
+use crate::faults::{self, FaultSite};
+use crate::runtime::artifact::{
+    plan_file_name, ArtifactError, LuPayload, PlanArtifact, PLAN_EXT, PLAN_SCHEMA,
+};
+use crate::solver::LuHandle;
+use crate::system::SystemInput;
+use crate::util::fsx;
+
+use super::cache::{same_system, SessionCache, SessionEntry};
+
+/// Provenance hash of an action space: FNV-1a over the action names in
+/// order. Two policies with the same action set (the usual case across
+/// online-learning snapshots) share plans; a changed action space makes
+/// every old artifact typed-[`ArtifactError::Stale`].
+pub fn action_space_hash(space: &ActionSpace) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for a in &space.actions {
+        for b in a.name().bytes() {
+            eat(b);
+        }
+        eat(0xff); // name separator
+    }
+    h
+}
+
+/// The builder fingerprint written into (and demanded of) every
+/// artifact: crate version + artifact schema. A version bump invalidates
+/// old plans conservatively — rebuilds are always safe, wrong reuse
+/// never is.
+pub fn builder_fingerprint() -> String {
+    format!("precision-autotune {} plan-schema {}", env!("CARGO_PKG_VERSION"), PLAN_SCHEMA)
+}
+
+/// The disk tier: a directory of solve-plan artifacts plus lifetime
+/// counters (all relaxed atomics, surfaced by `serve-ctl plans` and the
+/// daemon stats endpoint).
+pub struct PlanStore {
+    dir: String,
+    action_space_hash: u64,
+    builder: String,
+    /// Artifacts promoted into RAM (per-request disk hits + warm-boot loads).
+    hits: AtomicU64,
+    /// Lookups that found no artifact on disk.
+    misses: AtomicU64,
+    /// Artifacts rejected: decode failure, provenance mismatch, or
+    /// bitwise verify failure. Each cost a rebuild, never a wrong reuse.
+    rejects: AtomicU64,
+    /// Fresh entries successfully spilled to disk.
+    spills: AtomicU64,
+    /// Spill attempts that failed (I/O error or injected `PlanWrite`).
+    spill_failures: AtomicU64,
+}
+
+impl PlanStore {
+    /// Open (creating if needed) a plan directory. `action_space_hash`
+    /// scopes provenance — pass 0 for a policy-free facade.
+    pub fn open(dir: &str, action_space_hash: u64) -> Result<PlanStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating plan directory {dir}"))?;
+        Ok(PlanStore {
+            dir: dir.to_string(),
+            action_space_hash,
+            builder: builder_fingerprint(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            rejects: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            spill_failures: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn rejects(&self) -> u64 {
+        self.rejects.load(Ordering::Relaxed)
+    }
+
+    pub fn spills(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_failures(&self) -> u64 {
+        self.spill_failures.load(Ordering::Relaxed)
+    }
+
+    fn plan_path(&self, fp: &[u64; 4]) -> String {
+        format!("{}/{}", self.dir, plan_file_name(fp))
+    }
+
+    /// Paths of every artifact file in the directory, name-sorted so
+    /// warm-boot order (and therefore which entries survive a
+    /// smaller-than-store LRU) is deterministic.
+    fn artifact_paths(&self) -> Vec<std::path::PathBuf> {
+        let mut paths: Vec<_> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| p.extension().map(|x| x == PLAN_EXT).unwrap_or(false))
+                    .collect()
+            })
+            .unwrap_or_default();
+        paths.sort();
+        paths
+    }
+
+    /// Decode + provenance-check one artifact's bytes. Any defect is a
+    /// typed [`ArtifactError`]; callers count it as a reject.
+    fn accept(&self, bytes: &[u8]) -> Result<PlanArtifact, ArtifactError> {
+        let art = PlanArtifact::decode(bytes)?;
+        if art.action_space_hash != self.action_space_hash {
+            return Err(ArtifactError::Stale("action-space hash mismatch"));
+        }
+        if art.builder != self.builder {
+            return Err(ArtifactError::Stale("builder fingerprint mismatch"));
+        }
+        Ok(art)
+    }
+
+    /// Promote a decoded artifact into a [`SessionEntry`], seeding the
+    /// persisted feature pass so the O(n³) LU is skipped.
+    fn promote(system: SystemInput, art: PlanArtifact) -> Arc<SessionEntry> {
+        let features = art.features.map(|(kappa, lu)| {
+            (
+                kappa,
+                lu.map(|p| LuHandle { lu: Arc::new(p.lu), piv: p.piv, prec: p.prec }),
+            )
+        });
+        let entry = SessionEntry::with_features(system, features);
+        // came from disk: spilling it back would be a redundant write
+        entry.mark_persisted();
+        entry
+    }
+
+    /// The disk-hit path: look up `fp`, fully validate, bitwise-verify
+    /// against the *request's* operand, and promote. `None` on a miss or
+    /// any rejection — the caller falls through to a full build.
+    pub fn load(&self, fp: &[u64; 4], system: &SystemInput) -> Option<Arc<SessionEntry>> {
+        let path = self.plan_path(fp);
+        let mut bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        if let Some(h) = faults::fire(FaultSite::PlanLoad) {
+            if !bytes.is_empty() {
+                let k = h as usize % bytes.len();
+                bytes[k] ^= 1 << ((h >> 8) & 7);
+            }
+        }
+        let art = match self.accept(&bytes) {
+            Ok(a) => a,
+            Err(_) => {
+                self.rejects.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        if !same_system(&art.system, system) {
+            // fingerprint collision (file name matched, bytes do not)
+            self.rejects.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(PlanStore::promote(system.clone(), art))
+    }
+
+    /// Spill a freshly built entry to disk (atomic write; never on the
+    /// RAM-hit path). Fails loudly — the caller decides whether that
+    /// matters (the facade counts it and keeps serving).
+    pub fn store(&self, entry: &SessionEntry) -> Result<()> {
+        let features = entry.features_snapshot().map(|(kappa, lu)| {
+            (
+                *kappa,
+                lu.as_ref().map(|h| LuPayload {
+                    lu: (*h.lu).clone(),
+                    piv: h.piv.clone(),
+                    prec: h.prec,
+                }),
+            )
+        });
+        let art = PlanArtifact::new(
+            entry.system().clone(),
+            self.action_space_hash,
+            self.builder.clone(),
+            features,
+        );
+        let path = self.plan_path(&art.fingerprint);
+        let res = if faults::fire(FaultSite::PlanWrite).is_some() {
+            Err(anyhow!("injected plan-write fault for {path}"))
+        } else {
+            fsx::atomic_write(&path, &art.encode())
+        };
+        match res {
+            Ok(()) => {
+                self.spills.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.spill_failures.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Promote every valid artifact into `cache` before the first
+    /// request (the daemon's `--plan-dir` boot path). Returns
+    /// `(loaded, rejected)`; loads count into [`PlanStore::hits`] (they
+    /// are disk hits taken eagerly), rejections into
+    /// [`PlanStore::rejects`] with one stderr line each — boot is the
+    /// one place a corrupt artifact should be loud to a human.
+    pub fn warm_boot(&self, cache: &SessionCache) -> (usize, usize) {
+        let mut loaded = 0;
+        let mut rejected = 0;
+        for path in self.artifact_paths() {
+            let mut bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => {
+                    rejected += 1;
+                    self.rejects.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            };
+            if let Some(h) = faults::fire(FaultSite::PlanLoad) {
+                if !bytes.is_empty() {
+                    let k = h as usize % bytes.len();
+                    bytes[k] ^= 1 << ((h >> 8) & 7);
+                }
+            }
+            match self.accept(&bytes) {
+                Ok(art) => {
+                    let key = art.fingerprint;
+                    let system = art.system.clone();
+                    if cache.insert_entry(key, PlanStore::promote(system, art)) {
+                        loaded += 1;
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(e) => {
+                    rejected += 1;
+                    self.rejects.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("warm-boot: rejected {}: {e}", path.display());
+                }
+            }
+        }
+        (loaded, rejected)
+    }
+
+    /// Number of artifact files currently on disk.
+    pub fn count(&self) -> usize {
+        self.artifact_paths().len()
+    }
+
+    /// Total bytes of artifact files currently on disk.
+    pub fn bytes(&self) -> u64 {
+        self.artifact_paths()
+            .iter()
+            .filter_map(|p| std::fs::metadata(p).ok())
+            .map(|m| m.len())
+            .sum()
+    }
+
+    /// Remove every artifact that would be rejected on load (corrupt or
+    /// stale) — the `serve-ctl plans --compact` admin path. Returns
+    /// `(files removed, bytes freed)`.
+    pub fn compact(&self) -> (usize, u64) {
+        let mut removed = 0;
+        let mut freed = 0u64;
+        for path in self.artifact_paths() {
+            let keep = std::fs::read(&path)
+                .ok()
+                .map(|bytes| self.accept(&bytes).is_ok())
+                .unwrap_or(false);
+            if !keep {
+                let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                if std::fs::remove_file(&path).is_ok() {
+                    removed += 1;
+                    freed += len;
+                }
+            }
+        }
+        (removed, freed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{with_ambient, FaultInjector, FaultPlan};
+    use crate::linalg::Mat;
+
+    fn dense(seed: u64, n: usize) -> SystemInput {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        SystemInput::Dense(a)
+    }
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("pa_plan_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn store_then_load_promotes_a_seeded_entry() {
+        let dir = tmp_dir("roundtrip");
+        let store = PlanStore::open(&dir, 7).unwrap();
+        let sys = dense(1, 8);
+        let entry = SessionEntry::new(sys.clone());
+        let (kappa, _) = *entry.features(); // force the feature pass so it persists
+        store.store(&entry).unwrap();
+        assert_eq!((store.count(), store.spills()), (1, 1));
+        assert!(store.bytes() > 0);
+
+        let fp = sys.fingerprint();
+        let promoted = store.load(&fp, &sys).expect("disk hit");
+        assert_eq!(store.hits(), 1);
+        assert!(same_system(promoted.system(), &sys));
+        let (k2, lu2) = promoted.features_snapshot().expect("feature pass was persisted");
+        assert_eq!(kappa.to_bits(), k2.to_bits());
+        assert!(lu2.is_some());
+
+        // unknown fingerprint: a miss, not a reject
+        let other = dense(2, 8);
+        assert!(store.load(&other.fingerprint(), &other).is_none());
+        assert_eq!((store.misses(), store.rejects()), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_stale_artifacts_are_rejected_and_compacted() {
+        let dir = tmp_dir("reject");
+        let store = PlanStore::open(&dir, 1).unwrap();
+        let sys = dense(3, 6);
+        store.store(&SessionEntry::new(sys.clone())).unwrap();
+        let fp = sys.fingerprint();
+        let path = store.plan_path(&fp);
+
+        // truncate: typed rejection, falls through to rebuild
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load(&fp, &sys).is_none());
+        assert_eq!(store.rejects(), 1);
+
+        // bit-flip: rejected too
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(store.load(&fp, &sys).is_none());
+        assert_eq!(store.rejects(), 2);
+
+        // stale provenance: same bytes, different action-space hash
+        std::fs::write(&path, &bytes).unwrap();
+        let other = PlanStore::open(&dir, 2).unwrap();
+        assert!(other.load(&fp, &sys).is_none());
+        assert_eq!(other.rejects(), 1);
+
+        // compact drops the stale file under the mismatched store
+        let (removed, freed) = other.compact();
+        assert_eq!(removed, 1);
+        assert!(freed > 0);
+        assert_eq!(store.count(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_boot_seeds_the_cache_and_rejects_corruption() {
+        let dir = tmp_dir("warmboot");
+        let store = PlanStore::open(&dir, 0).unwrap();
+        let (s1, s2, s3) = (dense(4, 6), dense(5, 6), dense(6, 6));
+        for s in [&s1, &s2, &s3] {
+            store.store(&SessionEntry::new(s.clone())).unwrap();
+        }
+        // corrupt one on disk
+        let path = store.plan_path(&s2.fingerprint());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let cache = SessionCache::new(8);
+        let fresh = PlanStore::open(&dir, 0).unwrap();
+        let (loaded, rejected) = fresh.warm_boot(&cache);
+        assert_eq!((loaded, rejected), (2, 1));
+        assert_eq!(cache.len(), 2);
+        let (_, hit1) = cache.get_or_insert(&s1);
+        let (_, hit3) = cache.get_or_insert(&s3);
+        assert!(hit1 && hit3, "warm-booted entries serve RAM hits");
+        let (_, hit2) = cache.get_or_insert(&s2);
+        assert!(!hit2, "corrupt artifact was not promoted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_faults_fail_writes_and_corrupt_reads_deterministically() {
+        let dir = tmp_dir("faults");
+        let store = PlanStore::open(&dir, 0).unwrap();
+        let sys = dense(7, 6);
+        let entry = SessionEntry::new(sys.clone());
+
+        let write_inj = Arc::new(FaultInjector::new(
+            FaultPlan::new(11).with(FaultSite::PlanWrite, 1.0),
+        ));
+        let res = with_ambient(&write_inj, || store.store(&entry));
+        assert!(res.is_err(), "injected write fault surfaces");
+        assert_eq!((store.spill_failures(), store.count()), (1, 0));
+
+        store.store(&entry).unwrap();
+        let load_inj = Arc::new(FaultInjector::new(
+            FaultPlan::new(12).with(FaultSite::PlanLoad, 1.0),
+        ));
+        let fp = sys.fingerprint();
+        let got = with_ambient(&load_inj, || store.load(&fp, &sys));
+        assert!(got.is_none(), "corrupted read is rejected, never promoted");
+        assert!(store.rejects() >= 1);
+        // without the injector the same file loads fine
+        assert!(store.load(&fp, &sys).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn action_space_hash_tracks_the_action_set() {
+        let a = ActionSpace::reduced_top_k(9);
+        let b = ActionSpace::reduced_top_k(9);
+        assert_eq!(action_space_hash(&a), action_space_hash(&b));
+        let c = ActionSpace::reduced_top_k(5);
+        assert_ne!(action_space_hash(&a), action_space_hash(&c));
+        assert!(builder_fingerprint().contains("plan-schema"));
+    }
+}

@@ -40,6 +40,14 @@
 //! alternating lanes — asserting every shed request resolves as a
 //! *typed* `rejected[...]` response (tallied under `shed`), the quota
 //! ledger is exact, and nothing hangs.
+//!
+//! The plans mix (PR 10) aims the fire at the persistent plan tier
+//! (DESIGN.md §2j): of three spilled artifacts, one is truncated and
+//! one bit-flipped on disk, and the `plan-load` site is armed on a
+//! budget of one for the restart's warm boot. Every bad artifact must
+//! be *rejected* — never promoted — the solves that follow must stay
+//! bit-identical to a plan-free tuner, and those solves must rebuild
+//! the tier so a second restart boots fully warm.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -647,6 +655,124 @@ fn run_router_mix(
     Ok((t, fired))
 }
 
+/// The plans mix (PR 10): the persistent plan tier under
+/// corruption-on-boot. A cold tuner spills three operators' plan
+/// artifacts; on disk one is truncated mid-payload and one has two
+/// payload bytes flipped (the checksum must catch both); the restarted
+/// tuner additionally arms the `plan-load` site (rate 1.0, budget 1),
+/// so at least one read draws an injected bit-flip on top. Asserts:
+/// warm boot rejects every bad artifact and promotes nothing from
+/// them; every solve after the corrupted boot is bit-identical to a
+/// plan-free baseline; those solves rebuild the tier, so a second
+/// restart warm-boots all three artifacts with zero rejections.
+fn run_plans_mix(
+    seed: u64,
+    n: usize,
+    baseline: &Arc<Autotuner>,
+) -> Result<(Tally, [u64; N_SITES])> {
+    static MIX_ID: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "pa_chaos_plans_{}_{}",
+        std::process::id(),
+        MIX_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let plan_dir = dir.to_string_lossy().to_string();
+    let systems: Vec<(SystemInput, Vec<f64>)> = (0..3)
+        .map(|i| {
+            let a = dense_system(n, 4000 + i as u64);
+            let b = rhs(n, 4100 + i as u64);
+            (SystemInput::Dense(a), b)
+        })
+        .collect();
+
+    // seed the disk tier
+    let spiller = Autotuner::builder().plan_dir(plan_dir.clone()).build()?;
+    for (a, b) in &systems {
+        let rep = spiller.solve_ref(a, b)?;
+        ensure!(!rep.failed, "plans: seeding solve failed ({:?})", rep.stop);
+    }
+    ensure!(
+        spiller.plan_store().map(|s| s.count()).unwrap_or(0) == 3,
+        "plans: expected 3 artifacts on disk after the seeding solves"
+    );
+    drop(spiller);
+
+    // corrupt two artifacts in place: one truncated mid-payload, one
+    // with two payload bytes flipped (a single injected bit-flip can
+    // never restore it, so it stays deterministically bad)
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "plan").unwrap_or(false))
+        .collect();
+    files.sort();
+    ensure!(files.len() == 3, "plans: expected 3 .plan files, found {}", files.len());
+    let bytes = std::fs::read(&files[0])?;
+    std::fs::write(&files[0], &bytes[..bytes.len() / 2])?;
+    let mut bytes = std::fs::read(&files[1])?;
+    let (i, j) = (bytes.len() / 3, 2 * bytes.len() / 3);
+    bytes[i] ^= 0x40;
+    bytes[j] ^= 0x04;
+    std::fs::write(&files[1], &bytes)?;
+
+    // the restart: warm-boot with plan-load armed. Every load attempt
+    // resolves — loaded or rejected, never a panic or a bad promote.
+    let plan = FaultPlan::new(seed ^ 13)
+        .with(FaultSite::PlanLoad, 1.0)
+        .with_budget(FaultSite::PlanLoad, 1);
+    let warm =
+        Arc::new(Autotuner::builder().plan_dir(plan_dir.clone()).fault_plan(plan).build()?);
+    let (loaded, rejected) = warm.warm_boot();
+    ensure!(
+        loaded + rejected == 3 && rejected >= 2,
+        "plans: warm boot must reject every bad artifact (loaded {loaded}, rejected {rejected})"
+    );
+    ensure!(
+        warm.plan_store().map(|s| s.rejects()).unwrap_or(0) >= 2,
+        "plans: the store must count its boot-time rejections"
+    );
+
+    // every solve after the corrupted boot is bit-identical to the
+    // plan-free baseline — rejected plans rebuild, they never poison
+    let mut t = Tally::default();
+    for (a, b) in &systems {
+        let res = warm.solve_ref(a, b);
+        if let Ok(rep) = &res {
+            let clean = baseline.solve_ref(a, b)?;
+            t.bit_checked += 1;
+            t.bit_ok += u64::from(assert_bit_identical(rep, &clean));
+        }
+        t.record(&res);
+    }
+    ensure!(t.other == 0, "plans: {} solve(s) resolved to an unclassifiable error", t.other);
+    ensure!(
+        t.bit_ok == t.bit_checked && t.bit_checked == 3,
+        "plans: {} of {} post-corruption solves were not bit-identical to the plan-free baseline",
+        t.bit_checked - t.bit_ok,
+        t.bit_checked
+    );
+
+    let mut fired = [0u64; N_SITES];
+    if let Some(inj) = warm.fault_injector() {
+        for site in FaultSite::ALL {
+            fired[site as usize] += inj.fired(site);
+        }
+    }
+    drop(warm);
+
+    // the rebuilt tier boots clean: the solves above re-spilled every
+    // rejected artifact, so a second restart is fully warm
+    let reborn = Autotuner::builder().plan_dir(plan_dir).build()?;
+    let (loaded2, rejected2) = reborn.warm_boot();
+    ensure!(
+        loaded2 == 3 && rejected2 == 0,
+        "plans: rejected artifacts must be rebuilt by the solves that followed \
+         (reboot loaded {loaded2}, rejected {rejected2})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok((t, fired))
+}
+
 /// A one-state policy whose top-ranked action is CG-IR: on a symmetric
 /// indefinite operator the curvature test breaks down deterministically,
 /// forcing the ladder on every request. With `with_next_best` the
@@ -856,6 +982,23 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<Value> {
     }
     cases.push(t.to_json("router/overload-under-fire", router_requests));
 
+    // --- the persistent plan tier under corruption-on-boot (PR 10):
+    // a truncated artifact, a bit-flipped artifact, and an injected
+    // `plan-load` read on the restart's warm boot — all rejected, all
+    // rebuilt, every post-boot solve bit-identical to plan-free ---
+    let (t, plans_fired) = watchdogged("plans/corrupt-on-boot (whole mix)".to_string(), wd * 4, {
+        let baseline = Arc::clone(&baseline);
+        let n = opts.n_dense;
+        move || run_plans_mix(seed, n, &baseline)
+    })??;
+    for site in FaultSite::ALL {
+        fired[site as usize] += plans_fired[site as usize];
+    }
+    if !opts.quiet {
+        t.print("plans/corrupt-on-boot", 3);
+    }
+    cases.push(t.to_json("plans/corrupt-on-boot", 3));
+
     ensure!(
         fired.iter().sum::<u64>() > 0,
         "chaos suite fired no faults at all — the schedule is vacuous (seed {:#x}, rate {})",
@@ -894,7 +1037,7 @@ mod tests {
         let v = run_chaos(&opts).unwrap();
         assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "chaos");
         let cases = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(cases.len(), 8);
+        assert_eq!(cases.len(), 9);
         for c in cases {
             assert_eq!(c.get("other").unwrap().as_f64().unwrap(), 0.0, "{c:?}");
             let checked = c.get("fp64_bitmatch_checked").unwrap().as_f64().unwrap();
@@ -915,6 +1058,13 @@ mod tests {
             "router/overload-under-fire"
         );
         assert!(cases[7].get("shed").unwrap().as_f64().unwrap() >= 6.0, "{:?}", cases[7]);
+        // the plan tier survived its corrupted boot with every solve
+        // bit-checked against the plan-free baseline
+        assert_eq!(
+            cases[8].get("name").unwrap().as_str().unwrap(),
+            "plans/corrupt-on-boot"
+        );
+        assert_eq!(cases[8].get("fp64_bitmatch_checked").unwrap().as_f64().unwrap(), 3.0);
         // and the schedule was not vacuous
         let fired = v.get("fired").unwrap();
         let total: f64 = FaultSite::ALL
@@ -927,6 +1077,8 @@ mod tests {
         // the router-layer sites fired exactly their budgets
         assert_eq!(fired.get("queue-drop").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(fired.get("lane-starve").unwrap().as_f64().unwrap(), 2.0);
+        // the plan-load site fired exactly its warm-boot budget
+        assert_eq!(fired.get("plan-load").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! | `sparse/repeated-A/cg-ir` | one CSR A, explicit CG-IR  | hits; matvec-only, no feature LU |
 //! | `batch/dense/repeated-A`  | `solve_batch` over the repeated mix | hits; `PA_THREADS` workers |
 //! | `daemon/dense/repeated-A` | the repeated mix through a live [`crate::serve::Daemon`] over TCP | hits; full wire path |
+//! | `restart-warm` | repeated mix after a simulated restart | warm-booted from the persistent plan tier (DESIGN.md §2j) |
 //!
 //! Sequential mixes report per-request p50/p99/mean latency and
 //! solves/sec; the batch mix reports wall-clock throughput (per-request
@@ -340,6 +341,145 @@ pub fn run_serve_bench(opts: &ServeBenchOpts) -> Result<Value> {
             ("mean_ns", json::num(mean_ns)),
             ("cache_hits", json::num(cache_hits)),
         ]));
+    }
+
+    // --- restart-warm: the persistent plan tier (DESIGN.md §2j). A
+    // cold tuner attached to an empty plan dir pays the full build for
+    // the repeated operator and spills its plan artifact; a *fresh*
+    // tuner on the same dir — the simulated restart; only the disk tier
+    // survives — warm-boots, so its first solve skips the feature pass
+    // and the f64 LU entirely. The case records both first-solve
+    // latencies plus steady-state warm throughput, and asserts the warm
+    // solution is bitwise identical to the cold one.
+    {
+        let dir =
+            std::env::temp_dir().join(format!("pa_serve_bench_plans_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plan_dir = dir.to_string_lossy().to_string();
+        let (wa, wb) = &repeated_dense[0];
+
+        let cold = Autotuner::builder().plan_dir(plan_dir.clone()).build()?;
+        let t0 = Instant::now();
+        let cold_rep = cold.solve(wa, wb.as_slice())?;
+        let cold_first_ns = t0.elapsed().as_nanos() as f64;
+        ensure!(!cold_rep.failed, "restart-warm: cold solve failed ({:?})", cold_rep.stop);
+        ensure!(
+            cold.plan_store().map(|s| s.count()).unwrap_or(0) >= 1,
+            "restart-warm: cold solve did not spill a plan artifact"
+        );
+        drop(cold);
+
+        let warm = Autotuner::builder().plan_dir(plan_dir.clone()).build()?;
+        let t0 = Instant::now();
+        let (loaded, rejected) = warm.warm_boot();
+        let warm_rep = warm.solve(wa, wb.as_slice())?;
+        let warm_first_ns = t0.elapsed().as_nanos() as f64;
+        ensure!(
+            loaded >= 1 && rejected == 0,
+            "restart-warm: warm boot loaded {loaded}, rejected {rejected}"
+        );
+        let plan_hits = warm.plan_store().map(|s| s.hits()).unwrap_or(0);
+        ensure!(plan_hits >= 1, "restart-warm: no plan-tier hits after warm boot");
+        ensure!(!warm_rep.failed, "restart-warm: warm solve failed ({:?})", warm_rep.stop);
+        ensure!(
+            warm_rep.x == cold_rep.x,
+            "restart-warm: warm solution diverged from cold (bit-identity broken)"
+        );
+
+        let mut lat_ns: Vec<f64> = Vec::with_capacity(repeated_dense.len());
+        let t_total = Instant::now();
+        for (a, b) in &repeated_dense {
+            let t0 = Instant::now();
+            let rep = warm.solve(a, b.as_slice())?;
+            lat_ns.push(t0.elapsed().as_nanos() as f64);
+            ensure!(!rep.failed, "restart-warm: solve failed ({:?})", rep.stop);
+        }
+        let total_s = t_total.elapsed().as_secs_f64();
+        let _ = std::fs::remove_dir_all(&dir);
+        lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n_req = repeated_dense.len();
+        let mean_ns = lat_ns.iter().sum::<f64>() / n_req as f64;
+        let p50 = percentile(&lat_ns, 0.50);
+        let p99 = percentile(&lat_ns, 0.99);
+        let sps = n_req as f64 / total_s;
+        if !opts.quiet {
+            println!(
+                "{:<28} {:>7.1} solves/s   p50 {:>10}   p99 {:>10}   first solve {} cold -> {} warm",
+                "restart-warm",
+                sps,
+                fmt_ns(p50),
+                fmt_ns(p99),
+                fmt_ns(cold_first_ns),
+                fmt_ns(warm_first_ns)
+            );
+        }
+        cases.push(json::obj(vec![
+            ("name", json::s("restart-warm")),
+            ("requests", json::num(n_req as f64)),
+            ("solves_per_sec", json::num(sps)),
+            ("p50_ns", json::num(p50)),
+            ("p99_ns", json::num(p99)),
+            ("mean_ns", json::num(mean_ns)),
+            ("cold_first_solve_ns", json::num(cold_first_ns)),
+            ("warm_first_solve_ns", json::num(warm_first_ns)),
+            ("warm_boot_loaded", json::num(loaded as f64)),
+            ("plan_hits", json::num(plan_hits as f64)),
+        ]));
+    }
+
+    // --- batch-pjrt (pjrt builds only): one executable invocation per
+    // RHS chunk through the `lu_solve_many` artifact vs per-RHS
+    // dispatch, on the shared repeated operator. Skipped quietly when
+    // the AOT artifacts are absent; the default build never compiles
+    // this block (the `pjrt` feature is off).
+    #[cfg(feature = "pjrt")]
+    {
+        use crate::chop::Prec;
+        use crate::runtime::PjrtBackend;
+        use crate::solver::{ProblemSession, SolverBackend};
+        match PjrtBackend::open("artifacts") {
+            Err(e) => {
+                if !opts.quiet {
+                    println!("batch-pjrt: skipped ({e})");
+                }
+            }
+            Ok(backend) => {
+                let session = ProblemSession::new(&a_dense);
+                let f = backend.lu_factor(&session, Prec::Fp64)?;
+                let bs: Vec<Vec<f64>> =
+                    (0..r).map(|i| rhs(opts.n_dense, 100 + i as u64)).collect();
+                // warm both dispatch paths (executable load + buffers)
+                drop(backend.lu_solve(&f, &bs[0], Prec::Fp64)?);
+                drop(backend.lu_solve_batch(&f, &bs[..2.min(bs.len())], Prec::Fp64)?);
+                let t0 = Instant::now();
+                let mut per_item = Vec::with_capacity(bs.len());
+                for b in &bs {
+                    per_item.push(backend.lu_solve(&f, b, Prec::Fp64)?);
+                }
+                let per_item_s = t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let batched = backend.lu_solve_batch(&f, &bs, Prec::Fp64)?;
+                let batch_s = t0.elapsed().as_secs_f64();
+                ensure!(
+                    batched == per_item,
+                    "batch-pjrt: batched dispatch diverged from per-RHS results"
+                );
+                let sps = bs.len() as f64 / batch_s.max(1e-12);
+                if !opts.quiet {
+                    println!(
+                        "{:<28} {:>7.1} solves/s   (per-RHS {:.3} s -> batched {:.3} s)",
+                        "batch-pjrt", sps, per_item_s, batch_s
+                    );
+                }
+                cases.push(json::obj(vec![
+                    ("name", json::s("batch-pjrt")),
+                    ("requests", json::num(bs.len() as f64)),
+                    ("solves_per_sec", json::num(sps)),
+                    ("per_item_wall_s", json::num(per_item_s)),
+                    ("batched_wall_s", json::num(batch_s)),
+                ]));
+            }
+        }
     }
 
     Ok(json::obj(vec![
@@ -751,7 +891,7 @@ mod tests {
         let v = run_serve_bench(&opts).unwrap();
         assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "serve");
         let cases = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(cases.len(), 7);
+        assert_eq!(cases.len(), 8);
         for c in cases {
             let sps = c.get("solves_per_sec").unwrap().as_f64().unwrap();
             assert!(sps > 0.0, "{c:?}");
@@ -766,6 +906,12 @@ mod tests {
         let daemon = &cases[6];
         assert_eq!(daemon.get("name").unwrap().as_str().unwrap(), "daemon/dense/repeated-A");
         assert!(daemon.get("cache_hits").unwrap().as_f64().unwrap() >= 2.0);
+        // the restart mix really warm-booted from the plan tier (its
+        // bit-identity invariant is enforced inside run_serve_bench)
+        let warm = &cases[7];
+        assert_eq!(warm.get("name").unwrap().as_str().unwrap(), "restart-warm");
+        assert!(warm.get("warm_boot_loaded").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(warm.get("plan_hits").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

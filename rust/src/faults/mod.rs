@@ -58,10 +58,21 @@ pub enum FaultSite {
     /// watermark (`serve::router`) — typed `rejected[overload]`, never a
     /// hang. Daemon-layer site.
     LaneStarve,
+    /// Fail the atomic spill of a solve-plan artifact to the plan
+    /// directory (`api::plan`) — the solve must still succeed; only the
+    /// persistence tier loses the entry. Plan-store site: fires only
+    /// when a plan directory is configured.
+    PlanWrite,
+    /// Corrupt the artifact bytes read back at plan-load / warm-boot
+    /// time (`api::plan`) — the loader must reject loudly (typed
+    /// [`crate::runtime::ArtifactError`]) and rebuild from the request's
+    /// own bytes, never serve a wrong solve. Plan-store site: fires only
+    /// when a plan directory is configured.
+    PlanLoad,
 }
 
 /// Number of distinct fault sites (array sizes in `FaultPlan`).
-pub const N_SITES: usize = 12;
+pub const N_SITES: usize = 14;
 
 impl FaultSite {
     /// Every site, in declaration order (index == `site as usize`).
@@ -78,12 +89,15 @@ impl FaultSite {
         FaultSite::PolicyReload,
         FaultSite::QueueDrop,
         FaultSite::LaneStarve,
+        FaultSite::PlanWrite,
+        FaultSite::PlanLoad,
     ];
 
-    /// Sites whose hooks live in the serving daemon (snapshot/reload
-    /// handlers, request router) rather than inside the solve path —
-    /// `solve_ref` never consults them, so solve-level chaos sweeps over
-    /// [`FaultSite::ALL`] skip these.
+    /// Sites whose hooks live outside the bare solve path — the serving
+    /// daemon (snapshot/reload handlers, request router) or the optional
+    /// plan-store tier (which only exists when a plan directory is
+    /// configured). A plain `solve_ref` never consults them, so
+    /// solve-level chaos sweeps over [`FaultSite::ALL`] skip these.
     pub fn is_daemon_site(self) -> bool {
         matches!(
             self,
@@ -91,6 +105,8 @@ impl FaultSite {
                 | FaultSite::PolicyReload
                 | FaultSite::QueueDrop
                 | FaultSite::LaneStarve
+                | FaultSite::PlanWrite
+                | FaultSite::PlanLoad
         )
     }
 
@@ -109,6 +125,8 @@ impl FaultSite {
             FaultSite::PolicyReload => "policy-reload",
             FaultSite::QueueDrop => "queue-drop",
             FaultSite::LaneStarve => "lane-starve",
+            FaultSite::PlanWrite => "plan-write",
+            FaultSite::PlanLoad => "plan-load",
         }
     }
 

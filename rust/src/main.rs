@@ -111,14 +111,20 @@ SUBCOMMANDS:
                 --queue-cap N  --router-workers N  --watermark f
                 --default-quota N    multi-tenant router knobs
                   (DESIGN.md §2h; watermark = batch-lane shed fraction)
+                --plan-dir <dir>     persistent solve-plan tier (DESIGN.md
+                  §2j): warm-boots verified plan artifacts at startup and
+                  spills fresh solves, so a restarted daemon skips the
+                  feature pass + factorization for returning operators
                 runs until a `shutdown` request arrives on the socket
   serve-ctl   one-shot client for a running daemon
                 <ping|stats|snapshot|reload|shadow-load|shadow-status|
-                 promote|tenant|shutdown>   --addr 127.0.0.1:7747
+                 promote|tenant|plans|shutdown>   --addr 127.0.0.1:7747
                 --path policy.json   (reload / shadow-load / tenant)
                 --force              (promote past the win-rate gate)
                 --tenant name --quota N   (tenant: register/reset an
                   isolated router partition; omit --quota = unlimited)
+                --compact            (plans: also sweep undecodable
+                  artifacts from the plan dir and report bytes freed)
   chaos       fault-injection suite: the serving mixes under a seeded
                 fault schedule, asserting no panic / no hang / typed
                 outcomes / bit-identical FP64 fallback
@@ -734,6 +740,7 @@ fn run() -> Result<()> {
                 snapshot_every: args.get_usize("snapshot-every")?.map(|v| v as u64).unwrap_or(0),
                 fault_plan,
                 router,
+                plan_dir: args.get("plan-dir").map(str::to_string),
                 quiet,
             };
             let artifacts_dir = cfg.artifacts_dir.clone();
@@ -764,7 +771,7 @@ fn run() -> Result<()> {
             let op = args.positional.first().map(|s| s.as_str()).ok_or_else(|| {
                 anyhow!(
                     "serve-ctl requires an operation: ping|stats|snapshot|reload|\
-                     shadow-load|shadow-status|promote|tenant|shutdown"
+                     shadow-load|shadow-status|promote|tenant|plans|shutdown"
                 )
             })?;
             let addr = args.get("addr").unwrap_or("127.0.0.1:7747");
@@ -796,6 +803,11 @@ fn run() -> Result<()> {
                     }
                     if let Some(p) = args.get("path") {
                         extra.push(("path", json::s(p)));
+                    }
+                }
+                "plans" => {
+                    if args.flag("compact") {
+                        extra.push(("compact", Value::Bool(true)));
                     }
                 }
                 "ping" | "stats" | "snapshot" | "shadow-status" | "shutdown" => {}

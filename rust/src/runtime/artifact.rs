@@ -1,0 +1,672 @@
+//! Versioned solve-plan artifacts (ISSUE 10 tentpole): the on-disk
+//! codec under [`crate::api::PlanStore`], plus the xla-free batch
+//! planner the PJRT backend uses for many-system dispatch.
+//!
+//! One artifact file persists everything a [`crate::api::SessionEntry`]
+//! cannot cheaply recompute for one operator: the operand bytes
+//! themselves (dense or CSR, bit-exact — they double as the
+//! verify-on-load witness for `same_system`) and the O(n³) feature pass
+//! (κ₁ estimate + f64 LU factors). Cheap derived state — chopped-A
+//! slabs, chopped-CSR values, preconditioner blocks — is *re-derived*
+//! on load: chopping is a deterministic pure function of the operand
+//! bits, so rebuilding it is bit-identical by construction and the
+//! artifact cannot go stale against it. Section tags for those payloads
+//! are reserved below for when the session grows a seeding seam.
+//!
+//! Layout (all integers little-endian, floats as IEEE-754 bit patterns):
+//!
+//! ```text
+//! magic   [8]  b"PAPLAN01"
+//! schema  u32  PLAN_SCHEMA
+//! ashash  u64  action-space hash (provenance; 0 = policy-free builder)
+//! builder u32 len + utf-8 bytes (provenance, e.g. "precision-autotune 0.1.0")
+//! fprint  4 × u64  operator fingerprint (SystemInput::fingerprint)
+//! nsec    u32
+//! section × nsec: tag u32, len u64, body [len]
+//! check   u64  FNV-1a over every preceding byte
+//! ```
+//!
+//! **Reject loudly, never trust:** [`PlanArtifact::decode`] returns a
+//! typed [`ArtifactError`] on any defect — truncation, checksum or
+//! schema mismatch, malformed sections, non-finite or structurally
+//! invalid operands, a fingerprint that does not match the payload.
+//! Every allocation while decoding is bounded by the declared section
+//! length, which is itself bounded by the bytes actually present, so a
+//! mutated length field can never balloon memory (fuzzed in
+//! `fuzz/fuzz_plan.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::chop::Prec;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::system::SystemInput;
+
+/// File magic: identifies a solve-plan artifact (and its byte order).
+pub const PLAN_MAGIC: [u8; 8] = *b"PAPLAN01";
+
+/// Artifact schema version. Bump on any layout change; decode rejects
+/// every other version (a plan is a cache, rebuilds are always safe).
+pub const PLAN_SCHEMA: u32 = 1;
+
+/// File extension for plan artifacts inside a plan directory.
+pub const PLAN_EXT: &str = "plan";
+
+// Section tags (schema 1). Unknown tags are malformed, not skipped:
+// within one schema version the section table is closed, and schema
+// bumps are cheap because artifacts are a cache.
+const SEC_DENSE: u32 = 1;
+const SEC_CSR: u32 = 2;
+const SEC_FEATURES: u32 = 3;
+/// Reserved: pre-chopped operand slabs (re-derived today; see module docs).
+pub const SEC_CHOPPED: u32 = 4;
+/// Reserved: block-Jacobi / SSOR preconditioner blocks (re-derived today).
+pub const SEC_PRECOND: u32 = 5;
+
+/// Typed rejection from the artifact loader. Every variant renders with
+/// a stable `plan-artifact[<code>]` prefix so daemon logs and chaos
+/// tallies can classify rejections without string-matching prose.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArtifactError {
+    Truncated { need: usize, have: usize },
+    BadMagic,
+    SchemaMismatch { found: u32, want: u32 },
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// Provenance mismatch (action-space hash / builder) — the artifact
+    /// decodes cleanly but was built by an incompatible configuration.
+    Stale(&'static str),
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Truncated { need, have } => {
+                write!(f, "plan-artifact[truncated]: need {need} more bytes, have {have}")
+            }
+            ArtifactError::BadMagic => {
+                write!(f, "plan-artifact[bad-magic]: not a solve-plan artifact")
+            }
+            ArtifactError::SchemaMismatch { found, want } => {
+                write!(f, "plan-artifact[schema]: found v{found}, want v{want}")
+            }
+            ArtifactError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "plan-artifact[checksum]: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            ArtifactError::Stale(what) => write!(f, "plan-artifact[stale]: {what}"),
+            ArtifactError::Malformed(what) => write!(f, "plan-artifact[malformed]: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// FNV-1a over `bytes` — the artifact trailer checksum (same family as
+/// `SystemInput::fingerprint`, single lane).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable artifact file name for an operator fingerprint.
+pub fn plan_file_name(fp: &[u64; 4]) -> String {
+    format!("plan_{:016x}{:016x}{:016x}{:016x}.{PLAN_EXT}", fp[0], fp[1], fp[2], fp[3])
+}
+
+/// Serialized f64 LU factors (the expensive half of the feature pass).
+#[derive(Clone, Debug)]
+pub struct LuPayload {
+    pub lu: Mat,
+    pub piv: Vec<i32>,
+    pub prec: Prec,
+}
+
+/// One decoded (or to-be-encoded) solve-plan artifact.
+#[derive(Clone, Debug)]
+pub struct PlanArtifact {
+    /// Provenance: hash of the builder's action space (0 = policy-free).
+    pub action_space_hash: u64,
+    /// Provenance: human-readable builder fingerprint.
+    pub builder: String,
+    /// Operator fingerprint — always consistent with `system` (enforced
+    /// at construction and re-verified on decode).
+    pub fingerprint: [u64; 4],
+    pub system: SystemInput,
+    /// (κ₁ bits, optional f64 LU) — `None` when the source entry never
+    /// ran its feature pass (the operand alone is still worth keeping).
+    pub features: Option<(f64, Option<LuPayload>)>,
+}
+
+// --- encode helpers --------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_section(out: &mut Vec<u8>, tag: u32, body: &[u8]) {
+    put_u32(out, tag);
+    put_u64(out, body.len() as u64);
+    out.extend_from_slice(body);
+}
+
+// --- decode helpers --------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        let have = self.b.len() - self.pos;
+        if have < n {
+            return Err(ArtifactError::Truncated { need: n - have, have });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, ArtifactError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ArtifactError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len_usize(&mut self) -> Result<usize, ArtifactError> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| ArtifactError::Malformed("length field overflows usize"))
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.b.len()
+    }
+}
+
+fn finite_f64s(cur: &mut Cursor<'_>, n: usize, what: &'static str) -> Result<Vec<f64>, ArtifactError> {
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = cur.f64()?;
+        if !x.is_finite() {
+            return Err(ArtifactError::Malformed(what));
+        }
+        v.push(x);
+    }
+    Ok(v)
+}
+
+fn decode_dense(body: &[u8]) -> Result<Mat, ArtifactError> {
+    let mut cur = Cursor::new(body);
+    let n_rows = cur.len_usize()?;
+    let n_cols = cur.len_usize()?;
+    if n_rows == 0 || n_rows != n_cols {
+        return Err(ArtifactError::Malformed("dense operand is not square and non-empty"));
+    }
+    let count = n_rows
+        .checked_mul(n_cols)
+        .ok_or(ArtifactError::Malformed("dense operand dimensions overflow"))?;
+    let data = finite_f64s(&mut cur, count, "non-finite dense operand value")?;
+    if !cur.done() {
+        return Err(ArtifactError::Malformed("trailing bytes in dense section"));
+    }
+    Ok(Mat { n_rows, n_cols, data })
+}
+
+fn decode_csr(body: &[u8]) -> Result<Csr, ArtifactError> {
+    let mut cur = Cursor::new(body);
+    let n_rows = cur.len_usize()?;
+    let n_cols = cur.len_usize()?;
+    let nnz = cur.len_usize()?;
+    if n_rows == 0 || n_rows != n_cols {
+        return Err(ArtifactError::Malformed("CSR operand is not square and non-empty"));
+    }
+    let mut row_ptr = Vec::with_capacity(n_rows + 1);
+    for _ in 0..=n_rows {
+        row_ptr.push(cur.len_usize()?);
+    }
+    if row_ptr[0] != 0
+        || row_ptr[n_rows] != nnz
+        || row_ptr.windows(2).any(|w| w[0] > w[1])
+    {
+        return Err(ArtifactError::Malformed("CSR row_ptr is not a valid prefix scan"));
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let c = cur.len_usize()?;
+        if c >= n_cols {
+            return Err(ArtifactError::Malformed("CSR column index out of range"));
+        }
+        col_idx.push(c);
+    }
+    let values = finite_f64s(&mut cur, nnz, "non-finite CSR operand value")?;
+    if !cur.done() {
+        return Err(ArtifactError::Malformed("trailing bytes in CSR section"));
+    }
+    Ok(Csr { n_rows, n_cols, row_ptr, col_idx, values })
+}
+
+fn decode_features(
+    body: &[u8],
+    operand_n: usize,
+) -> Result<(f64, Option<LuPayload>), ArtifactError> {
+    let mut cur = Cursor::new(body);
+    let kappa = cur.f64()?;
+    if kappa.is_nan() {
+        return Err(ArtifactError::Malformed("NaN κ₁ estimate"));
+    }
+    let lu = match cur.u8()? {
+        0 => None,
+        1 => {
+            let n = cur.len_usize()?;
+            if n != operand_n {
+                return Err(ArtifactError::Malformed("LU dimension does not match operand"));
+            }
+            let count = n
+                .checked_mul(n)
+                .ok_or(ArtifactError::Malformed("LU dimensions overflow"))?;
+            let data = finite_f64s(&mut cur, count, "non-finite LU value")?;
+            let mut piv = Vec::with_capacity(n);
+            for _ in 0..n {
+                let p = cur.i32()?;
+                if p < 0 || p as usize >= n {
+                    return Err(ArtifactError::Malformed("LU pivot index out of range"));
+                }
+                piv.push(p);
+            }
+            let prec_idx = cur.u8()? as usize;
+            if prec_idx >= Prec::ALL.len() {
+                return Err(ArtifactError::Malformed("unknown precision tag"));
+            }
+            Some(LuPayload {
+                lu: Mat { n_rows: n, n_cols: n, data },
+                piv,
+                prec: Prec::from_index(prec_idx),
+            })
+        }
+        _ => return Err(ArtifactError::Malformed("bad LU presence flag")),
+    };
+    if !cur.done() {
+        return Err(ArtifactError::Malformed("trailing bytes in features section"));
+    }
+    Ok((kappa, lu))
+}
+
+impl PlanArtifact {
+    /// Build an artifact for `system` (the fingerprint is derived, so
+    /// the two can never disagree on the write path).
+    pub fn new(
+        system: SystemInput,
+        action_space_hash: u64,
+        builder: String,
+        features: Option<(f64, Option<LuPayload>)>,
+    ) -> PlanArtifact {
+        let fingerprint = system.fingerprint();
+        PlanArtifact { action_space_hash, builder, fingerprint, system, features }
+    }
+
+    /// Serialize to the schema-1 byte layout (module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&PLAN_MAGIC);
+        put_u32(&mut out, PLAN_SCHEMA);
+        put_u64(&mut out, self.action_space_hash);
+        put_u32(&mut out, self.builder.len() as u32);
+        out.extend_from_slice(self.builder.as_bytes());
+        for &w in &self.fingerprint {
+            put_u64(&mut out, w);
+        }
+        let n_sections = 1 + self.features.is_some() as u32;
+        put_u32(&mut out, n_sections);
+        let mut body = Vec::new();
+        match &self.system {
+            SystemInput::Dense(m) => {
+                put_u64(&mut body, m.n_rows as u64);
+                put_u64(&mut body, m.n_cols as u64);
+                for &x in &m.data {
+                    put_f64(&mut body, x);
+                }
+                put_section(&mut out, SEC_DENSE, &body);
+            }
+            SystemInput::Sparse(c) => {
+                put_u64(&mut body, c.n_rows as u64);
+                put_u64(&mut body, c.n_cols as u64);
+                put_u64(&mut body, c.values.len() as u64);
+                for &p in &c.row_ptr {
+                    put_u64(&mut body, p as u64);
+                }
+                for &j in &c.col_idx {
+                    put_u64(&mut body, j as u64);
+                }
+                for &x in &c.values {
+                    put_f64(&mut body, x);
+                }
+                put_section(&mut out, SEC_CSR, &body);
+            }
+        }
+        if let Some((kappa, lu)) = &self.features {
+            let mut body = Vec::new();
+            put_f64(&mut body, *kappa);
+            match lu {
+                None => body.push(0),
+                Some(p) => {
+                    body.push(1);
+                    put_u64(&mut body, p.lu.n_rows as u64);
+                    for &x in &p.lu.data {
+                        put_f64(&mut body, x);
+                    }
+                    for &k in &p.piv {
+                        body.extend_from_slice(&k.to_le_bytes());
+                    }
+                    body.push(p.prec as u8);
+                }
+            }
+            put_section(&mut out, SEC_FEATURES, &body);
+        }
+        let check = checksum(&out);
+        put_u64(&mut out, check);
+        out
+    }
+
+    /// Parse and fully validate an artifact. Any defect is a typed
+    /// [`ArtifactError`]; a returned artifact is internally consistent
+    /// (checksum, schema, operand structure and finiteness, fingerprint
+    /// ↔ payload agreement) and safe to promote into the session cache.
+    pub fn decode(bytes: &[u8]) -> Result<PlanArtifact, ArtifactError> {
+        if bytes.len() < 8 {
+            return Err(ArtifactError::Truncated { need: 8 - bytes.len(), have: bytes.len() });
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        let computed = checksum(body);
+        if stored != computed {
+            return Err(ArtifactError::ChecksumMismatch { stored, computed });
+        }
+        let mut cur = Cursor::new(body);
+        if cur.take(8)? != PLAN_MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        let schema = cur.u32()?;
+        if schema != PLAN_SCHEMA {
+            return Err(ArtifactError::SchemaMismatch { found: schema, want: PLAN_SCHEMA });
+        }
+        let action_space_hash = cur.u64()?;
+        let builder_len = cur.u32()? as usize;
+        let builder = std::str::from_utf8(cur.take(builder_len)?)
+            .map_err(|_| ArtifactError::Malformed("builder fingerprint is not utf-8"))?
+            .to_string();
+        let mut fingerprint = [0u64; 4];
+        for w in &mut fingerprint {
+            *w = cur.u64()?;
+        }
+        let n_sections = cur.u32()?;
+        let mut system: Option<SystemInput> = None;
+        let mut features: Option<(f64, Option<LuPayload>)> = None;
+        for _ in 0..n_sections {
+            let tag = cur.u32()?;
+            let len = cur.len_usize()?;
+            let body = cur.take(len)?;
+            match tag {
+                SEC_DENSE | SEC_CSR => {
+                    if system.is_some() {
+                        return Err(ArtifactError::Malformed("duplicate operand section"));
+                    }
+                    system = Some(if tag == SEC_DENSE {
+                        SystemInput::Dense(decode_dense(body)?)
+                    } else {
+                        SystemInput::Sparse(decode_csr(body)?)
+                    });
+                }
+                SEC_FEATURES => {
+                    if features.is_some() {
+                        return Err(ArtifactError::Malformed("duplicate features section"));
+                    }
+                    let n = match &system {
+                        Some(s) => s.n_rows(),
+                        None => {
+                            return Err(ArtifactError::Malformed(
+                                "features section precedes operand section",
+                            ))
+                        }
+                    };
+                    features = Some(decode_features(body, n)?);
+                }
+                _ => return Err(ArtifactError::Malformed("unknown section tag")),
+            }
+        }
+        if !cur.done() {
+            return Err(ArtifactError::Malformed("trailing bytes after sections"));
+        }
+        let system = system.ok_or(ArtifactError::Malformed("missing operand section"))?;
+        if system.fingerprint() != fingerprint {
+            return Err(ArtifactError::Malformed("fingerprint does not match operand payload"));
+        }
+        Ok(PlanArtifact { action_space_hash, builder, fingerprint, system, features })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batch planner (xla-free; the PJRT backend's grouping policy, testable
+// without the feature)
+// ---------------------------------------------------------------------------
+
+/// One device dispatch: every item in `items` (indices into the caller's
+/// work list) runs through the same `(op, bucket)` executable, padded to
+/// `bucket`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchGroup {
+    pub op: String,
+    pub bucket: usize,
+    pub items: Vec<usize>,
+}
+
+/// Smallest manifest bucket that fits `n` (`None` when nothing does).
+pub fn bucket_for(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= n).min()
+}
+
+/// Group `(op, n)` work items into per-`(op, bucket)` dispatch groups:
+/// one executable invocation per group instead of one per item. Groups
+/// come out in first-appearance order, items in submission order, so
+/// dispatch is deterministic. Fails if any item exceeds every bucket.
+pub fn plan_batches(items: &[(&str, usize)], buckets: &[usize]) -> Result<Vec<BatchGroup>> {
+    let mut groups: Vec<BatchGroup> = Vec::new();
+    for (i, &(op, n)) in items.iter().enumerate() {
+        let Some(bucket) = bucket_for(buckets, n) else {
+            bail!(
+                "no manifest bucket fits n={n} for op {op} (largest bucket: {})",
+                buckets.iter().copied().max().unwrap_or(0)
+            );
+        };
+        match groups.iter_mut().find(|g| g.op == op && g.bucket == bucket) {
+            Some(g) => g.items.push(i),
+            None => groups.push(BatchGroup { op: op.to_string(), bucket, items: vec![i] }),
+        }
+    }
+    Ok(groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dense_sys(seed: u64, n: usize) -> SystemInput {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gauss() + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        SystemInput::Dense(a)
+    }
+
+    fn sample_with_lu(seed: u64, n: usize) -> PlanArtifact {
+        let system = dense_sys(seed, n);
+        let dense = match &system {
+            SystemInput::Dense(m) => m.clone(),
+            _ => unreachable!(),
+        };
+        let f = crate::linalg::lu::lu_factor(&dense).unwrap();
+        let payload = LuPayload {
+            lu: (*f.lu).clone(),
+            piv: f.piv.iter().map(|&p| p as i32).collect(),
+            prec: Prec::Fp64,
+        };
+        PlanArtifact::new(system, 0x5eed, "test-builder 0".to_string(), Some((12.5, Some(payload))))
+    }
+
+    #[test]
+    fn dense_round_trip_is_bitwise() {
+        let art = sample_with_lu(1, 6);
+        let back = PlanArtifact::decode(&art.encode()).unwrap();
+        assert_eq!(back.action_space_hash, 0x5eed);
+        assert_eq!(back.builder, "test-builder 0");
+        assert_eq!(back.fingerprint, art.fingerprint);
+        assert!(crate::api::same_system(&back.system, &art.system));
+        let (k0, lu0) = art.features.as_ref().unwrap();
+        let (k1, lu1) = back.features.as_ref().unwrap();
+        assert_eq!(k0.to_bits(), k1.to_bits());
+        let (lu0, lu1) = (lu0.as_ref().unwrap(), lu1.as_ref().unwrap());
+        assert_eq!(lu0.piv, lu1.piv);
+        assert_eq!(lu0.prec, lu1.prec);
+        assert!(lu0.lu.data.iter().zip(&lu1.lu.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn csr_round_trip_without_features() {
+        let mut rng = Rng::new(9);
+        let c = crate::gen::sparse_spd(20, 0.2, 1.0, &mut rng);
+        let art = PlanArtifact::new(SystemInput::Sparse(c), 0, "b".to_string(), None);
+        let back = PlanArtifact::decode(&art.encode()).unwrap();
+        assert!(back.features.is_none());
+        assert!(crate::api::same_system(&back.system, &art.system));
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = sample_with_lu(2, 5).encode();
+        for k in 0..bytes.len() {
+            assert!(PlanArtifact::decode(&bytes[..k]).is_err(), "prefix of {k} bytes accepted");
+        }
+    }
+
+    #[test]
+    fn every_single_bitflip_is_rejected() {
+        let bytes = sample_with_lu(3, 4).encode();
+        for k in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[k] ^= 1;
+            let err = PlanArtifact::decode(&m).expect_err("bit flip accepted");
+            assert!(err.to_string().starts_with("plan-artifact["), "{err}");
+        }
+    }
+
+    #[test]
+    fn magic_and_schema_mismatches_are_typed() {
+        let mut bytes = sample_with_lu(4, 4).encode();
+        bytes[0] = b'X';
+        let fixed = {
+            let n = bytes.len();
+            let c = checksum(&bytes[..n - 8]);
+            bytes[n - 8..].copy_from_slice(&c.to_le_bytes());
+            bytes
+        };
+        assert_eq!(PlanArtifact::decode(&fixed), Err(ArtifactError::BadMagic));
+        let mut bytes = sample_with_lu(4, 4).encode();
+        bytes[8] = 99; // schema u32 little-endian low byte
+        let n = bytes.len();
+        let c = checksum(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&c.to_le_bytes());
+        assert_eq!(
+            PlanArtifact::decode(&bytes),
+            Err(ArtifactError::SchemaMismatch { found: 99, want: PLAN_SCHEMA })
+        );
+    }
+
+    #[test]
+    fn structurally_invalid_operands_are_rejected() {
+        // non-finite dense value
+        let mut m = Mat::eye(3);
+        m[(1, 1)] = f64::INFINITY;
+        let art = PlanArtifact::new(SystemInput::Dense(m), 0, "b".into(), None);
+        assert!(matches!(
+            PlanArtifact::decode(&art.encode()),
+            Err(ArtifactError::Malformed("non-finite dense operand value"))
+        ));
+        // CSR column index out of range
+        let c = Csr {
+            n_rows: 2,
+            n_cols: 2,
+            row_ptr: vec![0, 1, 2],
+            col_idx: vec![0, 7],
+            values: vec![1.0, 1.0],
+        };
+        let art = PlanArtifact::new(SystemInput::Sparse(c), 0, "b".into(), None);
+        assert!(matches!(
+            PlanArtifact::decode(&art.encode()),
+            Err(ArtifactError::Malformed("CSR column index out of range"))
+        ));
+    }
+
+    #[test]
+    fn plan_file_names_are_stable_and_distinct() {
+        let a = dense_sys(1, 5).fingerprint();
+        let b = dense_sys(2, 5).fingerprint();
+        assert_eq!(plan_file_name(&a), plan_file_name(&a));
+        assert_ne!(plan_file_name(&a), plan_file_name(&b));
+        assert!(plan_file_name(&a).ends_with(".plan"));
+    }
+
+    #[test]
+    fn batch_planner_groups_by_op_and_bucket() {
+        let buckets = [64, 128];
+        let items =
+            [("lu_solve", 60), ("residual", 100), ("lu_solve", 64), ("lu_solve", 65)];
+        let groups = plan_batches(&items, &buckets).unwrap();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0], BatchGroup { op: "lu_solve".into(), bucket: 64, items: vec![0, 2] });
+        assert_eq!(groups[1], BatchGroup { op: "residual".into(), bucket: 128, items: vec![1] });
+        assert_eq!(groups[2], BatchGroup { op: "lu_solve".into(), bucket: 128, items: vec![3] });
+    }
+
+    #[test]
+    fn batch_planner_rejects_oversize_items() {
+        let err = plan_batches(&[("gmres", 200)], &[64, 128]).unwrap_err();
+        assert!(err.to_string().contains("no manifest bucket fits"), "{err}");
+        assert_eq!(bucket_for(&[64, 128], 128), Some(128));
+        assert_eq!(bucket_for(&[64, 128], 129), None);
+        assert_eq!(bucket_for(&[128, 64], 10), Some(64), "buckets need not be sorted");
+    }
+}

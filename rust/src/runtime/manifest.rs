@@ -23,11 +23,22 @@ pub struct ArtifactMeta {
     pub outputs: Vec<IoSpec>,
 }
 
+/// The op table a manifest without an explicit `"ops"` array is checked
+/// against — the original four plan ops. Manifests that compile more
+/// (or fewer) ops declare their own table; completeness is then judged
+/// against what the manifest *claims* to ship instead of this snapshot
+/// of history.
+pub const DEFAULT_OPS: [&str; 4] = ["lu_factor", "lu_solve", "residual", "gmres"];
+
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub buckets: Vec<usize>,
     pub formats: Vec<String>,
     pub gmres_max_m: usize,
+    /// Versioned op table: the ops [`Manifest::is_complete`] demands for
+    /// every (fmt, bucket). Read from the manifest's `"ops"` array;
+    /// [`DEFAULT_OPS`] when absent (older manifests).
+    pub ops: Vec<String>,
     pub artifacts: Vec<ArtifactMeta>,
 }
 
@@ -70,6 +81,14 @@ impl Manifest {
             .map(|x| Ok(x.as_str()?.to_string()))
             .collect::<Result<_>>()?;
         let gmres_max_m = v.get("gmres_max_m")?.as_usize()?;
+        let ops: Vec<String> = match v.get("ops") {
+            Ok(o) if !matches!(o, Value::Null) => o
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            _ => DEFAULT_OPS.iter().map(|s| s.to_string()).collect(),
+        };
         let artifacts = v
             .get("artifacts")?
             .as_arr()?
@@ -86,16 +105,19 @@ impl Manifest {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Manifest { buckets, formats, gmres_max_m, artifacts })
+        Ok(Manifest { buckets, formats, gmres_max_m, ops, artifacts })
     }
 
     pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }
 
-    /// Completeness check: every (op, fmt, bucket) combination present.
+    /// Completeness check: every (op, fmt, bucket) combination of the
+    /// manifest's own op table ([`Manifest::ops`]) present — a manifest
+    /// that grows a new op cannot silently pass by matching a hardcoded
+    /// historical list.
     pub fn is_complete(&self) -> bool {
-        for op in ["lu_factor", "lu_solve", "residual", "gmres"] {
+        for op in &self.ops {
             for f in &self.formats {
                 for &b in &self.buckets {
                     if self.by_name(&format!("{op}_{f}_{b}")).is_none() {
@@ -104,7 +126,7 @@ impl Manifest {
                 }
             }
         }
-        true
+        !self.ops.is_empty()
     }
 }
 
@@ -147,5 +169,34 @@ mod tests {
     fn missing_name_is_none() {
         let m = Manifest::from_json_text(SAMPLE).unwrap();
         assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn ops_table_defaults_to_the_original_four() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.ops, DEFAULT_OPS.map(|s| s.to_string()).to_vec());
+    }
+
+    #[test]
+    fn declared_ops_table_drives_completeness() {
+        // one op, one format, one bucket, fully shipped => complete
+        let text = r#"{
+         "version": 1, "gmres_max_m": 50,
+         "buckets": [64], "formats": ["fp64"], "ops": ["lu_factor"],
+         "artifacts": [
+          {"name": "lu_factor_fp64_64", "op": "lu_factor", "fmt": "fp64", "n": 64,
+           "file": "lu_factor_fp64_64.hlo.txt", "inputs": [], "outputs": []}
+         ]}"#;
+        let m = Manifest::from_json_text(text).unwrap();
+        assert_eq!(m.ops, vec!["lu_factor"]);
+        assert!(m.is_complete(), "completeness judged against the declared table");
+        // the same artifact set against a table that also demands a new
+        // op must fail instead of silently passing on the old list
+        let grown = text.replace(r#""ops": ["lu_factor"]"#, r#""ops": ["lu_factor", "batch_solve"]"#);
+        let m = Manifest::from_json_text(&grown).unwrap();
+        assert!(!m.is_complete(), "missing declared op detected");
+        // an empty table never vacuously passes
+        let empty = text.replace(r#""ops": ["lu_factor"]"#, r#""ops": []"#);
+        assert!(!Manifest::from_json_text(&empty).unwrap().is_complete());
     }
 }

@@ -16,7 +16,14 @@
 //! §6), so the PJRT client lives behind the `pjrt` cargo feature. Without
 //! it, [`PjrtBackend::open`] is a stub that returns an error, keeping the
 //! CLI's `--backend pjrt` plumbing compiling everywhere.
+//!
+//! [`artifact`] holds the xla-free half of ISSUE 10: the versioned
+//! solve-plan codec persisted by [`crate::api::PlanStore`], and the
+//! [`plan_batches`] grouping policy the PJRT backend uses to dispatch
+//! many systems per device call (one executable invocation per
+//! (op, size-bucket) group, padded to the bucket).
 
+pub mod artifact;
 pub mod manifest;
 
 #[cfg(feature = "pjrt")]
@@ -32,6 +39,9 @@ mod stub;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{PjrtBackend, PjrtRuntime};
 
+pub use artifact::{
+    plan_batches, plan_file_name, ArtifactError, BatchGroup, LuPayload, PlanArtifact,
+};
 pub use manifest::{ArtifactMeta, Manifest};
 
 use crate::linalg::Mat;

@@ -37,6 +37,26 @@ impl PjrtBackend {
     pub fn open(_dir: &str) -> Result<PjrtBackend> {
         bail!("{MSG}");
     }
+
+    /// Mirror of the batch-native many-RHS dispatch (unreachable: the
+    /// stub backend never opens).
+    pub fn lu_solve_batch(
+        &self,
+        _f: &LuHandle,
+        _bs: &[Vec<f64>],
+        _p: Prec,
+    ) -> Result<Vec<Vec<f64>>> {
+        bail!("{MSG}");
+    }
+
+    /// Mirror of the batch-native many-system residual sweep.
+    pub fn residual_batch(
+        &self,
+        _items: &[(&ProblemSession<'_>, &[f64], &[f64])],
+        _p: Prec,
+    ) -> Result<Vec<Vec<f64>>> {
+        bail!("{MSG}");
+    }
 }
 
 impl SolverBackend for PjrtBackend {

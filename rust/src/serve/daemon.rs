@@ -24,6 +24,16 @@
 //! the price of an immutable serving facade (no in-place policy
 //! mutation, no torn reads).
 //!
+//! With `--plan-dir`, the boot tuner opens the persistent
+//! [`crate::api::PlanStore`] under its session cache and warm-boots it
+//! before the first request: every decodable plan artifact on disk is
+//! promoted into the fresh cache; corrupt or stale ones are rejected
+//! loudly and later swept by `serve-ctl plans --compact`. Policy swaps
+//! rebuild the facade on the same plan directory, so the disk tier
+//! survives the RAM-cache reset a hot-swap implies. Router tenant
+//! partitions never share the plan directory — plans carry no tenant
+//! scoping, so the tier stays single-tenant.
+//!
 //! The daemon owns its own [`FaultInjector`] for the daemon-layer chaos
 //! sites ([`FaultSite::SnapshotWrite`], [`FaultSite::PolicyReload`],
 //! and the router admission sites) — those fire on connection threads,
@@ -99,6 +109,11 @@ pub struct ServeOpts {
     /// Multi-tenant router knobs (queue bounds, lane weights, worker
     /// pool, default quota).
     pub router: RouterOpts,
+    /// Persistent plan-store directory (ISSUE 10): warm-boot the session
+    /// cache from it at startup, spill fresh solves back, survive policy
+    /// hot-swaps (the RAM cache resets; the disk tier does not). `None`
+    /// disables the tier. Router tenant partitions never share it.
+    pub plan_dir: Option<String>,
     /// Suppress the startup line on stdout.
     pub quiet: bool,
 }
@@ -115,6 +130,7 @@ impl Default for ServeOpts {
             snapshot_every: 0,
             fault_plan: None,
             router: RouterOpts::default(),
+            plan_dir: None,
             quiet: false,
         }
     }
@@ -161,6 +177,9 @@ impl DaemonState {
             .config(self.cfg.clone());
         if let Some(plan) = &self.opts.fault_plan {
             b = b.fault_plan(plan.clone());
+        }
+        if let Some(dir) = &self.opts.plan_dir {
+            b = b.plan_dir(dir.clone());
         }
         b.build()
     }
@@ -242,6 +261,18 @@ impl Daemon {
         });
         // real boot tuner (needs `state.factory`, hence the placeholder)
         *state.live.write().unwrap() = Arc::new(state.build_tuner(&policy)?);
+        // warm-boot the plan tier before the first request lands: every
+        // decodable on-disk plan is promoted into the fresh session
+        // cache; corrupt or stale ones are rejected loudly (one stderr
+        // line each) and counted, never trusted
+        if state.opts.plan_dir.is_some() {
+            let tuner = state.live.read().unwrap().clone();
+            let (loaded, rejected) = tuner.warm_boot();
+            state.stats.plan_rejects.fetch_add(rejected as u64, Ordering::Relaxed);
+            if !state.opts.quiet {
+                println!("pallas-serve warm-boot: {loaded} plan(s) loaded, {rejected} rejected");
+            }
+        }
         // boot snapshot so `reload` (no path) works from the start
         match state.with_faults(|| state.snapshotter.snapshot(&policy)) {
             Ok(_) => {
@@ -421,7 +452,35 @@ fn handle_line(line: &str, state: &DaemonState) -> Value {
         Request::ShadowLoad { path } => handle_shadow_load(state, &path),
         Request::Promote { force } => handle_promote(state, force),
         Request::Tenant { tenant, quota, path } => handle_tenant(state, &tenant, quota, path),
+        Request::Plans { compact } => handle_plans(state, compact),
     }
+}
+
+/// Plan-store admin op: counts, bytes, lifetime hit counters, and (with
+/// `compact`) a sweep of undecodable artifacts. `enabled: false` when
+/// the daemon runs without `--plan-dir`.
+fn handle_plans(state: &DaemonState, compact: bool) -> Value {
+    let tuner = state.live.read().unwrap().clone();
+    let Some(store) = tuner.plan_store() else {
+        return ok_response("plans", vec![("enabled", Value::Bool(false))]);
+    };
+    let compacted = if compact { Some(state.with_faults(|| store.compact())) } else { None };
+    let mut fields = vec![("bytes", json::num(store.bytes() as f64))];
+    if let Some((removed, freed)) = compacted {
+        fields.push(("compact_freed_bytes", json::num(freed as f64)));
+        fields.push(("compact_removed", json::num(removed as f64)));
+    }
+    fields.extend(vec![
+        ("count", json::num(store.count() as f64)),
+        ("dir", json::s(store.dir())),
+        ("enabled", Value::Bool(true)),
+        ("hits", json::num(store.hits() as f64)),
+        ("misses", json::num(store.misses() as f64)),
+        ("rejects", json::num(store.rejects() as f64)),
+        ("spill_failures", json::num(store.spill_failures() as f64)),
+        ("spills", json::num(store.spills() as f64)),
+    ]);
+    ok_response("plans", fields)
 }
 
 /// Register (or re-register) a router tenant: fresh partition, optional
@@ -485,6 +544,10 @@ fn handle_solve(req: &SolveRequest, state: &DaemonState) -> Value {
                 state.stats.degraded.fetch_add(1, Ordering::Relaxed);
             }
             state.stats.record_family(rep.solver, !rep.failed);
+            // cold solves only: a RAM hit touches neither plan tier
+            if !rep.cache_hit && tuner.plan_store().is_some() {
+                state.stats.record_plan(rep.plan_hit);
+            }
             let shadow_scored = maybe_shadow(state, &tuner, req, &rep);
             checkpoint(state);
             protocol::solve_response(req.id, &rep, version, explored, fallback, shadow_scored)
@@ -774,9 +837,21 @@ fn handle_promote(state: &DaemonState, force: bool) -> Value {
 /// learner lock are each taken and released separately; the learner
 /// guard is dropped *before* the shadow lock (see the module docs).
 fn stats_value(state: &DaemonState) -> Value {
-    let (backend, cache) = {
+    let (backend, cache, plans) = {
         let guard = state.live.read().unwrap();
         let c = guard.session_cache();
+        let plans = match guard.plan_store() {
+            Some(p) => json::obj(vec![
+                ("count", json::num(p.count() as f64)),
+                ("enabled", Value::Bool(true)),
+                ("hits", json::num(p.hits() as f64)),
+                ("misses", json::num(p.misses() as f64)),
+                ("rejects", json::num(p.rejects() as f64)),
+                ("spill_failures", json::num(p.spill_failures() as f64)),
+                ("spills", json::num(p.spills() as f64)),
+            ]),
+            None => json::obj(vec![("enabled", Value::Bool(false))]),
+        };
         (
             guard.backend_name(),
             json::obj(vec![
@@ -785,6 +860,7 @@ fn stats_value(state: &DaemonState) -> Value {
                 ("len", json::num(c.len() as f64)),
                 ("misses", json::num(c.misses() as f64)),
             ]),
+            plans,
         )
     };
     let online = {
@@ -821,6 +897,7 @@ fn stats_value(state: &DaemonState) -> Value {
             ("latest_snapshot", json::s(&state.snapshotter.latest_path())),
             ("learn", Value::Bool(state.opts.learn)),
             ("online", online),
+            ("plans", plans),
             ("policy_version", json::num(state.version.load(Ordering::SeqCst) as f64)),
             ("router", state.router.stats_json()),
             ("shadow", shadow),
@@ -900,5 +977,53 @@ mod tests {
         drop(c);
         d.join();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn daemon_warm_boots_the_plan_tier_across_restarts() {
+        let snap = tmp_dir("plansnap");
+        let plans = tmp_dir("planstore");
+        let opts = ServeOpts {
+            snapshot_dir: snap.clone(),
+            plan_dir: Some(plans.clone()),
+            quiet: true,
+            ..ServeOpts::default()
+        };
+        let d = Daemon::start(tiny_policy(), Config::default(), opts.clone()).unwrap();
+        let mut c = Client::connect(d.addr()).unwrap();
+        let sys = SystemInput::Dense(Mat::eye(4));
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let resp = c.call(&protocol::solve_request_json(Some(1), &sys, &b)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool().unwrap(), true, "{resp:?}");
+        assert_eq!(resp.get("plan_hit").unwrap().as_bool().unwrap(), false);
+        let p = c.call(&protocol::admin_request("plans", vec![])).unwrap();
+        assert_eq!(p.get("enabled").unwrap().as_bool().unwrap(), true);
+        assert_eq!(p.get("count").unwrap().as_usize().unwrap(), 1, "{p:?}");
+        assert_eq!(p.get("spills").unwrap().as_usize().unwrap(), 1);
+        drop(c);
+        d.join();
+
+        // restart on the same plan dir: warm-boot promotes the artifact,
+        // so the same operator is served as a RAM hit without ever
+        // paying a cold build
+        let d = Daemon::start(tiny_policy(), Config::default(), opts).unwrap();
+        let mut c = Client::connect(d.addr()).unwrap();
+        let resp = c.call(&protocol::solve_request_json(Some(2), &sys, &b)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool().unwrap(), true, "{resp:?}");
+        assert_eq!(resp.get("cache_hit").unwrap().as_bool().unwrap(), true, "{resp:?}");
+        let stats = c.call(&protocol::admin_request("stats", vec![])).unwrap();
+        let pv = stats.get("plans").unwrap();
+        assert_eq!(pv.get("enabled").unwrap().as_bool().unwrap(), true);
+        assert_eq!(pv.get("hits").unwrap().as_usize().unwrap(), 1, "{stats:?}");
+        // compact on a healthy store removes nothing
+        let p = c
+            .call(&protocol::admin_request("plans", vec![("compact", Value::Bool(true))]))
+            .unwrap();
+        assert_eq!(p.get("compact_removed").unwrap().as_usize().unwrap(), 0, "{p:?}");
+        assert_eq!(p.get("count").unwrap().as_usize().unwrap(), 1);
+        drop(c);
+        d.join();
+        let _ = std::fs::remove_dir_all(&snap);
+        let _ = std::fs::remove_dir_all(&plans);
     }
 }

@@ -46,8 +46,13 @@
 //! reject loudly and keep serving on the old policy — and
 //! [`crate::faults::FaultSite::QueueDrop`] /
 //! [`crate::faults::FaultSite::LaneStarve`] shed router admissions,
-//! which must resolve as typed rejections (locked by `tests/chaos.rs`,
-//! `tests/serve_router.rs`, and the `chaos` CLI's daemon/router mixes).
+//! which must resolve as typed rejections, and
+//! [`crate::faults::FaultSite::PlanWrite`] /
+//! [`crate::faults::FaultSite::PlanLoad`] hit the persistent plan tier
+//! (`--plan-dir`): a failed spill never fails the solve, a corrupted
+//! artifact read is rejected and rebuilt, never promoted (locked by
+//! `tests/chaos.rs`, `tests/serve_router.rs`, `tests/plan_store.rs`,
+//! and the `chaos` CLI's daemon/router/plans mixes).
 
 pub mod client;
 pub mod daemon;

@@ -313,6 +313,7 @@ mod tests {
             cache_hit: false,
             cache_hits: 0,
             cache_misses: 0,
+            plan_hit: false,
             degradation: None,
         }
     }

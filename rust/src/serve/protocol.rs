@@ -65,6 +65,9 @@ pub enum Request {
     /// tenant: optional request quota and optional policy path (default:
     /// the daemon's base policy).
     Tenant { tenant: String, quota: Option<u64>, path: Option<String> },
+    /// Plan-store introspection (count / bytes / hit counters); with
+    /// `compact`, also sweep undecodable artifacts off disk.
+    Plans { compact: bool },
 }
 
 /// Non-null field lookup.
@@ -100,6 +103,9 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }),
         "promote" => Ok(Request::Promote {
             force: opt(&v, "force").map(|f| f.as_bool()).transpose()?.unwrap_or(false),
+        }),
+        "plans" => Ok(Request::Plans {
+            compact: opt(&v, "compact").map(|c| c.as_bool()).transpose()?.unwrap_or(false),
         }),
         "tenant" => Ok(Request::Tenant {
             tenant: opt(&v, "tenant")
@@ -248,6 +254,7 @@ pub fn solve_response(
         ("ok", Value::Bool(true)),
         ("op", json::s("solve")),
         ("outer_iters", json::num(rep.outer_iters as f64)),
+        ("plan_hit", Value::Bool(rep.plan_hit)),
         ("policy_version", json::num(policy_version as f64)),
         ("shadow_scored", Value::Bool(shadow_scored)),
         ("x", json::num_arr(&rep.x)),
@@ -409,6 +416,14 @@ mod tests {
         ));
         let err = format!("{:#}", parse_request("{\"op\": \"shadow-load\"}").unwrap_err());
         assert!(err.contains("path"), "{err}");
+        assert!(matches!(
+            parse_request("{\"op\": \"plans\"}").unwrap(),
+            Request::Plans { compact: false }
+        ));
+        assert!(matches!(
+            parse_request("{\"op\": \"plans\", \"compact\": true}").unwrap(),
+            Request::Plans { compact: true }
+        ));
     }
 
     #[test]

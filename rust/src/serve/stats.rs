@@ -44,6 +44,13 @@ pub struct ServeStats {
     pub rejected_quota: AtomicU64,
     /// Routed solves whose deadline expired while queued.
     pub rejected_deadline: AtomicU64,
+    /// Solves whose session entry was promoted from the persistent plan
+    /// tier (disk hit) instead of rebuilt.
+    pub plan_hits: AtomicU64,
+    /// Solves that found neither a RAM nor a disk plan (full build).
+    pub plan_misses: AtomicU64,
+    /// Plan artifacts rejected at load or warm-boot (corrupt or stale).
+    pub plan_rejects: AtomicU64,
     /// Per-family serve/success counters (win rate = ok / served).
     pub lu_served: AtomicU64,
     pub lu_ok: AtomicU64,
@@ -62,6 +69,13 @@ impl ServeStats {
         if ok {
             succeeded.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Count one cold solve's plan-tier outcome (hit or full build).
+    /// RAM cache hits never reach this — they touch neither tier.
+    pub fn record_plan(&self, hit: bool) {
+        let c = if hit { &self.plan_hits } else { &self.plan_misses };
+        c.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn to_json(&self) -> Value {
@@ -86,6 +100,9 @@ impl ServeStats {
                     ("lu-ir", family(&self.lu_served, &self.lu_ok)),
                 ]),
             ),
+            ("plan_hits", get(&self.plan_hits)),
+            ("plan_misses", get(&self.plan_misses)),
+            ("plan_rejects", get(&self.plan_rejects)),
             ("promotes_rejected", get(&self.promotes_rejected)),
             ("promotions", get(&self.promotions)),
             ("protocol_errors", get(&self.protocol_errors)),
@@ -124,5 +141,17 @@ mod tests {
         assert_eq!(cg.get("win_rate").unwrap().as_f64().unwrap(), 1.0);
         // untouched counters serialize as zero, not division blowups
         assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn plan_counters_split_hits_from_full_builds() {
+        let s = ServeStats::default();
+        s.record_plan(true);
+        s.record_plan(false);
+        s.record_plan(false);
+        let v = s.to_json();
+        assert_eq!(v.get("plan_hits").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("plan_misses").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("plan_rejects").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -135,10 +135,13 @@ fn every_site_resolves_typed_on_dense_and_csr() {
         for site in FaultSite::ALL {
             if site.is_daemon_site() {
                 // snapshot-write / policy-reload / queue-drop /
-                // lane-starve have no solve-path hook — they fire in
-                // the daemon's control plane and router admission path,
-                // covered by the daemon tests below and the router
-                // chaos mix
+                // lane-starve / plan-write / plan-load have no
+                // solve-path hook on a plan-free tuner — they fire in
+                // the daemon's control plane, router admission path,
+                // and persistent plan tier, covered by the daemon
+                // tests below, the router chaos mix, the
+                // plans/corrupt-on-boot chaos mix, and
+                // tests/plan_store.rs
                 continue;
             }
             let tag = format!("{shape}/{site}");

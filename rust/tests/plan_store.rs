@@ -1,0 +1,215 @@
+//! Integration locks for the persistent solve-plan tier (PR 10,
+//! DESIGN.md §2j): `PlanStore` under `SessionCache`.
+//!
+//! The contract under test, end to end through the serving facade:
+//!
+//! * **round-trip bit-identity** — a solve served from a warm-booted
+//!   plan artifact returns the bit-identical `x` and backward error of
+//!   the cold solve that spilled it, across precisions (bf16/tf32/
+//!   fp32/fp64 factorizations), both refinement families (LU-IR and
+//!   CG-IR), and both operand shapes (dense and CSR);
+//! * **LRU eviction → re-promotion** — an entry evicted from the RAM
+//!   tier is re-promoted from disk (`plan_hit`), bit-identical;
+//! * **corruption is rejected, never trusted** — truncated or
+//!   bit-flipped artifacts are rejected typed at warm boot and on the
+//!   solve path, the solve rebuilds from scratch (bit-identical to a
+//!   plan-free tuner), and the rebuild re-spills so the *next* restart
+//!   boots fully warm;
+//! * **plan faults never fail a solve** — injected `plan-write` /
+//!   `plan-load` faults are counted in the store and absorbed;
+//! * **one spill per operator** — `solve_batch` workers racing on one
+//!   operator claim the spill exactly once (any `PA_THREADS`).
+
+use precision_autotune::api::Autotuner;
+use precision_autotune::bandit::action::Action;
+use precision_autotune::chop::Prec;
+use precision_autotune::faults::{FaultPlan, FaultSite};
+use precision_autotune::gen::sparse_spd;
+use precision_autotune::linalg::Mat;
+use precision_autotune::system::SystemInput;
+use precision_autotune::util::rng::Rng;
+
+/// Fresh per-test plan directory (suites run concurrently under one
+/// `cargo test` process).
+fn tmp_dir(tag: &str) -> (std::path::PathBuf, String) {
+    let dir = std::env::temp_dir().join(format!("pa_plan_store_{}_{}", std::process::id(), tag));
+    let _ = std::fs::remove_dir_all(&dir);
+    (dir.clone(), dir.to_string_lossy().to_string())
+}
+
+/// Symmetric, strictly diagonally dominant ⇒ SPD: valid for both
+/// families, and mild enough that every reduced-precision
+/// factorization still converges.
+fn dense_spd(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = if i == j { n as f64 + 4.0 } else { 0.5 * rng.gauss() };
+            a[(i, j)] = v;
+            a[(j, i)] = v;
+        }
+    }
+    a
+}
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.gauss()).collect()
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn round_trip_is_bit_identical_across_precisions_families_and_shapes() {
+    let n = 14;
+    let actions = [
+        Action::FP64,
+        Action::lu(Prec::Bf16, Prec::Fp64, Prec::Fp64, Prec::Fp64),
+        Action::lu(Prec::Tf32, Prec::Fp64, Prec::Fp64, Prec::Fp64),
+        Action::lu(Prec::Fp32, Prec::Fp32, Prec::Fp64, Prec::Fp64),
+        Action::CG_FP64,
+        Action::cg(Prec::Fp32, Prec::Fp64, Prec::Fp64, Prec::Fp64),
+    ];
+    let mut rng = Rng::new(3);
+    let systems = [
+        SystemInput::Dense(dense_spd(n, 11)),
+        SystemInput::Sparse(sparse_spd(2 * n, 0.2, 1.0, &mut rng)),
+    ];
+    for (si, sys) in systems.iter().enumerate() {
+        let b = rhs(sys.n_rows(), 77 + si as u64);
+        for (ai, act) in actions.iter().enumerate() {
+            let (dir, plan_dir) = tmp_dir(&format!("rt_{si}_{ai}"));
+            let cold = Autotuner::builder().plan_dir(plan_dir.clone()).build().unwrap();
+            let r1 = cold.solve_with_action(sys, &b, *act).unwrap();
+            assert!(!r1.failed, "case {si}/{ai}: cold solve failed ({:?})", r1.stop);
+            assert_eq!(cold.plan_store().unwrap().count(), 1, "case {si}/{ai}: no spill");
+            drop(cold);
+
+            // the restart: only the disk tier survives
+            let warm = Autotuner::builder().plan_dir(plan_dir).build().unwrap();
+            assert_eq!(warm.warm_boot(), (1, 0), "case {si}/{ai}: warm boot");
+            let r2 = warm.solve_with_action(sys, &b, *act).unwrap();
+            assert!(r2.cache_hit, "case {si}/{ai}: warm solve must hit the promoted entry");
+            assert!(bits_eq(&r1.x, &r2.x), "case {si}/{ai}: x diverged across the restart");
+            assert_eq!(r1.nbe.to_bits(), r2.nbe.to_bits(), "case {si}/{ai}: nbe diverged");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn lru_eviction_repromotes_from_disk_for_both_families() {
+    for (tag, act) in [("lu", Action::FP64), ("cg", Action::CG_FP64)] {
+        let (dir, plan_dir) = tmp_dir(&format!("lru_{tag}"));
+        let tuner =
+            Autotuner::builder().plan_dir(plan_dir).session_cache(1).build().unwrap();
+        let mut rng = Rng::new(5);
+        let a1 = SystemInput::Sparse(sparse_spd(20, 0.2, 1.0, &mut rng));
+        let a2 = SystemInput::Sparse(sparse_spd(22, 0.2, 1.0, &mut rng));
+        let (b1, b2) = (rhs(20, 1), rhs(22, 2));
+        let r1 = tuner.solve_with_action(&a1, &b1, act).unwrap();
+        assert!(!r1.cache_hit && !r1.plan_hit, "{tag}: first solve must be a full build");
+        let _ = tuner.solve_with_action(&a2, &b2, act).unwrap(); // capacity 1: evicts a1
+        let r3 = tuner.solve_with_action(&a1, &b1, act).unwrap();
+        assert!(r3.plan_hit, "{tag}: evicted entry must re-promote from the disk tier");
+        assert!(bits_eq(&r1.x, &r3.x), "{tag}: re-promoted solve diverged");
+        let store = tuner.plan_store().unwrap();
+        assert_eq!(store.hits(), 1, "{tag}: exactly one disk hit");
+        assert_eq!(store.count(), 2, "{tag}: both operators stay spilled");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn corrupt_artifacts_are_rejected_typed_and_rebuilt() {
+    let (dir, plan_dir) = tmp_dir("corrupt");
+    let systems: Vec<(SystemInput, Vec<f64>)> = (0..2)
+        .map(|i| (SystemInput::Dense(dense_spd(12, 40 + i as u64)), rhs(12, 50 + i as u64)))
+        .collect();
+    let cold = Autotuner::builder().plan_dir(plan_dir.clone()).build().unwrap();
+    let clean: Vec<_> =
+        systems.iter().map(|(a, b)| cold.solve_ref(a, b).unwrap()).collect();
+    drop(cold);
+
+    // truncate one artifact mid-payload; flip one byte of the other
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "plan").unwrap_or(false))
+        .collect();
+    files.sort();
+    assert_eq!(files.len(), 2);
+    let bytes = std::fs::read(&files[0]).unwrap();
+    std::fs::write(&files[0], &bytes[..bytes.len() / 3]).unwrap();
+    let mut bytes = std::fs::read(&files[1]).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&files[1], &bytes).unwrap();
+
+    let warm = Autotuner::builder().plan_dir(plan_dir.clone()).build().unwrap();
+    assert_eq!(warm.warm_boot(), (0, 2), "both corrupted artifacts must be rejected");
+    assert_eq!(warm.plan_store().unwrap().rejects(), 2);
+    for ((a, b), c) in systems.iter().zip(&clean) {
+        let r = warm.solve_ref(a, b).unwrap();
+        assert!(!r.plan_hit, "a rejected artifact must never promote");
+        assert!(bits_eq(&c.x, &r.x), "the rebuild must be bit-identical to plan-free");
+    }
+    drop(warm);
+
+    // those rebuilds re-spilled: the next restart boots fully warm
+    let reborn = Autotuner::builder().plan_dir(plan_dir).build().unwrap();
+    assert_eq!(reborn.warm_boot(), (2, 0), "rebuilt artifacts must verify again");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_faults_never_fail_solves_and_are_counted() {
+    // plan-write armed: every spill attempt fails; the solve succeeds
+    let (dir, plan_dir) = tmp_dir("faults");
+    let plan = FaultPlan::new(9).with(FaultSite::PlanWrite, 1.0);
+    let tuner =
+        Autotuner::builder().plan_dir(plan_dir.clone()).fault_plan(plan).build().unwrap();
+    let a = SystemInput::Dense(dense_spd(12, 3));
+    let b = rhs(12, 4);
+    let r = tuner.solve_ref(&a, &b).unwrap();
+    assert!(!r.failed);
+    let store = tuner.plan_store().unwrap();
+    assert_eq!(store.count(), 0, "the injected write failure must not leave an artifact");
+    assert!(store.spill_failures() >= 1);
+    drop(tuner);
+
+    // plan-load armed: a valid artifact's bytes are corrupted on every
+    // read — rejected at boot and on the solve path, rebuilt instead
+    let seeder = Autotuner::builder().plan_dir(plan_dir.clone()).build().unwrap();
+    let clean = seeder.solve_ref(&a, &b).unwrap();
+    assert_eq!(seeder.plan_store().unwrap().count(), 1);
+    drop(seeder);
+    let plan = FaultPlan::new(11).with(FaultSite::PlanLoad, 1.0);
+    let tuner = Autotuner::builder().plan_dir(plan_dir).fault_plan(plan).build().unwrap();
+    assert_eq!(tuner.warm_boot(), (0, 1), "the injected read corruption must reject");
+    let r = tuner.solve_ref(&a, &b).unwrap();
+    assert!(!r.failed && !r.plan_hit);
+    assert!(bits_eq(&clean.x, &r.x), "the fault-path rebuild must stay bit-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn parallel_batch_spills_once_per_operator() {
+    let (dir, plan_dir) = tmp_dir("parallel");
+    let tuner = Autotuner::builder().plan_dir(plan_dir).build().unwrap();
+    let a = dense_spd(16, 21);
+    let bs: Vec<Vec<f64>> = (0..8).map(|i| rhs(16, 60 + i as u64)).collect();
+    let reqs: Vec<(SystemInput, &[f64])> =
+        bs.iter().map(|b| (SystemInput::from(&a), b.as_slice())).collect();
+    for r in tuner.solve_batch(&reqs) {
+        assert!(!r.unwrap().failed);
+    }
+    let store = tuner.plan_store().unwrap();
+    assert_eq!(store.count(), 1, "one operator => one artifact");
+    assert_eq!(store.spills(), 1, "workers racing on one entry must claim the spill once");
+    assert_eq!(store.spill_failures(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
